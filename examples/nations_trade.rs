@@ -1,0 +1,159 @@
+//! Fig 6 reproduction: latent feature identification in the *Nations* and
+//! *Trade* relational datasets (§6.2.2).
+//!
+//! * Nations (14×14×56 binary): k sweep 1..7 on a 2×2 grid → k_opt = 4,
+//!   with the four geopolitical communities and the R-slice interaction
+//!   graphs for selected relations (Fig 6a/6c/6e).
+//! * Trade (23×23×420, zero-padded to 24): k sweep 1..7 → k_opt = 5, the
+//!   five economic blocs, and the temporal R-slice evolution across months
+//!   1/151/301/420 (Fig 6b/6d/6f).
+//!
+//! Run: `cargo run --release --example nations_trade`
+
+use drescal::coordinator::{run_rescalk, JobConfig, JobData, RescalkReport};
+use drescal::data::{nations, trade};
+use drescal::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
+use drescal::tensor::Mat;
+
+fn sweep(
+    data: JobData,
+    seed: u64,
+    r: usize,
+    iters: usize,
+    init: InitStrategy,
+    rule: SelectionRule,
+) -> RescalkReport {
+    let job = JobConfig { p: 4, trace: false, ..Default::default() };
+    let cfg = RescalkConfig {
+        k_min: 1,
+        k_max: 7,
+        perturbations: r,
+        delta: 0.02,
+        rescal_iters: iters,
+        tol: 0.015,
+        err_every: 100,
+        regress_iters: 40,
+        seed,
+        rule,
+        init,
+    };
+    run_rescalk(&data, &job, &cfg)
+}
+
+fn print_scores(report: &RescalkReport) {
+    println!("   k   min-sil   avg-sil   rel-err");
+    for s in &report.scores {
+        let mark = if s.k == report.k_opt { "  <- k_opt" } else { "" };
+        println!(
+            "  {:>2}   {:>7.3}   {:>7.3}   {:>7.4}{mark}",
+            s.k, s.sil_min, s.sil_avg, s.rel_error
+        );
+    }
+}
+
+/// Report each entity's dominant latent community (argmax of its A row).
+fn print_communities(a: &Mat, names: &[&str], k: usize) {
+    let mut groups: Vec<Vec<&str>> = vec![Vec::new(); k];
+    for (i, name) in names.iter().enumerate() {
+        let c = (0..k).max_by(|&x, &y| a[(i, x)].partial_cmp(&a[(i, y)]).unwrap()).unwrap();
+        groups[c].push(name);
+    }
+    for (c, members) in groups.iter().enumerate() {
+        println!("  community-{}: {}", c + 1, members.join(", "));
+    }
+}
+
+/// Print an R slice as weighted directed community-interaction edges
+/// (the graphs of Fig 6e/6f).
+fn print_interactions(r_slice: &Mat, label: &str) {
+    let k = r_slice.rows();
+    let max = r_slice.max_abs().max(1e-12);
+    println!("  {label}:");
+    let mut edges: Vec<(f32, usize, usize)> = Vec::new();
+    for i in 0..k {
+        for j in 0..k {
+            let w = r_slice[(i, j)] / max;
+            if w > 0.3 {
+                edges.push((w, i, j));
+            }
+        }
+    }
+    edges.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    for (w, i, j) in edges.iter().take(6) {
+        println!("    community-{} -> community-{}  weight {:.2}", i + 1, j + 1, w);
+    }
+}
+
+fn main() {
+    // ---- Nations --------------------------------------------------------
+    println!("=== Nations: 14×14×56 binary relational tensor ===");
+    let nations_x = nations::nations_tensor(11);
+    let report = sweep(
+        JobData::dense(nations_x),
+        11,
+        8,
+        400,
+        InitStrategy::Random,
+        SelectionRule::default(),
+    );
+    print_scores(&report);
+    println!("\nlatent communities (k = {}):", report.k_opt);
+    print_communities(&report.a, &nations::NATIONS, report.k_opt);
+    println!("\ncommunity interactions for sample relations:");
+    for (t, label) in [(5usize, "relation 5"), (20, "relation 20"), (40, "relation 40")] {
+        print_interactions(report.r.slice(t), label);
+    }
+    let nations_k = report.k_opt;
+
+    // ---- Trade ----------------------------------------------------------
+    // The paper runs 10,000 MU iterations over all 420 months; we keep the
+    // budget laptop-sized by sweeping on a 60-month temporal subsample
+    // (every 7th month) with deep iteration, which preserves the bloc
+    // structure and the growth trend.
+    println!("\n=== Trade: 23×23×420 (padded to 24, 60-month subsample) ===");
+    let trade_full = trade::trade_tensor_padded(13, 24);
+    let sub: Vec<_> = (0..trade_full.m())
+        .step_by(7)
+        .map(|t| trade_full.slice(t).clone())
+        .collect();
+    let trade_x = drescal::tensor::Tensor3::from_slices(sub);
+    // NNDSVD init (paper §3.4): random init stalls in a merged-community
+    // local minimum on this dataset; the SVD-seeded start converges to the
+    // five-bloc solution (see DESIGN.md §3)
+    let factors = drescal::model_selection::nndsvd_factors(&trade_x, 1, 7);
+    let report = sweep(
+        JobData::dense(trade_x),
+        13,
+        6,
+        2500,
+        InitStrategy::Nndsvd { factors, jitter: 0.1 },
+        // every k is stable under the SVD-seeded ensemble, so the error
+        // elbow decides (paper: "good accuracy of the reconstruction")
+        SelectionRule::StableElbow { threshold: 0.8, min_gain: 0.10 },
+    );
+    print_scores(&report);
+    println!("\nlatent communities (k = {}):", report.k_opt);
+    // drop the zero-padding row from the report
+    let mut names: Vec<&str> = trade::COUNTRIES.to_vec();
+    names.push("(padding)");
+    print_communities(&report.a, &names, report.k_opt);
+    println!("\ntemporal evolution of bloc interactions (Fig 6f months):");
+    for (t, month) in [(0usize, 1usize), (21, 148), (43, 302), (59, 414)] {
+        print_interactions(report.r.slice(t), &format!("month {month}"));
+    }
+    // total interaction strength must grow over time (paper: minimal at
+    // month 1, maximum at month 420)
+    let strength = |t: usize| report.r.slice(t).sum();
+    println!(
+        "\ntotal bloc-interaction strength: month1 {:.2} -> month414 {:.2}",
+        strength(0),
+        strength(59)
+    );
+    assert!(strength(59) > strength(0), "trade growth not captured");
+
+    println!(
+        "\nnations k_opt = {nations_k} (paper: 4), trade k_opt = {} (paper: 5)",
+        report.k_opt
+    );
+    println!("nations_trade OK");
+}

@@ -1,0 +1,129 @@
+"""AOT export: lower the L2 segments to HLO text + manifest.
+
+HLO **text** is the interchange format (not ``.serialize()``): jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--tiles 32,128] [--ks 2..8]
+
+Re-running is a no-op when inputs are unchanged (content hash check), so
+``make artifacts`` stays cheap.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: default per-rank tile edges — matched to the examples:
+#: quickstart (n=64, 2×2 grid → 32) and end_to_end (n=256, 2×2 grid → 128).
+DEFAULT_TILES = (32, 128)
+#: default latent ranks: the end_to_end sweep explores k ∈ 2..8.
+DEFAULT_KS = tuple(range(2, 9))
+
+
+def to_hlo_text(fn, shapes):
+    """Lower ``fn`` at the given input shapes to XLA HLO text."""
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_tag(shapes):
+    return "_".join("x".join(str(d) for d in s) for s in shapes)
+
+
+def collect_ops(tiles, ks):
+    """Deduplicated (kind, fn, shapes) set over all configurations."""
+    seen = {}
+    for tile in tiles:
+        for k in ks:
+            for kind, fn, shapes in model.backend_ops(tile, k):
+                key = (kind, tuple(map(tuple, shapes)))
+                seen.setdefault(key, (kind, fn, shapes))
+    return list(seen.values())
+
+def export(out_dir, tiles, ks, force=False, verbose=True):
+    """Write one HLO artifact per (kind, shapes) plus manifest.json.
+    Returns the number of artifacts written (0 if everything was fresh)."""
+    os.makedirs(out_dir, exist_ok=True)
+    ops = collect_ops(tiles, ks)
+    # freshness: hash of the op list + source of model/kernels
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    hasher = hashlib.sha256()
+    for name in ("model.py", os.path.join("kernels", "mu_kernels.py"),
+                 os.path.join("kernels", "ref.py")):
+        with open(os.path.join(src_dir, name), "rb") as f:
+            hasher.update(f.read())
+    hasher.update(repr(sorted((k, tuple(map(tuple, s))) for k, _, s in ops)).encode())
+    stamp = hasher.hexdigest()
+    stamp_path = os.path.join(out_dir, ".stamp")
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if not force and os.path.exists(stamp_path) and os.path.exists(manifest_path):
+        with open(stamp_path) as f:
+            if f.read().strip() == stamp:
+                if verbose:
+                    print(f"artifacts up to date ({len(ops)} ops) in {out_dir}")
+                return 0
+
+    entries = []
+    written = 0
+    for kind, fn, shapes in ops:
+        fname = f"{kind}_{shape_tag(shapes)}.hlo.txt"
+        text = to_hlo_text(fn, shapes)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({"kind": kind, "file": fname, "shapes": [list(s) for s in shapes]})
+        written += 1
+        if verbose:
+            print(f"  wrote {fname} ({len(text)} chars)")
+    manifest = {"dtype": "f32", "ops": entries}
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp_path, "w") as f:
+        f.write(stamp)
+    if verbose:
+        print(f"wrote {written} artifacts + manifest to {out_dir}")
+    return written
+
+
+def parse_int_list(text):
+    out = []
+    for part in text.split(","):
+        part = part.strip()
+        if ".." in part:
+            lo, hi = part.split("..")
+            out.extend(range(int(lo), int(hi) + 1))
+        elif part:
+            out.append(int(part))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--tiles", default=",".join(map(str, DEFAULT_TILES)))
+    ap.add_argument("--ks", default="2..8")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    tiles = parse_int_list(args.tiles)
+    ks = parse_int_list(args.ks)
+    export(args.out_dir, tiles, ks, force=args.force)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

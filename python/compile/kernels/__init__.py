@@ -1,0 +1,15 @@
+"""L1: Pallas kernels for the RESCAL hot path + pure-jnp oracles."""
+
+from . import mu_kernels, ref
+from .mu_kernels import gram, matmul, matmul_t, mu_update, r_update, t_matmul
+
+__all__ = [
+    "gram",
+    "matmul",
+    "matmul_t",
+    "mu_kernels",
+    "mu_update",
+    "r_update",
+    "ref",
+    "t_matmul",
+]

@@ -1,0 +1,203 @@
+"""L1 Pallas kernels for the RESCAL multiplicative-update hot path.
+
+TPU-oriented design (DESIGN.md §Hardware-Adaptation): the paper's CuPy/
+cuBLAS GEMMs become Pallas kernels tiled for the MXU — row-blocked GEMMs
+with VMEM-resident accumulators, the K dimension kept whole per block (the
+RESCAL inner dimensions are either the tile width or the small rank k, both
+VMEM-friendly). ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the kernels lower to plain HLO which both
+pytest and the Rust runtime execute; on a real TPU the same BlockSpecs
+drive the HBM↔VMEM schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+#: MXU-native tile edge; row blocks are capped at this.
+MXU_TILE = 128
+
+
+def _row_block(m: int) -> int:
+    """Largest divisor of ``m`` not exceeding the MXU tile edge."""
+    bm = min(MXU_TILE, m)
+    while m % bm:
+        bm -= 1
+    return bm
+
+
+# ---------------------------------------------------------------------------
+# matmul: O = X · Y, grid over row blocks of X
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul(x, y):
+    """``X·Y`` with X row-blocked through VMEM, Y held resident."""
+    m, kk = x.shape
+    k2, n = y.shape
+    assert kk == k2, f"inner dim mismatch {kk} vs {k2}"
+    bm = _row_block(m)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, kk), lambda i: (i, 0)),
+            pl.BlockSpec((kk, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+# ---------------------------------------------------------------------------
+# t_matmul: O = Xᵀ · Y, accumulating over row blocks
+# ---------------------------------------------------------------------------
+
+
+def _t_matmul_kernel(x_ref, y_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...].T, y_ref[...], preferred_element_type=jnp.float32)
+
+
+def t_matmul(x, y):
+    """``Xᵀ·Y`` without materializing the transpose: each row block
+    contributes a rank-``bm`` update into the VMEM-resident output."""
+    m, kk = x.shape
+    m2, n = y.shape
+    assert m == m2, f"row dim mismatch {m} vs {m2}"
+    bm = _row_block(m)
+    return pl.pallas_call(
+        _t_matmul_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, kk), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((kk, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kk, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+# ---------------------------------------------------------------------------
+# matmul_t: O = X · Yᵀ, grid over row blocks of X
+# ---------------------------------------------------------------------------
+
+
+def _matmul_t_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...].T, preferred_element_type=jnp.float32)
+
+
+def matmul_t(x, y):
+    """``X·Yᵀ`` (Y is small — a core slice — and stays VMEM-resident)."""
+    m, kk = x.shape
+    n, k2 = y.shape
+    assert kk == k2, f"inner dim mismatch {kk} vs {k2}"
+    bm = _row_block(m)
+    return pl.pallas_call(
+        _matmul_t_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, kk), lambda i: (i, 0)),
+            pl.BlockSpec((n, kk), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+# ---------------------------------------------------------------------------
+# gram: O = XᵀX, accumulating over row blocks
+# ---------------------------------------------------------------------------
+
+
+def _gram_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blk = x_ref[...]
+    o_ref[...] += jnp.dot(blk.T, blk, preferred_element_type=jnp.float32)
+
+
+def gram(x):
+    """``XᵀX`` — the paper's ``gram_mul`` breakdown category."""
+    m, kk = x.shape
+    bm = _row_block(m)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, kk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((kk, kk), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kk, kk), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# mu_update: fused elementwise target * num / (deno + eps)
+# ---------------------------------------------------------------------------
+
+
+def _mu_kernel(eps, t_ref, n_ref, d_ref, o_ref):
+    o_ref[...] = t_ref[...] * n_ref[...] / (d_ref[...] + eps)
+
+
+def mu_update(target, num, deno, eps=ref.MU_EPS):
+    """Fused MU elementwise step, row-blocked."""
+    m, n = target.shape
+    bm = _row_block(m)
+    spec = pl.BlockSpec((bm, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_mu_kernel, float(eps)),
+        grid=(m // bm,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(target, num, deno)
+
+
+# ---------------------------------------------------------------------------
+# r_update: fully fused R-slice MU step (k×k operands stay in VMEM)
+# ---------------------------------------------------------------------------
+
+
+def _r_update_kernel(eps, r_ref, ata_ref, atxa_ref, o_ref):
+    r = r_ref[...]
+    ata = ata_ref[...]
+    rata = jnp.dot(r, ata, preferred_element_type=jnp.float32)
+    deno = jnp.dot(ata, rata, preferred_element_type=jnp.float32)
+    o_ref[...] = r * atxa_ref[...] / (deno + eps)
+
+
+def r_update(r_t, ata, atxa, eps=ref.MU_EPS):
+    """``R_t ∘ AᵀX_tA / (AᵀA·R_t·AᵀA + ε)`` in one kernel — two k×k GEMMs
+    plus the elementwise update without leaving VMEM."""
+    k = r_t.shape[0]
+    assert r_t.shape == (k, k) and ata.shape == (k, k) and atxa.shape == (k, k)
+    spec = pl.BlockSpec((k, k), lambda: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_r_update_kernel, float(eps)),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        interpret=True,
+    )(r_t, ata, atxa)

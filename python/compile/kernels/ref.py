@@ -1,0 +1,44 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every L1 kernel in this package is checked against these definitions by
+``python/tests`` (pytest + hypothesis). They are also the semantic
+specification of the HLO artifacts the Rust runtime executes.
+"""
+
+import jax.numpy as jnp
+
+#: ε used in multiplicative-update denominators (paper §2.2).
+MU_EPS = 1e-16
+
+
+def matmul(x, y):
+    """``X · Y``."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def t_matmul(x, y):
+    """``Xᵀ · Y`` (no transposed materialization in the kernel)."""
+    return jnp.dot(x.T, y, preferred_element_type=jnp.float32)
+
+
+def matmul_t(x, y):
+    """``X · Yᵀ``."""
+    return jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+
+
+def gram(x):
+    """``XᵀX``."""
+    return jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+
+
+def mu_update(target, num, deno, eps=MU_EPS):
+    """Fused multiplicative update ``target ∘ num / (deno + eps)``."""
+    return target * num / (deno + eps)
+
+
+def r_update(r_t, ata, atxa, eps=MU_EPS):
+    """One R-slice multiplicative update (paper Eq 2, first rule):
+    ``R_t ∘ AᵀX_tA / (AᵀA · R_t · AᵀA + ε)``."""
+    rata = matmul(r_t, ata)
+    deno = matmul(ata, rata)
+    return mu_update(r_t, atxa, deno, eps)

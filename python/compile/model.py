@@ -1,0 +1,116 @@
+"""L2: the per-rank JAX compute segments of distributed RESCAL.
+
+Algorithm 3 interleaves local GEMMs with MPI collectives, so the AOT
+boundary is the maximal communication-free segment. Each function below is
+one such segment, built from the L1 Pallas kernels, and is lowered by
+``aot.py`` into one HLO artifact per static shape. The Rust coordinator
+(`rust/src/rescal/distributed.rs`) executes them between its collectives.
+
+Python never runs at serving time: these functions exist only to be traced.
+"""
+
+from .kernels import gram, matmul, matmul_t, r_update, t_matmul
+
+# ---------------------------------------------------------------------------
+# Segments of one MU iteration (in Algorithm 3 order)
+# ---------------------------------------------------------------------------
+
+
+def gram_partial(a_col):
+    """Line 3 local part: ``A^(j)ᵀ A^(j)`` (row all_reduce follows)."""
+    return gram(a_col)
+
+
+def xa_partial(x_t, a_col):
+    """Line 5 local part: ``X^(i,j)_t · A^(j)`` (row all_reduce follows)."""
+    return matmul(x_t, a_col)
+
+
+def atxa_partial(a_row, xa):
+    """Line 6 local part: ``A^(i)ᵀ · (X_tA)`` (column all_reduce follows)."""
+    return t_matmul(a_row, xa)
+
+
+def r_slice_update(r_t, ata, atxa):
+    """Lines 7-9, fully local (all inputs replicated): the fused R-slice
+    multiplicative update from the L1 kernel."""
+    return r_update(r_t, ata, atxa)
+
+
+def xart_local(xa, r_t):
+    """Line 10: ``(X_tA) · R_tᵀ``."""
+    return matmul_t(xa, r_t)
+
+
+def ar_local(a_row, r_t):
+    """Line 11: ``A^(i) · R_t``."""
+    return matmul(a_row, r_t)
+
+
+def xtar_partial(x_t, ar):
+    """Line 12 local part: ``X^(i,j)_tᵀ · (AR)`` (column all_reduce +
+    diagonal row-broadcast follow)."""
+    return t_matmul(x_t, ar)
+
+
+def deno_terms(a_row, ar, ata, r_t):
+    """Lines 15-19: the two denominator terms
+    ``A R_tᵀ (AᵀA R_t)`` and ``(A R_t)(AᵀA R_tᵀ)``, summed."""
+    atar = matmul(ata, r_t)
+    art = matmul_t(a_row, r_t)
+    artatar = matmul(art, atar)
+    atart = matmul_t(ata, r_t)
+    aratart = matmul(ar, atart)
+    return artatar + aratart
+
+
+def slice_segment(r_t, ata, atxa, xa, a_row):
+    """The **fused local segment** of one slice update (lines 7-11 +
+    15-19): everything between the AᵀXA column-reduce and the XᵀAR tile
+    product, in one artifact — the §Perf optimization that collapses ~9
+    PJRT calls per slice into one.
+
+    Returns ``(r_new, xart, ar, deno)``.
+    """
+    r_new = r_slice_update(r_t, ata, atxa)
+    xart = xart_local(xa, r_new)
+    ar = ar_local(a_row, r_new)
+    deno = deno_terms(a_row, ar, ata, r_new)
+    return r_new, xart, ar, deno
+
+
+# ---------------------------------------------------------------------------
+# Ops exported to the Rust backend (kind -> (fn, shape builder))
+# ---------------------------------------------------------------------------
+
+
+def backend_ops(tile: int, k: int):
+    """The (kind, fn, input_shapes) triples the Rust ``Backend`` trait
+    dispatches on, for one (tile, k) static-shape configuration.
+
+    ``tile`` is the per-rank square tile edge n/√p; ``k`` the latent rank.
+    """
+    t, kk = tile, k
+    return [
+        # gram of a factor block (gram_mul in the paper's breakdown)
+        ("gram", gram, [(t, kk)]),
+        # X_t·A and X_tᵀ·(AR): the tile-sized GEMMs
+        ("matmul", matmul, [(t, t), (t, kk)]),
+        ("t_matmul", t_matmul, [(t, t), (t, kk)]),
+        # AᵀXA partial
+        ("t_matmul", t_matmul, [(t, kk), (t, kk)]),
+        # AR, XART and friends
+        ("matmul", matmul, [(t, kk), (kk, kk)]),
+        ("matmul_t", matmul_t, [(t, kk), (kk, kk)]),
+        # small k×k algebra
+        ("matmul", matmul, [(kk, kk), (kk, kk)]),
+        ("matmul_t", matmul_t, [(kk, kk), (kk, kk)]),
+        # fused R-slice update
+        ("r_update", r_slice_update, [(kk, kk), (kk, kk), (kk, kk)]),
+        # fused per-slice local segment (§Perf): r_t, ata, atxa, xa, a_row
+        (
+            "slice_segment",
+            slice_segment,
+            [(kk, kk), (kk, kk), (kk, kk), (t, kk), (t, kk)],
+        ),
+    ]

@@ -1,0 +1,61 @@
+"""AOT pipeline: artifacts are valid HLO text, the manifest is consistent,
+and re-export is idempotent."""
+
+import json
+import os
+
+from compile import aot
+
+
+def test_export_and_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    written = aot.export(out, tiles=[16], ks=[2], verbose=False)
+    assert written > 0
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["dtype"] == "f32"
+    kinds = {op["kind"] for op in manifest["ops"]}
+    assert {"matmul", "t_matmul", "matmul_t", "gram", "r_update"} <= kinds
+    for op in manifest["ops"]:
+        path = os.path.join(out, op["file"])
+        assert os.path.exists(path), op["file"]
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{op['file']} is not HLO text"
+        # rank-2 f32 inputs as promised to the Rust loader
+        for shape in op["shapes"]:
+            assert len(shape) == 2
+
+
+def test_reexport_is_noop(tmp_path):
+    out = str(tmp_path / "artifacts")
+    first = aot.export(out, tiles=[16], ks=[2], verbose=False)
+    assert first > 0
+    second = aot.export(out, tiles=[16], ks=[2], verbose=False)
+    assert second == 0, "unchanged inputs must not rewrite artifacts"
+
+
+def test_force_rewrites(tmp_path):
+    out = str(tmp_path / "artifacts")
+    aot.export(out, tiles=[16], ks=[2], verbose=False)
+    assert aot.export(out, tiles=[16], ks=[2], force=True, verbose=False) > 0
+
+
+def test_shape_change_invalidates(tmp_path):
+    out = str(tmp_path / "artifacts")
+    aot.export(out, tiles=[16], ks=[2], verbose=False)
+    assert aot.export(out, tiles=[16], ks=[2, 3], verbose=False) > 0
+
+
+def test_parse_int_list():
+    assert aot.parse_int_list("2..5") == [2, 3, 4, 5]
+    assert aot.parse_int_list("32,128") == [32, 128]
+    assert aot.parse_int_list("1,3..5") == [1, 3, 4, 5]
+
+
+def test_dedup_across_tiles():
+    # k×k ops are shared between tile configurations
+    ops = aot.collect_ops([16, 32], [2])
+    keys = [(k, tuple(map(tuple, s))) for k, _, s in ops]
+    assert len(keys) == len(set(keys)), "duplicate artifacts"
+    small = [op for op in ops if op[2] == [(2, 2), (2, 2)]]
+    assert len(small) <= 2  # matmul + matmul_t once, not per tile

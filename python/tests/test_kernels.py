@@ -1,0 +1,132 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle, swept over
+shapes with hypothesis. This is the core correctness signal for the compute
+layer the Rust runtime executes."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, matmul, matmul_t, mu_update, r_update, t_matmul, ref
+
+DIM = st.integers(min_value=1, max_value=40)
+SMALL = st.integers(min_value=1, max_value=12)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.uniform(0.1, 1.0, shape).astype(np.float32))
+
+
+def assert_close(got, want, rtol=1e-4, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = rand(rng, m, k), rand(rng, k, n)
+        assert_close(matmul(x, y), ref.matmul(x, y))
+
+    def test_block_boundary_shapes(self):
+        rng = np.random.default_rng(0)
+        # shapes straddling the 128 MXU tile
+        for m in (127, 128, 129, 256):
+            x, y = rand(rng, m, 7), rand(rng, 7, 5)
+            assert_close(matmul(x, y), ref.matmul(x, y))
+
+    def test_identity(self):
+        eye = jnp.eye(6, dtype=jnp.float32)
+        x = rand(np.random.default_rng(1), 6, 6)
+        assert_close(matmul(x, eye), x)
+
+
+class TestTMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIM, k=SMALL, n=SMALL, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = rand(rng, m, k), rand(rng, m, n)
+        assert_close(t_matmul(x, y), ref.t_matmul(x, y))
+
+    def test_accumulation_across_row_blocks(self):
+        # m > MXU tile forces the accumulating grid path
+        rng = np.random.default_rng(2)
+        x, y = rand(rng, 384, 4), rand(rng, 384, 6)
+        assert_close(t_matmul(x, y), ref.t_matmul(x, y), rtol=1e-3)
+
+
+class TestMatmulT:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIM, k=SMALL, n=SMALL, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = rand(rng, m, k), rand(rng, n, k)
+        assert_close(matmul_t(x, y), ref.matmul_t(x, y))
+
+
+class TestGram:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIM, k=SMALL, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, k, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, k)
+        assert_close(gram(x), ref.gram(x))
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=DIM, k=SMALL, seed=st.integers(0, 2**16))
+    def test_symmetric_psd_diag(self, m, k, seed):
+        rng = np.random.default_rng(seed)
+        g = np.asarray(gram(rand(rng, m, k)))
+        np.testing.assert_allclose(g, g.T, rtol=1e-5)
+        assert (np.diag(g) >= 0).all()
+
+
+class TestMuUpdate:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIM, n=SMALL, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        t, num, deno = rand(rng, m, n), rand(rng, m, n), rand(rng, m, n)
+        assert_close(mu_update(t, num, deno), ref.mu_update(t, num, deno))
+
+    def test_zero_denominator_guarded(self):
+        t = jnp.ones((3, 3), jnp.float32)
+        num = jnp.ones((3, 3), jnp.float32)
+        deno = jnp.zeros((3, 3), jnp.float32)
+        out = np.asarray(mu_update(t, num, deno))
+        assert np.isfinite(out).all()
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=SMALL, n=SMALL, seed=st.integers(0, 2**16))
+    def test_preserves_nonnegativity(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        out = np.asarray(mu_update(rand(rng, m, n), rand(rng, m, n), rand(rng, m, n)))
+        assert (out >= 0).all()
+
+
+class TestRUpdate:
+    @settings(max_examples=25, deadline=None)
+    @given(k=st.integers(1, 16), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, k, seed):
+        rng = np.random.default_rng(seed)
+        r, ata, atxa = rand(rng, k, k), rand(rng, k, k), rand(rng, k, k)
+        assert_close(r_update(r, ata, atxa), ref.r_update(r, ata, atxa), rtol=1e-3)
+
+    def test_fixed_point_when_num_equals_deno(self):
+        # if AᵀXA == AᵀA·R·AᵀA the update must be (numerically) a no-op
+        rng = np.random.default_rng(3)
+        k = 4
+        r, ata = rand(rng, k, k), rand(rng, k, k)
+        atxa = ref.matmul(ata, ref.matmul(r, ata))
+        out = r_update(r, ata, atxa)
+        assert_close(out, r, rtol=1e-4)
+
+
+class TestDtype:
+    @pytest.mark.parametrize("fn,nargs", [(matmul, 2), (gram, 1)])
+    def test_outputs_f32(self, fn, nargs):
+        rng = np.random.default_rng(4)
+        args = [rand(rng, 8, 8) for _ in range(nargs)]
+        assert fn(*args).dtype == jnp.float32

@@ -1,0 +1,65 @@
+//! Fig 11 — scaling with the latent dimension k.
+//!
+//! Paper setup: fixed 20×2¹⁸×2¹⁸ tensor on 1024 cores, k ∈ {2 … 256};
+//! runtime follows the O(k²) complexity trend; the GPU version is faster
+//! but increasingly communication-bound at large k.
+//!
+//! Measured: real runs on a fixed tensor at p = 4 sweeping k; modeled:
+//! the paper-scale CPU and GPU series.
+
+use drescal::bench_util::{fmt_secs, measure_dense, pin_single_threaded_gemm, print_table};
+use drescal::simulate::{predict_rescal_iter, Machine};
+
+fn main() {
+    pin_single_threaded_gemm();
+    let (n, m, iters, p) = (384usize, 4usize, 10usize, 4usize);
+    println!("Fig 11 k-scaling — measured: {n}×{n}×{m} fixed, p={p}, {iters} iters");
+
+    let mut rows = Vec::new();
+    let mut base: Option<f64> = None;
+    for &k in &[2usize, 4, 8, 16, 32] {
+        let pt = measure_dense(n, m, k, p, iters, 111);
+        if base.is_none() {
+            base = Some(pt.wall_seconds);
+        }
+        rows.push(vec![
+            k.to_string(),
+            fmt_secs(pt.wall_seconds),
+            format!("{:.1}×", pt.wall_seconds / base.unwrap()),
+            format!("{:.0}%", 100.0 * pt.metrics.comm_fraction()),
+        ]);
+    }
+    print_table(
+        "Fig 11a measured (real system)",
+        &["k", "runtime", "vs k=2", "comm%"],
+        &rows,
+    );
+
+    // modeled at paper scale, CPU and GPU
+    let cpu = Machine::cpu_cluster();
+    let gpu = Machine::gpu_cluster();
+    let n_paper = 1usize << 18;
+    let mut rows = Vec::new();
+    for &k in &[2usize, 4, 8, 16, 32, 64, 128, 256] {
+        let c = predict_rescal_iter(n_paper, 20, k, 1024, 1.0, &cpu);
+        let g = predict_rescal_iter(n_paper, 20, k, 1024, 1.0, &gpu);
+        rows.push(vec![
+            k.to_string(),
+            fmt_secs(10.0 * c.total()),
+            fmt_secs(10.0 * g.total()),
+            format!("{:.0}%", 100.0 * g.comm() / g.total()),
+        ]);
+    }
+    print_table(
+        "Fig 11 modeled at paper scale (2¹⁸ entities, 1024 ranks)",
+        &["k", "cpu runtime", "gpu runtime", "gpu comm%"],
+        &rows,
+    );
+    println!("paper: ≈O(k²) trend on CPU; GPU faster but comm-bound at large k");
+
+    // sanity: O(k²)-ish growth in the modeled CPU series
+    let t8 = predict_rescal_iter(n_paper, 20, 8, 1024, 1.0, &cpu).total();
+    let t32 = predict_rescal_iter(n_paper, 20, 32, 1024, 1.0, &cpu).total();
+    let growth = t32 / t8;
+    assert!(growth > 3.0, "k-scaling too flat: {growth}");
+}

@@ -1,0 +1,133 @@
+//! Fig 12 — strong and weak scaling of the distributed clustering and
+//! silhouette algorithms (Algorithms 5 & 6).
+//!
+//! Paper findings: speedup tracks p only until communication overtakes the
+//! (much smaller) compute — the factors A are tiny next to X and the 1D
+//! layout needs global collectives — so the curves flatten much earlier
+//! than RESCAL's (§6.4).
+//!
+//! Measured: real clustering + silhouette on planted factor stacks at
+//! p ∈ {1, 4, 16}; modeled: paper-scale series from the §5.2 complexity.
+
+use std::time::Instant;
+
+use drescal::bench_util::{fmt_secs, pin_single_threaded_gemm, print_table};
+use drescal::comm::grid::run_on_grid;
+use drescal::comm::Trace;
+use drescal::model_selection::{custom_cluster_rank, silhouette_rank};
+use drescal::rng::Rng;
+use drescal::simulate::{predict_clustering, Machine};
+use drescal::tensor::Mat;
+
+/// Build r noisy, column-permuted copies of a planted A (the input
+/// Algorithm 5 sees), full height n.
+fn planted_stack(n: usize, k: usize, r: usize, seed: u64) -> Vec<Mat> {
+    let mut rng = Rng::new(seed);
+    let truth = Mat::random_uniform(n, k, 0.1, 1.0, &mut rng);
+    (0..r)
+        .map(|_| {
+            let perm = rng.permutation(k);
+            let mut m = Mat::zeros(n, k);
+            for c in 0..k {
+                let mut col = truth.col(c);
+                col.iter_mut().for_each(|v| *v *= 1.0 + 0.02 * (rng.uniform_f32() - 0.5));
+                m.set_col(perm[c], &col);
+            }
+            m
+        })
+        .collect()
+}
+
+fn measure(n: usize, k: usize, r: usize, p: usize) -> (f64, f64) {
+    let stack_full = planted_stack(n, k, r, 1234);
+    let results = run_on_grid(p, |ctx| {
+        let (s, e) = ctx.grid.chunk(n, ctx.row);
+        let stack: Vec<Mat> = stack_full
+            .iter()
+            .map(|m| Mat::from_fn(e - s, k, |i, j| m[(s + i, j)]))
+            .collect();
+        let mut trace = Trace::new();
+        let t0 = Instant::now();
+        let out = custom_cluster_rank(&ctx.col_comm, &stack, 100, &mut trace);
+        let cluster_secs = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let sil = silhouette_rank(&ctx.col_comm, &out.aligned, &mut trace);
+        let sil_secs = t1.elapsed().as_secs_f64();
+        assert!(sil.min > 0.9, "planted stack must cluster stably");
+        (cluster_secs, sil_secs)
+    });
+    let p_f = results.len() as f64;
+    let c: f64 = results.iter().map(|(c, _)| c).sum::<f64>() / p_f;
+    let s: f64 = results.iter().map(|(_, s)| s).sum::<f64>() / p_f;
+    (c, s)
+}
+
+fn main() {
+    pin_single_threaded_gemm();
+    let (k, r) = (10usize, 10usize);
+
+    // ---- strong scaling: fixed factors, growing grid ----
+    let n = 4096;
+    println!("Fig 12a strong scaling — measured: A is {n}×{k}, r={r}");
+    let mut rows = Vec::new();
+    let mut t1 = None;
+    for &p in &[1usize, 4, 16] {
+        let (c, s) = measure(n, k, r, p);
+        let total = c + s;
+        if p == 1 {
+            t1 = Some(total);
+        }
+        rows.push(vec![
+            p.to_string(),
+            fmt_secs(c),
+            fmt_secs(s),
+            format!("{:.2}", t1.unwrap() / total),
+        ]);
+    }
+    print_table(
+        "Fig 12a measured",
+        &["p", "clustering", "silhouette", "speedup"],
+        &rows,
+    );
+
+    // ---- weak scaling: factor height grows with √p ----
+    println!("\nFig 12b weak scaling — measured: A is 2048·√p × {k}");
+    let mut rows = Vec::new();
+    let mut t1 = None;
+    for &p in &[1usize, 4, 16] {
+        let q = (p as f64).sqrt() as usize;
+        let (c, s) = measure(2048 * q, k, r, p);
+        let total = c + s;
+        if p == 1 {
+            t1 = Some(total);
+        }
+        rows.push(vec![
+            p.to_string(),
+            (2048 * q).to_string(),
+            fmt_secs(total),
+            format!("{:.2}", t1.unwrap() / total),
+        ]);
+    }
+    print_table("Fig 12b measured", &["p", "n", "runtime", "efficiency"], &rows);
+
+    // ---- modeled at paper scale ----
+    let machine = Machine::cpu_cluster();
+    let mut rows = Vec::new();
+    let (c1, m1) = predict_clustering(1 << 13, 10, 10, 1, &machine, 20);
+    for &p in &[1usize, 4, 16, 64, 256, 1024] {
+        let (c, m) = predict_clustering(1 << 13, 10, 10, p, &machine, 20);
+        let speedup = (c1 + m1) / (c + m);
+        rows.push(vec![
+            p.to_string(),
+            fmt_secs(c + m),
+            format!("{:.1}", speedup),
+            format!("{:.0}%", 100.0 * m / (c + m)),
+        ]);
+    }
+    print_table(
+        "Fig 12a modeled at paper scale (A = 8192×10 per √p block)",
+        &["p", "runtime", "speedup", "comm%"],
+        &rows,
+    );
+    println!("paper: speedup flattens early — comm overtakes the small compute");
+}

@@ -1,0 +1,72 @@
+//! Fig 13 — model determination in exascale data (bench form of
+//! `examples/exascale_sim.rs`; see that example for the full narrative).
+//!
+//! * Fig 13a: 11.5 TB dense RESCALk sweep on 4096 cores — modeled wall
+//!   time vs the paper's ≈3 h, plus the real scaled-down anchor sweep.
+//! * Fig 13b: 9.5 EB sparse runs across densities — modeled breakdown
+//!   (paper: >90% communication, flat total).
+
+use drescal::bench_util::{fmt_secs, pin_single_threaded_gemm, print_table};
+use drescal::coordinator::{run_rescalk, JobConfig, JobData};
+use drescal::data::synthetic;
+use drescal::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
+use drescal::simulate::{exascale, Machine};
+
+fn main() {
+    pin_single_threaded_gemm();
+    let machine = Machine::cpu_cluster();
+
+    // ---- Fig 13a modeled ----
+    let dense = exascale::dense_11tb_run(&machine);
+    println!(
+        "Fig 13a modeled: {:.1} TB on {} ranks -> {} total ({:.0}% comm); paper ≈3 h",
+        dense.logical_bytes() / 1e12,
+        dense.p,
+        fmt_secs(dense.total()),
+        100.0 * dense.comm_fraction()
+    );
+
+    // ---- Fig 13a real anchor (trimmed): k recovery at 1/3100 scale ----
+    let planted = synthetic::block_tensor(128, 4, 10, 0.01, 13);
+    let job = JobConfig { p: 4, trace: false, ..Default::default() };
+    let cfg = RescalkConfig {
+        k_min: 9,
+        k_max: 11,
+        perturbations: 4,
+        delta: 0.02,
+        rescal_iters: 400,
+        tol: 0.05,
+        err_every: 25,
+        regress_iters: 25,
+        seed: 13,
+        rule: SelectionRule::default(),
+        init: InitStrategy::Random,
+    };
+    let report = run_rescalk(&JobData::dense(planted.x), &job, &cfg);
+    println!(
+        "Fig 13a anchor: recovered k = {} (truth 10) in {}",
+        report.k_opt,
+        fmt_secs(report.wall_seconds)
+    );
+    assert_eq!(report.k_opt, 10);
+
+    // ---- Fig 13b modeled ----
+    let rows: Vec<Vec<String>> = exascale::sparse_exabyte_runs(&machine)
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.0e}", r.density),
+                fmt_secs(r.compute_seconds),
+                fmt_secs(r.comm_seconds),
+                fmt_secs(r.total()),
+                format!("{:.1}%", 100.0 * r.comm_fraction()),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig 13b modeled: 9.5EB sparse, 22801 ranks, 100 iters",
+        &["density", "compute", "comm", "total", "comm%"],
+        &rows,
+    );
+    println!("paper: >90% communication, total flat across densities");
+}

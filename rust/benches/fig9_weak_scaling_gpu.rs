@@ -1,0 +1,65 @@
+//! Fig 9 — weak scaling of dense RESCAL on the GPU cluster.
+//!
+//! Paper setup (Kodiak, P100s, CUDA-aware MPI): same weak-scaling sweep as
+//! Fig 8 but on GPUs, p ∈ {1, 4, 9, 16, 25, 64, 81}; findings: ≥10×
+//! faster than CPU at equal rank counts, communication becomes the
+//! bottleneck, and 81 GPUs match the GFLOPS of ~1000 CPU cores.
+//!
+//! The GPU is modeled (DESIGN.md §3): `Machine::gpu_cluster()` carries the
+//! measured-class P100 rate and the CUDA-aware-MPI staging penalty. The
+//! bench prints the CPU and GPU series side by side so every paper claim
+//! is checkable.
+
+use drescal::bench_util::{fmt_secs, print_table};
+use drescal::simulate::{predict_rescal_iter, Machine};
+
+fn main() {
+    let cpu = Machine::cpu_cluster();
+    let gpu = Machine::gpu_cluster();
+    let (tile, m, k, iters) = (1usize << 13, 20usize, 10usize, 10usize);
+    println!("Fig 9 weak scaling GPU vs CPU — {tile}² local tile, m={m}, k={k}");
+
+    let mut rows = Vec::new();
+    for &p in &[1usize, 4, 9, 16, 25, 64, 81] {
+        let q = (p as f64).sqrt().ceil() as usize;
+        let n = tile * q;
+        let c = predict_rescal_iter(n, m, k, p, 1.0, &cpu);
+        let g = predict_rescal_iter(n, m, k, p, 1.0, &gpu);
+        rows.push(vec![
+            p.to_string(),
+            fmt_secs(iters as f64 * c.total()),
+            format!("{:.0}%", 100.0 * c.comm() / c.total()),
+            fmt_secs(iters as f64 * g.total()),
+            format!("{:.0}%", 100.0 * g.comm() / g.total()),
+            format!("{:.1}×", c.total() / g.total()),
+        ]);
+    }
+    print_table(
+        "Fig 9a modeled: CPU vs GPU weak scaling",
+        &["p", "cpu runtime", "cpu comm%", "gpu runtime", "gpu comm%", "gpu advantage"],
+        &rows,
+    );
+
+    // paper claim: 81 GPUs reach the GFLOPS of ~1000 CPU cores
+    let flop = |n: usize, p: usize, mach: &Machine| {
+        let it = predict_rescal_iter(n, m, k, p, 1.0, mach);
+        let f = flops(n, m, k, p);
+        f / it.total() / 1e9
+    };
+    let gpu81 = flop(tile * 9, 81, &gpu);
+    let cpu1024 = flop(tile * 32, 1024, &cpu);
+    println!(
+        "\nFig 9b: aggregate GFLOPS — 81 GPUs {gpu81:.0} vs 1024 CPU cores {cpu1024:.0} \
+         (paper: comparable)"
+    );
+    let ratio = gpu81 / cpu1024;
+    assert!(
+        (0.2..5.0).contains(&ratio),
+        "GPU/CPU aggregate throughput ratio out of band: {ratio}"
+    );
+}
+
+/// Total FLOPs of one full (all-ranks) MU iteration.
+fn flops(n: usize, m: usize, k: usize, _p: usize) -> f64 {
+    drescal::coordinator::metrics::rescal_flops_per_iter(n, m, k)
+}

@@ -1,0 +1,128 @@
+//! Microbenchmarks of the primitive operations: the data behind the §Perf
+//! iteration log (EXPERIMENTS.md) and the calibration inputs of the
+//! cluster replay model.
+//!
+//! Covers: native GEMM variants, CSR SpMM, the collectives, the PJRT
+//! artifact path (per-call overhead + fused-segment gain), and LSA.
+
+use drescal::backend::{native::NativeBackend, xla::XlaBackend, Backend};
+use drescal::bench_util::{fmt_secs, print_table, time_fn};
+use drescal::comm::grid::run_on_grid;
+use drescal::linalg::lsa::lsa_max;
+use drescal::rng::Rng;
+use drescal::tensor::{Csr, Mat};
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // ---- dense GEMM family ----
+    let mut rows = Vec::new();
+    for &(m, k, n) in &[(128usize, 128usize, 8usize), (512, 512, 10), (1024, 1024, 16)] {
+        let a = Mat::random_uniform(m, k, 0.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(k, n, 0.0, 1.0, &mut rng);
+        let st = time_fn(2, 7, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        let gf = 2.0 * (m * k * n) as f64 / st.median / 1e9;
+        rows.push(vec![
+            format!("{m}×{k}·{k}×{n}"),
+            fmt_secs(st.median),
+            format!("{gf:.2}"),
+        ]);
+    }
+    let a = Mat::random_uniform(1024, 16, 0.0, 1.0, &mut rng);
+    let st = time_fn(2, 7, || {
+        std::hint::black_box(a.gram());
+    });
+    rows.push(vec!["gram 1024×16".into(), fmt_secs(st.median), String::new()]);
+    print_table("native GEMM", &["shape", "median", "GFLOP/s"], &rows);
+
+    // ---- sparse SpMM ----
+    let mut rows = Vec::new();
+    for &density in &[1e-1f64, 1e-2, 1e-3] {
+        let s = Csr::random(2048, 2048, density, &mut rng);
+        let b = Mat::random_uniform(2048, 10, 0.0, 1.0, &mut rng);
+        let st = time_fn(1, 5, || {
+            std::hint::black_box(s.matmul_dense(&b));
+        });
+        let gf = 2.0 * (s.nnz() * 10) as f64 / st.median / 1e9;
+        rows.push(vec![format!("{density:.0e}"), s.nnz().to_string(), fmt_secs(st.median), format!("{gf:.2}")]);
+    }
+    print_table("CSR SpMM 2048²·(2048×10)", &["density", "nnz", "median", "GFLOP/s"], &rows);
+
+    // ---- collectives (measured α/β of the virtual MPI) ----
+    let mut rows = Vec::new();
+    for &(p, len) in &[(4usize, 1024usize), (4, 1 << 18), (16, 1024), (16, 1 << 18)] {
+        let st = time_fn(1, 5, || {
+            let results = run_on_grid(p, |ctx| {
+                let mut v = vec![ctx.rank as f32; len];
+                for _ in 0..10 {
+                    ctx.world.all_reduce_sum(&mut v);
+                }
+                v[0]
+            });
+            std::hint::black_box(results);
+        });
+        rows.push(vec![
+            p.to_string(),
+            format!("{} KiB", len * 4 / 1024),
+            fmt_secs(st.median / 10.0),
+        ]);
+    }
+    print_table("virtual-MPI all_reduce (10 rounds amortized)", &["p", "payload", "per call"], &rows);
+
+    // ---- PJRT path: per-call overhead and fused-segment gain ----
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let dir = dir.to_string_lossy().into_owned();
+        let mut xla = XlaBackend::new(&dir).expect("backend");
+        let mut native = NativeBackend::new();
+        let t = 128usize;
+        let k = 8usize;
+        let x = Mat::random_uniform(t, t, 0.0, 1.0, &mut rng);
+        let a = Mat::random_uniform(t, k, 0.0, 1.0, &mut rng);
+        let rt = Mat::random_uniform(k, k, 0.1, 1.0, &mut rng);
+        let ata = Mat::random_uniform(k, k, 0.1, 1.0, &mut rng);
+        let atxa = Mat::random_uniform(k, k, 0.1, 1.0, &mut rng);
+        let mut rows = Vec::new();
+        let st = time_fn(3, 15, || {
+            std::hint::black_box(xla.matmul(&x, &a));
+        });
+        rows.push(vec!["pjrt matmul 128²·128×8".into(), fmt_secs(st.median)]);
+        let st = time_fn(3, 15, || {
+            std::hint::black_box(native.matmul(&x, &a));
+        });
+        rows.push(vec!["native matmul (same)".into(), fmt_secs(st.median)]);
+        let st = time_fn(3, 15, || {
+            std::hint::black_box(xla.slice_segment(&rt, &ata, &atxa, &a, &a)).unwrap();
+        });
+        rows.push(vec!["pjrt fused slice_segment".into(), fmt_secs(st.median)]);
+        // the same 9 ops through individual artifact calls
+        let st = time_fn(3, 15, || {
+            let r2 = xla.r_update_fused(&rt, &ata, &atxa).unwrap();
+            let _ = std::hint::black_box(xla.matmul_t(&a, &r2));
+            let ar = xla.matmul(&a, &r2);
+            let atar = xla.matmul(&ata, &r2);
+            let art = xla.matmul_t(&a, &r2);
+            let _ = std::hint::black_box(xla.matmul(&art, &atar));
+            let atart = xla.matmul_t(&ata, &r2);
+            let _ = std::hint::black_box(xla.matmul(&ar, &atart));
+        });
+        rows.push(vec!["pjrt unfused (7 calls)".into(), fmt_secs(st.median)]);
+        print_table("PJRT artifact path (§Perf)", &["op", "median"], &rows);
+        println!("fused/unfused hits: {} calls served by artifacts", xla.hits);
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT microbench)");
+    }
+
+    // ---- LSA ----
+    let mut rows = Vec::new();
+    for &k in &[8usize, 32, 64] {
+        let sim = Mat::random_uniform(k, k, 0.0, 1.0, &mut rng);
+        let st = time_fn(2, 9, || {
+            std::hint::black_box(lsa_max(&sim));
+        });
+        rows.push(vec![k.to_string(), fmt_secs(st.median)]);
+    }
+    print_table("linear sum assignment (O(k³))", &["k", "median"], &rows);
+}

@@ -1,0 +1,83 @@
+//! Compute backends.
+//!
+//! The paper swaps NumPy/OpenBLAS (CPU) for CuPy/cuBLAS (GPU) behind one
+//! array API; we do the same behind [`Backend`]: `Native` is the
+//! hand-written blocked GEMM in `tensor::dense`, `Xla` executes the
+//! AOT-compiled JAX/Pallas artifacts through PJRT (see `runtime`). Each
+//! virtual rank owns one backend instance (`&mut self` lets backends keep
+//! executable caches and workspaces without locks).
+
+pub mod native;
+pub mod xla;
+
+use crate::tensor::Mat;
+
+/// Dense compute interface used by the RESCAL hot path.
+///
+/// Not `Send`: the PJRT handles in the XLA backend hold raw pointers, so
+/// each rank thread builds its own backend via [`BackendSpec::build`].
+pub trait Backend {
+    /// `A · B`
+    fn matmul(&mut self, a: &Mat, b: &Mat) -> Mat;
+    /// `Aᵀ · B`
+    fn t_matmul(&mut self, a: &Mat, b: &Mat) -> Mat;
+    /// `A · Bᵀ`
+    fn matmul_t(&mut self, a: &Mat, b: &Mat) -> Mat;
+    /// `AᵀA`
+    fn gram(&mut self, a: &Mat) -> Mat {
+        self.t_matmul(&a.clone(), a)
+    }
+    /// Fused multiplicative update `target *= num / (deno + eps)`.
+    fn mu_update(&mut self, target: &mut Mat, num: &Mat, deno: &Mat, eps: f32) {
+        crate::tensor::ops::mu_update(target, num, deno, eps);
+    }
+    /// Fused R-slice MU step `R_t ∘ AᵀXA / (AᵀA·R_t·AᵀA + ε)` — one L1
+    /// Pallas kernel on the XLA backend (two k×k GEMMs + the elementwise
+    /// update without leaving the artifact). `None` = not supported for
+    /// this shape; caller composes from the generic ops.
+    fn r_update_fused(&mut self, _r_t: &Mat, _ata: &Mat, _atxa: &Mat) -> Option<Mat> {
+        None
+    }
+    /// Fused per-slice local segment (Alg 3 lines 7-11 + 15-19): given
+    /// `(R_t, AᵀA, AᵀXA, XA, A_row)` returns
+    /// `(R_t_new, XART, AR, DenoTerms)` in one artifact execution — the
+    /// §Perf fusion that collapses ~9 PJRT calls per slice into one.
+    /// `None` = unsupported shape; the caller composes from generic ops.
+    fn slice_segment(
+        &mut self,
+        _r_t: &Mat,
+        _ata: &Mat,
+        _atxa: &Mat,
+        _xa: &Mat,
+        _a_row: &Mat,
+    ) -> Option<(Mat, Mat, Mat, Mat)> {
+        None
+    }
+    /// Backend display name.
+    fn name(&self) -> &'static str;
+}
+
+/// How to construct a backend on each rank thread.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// Hand-written blocked GEMM (works for every shape).
+    #[default]
+    Native,
+    /// PJRT execution of the AOT artifacts in the given directory, with
+    /// native fallback for shapes not in the manifest.
+    Xla {
+        artifact_dir: String,
+    },
+}
+
+impl BackendSpec {
+    /// Instantiate the backend for one rank.
+    pub fn build(&self) -> anyhow::Result<Box<dyn Backend>> {
+        match self {
+            BackendSpec::Native => Ok(Box::new(native::NativeBackend::new())),
+            BackendSpec::Xla { artifact_dir } => {
+                Ok(Box::new(xla::XlaBackend::new(artifact_dir)?))
+            }
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Native backend: the blocked, thread-parallel GEMM from `tensor::dense`.
+
+use super::Backend;
+use crate::tensor::Mat;
+
+/// CPU backend with no external dependencies; handles every shape.
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn matmul(&mut self, a: &Mat, b: &Mat) -> Mat {
+        a.matmul(b)
+    }
+
+    fn t_matmul(&mut self, a: &Mat, b: &Mat) -> Mat {
+        a.t_matmul(b)
+    }
+
+    fn matmul_t(&mut self, a: &Mat, b: &Mat) -> Mat {
+        a.matmul_t(b)
+    }
+
+    fn gram(&mut self, a: &Mat) -> Mat {
+        a.gram()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn backend_ops_match_mat_ops() {
+        let mut rng = Rng::new(90);
+        let mut be = NativeBackend::new();
+        let a = Mat::random_uniform(12, 5, 0.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(5, 7, 0.0, 1.0, &mut rng);
+        assert_close(be.matmul(&a, &b).as_slice(), a.matmul(&b).as_slice(), 1e-6);
+        let c = Mat::random_uniform(12, 7, 0.0, 1.0, &mut rng);
+        assert_close(be.t_matmul(&a, &c).as_slice(), a.t_matmul(&c).as_slice(), 1e-6);
+        let d = Mat::random_uniform(7, 5, 0.0, 1.0, &mut rng);
+        assert_close(be.matmul_t(&a, &d).as_slice(), a.matmul_t(&d).as_slice(), 1e-6);
+        assert_close(be.gram(&a).as_slice(), a.gram().as_slice(), 1e-6);
+        assert_eq!(be.name(), "native");
+    }
+
+    #[test]
+    fn spec_builds_native() {
+        let spec = super::super::BackendSpec::Native;
+        let be = spec.build().unwrap();
+        assert_eq!(be.name(), "native");
+    }
+}

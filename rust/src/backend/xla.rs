@@ -1,0 +1,109 @@
+//! XLA/PJRT backend: executes the AOT JAX+Pallas artifacts on the hot
+//! path, falling back to the native GEMM for shapes outside the manifest.
+//!
+//! HLO artifacts have static shapes, so `aot.py` bakes the tile-shape set
+//! of the configured experiments; anything else (odd tail tiles, tests
+//! with random sizes) transparently takes the native path. Per-call hit /
+//! fallback counts are kept so tests and benches can assert the artifact
+//! path is actually exercised.
+
+use super::{native::NativeBackend, Backend};
+use crate::runtime::Runtime;
+use crate::tensor::Mat;
+
+/// PJRT-execution backend with native fallback.
+pub struct XlaBackend {
+    runtime: Runtime,
+    native: NativeBackend,
+    /// Calls served by PJRT artifacts.
+    pub hits: usize,
+    /// Calls that fell back to native.
+    pub fallbacks: usize,
+}
+
+impl XlaBackend {
+    /// Load and compile all artifacts in `artifact_dir`.
+    pub fn new(artifact_dir: &str) -> anyhow::Result<Self> {
+        let runtime = Runtime::load(artifact_dir)?;
+        Ok(XlaBackend { runtime, native: NativeBackend::new(), hits: 0, fallbacks: 0 })
+    }
+
+    /// Wrap an already-loaded runtime.
+    pub fn from_runtime(runtime: Runtime) -> Self {
+        XlaBackend { runtime, native: NativeBackend::new(), hits: 0, fallbacks: 0 }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    fn run(&mut self, kind: &str, inputs: &[&Mat]) -> Option<Mat> {
+        match self.runtime.execute(kind, inputs) {
+            Ok(Some(m)) => {
+                self.hits += 1;
+                Some(m)
+            }
+            Ok(None) => {
+                self.fallbacks += 1;
+                None
+            }
+            Err(e) => {
+                // PJRT failure on a matching shape is a real error: surface
+                // loudly rather than silently diverging from the artifacts.
+                panic!("PJRT execution failed for {kind}: {e:#}");
+            }
+        }
+    }
+}
+
+impl Backend for XlaBackend {
+    fn matmul(&mut self, a: &Mat, b: &Mat) -> Mat {
+        self.run("matmul", &[a, b]).unwrap_or_else(|| self.native.matmul(a, b))
+    }
+
+    fn t_matmul(&mut self, a: &Mat, b: &Mat) -> Mat {
+        self.run("t_matmul", &[a, b]).unwrap_or_else(|| self.native.t_matmul(a, b))
+    }
+
+    fn matmul_t(&mut self, a: &Mat, b: &Mat) -> Mat {
+        self.run("matmul_t", &[a, b]).unwrap_or_else(|| self.native.matmul_t(a, b))
+    }
+
+    fn gram(&mut self, a: &Mat) -> Mat {
+        self.run("gram", &[a]).unwrap_or_else(|| self.native.gram(a))
+    }
+
+    fn r_update_fused(&mut self, r_t: &Mat, ata: &Mat, atxa: &Mat) -> Option<Mat> {
+        self.run("r_update", &[r_t, ata, atxa])
+    }
+
+    fn slice_segment(
+        &mut self,
+        r_t: &Mat,
+        ata: &Mat,
+        atxa: &Mat,
+        xa: &Mat,
+        a_row: &Mat,
+    ) -> Option<(Mat, Mat, Mat, Mat)> {
+        match self.runtime.execute_multi("slice_segment", &[r_t, ata, atxa, xa, a_row]) {
+            Ok(Some(mut outs)) if outs.len() == 4 => {
+                self.hits += 1;
+                let deno = outs.pop().unwrap();
+                let ar = outs.pop().unwrap();
+                let xart = outs.pop().unwrap();
+                let r_new = outs.pop().unwrap();
+                Some((r_new, xart, ar, deno))
+            }
+            Ok(Some(_)) => panic!("slice_segment artifact returned wrong arity"),
+            Ok(None) => {
+                self.fallbacks += 1;
+                None
+            }
+            Err(e) => panic!("PJRT execution failed for slice_segment: {e:#}"),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

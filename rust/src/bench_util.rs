@@ -1,0 +1,175 @@
+//! Tiny benchmarking harness (criterion is unavailable offline; DESIGN.md
+//! §3): warmup + N samples, median/p10/p90, and paper-style table output.
+
+use std::time::Instant;
+
+/// Robust summary of repeated timings, in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub samples: usize,
+}
+
+/// Time `f` with `warmup` throwaway runs and `samples` measured runs.
+pub fn time_fn(warmup: usize, samples: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..samples.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| times[((times.len() - 1) as f64 * q).round() as usize];
+    Stats { median: pct(0.5), p10: pct(0.1), p90: pct(0.9), samples: times.len() }
+}
+
+/// Measure this host's sustained dense GEMM rate (FLOP/s) for calibrating
+/// the cluster replay model.
+pub fn calibrate_dense_flops() -> f64 {
+    use crate::rng::Rng;
+    use crate::tensor::Mat;
+    let n = 512;
+    let mut rng = Rng::new(1);
+    let a = Mat::random_uniform(n, n, 0.0, 1.0, &mut rng);
+    let b = Mat::random_uniform(n, n, 0.0, 1.0, &mut rng);
+    let stats = time_fn(1, 5, || {
+        std::hint::black_box(a.matmul(&b));
+    });
+    2.0 * (n as f64).powi(3) / stats.median
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 300.0 {
+        format!("{:.2} s", s)
+    } else {
+        format!("{:.2} h", s / 3600.0)
+    }
+}
+
+/// Print a table: header then rows of equal length, space-aligned.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_orders_percentiles() {
+        let stats = time_fn(0, 9, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(stats.p10 <= stats.median);
+        assert!(stats.median <= stats.p90);
+        assert_eq!(stats.samples, 9);
+    }
+
+    #[test]
+    fn calibration_is_plausible() {
+        let flops = calibrate_dense_flops();
+        // any machine lands between 100 MFLOP/s and 10 TFLOP/s
+        assert!(flops > 1e8 && flops < 1e13, "calibrated {flops}");
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(5e-9).contains("ns"));
+        assert!(fmt_secs(5e-5).contains("µs"));
+        assert!(fmt_secs(5e-2).contains("ms"));
+        assert!(fmt_secs(5.0).contains(" s"));
+        assert!(fmt_secs(7200.0).contains(" h"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scaling-run helpers shared by the paper-figure benches
+// ---------------------------------------------------------------------------
+
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::{run_rescal, JobConfig, JobData};
+use crate::rescal::RescalOptions;
+
+/// One measured scaling point.
+pub struct ScalingPoint {
+    pub p: usize,
+    pub wall_seconds: f64,
+    pub metrics: RunMetrics,
+}
+
+/// Run distributed RESCAL on a planted dense tensor and return wall time +
+/// per-op metrics (mean over ranks). `iters` MU iterations, no early stop,
+/// native backend (the benches measure the L3 system, not PJRT call
+/// overhead — the XLA path is benchmarked separately in microbench_ops).
+pub fn measure_dense(n: usize, m: usize, k: usize, p: usize, iters: usize, seed: u64) -> ScalingPoint {
+    let planted = crate::data::synthetic::planted_tensor(n, m, k, 0.0, seed);
+    let data = JobData::dense(planted.x);
+    let job = JobConfig { p, backend: crate::backend::BackendSpec::Native, trace: true };
+    let report = run_rescal(&data, &job, &RescalOptions::new(k, iters), seed);
+    ScalingPoint {
+        p,
+        wall_seconds: report.wall_seconds,
+        metrics: RunMetrics::from_traces(&report.traces),
+    }
+}
+
+/// Sparse variant at the given density.
+pub fn measure_sparse(
+    n: usize,
+    m: usize,
+    k: usize,
+    p: usize,
+    density: f64,
+    iters: usize,
+    seed: u64,
+) -> ScalingPoint {
+    let xs = crate::data::synthetic::sparse_planted(n, m, k, density, seed);
+    let data = JobData::sparse(xs);
+    let job = JobConfig { p, backend: crate::backend::BackendSpec::Native, trace: true };
+    let report = run_rescal(&data, &job, &RescalOptions::new(k, iters), seed);
+    ScalingPoint {
+        p,
+        wall_seconds: report.wall_seconds,
+        metrics: RunMetrics::from_traces(&report.traces),
+    }
+}
+
+/// Pin the GEMM thread pool to one thread per rank thread — the scaling
+/// benches parallelize across virtual ranks, so nested GEMM threading
+/// would oversubscribe the host. Must run before the first GEMM.
+pub fn pin_single_threaded_gemm() {
+    std::env::set_var("DRESCAL_THREADS", "1");
+}

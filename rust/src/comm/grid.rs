@@ -1,0 +1,244 @@
+//! The √p × √p virtual processor grid (paper Figure 3).
+//!
+//! Rank `r` sits at grid position `(row, col) = (r / q, r % q)` with
+//! `q = √p`. Each rank belongs to three groups: its row sub-communicator,
+//! its column sub-communicator, and the world. Diagonal ranks (`row ==
+//! col`) hold `A^(i) = (A^(j))ᵀ` and act as broadcast roots (Alg 3 lines
+//! 13/23).
+
+use super::group::Group;
+
+/// Immutable description of the grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grid {
+    /// side length q = √p
+    pub q: usize,
+}
+
+impl Grid {
+    /// Build a grid for `p` ranks; `p` must be a perfect square (the paper
+    /// requires p_r = p_c, §6.1.3).
+    pub fn new(p: usize) -> Self {
+        let q = (p as f64).sqrt().round() as usize;
+        assert_eq!(q * q, p, "grid size {p} is not a perfect square");
+        assert!(q >= 1);
+        Grid { q }
+    }
+
+    pub fn p(&self) -> usize {
+        self.q * self.q
+    }
+
+    #[inline]
+    pub fn row_of(&self, rank: usize) -> usize {
+        rank / self.q
+    }
+
+    #[inline]
+    pub fn col_of(&self, rank: usize) -> usize {
+        rank % self.q
+    }
+
+    #[inline]
+    pub fn rank_at(&self, row: usize, col: usize) -> usize {
+        row * self.q + col
+    }
+
+    /// Partition `n` into `q` contiguous chunks; returns (start, end) of
+    /// chunk `i`. Sizes differ by at most one (block distribution).
+    pub fn chunk(&self, n: usize, i: usize) -> (usize, usize) {
+        let base = n / self.q;
+        let rem = n % self.q;
+        let start = i * base + i.min(rem);
+        let len = base + usize::from(i < rem);
+        (start, start + len)
+    }
+}
+
+/// Everything one virtual rank needs: its grid coordinates and its three
+/// communicator handles.
+pub struct RankCtx {
+    pub grid: Grid,
+    pub rank: usize,
+    pub row: usize,
+    pub col: usize,
+    /// Sub-communicator over the ranks sharing this rank's grid **row**
+    /// (its index within the group is this rank's `col`).
+    pub row_comm: Group,
+    /// Sub-communicator over the ranks sharing this rank's grid **column**
+    /// (its index within the group is this rank's `row`).
+    pub col_comm: Group,
+    /// All ranks.
+    pub world: Group,
+}
+
+impl RankCtx {
+    /// True on the grid diagonal.
+    pub fn is_diagonal(&self) -> bool {
+        self.row == self.col
+    }
+
+    /// Create contexts for all p ranks of a fresh grid.
+    pub fn create_all(p: usize) -> Vec<RankCtx> {
+        let grid = Grid::new(p);
+        let q = grid.q;
+        let world = Group::create(p);
+        // row i's group members are ranks (i*q)..(i*q+q); member index = col
+        let mut row_groups: Vec<Vec<Group>> = (0..q).map(|_| Group::create(q)).collect();
+        let mut col_groups: Vec<Vec<Group>> = (0..q).map(|_| Group::create(q)).collect();
+        let mut out = Vec::with_capacity(p);
+        // build in reverse so we can pop() per-rank handles in O(1)
+        let mut world = world;
+        for rank in (0..p).rev() {
+            let row = grid.row_of(rank);
+            let col = grid.col_of(rank);
+            out.push(RankCtx {
+                grid,
+                rank,
+                row,
+                col,
+                row_comm: row_groups[row].pop().expect("row group handle"),
+                col_comm: col_groups[col].pop().expect("col group handle"),
+                world: world.pop().expect("world handle"),
+            });
+        }
+        out.reverse();
+        out
+    }
+}
+
+/// Run `f` on every rank of a p-rank grid, each on its own OS thread, and
+/// return the per-rank results in rank order. This is the harness all
+/// distributed entry points build on.
+pub fn run_on_grid<T: Send>(p: usize, f: impl Fn(RankCtx) -> T + Sync) -> Vec<T> {
+    let ctxs = RankCtx::create_all(p);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ctxs.into_iter().map(|ctx| s.spawn(|| f(ctx))).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_coordinates() {
+        let g = Grid::new(9);
+        assert_eq!(g.q, 3);
+        assert_eq!(g.row_of(5), 1);
+        assert_eq!(g.col_of(5), 2);
+        assert_eq!(g.rank_at(1, 2), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_square_rejected() {
+        Grid::new(8);
+    }
+
+    #[test]
+    fn chunks_partition() {
+        let g = Grid::new(9);
+        // n = 10 over q = 3 -> sizes 4,3,3
+        let chunks: Vec<_> = (0..3).map(|i| g.chunk(10, i)).collect();
+        assert_eq!(chunks, vec![(0, 4), (4, 7), (7, 10)]);
+    }
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for p in [1usize, 4, 9, 16] {
+            let g = Grid::new(p);
+            for n in [1usize, 5, 16, 33, 100] {
+                let mut covered = 0;
+                for i in 0..g.q {
+                    let (s, e) = g.chunk(n, i);
+                    assert_eq!(s, covered);
+                    covered = e;
+                }
+                assert_eq!(covered, n);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_ctx_topology() {
+        let ctxs = RankCtx::create_all(4);
+        for (i, c) in ctxs.iter().enumerate() {
+            assert_eq!(c.rank, i);
+            assert_eq!(c.row, i / 2);
+            assert_eq!(c.col, i % 2);
+            assert_eq!(c.row_comm.rank, c.col);
+            assert_eq!(c.col_comm.rank, c.row);
+            assert_eq!(c.row_comm.size(), 2);
+            assert_eq!(c.col_comm.size(), 2);
+            assert_eq!(c.world.size(), 4);
+        }
+        assert!(ctxs[0].is_diagonal());
+        assert!(!ctxs[1].is_diagonal());
+        assert!(ctxs[3].is_diagonal());
+    }
+
+    #[test]
+    fn row_reduce_stays_in_row() {
+        // each rank contributes its row id; a row all_reduce must yield
+        // row * q (sum over the row), NOT involving other rows
+        let results = run_on_grid(9, |ctx| {
+            let mut v = vec![ctx.row as f32];
+            ctx.row_comm.all_reduce_sum(&mut v);
+            v[0]
+        });
+        for (rank, r) in results.iter().enumerate() {
+            let row = rank / 3;
+            assert_eq!(*r, (row * 3) as f32);
+        }
+    }
+
+    #[test]
+    fn col_reduce_stays_in_col() {
+        let results = run_on_grid(9, |ctx| {
+            let mut v = vec![ctx.col as f32];
+            ctx.col_comm.all_reduce_sum(&mut v);
+            v[0]
+        });
+        for (rank, r) in results.iter().enumerate() {
+            let col = rank % 3;
+            assert_eq!(*r, (col * 3) as f32);
+        }
+    }
+
+    #[test]
+    fn diagonal_broadcast_along_column() {
+        // diagonal rank of column j is at row j; broadcast its value down
+        let results = run_on_grid(9, |ctx| {
+            let mut v = vec![if ctx.is_diagonal() { (ctx.col * 100) as f32 } else { 0.0 }];
+            // within col_comm the member index equals the grid row, and the
+            // diagonal of column `col` sits at row == col
+            ctx.col_comm.broadcast(ctx.col, &mut v);
+            v[0]
+        });
+        for (rank, r) in results.iter().enumerate() {
+            let col = rank % 3;
+            assert_eq!(*r, (col * 100) as f32);
+        }
+    }
+
+    #[test]
+    fn world_gather_orders_by_rank() {
+        let results = run_on_grid(4, |ctx| ctx.world.all_gather(&[ctx.rank as f32]));
+        for r in results {
+            assert_eq!(r, vec![0.0, 1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn single_rank_grid() {
+        let results = run_on_grid(1, |ctx| {
+            let mut v = vec![3.0f32];
+            ctx.row_comm.all_reduce_sum(&mut v);
+            ctx.col_comm.all_reduce_sum(&mut v);
+            v[0]
+        });
+        assert_eq!(results, vec![3.0]);
+    }
+}

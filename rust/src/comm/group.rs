@@ -1,0 +1,259 @@
+//! A communicator group: the member set of one collective scope
+//! (a grid row, a grid column, or the world).
+//!
+//! Collectives are implemented over per-member shared slots plus a
+//! reusable barrier: write-own → barrier → read-all → barrier. This is the
+//! shared-memory analogue of allgather-then-local-reduce; message counts
+//! and volumes match the MPI collectives the paper uses, and per-op
+//! timings are recorded in the caller's [`super::Trace`].
+
+use std::sync::{Arc, Barrier, RwLock};
+
+/// State shared by all members of a group.
+pub struct GroupShared {
+    slots: Vec<RwLock<Vec<f32>>>,
+    barrier: Barrier,
+}
+
+impl GroupShared {
+    pub fn new(size: usize) -> Arc<Self> {
+        Arc::new(GroupShared {
+            slots: (0..size).map(|_| RwLock::new(Vec::new())).collect(),
+            barrier: Barrier::new(size),
+        })
+    }
+}
+
+/// One member's handle on a group.
+#[derive(Clone)]
+pub struct Group {
+    shared: Arc<GroupShared>,
+    /// This member's index within the group (0..size).
+    pub rank: usize,
+}
+
+impl Group {
+    pub fn new(shared: Arc<GroupShared>, rank: usize) -> Self {
+        Group { shared, rank }
+    }
+
+    /// Group size.
+    pub fn size(&self) -> usize {
+        self.shared.slots.len()
+    }
+
+    /// Create the full set of member handles for a fresh group.
+    pub fn create(size: usize) -> Vec<Group> {
+        let shared = GroupShared::new(size);
+        (0..size).map(|r| Group::new(shared.clone(), r)).collect()
+    }
+
+    /// Barrier over the group.
+    pub fn barrier(&self) {
+        self.shared.barrier.wait();
+    }
+
+    /// Elementwise-sum all_reduce: on return every member's `data` holds
+    /// the sum of all members' inputs.
+    pub fn all_reduce_sum(&self, data: &mut [f32]) {
+        if self.size() == 1 {
+            return;
+        }
+        {
+            let mut slot = self.shared.slots[self.rank].write().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        self.barrier();
+        // Sum in fixed slot order (including our own slot) so every member
+        // computes the bit-identical result — MPI all_reduce gives the same
+        // guarantee, and Algorithm 3 relies on it to keep the replicated
+        // factors consistent across a row.
+        data.iter_mut().for_each(|d| *d = 0.0);
+        for slot in self.shared.slots.iter() {
+            let other = slot.read().unwrap();
+            assert_eq!(other.len(), data.len(), "all_reduce length mismatch");
+            for (d, &o) in data.iter_mut().zip(other.iter()) {
+                *d += o;
+            }
+        }
+        // second barrier: nobody may overwrite a slot before all have read
+        self.barrier();
+    }
+
+    /// Elementwise max all_reduce.
+    pub fn all_reduce_max(&self, data: &mut [f32]) {
+        if self.size() == 1 {
+            return;
+        }
+        {
+            let mut slot = self.shared.slots[self.rank].write().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        self.barrier();
+        data.iter_mut().for_each(|d| *d = f32::NEG_INFINITY);
+        for slot in self.shared.slots.iter() {
+            let other = slot.read().unwrap();
+            for (d, &o) in data.iter_mut().zip(other.iter()) {
+                if o > *d {
+                    *d = o;
+                }
+            }
+        }
+        self.barrier();
+    }
+
+    /// Broadcast from `root` (group-local index): on return every member's
+    /// `data` equals the root's input.
+    pub fn broadcast(&self, root: usize, data: &mut [f32]) {
+        if self.size() == 1 {
+            return;
+        }
+        if self.rank == root {
+            let mut slot = self.shared.slots[root].write().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        self.barrier();
+        if self.rank != root {
+            let slot = self.shared.slots[root].read().unwrap();
+            assert_eq!(slot.len(), data.len(), "broadcast length mismatch");
+            data.copy_from_slice(&slot);
+        }
+        self.barrier();
+    }
+
+    /// All-gather: every member contributes `data`; returns the
+    /// concatenation ordered by group rank.
+    pub fn all_gather(&self, data: &[f32]) -> Vec<f32> {
+        if self.size() == 1 {
+            return data.to_vec();
+        }
+        {
+            let mut slot = self.shared.slots[self.rank].write().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        self.barrier();
+        let mut out = Vec::new();
+        for slot in self.shared.slots.iter() {
+            out.extend_from_slice(&slot.read().unwrap());
+        }
+        self.barrier();
+        out
+    }
+
+    /// Gather scalar f64 values (for timing/metric aggregation).
+    pub fn all_gather_f64(&self, v: f64) -> Vec<f64> {
+        let gathered = self.all_gather(&[(v as f32)]);
+        // f32 precision is fine for metric aggregation, but keep f64 shape
+        gathered.into_iter().map(|x| x as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_group<T: Send>(size: usize, f: impl Fn(Group) -> T + Sync) -> Vec<T> {
+        let groups = Group::create(size);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = groups
+                .into_iter()
+                .map(|g| s.spawn(|| f(g)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        let results = run_group(4, |g| {
+            let mut data = vec![g.rank as f32, 1.0];
+            g.all_reduce_sum(&mut data);
+            data
+        });
+        for r in results {
+            assert_eq!(r, vec![6.0, 4.0]); // 0+1+2+3, 1*4
+        }
+    }
+
+    #[test]
+    fn all_reduce_max_works() {
+        let results = run_group(3, |g| {
+            let mut data = vec![g.rank as f32 * 10.0, -(g.rank as f32)];
+            g.all_reduce_max(&mut data);
+            data
+        });
+        for r in results {
+            assert_eq!(r, vec![20.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for root in 0..3 {
+            let results = run_group(3, move |g| {
+                let mut data = vec![if g.rank == root { 42.0 } else { 0.0 }];
+                g.broadcast(root, &mut data);
+                data[0]
+            });
+            assert_eq!(results, vec![42.0; 3]);
+        }
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_rank_order() {
+        let results = run_group(4, |g| g.all_gather(&[g.rank as f32]));
+        for r in results {
+            assert_eq!(r, vec![0.0, 1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn repeated_collectives_reuse_group() {
+        let results = run_group(4, |g| {
+            let mut total = 0.0;
+            for iter in 0..50 {
+                let mut data = vec![(g.rank + iter) as f32];
+                g.all_reduce_sum(&mut data);
+                total += data[0];
+            }
+            total
+        });
+        let want: f32 = (0..50).map(|i| (0 + 1 + 2 + 3 + 4 * i) as f32).sum();
+        for r in results {
+            assert_eq!(r, want);
+        }
+    }
+
+    #[test]
+    fn singleton_group_is_identity() {
+        let mut g = Group::create(1);
+        let g = g.remove(0);
+        let mut data = vec![5.0];
+        g.all_reduce_sum(&mut data);
+        assert_eq!(data, vec![5.0]);
+        g.broadcast(0, &mut data);
+        assert_eq!(g.all_gather(&data), vec![5.0]);
+    }
+
+    #[test]
+    fn mixed_sequence_no_deadlock() {
+        // interleave different collectives; all members follow the same
+        // program order so reusable barriers stay aligned
+        let results = run_group(4, |g| {
+            let mut x = vec![1.0f32];
+            g.all_reduce_sum(&mut x);
+            let mut y = vec![g.rank as f32];
+            g.broadcast(2, &mut y);
+            let z = g.all_gather(&[x[0], y[0]]);
+            z.iter().sum::<f32>()
+        });
+        // x=4, y=2 for all, gather = [4,2]*4 -> 24
+        for r in results {
+            assert_eq!(r, 24.0);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Virtual MPI: in-process message passing over a 2D processor grid.
+//!
+//! pyDRESCALk runs on MPI with a √p×√p virtual grid and only three
+//! collectives: `all_reduce`, `all_gather`, and `broadcast`, always over
+//! row or column sub-communicators (paper §3.2, §4.1). This module
+//! reproduces that topology with one OS thread per rank and shared-memory
+//! collectives, so the whole distributed algorithm runs unchanged inside a
+//! single process.
+//!
+//! Substitution note (DESIGN.md §3): communication *pattern and volume*
+//! are identical to the MPI original; wall-clock extrapolation to cluster
+//! scale uses the α-β [`model::NetworkModel`], calibrated exactly like the
+//! paper's §5 complexity analysis.
+
+pub mod grid;
+pub mod group;
+pub mod model;
+pub mod trace;
+
+pub use grid::{Grid, RankCtx};
+pub use group::Group;
+pub use model::NetworkModel;
+pub use trace::{CommOp, Trace};

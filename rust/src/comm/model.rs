@@ -1,0 +1,153 @@
+//! α-β (latency-bandwidth) network cost model.
+//!
+//! The paper's communication complexity (§5.1.2) counts collectives over
+//! √p ranks with the standard `O(log p)` tree/butterfly factors from Chan
+//! et al. [55]. This model turns those counts into seconds so the scaling
+//! figures can be replayed at cluster scale (1024 ranks, §6.3) from a
+//! single-node calibration — the substitution documented in DESIGN.md §3.
+
+/// Cluster link parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Per-message latency, seconds.
+    pub alpha: f64,
+    /// Per-byte transfer time, seconds (1 / bandwidth).
+    pub beta: f64,
+}
+
+impl NetworkModel {
+    /// Grizzly-like Intel OmniPath fat-tree, *effective per-rank*: the
+    /// paper runs ~20-25 MPI ranks per node (§6.5), all sharing one NIC,
+    /// so each rank sees ≈1/20 of the 12.5 GB/s link during the
+    /// per-subcommunicator collectives. α also includes the MPI software
+    /// stack (mpi4py) overhead.
+    pub fn omnipath() -> Self {
+        NetworkModel { alpha: 2.0e-6, beta: 20.0 / 12.5e9 }
+    }
+
+    /// Kodiak-like InfiniBand with CUDA-aware MPI: 4 GPUs share a node's
+    /// NIC and every message stages through PCIe + host buffers (the paper
+    /// blames exactly this path, §6.3.3), so effective per-rank bandwidth
+    /// is far below the link rate and latency is ~10 µs.
+    pub fn infiniband_gpu() -> Self {
+        NetworkModel { alpha: 1.0e-5, beta: 2.5e-9 }
+    }
+
+    /// All_reduce of `bytes` over `p` ranks: recursive doubling/halving,
+    /// `2·log2(p)` message rounds, each round moving the full payload
+    /// (ring-style long-message term omitted; the paper's bound is the
+    /// log-p form).
+    pub fn all_reduce(&self, p: usize, bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let lg = (p as f64).log2().ceil();
+        lg * (self.alpha + self.beta * bytes as f64) * 2.0
+    }
+
+    /// Broadcast of `bytes` over `p` ranks: binomial tree, log2(p) rounds.
+    pub fn broadcast(&self, p: usize, bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let lg = (p as f64).log2().ceil();
+        lg * (self.alpha + self.beta * bytes as f64)
+    }
+
+    /// All_gather of `bytes` (per-rank contribution) over `p` ranks: ring,
+    /// p−1 rounds each moving one contribution.
+    pub fn all_gather(&self, p: usize, bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        (p - 1) as f64 * (self.alpha + self.beta * bytes as f64)
+    }
+}
+
+/// Machine compute model: sustained GEMM rate in FLOP/s, used together
+/// with [`NetworkModel`] to replay the paper's large-scale runs.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeModel {
+    /// Sustained dense FLOP/s per rank.
+    pub flops: f64,
+    /// Sustained sparse (CSR SpMM) FLOP/s per rank — bandwidth-bound, so
+    /// much lower than the dense rate.
+    pub sparse_flops: f64,
+}
+
+impl ComputeModel {
+    /// Broadwell-era 18-core node running one MPI rank per core, OpenBLAS:
+    /// ≈ 30 GFLOP/s effective per rank at the paper's tile sizes. The CSR
+    /// SpMM rate is higher than a naive gather estimate because the k-wide
+    /// output rows stream (≈4 GFLOP/s), but stays an order below dense.
+    pub fn grizzly_cpu_rank() -> Self {
+        ComputeModel { flops: 30.0e9, sparse_flops: 4.0e9 }
+    }
+
+    /// P100 GPU rank: the paper reports ≥10× CPU; 9.3 TFLOP/s peak f32,
+    /// ≈ 3 TFLOP/s sustained for these GEMM shapes.
+    pub fn kodiak_p100_rank() -> Self {
+        ComputeModel { flops: 3.0e12, sparse_flops: 40.0e9 }
+    }
+
+    /// Seconds to execute `flop` dense floating point operations.
+    pub fn dense_seconds(&self, flop: f64) -> f64 {
+        flop / self.flops
+    }
+
+    /// Seconds for sparse operations.
+    pub fn sparse_seconds(&self, flop: f64) -> f64 {
+        flop / self.sparse_flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_costs_nothing() {
+        let m = NetworkModel::omnipath();
+        assert_eq!(m.all_reduce(1, 1024), 0.0);
+        assert_eq!(m.broadcast(1, 1024), 0.0);
+        assert_eq!(m.all_gather(1, 1024), 0.0);
+    }
+
+    #[test]
+    fn all_reduce_scales_log_p() {
+        let m = NetworkModel::omnipath();
+        let t4 = m.all_reduce(4, 1 << 20);
+        let t16 = m.all_reduce(16, 1 << 20);
+        // log2(16)/log2(4) = 2
+        assert!((t16 / t4 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bigger_messages_cost_more() {
+        let m = NetworkModel::omnipath();
+        assert!(m.all_reduce(8, 1 << 24) > m.all_reduce(8, 1 << 10));
+        assert!(m.broadcast(8, 1 << 24) > m.broadcast(8, 1 << 10));
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let m = NetworkModel::omnipath();
+        let t = m.broadcast(1024, 8);
+        // ~10 rounds of ~alpha each
+        assert!(t > 9.0 * m.alpha && t < 12.0 * (m.alpha + 1e-7));
+    }
+
+    #[test]
+    fn gpu_rank_is_much_faster_dense() {
+        let cpu = ComputeModel::grizzly_cpu_rank();
+        let gpu = ComputeModel::kodiak_p100_rank();
+        let flop = 1e12;
+        assert!(cpu.dense_seconds(flop) / gpu.dense_seconds(flop) >= 10.0);
+    }
+
+    #[test]
+    fn sparse_rate_below_dense() {
+        let cpu = ComputeModel::grizzly_cpu_rank();
+        assert!(cpu.sparse_flops < cpu.flops);
+    }
+}

@@ -1,0 +1,218 @@
+//! Per-rank operation timing trace.
+//!
+//! The paper's scaling figures break runtime into named operations:
+//! `gram_mul`, `matrix_mul`, `matrix_mul_sparse`, `row_reduce`,
+//! `column_reduce`, `row_broadcast`, `column_broadcast` (§6.3). Each rank
+//! records (op, bytes, duration) tuples; the coordinator aggregates them
+//! into exactly those breakdown rows.
+
+use std::time::{Duration, Instant};
+
+/// Operation categories matching the paper's breakdown plots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CommOp {
+    GramMul,
+    MatrixMul,
+    MatrixMulSparse,
+    RowReduce,
+    ColumnReduce,
+    RowBroadcast,
+    ColumnBroadcast,
+    AllGather,
+    Clustering,
+    Silhouette,
+    Other,
+}
+
+impl CommOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommOp::GramMul => "gram_mul",
+            CommOp::MatrixMul => "matrix_mul",
+            CommOp::MatrixMulSparse => "matrix_mul_sparse",
+            CommOp::RowReduce => "row_reduce",
+            CommOp::ColumnReduce => "column_reduce",
+            CommOp::RowBroadcast => "row_broadcast",
+            CommOp::ColumnBroadcast => "column_broadcast",
+            CommOp::AllGather => "all_gather",
+            CommOp::Clustering => "clustering",
+            CommOp::Silhouette => "silhouette",
+            CommOp::Other => "other",
+        }
+    }
+
+    /// True for communication (vs compute) categories.
+    pub fn is_comm(&self) -> bool {
+        matches!(
+            self,
+            CommOp::RowReduce
+                | CommOp::ColumnReduce
+                | CommOp::RowBroadcast
+                | CommOp::ColumnBroadcast
+                | CommOp::AllGather
+        )
+    }
+
+    /// All categories, in display order.
+    pub fn all() -> &'static [CommOp] {
+        &[
+            CommOp::GramMul,
+            CommOp::MatrixMul,
+            CommOp::MatrixMulSparse,
+            CommOp::RowReduce,
+            CommOp::ColumnReduce,
+            CommOp::RowBroadcast,
+            CommOp::ColumnBroadcast,
+            CommOp::AllGather,
+            CommOp::Clustering,
+            CommOp::Silhouette,
+            CommOp::Other,
+        ]
+    }
+}
+
+/// One recorded event.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub op: CommOp,
+    pub bytes: usize,
+    pub duration: Duration,
+}
+
+/// Per-rank trace. Not thread-safe by design: one per rank thread.
+#[derive(Default, Clone, Debug)]
+pub struct Trace {
+    events: Vec<TraceEvent>,
+    enabled: bool,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace { events: Vec::new(), enabled: true }
+    }
+
+    /// A trace that drops all events (hot-path zero overhead mode).
+    pub fn disabled() -> Self {
+        Trace { events: Vec::new(), enabled: false }
+    }
+
+    /// Time `f`, charging it to `op` with the given payload size.
+    #[inline]
+    pub fn record<T>(&mut self, op: CommOp, bytes: usize, f: impl FnOnce() -> T) -> T {
+        if !self.enabled {
+            return f();
+        }
+        let t0 = Instant::now();
+        let out = f();
+        self.events.push(TraceEvent { op, bytes, duration: t0.elapsed() });
+        out
+    }
+
+    /// Record an event with a known duration (used when replaying modeled
+    /// timings).
+    pub fn push(&mut self, op: CommOp, bytes: usize, duration: Duration) {
+        if self.enabled {
+            self.events.push(TraceEvent { op, bytes, duration });
+        }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Total seconds charged to `op`.
+    pub fn seconds(&self, op: CommOp) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.op == op)
+            .map(|e| e.duration.as_secs_f64())
+            .sum()
+    }
+
+    /// Total seconds across all events.
+    pub fn total_seconds(&self) -> f64 {
+        self.events.iter().map(|e| e.duration.as_secs_f64()).sum()
+    }
+
+    /// Total bytes charged to `op`.
+    pub fn bytes(&self, op: CommOp) -> usize {
+        self.events.iter().filter(|e| e.op == op).map(|e| e.bytes).sum()
+    }
+
+    /// (compute seconds, communication seconds).
+    pub fn compute_comm_split(&self) -> (f64, f64) {
+        let mut comp = 0.0;
+        let mut comm = 0.0;
+        for e in &self.events {
+            if e.op.is_comm() {
+                comm += e.duration.as_secs_f64();
+            } else {
+                comp += e.duration.as_secs_f64();
+            }
+        }
+        (comp, comm)
+    }
+
+    /// Merge another trace into this one (coordinator-side aggregation).
+    pub fn merge(&mut self, other: &Trace) {
+        self.events.extend(other.events.iter().cloned());
+    }
+
+    /// Breakdown rows `(op name, seconds, bytes)` over all categories with
+    /// at least one event, in display order.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64, usize)> {
+        CommOp::all()
+            .iter()
+            .filter(|&&op| self.events.iter().any(|e| e.op == op))
+            .map(|&op| (op.name(), self.seconds(op), self.bytes(op)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_charges_op() {
+        let mut t = Trace::new();
+        let v = t.record(CommOp::GramMul, 128, || 2 + 2);
+        assert_eq!(v, 4);
+        assert_eq!(t.events().len(), 1);
+        assert_eq!(t.bytes(CommOp::GramMul), 128);
+        assert!(t.seconds(CommOp::GramMul) >= 0.0);
+    }
+
+    #[test]
+    fn disabled_trace_drops_events() {
+        let mut t = Trace::disabled();
+        t.record(CommOp::MatrixMul, 64, || ());
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn compute_comm_split_classifies() {
+        let mut t = Trace::new();
+        t.push(CommOp::MatrixMul, 0, Duration::from_millis(30));
+        t.push(CommOp::RowReduce, 0, Duration::from_millis(20));
+        t.push(CommOp::ColumnBroadcast, 0, Duration::from_millis(10));
+        let (comp, comm) = t.compute_comm_split();
+        assert!((comp - 0.030).abs() < 1e-9);
+        assert!((comm - 0.030).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_and_breakdown() {
+        let mut a = Trace::new();
+        a.push(CommOp::GramMul, 10, Duration::from_millis(5));
+        let mut b = Trace::new();
+        b.push(CommOp::GramMul, 20, Duration::from_millis(5));
+        b.push(CommOp::RowReduce, 30, Duration::from_millis(1));
+        a.merge(&b);
+        let rows = a.breakdown();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "gram_mul");
+        assert_eq!(rows[0].2, 30);
+        assert_eq!(rows[1].0, "row_reduce");
+    }
+}

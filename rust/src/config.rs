@@ -1,0 +1,155 @@
+//! Run configuration: CLI flag parsing (no clap offline) plus optional
+//! JSON config files, feeding the coordinator.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::BackendSpec;
+use crate::json::Json;
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first positional is the subcommand, then
+    /// `--key value` (or `--switch` before another flag / end = "true").
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{tok}'"))?
+                .to_string();
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                _ => "true".to_string(),
+            };
+            flags.insert(key, value);
+        }
+        Ok(Args { subcommand, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Merge flags from a JSON config file (CLI flags win).
+    pub fn merge_config_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("config JSON: {e}"))?;
+        let obj = v.as_obj().ok_or_else(|| anyhow!("config must be a JSON object"))?;
+        for (key, val) in obj {
+            if self.flags.contains_key(key) {
+                continue; // CLI overrides file
+            }
+            let s = match val {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => {
+                    if n.fract() == 0.0 {
+                        format!("{}", *n as i64)
+                    } else {
+                        format!("{n}")
+                    }
+                }
+                Json::Bool(b) => b.to_string(),
+                other => bail!("config key '{key}' has unsupported type: {other:?}"),
+            };
+            self.flags.insert(key.clone(), s);
+        }
+        Ok(())
+    }
+
+    /// The backend spec selected by `--backend native|xla` (+
+    /// `--artifacts DIR`).
+    pub fn backend(&self) -> Result<BackendSpec> {
+        match self.get("backend").unwrap_or("native") {
+            "native" => Ok(BackendSpec::Native),
+            "xla" => Ok(BackendSpec::Xla {
+                artifact_dir: self.get("artifacts").unwrap_or("artifacts").to_string(),
+            }),
+            other => bail!("unknown backend '{other}' (native|xla)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(argv("run --n 64 --k 4 --trace")).unwrap();
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 64);
+        assert_eq!(a.get_usize("k", 0).unwrap(), 4);
+        assert!(a.get_bool("trace"));
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_flags() {
+        assert!(Args::parse(argv("run oops")).is_err());
+        let a = Args::parse(argv("run --n abc")).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn backend_selection() {
+        let a = Args::parse(argv("run")).unwrap();
+        assert_eq!(a.backend().unwrap(), BackendSpec::Native);
+        let a = Args::parse(argv("run --backend xla --artifacts art")).unwrap();
+        assert_eq!(a.backend().unwrap(), BackendSpec::Xla { artifact_dir: "art".into() });
+        let a = Args::parse(argv("run --backend cuda")).unwrap();
+        assert!(a.backend().is_err());
+    }
+
+    #[test]
+    fn config_file_merge_cli_wins() {
+        let dir = std::env::temp_dir().join(format!("drescal_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"n": 128, "k": 5, "mode": "rescalk"}"#).unwrap();
+        let mut a = Args::parse(argv("run --n 64")).unwrap();
+        a.merge_config_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 64); // CLI wins
+        assert_eq!(a.get_usize("k", 0).unwrap(), 5); // file fills
+        assert_eq!(a.get("mode"), Some("rescalk"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,158 @@
+//! Metric aggregation: turns per-rank traces into the tables the paper
+//! plots — runtime breakdown by operation, compute/communication split,
+//! speedup, and GFLOPS.
+
+use crate::comm::{CommOp, Trace};
+
+/// Aggregated metrics over all ranks of one run.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    /// Mean-over-ranks seconds per op category (the paper averages runtimes
+    /// across MPI processes, §6.3).
+    pub per_op_seconds: Vec<(&'static str, f64)>,
+    pub compute_seconds: f64,
+    pub comm_seconds: f64,
+    pub total_seconds: f64,
+}
+
+impl RunMetrics {
+    /// Aggregate per-rank traces (mean across ranks, as the paper reports).
+    pub fn from_traces(traces: &[Trace]) -> RunMetrics {
+        assert!(!traces.is_empty());
+        let p = traces.len() as f64;
+        let mut per_op_seconds = Vec::new();
+        for &op in CommOp::all() {
+            let total: f64 = traces.iter().map(|t| t.seconds(op)).sum();
+            if total > 0.0 {
+                per_op_seconds.push((op.name(), total / p));
+            }
+        }
+        let (mut comp, mut comm) = (0.0, 0.0);
+        for t in traces {
+            let (c, m) = t.compute_comm_split();
+            comp += c;
+            comm += m;
+        }
+        RunMetrics {
+            per_op_seconds,
+            compute_seconds: comp / p,
+            comm_seconds: comm / p,
+            total_seconds: (comp + comm) / p,
+        }
+    }
+
+    /// Fraction of runtime spent communicating.
+    pub fn comm_fraction(&self) -> f64 {
+        if self.total_seconds == 0.0 {
+            0.0
+        } else {
+            self.comm_seconds / self.total_seconds
+        }
+    }
+
+    /// Pretty one-run breakdown block (paper-style rows).
+    pub fn format_breakdown(&self) -> String {
+        let mut out = String::new();
+        for (name, secs) in &self.per_op_seconds {
+            out.push_str(&format!("  {name:<20} {secs:>10.4} s\n"));
+        }
+        out.push_str(&format!(
+            "  {:<20} {:>10.4} s\n  {:<20} {:>10.4} s  ({:.1}% comm)\n",
+            "compute",
+            self.compute_seconds,
+            "communication",
+            self.comm_seconds,
+            100.0 * self.comm_fraction()
+        ));
+        out
+    }
+}
+
+/// Dense RESCAL FLOP count per MU iteration (paper §5.1.1): the dominant
+/// terms are the two tile GEMMs per slice (X_t·A and X_tᵀ·AR, 2·n²·k each)
+/// plus the n·k² products.
+pub fn rescal_flops_per_iter(n: usize, m: usize, k: usize) -> f64 {
+    let n = n as f64;
+    let m = m as f64;
+    let k = k as f64;
+    // X·A and Xᵀ·AR: 2 × (2 n² k) per slice
+    let tile_gemms = m * 2.0 * 2.0 * n * n * k;
+    // AᵀXA, XART, AR, deno terms: ~6 × (2 n k²) per slice + gram
+    let skinny = m * 6.0 * 2.0 * n * k * k + 2.0 * n * k * k;
+    // k×k algebra
+    let small = m * 4.0 * 2.0 * k * k * k;
+    tile_gemms + skinny + small
+}
+
+/// Sparse variant: tile GEMMs scale with density δ.
+pub fn sparse_rescal_flops_per_iter(n: usize, m: usize, k: usize, density: f64) -> f64 {
+    let dense = rescal_flops_per_iter(n, m, k);
+    let n = n as f64;
+    let m = m as f64;
+    let k = k as f64;
+    let tile_gemms = m * 2.0 * 2.0 * n * n * k;
+    dense - tile_gemms * (1.0 - density)
+}
+
+/// GFLOPS from a measured runtime.
+pub fn gflops(flops: f64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        0.0
+    } else {
+        flops / seconds / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn aggregates_mean_over_ranks() {
+        let mut t1 = Trace::new();
+        t1.push(CommOp::MatrixMul, 0, Duration::from_millis(100));
+        t1.push(CommOp::RowReduce, 0, Duration::from_millis(50));
+        let mut t2 = Trace::new();
+        t2.push(CommOp::MatrixMul, 0, Duration::from_millis(200));
+        let m = RunMetrics::from_traces(&[t1, t2]);
+        let mm = m.per_op_seconds.iter().find(|(n, _)| *n == "matrix_mul").unwrap().1;
+        assert!((mm - 0.150).abs() < 1e-9);
+        assert!((m.comm_seconds - 0.025).abs() < 1e-9);
+        assert!(m.comm_fraction() > 0.0 && m.comm_fraction() < 1.0);
+    }
+
+    #[test]
+    fn flops_scale_quadratically_in_n() {
+        let f1 = rescal_flops_per_iter(1000, 10, 8);
+        let f2 = rescal_flops_per_iter(2000, 10, 8);
+        let ratio = f2 / f1;
+        assert!(ratio > 3.5 && ratio < 4.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn sparse_flops_below_dense() {
+        let d = rescal_flops_per_iter(1000, 5, 8);
+        let s = sparse_rescal_flops_per_iter(1000, 5, 8, 1e-3);
+        assert!(s < d / 10.0);
+        // density 1 == dense
+        let s1 = sparse_rescal_flops_per_iter(1000, 5, 8, 1.0);
+        assert!((s1 - d).abs() < 1.0);
+    }
+
+    #[test]
+    fn gflops_sane() {
+        assert_eq!(gflops(1e9, 1.0), 1.0);
+        assert_eq!(gflops(1e9, 0.0), 0.0);
+    }
+
+    #[test]
+    fn breakdown_formats() {
+        let mut t = Trace::new();
+        t.push(CommOp::GramMul, 0, Duration::from_millis(10));
+        let m = RunMetrics::from_traces(&[t]);
+        let s = m.format_breakdown();
+        assert!(s.contains("gram_mul"));
+        assert!(s.contains("% comm"));
+    }
+}

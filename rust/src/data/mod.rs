@@ -1,0 +1,10 @@
+//! Datasets: synthetic generators (paper §6.2.1) and reconstructions of
+//! the Nations and Trade relational datasets (§6.2.2).
+
+pub mod nations;
+pub mod synthetic;
+pub mod trade;
+
+pub use nations::nations_tensor;
+pub use synthetic::{planted_tensor, Planted};
+pub use trade::trade_tensor;

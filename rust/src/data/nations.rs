@@ -1,0 +1,169 @@
+//! Reconstruction of the *Nations* relational dataset (Kemp et al. 2006;
+//! paper §6.2.2): 14 countries × 14 × 56 binary relations.
+//!
+//! Substitution note (DESIGN.md §3): the original data file is not
+//! shipped; we regenerate a binary tensor with the block structure the
+//! paper reports recovering — four latent communities (Eastern bloc,
+//! non-aligned movement, Western powers, and an overlapping mixed group) —
+//! with per-relation interaction patterns between those communities. The
+//! experiment this feeds (Fig 6a/6c/6e: k=4 recovery + community
+//! extraction + R-slice interaction graphs) depends only on that
+//! generative structure.
+
+use crate::rng::Rng;
+use crate::tensor::{Mat, Tensor3};
+
+/// The 14 nations, in the paper's order.
+pub const NATIONS: [&str; 14] = [
+    "Brazil", "Burma", "China", "Cuba", "Egypt", "India", "Indonesia", "Israel", "Jordan",
+    "Netherlands", "Poland", "USSR", "UK", "USA",
+];
+
+/// Number of relation slices in the original dataset.
+pub const N_RELATIONS: usize = 56;
+
+/// Ground-truth latent community memberships used by the generator
+/// (paper Fig 6c): 14×4, overlapping (Egypt/India/Israel/Poland/UK appear
+/// in two communities).
+pub fn nations_communities() -> Mat {
+    let mut a = Mat::zeros(14, 4);
+    let set = |a: &mut Mat, name: &str, c: usize, w: f32| {
+        let i = NATIONS.iter().position(|&n| n == name).unwrap();
+        a[(i, c)] = w;
+    };
+    // community-1: Eastern bloc
+    for n in ["China", "Cuba", "Poland", "USSR"] {
+        set(&mut a, n, 0, 1.0);
+    }
+    // community-2: non-aligned
+    for n in ["Burma", "Egypt", "India", "Indonesia", "Israel", "Jordan"] {
+        set(&mut a, n, 1, 1.0);
+    }
+    // community-3: Western powers
+    for n in ["USA", "UK"] {
+        set(&mut a, n, 2, 1.0);
+    }
+    // community-4: mixed/overlapping group
+    for n in ["Brazil", "Egypt", "India", "Israel", "Netherlands", "Poland", "UK"] {
+        set(&mut a, n, 3, 0.8);
+    }
+    a
+}
+
+/// Generate the 14×14×56 binary tensor.
+///
+/// Each relation t draws a 4×4 community-interaction pattern (a few strong
+/// directed entries, e.g. "exports", "treaties"), and an edge (i, j)
+/// exists with probability driven by `aᵢ·P·aⱼ`.
+pub fn nations_tensor(seed: u64) -> Tensor3 {
+    let mut rng = Rng::new(seed);
+    let a = nations_communities();
+    let slices = (0..N_RELATIONS)
+        .map(|_| {
+            // sparse directed interaction pattern between communities
+            let mut p = Mat::zeros(4, 4);
+            let strong = 1 + rng.below(3); // 1..3 strong community pairs
+            for _ in 0..strong {
+                p[(rng.below(4), rng.below(4))] = 0.7 + 0.3 * rng.uniform_f32();
+            }
+            // mild within-community baseline
+            for c in 0..4 {
+                if rng.uniform_f32() < 0.4 {
+                    p[(c, c)] = p[(c, c)].max(0.4 + 0.3 * rng.uniform_f32());
+                }
+            }
+            let score = a.matmul(&p).matmul_t(&a);
+            Mat::from_fn(14, 14, |i, j| {
+                if i == j {
+                    return 0.0;
+                }
+                let prob = score[(i, j)].min(0.95);
+                if rng.uniform_f32() < prob {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+        })
+        .collect();
+    Tensor3::from_slices(slices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_is_14x14x56() {
+        let x = nations_tensor(1);
+        assert_eq!(x.shape(), (14, 14, 56));
+    }
+
+    #[test]
+    fn binary_entries_no_self_loops() {
+        let x = nations_tensor(2);
+        for t in 0..56 {
+            let s = x.slice(t);
+            for i in 0..14 {
+                assert_eq!(s[(i, i)], 0.0, "self loop at slice {t}");
+                for j in 0..14 {
+                    let v = s[(i, j)];
+                    assert!(v == 0.0 || v == 1.0, "non-binary {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn communities_shape_and_membership() {
+        let a = nations_communities();
+        assert_eq!(a.shape(), (14, 4));
+        // USSR in community 0 only
+        let ussr = NATIONS.iter().position(|&n| n == "USSR").unwrap();
+        assert!(a[(ussr, 0)] > 0.0);
+        assert_eq!(a[(ussr, 1)], 0.0);
+        // UK overlaps communities 2 and 3
+        let uk = NATIONS.iter().position(|&n| n == "UK").unwrap();
+        assert!(a[(uk, 2)] > 0.0 && a[(uk, 3)] > 0.0);
+    }
+
+    #[test]
+    fn eastern_bloc_ties_exceed_cross_bloc() {
+        // aggregate over relations: edges within community 0 should be
+        // denser than edges between community 0 and community 2 members
+        let x = nations_tensor(3);
+        let idx = |n: &str| NATIONS.iter().position(|&m| m == n).unwrap();
+        let bloc = [idx("China"), idx("Cuba"), idx("Poland"), idx("USSR")];
+        let west = [idx("USA"), idx("UK")];
+        let mut within = 0.0;
+        let mut wc = 0;
+        let mut cross = 0.0;
+        let mut cc = 0;
+        for t in 0..56 {
+            let s = x.slice(t);
+            for &i in &bloc {
+                for &j in &bloc {
+                    if i != j {
+                        within += s[(i, j)];
+                        wc += 1;
+                    }
+                }
+                for &j in &west {
+                    cross += s[(i, j)];
+                    cc += 1;
+                }
+            }
+        }
+        let within_rate = within / wc as f32;
+        let cross_rate = cross / cc as f32;
+        assert!(
+            within_rate > cross_rate,
+            "within {within_rate} should exceed cross {cross_rate}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(nations_tensor(7).slice(10), nations_tensor(7).slice(10));
+    }
+}

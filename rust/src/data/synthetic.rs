@@ -1,0 +1,219 @@
+//! Synthetic relational tensors with planted latent communities
+//! (paper §6.2.1).
+//!
+//! Generation follows the paper exactly: latent feature matrix A with
+//! Gaussian-bump columns (controllable inter-feature correlation), core
+//! tensor R with Exp(1) entries, X⁰ = A R Aᵀ, plus uniform noise
+//! `D ∈ [−0.01·X, +0.01·X]`, i.e. X = X⁰ ∘ (1 + U[−0.01, 0.01]).
+
+use crate::rng::Rng;
+use crate::tensor::{Csr, Mat, Tensor3};
+
+/// A generated tensor together with its ground truth.
+pub struct Planted {
+    pub x: Tensor3,
+    pub a_true: Mat,
+    pub r_true: Tensor3,
+    pub k_true: usize,
+}
+
+/// Gaussian-bump latent features: column c is a Gaussian profile over the
+/// entity axis centred at a per-community location. `overlap` ∈ [0, 1]
+/// controls inter-feature correlation (0 = well-separated bumps, →1 =
+/// heavily overlapping, the paper's "highly correlated factors" case).
+pub fn gaussian_features(n: usize, k: usize, overlap: f32, rng: &mut Rng) -> Mat {
+    assert!(k >= 1 && n >= k);
+    let mut a = Mat::zeros(n, k);
+    let spacing = n as f32 / k as f32;
+    // width grows with the overlap knob
+    let sigma = spacing * (0.18 + 0.8 * overlap.clamp(0.0, 1.0));
+    for c in 0..k {
+        // jitter the centre a little so features aren't perfectly regular
+        let centre = (c as f32 + 0.5) * spacing + rng.normal(0.0, spacing * 0.05);
+        for i in 0..n {
+            let d = (i as f32 - centre) / sigma;
+            a[(i, c)] = (-0.5 * d * d).exp();
+        }
+    }
+    a
+}
+
+/// Planted tensor per §6.2.1: X = (A R Aᵀ) ∘ (1 + U[−noise, +noise]).
+/// The paper uses noise = 0.01 (±1%).
+pub fn planted_tensor(n: usize, m: usize, k: usize, overlap: f32, seed: u64) -> Planted {
+    planted_tensor_noise(n, m, k, overlap, 0.01, seed)
+}
+
+/// Planted tensor with an explicit multiplicative noise level.
+pub fn planted_tensor_noise(
+    n: usize,
+    m: usize,
+    k: usize,
+    overlap: f32,
+    noise: f32,
+    seed: u64,
+) -> Planted {
+    let mut rng = Rng::new(seed);
+    let a_true = gaussian_features(n, k, overlap, &mut rng);
+    let r_true = Tensor3::from_slices(
+        (0..m)
+            .map(|_| Mat::from_fn(k, k, |_, _| rng.exponential(1.0)))
+            .collect(),
+    );
+    let slices = (0..m)
+        .map(|t| {
+            let mut xt = a_true.matmul(r_true.slice(t)).matmul_t(&a_true);
+            if noise > 0.0 {
+                for v in xt.as_mut_slice() {
+                    *v *= 1.0 + rng.uniform_range(-noise, noise);
+                }
+            }
+            xt
+        })
+        .collect();
+    Planted { x: Tensor3::from_slices(slices), a_true, r_true, k_true: k }
+}
+
+/// Block-community relational tensor: `k` disjoint communities of entities
+/// with Exp(1) inter-community relation strengths — the sharper-structured
+/// workload used by the end-to-end example and integration tests.
+pub fn block_tensor(n: usize, m: usize, k: usize, noise: f32, seed: u64) -> Planted {
+    let mut rng = Rng::new(seed);
+    let mut a_true = Mat::zeros(n, k);
+    for i in 0..n {
+        let c = (i * k) / n;
+        a_true[(i, c)] = 0.75 + 0.5 * rng.uniform_f32();
+    }
+    let r_true = Tensor3::from_slices(
+        (0..m)
+            .map(|_| Mat::from_fn(k, k, |_, _| rng.exponential(1.0)))
+            .collect(),
+    );
+    let slices = (0..m)
+        .map(|t| {
+            let mut xt = a_true.matmul(r_true.slice(t)).matmul_t(&a_true);
+            for v in xt.as_mut_slice() {
+                *v *= 1.0 + rng.uniform_range(-noise, noise);
+            }
+            xt
+        })
+        .collect();
+    Planted { x: Tensor3::from_slices(slices), a_true, r_true, k_true: k }
+}
+
+/// Sparse synthetic tensor: planted sparse community structure at a target
+/// density, stored CSR per relation slice (the §6.3.2/Fig 10 workload).
+pub fn sparse_planted(n: usize, m: usize, k: usize, density: f64, seed: u64) -> Vec<Csr> {
+    let mut rng = Rng::new(seed);
+    // community of each entity
+    let comm: Vec<usize> = (0..n).map(|i| (i * k) / n).collect();
+    let nnz_per_slice = ((n * n) as f64 * density).round().max(1.0) as usize;
+    (0..m)
+        .map(|_| {
+            let strength = Mat::from_fn(k, k, |_, _| rng.exponential(1.0));
+            let mut trips = Vec::with_capacity(nnz_per_slice);
+            for _ in 0..nnz_per_slice {
+                let i = rng.below(n);
+                let j = rng.below(n);
+                let s = strength[(comm[i], comm[j])];
+                trips.push((i, j, s * (0.5 + rng.uniform_f32())));
+            }
+            Csr::from_triplets(n, n, trips)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::pearson::pearson;
+    use crate::tensor::ops::is_nonnegative;
+
+    #[test]
+    fn planted_is_nonnegative_and_shaped() {
+        let p = planted_tensor(32, 4, 5, 0.0, 1);
+        assert_eq!(p.x.shape(), (32, 32, 4));
+        assert_eq!(p.a_true.shape(), (32, 5));
+        for t in 0..4 {
+            assert!(is_nonnegative(p.x.slice(t)));
+        }
+    }
+
+    #[test]
+    fn noise_is_within_one_percent() {
+        let p = planted_tensor(16, 2, 3, 0.0, 2);
+        // rebuild noiseless and compare ratio
+        let clean = {
+            let s = (0..2)
+                .map(|t| p.a_true.matmul(p.r_true.slice(t)).matmul_t(&p.a_true))
+                .collect();
+            Tensor3::from_slices(s)
+        };
+        for t in 0..2 {
+            for (got, want) in p.x.slice(t).as_slice().iter().zip(clean.slice(t).as_slice()) {
+                if *want > 1e-6 {
+                    let ratio = got / want;
+                    assert!(ratio > 0.989 && ratio < 1.011, "ratio={ratio}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn low_overlap_features_weakly_correlated() {
+        let mut rng = Rng::new(3);
+        let a = gaussian_features(128, 4, 0.0, &mut rng);
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                let r = pearson(&a.col(i), &a.col(j));
+                assert!(r < 0.35, "features {i},{j} correlated r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn high_overlap_raises_correlation() {
+        let mut rng = Rng::new(4);
+        let lo = gaussian_features(128, 4, 0.0, &mut rng);
+        let hi = gaussian_features(128, 4, 0.9, &mut rng);
+        let mean_corr = |a: &Mat| {
+            let mut s = 0.0;
+            let mut c = 0;
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    s += pearson(&a.col(i), &a.col(j)).abs();
+                    c += 1;
+                }
+            }
+            s / c as f32
+        };
+        assert!(mean_corr(&hi) > mean_corr(&lo) + 0.2);
+    }
+
+    #[test]
+    fn block_tensor_has_disjoint_communities() {
+        let p = block_tensor(24, 2, 4, 0.01, 5);
+        // each entity row of A_true has exactly one nonzero
+        for i in 0..24 {
+            let nz = (0..4).filter(|&c| p.a_true[(i, c)] > 0.0).count();
+            assert_eq!(nz, 1);
+        }
+    }
+
+    #[test]
+    fn sparse_planted_density() {
+        let xs = sparse_planted(64, 3, 4, 0.05, 6);
+        assert_eq!(xs.len(), 3);
+        for s in &xs {
+            let d = s.density();
+            assert!(d > 0.03 && d <= 0.06, "density={d}");
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = planted_tensor(16, 2, 3, 0.0, 7);
+        let b = planted_tensor(16, 2, 3, 0.0, 7);
+        assert_eq!(a.x.slice(0), b.x.slice(0));
+    }
+}

@@ -1,0 +1,30 @@
+//! # drescal — Distributed non-negative RESCAL with automatic model selection
+//!
+//! A from-scratch reproduction of **pyDRESCALk** (Bhattarai et al., 2022):
+//! non-negative RESCAL factorization of relational tensors
+//! `X_t ≈ A R_t Aᵀ` distributed over a 2D virtual processor grid, with
+//! automatic selection of the number of latent communities `k` via
+//! perturbation resampling, LSA-aligned clustering, and silhouette
+//! statistics.
+//!
+//! The stack has three layers (see DESIGN.md):
+//! * L1/L2 (build time): Pallas kernels + JAX segments, AOT-lowered to HLO
+//!   text in `artifacts/`.
+//! * L3 (this crate): the distributed algorithm, virtual-MPI substrate,
+//!   model selection, datasets, CLI, and benchmarks. Compute runs either on
+//!   the PJRT runtime (`runtime`/`backend::xla`) or the native fallback.
+pub mod backend;
+pub mod bench_util;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod linalg;
+pub mod model_selection;
+pub mod rescal;
+pub mod rng;
+pub mod simulate;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;

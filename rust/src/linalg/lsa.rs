@@ -1,0 +1,191 @@
+//! Linear sum assignment (the Hungarian method, O(k³)).
+//!
+//! Algorithm 5 permutes the columns of each perturbation's A factor so the
+//! latent communities align across perturbations; the permutation is the
+//! assignment maximizing total cosine similarity to the current medoids
+//! (paper §4.3 uses `LSA(G_q)` with an O(k³) bound, citing Burkard et al.).
+//!
+//! Implementation: the classic shortest-augmenting-path / potentials form
+//! (Jonker–Volgenant style), solving the *minimization* problem; the
+//! maximization entry point negates the cost matrix.
+
+use crate::tensor::Mat;
+
+/// Minimum-cost assignment of rows to columns of a square cost matrix.
+/// Returns `perm` with `perm[row] = col`.
+pub fn lsa_min(cost: &Mat) -> Vec<usize> {
+    let n = cost.rows();
+    assert_eq!(n, cost.cols(), "LSA needs a square cost matrix");
+    if n == 0 {
+        return Vec::new();
+    }
+    // Potentials + augmenting path over columns (1-indexed sentinel at 0).
+    let inf = f64::INFINITY;
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    // p[j] = row assigned to column j (0 = none); j in 1..=n
+    let mut p = vec![0usize; n + 1];
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![inf; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = inf;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if used[j] {
+                    continue;
+                }
+                let cur = cost[(i0 - 1, j - 1)] as f64 - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // augment along the path
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut perm = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            perm[p[j] - 1] = j - 1;
+        }
+    }
+    perm
+}
+
+/// Maximum-total-similarity assignment: `perm[row] = col` maximizing
+/// `Σ sim[(row, perm[row])]`.
+pub fn lsa_max(sim: &Mat) -> Vec<usize> {
+    let neg = Mat::from_fn(sim.rows(), sim.cols(), |i, j| -sim[(i, j)]);
+    lsa_min(&neg)
+}
+
+/// Total cost of an assignment.
+pub fn assignment_cost(cost: &Mat, perm: &[usize]) -> f64 {
+    perm.iter().enumerate().map(|(i, &j)| cost[(i, j)] as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::property;
+
+    /// Brute-force optimal assignment by permutation enumeration.
+    fn brute_min(cost: &Mat) -> f64 {
+        let n = cost.rows();
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut best = f64::INFINITY;
+        permute(&mut idx, 0, &mut |p| {
+            let c = assignment_cost(cost, p);
+            if c < best {
+                best = c;
+            }
+        });
+        best
+    }
+
+    fn permute(xs: &mut Vec<usize>, i: usize, f: &mut impl FnMut(&[usize])) {
+        if i == xs.len() {
+            f(xs);
+            return;
+        }
+        for j in i..xs.len() {
+            xs.swap(i, j);
+            permute(xs, i + 1, f);
+            xs.swap(i, j);
+        }
+    }
+
+    #[test]
+    fn identity_cost_picks_diagonal() {
+        // cost 0 on diagonal, 1 off-diagonal -> identity permutation
+        let c = Mat::from_fn(4, 4, |i, j| if i == j { 0.0 } else { 1.0 });
+        assert_eq!(lsa_min(&c), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn known_small_case() {
+        // classic 3x3 example; optimal = 5 (0->1, 1->0, 2->2)
+        let c = Mat::from_vec(3, 3, vec![4.0, 1.0, 3.0, 2.0, 0.0, 5.0, 3.0, 2.0, 2.0]);
+        let p = lsa_min(&c);
+        assert_eq!(assignment_cost(&c, &p), 5.0);
+    }
+
+    #[test]
+    fn matches_bruteforce_random() {
+        property(30, |rng| {
+            let n = 2 + rng.below(5);
+            let c = Mat::random_uniform(n, n, 0.0, 10.0, rng);
+            let p = lsa_min(&c);
+            // p must be a permutation
+            let mut seen = vec![false; n];
+            for &j in &p {
+                assert!(!seen[j]);
+                seen[j] = true;
+            }
+            let got = assignment_cost(&c, &p);
+            let want = brute_min(&c);
+            assert!((got - want).abs() < 1e-6, "got {got}, want {want}");
+        });
+    }
+
+    #[test]
+    fn max_is_min_of_negation() {
+        let mut rng = Rng::new(44);
+        let s = Mat::random_uniform(6, 6, -1.0, 1.0, &mut rng);
+        let p = lsa_max(&s);
+        let total: f64 = p.iter().enumerate().map(|(i, &j)| s[(i, j)] as f64).sum();
+        // compare against brute force maximum
+        let neg = Mat::from_fn(6, 6, |i, j| -s[(i, j)]);
+        let want = -brute_min(&neg);
+        assert!((total - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn permutation_similarity_recovers_permutation() {
+        // sim = permutation matrix -> lsa_max must recover it exactly
+        let mut rng = Rng::new(45);
+        for _ in 0..10 {
+            let n = 3 + rng.below(6);
+            let perm = rng.permutation(n);
+            let s = Mat::from_fn(n, n, |i, j| if perm[i] == j { 1.0 } else { 0.0 });
+            assert_eq!(lsa_max(&s), perm);
+        }
+    }
+
+    #[test]
+    fn single_element() {
+        let c = Mat::from_vec(1, 1, vec![3.0]);
+        assert_eq!(lsa_min(&c), vec![0]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Medians.
+//!
+//! The robust solution Ã for each k is the elementwise median over the r
+//! aligned perturbation solutions (paper §2.3 step 3, Alg 5 line 11). The
+//! median is local to each rank's row block, so no communication is needed.
+
+use crate::tensor::Mat;
+
+/// Median of a slice (destructive on a copy; averages the two middle
+/// elements for even lengths).
+pub fn median_of(xs: &[f32]) -> f32 {
+    assert!(!xs.is_empty(), "median of empty slice");
+    let mut v = xs.to_vec();
+    let n = v.len();
+    v.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Elementwise median across a stack of equally-shaped matrices.
+pub fn matrix_median(stack: &[Mat]) -> Mat {
+    assert!(!stack.is_empty());
+    let (rows, cols) = stack[0].shape();
+    assert!(stack.iter().all(|m| m.shape() == (rows, cols)));
+    let mut out = Mat::zeros(rows, cols);
+    let mut buf = vec![0f32; stack.len()];
+    for i in 0..rows {
+        for j in 0..cols {
+            for (q, m) in stack.iter().enumerate() {
+                buf[q] = m[(i, j)];
+            }
+            out[(i, j)] = median_of(&buf);
+        }
+    }
+    out
+}
+
+/// Median across the third axis of an n×k×r stack given as r matrices —
+/// alias of [`matrix_median`] matching the paper's `median(A')` notation.
+pub fn column_median(perturbations: &[Mat]) -> Mat {
+    matrix_median(perturbations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::property;
+
+    #[test]
+    fn median_odd() {
+        assert_eq!(median_of(&[3.0, 1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn median_even() {
+        assert_eq!(median_of(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn median_single() {
+        assert_eq!(median_of(&[7.0]), 7.0);
+    }
+
+    #[test]
+    fn median_is_order_invariant() {
+        property(20, |rng| {
+            let n = 1 + rng.below(20);
+            let xs: Vec<f32> = (0..n).map(|_| rng.uniform_f32()).collect();
+            let m1 = median_of(&xs);
+            let mut shuffled = xs.clone();
+            rng.shuffle(&mut shuffled);
+            assert_eq!(m1, median_of(&shuffled));
+        });
+    }
+
+    #[test]
+    fn median_bounded_by_extremes() {
+        property(20, |rng| {
+            let n = 1 + rng.below(15);
+            let xs: Vec<f32> = (0..n).map(|_| rng.uniform_range(-5.0, 5.0)).collect();
+            let m = median_of(&xs);
+            let lo = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(m >= lo && m <= hi);
+        });
+    }
+
+    #[test]
+    fn matrix_median_elementwise() {
+        let a = Mat::from_vec(1, 2, vec![1.0, 10.0]);
+        let b = Mat::from_vec(1, 2, vec![2.0, 30.0]);
+        let c = Mat::from_vec(1, 2, vec![3.0, 20.0]);
+        let m = matrix_median(&[a, b, c]);
+        assert_eq!(m.as_slice(), &[2.0, 20.0]);
+    }
+
+    #[test]
+    fn matrix_median_robust_to_outlier() {
+        let mut rng = Rng::new(50);
+        let base = Mat::random_uniform(4, 3, 0.0, 1.0, &mut rng);
+        let mut outlier = base.clone();
+        outlier.scale(100.0);
+        // 4 copies of base + 1 outlier -> median == base
+        let stack = vec![base.clone(), base.clone(), base.clone(), base.clone(), outlier];
+        let m = matrix_median(&stack);
+        crate::testing::assert_close(m.as_slice(), base.as_slice(), 1e-6);
+    }
+}

@@ -1,0 +1,14 @@
+//! Numerical building blocks: linear sum assignment, medians, Pearson
+//! correlation, one-sided Jacobi SVD, and NNDSVD initialization.
+
+pub mod lsa;
+pub mod median;
+pub mod nndsvd;
+pub mod pearson;
+pub mod svd;
+
+pub use lsa::{lsa_max, lsa_min};
+pub use median::{column_median, median_of};
+pub use nndsvd::nndsvd_init;
+pub use pearson::{pearson, pearson_matrix};
+pub use svd::jacobi_svd;

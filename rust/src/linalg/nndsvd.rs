@@ -1,0 +1,127 @@
+//! NNDSVD initialization (Boutsidis & Gallopoulos; Atif et al. variant the
+//! paper cites as [56]).
+//!
+//! The paper's custom initialization (§6.1.3): NNDSVD-decompose the
+//! concatenated unfoldings of X along axes 1 and 2 to obtain A, then run R
+//! updates to get the matching core. This module supplies the NNDSVD of a
+//! non-negative matrix; the unfolding concatenation + R bootstrap live in
+//! `rescal::init`.
+
+use super::svd::jacobi_svd;
+use crate::tensor::Mat;
+
+/// Split a vector into its positive and negative parts.
+fn pos_neg(v: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let pos = v.iter().map(|&x| x.max(0.0)).collect();
+    let neg = v.iter().map(|&x| (-x).max(0.0)).collect();
+    (pos, neg)
+}
+
+fn norm(v: &[f32]) -> f32 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// NNDSVD: non-negative n×k initialization from the leading k singular
+/// triplets of `x` (n×m, non-negative). Columns are the dominant
+/// non-negative parts of the singular vectors, scaled by √σ.
+///
+/// Zero entries are flipped to a small positive floor (`eps_fill`) so MU
+/// iterations cannot zero-lock — the "NNDSVDa"-style variant.
+pub fn nndsvd_init(x: &Mat, k: usize, eps_fill: f32) -> Mat {
+    let (n, _m) = x.shape();
+    assert!(k >= 1, "k must be >= 1");
+    let svd = jacobi_svd(x);
+    let r = svd.s.len();
+    let mut a = Mat::zeros(n, k);
+    let mean = x.sum() / (x.rows() * x.cols()) as f32;
+    for j in 0..k {
+        if j == 0 && r > 0 {
+            // leading singular vector of a non-negative matrix is
+            // non-negative up to sign (Perron–Frobenius)
+            let u0 = svd.u.col(0);
+            let sign = if u0.iter().sum::<f32>() >= 0.0 { 1.0 } else { -1.0 };
+            let s0 = svd.s[0].max(0.0).sqrt();
+            let col: Vec<f32> = u0.iter().map(|&v| (sign * v).max(0.0) * s0).collect();
+            a.set_col(0, &col);
+        } else if j < r {
+            let uj = svd.u.col(j);
+            let vj = svd.v.col(j);
+            let (up, un) = pos_neg(&uj);
+            let (vp, vn) = pos_neg(&vj);
+            let (upn, unn) = (norm(&up), norm(&un));
+            let (vpn, vnn) = (norm(&vp), norm(&vn));
+            let termp = upn * vpn;
+            let termn = unn * vnn;
+            let sj = svd.s[j].max(0.0).sqrt();
+            let col: Vec<f32> = if termp >= termn {
+                let scale = if upn > 0.0 { sj * (termp.sqrt() / upn) } else { 0.0 };
+                up.iter().map(|&v| v * scale).collect()
+            } else {
+                let scale = if unn > 0.0 { sj * (termn.sqrt() / unn) } else { 0.0 };
+                un.iter().map(|&v| v * scale).collect()
+            };
+            a.set_col(j, &col);
+        } else {
+            // k exceeds available rank: fill with the matrix mean
+            let col = vec![mean.max(eps_fill); n];
+            a.set_col(j, &col);
+        }
+    }
+    // flip zeros to a small positive floor
+    crate::tensor::ops::clamp_min(&mut a, eps_fill.max(mean.abs() * 1e-4));
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::ops::is_nonnegative;
+
+    #[test]
+    fn output_nonnegative_and_shaped() {
+        let mut rng = Rng::new(80);
+        let x = Mat::random_uniform(20, 15, 0.0, 1.0, &mut rng);
+        let a = nndsvd_init(&x, 4, 1e-6);
+        assert_eq!(a.shape(), (20, 4));
+        assert!(is_nonnegative(&a));
+        assert!(a.as_slice().iter().all(|&v| v > 0.0), "strictly positive fill");
+    }
+
+    #[test]
+    fn k_beyond_rank_is_filled() {
+        // rank-1 matrix but k = 3
+        let x = Mat::from_fn(6, 6, |i, j| ((i + 1) * (j + 1)) as f32);
+        let a = nndsvd_init(&x, 3, 1e-6);
+        assert_eq!(a.shape(), (6, 3));
+        assert!(is_nonnegative(&a));
+    }
+
+    #[test]
+    fn leading_column_tracks_dominant_structure() {
+        // block matrix: first 5 rows heavy, last 5 light -> leading NNDSVD
+        // column should weight the heavy block more
+        let x = Mat::from_fn(10, 10, |i, _| if i < 5 { 10.0 } else { 0.1 });
+        let a = nndsvd_init(&x, 2, 1e-6);
+        let c0 = a.col(0);
+        let heavy: f32 = c0[..5].iter().sum();
+        let light: f32 = c0[5..].iter().sum();
+        assert!(heavy > 10.0 * light, "heavy={heavy}, light={light}");
+    }
+
+    #[test]
+    fn better_than_random_start_for_mu() {
+        // NNDSVD first column explains the rank-1 part: relative error of
+        // rank-1 reconstruction from the init should beat a random column.
+        let mut rng = Rng::new(81);
+        let u: Vec<f32> = (0..12).map(|_| rng.uniform_f32() + 0.1).collect();
+        let x = Mat::from_fn(12, 12, |i, j| u[i] * u[j]);
+        let a = nndsvd_init(&x, 1, 1e-6);
+        let c0 = Mat::from_vec(12, 1, a.col(0));
+        let rec = c0.matmul(&c0.transpose());
+        let mut diff = x.clone();
+        diff.sub_assign(&rec);
+        let rel = diff.norm_fro() / x.norm_fro();
+        assert!(rel < 0.05, "rel={rel}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Pearson correlation — the paper's correctness metric for comparing
+//! recovered latent features against ground truth (§6.2.1, Fig 5d).
+
+use crate::tensor::Mat;
+
+/// Pearson correlation coefficient of two equal-length vectors.
+pub fn pearson(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    assert!(n > 0.0);
+    let mx = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let my = y.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        let dx = a as f64 - mx;
+        let dy = b as f64 - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    (sxy / (sxx.sqrt() * syy.sqrt())) as f32
+}
+
+/// Column-by-column Pearson correlation matrix between two n×k matrices:
+/// `out[(i, j)] = pearson(X[:, i], Y[:, j])` — Fig 5d's correlation matrix.
+pub fn pearson_matrix(x: &Mat, y: &Mat) -> Mat {
+    assert_eq!(x.rows(), y.rows());
+    Mat::from_fn(x.cols(), y.cols(), |i, j| pearson(&x.col(i), &y.col(j)))
+}
+
+/// Mean of the best-match correlations: aligns columns of `found` to
+/// `truth` greedily via the correlation matrix and averages |r| over the
+/// matches. Used to score feature recovery as in §6.2.1.
+pub fn best_match_correlation(truth: &Mat, found: &Mat) -> f32 {
+    let corr = pearson_matrix(truth, found);
+    let aligned = crate::linalg::lsa::lsa_max(&Mat::from_fn(corr.rows(), corr.cols(), |i, j| {
+        corr[(i, j)].abs()
+    }));
+    let total: f32 = aligned.iter().enumerate().map(|(i, &j)| corr[(i, j)].abs()).sum();
+    total / corr.rows() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn perfect_correlation() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perfect_anticorrelation() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [3.0, 2.0, 1.0];
+        assert!((pearson(&x, &y) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_vector_gives_zero() {
+        let x = [1.0, 1.0, 1.0];
+        let y = [1.0, 2.0, 3.0];
+        assert_eq!(pearson(&x, &y), 0.0);
+    }
+
+    #[test]
+    fn shift_and_scale_invariant() {
+        let mut rng = Rng::new(60);
+        let x: Vec<f32> = (0..50).map(|_| rng.uniform_f32()).collect();
+        let y: Vec<f32> = x.iter().map(|&v| 3.0 * v + 7.0).collect();
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn independent_near_zero() {
+        let mut rng = Rng::new(61);
+        let x: Vec<f32> = (0..20_000).map(|_| rng.uniform_f32()).collect();
+        let y: Vec<f32> = (0..20_000).map(|_| rng.uniform_f32()).collect();
+        assert!(pearson(&x, &y).abs() < 0.03);
+    }
+
+    #[test]
+    fn pearson_matrix_diag_of_self() {
+        let mut rng = Rng::new(62);
+        let a = Mat::random_uniform(30, 4, 0.0, 1.0, &mut rng);
+        let c = pearson_matrix(&a, &a);
+        for i in 0..4 {
+            assert!((c[(i, i)] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn best_match_recovers_permuted_features() {
+        let mut rng = Rng::new(63);
+        let truth = Mat::random_uniform(40, 5, 0.0, 1.0, &mut rng);
+        // found = truth with columns permuted and rescaled
+        let perm = rng.permutation(5);
+        let mut found = Mat::zeros(40, 5);
+        for (i, &j) in perm.iter().enumerate() {
+            let mut col = truth.col(i);
+            col.iter_mut().for_each(|v| *v *= 2.5);
+            found.set_col(j, &col);
+        }
+        let score = best_match_correlation(&truth, &found);
+        assert!(score > 0.999, "score={score}");
+    }
+}

@@ -1,0 +1,184 @@
+//! One-sided Jacobi SVD.
+//!
+//! Needed only at initialization time (NNDSVD, §3.4 of the paper), never on
+//! the MU hot path, so a simple robust O(n·k²)-per-sweep Jacobi scheme is
+//! plenty: it orthogonalizes the columns of A in place; singular values are
+//! the resulting column norms, U the normalized columns, V the accumulated
+//! rotations.
+
+use crate::tensor::Mat;
+
+/// Result of a thin SVD: `a ≈ u · diag(s) · vᵀ` with `u` m×r, `s` r, `v` n×r.
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub v: Mat,
+}
+
+/// One-sided Jacobi SVD of an m×n matrix (m ≥ n recommended; for m < n the
+/// transpose is decomposed and factors swapped).
+pub fn jacobi_svd(a: &Mat) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        let t = jacobi_svd(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    let mut u = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 60;
+    let tol = 1e-10f64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2x2 gram entries
+                let mut app = 0.0f64;
+                let mut aqq = 0.0f64;
+                let mut apq = 0.0f64;
+                for i in 0..m {
+                    let up = u[(i, p)] as f64;
+                    let uq = u[(i, q)] as f64;
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= tol * (app * aqq).sqrt() {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing apq
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[(i, p)] as f64;
+                    let uq = u[(i, q)] as f64;
+                    u[(i, p)] = (c * up - s * uq) as f32;
+                    u[(i, q)] = (s * up + c * uq) as f32;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)] as f64;
+                    let vq = v[(i, q)] as f64;
+                    v[(i, p)] = (c * vp - s * vq) as f32;
+                    v[(i, q)] = (s * vp + c * vq) as f32;
+                }
+            }
+        }
+        if off < tol {
+            break;
+        }
+    }
+    // singular values = column norms of u; normalize u
+    let mut s: Vec<f32> = Vec::with_capacity(n);
+    for j in 0..n {
+        let norm = (0..m).map(|i| (u[(i, j)] as f64).powi(2)).sum::<f64>().sqrt();
+        s.push(norm as f32);
+        if norm > 0.0 {
+            for i in 0..m {
+                u[(i, j)] = (u[(i, j)] as f64 / norm) as f32;
+            }
+        }
+    }
+    // sort by descending singular value
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| s[j].partial_cmp(&s[i]).unwrap());
+    let us = Mat::from_fn(m, n, |i, j| u[(i, order[j])]);
+    let vs = Mat::from_fn(n, n, |i, j| v[(i, order[j])]);
+    let ss: Vec<f32> = order.iter().map(|&i| s[i]).collect();
+    Svd { u: us, s: ss, v: vs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::{assert_close, property};
+
+    fn reconstruct(svd: &Svd) -> Mat {
+        let (m, r) = svd.u.shape();
+        let n = svd.v.rows();
+        let mut out = Mat::zeros(m, n);
+        for j in 0..r {
+            let sj = svd.s[j];
+            for i in 0..m {
+                let uij = svd.u[(i, j)] * sj;
+                for l in 0..n {
+                    out[(i, l)] += uij * svd.v[(l, j)];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn reconstructs_random_matrices() {
+        property(10, |rng| {
+            let m = 3 + rng.below(12);
+            let n = 2 + rng.below(m.min(8));
+            let a = Mat::random_uniform(m, n, -1.0, 1.0, rng);
+            let svd = jacobi_svd(&a);
+            let rec = reconstruct(&svd);
+            assert_close(rec.as_slice(), a.as_slice(), 1e-3);
+        });
+    }
+
+    #[test]
+    fn singular_values_sorted_nonnegative() {
+        let mut rng = Rng::new(70);
+        let a = Mat::random_uniform(20, 6, -1.0, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(svd.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn u_columns_orthonormal() {
+        let mut rng = Rng::new(71);
+        let a = Mat::random_uniform(25, 5, -1.0, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        let g = svd.u.gram();
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g[(i, j)] - want).abs() < 1e-3, "g[{i},{j}]={}", g[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn v_columns_orthonormal() {
+        let mut rng = Rng::new(72);
+        let a = Mat::random_uniform(25, 5, -1.0, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        let g = svd.v.gram();
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g[(i, j)] - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn wide_matrix_via_transpose() {
+        let mut rng = Rng::new(73);
+        let a = Mat::random_uniform(4, 9, -1.0, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        let rec = reconstruct(&svd);
+        assert_close(rec.as_slice(), a.as_slice(), 1e-3);
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        // a = x yᵀ has one nonzero singular value = |x||y|
+        let x = [1.0f32, 2.0, 2.0];
+        let y = [3.0f32, 4.0];
+        let a = Mat::from_fn(3, 2, |i, j| x[i] * y[j]);
+        let svd = jacobi_svd(&a);
+        assert!((svd.s[0] - 15.0).abs() < 1e-3, "s0={}", svd.s[0]);
+        assert!(svd.s[1].abs() < 1e-3);
+    }
+}

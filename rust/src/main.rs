@@ -1,0 +1,277 @@
+//! drescal CLI — leader entrypoint for the distributed RESCAL(k) system.
+//!
+//! Subcommands:
+//! * `run`          — one distributed factorization on synthetic/real data
+//! * `model-select` — full RESCALk sweep with automatic k determination
+//! * `exascale`     — replay the paper's Fig 13 runs through the model
+//! * `artifacts`    — inspect the AOT artifact manifest
+//!
+//! Examples:
+//! ```text
+//! drescal run --data synthetic --n 64 --m 3 --k 4 --p 4 --iters 200
+//! drescal model-select --data nations --p 4 --k-min 1 --k-max 7
+//! drescal run --config run.json --backend xla
+//! ```
+
+use anyhow::{bail, Result};
+
+use drescal::bench_util;
+use drescal::config::Args;
+use drescal::coordinator::metrics::RunMetrics;
+use drescal::coordinator::{run_rescal, run_rescalk, JobConfig, JobData};
+use drescal::data::{nations, synthetic, trade};
+use drescal::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
+use drescal::rescal::RescalOptions;
+use drescal::simulate::{exascale, Machine};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return;
+    }
+    if let Err(e) = dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let mut args = Args::parse(argv)?;
+    if let Some(path) = args.get("config").map(|s| s.to_string()) {
+        args.merge_config_file(&path)?;
+    }
+    match args.subcommand.as_str() {
+        "run" => cmd_run(&args),
+        "model-select" => cmd_model_select(&args),
+        "exascale" => cmd_exascale(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' — try `drescal help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "drescal — distributed non-negative RESCAL with automatic model selection
+
+USAGE: drescal <subcommand> [--flag value ...]
+
+SUBCOMMANDS
+  run           one distributed factorization
+                  --data synthetic|blocks|nations|trade  (default synthetic)
+                  --n --m --k-true   synthetic tensor shape/truth
+                  --density D        sparse synthetic tensor (CSR path)
+                  --p P              virtual ranks, perfect square (4)
+                  --k K              rank of the factorization (4)
+                  --iters N          MU iterations (200)
+                  --backend native|xla  [--artifacts DIR]
+                  --seed S
+  model-select  RESCALk sweep with automatic k determination
+                  (run flags plus) --k-min --k-max --perturbations --delta
+  exascale      replay Fig 13 (11.5TB dense + 9.5EB sparse) via the model
+                  --machine cpu|gpu|calibrated
+  artifacts     list the AOT artifact manifest [--artifacts DIR]
+  help          this text
+
+Flags may also come from --config FILE (JSON object; CLI wins)."
+    );
+}
+
+fn load_data(args: &Args) -> Result<(JobData, Option<usize>)> {
+    let kind = args.get("data").unwrap_or("synthetic");
+    let seed = args.get_u64("seed", 42)?;
+    Ok(match kind {
+        "synthetic" => {
+            let n = args.get_usize("n", 64)?;
+            let m = args.get_usize("m", 4)?;
+            let k_true = args.get_usize("k-true", 4)?;
+            let density = args.get_f64("density", 1.0)?;
+            if density < 1.0 {
+                let x = synthetic::sparse_planted(n, m, k_true, density, seed);
+                (JobData::sparse(x), Some(k_true))
+            } else {
+                let p = synthetic::planted_tensor(n, m, k_true, 0.0, seed);
+                (JobData::dense(p.x), Some(k_true))
+            }
+        }
+        "blocks" => {
+            let n = args.get_usize("n", 64)?;
+            let m = args.get_usize("m", 4)?;
+            let k_true = args.get_usize("k-true", 4)?;
+            let p = synthetic::block_tensor(n, m, k_true, 0.01, seed);
+            (JobData::dense(p.x), Some(k_true))
+        }
+        "nations" => (JobData::dense(nations::nations_tensor(seed)), Some(4)),
+        "trade" => {
+            // padded to 24 so 2×2 and 3×3 grids divide the axis (paper §6.2.2)
+            (JobData::dense(trade::trade_tensor_padded(seed, 24)), Some(5))
+        }
+        other => bail!("unknown --data '{other}'"),
+    })
+}
+
+fn job_config(args: &Args) -> Result<JobConfig> {
+    Ok(JobConfig {
+        p: args.get_usize("p", 4)?,
+        backend: args.backend()?,
+        trace: !args.get_bool("no-trace"),
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let (data, k_true) = load_data(args)?;
+    let job = job_config(args)?;
+    let opts = RescalOptions::new(args.get_usize("k", 4)?, args.get_usize("iters", 200)?);
+    println!(
+        "distributed RESCAL: n={} m={} k={} p={} backend={:?}",
+        data.n(),
+        data.m(),
+        opts.k,
+        job.p,
+        job.backend
+    );
+    let report = run_rescal(&data, &job, &opts, args.get_u64("seed", 42)?);
+    println!(
+        "done in {}: rel_error={:.4} ({} iterations)",
+        bench_util::fmt_secs(report.wall_seconds),
+        report.rel_error,
+        report.iters_run
+    );
+    if let Some(kt) = k_true {
+        println!("(ground-truth latent dimension of this dataset: {kt})");
+    }
+    if job.trace {
+        let metrics = RunMetrics::from_traces(&report.traces);
+        print!("{}", metrics.format_breakdown());
+    }
+    Ok(())
+}
+
+fn cmd_model_select(args: &Args) -> Result<()> {
+    let (data, k_true) = load_data(args)?;
+    let job = job_config(args)?;
+    let cfg = RescalkConfig {
+        k_min: args.get_usize("k-min", 2)?,
+        k_max: args.get_usize("k-max", 8)?,
+        perturbations: args.get_usize("perturbations", 10)?,
+        delta: args.get_f64("delta", 0.02)? as f32,
+        rescal_iters: args.get_usize("iters", 200)?,
+        tol: args.get_f64("tol", 0.0)? as f32,
+        err_every: args.get_usize("err-every", 25)?,
+        regress_iters: args.get_usize("regress-iters", 30)?,
+        seed: args.get_u64("seed", 42)?,
+        rule: SelectionRule::default(),
+        init: InitStrategy::Random,
+    };
+    println!(
+        "RESCALk sweep: n={} m={} k∈[{},{}] r={} p={} backend={:?}",
+        data.n(),
+        data.m(),
+        cfg.k_min,
+        cfg.k_max,
+        cfg.perturbations,
+        job.p,
+        job.backend
+    );
+    let report = run_rescalk(&data, &job, &cfg);
+    let rows: Vec<Vec<String>> = report
+        .scores
+        .iter()
+        .map(|s| {
+            vec![
+                s.k.to_string(),
+                format!("{:.3}", s.sil_min),
+                format!("{:.3}", s.sil_avg),
+                format!("{:.4}", s.rel_error),
+            ]
+        })
+        .collect();
+    bench_util::print_table(
+        "model selection",
+        &["k", "min silhouette", "avg silhouette", "rel error"],
+        &rows,
+    );
+    println!(
+        "\nk_opt = {}  (wall {})",
+        report.k_opt,
+        bench_util::fmt_secs(report.wall_seconds)
+    );
+    match k_true {
+        Some(kt) if kt == report.k_opt => println!("matches the dataset's ground truth ✓"),
+        Some(kt) => println!("(ground truth is {kt})"),
+        None => {}
+    }
+    Ok(())
+}
+
+fn cmd_exascale(args: &Args) -> Result<()> {
+    let machine = match args.get("machine").unwrap_or("cpu") {
+        "cpu" => Machine::cpu_cluster(),
+        "gpu" => Machine::gpu_cluster(),
+        "calibrated" => {
+            let flops = bench_util::calibrate_dense_flops();
+            println!("calibrated dense rate: {:.1} GFLOP/s", flops / 1e9);
+            Machine::calibrated(flops, 2e-6, 1e-10)
+        }
+        other => bail!("unknown --machine '{other}'"),
+    };
+    let dense = exascale::dense_11tb_run(&machine);
+    println!(
+        "\nFig 13a replay — {}\n  logical size {:.1} TB on {} ranks\n  modeled: compute {} + comm {} = {} ({:.0}% comm)",
+        dense.label,
+        dense.logical_bytes() / 1e12,
+        dense.p,
+        bench_util::fmt_secs(dense.compute_seconds),
+        bench_util::fmt_secs(dense.comm_seconds),
+        bench_util::fmt_secs(dense.total()),
+        100.0 * dense.comm_fraction()
+    );
+    let rows: Vec<Vec<String>> = exascale::sparse_exabyte_runs(&machine)
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.0e}", r.density),
+                bench_util::fmt_secs(r.compute_seconds),
+                bench_util::fmt_secs(r.comm_seconds),
+                bench_util::fmt_secs(r.total()),
+                format!("{:.1}%", 100.0 * r.comm_fraction()),
+            ]
+        })
+        .collect();
+    bench_util::print_table(
+        "Fig 13b replay — 9.5EB sparse, 22801 ranks, 100 iters",
+        &["density", "compute", "comm", "total", "comm%"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let manifest = drescal::runtime::Manifest::load(std::path::Path::new(dir))?;
+    let rows: Vec<Vec<String>> = manifest
+        .entries
+        .iter()
+        .map(|e| {
+            vec![
+                e.kind.clone(),
+                e.shapes
+                    .iter()
+                    .map(|(r, c)| format!("{r}×{c}"))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                e.file.clone(),
+            ]
+        })
+        .collect();
+    bench_util::print_table(
+        &format!("{} artifacts in {dir}", manifest.entries.len()),
+        &["kind", "input shapes", "file"],
+        &rows,
+    );
+    Ok(())
+}

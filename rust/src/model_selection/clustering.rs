@@ -1,0 +1,185 @@
+//! Algorithm 5: distributed custom clustering with equal cluster size.
+//!
+//! Aligns the columns of the r perturbation solutions `A^q` so that column
+//! c of every solution describes the same latent community. Each iteration
+//! computes the medoid-to-solution similarity `G` (local partial `MᵀA_q`
+//! per row block, summed over the column sub-communicator), solves a
+//! linear sum assignment per perturbation to find the best column
+//! permutation, permutes, and refreshes the medoid with the elementwise
+//! median. Converges when every assignment is the identity.
+
+use crate::comm::{CommOp, Group, Trace};
+use crate::linalg::lsa::lsa_max;
+use crate::linalg::median::matrix_median;
+use crate::tensor::Mat;
+
+/// Output of clustering one rank's row-block stack.
+pub struct ClusterOutput {
+    /// Aligned per-perturbation row blocks (columns permuted).
+    pub aligned: Vec<Mat>,
+    /// Elementwise median of the aligned stack — the robust Ã row block.
+    pub median: Mat,
+    /// Column permutation applied to each perturbation
+    /// (`perm[q][c]` = source column of solution q that became column c).
+    pub perms: Vec<Vec<usize>>,
+    /// Clustering iterations executed.
+    pub iters: usize,
+}
+
+/// Run distributed custom clustering over this rank's stack of r row
+/// blocks (each `n_local × k`). `comm` must contain exactly one rank per
+/// row block (the column sub-communicator in the 2D grid, or the world
+/// group of a dedicated 1D grid).
+pub fn custom_cluster_rank(
+    comm: &Group,
+    stack: &[Mat],
+    max_iters: usize,
+    trace: &mut Trace,
+) -> ClusterOutput {
+    let r = stack.len();
+    assert!(r >= 1, "need at least one perturbation");
+    let (n_local, k) = stack[0].shape();
+    assert!(stack.iter().all(|m| m.shape() == (n_local, k)), "ragged stack");
+
+    let mut aligned: Vec<Mat> = stack.to_vec();
+    // line 1: medoid initialized from the first perturbation
+    let mut medoid = aligned[0].clone();
+    let mut perms: Vec<Vec<usize>> = vec![(0..k).collect(); r];
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        iters += 1;
+        // lines 3-5: partial similarity D_q = Mᵀ A_q per row block;
+        // flattened into one buffer so a single all_reduce covers all q
+        // (one collective per iteration, as in the paper).
+        let mut g_buf = vec![0f32; k * k * r];
+        for (q, a_q) in aligned.iter().enumerate() {
+            let d = trace.record(CommOp::Clustering, 0, || medoid.t_matmul(a_q));
+            g_buf[q * k * k..(q + 1) * k * k].copy_from_slice(d.as_slice());
+        }
+        // line 6: total similarity G via all_reduce
+        trace.record(CommOp::ColumnReduce, g_buf.len() * 4, || {
+            comm.all_reduce_sum(&mut g_buf)
+        });
+        // lines 7-10: LSA per perturbation, permute columns
+        let mut all_identity = true;
+        for q in 0..r {
+            let g_q = Mat::from_vec(k, k, g_buf[q * k * k..(q + 1) * k * k].to_vec());
+            let porder = lsa_max(&g_q); // porder[medoid col] = solution col
+            if porder.iter().enumerate().any(|(i, &j)| i != j) {
+                all_identity = false;
+                let src = aligned[q].clone();
+                for (dst_col, &src_col) in porder.iter().enumerate() {
+                    let col = src.col(src_col);
+                    aligned[q].set_col(dst_col, &col);
+                }
+                // compose permutations for reporting
+                let prev = perms[q].clone();
+                for (dst_col, &src_col) in porder.iter().enumerate() {
+                    perms[q][dst_col] = prev[src_col];
+                }
+            }
+        }
+        // lines 11-12: medoid = elementwise median of the aligned stack
+        medoid = trace.record(CommOp::Clustering, 0, || matrix_median(&aligned));
+        if all_identity {
+            break;
+        }
+    }
+    ClusterOutput { aligned, median: medoid, perms, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::grid::run_on_grid;
+    use crate::rng::Rng;
+    use crate::testing::assert_close;
+
+    /// Build r shuffled/noisy copies of a ground-truth A, shard them into
+    /// row blocks, cluster distributedly, and check the alignment.
+    #[test]
+    fn aligns_permuted_solutions_distributed() {
+        let n = 24;
+        let k = 4;
+        let r = 6;
+        let mut rng = Rng::new(400);
+        let truth = Mat::random_uniform(n, k, 0.1, 1.0, &mut rng);
+        // per-perturbation column permutations + small noise
+        let perms: Vec<Vec<usize>> = (0..r).map(|_| rng.permutation(k)).collect();
+        let solutions: Vec<Mat> = (0..r)
+            .map(|q| {
+                let mut m = Mat::zeros(n, k);
+                for c in 0..k {
+                    // solution column perms[q][c] holds truth column c
+                    let mut col = truth.col(c);
+                    for v in col.iter_mut() {
+                        *v *= 1.0 + 0.02 * (rng.uniform_f32() - 0.5);
+                    }
+                    m.set_col(perms[q][c], &col);
+                }
+                m
+            })
+            .collect();
+        let p = 4; // 2x2 grid; col comm spans both row blocks
+        let results = run_on_grid(p, |ctx| {
+            let (s, e) = ctx.grid.chunk(n, ctx.row);
+            let stack: Vec<Mat> = solutions
+                .iter()
+                .map(|m| Mat::from_fn(e - s, k, |i, j| m[(s + i, j)]))
+                .collect();
+            let mut trace = Trace::new();
+            let out = custom_cluster_rank(&ctx.col_comm, &stack, 50, &mut trace);
+            (ctx.row, ctx.col, out)
+        });
+        // after alignment all perturbations should agree elementwise
+        for (row, _col, out) in &results {
+            let first = &out.aligned[0];
+            for q in 1..r {
+                assert_close(out.aligned[q].as_slice(), first.as_slice(), 0.05);
+            }
+            // median close to the truth block (up to a global column perm
+            // fixed by perturbation 0's layout)
+            let grid = crate::comm::Grid::new(p);
+            let (s, e) = grid.chunk(n, *row);
+            // aligned columns follow solutions[0]'s ordering
+            for c in 0..k {
+                let truth_col_idx =
+                    (0..k).find(|&tc| perms[0][tc] == c).expect("perm inverse");
+                let want: Vec<f32> = (s..e).map(|i| truth[(i, truth_col_idx)]).collect();
+                let got = out.median.col(c);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 0.05, "median col {c}: {g} vs {w}");
+                }
+            }
+        }
+        // all grid columns must agree (replicated computation)
+        let m00 = &results[0].2.median;
+        let m01 = &results[1].2.median;
+        assert_close(m00.as_slice(), m01.as_slice(), 1e-6);
+    }
+
+    #[test]
+    fn identity_when_already_aligned() {
+        let mut rng = Rng::new(401);
+        let a = Mat::random_uniform(10, 3, 0.1, 1.0, &mut rng);
+        let stack = vec![a.clone(), a.clone(), a.clone()];
+        let groups = Group::create(1);
+        let mut trace = Trace::new();
+        let out = custom_cluster_rank(&groups[0], &stack, 20, &mut trace);
+        assert_eq!(out.iters, 1); // converges immediately
+        for p in &out.perms {
+            assert_eq!(*p, vec![0, 1, 2]);
+        }
+        assert_close(out.median.as_slice(), a.as_slice(), 1e-6);
+    }
+
+    #[test]
+    fn single_perturbation_is_its_own_median() {
+        let mut rng = Rng::new(402);
+        let a = Mat::random_uniform(8, 2, 0.1, 1.0, &mut rng);
+        let groups = Group::create(1);
+        let mut trace = Trace::new();
+        let out = custom_cluster_rank(&groups[0], &[a.clone()], 20, &mut trace);
+        assert_close(out.median.as_slice(), a.as_slice(), 1e-6);
+    }
+}

@@ -1,0 +1,18 @@
+//! Automatic model selection (RESCALk): perturbation resampling, custom
+//! clustering with LSA column alignment, silhouette statistics, and the
+//! k-selection driver (paper Algorithms 1, 4, 5, 6 + §2.3).
+
+pub mod clustering;
+pub mod perturb;
+pub mod regress;
+pub mod rescalk;
+pub mod selection;
+pub mod silhouette;
+
+pub use clustering::{custom_cluster_rank, ClusterOutput};
+pub use perturb::perturb_tile;
+pub use regress::regress_r_rank;
+pub use rescalk::{nndsvd_factors, rescalk_rank, InitStrategy, KScore, RescalkConfig, RescalkResult};
+pub use selection::KScoreRow;
+pub use selection::{select_k, SelectionRule};
+pub use silhouette::{silhouette_rank, Silhouettes};

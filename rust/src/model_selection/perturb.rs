@@ -1,0 +1,83 @@
+//! Algorithm 4: distributed resampling.
+//!
+//! Each rank perturbs its own tile elementwise by U[1−δ, 1+δ] with a seed
+//! that is a function of (experiment seed, rank, perturbation index) — the
+//! paper's per-rank unique-seed scheme (§6.1.3). The ensemble mean is the
+//! original tensor; no communication is involved. For sparse tiles only
+//! stored nonzeros are perturbed, preserving the pattern.
+
+use crate::rescal::LocalTile;
+use crate::rng::Rng;
+
+/// Perturbation-index RNG stream id (keeps factor-init and noise streams
+/// separate).
+const PERTURB_STREAM: u64 = 0x7e27;
+
+/// Perturb a rank's tile for perturbation `q`.
+pub fn perturb_tile(tile: &LocalTile, delta: f32, seed: u64, rank: usize, q: usize) -> LocalTile {
+    let mut rng = Rng::for_rank(seed ^ PERTURB_STREAM, rank, q as u64);
+    tile.perturb(delta, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor3;
+
+    fn dense_tile(seed: u64) -> LocalTile {
+        let mut rng = Rng::new(seed);
+        LocalTile::Dense(Tensor3::random_uniform(8, 8, 2, 0.5, 1.0, &mut rng))
+    }
+
+    fn as_dense(t: &LocalTile) -> &Tensor3 {
+        match t {
+            LocalTile::Dense(x) => x,
+            _ => panic!("dense expected"),
+        }
+    }
+
+    #[test]
+    fn ensemble_mean_approaches_original() {
+        let tile = dense_tile(300);
+        let x = as_dense(&tile);
+        let r = 400;
+        let mut acc = Tensor3::zeros(8, 8, 2);
+        for q in 0..r {
+            let p = perturb_tile(&tile, 0.03, 99, 0, q);
+            let px = as_dense(&p);
+            for t in 0..2 {
+                acc.slice_mut(t).add_assign(px.slice(t));
+            }
+        }
+        for t in 0..2 {
+            for (sum, orig) in acc.slice(t).as_slice().iter().zip(x.slice(t).as_slice()) {
+                let mean = sum / r as f32;
+                assert!((mean / orig - 1.0).abs() < 0.01, "mean {mean} vs {orig}");
+            }
+        }
+    }
+
+    #[test]
+    fn different_q_different_noise() {
+        let tile = dense_tile(301);
+        let p0 = perturb_tile(&tile, 0.03, 7, 0, 0);
+        let p1 = perturb_tile(&tile, 0.03, 7, 0, 1);
+        assert_ne!(as_dense(&p0).slice(0), as_dense(&p1).slice(0));
+    }
+
+    #[test]
+    fn different_rank_different_noise() {
+        let tile = dense_tile(302);
+        let p0 = perturb_tile(&tile, 0.03, 7, 0, 0);
+        let p1 = perturb_tile(&tile, 0.03, 7, 1, 0);
+        assert_ne!(as_dense(&p0).slice(0), as_dense(&p1).slice(0));
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let tile = dense_tile(303);
+        let p0 = perturb_tile(&tile, 0.02, 11, 3, 5);
+        let p1 = perturb_tile(&tile, 0.02, 11, 3, 5);
+        assert_eq!(as_dense(&p0).slice(1), as_dense(&p1).slice(1));
+    }
+}

@@ -1,0 +1,292 @@
+//! Algorithm 1: the RESCALk driver — RESCAL with automatic model
+//! selection, executed per rank inside the 2D grid.
+//!
+//! For each k in `[k_min, k_max]`: perturb the tile r times (Alg 4),
+//! factorize each perturbation (Alg 3), align the r solutions (Alg 5),
+//! score cluster stability (Alg 6), regress the robust core on the
+//! unperturbed tensor, and evaluate the reconstruction error. The scores
+//! feed [`super::selection::select_k`].
+
+use crate::backend::Backend;
+use crate::comm::grid::RankCtx;
+use crate::comm::Trace;
+use crate::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
+use crate::rescal::{LocalTile, RescalOptions};
+use crate::tensor::{Mat, Tensor3};
+
+use super::clustering::custom_cluster_rank;
+use super::perturb::perturb_tile;
+use super::regress::regress_r_rank;
+use super::selection::{select_k, KScoreRow, SelectionRule};
+use super::silhouette::silhouette_rank;
+
+/// Re-export under the paper's name.
+pub type KScore = KScoreRow;
+
+/// How each perturbation's factorization is initialized (paper §6.1.3
+/// offers exactly these two options).
+#[derive(Clone)]
+pub enum InitStrategy {
+    /// Fresh random factors per (k, q) — the default.
+    Random,
+    /// NNDSVD factors per k (computed once by the coordinator from the
+    /// unperturbed tensor, paper §3.4: "custom NNDSVD-based initialization
+    /// leads to a faster convergence"), jittered per perturbation by
+    /// `U[1±jitter]` so the ensemble still probes solution stability.
+    /// The map holds the full-height factors per k.
+    Nndsvd {
+        factors: std::sync::Arc<std::collections::BTreeMap<usize, (Mat, Tensor3)>>,
+        jitter: f32,
+    },
+}
+
+/// RESCALk sweep configuration.
+#[derive(Clone)]
+pub struct RescalkConfig {
+    /// Inclusive k range to explore.
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Number of perturbations r.
+    pub perturbations: usize,
+    /// Perturbation noise δ (paper: 0.005–0.03).
+    pub delta: f32,
+    /// MU iterations per factorization.
+    pub rescal_iters: usize,
+    /// Early-stop tolerance on the relative error (0 = run all
+    /// iterations). Converged runs stop early, which both saves time and
+    /// stabilizes the perturbation ensemble at k ≥ k_true.
+    pub tol: f32,
+    /// How often (iterations) to evaluate the error when `tol > 0`.
+    pub err_every: usize,
+    /// R-regression sweeps for the robust core.
+    pub regress_iters: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Selection rule for k_opt.
+    pub rule: SelectionRule,
+    /// Factor initialization strategy.
+    pub init: InitStrategy,
+}
+
+impl Default for RescalkConfig {
+    fn default() -> Self {
+        RescalkConfig {
+            k_min: 2,
+            k_max: 8,
+            perturbations: 10,
+            delta: 0.02,
+            rescal_iters: 200,
+            tol: 0.0,
+            err_every: 25,
+            regress_iters: 30,
+            seed: 42,
+            rule: SelectionRule::default(),
+            init: InitStrategy::Random,
+        }
+    }
+}
+
+/// Precompute NNDSVD factors for every k in the sweep from the full
+/// (unperturbed) tensor — done once by the coordinator/leader before the
+/// grid spawns. Substitution note (DESIGN.md §3): the paper computes this
+/// through pyDNMFk's distributed SVD; here the leader holds the tensor
+/// anyway, so a central NNDSVD is faithful and simpler.
+pub fn nndsvd_factors(
+    x: &Tensor3,
+    k_min: usize,
+    k_max: usize,
+) -> std::sync::Arc<std::collections::BTreeMap<usize, (Mat, Tensor3)>> {
+    let mut map = std::collections::BTreeMap::new();
+    let mut rng = crate::rng::Rng::new(0);
+    for k in k_min..=k_max {
+        let (a, r) = crate::rescal::Init::Nndsvd.materialize(x, k, &mut rng);
+        map.insert(k, (a, r));
+    }
+    std::sync::Arc::new(map)
+}
+
+/// Per-rank result of the sweep.
+pub struct RescalkResult {
+    /// One score row per explored k.
+    pub scores: Vec<KScore>,
+    /// Selected k (identical on all ranks).
+    pub k_opt: usize,
+    /// Robust Ã row block for k_opt.
+    pub a_opt_row: Mat,
+    /// Robust core for k_opt (replicated).
+    pub r_opt: Tensor3,
+}
+
+/// Run the full model-selection sweep on this rank's tile. `n` is the
+/// global entity count.
+pub fn rescalk_rank(
+    ctx: &RankCtx,
+    tile: &LocalTile,
+    n: usize,
+    cfg: &RescalkConfig,
+    backend: &mut dyn Backend,
+    trace: &mut Trace,
+) -> RescalkResult {
+    assert!(cfg.k_min >= 1 && cfg.k_min <= cfg.k_max);
+    assert!(cfg.perturbations >= 1);
+    let mut scores = Vec::new();
+    let mut per_k: Vec<(Mat, Tensor3)> = Vec::new();
+    for k in cfg.k_min..=cfg.k_max {
+        // ---- r perturbed factorizations (Alg 1 lines 2-5) ----
+        let mut stack: Vec<Mat> = Vec::with_capacity(cfg.perturbations);
+        for q in 0..cfg.perturbations {
+            let perturbed = perturb_tile(tile, cfg.delta, cfg.seed, ctx.rank, q);
+            // same init on every rank for a given (seed, k, q)
+            let init = match &cfg.init {
+                InitStrategy::Random => DistInit::Random {
+                    seed: cfg
+                        .seed
+                        .wrapping_add((k as u64) << 32)
+                        .wrapping_add(q as u64 + 1),
+                },
+                InitStrategy::Nndsvd { factors, jitter } => {
+                    let (a0, r0) = factors
+                        .get(&k)
+                        .expect("NNDSVD factors missing for explored k");
+                    // identical jitter stream on every rank
+                    let mut jrng =
+                        crate::rng::Rng::for_rank(cfg.seed ^ 0x4e4e_d5fd, k, q as u64);
+                    let mut a = a0.clone();
+                    for v in a.as_mut_slice() {
+                        *v *= jrng.uniform_range(1.0 - jitter, 1.0 + jitter);
+                    }
+                    let mut r = r0.clone();
+                    for t in 0..r.m() {
+                        for v in r.slice_mut(t).as_mut_slice() {
+                            *v *= jrng.uniform_range(1.0 - jitter, 1.0 + jitter);
+                        }
+                    }
+                    DistInit::Given(std::sync::Arc::new(a), std::sync::Arc::new(r))
+                }
+            };
+            let dist_cfg = DistRescalConfig {
+                opts: RescalOptions::new(k, cfg.rescal_iters)
+                    .with_tol(cfg.tol, if cfg.tol > 0.0 { cfg.err_every.max(1) } else { 0 }),
+                init,
+                n,
+            };
+            let out = rescal_rank(ctx, &perturbed, &dist_cfg, backend, trace);
+            stack.push(out.a_row);
+        }
+        // ---- align solutions (Alg 1 line 6, Alg 5) ----
+        let clustered = custom_cluster_rank(&ctx.col_comm, &stack, 100, trace);
+        // ---- cluster stability (line 8, Alg 6) ----
+        let sil = silhouette_rank(&ctx.col_comm, &clustered.aligned, trace);
+        // ---- robust core + reconstruction error (lines 7, 9, 10) ----
+        let (r_reg, a_col) =
+            regress_r_rank(ctx, tile, &clustered.median, cfg.regress_iters, backend, trace);
+        let rel_error = rel_error_rank(ctx, tile, &clustered.median, &a_col, &r_reg, backend, trace);
+        scores.push(KScore { k, sil_min: sil.min, sil_avg: sil.avg, rel_error });
+        per_k.push((clustered.median, r_reg));
+    }
+    let k_opt = select_k(&scores, cfg.rule).expect("non-empty sweep");
+    let idx = k_opt - cfg.k_min;
+    let (a_opt_row, r_opt) = per_k.swap_remove(idx);
+    RescalkResult { scores, k_opt, a_opt_row, r_opt }
+}
+
+/// Distributed relative reconstruction error for explicit factors.
+fn rel_error_rank(
+    ctx: &RankCtx,
+    tile: &LocalTile,
+    a_row: &Mat,
+    a_col: &Mat,
+    r: &Tensor3,
+    backend: &mut dyn Backend,
+    trace: &mut Trace,
+) -> f32 {
+    use crate::comm::CommOp;
+    let mut local = 0.0f64;
+    for t in 0..tile.m() {
+        let ar = trace.record(CommOp::MatrixMul, 0, || backend.matmul(a_row, r.slice(t)));
+        local += tile.residual_sq(t, &ar, a_col);
+    }
+    let mut buf = vec![local as f32, tile.norm_sq() as f32];
+    ctx.world.all_reduce_sum(&mut buf);
+    ((buf[0] as f64).max(0.0).sqrt() / (buf[1] as f64).max(1e-300).sqrt()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::comm::grid::run_on_grid;
+    use crate::data::synthetic;
+
+    /// The flagship correctness property (paper §6.2.1): RESCALk recovers
+    /// the planted k on block-structured data.
+    #[test]
+    fn recovers_planted_k() {
+        let planted = synthetic::block_tensor(24, 3, 3, 0.01, 700);
+        let x = planted.x.clone();
+        let cfg = RescalkConfig {
+            k_min: 2,
+            k_max: 5,
+            perturbations: 6,
+            delta: 0.02,
+            rescal_iters: 150,
+            tol: 0.0,
+            err_every: 25,
+            regress_iters: 30,
+            seed: 1,
+            rule: SelectionRule::default(),
+            init: InitStrategy::Random,
+        };
+        let results = run_on_grid(4, |ctx| {
+            let (r0, r1) = ctx.grid.chunk(24, ctx.row);
+            let (c0, c1) = ctx.grid.chunk(24, ctx.col);
+            let tile = LocalTile::Dense(x.tile(r0, r1, c0, c1));
+            let mut backend = NativeBackend::new();
+            let mut trace = Trace::disabled();
+            rescalk_rank(&ctx, &tile, 24, &cfg, &mut backend, &mut trace)
+        });
+        for res in &results {
+            assert_eq!(res.k_opt, 3, "scores: {:?}", res.scores);
+            // silhouette at k_true should be high, error low
+            let at_true = res.scores.iter().find(|s| s.k == 3).unwrap();
+            assert!(at_true.sil_min > 0.75, "sil={}", at_true.sil_min);
+            assert!(at_true.rel_error < 0.12, "err={}", at_true.rel_error);
+        }
+        // ranks agree
+        assert_eq!(results[0].k_opt, results[3].k_opt);
+    }
+
+    #[test]
+    fn error_decreases_with_k_and_silhouette_drops_past_truth() {
+        let planted = synthetic::block_tensor(20, 2, 2, 0.01, 701);
+        let x = planted.x.clone();
+        let cfg = RescalkConfig {
+            k_min: 1,
+            k_max: 4,
+            perturbations: 5,
+            delta: 0.02,
+            rescal_iters: 120,
+            tol: 0.0,
+            err_every: 25,
+            regress_iters: 25,
+            seed: 2,
+            rule: SelectionRule::default(),
+            init: InitStrategy::Random,
+        };
+        let results = run_on_grid(1, |ctx| {
+            let tile = LocalTile::Dense(x.clone());
+            let mut backend = NativeBackend::new();
+            let mut trace = Trace::disabled();
+            rescalk_rank(&ctx, &tile, 20, &cfg, &mut backend, &mut trace)
+        });
+        let scores = &results[0].scores;
+        // error at k>=2 well below error at k=1
+        let e1 = scores.iter().find(|s| s.k == 1).unwrap().rel_error;
+        let e2 = scores.iter().find(|s| s.k == 2).unwrap().rel_error;
+        assert!(e2 < e1 * 0.7, "e1={e1}, e2={e2}");
+        // silhouette at k=2 (truth) above k=4 (overfit)
+        let s2 = scores.iter().find(|s| s.k == 2).unwrap().sil_min;
+        let s4 = scores.iter().find(|s| s.k == 4).unwrap().sil_min;
+        assert!(s2 > s4, "s2={s2}, s4={s4}");
+    }
+}

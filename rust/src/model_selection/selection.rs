@@ -1,0 +1,158 @@
+//! The k_opt decision rule (paper §2.3 step 6, §6.2.1).
+//!
+//! "k_opt is determined as the maximum number of stable clusters
+//! corresponding to a good accuracy of the reconstruction": high minimum
+//! silhouette, low relative error, and the largest separation between the
+//! silhouette and error series (the criterion of Vangara et al. [63]).
+
+/// Scores for one explored k.
+#[derive(Clone, Debug)]
+pub struct KScoreRow {
+    pub k: usize,
+    pub sil_min: f32,
+    pub sil_avg: f32,
+    pub rel_error: f32,
+}
+
+/// Selection rule variants.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SelectionRule {
+    /// Largest k whose minimum silhouette stays above the threshold
+    /// (default 0.75) — the shape of Fig 5: silhouettes ≈ 1 up to k_true,
+    /// then collapse.
+    StableThreshold { threshold: f32 },
+    /// Maximize separability `sil_min − rel_error` (the [63] criterion),
+    /// breaking ties toward larger k.
+    MaxSeparation,
+    /// Among stable k (sil_min ≥ threshold), pick the largest k whose
+    /// reconstruction error still improves by at least `min_gain`
+    /// (relative) over the previous stable k — the error-elbow reading of
+    /// the paper's "maximum number of stable clusters corresponding to a
+    /// good accuracy of the reconstruction". Used when an NNDSVD-seeded
+    /// ensemble keeps every k stable, so the error curve must decide.
+    StableElbow { threshold: f32, min_gain: f32 },
+}
+
+impl Default for SelectionRule {
+    fn default() -> Self {
+        SelectionRule::StableThreshold { threshold: 0.75 }
+    }
+}
+
+/// Pick k_opt from the explored scores. Returns `None` for an empty sweep.
+pub fn select_k(scores: &[KScoreRow], rule: SelectionRule) -> Option<usize> {
+    if scores.is_empty() {
+        return None;
+    }
+    match rule {
+        SelectionRule::StableThreshold { threshold } => {
+            // largest stable k; fall back to max separation when nothing
+            // clears the bar (very noisy data)
+            scores
+                .iter()
+                .filter(|s| s.sil_min >= threshold)
+                .map(|s| s.k)
+                .max()
+                .or_else(|| select_k(scores, SelectionRule::MaxSeparation))
+        }
+        SelectionRule::MaxSeparation => {
+            let best = scores
+                .iter()
+                .max_by(|a, b| {
+                    let sa = a.sil_min - a.rel_error;
+                    let sb = b.sil_min - b.rel_error;
+                    sa.partial_cmp(&sb).unwrap().then(a.k.cmp(&b.k))
+                })
+                .unwrap();
+            Some(best.k)
+        }
+        SelectionRule::StableElbow { threshold, min_gain } => {
+            let stable: Vec<&KScoreRow> =
+                scores.iter().filter(|s| s.sil_min >= threshold).collect();
+            if stable.is_empty() {
+                return select_k(scores, SelectionRule::MaxSeparation);
+            }
+            // walk the stable ks in order; keep advancing while the error
+            // improves by at least min_gain relative to the previous one
+            let mut best = stable[0];
+            for s in &stable[1..] {
+                if s.rel_error <= best.rel_error * (1.0 - min_gain) {
+                    best = s;
+                }
+            }
+            Some(best.k)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(k: usize, sil: f32, err: f32) -> KScoreRow {
+        KScoreRow { k, sil_min: sil, sil_avg: sil, rel_error: err }
+    }
+
+    #[test]
+    fn picks_largest_stable_k() {
+        // classic Fig-5 shape: stable through k=7, collapse after
+        let scores = vec![
+            row(5, 0.99, 0.25),
+            row(6, 0.97, 0.12),
+            row(7, 0.95, 0.02),
+            row(8, 0.30, 0.02),
+            row(9, 0.10, 0.015),
+        ];
+        assert_eq!(select_k(&scores, SelectionRule::default()), Some(7));
+    }
+
+    #[test]
+    fn falls_back_when_nothing_stable() {
+        let scores = vec![row(2, 0.5, 0.4), row(3, 0.6, 0.2), row(4, 0.4, 0.19)];
+        // fallback = max separation: k=3 (0.6-0.2=0.4 beats 0.1 and 0.21)
+        assert_eq!(
+            select_k(&scores, SelectionRule::StableThreshold { threshold: 0.9 }),
+            Some(3)
+        );
+    }
+
+    #[test]
+    fn max_separation_rule() {
+        let scores = vec![row(2, 0.9, 0.5), row(3, 0.95, 0.05), row(4, 0.2, 0.04)];
+        assert_eq!(select_k(&scores, SelectionRule::MaxSeparation), Some(3));
+    }
+
+    #[test]
+    fn empty_is_none() {
+        assert_eq!(select_k(&[], SelectionRule::default()), None);
+    }
+
+    #[test]
+    fn stable_elbow_finds_error_plateau() {
+        // NNDSVD-style sweep: everything stable, error elbows at k=5
+        let scores = vec![
+            row(2, 1.0, 0.34),
+            row(3, 1.0, 0.20),
+            row(4, 1.0, 0.15),
+            row(5, 1.0, 0.056),
+            row(6, 0.99, 0.055),
+            row(7, 0.99, 0.054),
+        ];
+        let rule = SelectionRule::StableElbow { threshold: 0.8, min_gain: 0.10 };
+        assert_eq!(select_k(&scores, rule), Some(5));
+    }
+
+    #[test]
+    fn stable_elbow_ignores_unstable_k() {
+        let scores = vec![row(2, 1.0, 0.3), row(3, 0.2, 0.05), row(4, 1.0, 0.28)];
+        let rule = SelectionRule::StableElbow { threshold: 0.8, min_gain: 0.10 };
+        // k=3 is unstable; k=4's error is within 10% of k=2's -> k=2
+        assert_eq!(select_k(&scores, rule), Some(2));
+    }
+
+    #[test]
+    fn ties_break_to_larger_k() {
+        let scores = vec![row(2, 0.9, 0.1), row(3, 0.9, 0.1)];
+        assert_eq!(select_k(&scores, SelectionRule::MaxSeparation), Some(3));
+    }
+}

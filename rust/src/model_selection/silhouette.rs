@@ -1,0 +1,212 @@
+//! Algorithm 6: distributed silhouette statistics.
+//!
+//! Quantifies the stability of the k clusters produced by the custom
+//! clustering. Each cluster c has r members (column c of each aligned
+//! perturbation solution). Cohesion I: mean cosine **distance** within a
+//! cluster; separation J: minimum over other clusters of the mean distance
+//! to that cluster. Silhouette s = (J − I)/max(J, I) ∈ [−1, 1]; +1 =
+//! disjoint stable clusters (paper §4.4 uses cosine distance).
+//!
+//! All inner products are computed blockwise and summed over the column
+//! sub-communicator — the same one-collective-per-similarity-tensor
+//! structure as Algorithm 6 (lines 5 and 15).
+
+use crate::comm::{CommOp, Group, Trace};
+use crate::tensor::Mat;
+
+/// Silhouette summary for one k.
+#[derive(Clone, Debug)]
+pub struct Silhouettes {
+    /// Per-cluster mean silhouette (length k).
+    pub per_cluster: Vec<f32>,
+    /// Minimum silhouette width over clusters (the paper's headline `s_k`).
+    pub min: f32,
+    /// Average silhouette width.
+    pub avg: f32,
+}
+
+/// Compute distributed silhouettes for this rank's aligned row-block stack
+/// (`aligned[q]` is the `n_local × k` block of perturbation q). `comm`
+/// must contain exactly one rank per row block.
+pub fn silhouette_rank(comm: &Group, aligned: &[Mat], trace: &mut Trace) -> Silhouettes {
+    let r = aligned.len();
+    assert!(r >= 1);
+    let (_n_local, k) = aligned[0].shape();
+    if k == 1 {
+        // a single cluster has no "other" cluster: define s = 1 (perfectly
+        // separated by convention), matching the stability curve starting
+        // high at k=1
+        return Silhouettes { per_cluster: vec![1.0], min: 1.0, avg: 1.0 };
+    }
+
+    // ---- global column norms (needed to turn inner products into cosines)
+    // norms²[q][c] summed over row blocks
+    let mut norm_buf = vec![0f32; r * k];
+    for (q, a_q) in aligned.iter().enumerate() {
+        for i in 0..a_q.rows() {
+            let row = a_q.row(i);
+            for (c, &v) in row.iter().enumerate() {
+                norm_buf[q * k + c] += v * v;
+            }
+        }
+    }
+    trace.record(CommOp::ColumnReduce, norm_buf.len() * 4, || {
+        comm.all_reduce_sum(&mut norm_buf)
+    });
+    let norm = |q: usize, c: usize| norm_buf[q * k + c].max(1e-30).sqrt();
+
+    // ---- inner products between all (q, c) pairs, one all_reduce:
+    // buf[(c1*k + c2)*r*r + q1*r + q2] = <A_q1[:,c1], A_q2[:,c2]>
+    // (the paper does k + k² separate r×r reductions; we fuse into one
+    // buffer but the reduced volume is identical)
+    let mut sim = vec![0f32; k * k * r * r];
+    trace.record(CommOp::Silhouette, 0, || {
+        for c1 in 0..k {
+            for c2 in 0..k {
+                for q1 in 0..r {
+                    for q2 in 0..r {
+                        let a1 = &aligned[q1];
+                        let a2 = &aligned[q2];
+                        let mut acc = 0f32;
+                        for i in 0..a1.rows() {
+                            acc += a1[(i, c1)] * a2[(i, c2)];
+                        }
+                        sim[(c1 * k + c2) * r * r + q1 * r + q2] = acc;
+                    }
+                }
+            }
+        }
+    });
+    trace.record(CommOp::ColumnReduce, sim.len() * 4, || comm.all_reduce_sum(&mut sim));
+
+    // cosine distance between member (q1 of cluster c1) and (q2 of c2)
+    let dist = |c1: usize, q1: usize, c2: usize, q2: usize| -> f32 {
+        let ip = sim[(c1 * k + c2) * r * r + q1 * r + q2];
+        let cos = (ip / (norm(q1, c1) * norm(q2, c2))).clamp(-1.0, 1.0);
+        1.0 - cos
+    };
+
+    // ---- I (cohesion) and J (separation) per member (q, c) ----
+    let mut per_cluster = vec![0f32; k];
+    let mut total = 0f32;
+    let mut min_cluster = f32::INFINITY;
+    for c in 0..k {
+        let mut cluster_sum = 0f32;
+        for q in 0..r {
+            // I: mean distance to other members of cluster c
+            let i_qc = if r > 1 {
+                (0..r).filter(|&q2| q2 != q).map(|q2| dist(c, q, c, q2)).sum::<f32>()
+                    / (r - 1) as f32
+            } else {
+                0.0
+            };
+            // J: min over other clusters of mean distance to that cluster
+            let j_qc = (0..k)
+                .filter(|&c2| c2 != c)
+                .map(|c2| (0..r).map(|q2| dist(c, q, c2, q2)).sum::<f32>() / r as f32)
+                .fold(f32::INFINITY, f32::min);
+            let denom = j_qc.max(i_qc).max(1e-12);
+            let s = (j_qc - i_qc) / denom;
+            cluster_sum += s;
+        }
+        let mean_c = cluster_sum / r as f32;
+        per_cluster[c] = mean_c;
+        total += cluster_sum;
+        min_cluster = min_cluster.min(mean_c);
+    }
+    Silhouettes { per_cluster, min: min_cluster, avg: total / (k * r) as f32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::grid::run_on_grid;
+    use crate::rng::Rng;
+
+    fn group1() -> Group {
+        Group::create(1).remove(0)
+    }
+
+    #[test]
+    fn tight_distinct_clusters_score_high() {
+        // r noisy copies of an orthogonal basis -> near-perfect silhouettes
+        let mut rng = Rng::new(500);
+        let n = 30;
+        let k = 3;
+        let r = 5;
+        let mut base = Mat::zeros(n, k);
+        for c in 0..k {
+            for i in (c * 10)..(c * 10 + 10) {
+                base[(i, c)] = 1.0;
+            }
+        }
+        let stack: Vec<Mat> = (0..r)
+            .map(|_| {
+                Mat::from_fn(n, k, |i, j| base[(i, j)] * (1.0 + 0.01 * rng.uniform_f32()))
+            })
+            .collect();
+        let mut trace = Trace::new();
+        let s = silhouette_rank(&group1(), &stack, &mut trace);
+        assert!(s.min > 0.9, "min={}", s.min);
+        assert!(s.avg > 0.9);
+        assert_eq!(s.per_cluster.len(), 3);
+    }
+
+    #[test]
+    fn random_clusters_score_low() {
+        let mut rng = Rng::new(501);
+        let stack: Vec<Mat> =
+            (0..5).map(|_| Mat::random_uniform(30, 4, 0.0, 1.0, &mut rng)).collect();
+        let mut trace = Trace::new();
+        let s = silhouette_rank(&group1(), &stack, &mut trace);
+        assert!(s.min < 0.5, "min={}", s.min);
+    }
+
+    #[test]
+    fn k1_is_one_by_convention() {
+        let mut rng = Rng::new(502);
+        let stack: Vec<Mat> =
+            (0..3).map(|_| Mat::random_uniform(10, 1, 0.0, 1.0, &mut rng)).collect();
+        let mut trace = Trace::new();
+        let s = silhouette_rank(&group1(), &stack, &mut trace);
+        assert_eq!(s.min, 1.0);
+    }
+
+    #[test]
+    fn distributed_matches_single_rank() {
+        let mut rng = Rng::new(503);
+        let n = 24;
+        let k = 3;
+        let r = 4;
+        let full: Vec<Mat> =
+            (0..r).map(|_| Mat::random_uniform(n, k, 0.0, 1.0, &mut rng)).collect();
+        let mut trace = Trace::new();
+        let want = silhouette_rank(&group1(), &full, &mut trace);
+        let results = run_on_grid(4, |ctx| {
+            let (s, e) = ctx.grid.chunk(n, ctx.row);
+            let stack: Vec<Mat> = full
+                .iter()
+                .map(|m| Mat::from_fn(e - s, k, |i, j| m[(s + i, j)]))
+                .collect();
+            let mut trace = Trace::new();
+            silhouette_rank(&ctx.col_comm, &stack, &mut trace)
+        });
+        for got in results {
+            assert!((got.min - want.min).abs() < 1e-4, "{} vs {}", got.min, want.min);
+            assert!((got.avg - want.avg).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn range_is_bounded() {
+        let mut rng = Rng::new(504);
+        for _ in 0..5 {
+            let stack: Vec<Mat> =
+                (0..4).map(|_| Mat::random_uniform(12, 3, 0.0, 1.0, &mut rng)).collect();
+            let mut trace = Trace::new();
+            let s = silhouette_rank(&group1(), &stack, &mut trace);
+            assert!(s.min >= -1.0 - 1e-5 && s.min <= 1.0 + 1e-5);
+            assert!(s.avg >= -1.0 - 1e-5 && s.avg <= 1.0 + 1e-5);
+        }
+    }
+}

@@ -1,0 +1,467 @@
+//! Algorithm 3: distributed non-negative RESCAL on the 2D virtual grid.
+//!
+//! Rank (i, j) holds the tile `X^(i,j)` (entity rows block i × entity cols
+//! block j, all m relation slices), the row-block factors `A^(i)` and
+//! `A^(j)` (equal on the diagonal), and a replicated core `R`. One MU
+//! iteration interleaves local GEMMs with exactly the collectives of the
+//! paper:
+//!
+//! * `AᵀA`    — local gram of A^(j), all_reduce over the **row** comm
+//! * `X_tA`   — local tile product, all_reduce over the **row** comm
+//! * `AᵀX_tA` — local product, all_reduce over the **column** comm
+//! * `X_tᵀAR` — local product, all_reduce over the **column** comm, then
+//!              **broadcast along rows from the diagonal rank** so each
+//!              rank gets its own row block (Alg 3 line 13)
+//! * refreshed `A^(j)` — **broadcast along columns from the diagonal**
+//!              (Alg 3 line 23)
+//!
+//! All ranks of a row compute bit-identical `A^(i)` updates because the
+//! all_reduce is order-deterministic (see `comm::group`).
+
+use std::sync::Arc;
+
+use super::distmm::{all_reduce_mat, broadcast_mat, dist_mm};
+use super::local::LocalTile;
+use super::RescalOptions;
+use crate::backend::Backend;
+use crate::comm::grid::RankCtx;
+use crate::comm::{CommOp, Trace};
+use crate::rng::Rng;
+use crate::tensor::ops::{mu_update, rescale_core};
+use crate::tensor::{Mat, Tensor3};
+
+/// Distributed factor initialization.
+#[derive(Clone)]
+pub enum DistInit {
+    /// Seeded random, consistent across ranks: row block b of A is drawn
+    /// from a stream keyed by (seed, b); R from (seed, "r"). No
+    /// communication needed.
+    Random { seed: u64 },
+    /// Slice blocks out of explicit full factors (test parity with the
+    /// sequential oracle).
+    Given(Arc<Mat>, Arc<Tensor3>),
+}
+
+impl DistInit {
+    /// Materialize this rank's (A_row, A_col, R).
+    fn materialize(
+        &self,
+        ctx: &RankCtx,
+        n: usize,
+        k: usize,
+        m: usize,
+    ) -> (Mat, Mat, Tensor3) {
+        match self {
+            DistInit::Random { seed } => {
+                let block = |b: usize| {
+                    let (s, e) = ctx.grid.chunk(n, b);
+                    let mut rng = Rng::for_rank(*seed, b, 1);
+                    Mat::random_uniform(e - s, k, 0.01, 1.0, &mut rng)
+                };
+                let a_row = block(ctx.row);
+                let a_col = block(ctx.col);
+                let mut rng_r = Rng::for_rank(*seed, usize::MAX, 2);
+                let r = Tensor3::from_slices(
+                    (0..m).map(|_| Mat::random_uniform(k, k, 0.01, 1.0, &mut rng_r)).collect(),
+                );
+                (a_row, a_col, r)
+            }
+            DistInit::Given(a, r) => {
+                assert_eq!(a.shape(), (n, k));
+                let block = |b: usize| {
+                    let (s, e) = ctx.grid.chunk(n, b);
+                    Mat::from_fn(e - s, k, |i, j| a[(s + i, j)])
+                };
+                (block(ctx.row), block(ctx.col), (**r).clone())
+            }
+        }
+    }
+}
+
+/// Per-rank configuration for one distributed factorization.
+pub struct DistRescalConfig {
+    pub opts: RescalOptions,
+    pub init: DistInit,
+    /// Global entity count n (tiles are blocks of an n×n×m tensor).
+    pub n: usize,
+}
+
+/// What each rank returns.
+pub struct RankResult {
+    /// This rank's row block of the final A (replicated across its row).
+    pub a_row: Mat,
+    /// Replicated final core tensor.
+    pub r: Tensor3,
+    /// Final relative reconstruction error (identical on all ranks).
+    pub rel_error: f32,
+    pub iters_run: usize,
+}
+
+/// Run distributed RESCAL on this rank's tile. All ranks must call this
+/// with consistent arguments; collectives keep them in lockstep.
+pub fn rescal_rank(
+    ctx: &RankCtx,
+    tile: &LocalTile,
+    cfg: &DistRescalConfig,
+    backend: &mut dyn Backend,
+    trace: &mut Trace,
+) -> RankResult {
+    let n = cfg.n;
+    let k = cfg.opts.k;
+    let m = tile.m();
+    let eps = cfg.opts.eps;
+    let (mut a_row, mut a_col, mut r) = cfg.init.materialize(ctx, n, k, m);
+    assert_eq!(a_row.rows(), tile.rows(), "A_row/tile row mismatch");
+    assert_eq!(a_col.rows(), tile.cols(), "A_col/tile col mismatch");
+
+    // ‖X‖² once, for relative error
+    let mut norm_buf = Mat::from_vec(1, 1, vec![tile.norm_sq() as f32]);
+    ctx.world.all_reduce_sum(norm_buf.as_mut_slice());
+    let x_norm_sq = norm_buf[(0, 0)] as f64;
+
+    let mut iters_run = 0;
+    for iter in 0..cfg.opts.max_iters {
+        iters_run = iter + 1;
+        // ---- AᵀA, replicated (Alg 3 line 3) ----
+        let ata_partial = trace.record(CommOp::GramMul, a_col.as_slice().len() * 4, || {
+            backend.gram(&a_col)
+        });
+        let ata = dist_mm(&ctx.row_comm, ata_partial, CommOp::RowReduce, trace);
+
+        let mut num_a = Mat::zeros(a_row.rows(), k);
+        let mut deno_a = Mat::zeros(a_row.rows(), k);
+        for t in 0..m {
+            // ---- XA (Alg 3 line 5) ----
+            let xa_partial = tile.xa(t, &a_col, backend, trace);
+            let xa = dist_mm(&ctx.row_comm, xa_partial, CommOp::RowReduce, trace);
+            // ---- AᵀXA (line 6) ----
+            let atxa_partial = trace.record(CommOp::MatrixMul, 0, || backend.t_matmul(&a_row, &xa));
+            let atxa = dist_mm(&ctx.col_comm, atxa_partial, CommOp::ColumnReduce, trace);
+            // ---- local slice segment: R update + A-update terms (lines
+            // 7-11, 15-19). One fused artifact on the XLA backend (§Perf);
+            // composed from generic ops otherwise. ----
+            let fused = trace.record(CommOp::MatrixMul, 0, || {
+                backend.slice_segment(r.slice(t), &ata, &atxa, &xa, &a_row)
+            });
+            let (xart, ar, deno) = match fused {
+                Some((r_new, xart, ar, deno)) => {
+                    *r.slice_mut(t) = r_new;
+                    (xart, ar, deno)
+                }
+                None => {
+                    // R update (lines 7-9), possibly via the smaller fused
+                    // r_update kernel
+                    let r_fused = trace.record(CommOp::MatrixMul, 0, || {
+                        backend.r_update_fused(r.slice(t), &ata, &atxa)
+                    });
+                    match r_fused {
+                        Some(new_rt) => *r.slice_mut(t) = new_rt,
+                        None => {
+                            let deno_r = {
+                                let rt = r.slice(t);
+                                let rata = trace
+                                    .record(CommOp::MatrixMul, 0, || backend.matmul(rt, &ata));
+                                trace.record(CommOp::MatrixMul, 0, || {
+                                    backend.matmul(&ata, &rata)
+                                })
+                            };
+                            mu_update(r.slice_mut(t), &atxa, &deno_r, eps);
+                        }
+                    }
+                    let rt = r.slice(t).clone();
+                    // A-update numerator terms (lines 10-11)
+                    let xart =
+                        trace.record(CommOp::MatrixMul, 0, || backend.matmul_t(&xa, &rt));
+                    let ar = trace.record(CommOp::MatrixMul, 0, || backend.matmul(&a_row, &rt));
+                    // A-update denominator (lines 15-20)
+                    let atar = trace.record(CommOp::MatrixMul, 0, || backend.matmul(&ata, &rt));
+                    let art =
+                        trace.record(CommOp::MatrixMul, 0, || backend.matmul_t(&a_row, &rt));
+                    let artatar =
+                        trace.record(CommOp::MatrixMul, 0, || backend.matmul(&art, &atar));
+                    let atart =
+                        trace.record(CommOp::MatrixMul, 0, || backend.matmul_t(&ata, &rt));
+                    let aratart =
+                        trace.record(CommOp::MatrixMul, 0, || backend.matmul(&ar, &atart));
+                    let mut deno = artatar;
+                    deno.add_assign(&aratart);
+                    (xart, ar, deno)
+                }
+            };
+            // ---- XᵀAR: tile product + column reduce + diagonal row
+            // broadcast (lines 12-13) ----
+            let xtar_partial = tile.xta(t, &ar, backend, trace);
+            let xtar_col = dist_mm(&ctx.col_comm, xtar_partial, CommOp::ColumnReduce, trace);
+            // row broadcast from the diagonal rank: member index within the
+            // row comm equals the grid column, and the diagonal of row i is
+            // at column i.
+            let mut xtar_row = if ctx.is_diagonal() {
+                xtar_col
+            } else {
+                Mat::zeros(a_row.rows(), k)
+            };
+            broadcast_mat(&ctx.row_comm, ctx.row, &mut xtar_row, CommOp::RowBroadcast, trace);
+            num_a.add_assign(&xart);
+            num_a.add_assign(&xtar_row);
+            deno_a.add_assign(&deno);
+        }
+        // ---- A update (line 22) ----
+        mu_update(&mut a_row, &num_a, &deno_a, eps);
+        // ---- refresh A^(j): column broadcast from the diagonal (line 23) ----
+        let mut a_col_new = if ctx.is_diagonal() { a_row.clone() } else { a_col };
+        broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col_new, CommOp::ColumnBroadcast, trace);
+        a_col = a_col_new;
+
+        // optional convergence check
+        if cfg.opts.err_every > 0 && (iter + 1) % cfg.opts.err_every == 0 {
+            let e = distributed_rel_error(ctx, tile, &a_row, &a_col, &r, x_norm_sq, backend, trace);
+            if cfg.opts.tol > 0.0 && e < cfg.opts.tol {
+                break;
+            }
+        }
+    }
+
+    // ---- final normalization: global column norms via column all_reduce ----
+    let mut sq = Mat::from_vec(
+        1,
+        k,
+        {
+            let mut acc = vec![0.0f32; k];
+            for i in 0..a_row.rows() {
+                let row = a_row.row(i);
+                for (j, &v) in row.iter().enumerate() {
+                    acc[j] += v * v;
+                }
+            }
+            acc
+        },
+    );
+    all_reduce_mat(&ctx.col_comm, &mut sq, CommOp::ColumnReduce, trace);
+    let scales: Vec<f32> = sq.as_slice().iter().map(|&s| if s > 0.0 { s.sqrt() } else { 1.0 }).collect();
+    for i in 0..a_row.rows() {
+        let row = a_row.row_mut(i);
+        for j in 0..k {
+            row[j] /= scales[j];
+        }
+    }
+    for t in 0..m {
+        rescale_core(r.slice_mut(t), &scales);
+    }
+    // refresh a_col one last time for the error evaluation
+    let mut a_col_new = if ctx.is_diagonal() { a_row.clone() } else { a_col };
+    broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col_new, CommOp::ColumnBroadcast, trace);
+    a_col = a_col_new;
+    let rel = distributed_rel_error(ctx, tile, &a_row, &a_col, &r, x_norm_sq, backend, trace);
+    RankResult { a_row, r, rel_error: rel, iters_run }
+}
+
+/// ‖X − A R Aᵀ‖_F / ‖X‖_F computed from the local tiles (identical on all
+/// ranks after the world all_reduce).
+#[allow(clippy::too_many_arguments)]
+fn distributed_rel_error(
+    ctx: &RankCtx,
+    tile: &LocalTile,
+    a_row: &Mat,
+    a_col: &Mat,
+    r: &Tensor3,
+    x_norm_sq: f64,
+    backend: &mut dyn Backend,
+    trace: &mut Trace,
+) -> f32 {
+    let mut local = 0.0f64;
+    for t in 0..tile.m() {
+        let ar = trace.record(CommOp::MatrixMul, 0, || backend.matmul(a_row, r.slice(t)));
+        local += tile.residual_sq(t, &ar, a_col);
+    }
+    let mut buf = Mat::from_vec(1, 1, vec![local as f32]);
+    all_reduce_mat(&ctx.world, &mut buf, CommOp::RowReduce, trace);
+    ((buf[(0, 0)] as f64).max(0.0).sqrt() / x_norm_sq.max(1e-300).sqrt()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::comm::grid::run_on_grid;
+    use crate::data::synthetic;
+    use crate::rescal::{rescal_seq, Init};
+    use crate::testing::assert_close;
+
+    /// Scatter a dense tensor into per-rank tiles and run the distributed
+    /// algorithm; gather A from the diagonal.
+    fn run_dist(
+        x: &Tensor3,
+        p: usize,
+        opts: RescalOptions,
+        init: DistInit,
+    ) -> (Mat, Tensor3, f32) {
+        let n = x.n1();
+        let results = run_on_grid(p, |ctx| {
+            let (r0, r1) = ctx.grid.chunk(n, ctx.row);
+            let (c0, c1) = ctx.grid.chunk(n, ctx.col);
+            let tile = LocalTile::Dense(x.tile(r0, r1, c0, c1));
+            let cfg = DistRescalConfig { opts: opts.clone(), init: init.clone(), n };
+            let mut backend = NativeBackend::new();
+            let mut trace = Trace::disabled();
+            let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+            (ctx.row, ctx.col, out)
+        });
+        // gather A blocks from the diagonal ranks
+        let grid = crate::comm::Grid::new(p);
+        let k = opts.k;
+        let mut a = Mat::zeros(n, k);
+        let mut r = None;
+        let mut err = 0.0;
+        for (row, col, res) in results {
+            if row == col {
+                let (s, _e) = grid.chunk(n, row);
+                for i in 0..res.a_row.rows() {
+                    for j in 0..k {
+                        a[(s + i, j)] = res.a_row[(i, j)];
+                    }
+                }
+                err = res.rel_error;
+                r = Some(res.r);
+            }
+        }
+        (a, r.unwrap(), err)
+    }
+
+    #[test]
+    fn p1_matches_sequential_exactly() {
+        let planted = synthetic::planted_tensor(12, 2, 3, 0.0, 200);
+        let x = planted.x;
+        let mut rng = Rng::new(7);
+        let (a0, r0) = Init::Random.materialize(&x, 3, &mut rng);
+        let opts = RescalOptions::new(3, 20);
+        let seq = rescal_seq(&x, &opts, Init::Given(a0.clone(), r0.clone()), 0);
+        let (a, r, err) = run_dist(
+            &x,
+            1,
+            opts,
+            DistInit::Given(Arc::new(a0), Arc::new(r0)),
+        );
+        assert_close(a.as_slice(), seq.a.as_slice(), 1e-4);
+        for t in 0..2 {
+            assert_close(r.slice(t).as_slice(), seq.r.slice(t).as_slice(), 1e-3);
+        }
+        assert!((err - seq.rel_error).abs() < 1e-4);
+    }
+
+    #[test]
+    fn p4_matches_sequential() {
+        let planted = synthetic::planted_tensor(16, 2, 3, 0.0, 201);
+        let x = planted.x;
+        let mut rng = Rng::new(8);
+        let (a0, r0) = Init::Random.materialize(&x, 3, &mut rng);
+        let opts = RescalOptions::new(3, 15);
+        let seq = rescal_seq(&x, &opts, Init::Given(a0.clone(), r0.clone()), 0);
+        let (a, r, err) =
+            run_dist(&x, 4, opts, DistInit::Given(Arc::new(a0), Arc::new(r0)));
+        assert_close(a.as_slice(), seq.a.as_slice(), 1e-3);
+        for t in 0..2 {
+            assert_close(r.slice(t).as_slice(), seq.r.slice(t).as_slice(), 1e-2);
+        }
+        assert!((err - seq.rel_error).abs() < 1e-3);
+    }
+
+    #[test]
+    fn p9_uneven_chunks_match_sequential() {
+        // n = 14 over q = 3 -> chunks 5,5,4: exercises the ragged path
+        let planted = synthetic::planted_tensor(14, 2, 2, 0.0, 202);
+        let x = planted.x;
+        let mut rng = Rng::new(9);
+        let (a0, r0) = Init::Random.materialize(&x, 2, &mut rng);
+        let opts = RescalOptions::new(2, 10);
+        let seq = rescal_seq(&x, &opts, Init::Given(a0.clone(), r0.clone()), 0);
+        let (a, _r, _e) =
+            run_dist(&x, 9, opts, DistInit::Given(Arc::new(a0), Arc::new(r0)));
+        assert_close(a.as_slice(), seq.a.as_slice(), 1e-3);
+    }
+
+    #[test]
+    fn random_init_converges_distributed() {
+        let planted = synthetic::planted_tensor(24, 3, 3, 0.0, 203);
+        let (_a, _r, err) = run_dist(
+            &planted.x,
+            4,
+            RescalOptions::new(3, 200),
+            DistInit::Random { seed: 42 },
+        );
+        assert!(err < 0.06, "rel_error={err}");
+    }
+
+    #[test]
+    fn sparse_tiles_match_dense_run() {
+        // identical data through the CSR path and the dense path must give
+        // the same factorization
+        let xs = synthetic::sparse_planted(24, 2, 3, 0.25, 204);
+        let dense = Tensor3::from_slices(xs.iter().map(|s| s.to_dense()).collect());
+        let n = 24;
+        let p = 4;
+        let opts = RescalOptions::new(3, 40);
+        let run = |sparse: bool| {
+            run_on_grid(p, |ctx| {
+                let (r0, r1) = ctx.grid.chunk(n, ctx.row);
+                let (c0, c1) = ctx.grid.chunk(n, ctx.col);
+                let tile = if sparse {
+                    LocalTile::Sparse(xs.iter().map(|s| s.tile(r0, r1, c0, c1)).collect())
+                } else {
+                    LocalTile::Dense(dense.tile(r0, r1, c0, c1))
+                };
+                let cfg = DistRescalConfig {
+                    opts: opts.clone(),
+                    init: DistInit::Random { seed: 5 },
+                    n,
+                };
+                let mut backend = NativeBackend::new();
+                let mut trace = Trace::new();
+                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+                (out, trace.bytes(CommOp::MatrixMulSparse))
+            })
+        };
+        let sparse_results = run(true);
+        let dense_results = run(false);
+        for ((s, sparse_bytes), (d, _)) in sparse_results.iter().zip(&dense_results) {
+            assert!((s.rel_error - d.rel_error).abs() < 1e-3);
+            assert_close(s.a_row.as_slice(), d.a_row.as_slice(), 1e-2);
+            assert!(*sparse_bytes > 0, "sparse path not exercised");
+        }
+    }
+
+    #[test]
+    fn trace_has_all_collective_categories() {
+        let planted = synthetic::planted_tensor(12, 2, 2, 0.0, 205);
+        let x = planted.x;
+        let results = run_on_grid(4, |ctx| {
+            let (r0, r1) = ctx.grid.chunk(12, ctx.row);
+            let (c0, c1) = ctx.grid.chunk(12, ctx.col);
+            let tile = LocalTile::Dense(x.tile(r0, r1, c0, c1));
+            let cfg = DistRescalConfig {
+                opts: RescalOptions::new(2, 3),
+                init: DistInit::Random { seed: 1 },
+                n: 12,
+            };
+            let mut backend = NativeBackend::new();
+            let mut trace = Trace::new();
+            rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+            trace
+        });
+        for trace in results {
+            for op in [
+                CommOp::GramMul,
+                CommOp::MatrixMul,
+                CommOp::RowReduce,
+                CommOp::ColumnReduce,
+                CommOp::RowBroadcast,
+                CommOp::ColumnBroadcast,
+            ] {
+                assert!(
+                    trace.events().iter().any(|e| e.op == op),
+                    "missing op {:?}",
+                    op
+                );
+            }
+        }
+    }
+}

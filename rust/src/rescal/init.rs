@@ -1,0 +1,111 @@
+//! Factor initialization: random or NNDSVD (paper §3.4, §6.1.3).
+
+use crate::linalg::nndsvd::nndsvd_init;
+use crate::rng::Rng;
+use crate::tensor::{Mat, Tensor3};
+
+/// How to initialize A and R.
+#[derive(Clone)]
+pub enum Init {
+    /// U[0,1) entries, seeded.
+    Random,
+    /// NNDSVD of the concatenated axis-1/axis-2 unfoldings of X for A,
+    /// then R bootstrapped by one pass of R updates (paper §6.1.3).
+    Nndsvd,
+    /// Explicit factors (used to make distributed == sequential tests
+    /// bit-comparable).
+    Given(Mat, Tensor3),
+}
+
+impl Init {
+    /// Produce initial (A, R) for a k-rank factorization of `x`.
+    pub fn materialize(&self, x: &Tensor3, k: usize, rng: &mut Rng) -> (Mat, Tensor3) {
+        let (n, _, m) = x.shape();
+        match self {
+            Init::Random => {
+                let a = Mat::random_uniform(n, k, 0.01, 1.0, rng);
+                let r = Tensor3::from_slices(
+                    (0..m).map(|_| Mat::random_uniform(k, k, 0.01, 1.0, rng)).collect(),
+                );
+                (a, r)
+            }
+            Init::Nndsvd => {
+                // concatenated unfoldings along axes 1 and 2: [X_1 … X_m  X_1ᵀ … X_mᵀ]
+                let mut concat = Mat::zeros(n, 2 * m * n);
+                for t in 0..m {
+                    let xt = x.slice(t);
+                    for i in 0..n {
+                        for j in 0..n {
+                            concat[(i, t * n + j)] = xt[(i, j)];
+                            concat[(i, (m + t) * n + j)] = xt[(j, i)];
+                        }
+                    }
+                }
+                let a = nndsvd_init(&concat, k, 1e-6);
+                // bootstrap R with a few multiplicative R-updates at fixed A
+                let mut r = Tensor3::from_slices(
+                    (0..m).map(|_| Mat::full(k, k, 0.5)).collect(),
+                );
+                let ata = a.gram();
+                for t in 0..m {
+                    let xa = x.slice(t).matmul(&a);
+                    let atxa = a.t_matmul(&xa);
+                    for _ in 0..3 {
+                        let rata = r.slice(t).matmul(&ata);
+                        let deno = ata.matmul(&rata);
+                        crate::tensor::ops::mu_update(
+                            r.slice_mut(t),
+                            &atxa,
+                            &deno,
+                            crate::tensor::ops::MU_EPS,
+                        );
+                    }
+                }
+                (a, r)
+            }
+            Init::Given(a, r) => {
+                assert_eq!(a.shape(), (n, k), "given A shape");
+                assert_eq!(r.shape(), (k, k, m), "given R shape");
+                (a.clone(), r.clone())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::is_nonnegative;
+
+    #[test]
+    fn random_init_shapes_and_positivity() {
+        let mut rng = Rng::new(100);
+        let x = Tensor3::random_uniform(10, 10, 3, 0.0, 1.0, &mut rng);
+        let (a, r) = Init::Random.materialize(&x, 4, &mut rng);
+        assert_eq!(a.shape(), (10, 4));
+        assert_eq!(r.shape(), (4, 4, 3));
+        assert!(is_nonnegative(&a));
+    }
+
+    #[test]
+    fn nndsvd_init_shapes_and_positivity() {
+        let mut rng = Rng::new(101);
+        let x = Tensor3::random_uniform(8, 8, 2, 0.0, 1.0, &mut rng);
+        let (a, r) = Init::Nndsvd.materialize(&x, 3, &mut rng);
+        assert_eq!(a.shape(), (8, 3));
+        assert_eq!(r.shape(), (3, 3, 2));
+        assert!(is_nonnegative(&a));
+        assert!(is_nonnegative(r.slice(0)));
+    }
+
+    #[test]
+    fn given_init_passes_through() {
+        let mut rng = Rng::new(102);
+        let x = Tensor3::random_uniform(6, 6, 2, 0.0, 1.0, &mut rng);
+        let a = Mat::full(6, 2, 0.3);
+        let r = Tensor3::zeros(2, 2, 2);
+        let (a2, r2) = Init::Given(a.clone(), r.clone()).materialize(&x, 2, &mut rng);
+        assert_eq!(a2, a);
+        assert_eq!(r2, r);
+    }
+}

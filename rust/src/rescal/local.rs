@@ -1,0 +1,228 @@
+//! One rank's tile of the distributed tensor, dense or CSR-sparse.
+//!
+//! The two products against the tile — `X_t·B` and `X_tᵀ·B` — are the
+//! only places X is touched in Algorithm 3, so [`LocalTile`] exposes
+//! exactly those, charging `matrix_mul` or `matrix_mul_sparse` in the
+//! trace as the paper's breakdown plots do.
+
+use crate::backend::Backend;
+use crate::comm::{CommOp, Trace};
+use crate::tensor::{Csr, Mat, Tensor3};
+
+/// Per-rank tile: `rows × cols × m`, dense or sparse.
+pub enum LocalTile {
+    Dense(Tensor3),
+    Sparse(Vec<Csr>),
+}
+
+impl LocalTile {
+    /// Number of relation slices.
+    pub fn m(&self) -> usize {
+        match self {
+            LocalTile::Dense(t) => t.m(),
+            LocalTile::Sparse(s) => s.len(),
+        }
+    }
+
+    /// Tile row count.
+    pub fn rows(&self) -> usize {
+        match self {
+            LocalTile::Dense(t) => t.n1(),
+            LocalTile::Sparse(s) => s[0].rows(),
+        }
+    }
+
+    /// Tile column count.
+    pub fn cols(&self) -> usize {
+        match self {
+            LocalTile::Dense(t) => t.n2(),
+            LocalTile::Sparse(s) => s[0].cols(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, LocalTile::Sparse(_))
+    }
+
+    /// `X_t · B` (rows×k), traced as dense or sparse matmul.
+    pub fn xa(&self, t: usize, b: &Mat, backend: &mut dyn Backend, trace: &mut Trace) -> Mat {
+        match self {
+            LocalTile::Dense(x) => {
+                let bytes = x.n1() * x.n2() * 4;
+                trace.record(CommOp::MatrixMul, bytes, || backend.matmul(x.slice(t), b))
+            }
+            LocalTile::Sparse(s) => {
+                let bytes = s[t].nnz() * 8;
+                trace.record(CommOp::MatrixMulSparse, bytes, || s[t].matmul_dense(b))
+            }
+        }
+    }
+
+    /// `X_tᵀ · B` (cols×k).
+    pub fn xta(&self, t: usize, b: &Mat, backend: &mut dyn Backend, trace: &mut Trace) -> Mat {
+        match self {
+            LocalTile::Dense(x) => {
+                let bytes = x.n1() * x.n2() * 4;
+                trace.record(CommOp::MatrixMul, bytes, || backend.t_matmul(x.slice(t), b))
+            }
+            LocalTile::Sparse(s) => {
+                let bytes = s[t].nnz() * 8;
+                trace.record(CommOp::MatrixMulSparse, bytes, || s[t].t_matmul_dense(b))
+            }
+        }
+    }
+
+    /// Squared Frobenius norm of the local tile.
+    pub fn norm_sq(&self) -> f64 {
+        match self {
+            LocalTile::Dense(x) => {
+                let n = x.norm_fro() as f64;
+                n * n
+            }
+            LocalTile::Sparse(s) => s
+                .iter()
+                .map(|c| {
+                    let n = c.norm_fro() as f64;
+                    n * n
+                })
+                .sum(),
+        }
+    }
+
+    /// Squared Frobenius norm of `X_t − A_row · R_t · A_colᵀ` for slice t.
+    /// `ar` is the precomputed `A_row · R_t`.
+    pub fn residual_sq(&self, t: usize, ar: &Mat, a_col: &Mat) -> f64 {
+        let rec = ar.matmul_t(a_col); // rows × cols
+        match self {
+            LocalTile::Dense(x) => {
+                let xt = x.slice(t);
+                let mut acc = 0.0f64;
+                for (a, b) in xt.as_slice().iter().zip(rec.as_slice()) {
+                    let d = (*a - *b) as f64;
+                    acc += d * d;
+                }
+                acc
+            }
+            LocalTile::Sparse(s) => {
+                // ‖X − Rec‖² over the dense reconstruction: visit all cells
+                // via Rec and patch the sparse entries.
+                let xt = &s[t];
+                let mut acc: f64 =
+                    rec.as_slice().iter().map(|&v| (v as f64) * (v as f64)).sum();
+                let dense = xt.to_dense();
+                for i in 0..dense.rows() {
+                    for j in 0..dense.cols() {
+                        let x = dense[(i, j)];
+                        if x != 0.0 {
+                            let r = rec[(i, j)];
+                            acc += ((x - r) as f64).powi(2) - (r as f64).powi(2);
+                        }
+                    }
+                }
+                acc
+            }
+        }
+    }
+
+    /// Perturbed copy: every (stored) element multiplied by U[1−δ, 1+δ]
+    /// (Algorithm 4; sparse branch perturbs nonzeros only).
+    pub fn perturb(&self, delta: f32, rng: &mut crate::rng::Rng) -> LocalTile {
+        match self {
+            LocalTile::Dense(x) => {
+                let mut out = x.clone();
+                for t in 0..out.m() {
+                    for v in out.slice_mut(t).as_mut_slice() {
+                        *v *= rng.uniform_range(1.0 - delta, 1.0 + delta);
+                    }
+                }
+                LocalTile::Dense(out)
+            }
+            LocalTile::Sparse(s) => {
+                LocalTile::Sparse(s.iter().map(|c| c.perturb(delta, rng)).collect())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::rng::Rng;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn dense_xa_xta() {
+        let mut rng = Rng::new(110);
+        let x = Tensor3::random_uniform(8, 6, 2, 0.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(6, 3, 0.0, 1.0, &mut rng);
+        let b2 = Mat::random_uniform(8, 3, 0.0, 1.0, &mut rng);
+        let tile = LocalTile::Dense(x.clone());
+        let mut be = NativeBackend::new();
+        let mut tr = Trace::new();
+        let got = tile.xa(1, &b, &mut be, &mut tr);
+        assert_close(got.as_slice(), x.slice(1).matmul(&b).as_slice(), 1e-5);
+        let got_t = tile.xta(0, &b2, &mut be, &mut tr);
+        assert_close(got_t.as_slice(), x.slice(0).t_matmul(&b2).as_slice(), 1e-5);
+        assert!(tr.seconds(CommOp::MatrixMul) >= 0.0);
+        assert_eq!(tr.events().len(), 2); // one event each for xa and xta
+    }
+
+    #[test]
+    fn sparse_matches_dense_products() {
+        let mut rng = Rng::new(111);
+        let s: Vec<Csr> = (0..2).map(|_| Csr::random(10, 7, 0.3, &mut rng)).collect();
+        let dense = Tensor3::from_slices(s.iter().map(|c| c.to_dense()).collect());
+        let b = Mat::random_uniform(7, 4, 0.0, 1.0, &mut rng);
+        let bt = Mat::random_uniform(10, 4, 0.0, 1.0, &mut rng);
+        let st = LocalTile::Sparse(s);
+        let dt = LocalTile::Dense(dense);
+        let mut be = NativeBackend::new();
+        let mut tr = Trace::new();
+        for t in 0..2 {
+            assert_close(
+                st.xa(t, &b, &mut be, &mut tr).as_slice(),
+                dt.xa(t, &b, &mut be, &mut tr).as_slice(),
+                1e-4,
+            );
+            assert_close(
+                st.xta(t, &bt, &mut be, &mut tr).as_slice(),
+                dt.xta(t, &bt, &mut be, &mut tr).as_slice(),
+                1e-4,
+            );
+        }
+        assert!(tr.bytes(CommOp::MatrixMulSparse) > 0);
+    }
+
+    #[test]
+    fn residual_sq_dense_vs_sparse() {
+        let mut rng = Rng::new(112);
+        let s = vec![Csr::random(6, 6, 0.4, &mut rng)];
+        let dense = Tensor3::from_slices(vec![s[0].to_dense()]);
+        let a_row = Mat::random_uniform(6, 2, 0.0, 1.0, &mut rng);
+        let a_col = Mat::random_uniform(6, 2, 0.0, 1.0, &mut rng);
+        let r = Mat::random_uniform(2, 2, 0.0, 1.0, &mut rng);
+        let ar = a_row.matmul(&r);
+        let d = LocalTile::Dense(dense).residual_sq(0, &ar, &a_col);
+        let sp = LocalTile::Sparse(s).residual_sq(0, &ar, &a_col);
+        assert!((d - sp).abs() < 1e-3 * d.max(1.0), "dense {d} vs sparse {sp}");
+    }
+
+    #[test]
+    fn perturb_bounds_dense() {
+        let mut rng = Rng::new(113);
+        let x = Tensor3::random_uniform(5, 5, 2, 0.5, 1.0, &mut rng);
+        let tile = LocalTile::Dense(x.clone());
+        let p = tile.perturb(0.02, &mut rng);
+        if let LocalTile::Dense(px) = p {
+            for t in 0..2 {
+                for (a, b) in x.slice(t).as_slice().iter().zip(px.slice(t).as_slice()) {
+                    let ratio = b / a;
+                    assert!(ratio >= 0.98 - 1e-5 && ratio <= 1.02 + 1e-5);
+                }
+            }
+        } else {
+            panic!("expected dense");
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Non-negative RESCAL: sequential reference and the distributed
+//! 2D-grid multiplicative-update algorithm (paper Algorithms 2 & 3).
+
+pub mod distributed;
+pub mod distmm;
+pub mod init;
+pub mod local;
+pub mod seq;
+
+pub use distributed::{rescal_rank, DistRescalConfig, RankResult};
+pub use init::Init;
+pub use local::LocalTile;
+pub use seq::{rescal_seq, SeqRescal};
+
+/// Shared convergence / iteration settings.
+#[derive(Clone, Debug)]
+pub struct RescalOptions {
+    /// Number of latent communities.
+    pub k: usize,
+    /// Maximum MU iterations.
+    pub max_iters: usize,
+    /// Stop when relative error drops below this (checked every
+    /// `err_every` iterations; 0 disables early stopping).
+    pub tol: f32,
+    /// How often to evaluate the reconstruction error (it costs extra
+    /// GEMMs). 0 = never during iterations (only at the end).
+    pub err_every: usize,
+    /// ε in the MU denominators.
+    pub eps: f32,
+}
+
+impl RescalOptions {
+    pub fn new(k: usize, max_iters: usize) -> Self {
+        RescalOptions { k, max_iters, tol: 0.0, err_every: 0, eps: crate::tensor::ops::MU_EPS }
+    }
+
+    pub fn with_tol(mut self, tol: f32, err_every: usize) -> Self {
+        self.tol = tol;
+        self.err_every = err_every;
+        self
+    }
+}

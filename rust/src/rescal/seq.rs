@@ -1,0 +1,172 @@
+//! Sequential non-negative RESCAL (Equation 2 of the paper), the
+//! single-process oracle the distributed implementation is tested against.
+
+use super::{Init, RescalOptions};
+use crate::rng::Rng;
+use crate::tensor::ops::{mu_update, normalize_cols, rescale_core};
+use crate::tensor::{Mat, Tensor3};
+
+/// Result of a sequential factorization.
+pub struct SeqRescal {
+    pub a: Mat,
+    pub r: Tensor3,
+    pub rel_error: f32,
+    pub iters_run: usize,
+}
+
+/// Plain Equation-2 multiplicative updates on a full tensor.
+///
+/// Per iteration:
+/// `R_t ← R_t ∘ AᵀX_tA / (AᵀA R_t AᵀA + ε)` for each t, then
+/// `A ← A ∘ Σ_t(X_tAR_tᵀ + X_tᵀAR_t) / Σ_t A(R_tAᵀAR_tᵀ + R_tᵀAᵀAR_t) + ε`.
+pub fn rescal_seq(x: &Tensor3, opts: &RescalOptions, init: Init, seed: u64) -> SeqRescal {
+    let (n, n2, m) = x.shape();
+    assert_eq!(n, n2, "RESCAL needs a square entity tensor");
+    let k = opts.k;
+    let (mut a, mut r) = init.materialize(x, k, &mut Rng::new(seed));
+    let mut iters_run = 0;
+    for iter in 0..opts.max_iters {
+        iters_run = iter + 1;
+        let ata = a.gram();
+        // accumulate A-update terms across slices
+        let mut num_a = Mat::zeros(n, k);
+        let mut deno_a = Mat::zeros(n, k);
+        for t in 0..m {
+            let xt = x.slice(t);
+            let xa = xt.matmul(&a);
+            // ---- R update (Eq 2, first rule) ----
+            let atxa = a.t_matmul(&xa);
+            let rata = r.slice(t).matmul(&ata);
+            let deno_r = ata.matmul(&rata); // AᵀA · R_t · AᵀA
+            let num_r = atxa;
+            mu_update(r.slice_mut(t), &num_r, &deno_r, opts.eps);
+            // ---- A-update terms with the refreshed R_t (Alg 3 order) ----
+            let rt = r.slice(t);
+            // numerator: X_t A R_tᵀ + X_tᵀ A R_t
+            let xart = xa.matmul_t(rt);
+            let ar = a.matmul(rt);
+            let xtar = xt.t_matmul(&ar);
+            num_a.add_assign(&xart);
+            num_a.add_assign(&xtar);
+            // denominator: A (R_t AᵀA R_tᵀ + R_tᵀ AᵀA R_t)
+            let atar = ata.matmul(rt); // AᵀA R_t
+            let art = a.matmul_t(rt); // A R_tᵀ
+            let artatar = art.matmul(&atar); // A R_tᵀ AᵀA R_t
+            let atart = ata.matmul_t(rt); // AᵀA R_tᵀ
+            let aratart = ar.matmul(&atart); // A R_t AᵀA R_tᵀ
+            deno_a.add_assign(&artatar);
+            deno_a.add_assign(&aratart);
+        }
+        mu_update(&mut a, &num_a, &deno_a, opts.eps);
+        if opts.err_every > 0 && opts.tol > 0.0 && (iter + 1) % opts.err_every == 0 {
+            let e = x.rel_error(&a, &r);
+            if e < opts.tol {
+                break;
+            }
+        }
+    }
+    // final normalization: ‖A_i‖ = 1 with inverse scaling folded into R
+    let scales = normalize_cols(&mut a);
+    for t in 0..m {
+        rescale_core(r.slice_mut(t), &scales);
+    }
+    let rel_error = x.rel_error(&a, &r);
+    SeqRescal { a, r, rel_error, iters_run }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::tensor::ops::{col_norms, is_nonnegative};
+
+    fn planted(n: usize, m: usize, k: usize, seed: u64) -> Tensor3 {
+        synthetic::planted_tensor(n, m, k, 0.0, seed).x
+    }
+
+    #[test]
+    fn error_decreases_monotonically_in_practice() {
+        let x = planted(24, 3, 3, 1);
+        let mut prev = f32::INFINITY;
+        for iters in [5usize, 20, 60] {
+            let out = rescal_seq(&x, &RescalOptions::new(3, iters), Init::Random, 7);
+            assert!(
+                out.rel_error <= prev + 1e-4,
+                "error rose: {prev} -> {}",
+                out.rel_error
+            );
+            prev = out.rel_error;
+        }
+    }
+
+    #[test]
+    fn fits_planted_low_rank_tensor() {
+        let x = planted(32, 4, 3, 2);
+        let out = rescal_seq(&x, &RescalOptions::new(3, 300), Init::Random, 3);
+        assert!(out.rel_error < 0.05, "rel_error={}", out.rel_error);
+    }
+
+    #[test]
+    fn factors_stay_nonnegative() {
+        let x = planted(20, 3, 4, 4);
+        let out = rescal_seq(&x, &RescalOptions::new(4, 50), Init::Random, 5);
+        assert!(is_nonnegative(&out.a));
+        for t in 0..3 {
+            assert!(is_nonnegative(out.r.slice(t)));
+        }
+    }
+
+    #[test]
+    fn columns_are_normalized() {
+        let x = planted(20, 2, 3, 6);
+        let out = rescal_seq(&x, &RescalOptions::new(3, 30), Init::Random, 7);
+        for norm in col_norms(&out.a) {
+            assert!((norm - 1.0).abs() < 1e-4, "col norm {norm}");
+        }
+    }
+
+    #[test]
+    fn nndsvd_init_converges_faster_than_random() {
+        let x = planted(32, 3, 4, 8);
+        let iters = 25;
+        let rnd = rescal_seq(&x, &RescalOptions::new(4, iters), Init::Random, 9);
+        let svd = rescal_seq(&x, &RescalOptions::new(4, iters), Init::Nndsvd, 9);
+        // NNDSVD should do no worse (paper §3.4: faster convergence)
+        assert!(
+            svd.rel_error <= rnd.rel_error * 1.25,
+            "nndsvd {} vs random {}",
+            svd.rel_error,
+            rnd.rel_error
+        );
+    }
+
+    #[test]
+    fn early_stop_respects_tolerance() {
+        let x = planted(24, 2, 3, 10);
+        let opts = RescalOptions::new(3, 500).with_tol(0.10, 5);
+        let out = rescal_seq(&x, &opts, Init::Random, 11);
+        assert!(out.iters_run < 500, "should stop early, ran {}", out.iters_run);
+        assert!(out.rel_error < 0.10 + 0.02);
+    }
+
+    #[test]
+    fn asymmetric_relations_are_captured() {
+        // directed structure: community 0 points to community 1 only
+        let mut a_true = Mat::zeros(12, 2);
+        for i in 0..6 {
+            a_true[(i, 0)] = 1.0;
+            a_true[(i + 6, 1)] = 1.0;
+        }
+        let mut r_true = Mat::zeros(2, 2);
+        r_true[(0, 1)] = 1.0; // asymmetric
+        let xt = a_true.matmul(&r_true).matmul_t(&a_true);
+        let x = Tensor3::from_slices(vec![xt]);
+        let out = rescal_seq(&x, &RescalOptions::new(2, 400), Init::Random, 12);
+        assert!(out.rel_error < 0.05, "rel_error={}", out.rel_error);
+        // recovered R slice should be asymmetric in the same direction
+        let r = out.r.slice(0);
+        let fwd = r[(0, 1)].max(r[(1, 0)]);
+        let bwd = r[(0, 1)].min(r[(1, 0)]);
+        assert!(fwd > 5.0 * bwd.max(1e-6), "directionality lost: {:?}", r.as_slice());
+    }
+}

@@ -1,0 +1,220 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX segments (which call the L1
+//! Pallas kernels) to HLO **text** — the interchange format that survives
+//! the jax≥0.5 / xla_extension 0.5.1 proto-id mismatch — plus a
+//! `manifest.json` describing each op's input shapes. This module compiles
+//! each artifact once on the PJRT CPU client and exposes typed execution
+//! over [`crate::tensor::Mat`].
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::Json;
+use crate::tensor::Mat;
+
+/// Key identifying one compiled executable: op kind + exact input shapes.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct OpKey {
+    pub kind: String,
+    pub shapes: Vec<(usize, usize)>,
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub kind: String,
+    pub file: String,
+    pub shapes: Vec<(usize, usize)>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let ops = v
+            .get("ops")
+            .and_then(|o| o.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'ops' array"))?;
+        let mut entries = Vec::new();
+        for op in ops {
+            let kind = op
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .ok_or_else(|| anyhow!("op missing 'kind'"))?
+                .to_string();
+            let file = op
+                .get("file")
+                .and_then(|k| k.as_str())
+                .ok_or_else(|| anyhow!("op missing 'file'"))?
+                .to_string();
+            let shapes = op
+                .get("shapes")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("op missing 'shapes'"))?
+                .iter()
+                .map(|sh| {
+                    let dims = sh.as_arr().ok_or_else(|| anyhow!("shape not array"))?;
+                    if dims.len() != 2 {
+                        return Err(anyhow!("only rank-2 inputs supported"));
+                    }
+                    Ok((
+                        dims[0].as_usize().ok_or_else(|| anyhow!("bad dim"))?,
+                        dims[1].as_usize().ok_or_else(|| anyhow!("bad dim"))?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ManifestEntry { kind, file, shapes });
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+/// A compiled-and-loaded artifact set on the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<OpKey, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `dir/manifest.json` and compile it.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for entry in &manifest.entries {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            executables.insert(
+                OpKey { kind: entry.kind.clone(), shapes: entry.shapes.clone() },
+                exe,
+            );
+        }
+        Ok(Runtime { client, executables, dir })
+    }
+
+    /// Artifact directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// PJRT platform name (e.g. "cpu" / "Host").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of loaded executables.
+    pub fn len(&self) -> usize {
+        self.executables.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.executables.is_empty()
+    }
+
+    /// True if an executable exists for this op kind and input shapes.
+    pub fn supports(&self, kind: &str, inputs: &[&Mat]) -> bool {
+        self.executables.contains_key(&key_of(kind, inputs))
+    }
+
+    /// Execute `kind` on the given inputs. Returns `None` when no artifact
+    /// matches the shapes (caller falls back to the native backend);
+    /// errors only on real PJRT failures.
+    pub fn execute(&self, kind: &str, inputs: &[&Mat]) -> Result<Option<Mat>> {
+        match self.execute_multi(kind, inputs)? {
+            None => Ok(None),
+            Some(mut outs) => {
+                if outs.len() != 1 {
+                    return Err(anyhow!("expected 1 output, got {}", outs.len()));
+                }
+                Ok(Some(outs.remove(0)))
+            }
+        }
+    }
+
+    /// Execute an artifact with a tuple of outputs (fused segments).
+    pub fn execute_multi(&self, kind: &str, inputs: &[&Mat]) -> Result<Option<Vec<Mat>>> {
+        let exe = match self.executables.get(&key_of(kind, inputs)) {
+            Some(e) => e,
+            None => return Ok(None),
+        };
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| {
+                xla::Literal::vec1(m.as_slice())
+                    .reshape(&[m.rows() as i64, m.cols() as i64])
+                    .map_err(|e| anyhow!("literal reshape: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let elems = result.to_tuple()?;
+        let mut outs = Vec::with_capacity(elems.len());
+        for elem in elems {
+            let shape = elem.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            if dims.len() != 2 {
+                return Err(anyhow!("expected rank-2 output, got {:?}", dims));
+            }
+            let data = elem.to_vec::<f32>()?;
+            outs.push(Mat::from_vec(dims[0], dims[1], data));
+        }
+        Ok(Some(outs))
+    }
+}
+
+fn key_of(kind: &str, inputs: &[&Mat]) -> OpKey {
+    OpKey { kind: kind.to_string(), shapes: inputs.iter().map(|m| m.shape()).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+            "dtype": "f32",
+            "ops": [
+                {"kind": "matmul", "file": "matmul_4x4.hlo.txt", "shapes": [[4, 4], [4, 4]]},
+                {"kind": "gram", "file": "gram_8x2.hlo.txt", "shapes": [[8, 2]]}
+            ]
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[0].kind, "matmul");
+        assert_eq!(m.entries[0].shapes, vec![(4, 4), (4, 4)]);
+        assert_eq!(m.entries[1].shapes, vec![(8, 2)]);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"ops": [{"kind": "x"}]}"#).is_err());
+        assert!(Manifest::parse(r#"{}"#).is_err());
+    }
+
+    // Execution against real artifacts is covered by the integration test
+    // `rust/tests/xla_runtime.rs`, which requires `make artifacts` first.
+}

@@ -1,0 +1,232 @@
+//! Cluster-scale replay: predict per-op runtimes of distributed RESCAL(k)
+//! at the paper's scales (up to 23k ranks, 9.5 EB tensors) from the §5
+//! complexity analysis plus a calibrated machine model.
+//!
+//! This is the documented substitution (DESIGN.md §3) for the Grizzly and
+//! Kodiak clusters: the *measured* small-p runs come from the real
+//! implementation in `coordinator`; the *modeled* large-p points use these
+//! formulas with α-β network parameters and per-rank compute rates, either
+//! the built-in hardware presets or rates calibrated from a live
+//! microbenchmark.
+
+pub mod exascale;
+
+use crate::comm::model::{ComputeModel, NetworkModel};
+
+/// One modeled machine: per-rank compute + interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct Machine {
+    pub compute: ComputeModel,
+    pub network: NetworkModel,
+}
+
+impl Machine {
+    /// CPU cluster preset (Grizzly-like).
+    pub fn cpu_cluster() -> Self {
+        Machine { compute: ComputeModel::grizzly_cpu_rank(), network: NetworkModel::omnipath() }
+    }
+
+    /// GPU cluster preset (Kodiak-like).
+    pub fn gpu_cluster() -> Self {
+        Machine {
+            compute: ComputeModel::kodiak_p100_rank(),
+            network: NetworkModel::infiniband_gpu(),
+        }
+    }
+
+    /// Calibrated machine: measured dense rate (FLOP/s) on this host, with
+    /// local-memory "interconnect" parameters measured from the virtual
+    /// MPI collectives.
+    pub fn calibrated(dense_flops: f64, alpha: f64, beta: f64) -> Self {
+        Machine {
+            compute: ComputeModel { flops: dense_flops, sparse_flops: dense_flops / 20.0 },
+            network: NetworkModel { alpha, beta },
+        }
+    }
+}
+
+/// Modeled per-iteration timing breakdown (seconds), matching the
+/// categories of `comm::CommOp`.
+#[derive(Clone, Debug, Default)]
+pub struct PredictedIter {
+    pub gram_mul: f64,
+    pub matrix_mul: f64,
+    pub row_reduce: f64,
+    pub column_reduce: f64,
+    pub row_broadcast: f64,
+    pub column_broadcast: f64,
+}
+
+impl PredictedIter {
+    pub fn compute(&self) -> f64 {
+        self.gram_mul + self.matrix_mul
+    }
+
+    pub fn comm(&self) -> f64 {
+        self.row_reduce + self.column_reduce + self.row_broadcast + self.column_broadcast
+    }
+
+    pub fn total(&self) -> f64 {
+        self.compute() + self.comm()
+    }
+}
+
+/// Predict one MU iteration of Algorithm 3 for an n×n×m tensor of the
+/// given density (1.0 = dense) on a √p×√p grid.
+///
+/// Operation counts follow Algorithm 3 exactly; collective sizes follow
+/// §5.1.2 (all over √p ranks).
+pub fn predict_rescal_iter(
+    n: usize,
+    m: usize,
+    k: usize,
+    p: usize,
+    density: f64,
+    machine: &Machine,
+) -> PredictedIter {
+    let q = (p as f64).sqrt().round().max(1.0);
+    let n_loc = n as f64 / q;
+    let (mf, kf) = (m as f64, k as f64);
+    let net = &machine.network;
+    let comp = &machine.compute;
+    let qp = q as usize;
+
+    let mut out = PredictedIter::default();
+    // line 3: local gram of A^(j): 2·n_loc·k² flops
+    out.gram_mul = comp.dense_seconds(2.0 * n_loc * kf * kf);
+    // per slice: the two tile GEMMs (density-scaled) + skinny GEMMs + k³
+    let tile_flop = 2.0 * n_loc * n_loc * kf * density.min(1.0);
+    let tile_secs = if density >= 1.0 {
+        comp.dense_seconds(2.0 * tile_flop)
+    } else {
+        comp.sparse_seconds(2.0 * tile_flop)
+    };
+    let skinny = comp.dense_seconds(mf * 6.0 * 2.0 * n_loc * kf * kf);
+    let small = comp.dense_seconds(mf * 4.0 * 2.0 * kf * kf * kf);
+    out.matrix_mul = mf * tile_secs + skinny + small;
+    // collectives per slice: XA row all_reduce (n_loc·k), ATXA col
+    // all_reduce (k²), XTAR col all_reduce (n_loc·k), XTAR row broadcast
+    // (n_loc·k); per iteration: ATA row all_reduce (k²), A col broadcast
+    let fk = 4.0; // bytes per f32
+    out.row_reduce = mf * net.all_reduce(qp, (n_loc * kf * fk) as usize)
+        + net.all_reduce(qp, (kf * kf * fk) as usize);
+    out.column_reduce = mf
+        * (net.all_reduce(qp, (kf * kf * fk) as usize)
+            + net.all_reduce(qp, (n_loc * kf * fk) as usize));
+    out.row_broadcast = mf * net.broadcast(qp, (n_loc * kf * fk) as usize);
+    out.column_broadcast = net.broadcast(qp, (n_loc * kf * fk) as usize);
+    out
+}
+
+/// Predict one clustering + silhouette pass (Algorithms 5 & 6) per §5.2.
+pub fn predict_clustering(
+    n: usize,
+    k: usize,
+    r: usize,
+    p: usize,
+    machine: &Machine,
+    cluster_iters: usize,
+) -> (f64, f64) {
+    let q = (p as f64).sqrt().round().max(1.0);
+    let n_loc = n as f64 / q;
+    let (kf, rf) = (k as f64, r as f64);
+    let comp = &machine.compute;
+    let net = &machine.network;
+    let qp = q as usize;
+    // clustering per iteration: r partial similarities (2·n_loc·k²) +
+    // one k²r all_reduce + LSA O(k³)·r + median O(n_loc·k·r log r)
+    let cl_compute = cluster_iters as f64
+        * (comp.dense_seconds(rf * 2.0 * n_loc * kf * kf)
+            + comp.dense_seconds(rf * kf * kf * kf)
+            + comp.dense_seconds(n_loc * kf * rf * rf.log2().max(1.0)));
+    let cl_comm = cluster_iters as f64 * net.all_reduce(qp, (kf * kf * rf * 4.0) as usize);
+    // silhouette: k²r² inner products of length n_loc + one k²r² reduce
+    let sil_compute = comp.dense_seconds(kf * kf * rf * rf * 2.0 * n_loc);
+    let sil_comm = net.all_reduce(qp, (kf * kf * rf * rf * 4.0) as usize);
+    (cl_compute + sil_compute, cl_comm + sil_comm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strong_scaling_compute_drops_linearly() {
+        let m = Machine::cpu_cluster();
+        let t1 = predict_rescal_iter(8192, 20, 10, 1, 1.0, &m);
+        let t16 = predict_rescal_iter(8192, 20, 10, 16, 1.0, &m);
+        let ratio = t1.compute() / t16.compute();
+        assert!(ratio > 10.0 && ratio < 18.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn weak_scaling_flat_compute() {
+        let m = Machine::cpu_cluster();
+        let base = predict_rescal_iter(4096, 20, 10, 1, 1.0, &m);
+        let scaled = predict_rescal_iter(4096 * 4, 20, 10, 16, 1.0, &m);
+        let ratio = scaled.compute() / base.compute();
+        assert!(ratio > 0.9 && ratio < 1.1, "ratio={ratio}");
+    }
+
+    #[test]
+    fn comm_grows_with_p_in_weak_scaling() {
+        let m = Machine::cpu_cluster();
+        let small = predict_rescal_iter(4096, 20, 10, 4, 1.0, &m);
+        let large = predict_rescal_iter(4096 * 8, 20, 10, 256, 1.0, &m);
+        assert!(large.comm() > small.comm());
+    }
+
+    #[test]
+    fn gpu_compute_at_least_10x_faster() {
+        let cpu = Machine::cpu_cluster();
+        let gpu = Machine::gpu_cluster();
+        let tc = predict_rescal_iter(8192, 20, 10, 4, 1.0, &cpu);
+        let tg = predict_rescal_iter(8192, 20, 10, 4, 1.0, &gpu);
+        assert!(tc.compute() / tg.compute() >= 10.0);
+    }
+
+    #[test]
+    fn gpu_becomes_comm_bound_where_cpu_is_not() {
+        // paper Fig 9: GPU weak scaling is communication-dominated
+        let cpu = Machine::cpu_cluster();
+        let gpu = Machine::gpu_cluster();
+        let n = 8192 * 8;
+        let tc = predict_rescal_iter(n, 20, 10, 64, 1.0, &cpu);
+        let tg = predict_rescal_iter(n, 20, 10, 64, 1.0, &gpu);
+        let cpu_frac = tc.comm() / tc.total();
+        let gpu_frac = tg.comm() / tg.total();
+        assert!(gpu_frac > cpu_frac, "gpu {gpu_frac} vs cpu {cpu_frac}");
+        assert!(gpu_frac > 0.5, "gpu should be comm-bound: {gpu_frac}");
+    }
+
+    #[test]
+    fn sparse_comm_equals_dense_comm() {
+        // paper §4.1: intermediate factors stay dense, so communication is
+        // unchanged by sparsity
+        let m = Machine::cpu_cluster();
+        let d = predict_rescal_iter(1 << 17, 20, 10, 1024, 1.0, &m);
+        let s = predict_rescal_iter(1 << 17, 20, 10, 1024, 1e-5, &m);
+        assert!((d.comm() - s.comm()).abs() < 1e-12);
+        assert!(s.compute() < d.compute());
+    }
+
+    #[test]
+    fn k_scaling_roughly_quadratic_in_comm() {
+        // §6.3.3: O(k²) trend
+        let m = Machine::cpu_cluster();
+        let t8 = predict_rescal_iter(1 << 18, 20, 8, 1024, 1.0, &m);
+        let t64 = predict_rescal_iter(1 << 18, 20, 64, 1024, 1.0, &m);
+        let ratio = t64.total() / t8.total();
+        assert!(ratio > 6.0, "k scaling too flat: {ratio}");
+    }
+
+    #[test]
+    fn clustering_prediction_positive_and_scales() {
+        let m = Machine::cpu_cluster();
+        let (c1, m1) = predict_clustering(1 << 13, 10, 10, 4, &m, 10);
+        let (c2, m2) = predict_clustering(1 << 13, 10, 10, 64, &m, 10);
+        assert!(c1 > 0.0 && m1 > 0.0);
+        assert!(c2 < c1); // compute shrinks with p
+        assert!(m2 > m1); // comm grows with log p
+    }
+}

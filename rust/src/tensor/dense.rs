@@ -1,0 +1,539 @@
+//! Dense row-major f32 matrix with blocked, parallel GEMM.
+
+use crate::rng::Rng;
+
+/// Dense row-major single-precision matrix.
+///
+/// All pyDRESCALk factor math is f32 (the paper benchmarks in
+/// single-precision arithmetic, §6.3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+/// GEMM block sizes tuned in the §Perf pass (see EXPERIMENTS.md §Perf):
+/// MC×KC panels of A stay L2-resident, KC×NC panels of B stream through L1.
+const MC: usize = 64;
+const KC: usize = 256;
+const NC: usize = 1024;
+
+impl Mat {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Build from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Uniform random entries in [lo, hi).
+    pub fn random_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Extract column j as a vector.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Overwrite column j.
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn norm_fro(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().map(|&x| x as f64).sum::<f64>() as f32
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Elementwise `self += other`.
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise `self -= other`.
+    pub fn sub_assign(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    /// Elementwise `self *= s`.
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Elementwise product (Hadamard), in place.
+    pub fn hadamard_assign(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a *= b;
+        }
+    }
+
+    /// Fill with zeros, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// `C = A · B` allocating the output.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(self.rows, b.cols);
+        gemm(self, b, &mut c, false);
+        c
+    }
+
+    /// `C = Aᵀ · B` allocating the output.
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        // Aᵀ(k×m)·B(m? ...): self is m×k -> result k × b.cols, requires
+        // self.rows == b.rows.
+        assert_eq!(self.rows, b.rows, "t_matmul inner dim");
+        let mut c = Mat::zeros(self.cols, b.cols);
+        gemm_at_b(self, b, &mut c);
+        c
+    }
+
+    /// `C = A · Bᵀ` allocating the output.
+    pub fn matmul_t(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_t inner dim");
+        let mut c = Mat::zeros(self.rows, b.rows);
+        gemm_a_bt(self, b, &mut c);
+        c
+    }
+
+    /// Gram matrix `AᵀA` (k×k for an n×k input).
+    pub fn gram(&self) -> Mat {
+        self.t_matmul(self)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Number of worker threads for the parallel GEMM path. Cached once.
+pub fn num_threads() -> usize {
+    use std::sync::OnceLock;
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("DRESCAL_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Work threshold (in fused multiply-adds) below which GEMM stays serial.
+const PAR_THRESHOLD: usize = 1 << 20;
+
+/// `C (+)= A · B`. If `accumulate` is false, C is overwritten.
+///
+/// Blocked i-k-j kernel: the inner j-loop is a unit-stride axpy over C and
+/// B rows, which the compiler auto-vectorizes. Row blocks of C go to worker
+/// threads when the problem is large enough.
+pub fn gemm(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
+    assert_eq!(a.cols, b.rows, "gemm inner dim");
+    assert_eq!(c.rows, a.rows, "gemm out rows");
+    assert_eq!(c.cols, b.cols, "gemm out cols");
+    if !accumulate {
+        c.clear();
+    }
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let work = m * k * n;
+    let nt = num_threads();
+    if work < PAR_THRESHOLD || nt == 1 || m < 2 {
+        gemm_serial(&a.data, &b.data, &mut c.data, m, k, n);
+        return;
+    }
+    // Split C rows across threads.
+    let nt = nt.min(m);
+    let chunk = m.div_ceil(nt);
+    let a_rows: Vec<&[f32]> = a.data.chunks(chunk * k).collect();
+    let c_rows: Vec<&mut [f32]> = c.data.chunks_mut(chunk * n).collect();
+    std::thread::scope(|s| {
+        for (a_chunk, c_chunk) in a_rows.into_iter().zip(c_rows) {
+            let b_data = &b.data;
+            s.spawn(move || {
+                let rows = a_chunk.len() / k;
+                gemm_serial(a_chunk, b_data, c_chunk, rows, k, n);
+            });
+        }
+    });
+}
+
+/// Serial blocked kernel: C += A·B with A m×k, B k×n (all row-major).
+fn gemm_serial(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mb = MC.min(m - ic);
+                for i in ic..ic + mb {
+                    let arow = &a[i * k + pc..i * k + pc + kb];
+                    let crow = &mut c[i * n + jc..i * n + jc + nb];
+                    for (p, &aip) in arow.iter().enumerate() {
+                        if aip == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[(pc + p) * n + jc..(pc + p) * n + jc + nb];
+                        // unit-stride axpy — auto-vectorized
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += aip * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ · B` without materializing Aᵀ: A is m×k, B is m×n, C is k×n.
+/// The natural loop (over rows of A/B, rank-1 update of C) keeps all
+/// accesses unit-stride.
+pub fn gemm_at_b(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!(c.rows, a.cols);
+    assert_eq!(c.cols, b.cols);
+    c.clear();
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let work = m * k * n;
+    let nt = num_threads();
+    if work < PAR_THRESHOLD || nt == 1 || k < 2 {
+        atb_serial(&a.data, &b.data, &mut c.data, m, k, n, 0, k);
+        return;
+    }
+    // Parallelize over column blocks of Aᵀ == column ranges of A.
+    let nt = nt.min(k);
+    let chunk = k.div_ceil(nt);
+    let c_chunks: Vec<&mut [f32]> = c.data.chunks_mut(chunk * n).collect();
+    std::thread::scope(|s| {
+        for (t, c_chunk) in c_chunks.into_iter().enumerate() {
+            let (a_data, b_data) = (&a.data, &b.data);
+            s.spawn(move || {
+                let k0 = t * chunk;
+                let k1 = (k0 + chunk).min(k);
+                atb_serial(a_data, b_data, c_chunk, m, k, n, k0, k1);
+            });
+        }
+    });
+}
+
+/// C[k0..k1, :] += A[:, k0..k1]ᵀ·B, C buffer holds rows k0..k1 only.
+fn atb_serial(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, k0: usize, k1: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for kk in k0..k1 {
+            let av = arow[kk];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[(kk - k0) * n..(kk - k0 + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `C = A · Bᵀ`: A is m×k, B is n×k, C is m×n. Inner loop is a dot of two
+/// unit-stride rows.
+pub fn gemm_a_bt(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let work = m * k * n;
+    let nt = num_threads();
+    if work < PAR_THRESHOLD || nt == 1 || m < 2 {
+        abt_serial(&a.data, &b.data, &mut c.data, m, k, n);
+        return;
+    }
+    let nt = nt.min(m);
+    let chunk = m.div_ceil(nt);
+    let a_chunks: Vec<&[f32]> = a.data.chunks(chunk * k).collect();
+    let c_chunks: Vec<&mut [f32]> = c.data.chunks_mut(chunk * n).collect();
+    std::thread::scope(|s| {
+        for (a_chunk, c_chunk) in a_chunks.into_iter().zip(c_chunks) {
+            let b_data = &b.data;
+            s.spawn(move || {
+                let rows = a_chunk.len() / k;
+                abt_serial(a_chunk, b_data, c_chunk, rows, k, n);
+            });
+        }
+    });
+}
+
+fn abt_serial(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0.0f64;
+                for p in 0..a.cols() {
+                    acc += a[(i, p)] as f64 * b[(p, j)] as f64;
+                }
+                c[(i, j)] = acc as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random_shapes() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 9, 33), (64, 64, 64), (70, 130, 50)] {
+            let a = Mat::random_uniform(m, k, -1.0, 1.0, &mut rng);
+            let b = Mat::random_uniform(k, n, -1.0, 1.0, &mut rng);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert_close(got.as_slice(), want.as_slice(), 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_parallel_path_matches_naive() {
+        let mut rng = Rng::new(2);
+        // big enough to take the threaded path
+        let (m, k, n) = (150, 120, 110);
+        let a = Mat::random_uniform(m, k, -1.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(k, n, -1.0, 1.0, &mut rng);
+        let got = a.matmul(&b);
+        let want = naive_matmul(&a, &b);
+        assert_close(got.as_slice(), want.as_slice(), 1e-3);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(4, 3, 5), (33, 7, 11), (120, 40, 60)] {
+            let a = Mat::random_uniform(m, k, 0.0, 1.0, &mut rng);
+            let b = Mat::random_uniform(m, n, 0.0, 1.0, &mut rng);
+            let got = a.t_matmul(&b);
+            let want = a.transpose().matmul(&b);
+            assert_close(got.as_slice(), want.as_slice(), 1e-3);
+        }
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit_transpose() {
+        let mut rng = Rng::new(4);
+        for &(m, k, n) in &[(4, 3, 5), (33, 7, 11), (100, 50, 80)] {
+            let a = Mat::random_uniform(m, k, 0.0, 1.0, &mut rng);
+            let b = Mat::random_uniform(n, k, 0.0, 1.0, &mut rng);
+            let got = a.matmul_t(&b);
+            let want = a.matmul(&b.transpose());
+            assert_close(got.as_slice(), want.as_slice(), 1e-3);
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric() {
+        let mut rng = Rng::new(5);
+        let a = Mat::random_uniform(40, 8, 0.0, 1.0, &mut rng);
+        let g = a.gram();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(6);
+        let a = Mat::random_uniform(37, 53, -1.0, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gemm_accumulate() {
+        let a = Mat::eye(3);
+        let b = Mat::full(3, 3, 2.0);
+        let mut c = Mat::full(3, 3, 1.0);
+        gemm(&a, &b, &mut c, true);
+        assert_eq!(c.as_slice(), &[3.0f32; 9][..]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(7);
+        let a = Mat::random_uniform(9, 9, -1.0, 1.0, &mut rng);
+        let i = Mat::eye(9);
+        assert_close(a.matmul(&i).as_slice(), a.as_slice(), 1e-6);
+        assert_close(i.matmul(&a).as_slice(), a.as_slice(), 1e-6);
+    }
+
+    #[test]
+    fn norm_fro_known() {
+        let a = Mat::from_vec(2, 2, vec![3.0, 4.0, 0.0, 0.0]);
+        assert!((a.norm_fro() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let mut a = Mat::from_vec(1, 3, vec![1., 2., 3.]);
+        let b = Mat::from_vec(1, 3, vec![4., 5., 6.]);
+        a.add_assign(&b);
+        assert_eq!(a.as_slice(), &[5., 7., 9.]);
+        a.sub_assign(&b);
+        assert_eq!(a.as_slice(), &[1., 2., 3.]);
+        a.hadamard_assign(&b);
+        assert_eq!(a.as_slice(), &[4., 10., 18.]);
+        a.scale(0.5);
+        assert_eq!(a.as_slice(), &[2., 5., 9.]);
+    }
+
+    #[test]
+    fn col_get_set() {
+        let mut a = Mat::zeros(3, 2);
+        a.set_col(1, &[1., 2., 3.]);
+        assert_eq!(a.col(1), vec![1., 2., 3.]);
+        assert_eq!(a.col(0), vec![0., 0., 0.]);
+    }
+}

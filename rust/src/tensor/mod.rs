@@ -1,0 +1,16 @@
+//! Dense and sparse tensor substrate.
+//!
+//! pyDRESCALk's runtime is GEMM-dominated (paper §6.3.1: "run times are
+//! dominated by matrix multiplication"), so this module carries a blocked,
+//! thread-parallel single-precision GEMM plus the small set of elementwise
+//! multiplicative-update primitives, a third-order tensor stored as
+//! relation slices, and a CSR sparse matrix for the sparse experiments.
+
+pub mod dense;
+pub mod ops;
+pub mod sparse;
+pub mod tensor3;
+
+pub use dense::Mat;
+pub use sparse::Csr;
+pub use tensor3::Tensor3;

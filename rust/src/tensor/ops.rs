@@ -1,0 +1,211 @@
+//! Elementwise multiplicative-update primitives and column utilities.
+//!
+//! These are the non-GEMM pieces of Equation 2 of the paper: the fused
+//! `factor *= numerator / (denominator + ε)` update, column normalization
+//! (the ‖A_i‖ = 1 constraint with inverse scaling folded into R), and the
+//! cosine-similarity helpers used by clustering and silhouettes.
+
+use super::dense::Mat;
+
+/// ε guarding divisions, as in the paper (§2.2: ε ≈ 1e-16 in f64; we run
+/// f32 so use the f32-representable equivalent).
+pub const MU_EPS: f32 = 1e-16;
+
+/// Fused multiplicative update: `target *= num / (deno + eps)`.
+pub fn mu_update(target: &mut Mat, num: &Mat, deno: &Mat, eps: f32) {
+    assert_eq!(target.shape(), num.shape());
+    assert_eq!(target.shape(), deno.shape());
+    let t = target.as_mut_slice();
+    let n = num.as_slice();
+    let d = deno.as_slice();
+    for i in 0..t.len() {
+        t[i] *= n[i] / (d[i] + eps);
+    }
+}
+
+/// Column L2 norms of an n×k matrix.
+pub fn col_norms(a: &Mat) -> Vec<f32> {
+    let (n, k) = a.shape();
+    let mut acc = vec![0.0f64; k];
+    for i in 0..n {
+        let row = a.row(i);
+        for (j, &v) in row.iter().enumerate() {
+            acc[j] += (v as f64) * (v as f64);
+        }
+    }
+    acc.into_iter().map(|x| x.sqrt() as f32).collect()
+}
+
+/// Normalize columns of A to unit L2 norm, returning the scales. Columns
+/// with zero norm are left untouched (scale 1).
+pub fn normalize_cols(a: &mut Mat) -> Vec<f32> {
+    let norms = col_norms(a);
+    let (n, k) = a.shape();
+    let scales: Vec<f32> = norms.iter().map(|&x| if x > 0.0 { x } else { 1.0 }).collect();
+    for i in 0..n {
+        let row = a.row_mut(i);
+        for j in 0..k {
+            row[j] /= scales[j];
+        }
+    }
+    scales
+}
+
+/// Apply the inverse of a column scaling of A to a core slice R_t:
+/// X ≈ A R Aᵀ = (A S⁻¹)(S R Sᵀ)(A S⁻¹)ᵀ, so R_t ← S R_t S.
+pub fn rescale_core(r_t: &mut Mat, scales: &[f32]) {
+    let (k, k2) = r_t.shape();
+    assert_eq!(k, k2);
+    assert_eq!(scales.len(), k);
+    for i in 0..k {
+        for j in 0..k {
+            r_t[(i, j)] *= scales[i] * scales[j];
+        }
+    }
+}
+
+/// Cosine similarity between columns of M (n×k) and columns of A (n×k):
+/// result[(i, j)] = cos(M[:,i], A[:,j]).
+pub fn cosine_similarity(m: &Mat, a: &Mat) -> Mat {
+    assert_eq!(m.rows(), a.rows());
+    let mut sim = m.t_matmul(a); // MᵀA
+    let mn = col_norms(m);
+    let an = col_norms(a);
+    for i in 0..sim.rows() {
+        for j in 0..sim.cols() {
+            let d = mn[i] * an[j];
+            sim[(i, j)] = if d > 0.0 { sim[(i, j)] / d } else { 0.0 };
+        }
+    }
+    sim
+}
+
+/// Clamp all entries below `floor` up to `floor` (keeps MU iterates strictly
+/// positive so zero-locking cannot occur from numeric underflow).
+pub fn clamp_min(a: &mut Mat, floor: f32) {
+    for v in a.as_mut_slice() {
+        if *v < floor {
+            *v = floor;
+        }
+    }
+}
+
+/// True if every entry is finite and ≥ 0.
+pub fn is_nonnegative(a: &Mat) -> bool {
+    a.as_slice().iter().all(|&v| v.is_finite() && v >= 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn mu_update_basic() {
+        let mut t = Mat::from_vec(1, 3, vec![2.0, 4.0, 8.0]);
+        let num = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let deno = Mat::from_vec(1, 3, vec![2.0, 4.0, 6.0]);
+        mu_update(&mut t, &num, &deno, 0.0);
+        assert_close(t.as_slice(), &[1.0, 2.0, 4.0], 1e-6);
+    }
+
+    #[test]
+    fn mu_update_preserves_nonnegativity() {
+        let mut rng = Rng::new(20);
+        let mut t = Mat::random_uniform(10, 10, 0.0, 1.0, &mut rng);
+        let num = Mat::random_uniform(10, 10, 0.0, 1.0, &mut rng);
+        let deno = Mat::random_uniform(10, 10, 0.0, 1.0, &mut rng);
+        mu_update(&mut t, &num, &deno, MU_EPS);
+        assert!(is_nonnegative(&t));
+    }
+
+    #[test]
+    fn mu_update_eps_guards_zero_division() {
+        let mut t = Mat::from_vec(1, 1, vec![1.0]);
+        let num = Mat::from_vec(1, 1, vec![1.0]);
+        let deno = Mat::from_vec(1, 1, vec![0.0]);
+        mu_update(&mut t, &num, &deno, MU_EPS);
+        assert!(t[(0, 0)].is_finite());
+    }
+
+    #[test]
+    fn normalize_cols_unit_norm() {
+        let mut rng = Rng::new(21);
+        let mut a = Mat::random_uniform(20, 5, 0.1, 1.0, &mut rng);
+        let orig = a.clone();
+        let scales = normalize_cols(&mut a);
+        for n in col_norms(&a) {
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+        // scales reproduce the original
+        for j in 0..5 {
+            for i in 0..20 {
+                assert!((a[(i, j)] * scales[j] - orig[(i, j)]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_zero_column_is_noop() {
+        let mut a = Mat::zeros(4, 2);
+        a.set_col(1, &[3.0, 4.0, 0.0, 0.0]);
+        let scales = normalize_cols(&mut a);
+        assert_eq!(scales[0], 1.0);
+        assert!((scales[1] - 5.0).abs() < 1e-6);
+        assert_eq!(a.col(0), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn rescale_core_restores_product() {
+        // (A S⁻¹)(S R S)(A S⁻¹)ᵀ == A R Aᵀ
+        let mut rng = Rng::new(22);
+        let a0 = Mat::random_uniform(6, 3, 0.1, 1.0, &mut rng);
+        let r0 = Mat::random_uniform(3, 3, 0.1, 1.0, &mut rng);
+        let want = a0.matmul(&r0).matmul_t(&a0);
+        let mut a = a0.clone();
+        let scales = normalize_cols(&mut a);
+        let mut r = r0.clone();
+        rescale_core(&mut r, &scales);
+        let got = a.matmul(&r).matmul_t(&a);
+        assert_close(got.as_slice(), want.as_slice(), 1e-4);
+    }
+
+    #[test]
+    fn cosine_similarity_self_is_one_diag() {
+        let mut rng = Rng::new(23);
+        let a = Mat::random_uniform(30, 4, 0.1, 1.0, &mut rng);
+        let sim = cosine_similarity(&a, &a);
+        for i in 0..4 {
+            assert!((sim[(i, i)] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cosine_similarity_orthogonal_cols() {
+        let mut a = Mat::zeros(4, 2);
+        a.set_col(0, &[1.0, 0.0, 0.0, 0.0]);
+        a.set_col(1, &[0.0, 1.0, 0.0, 0.0]);
+        let sim = cosine_similarity(&a, &a);
+        assert!((sim[(0, 1)]).abs() < 1e-6);
+        assert!((sim[(1, 0)]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_similarity_range() {
+        let mut rng = Rng::new(24);
+        let m = Mat::random_uniform(10, 3, -1.0, 1.0, &mut rng);
+        let a = Mat::random_uniform(10, 5, -1.0, 1.0, &mut rng);
+        let sim = cosine_similarity(&m, &a);
+        for &v in sim.as_slice() {
+            assert!(v >= -1.0 - 1e-5 && v <= 1.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn clamp_min_floors() {
+        let mut a = Mat::from_vec(1, 3, vec![-1.0, 0.0, 2.0]);
+        clamp_min(&mut a, 0.5);
+        assert_eq!(a.as_slice(), &[0.5, 0.5, 2.0]);
+    }
+}

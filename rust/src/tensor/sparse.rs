@@ -1,0 +1,348 @@
+//! CSR sparse matrix for the sparse-tensor experiments.
+//!
+//! The paper stores sparse X in compressed-sparse-row format (§4.1) and
+//! notes that all products involving X against the dense factors produce
+//! dense results, so communication volume is unchanged versus dense — only
+//! local compute shrinks with density. This module supplies exactly those
+//! products: `CSR·dense`, `CSRᵀ·dense`, plus perturbation over the nonzero
+//! pattern (Alg 4's sparse branch).
+
+use super::dense::Mat;
+use crate::rng::Rng;
+
+/// Compressed sparse row matrix (f32 values).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// row i's entries live in indices `indptr[i]..indptr[i+1]`
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from COO triplets (row, col, value). Duplicates are summed.
+    pub fn from_triplets(rows: usize, cols: usize, mut trips: Vec<(usize, usize, f32)>) -> Self {
+        trips.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(trips.len());
+        let mut values: Vec<f32> = Vec::with_capacity(trips.len());
+        for &(r, c, v) in &trips {
+            assert!(r < rows && c < cols, "triplet out of bounds");
+            if !indices.is_empty()
+                && *indptr.get(r + 1).unwrap() > indptr[r]
+                && indices.last() == Some(&c)
+                && indptr[r + 1] == indices.len()
+            {
+                // same (r, c) as previous entry of the same row: accumulate
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(c);
+                values.push(v);
+                indptr[r + 1] = indices.len();
+            }
+        }
+        // make indptr cumulative over empty rows
+        for i in 1..=rows {
+            if indptr[i] < indptr[i - 1] {
+                indptr[i] = indptr[i - 1];
+            }
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Convert a dense matrix, keeping entries with |v| > 0.
+    pub fn from_dense(a: &Mat) -> Self {
+        let mut trips = Vec::new();
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                let v = a[(i, j)];
+                if v != 0.0 {
+                    trips.push((i, j, v));
+                }
+            }
+        }
+        Csr::from_triplets(a.rows(), a.cols(), trips)
+    }
+
+    /// Random sparse non-negative matrix with the given density.
+    pub fn random(rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Self {
+        let nnz_target = ((rows * cols) as f64 * density).round() as usize;
+        let mut trips = Vec::with_capacity(nnz_target);
+        for _ in 0..nnz_target {
+            let r = rng.below(rows);
+            let c = rng.below(cols);
+            trips.push((r, c, rng.uniform_f32() + 0.01));
+        }
+        Csr::from_triplets(rows, cols, trips)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fill fraction.
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows * self.cols) as f64
+        }
+    }
+
+    /// Densify (for small tests only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                m[(i, self.indices[idx])] += self.values[idx];
+            }
+        }
+        m
+    }
+
+    /// Transposed copy (CSR of the transpose, built by counting sort).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            counts[c + 1] += 1;
+        }
+        for i in 1..=self.cols {
+            counts[i] += counts[i - 1];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0usize; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        for i in 0..self.rows {
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let c = self.indices[idx];
+                let dst = cursor[c];
+                cursor[c] += 1;
+                indices[dst] = i;
+                values[dst] = self.values[idx];
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// `C = self · B` with dense B — the sparse hot path (X_t · A).
+    pub fn matmul_dense(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows(), "spmm inner dim");
+        let n = b.cols();
+        let mut c = Mat::zeros(self.rows, n);
+        let nt = crate::tensor::dense::num_threads();
+        if self.nnz() * n < (1 << 20) || nt == 1 || self.rows < 2 {
+            self.spmm_rows(b, &mut c, 0, self.rows);
+            return c;
+        }
+        let nt = nt.min(self.rows);
+        let chunk = self.rows.div_ceil(nt);
+        let c_chunks: Vec<&mut [f32]> = c.as_mut_slice().chunks_mut(chunk * n).collect();
+        std::thread::scope(|s| {
+            for (t, c_chunk) in c_chunks.into_iter().enumerate() {
+                let me = &self;
+                s.spawn(move || {
+                    let r0 = t * chunk;
+                    let r1 = (r0 + chunk).min(me.rows);
+                    me.spmm_rows_into(b, c_chunk, r0, r1);
+                });
+            }
+        });
+        c
+    }
+
+    fn spmm_rows(&self, b: &Mat, c: &mut Mat, r0: usize, r1: usize) {
+        let n = b.cols();
+        let buf = &mut c.as_mut_slice()[r0 * n..r1 * n];
+        self.spmm_rows_into(b, buf, r0, r1);
+    }
+
+    /// C rows r0..r1 (buffer holds only those rows) += X[r0..r1,:]·B.
+    fn spmm_rows_into(&self, b: &Mat, c: &mut [f32], r0: usize, r1: usize) {
+        let n = b.cols();
+        for i in r0..r1 {
+            let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let v = self.values[idx];
+                let brow = b.row(self.indices[idx]);
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += v * bv;
+                }
+            }
+        }
+    }
+
+    /// `C = selfᵀ · B` without materializing the transpose.
+    pub fn t_matmul_dense(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows(), "spmm_t inner dim");
+        let n = b.cols();
+        let mut c = Mat::zeros(self.cols, n);
+        // scatter: for each nonzero (i, j, v): C[j, :] += v * B[i, :]
+        let cd = c.as_mut_slice();
+        for i in 0..self.rows {
+            let brow = b.row(i);
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let j = self.indices[idx];
+                let v = self.values[idx];
+                let crow = &mut cd[j * n..(j + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += v * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// Multiply every stored value by a fresh uniform factor in
+    /// [1−δ, 1+δ] — the sparse branch of Alg 4 (perturb nonzeros only).
+    pub fn perturb(&self, delta: f32, rng: &mut Rng) -> Csr {
+        let mut out = self.clone();
+        for v in out.values.iter_mut() {
+            *v *= rng.uniform_range(1.0 - delta, 1.0 + delta);
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn norm_fro(&self) -> f32 {
+        self.values.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Extract the tile rows r0..r1 × cols c0..c1 as a new CSR (local rank
+    /// tile in the 2D grid layout).
+    pub fn tile(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Csr {
+        let mut trips = Vec::new();
+        for i in r0..r1 {
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let c = self.indices[idx];
+                if c >= c0 && c < c1 {
+                    trips.push((i - r0, c - c0, self.values[idx]));
+                }
+            }
+        }
+        Csr::from_triplets(r1 - r0, c1 - c0, trips)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    fn sample() -> Csr {
+        Csr::from_triplets(3, 4, vec![(0, 1, 2.0), (1, 0, 3.0), (1, 3, 4.0), (2, 2, 5.0)])
+    }
+
+    #[test]
+    fn from_triplets_and_to_dense() {
+        let s = sample();
+        assert_eq!(s.nnz(), 4);
+        let d = s.to_dense();
+        assert_eq!(d[(0, 1)], 2.0);
+        assert_eq!(d[(1, 0)], 3.0);
+        assert_eq!(d[(1, 3)], 4.0);
+        assert_eq!(d[(2, 2)], 5.0);
+        assert_eq!(d.sum(), 14.0);
+    }
+
+    #[test]
+    fn duplicate_triplets_sum() {
+        let s = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0)]);
+        assert_eq!(s.to_dense()[(0, 0)], 3.0);
+        assert_eq!(s.nnz(), 1);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::new(30);
+        let d = Mat::random_uniform(7, 5, 0.0, 1.0, &mut rng);
+        let s = Csr::from_dense(&d);
+        assert_close(s.to_dense().as_slice(), d.as_slice(), 1e-6);
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let s = sample();
+        let t = s.transpose();
+        assert_eq!(t.rows(), 4);
+        assert_eq!(t.cols(), 3);
+        assert_close(
+            t.to_dense().as_slice(),
+            s.to_dense().transpose().as_slice(),
+            1e-6,
+        );
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Rng::new(31);
+        let s = Csr::random(40, 30, 0.1, &mut rng);
+        let b = Mat::random_uniform(30, 8, -1.0, 1.0, &mut rng);
+        let got = s.matmul_dense(&b);
+        let want = s.to_dense().matmul(&b);
+        assert_close(got.as_slice(), want.as_slice(), 1e-4);
+    }
+
+    #[test]
+    fn spmm_t_matches_dense() {
+        let mut rng = Rng::new(32);
+        let s = Csr::random(40, 30, 0.1, &mut rng);
+        let b = Mat::random_uniform(40, 8, -1.0, 1.0, &mut rng);
+        let got = s.t_matmul_dense(&b);
+        let want = s.to_dense().transpose().matmul(&b);
+        assert_close(got.as_slice(), want.as_slice(), 1e-4);
+    }
+
+    #[test]
+    fn random_density() {
+        let mut rng = Rng::new(33);
+        let s = Csr::random(100, 100, 0.05, &mut rng);
+        // duplicates collapse, so nnz ≤ target; should be close
+        assert!(s.nnz() > 400 && s.nnz() <= 500, "nnz={}", s.nnz());
+    }
+
+    #[test]
+    fn perturb_keeps_pattern_and_bounds() {
+        let mut rng = Rng::new(34);
+        let s = Csr::random(20, 20, 0.2, &mut rng);
+        let p = s.perturb(0.03, &mut rng);
+        assert_eq!(p.nnz(), s.nnz());
+        for (a, b) in s.values.iter().zip(&p.values) {
+            let ratio = b / a;
+            assert!(ratio >= 0.97 - 1e-5 && ratio <= 1.03 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn tile_matches_dense_tile() {
+        let mut rng = Rng::new(35);
+        let s = Csr::random(16, 16, 0.3, &mut rng);
+        let t = s.tile(4, 12, 8, 16);
+        let d = s.to_dense();
+        let want = Mat::from_fn(8, 8, |i, j| d[(4 + i, 8 + j)]);
+        assert_close(t.to_dense().as_slice(), want.as_slice(), 1e-6);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let s = Csr::from_triplets(5, 5, vec![(4, 4, 1.0)]);
+        assert_eq!(s.nnz(), 1);
+        let b = Mat::eye(5);
+        let c = s.matmul_dense(&b);
+        assert_eq!(c[(4, 4)], 1.0);
+        assert_eq!(c.sum(), 1.0);
+    }
+}

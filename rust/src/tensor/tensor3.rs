@@ -1,0 +1,184 @@
+//! Third-order tensor stored as relation slices.
+//!
+//! pyDRESCALk's Algorithm 3 walks the tensor slice-by-slice along the
+//! relation axis (m), so `Tensor3` stores `m` dense `n1×n2` matrices. This
+//! matches the paper's "slice the tensor into matrices and perform matrix
+//! operations" design (§4.1).
+
+use super::dense::Mat;
+use crate::rng::Rng;
+
+/// Dense third-order tensor `n1 × n2 × m` stored as `m` frontal slices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor3 {
+    n1: usize,
+    n2: usize,
+    slices: Vec<Mat>,
+}
+
+impl Tensor3 {
+    /// Zero tensor.
+    pub fn zeros(n1: usize, n2: usize, m: usize) -> Self {
+        Tensor3 { n1, n2, slices: (0..m).map(|_| Mat::zeros(n1, n2)).collect() }
+    }
+
+    /// Build from existing slices (all must share a shape).
+    pub fn from_slices(slices: Vec<Mat>) -> Self {
+        assert!(!slices.is_empty(), "tensor needs at least one slice");
+        let (n1, n2) = slices[0].shape();
+        assert!(slices.iter().all(|s| s.shape() == (n1, n2)), "ragged slices");
+        Tensor3 { n1, n2, slices }
+    }
+
+    /// Uniform random tensor in [lo, hi).
+    pub fn random_uniform(n1: usize, n2: usize, m: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        Tensor3 {
+            n1,
+            n2,
+            slices: (0..m).map(|_| Mat::random_uniform(n1, n2, lo, hi, rng)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn n1(&self) -> usize {
+        self.n1
+    }
+
+    #[inline]
+    pub fn n2(&self) -> usize {
+        self.n2
+    }
+
+    /// Number of relation slices.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.slices.len()
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.n1, self.n2, self.m())
+    }
+
+    #[inline]
+    pub fn slice(&self, t: usize) -> &Mat {
+        &self.slices[t]
+    }
+
+    #[inline]
+    pub fn slice_mut(&mut self, t: usize) -> &mut Mat {
+        &mut self.slices[t]
+    }
+
+    pub fn slices(&self) -> &[Mat] {
+        &self.slices
+    }
+
+    /// Frobenius norm over all slices.
+    pub fn norm_fro(&self) -> f32 {
+        let ss: f64 = self
+            .slices
+            .iter()
+            .map(|s| {
+                let n = s.norm_fro() as f64;
+                n * n
+            })
+            .sum();
+        ss.sqrt() as f32
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.n1 * self.n2 * self.m()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Extract the sub-tensor with rows `r0..r1` and cols `c0..c1` of every
+    /// slice — the local tile a virtual rank owns in the 2D grid layout.
+    pub fn tile(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Tensor3 {
+        assert!(r1 <= self.n1 && c1 <= self.n2 && r0 <= r1 && c0 <= c1);
+        let slices = self
+            .slices
+            .iter()
+            .map(|s| {
+                Mat::from_fn(r1 - r0, c1 - c0, |i, j| s[(r0 + i, c0 + j)])
+            })
+            .collect();
+        Tensor3 { n1: r1 - r0, n2: c1 - c0, slices }
+    }
+
+    /// Relative reconstruction error `‖X − A R Aᵀ‖_F / ‖X‖_F`.
+    pub fn rel_error(&self, a: &Mat, r: &Tensor3) -> f32 {
+        assert_eq!(r.m(), self.m());
+        let mut num = 0.0f64;
+        for t in 0..self.m() {
+            let ar = a.matmul(r.slice(t));
+            let rec = ar.matmul_t(a); // A R_t Aᵀ
+            let mut diff = self.slice(t).clone();
+            diff.sub_assign(&rec);
+            let d = diff.norm_fro() as f64;
+            num += d * d;
+        }
+        (num.sqrt() / self.norm_fro() as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_len() {
+        let t = Tensor3::zeros(4, 5, 3);
+        assert_eq!(t.shape(), (4, 5, 3));
+        assert_eq!(t.len(), 60);
+    }
+
+    #[test]
+    fn tile_extraction() {
+        let mut t = Tensor3::zeros(4, 4, 2);
+        t.slice_mut(1)[(2, 3)] = 7.0;
+        let tile = t.tile(2, 4, 2, 4);
+        assert_eq!(tile.shape(), (2, 2, 2));
+        assert_eq!(tile.slice(1)[(0, 1)], 7.0);
+    }
+
+    #[test]
+    fn tiles_partition_norm() {
+        let mut rng = Rng::new(8);
+        let t = Tensor3::random_uniform(6, 6, 2, 0.0, 1.0, &mut rng);
+        let mut ss = 0.0f64;
+        for (r0, r1) in [(0, 3), (3, 6)] {
+            for (c0, c1) in [(0, 3), (3, 6)] {
+                let n = t.tile(r0, r1, c0, c1).norm_fro() as f64;
+                ss += n * n;
+            }
+        }
+        assert!((ss.sqrt() as f32 - t.norm_fro()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rel_error_zero_for_exact_factorization() {
+        let mut rng = Rng::new(9);
+        let a = Mat::random_uniform(8, 3, 0.0, 1.0, &mut rng);
+        let r = Tensor3::random_uniform(3, 3, 2, 0.0, 1.0, &mut rng);
+        // X = A R Aᵀ exactly
+        let slices = (0..2)
+            .map(|t| a.matmul(r.slice(t)).matmul_t(&a))
+            .collect();
+        let x = Tensor3::from_slices(slices);
+        assert!(x.rel_error(&a, &r) < 1e-5);
+    }
+
+    #[test]
+    fn rel_error_one_for_zero_factors() {
+        let mut rng = Rng::new(10);
+        let x = Tensor3::random_uniform(6, 6, 2, 0.1, 1.0, &mut rng);
+        let a = Mat::zeros(6, 2);
+        let r = Tensor3::zeros(2, 2, 2);
+        assert!((x.rel_error(&a, &r) - 1.0).abs() < 1e-6);
+    }
+}

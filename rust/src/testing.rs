@@ -1,0 +1,78 @@
+//! Test support: tolerance assertions and a seeded property-test harness.
+//!
+//! The offline crate set has no `proptest`, so property-style tests use
+//! [`property`] — a fixed number of seeded random cases with the failing
+//! seed printed for reproduction. Coverage style is the same (randomized
+//! inputs, invariant assertions); there is no shrinking, but every failure
+//! is replayable from the printed seed.
+
+use crate::rng::Rng;
+
+/// Assert two slices are elementwise close with a mixed abs/rel tolerance.
+pub fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch: {} vs {}", got.len(), want.len());
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let scale = 1.0f32.max(w.abs());
+        assert!(
+            (g - w).abs() <= tol * scale,
+            "mismatch at {i}: got {g}, want {w} (tol {tol}, scale {scale})"
+        );
+    }
+}
+
+/// Assert two scalars are close.
+pub fn assert_close_scalar(got: f32, want: f32, tol: f32) {
+    let scale = 1.0f32.max(want.abs());
+    assert!((got - want).abs() <= tol * scale, "got {got}, want {want} (tol {tol})");
+}
+
+/// Run `cases` seeded random test cases. On panic the failing seed is in
+/// the message: rerun with `property_seeded(seed, 1, f)`.
+pub fn property(cases: u64, mut f: impl FnMut(&mut Rng)) {
+    property_seeded(0xD5EA5CA1, cases, &mut f)
+}
+
+/// Same with an explicit base seed.
+pub fn property_seeded(base_seed: u64, cases: u64, f: &mut impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property case {case} FAILED with seed {seed:#x}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_rejects_far() {
+        assert_close(&[1.0], &[2.0], 1e-3);
+    }
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        property(10, |_| count += 1);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn property_seeds_are_deterministic() {
+        let mut first = Vec::new();
+        property(3, |rng| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        property(3, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,129 @@
+//! CLI integration: drive the `drescal` binary end to end.
+
+use std::process::Command;
+
+fn drescal() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_drescal"))
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = drescal().args(args).output().expect("spawn drescal");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    for sub in ["run", "model-select", "exascale", "artifacts"] {
+        assert!(text.contains(sub), "help missing {sub}");
+    }
+}
+
+#[test]
+fn no_args_prints_help() {
+    let out = drescal().output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"));
+}
+
+#[test]
+fn run_blocks_converges() {
+    let (ok, text) = run(&[
+        "run", "--data", "blocks", "--n", "32", "--m", "2", "--k-true", "3", "--k", "3",
+        "--p", "4", "--iters", "200", "--seed", "5",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("rel_error"), "{text}");
+    // breakdown printed when tracing (default)
+    assert!(text.contains("matrix_mul"), "{text}");
+    // extract the error and check it converged
+    let err: f32 = text
+        .split("rel_error=")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .expect("parse rel_error");
+    assert!(err < 0.15, "rel_error={err}");
+}
+
+#[test]
+fn run_sparse_path() {
+    let (ok, text) = run(&[
+        "run", "--data", "synthetic", "--n", "48", "--m", "2", "--k-true", "3", "--k", "3",
+        "--density", "0.05", "--p", "4", "--iters", "30",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("matrix_mul_sparse"), "sparse path not traced: {text}");
+}
+
+#[test]
+fn model_select_recovers_k() {
+    let (ok, text) = run(&[
+        "model-select", "--data", "blocks", "--n", "24", "--m", "2", "--k-true", "3",
+        "--k-min", "2", "--k-max", "4", "--perturbations", "5", "--iters", "200",
+        "--p", "4", "--seed", "1",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("k_opt = 3"), "{text}");
+    assert!(text.contains("matches the dataset's ground truth"), "{text}");
+}
+
+#[test]
+fn exascale_replay_runs() {
+    let (ok, text) = run(&["exascale", "--machine", "cpu"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Fig 13a"), "{text}");
+    assert!(text.contains("comm%"), "{text}");
+}
+
+#[test]
+fn artifacts_lists_manifest() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let (ok, text) = run(&["artifacts", "--artifacts", dir.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("slice_segment"), "{text}");
+    assert!(text.contains("gram"), "{text}");
+}
+
+#[test]
+fn config_file_round_trip() {
+    let dir = std::env::temp_dir().join(format!("drescal_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("run.json");
+    std::fs::write(
+        &cfg,
+        r#"{"data": "blocks", "n": 24, "m": 2, "k-true": 2, "k": 2, "p": 1, "iters": 50}"#,
+    )
+    .unwrap();
+    let (ok, text) = run(&["run", "--config", cfg.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("n=24"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bad_flags_are_reported() {
+    let (ok, text) = run(&["run", "--p", "notanumber"]);
+    assert!(!ok);
+    assert!(text.contains("--p expects an integer"), "{text}");
+    let (ok, text) = run(&["run", "--backend", "cuda"]);
+    assert!(!ok);
+    assert!(text.contains("unknown backend"), "{text}");
+}

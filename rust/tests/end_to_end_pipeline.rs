@@ -1,0 +1,69 @@
+//! End-to-end integration over all three layers: the distributed RESCAL
+//! hot path executing the AOT JAX+Pallas artifacts through PJRT, inside
+//! the virtual-MPI grid, must converge and agree with the native backend.
+//!
+//! Requires `make artifacts` (skips when absent).
+
+use drescal::backend::{native::NativeBackend, xla::XlaBackend, Backend};
+use drescal::comm::grid::run_on_grid;
+use drescal::comm::Trace;
+use drescal::data::synthetic;
+use drescal::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
+use drescal::rescal::{LocalTile, RescalOptions};
+
+fn artifact_dir() -> Option<String> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir.to_string_lossy().into_owned())
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+/// n=64 on a 2×2 grid gives 32×32 tiles — exactly the tile size baked into
+/// the default artifact set, so the XLA backend serves the hot path.
+#[test]
+fn distributed_rescal_over_pjrt_artifacts() {
+    let Some(dir) = artifact_dir() else { return };
+    let n = 64;
+    let k = 4;
+    let planted = synthetic::block_tensor(n, 3, k, 0.01, 1000);
+    let x = planted.x.clone();
+    let opts = RescalOptions::new(k, 150);
+
+    let run = |use_xla: bool| {
+        run_on_grid(4, |ctx| {
+            let (r0, r1) = ctx.grid.chunk(n, ctx.row);
+            let (c0, c1) = ctx.grid.chunk(n, ctx.col);
+            let tile = LocalTile::Dense(x.tile(r0, r1, c0, c1));
+            let cfg = DistRescalConfig {
+                opts: opts.clone(),
+                init: DistInit::Random { seed: 12 },
+                n,
+            };
+            let mut trace = Trace::new();
+            if use_xla {
+                let mut backend = XlaBackend::new(&dir).expect("xla backend");
+                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+                (out.rel_error, backend.hits, backend.fallbacks)
+            } else {
+                let mut backend = NativeBackend::new();
+                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+                (out.rel_error, 0, 0)
+            }
+        })
+    };
+
+    let xla_results = run(true);
+    let native_results = run(false);
+    for ((xe, hits, fallbacks), (ne, _, _)) in xla_results.iter().zip(&native_results) {
+        // the artifact path must carry the hot loop
+        assert!(*hits > 0, "no PJRT executions recorded");
+        eprintln!("rel_error xla={xe:.4} native={ne:.4} hits={hits} fallbacks={fallbacks}");
+        // both backends implement the same math
+        assert!((xe - ne).abs() < 5e-3, "xla {xe} vs native {ne}");
+        // and the factorization is good
+        assert!(*xe < 0.15, "rel_error={xe}");
+    }
+}

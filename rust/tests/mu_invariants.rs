@@ -1,0 +1,154 @@
+//! Property tests on the multiplicative-update invariants that the
+//! paper's convergence argument rests on (Lee & Seung monotonicity,
+//! non-negativity closure, scale consistency), across random shapes,
+//! ranks, grids, and data — the proptest-style coverage layer
+//! (`drescal::testing::property`, seeded and replayable).
+
+use drescal::backend::native::NativeBackend;
+use drescal::comm::grid::run_on_grid;
+use drescal::comm::Trace;
+use drescal::data::synthetic;
+use drescal::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
+use drescal::rescal::{rescal_seq, Init, LocalTile, RescalOptions};
+use drescal::tensor::ops::is_nonnegative;
+use drescal::tensor::Tensor3;
+use drescal::testing::property;
+
+#[test]
+fn mu_error_never_increases_random_tensors() {
+    // monotone descent on arbitrary non-negative data (not just planted)
+    property(6, |rng| {
+        let n = 8 + rng.below(12);
+        let m = 1 + rng.below(3);
+        let k = 2 + rng.below(3);
+        let x = Tensor3::random_uniform(n, n, m, 0.0, 1.0, rng);
+        let seed = rng.next_u64();
+        let e5 = rescal_seq(&x, &RescalOptions::new(k, 5), Init::Random, seed).rel_error;
+        let e25 = rescal_seq(&x, &RescalOptions::new(k, 25), Init::Random, seed).rel_error;
+        let e100 = rescal_seq(&x, &RescalOptions::new(k, 100), Init::Random, seed).rel_error;
+        assert!(e25 <= e5 + 1e-4, "5->{e5}, 25->{e25}");
+        assert!(e100 <= e25 + 1e-4, "25->{e25}, 100->{e100}");
+    });
+}
+
+#[test]
+fn factors_nonnegative_any_shape() {
+    property(6, |rng| {
+        let n = 6 + rng.below(10);
+        let m = 1 + rng.below(4);
+        let k = 1 + rng.below(4);
+        let x = Tensor3::random_uniform(n, n, m, 0.0, 2.0, rng);
+        let out = rescal_seq(&x, &RescalOptions::new(k, 20), Init::Random, rng.next_u64());
+        assert!(is_nonnegative(&out.a));
+        for t in 0..m {
+            assert!(is_nonnegative(out.r.slice(t)));
+        }
+    });
+}
+
+#[test]
+fn scale_equivariance() {
+    // scaling X by c scales the optimal R by c (A is normalized), so the
+    // relative error is invariant
+    property(4, |rng| {
+        let n = 10 + rng.below(8);
+        let x = Tensor3::random_uniform(n, n, 2, 0.0, 1.0, rng);
+        let scaled = {
+            let slices = (0..2)
+                .map(|t| {
+                    let mut s = x.slice(t).clone();
+                    s.scale(7.5);
+                    s
+                })
+                .collect();
+            Tensor3::from_slices(slices)
+        };
+        let seed = rng.next_u64();
+        let e1 = rescal_seq(&x, &RescalOptions::new(3, 40), Init::Random, seed).rel_error;
+        let e2 = rescal_seq(&scaled, &RescalOptions::new(3, 40), Init::Random, seed).rel_error;
+        assert!((e1 - e2).abs() < 0.05, "rel err not scale-invariant: {e1} vs {e2}");
+    });
+}
+
+#[test]
+fn distributed_equals_sequential_random_configs() {
+    // the central correctness property, sampled across shapes and grids
+    property(4, |rng| {
+        let q = 1 + rng.below(3); // 1, 2, or 3 -> p in {1, 4, 9}
+        let p = q * q;
+        let n = (q.max(2)) * (4 + rng.below(5)); // ensure n >= q
+        let m = 1 + rng.below(3);
+        let k = 2 + rng.below(3);
+        let x = synthetic::planted_tensor(n, m, k, 0.0, rng.next_u64()).x;
+        let (a0, r0) = Init::Random.materialize(&x, k, rng);
+        let opts = RescalOptions::new(k, 8);
+        let seq = rescal_seq(&x, &opts, Init::Given(a0.clone(), r0.clone()), 0);
+        let a0 = std::sync::Arc::new(a0);
+        let r0 = std::sync::Arc::new(r0);
+        let results = run_on_grid(p, |ctx| {
+            let (rs, re) = ctx.grid.chunk(n, ctx.row);
+            let (cs, ce) = ctx.grid.chunk(n, ctx.col);
+            let tile = LocalTile::Dense(x.tile(rs, re, cs, ce));
+            let cfg = DistRescalConfig {
+                opts: opts.clone(),
+                init: DistInit::Given(a0.clone(), r0.clone()),
+                n,
+            };
+            let mut backend = NativeBackend::new();
+            let mut trace = Trace::disabled();
+            let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+            (ctx.row, ctx.col, out)
+        });
+        for (row, col, out) in &results {
+            if row == col {
+                let (s, _) = drescal::comm::Grid::new(p).chunk(n, *row);
+                for i in 0..out.a_row.rows() {
+                    for j in 0..k {
+                        let got = out.a_row[(i, j)];
+                        let want = seq.a[(s + i, j)];
+                        assert!(
+                            (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                            "A[{},{}]: dist {} vs seq {} (n={n}, p={p})",
+                            s + i,
+                            j,
+                            got,
+                            want
+                        );
+                    }
+                }
+                assert!((out.rel_error - seq.rel_error).abs() < 1e-3);
+            }
+        }
+    });
+}
+
+#[test]
+fn perturbation_preserves_solution_neighborhood() {
+    // a δ-perturbed tensor must factor to nearly the same error — the
+    // premise of the stability method
+    property(4, |rng| {
+        let n = 12 + rng.below(8);
+        let x = synthetic::block_tensor(n, 2, 2, 0.01, rng.next_u64()).x;
+        let seed = rng.next_u64();
+        let base = rescal_seq(&x, &RescalOptions::new(2, 120), Init::Random, seed).rel_error;
+        // perturb ±2%
+        let perturbed = {
+            let slices = (0..2)
+                .map(|t| {
+                    let mut s = x.slice(t).clone();
+                    for v in s.as_mut_slice() {
+                        *v *= rng.uniform_range(0.98, 1.02);
+                    }
+                    s
+                })
+                .collect();
+            Tensor3::from_slices(slices)
+        };
+        let pert =
+            rescal_seq(&perturbed, &RescalOptions::new(2, 120), Init::Random, seed).rel_error;
+        assert!(
+            (base - pert).abs() < 0.05,
+            "perturbation destabilized the factorization: {base} vs {pert}"
+        );
+    });
+}

@@ -1,0 +1,104 @@
+//! Scaling invariants: the distributed algorithm's *results* must not
+//! depend on the grid size, and its communication volume must follow the
+//! §5 complexity analysis.
+
+use drescal::backend::native::NativeBackend;
+use drescal::comm::grid::run_on_grid;
+use drescal::comm::{CommOp, Trace};
+use drescal::data::synthetic;
+use drescal::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
+use drescal::rescal::{LocalTile, RescalOptions};
+use drescal::tensor::{Mat, Tensor3};
+
+fn run_p(x: &Tensor3, p: usize, k: usize, iters: usize) -> (Mat, f32, Vec<Trace>) {
+    let n = x.n1();
+    // shared full-A init so every grid size starts identically
+    let mut rng = drescal::rng::Rng::new(77);
+    let a0 = std::sync::Arc::new(Mat::random_uniform(n, k, 0.01, 1.0, &mut rng));
+    let r0 = std::sync::Arc::new(Tensor3::random_uniform(k, k, x.m(), 0.01, 1.0, &mut rng));
+    let results = run_on_grid(p, |ctx| {
+        let (r0_, r1) = ctx.grid.chunk(n, ctx.row);
+        let (c0, c1) = ctx.grid.chunk(n, ctx.col);
+        let tile = LocalTile::Dense(x.tile(r0_, r1, c0, c1));
+        let cfg = DistRescalConfig {
+            opts: RescalOptions::new(k, iters),
+            init: DistInit::Given(a0.clone(), r0.clone()),
+            n,
+        };
+        let mut backend = NativeBackend::new();
+        let mut trace = Trace::new();
+        let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+        (ctx.row, ctx.col, out, trace)
+    });
+    let grid = drescal::comm::Grid::new(p);
+    let mut a = Mat::zeros(n, k);
+    let mut err = 0.0;
+    let mut traces = Vec::new();
+    for (row, col, res, trace) in results {
+        if row == col {
+            let (s, _) = grid.chunk(n, row);
+            for i in 0..res.a_row.rows() {
+                for j in 0..k {
+                    a[(s + i, j)] = res.a_row[(i, j)];
+                }
+            }
+            err = res.rel_error;
+        }
+        traces.push(trace);
+    }
+    (a, err, traces)
+}
+
+#[test]
+fn results_independent_of_grid_size() {
+    let planted = synthetic::planted_tensor(24, 2, 3, 0.0, 1100);
+    let (a1, e1, _) = run_p(&planted.x, 1, 3, 12);
+    let (a4, e4, _) = run_p(&planted.x, 4, 3, 12);
+    let (a9, e9, _) = run_p(&planted.x, 9, 3, 12);
+    drescal::testing::assert_close(a4.as_slice(), a1.as_slice(), 1e-3);
+    drescal::testing::assert_close(a9.as_slice(), a1.as_slice(), 1e-3);
+    assert!((e4 - e1).abs() < 1e-3);
+    assert!((e9 - e1).abs() < 1e-3);
+}
+
+/// §5.1.2: per-iteration reduced bytes per rank scale as n/√p·k — the
+/// *local* communication payload shrinks with the grid even though the
+/// number of collectives grows.
+#[test]
+fn communication_volume_follows_complexity() {
+    let planted = synthetic::planted_tensor(32, 2, 4, 0.0, 1101);
+    let (_a4, _e4, tr4) = run_p(&planted.x, 4, 4, 3);
+    let (_a16, _e16, tr16) = run_p(&planted.x, 16, 4, 3);
+    let reduce_bytes = |tr: &Vec<Trace>| -> f64 {
+        let total: usize = tr
+            .iter()
+            .map(|t| t.bytes(CommOp::RowReduce) + t.bytes(CommOp::ColumnReduce))
+            .sum();
+        total as f64 / tr.len() as f64
+    };
+    let b4 = reduce_bytes(&tr4);
+    let b16 = reduce_bytes(&tr16);
+    // n/√p halves from q=2 to q=4, so the XA payloads halve; k×k terms are
+    // constant — expect a ratio comfortably above 1 but below 2
+    let ratio = b4 / b16;
+    assert!(
+        ratio > 1.2 && ratio < 2.2,
+        "per-rank reduce bytes p=4 {b4} vs p=16 {b16} (ratio {ratio})"
+    );
+}
+
+/// Strong-scaling compute: per-rank matmul bytes drop by ~p (the tile area).
+#[test]
+fn compute_volume_drops_with_p() {
+    let planted = synthetic::planted_tensor(32, 2, 4, 0.0, 1102);
+    let (_a, _e, tr1) = run_p(&planted.x, 1, 4, 3);
+    let (_a4, _e4, tr4) = run_p(&planted.x, 4, 4, 3);
+    let mm_bytes = |tr: &Vec<Trace>| -> f64 {
+        let total: usize = tr.iter().map(|t| t.bytes(CommOp::MatrixMul)).sum();
+        total as f64 / tr.len() as f64
+    };
+    let b1 = mm_bytes(&tr1);
+    let b4 = mm_bytes(&tr4);
+    let ratio = b1 / b4;
+    assert!(ratio > 3.0 && ratio < 5.0, "tile bytes p=1 {b1} vs p=4 {b4} (ratio {ratio})");
+}

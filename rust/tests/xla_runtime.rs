@@ -1,0 +1,121 @@
+//! Integration: AOT artifacts (JAX+Pallas → HLO text) loaded and executed
+//! through the PJRT runtime must match the native backend bit-for-tolerance.
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts/ is absent so
+//! `cargo test` works on a fresh checkout).
+
+use drescal::backend::{native::NativeBackend, xla::XlaBackend, Backend};
+use drescal::rng::Rng;
+use drescal::runtime::Runtime;
+use drescal::tensor::Mat;
+use drescal::testing::assert_close;
+
+fn artifact_dir() -> Option<String> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir.to_string_lossy().into_owned())
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn runtime_loads_all_artifacts() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    assert!(!rt.is_empty());
+    println!("loaded {} executables on {}", rt.len(), rt.platform());
+}
+
+#[test]
+fn xla_matches_native_on_manifest_shapes() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut xla = XlaBackend::new(&dir).expect("backend");
+    let mut native = NativeBackend::new();
+    let mut rng = Rng::new(42);
+    let manifest = drescal::runtime::Manifest::load(std::path::Path::new(&dir)).unwrap();
+    let mut tested = 0;
+    for entry in &manifest.entries {
+        let inputs: Vec<Mat> = entry
+            .shapes
+            .iter()
+            .map(|&(r, c)| Mat::random_uniform(r, c, 0.01, 1.0, &mut rng))
+            .collect();
+        let refs: Vec<&Mat> = inputs.iter().collect();
+        if entry.kind == "slice_segment" {
+            // fused 4-output segment: check against the composed native ops
+            let outs = xla
+                .runtime()
+                .execute_multi(&entry.kind, &refs)
+                .expect("execute_multi")
+                .expect("artifact should match its own manifest shapes");
+            assert_eq!(outs.len(), 4);
+            let (r_t, ata, atxa, xa, a_row) =
+                (&inputs[0], &inputs[1], &inputs[2], &inputs[3], &inputs[4]);
+            let mut r_new = r_t.clone();
+            let deno_r = ata.matmul(&r_t.matmul(ata));
+            drescal::tensor::ops::mu_update(&mut r_new, atxa, &deno_r, 1e-16);
+            assert_close(outs[0].as_slice(), r_new.as_slice(), 1e-3);
+            assert_close(outs[1].as_slice(), xa.matmul_t(&r_new).as_slice(), 1e-3);
+            let ar = a_row.matmul(&r_new);
+            assert_close(outs[2].as_slice(), ar.as_slice(), 1e-3);
+            let mut deno = a_row.matmul_t(&r_new).matmul(&ata.matmul(&r_new));
+            deno.add_assign(&ar.matmul(&ata.matmul_t(&r_new)));
+            assert_close(outs[3].as_slice(), deno.as_slice(), 1e-3);
+            tested += 1;
+            continue;
+        }
+        let got = xla
+            .runtime()
+            .execute(&entry.kind, &refs)
+            .expect("execute")
+            .expect("artifact should match its own manifest shapes");
+        let want = match entry.kind.as_str() {
+            "matmul" => native.matmul(&inputs[0], &inputs[1]),
+            "t_matmul" => native.t_matmul(&inputs[0], &inputs[1]),
+            "matmul_t" => native.matmul_t(&inputs[0], &inputs[1]),
+            "gram" => native.gram(&inputs[0]),
+            "r_update" => {
+                let mut r = inputs[0].clone();
+                let rata = inputs[0].matmul(&inputs[1]);
+                let deno = inputs[1].matmul(&rata);
+                drescal::tensor::ops::mu_update(&mut r, &inputs[2], &deno, 1e-16);
+                r
+            }
+            other => panic!("unknown op kind {other}"),
+        };
+        assert_close(got.as_slice(), want.as_slice(), 1e-4);
+        tested += 1;
+    }
+    assert!(tested >= 9, "expected a full op set, tested {tested}");
+    println!("verified {tested} artifacts against native");
+}
+
+#[test]
+fn xla_backend_falls_back_on_unknown_shapes() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut xla = XlaBackend::new(&dir).expect("backend");
+    let mut rng = Rng::new(7);
+    // a deliberately odd shape not in any manifest
+    let a = Mat::random_uniform(13, 5, 0.0, 1.0, &mut rng);
+    let b = Mat::random_uniform(5, 11, 0.0, 1.0, &mut rng);
+    let got = xla.matmul(&a, &b);
+    assert_close(got.as_slice(), a.matmul(&b).as_slice(), 1e-5);
+    assert!(xla.fallbacks > 0);
+}
+
+#[test]
+fn xla_backend_hits_artifacts_for_manifest_shapes() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut xla = XlaBackend::new(&dir).expect("backend");
+    let manifest = drescal::runtime::Manifest::load(std::path::Path::new(&dir)).unwrap();
+    // pick a gram entry and call through the Backend trait
+    let entry = manifest.entries.iter().find(|e| e.kind == "gram").expect("gram artifact");
+    let (r, c) = entry.shapes[0];
+    let mut rng = Rng::new(9);
+    let a = Mat::random_uniform(r, c, 0.0, 1.0, &mut rng);
+    let got = xla.gram(&a);
+    assert!(xla.hits >= 1, "artifact path not taken");
+    assert_close(got.as_slice(), a.gram().as_slice(), 1e-4);
+}
