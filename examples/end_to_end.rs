@@ -1,23 +1,25 @@
 //! End-to-end driver (the DESIGN.md §6 flagship): the **full pyDRESCALk
-//! pipeline on the full three-layer stack** — virtual-MPI grid (L3 Rust)
-//! executing AOT JAX+Pallas artifacts (L1/L2) through PJRT, on a real
-//! workload:
+//! pipeline on the full three-layer stack**, through the engine job API —
+//! virtual-MPI grid (L3 Rust) executing AOT JAX+Pallas artifacts (L1/L2)
+//! through PJRT, on a real workload:
 //!
 //! 1. generate a 256×256×4 block-community relational tensor (k_true = 5)
-//! 2. perturbation resampling (Alg 4)
-//! 3. distributed non-negative RESCAL per perturbation (Alg 3) — every
-//!    GEMM in the hot loop is a compiled HLO artifact (tile 128, the
-//!    default `make artifacts` set)
-//! 4. LSA clustering (Alg 5) + silhouettes (Alg 6) + core regression
-//! 5. automatic k selection and community report
+//! 2. build one [`Engine`] (rank pool + per-rank backends, spawned once)
+//! 3. submit a `ModelSelect` job: perturbation resampling (Alg 4),
+//!    distributed non-negative RESCAL per perturbation (Alg 3) — with
+//!    `--features pjrt` every GEMM in the hot loop is a compiled HLO
+//!    artifact — LSA clustering (Alg 5) + silhouettes (Alg 6) + core
+//!    regression, automatic k selection
+//! 4. read the unified report: scores, factors, per-op runtime breakdown
 //!
 //! Run: `make artifacts && cargo run --release --example end_to_end`
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
 use drescal::backend::BackendSpec;
 use drescal::coordinator::metrics::RunMetrics;
-use drescal::coordinator::{run_rescalk, JobConfig, JobData};
+use drescal::coordinator::JobData;
 use drescal::data::synthetic;
+use drescal::engine::{Engine, EngineConfig};
 use drescal::linalg::pearson::best_match_correlation;
 use drescal::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
 
@@ -38,8 +40,13 @@ fn main() {
     let planted = synthetic::block_tensor(n, m, k_true, 0.01, 2024);
     println!("workload: {n}×{n}×{m} block-community tensor, k_true = {k_true}");
 
+    // -- configure once ----------------------------------------------------
+    let mut engine = Engine::new(
+        EngineConfig::new(4).with_backend(backend).with_trace(true),
+    )
+    .expect("engine");
+
     // -- full model-selection pipeline ------------------------------------
-    let job = JobConfig { p: 4, backend, trace: true };
     let cfg = RescalkConfig {
         k_min: 3,
         k_max: 7,
@@ -57,7 +64,9 @@ fn main() {
         "sweep: k ∈ [{}, {}], r = {} perturbations, {} MU iters each\n",
         cfg.k_min, cfg.k_max, cfg.perturbations, cfg.rescal_iters
     );
-    let report = run_rescalk(&JobData::dense(planted.x.clone()), &job, &cfg);
+    let report = engine
+        .model_select(&JobData::dense(planted.x.clone()), &cfg)
+        .expect("model-select job");
 
     // -- results -----------------------------------------------------------
     println!("   k   min-sil   avg-sil   rel-err");

@@ -1,6 +1,7 @@
 //! Fig 13 reproduction: model determination at the paper's extreme scales,
-//! replayed through the calibrated machine model (DESIGN.md §3), plus a
-//! *real* scaled-down run of the same code path to anchor the model.
+//! replayed through the calibrated machine model (DESIGN.md §3) as
+//! `Simulate` jobs, plus *real* scaled-down runs of the same code path —
+//! all four jobs submitted to engines through the unified job API.
 //!
 //! * Fig 13a — 11.5 TB dense tensor (396800×396800×20) on 4096 cores:
 //!   modeled sweep runtime; the real anchor run performs the same RESCALk
@@ -13,20 +14,27 @@
 
 use drescal::bench_util::{calibrate_dense_flops, fmt_secs, print_table};
 use drescal::coordinator::metrics::RunMetrics;
-use drescal::coordinator::{run_rescal, run_rescalk, JobConfig, JobData};
+use drescal::coordinator::JobData;
 use drescal::data::synthetic;
+use drescal::engine::{Engine, EngineConfig, SimScenario, SimSpec};
 use drescal::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
 use drescal::rescal::RescalOptions;
-use drescal::simulate::{exascale, Machine};
+use drescal::simulate::Machine;
 
 fn main() {
     // ---- model anchor: measure this host's dense rate -------------------
     let flops = calibrate_dense_flops();
     println!("host dense GEMM rate: {:.1} GFLOP/s (model calibration input)", flops / 1e9);
 
-    // ---- Fig 13a: 11.5 TB dense, modeled --------------------------------
+    // one 2×2 engine serves the modeled replays AND the real anchor sweep
+    let mut engine = Engine::new(EngineConfig::new(4)).expect("engine");
     let machine = Machine::cpu_cluster();
-    let dense = exascale::dense_11tb_run(&machine);
+
+    // ---- Fig 13a: 11.5 TB dense, modeled --------------------------------
+    let dense_report = engine
+        .simulate(SimSpec { machine, scenario: SimScenario::Dense11Tb })
+        .expect("simulate job");
+    let dense = &dense_report.rows[0];
     println!(
         "\nFig 13a (modeled): {}\n  {:.1} TB logical on {} ranks -> compute {} + comm {} = {} total",
         dense.label,
@@ -41,7 +49,6 @@ fn main() {
     // ---- Fig 13a anchor: same pipeline, real, scaled down ---------------
     println!("\nFig 13a (real anchor): k sweep on a 256×256×4 tensor, k_true = 10");
     let planted = synthetic::block_tensor(256, 4, 10, 0.01, 131);
-    let job = JobConfig { p: 4, trace: false, ..Default::default() };
     let cfg = RescalkConfig {
         k_min: 8,
         k_max: 11,
@@ -55,7 +62,9 @@ fn main() {
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
     };
-    let report = run_rescalk(&JobData::dense(planted.x.clone()), &job, &cfg);
+    let report = engine
+        .model_select(&JobData::dense(planted.x.clone()), &cfg)
+        .expect("model-select job");
     for s in &report.scores {
         println!(
             "   k={:>2}  min-sil {:+.3}  rel-err {:.4}{}",
@@ -69,7 +78,11 @@ fn main() {
     assert_eq!(report.k_opt, 10, "anchor run must recover k=10");
 
     // ---- Fig 13b: 9.5 EB sparse, modeled ---------------------------------
-    let rows: Vec<Vec<String>> = exascale::sparse_exabyte_runs(&machine)
+    let sparse_report = engine
+        .simulate(SimSpec { machine, scenario: SimScenario::SparseExabyte })
+        .expect("simulate job");
+    let rows: Vec<Vec<String>> = sparse_report
+        .rows
         .iter()
         .map(|r| {
             vec![
@@ -89,10 +102,13 @@ fn main() {
     println!("paper: >90% of execution in MPI communication, total flat across densities");
 
     // ---- Fig 13b anchor: real sparse run breakdown ----------------------
+    // the 4×4 grid needs its own engine (grid size is fixed per engine)
     println!("\nFig 13b (real anchor): sparse 512×512×4 @ 1e-2 density, p=16");
+    let mut wide = Engine::new(EngineConfig::new(16).with_trace(true)).expect("engine");
     let xs = synthetic::sparse_planted(512, 4, 10, 1e-2, 132);
-    let job = JobConfig { p: 16, trace: true, ..Default::default() };
-    let report = run_rescal(&JobData::sparse(xs), &job, &RescalOptions::new(10, 30), 132);
+    let report = wide
+        .factorize(&JobData::sparse(xs), &RescalOptions::new(10, 30), 132)
+        .expect("factorize");
     let metrics = RunMetrics::from_traces(&report.traces);
     print!("{}", metrics.format_breakdown());
     println!(

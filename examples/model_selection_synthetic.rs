@@ -1,4 +1,5 @@
-//! Fig 5 reproduction: latent feature identification on synthetic tensors.
+//! Fig 5 reproduction: latent feature identification on synthetic tensors,
+//! driven through the engine job API.
 //!
 //! The paper's demonstration pair, scaled to laptop size (the generative
 //! process — Gaussian latent features, Exp(1) core, ±1% uniform noise — is
@@ -7,21 +8,31 @@
 //! * data 1: planted k = 7 (paper: 1024×1024×10) — Fig 5a + 5c
 //! * data 2: planted k = 17 (paper: 2160×2160×20) — Fig 5b + 5d
 //!
-//! Prints the silhouette/error series the paper plots, the selected k,
-//! and the feature-recovery Pearson correlation matrix.
+//! Both sweeps run as `ModelSelect` jobs on one persistent [`Engine`]
+//! (rank pool spawned once). Prints the silhouette/error series the paper
+//! plots, the selected k, and the feature-recovery Pearson correlations.
 //!
 //! Run: `cargo run --release --example model_selection_synthetic`
 
-use drescal::coordinator::{run_rescalk, JobConfig, JobData};
+use drescal::coordinator::JobData;
 use drescal::data::synthetic;
+use drescal::engine::{Engine, EngineConfig};
 use drescal::linalg::pearson::{best_match_correlation, pearson_matrix};
 use drescal::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
 use drescal::tensor::Mat;
 
-fn run_dataset(name: &str, n: usize, m: usize, k_true: usize, k_lo: usize, k_hi: usize, seed: u64) {
+fn run_dataset(
+    engine: &mut Engine,
+    name: &str,
+    n: usize,
+    m: usize,
+    k_true: usize,
+    k_lo: usize,
+    k_hi: usize,
+    seed: u64,
+) {
     println!("\n=== {name}: {n}×{n}×{m}, planted k = {k_true} ===");
     let planted = synthetic::block_tensor(n, m, k_true, 0.01, seed);
-    let job = JobConfig { p: 4, trace: false, ..Default::default() };
     let cfg = RescalkConfig {
         k_min: k_lo,
         k_max: k_hi,
@@ -35,7 +46,9 @@ fn run_dataset(name: &str, n: usize, m: usize, k_true: usize, k_lo: usize, k_hi:
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
     };
-    let report = run_rescalk(&JobData::dense(planted.x.clone()), &job, &cfg);
+    let report = engine
+        .model_select(&JobData::dense(planted.x.clone()), &cfg)
+        .expect("model-select job");
 
     // Fig 5a/5b: silhouette + relative error vs k
     println!("   k   min-sil   avg-sil   rel-err");
@@ -73,9 +86,16 @@ fn print_correlation_matrix(truth: &Mat, found: &Mat) {
 }
 
 fn main() {
+    // one engine, two sweep jobs: the rank pool and backends are reused
+    let mut engine = Engine::new(EngineConfig::new(4)).expect("engine");
     // data 1 (paper Fig 5a/5c): k = 7
-    run_dataset("data 1", 140, 6, 7, 5, 9, 51);
+    run_dataset(&mut engine, "data 1", 140, 6, 7, 5, 9, 51);
     // data 2 (paper Fig 5b/5d): k = 17
-    run_dataset("data 2", 340, 6, 17, 15, 19, 52);
+    run_dataset(&mut engine, "data 2", 340, 6, 17, 15, 19, 52);
+    let stats = engine.stats();
+    println!(
+        "\n{} jobs on one pool, {} backend builds total",
+        stats.jobs_completed, stats.backend_builds
+    );
     println!("\nmodel_selection_synthetic OK");
 }

@@ -1,5 +1,6 @@
 //! Fig 6 reproduction: latent feature identification in the *Nations* and
-//! *Trade* relational datasets (§6.2.2).
+//! *Trade* relational datasets (§6.2.2), as two `ModelSelect` jobs on one
+//! persistent [`Engine`].
 //!
 //! * Nations (14×14×56 binary): k sweep 1..7 on a 2×2 grid → k_opt = 4,
 //!   with the four geopolitical communities and the R-slice interaction
@@ -10,12 +11,14 @@
 //!
 //! Run: `cargo run --release --example nations_trade`
 
-use drescal::coordinator::{run_rescalk, JobConfig, JobData, RescalkReport};
+use drescal::coordinator::{JobData, RescalkReport};
 use drescal::data::{nations, trade};
+use drescal::engine::{Engine, EngineConfig};
 use drescal::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
 use drescal::tensor::Mat;
 
 fn sweep(
+    engine: &mut Engine,
     data: JobData,
     seed: u64,
     r: usize,
@@ -23,7 +26,6 @@ fn sweep(
     init: InitStrategy,
     rule: SelectionRule,
 ) -> RescalkReport {
-    let job = JobConfig { p: 4, trace: false, ..Default::default() };
     let cfg = RescalkConfig {
         k_min: 1,
         k_max: 7,
@@ -37,7 +39,7 @@ fn sweep(
         rule,
         init,
     };
-    run_rescalk(&data, &job, &cfg)
+    engine.model_select(&data, &cfg).expect("model-select job")
 }
 
 fn print_scores(report: &RescalkReport) {
@@ -85,10 +87,14 @@ fn print_interactions(r_slice: &Mat, label: &str) {
 }
 
 fn main() {
+    // one 2×2 engine carries both dataset sweeps
+    let mut engine = Engine::new(EngineConfig::new(4)).expect("engine");
+
     // ---- Nations --------------------------------------------------------
     println!("=== Nations: 14×14×56 binary relational tensor ===");
     let nations_x = nations::nations_tensor(11);
     let report = sweep(
+        &mut engine,
         JobData::dense(nations_x),
         11,
         8,
@@ -122,6 +128,7 @@ fn main() {
     // five-bloc solution (see DESIGN.md §3)
     let factors = drescal::model_selection::nndsvd_factors(&trade_x, 1, 7);
     let report = sweep(
+        &mut engine,
         JobData::dense(trade_x),
         13,
         6,

@@ -1,17 +1,18 @@
-//! Quickstart: factorize a small relational tensor on a 2×2 virtual grid
-//! and recover its latent communities.
+//! Quickstart for the engine API: build one [`Engine`], factorize a small
+//! relational tensor on its 2×2 persistent rank grid, and recover the
+//! latent communities — then reuse the same pool for a refinement job.
 //!
 //! ```text
 //! cargo run --release --example quickstart
 //! ```
 
-use drescal::coordinator::{run_rescal, JobConfig, JobData};
-use drescal::data::synthetic;
+use drescal::coordinator::JobData;
+use drescal::engine::{Engine, EngineConfig};
 use drescal::rescal::RescalOptions;
 
 fn main() {
     // a 64-entity, 3-relation knowledge graph with 4 planted communities
-    let planted = synthetic::block_tensor(64, 3, 4, 0.01, 7);
+    let planted = drescal::data::synthetic::block_tensor(64, 3, 4, 0.01, 7);
     println!(
         "tensor: {}×{}×{}  (k_true = {})",
         planted.x.n1(),
@@ -20,10 +21,11 @@ fn main() {
         planted.k_true
     );
 
+    // configure once: p = 4 ranks, native backend, tracing off
+    let mut engine = Engine::new(EngineConfig::default()).expect("engine");
     let data = JobData::dense(planted.x.clone());
-    let job = JobConfig::default(); // p = 4 ranks, native backend
     let opts = RescalOptions::new(4, 300).with_tol(0.02, 20);
-    let report = run_rescal(&data, &job, &opts, 42);
+    let report = engine.factorize(&data, &opts, 42).expect("factorize");
 
     println!(
         "factorized in {:.2}s: rel_error = {:.4} after {} iterations",
@@ -47,5 +49,17 @@ fn main() {
     }
     println!("community assignment consistency: {consistent}/64 entities");
     assert!(report.rel_error < 0.1, "expected a good fit");
+
+    // the pool persists: a second, deeper job on the same engine reuses
+    // every rank thread and backend
+    let refined = engine
+        .factorize(&data, &RescalOptions::new(4, 600).with_tol(0.01, 20), 42)
+        .expect("refine");
+    println!(
+        "refined on the same pool: rel_error = {:.4} ({} backend builds total)",
+        refined.rel_error,
+        engine.stats().backend_builds
+    );
+    assert_eq!(engine.stats().backend_builds, 4, "pool must not rebuild backends");
     println!("quickstart OK");
 }

@@ -7,17 +7,23 @@
 //!   (paper: >90% communication, flat total).
 
 use drescal::bench_util::{fmt_secs, pin_single_threaded_gemm, print_table};
-use drescal::coordinator::{run_rescalk, JobConfig, JobData};
+use drescal::coordinator::JobData;
 use drescal::data::synthetic;
+use drescal::engine::{Engine, EngineConfig, SimScenario, SimSpec};
 use drescal::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
-use drescal::simulate::{exascale, Machine};
+use drescal::simulate::Machine;
 
 fn main() {
     pin_single_threaded_gemm();
     let machine = Machine::cpu_cluster();
+    // one persistent engine runs the modeled replays and the real anchor
+    let mut engine = Engine::new(EngineConfig::new(4)).expect("engine");
 
     // ---- Fig 13a modeled ----
-    let dense = exascale::dense_11tb_run(&machine);
+    let dense_report = engine
+        .simulate(SimSpec { machine, scenario: SimScenario::Dense11Tb })
+        .expect("simulate");
+    let dense = &dense_report.rows[0];
     println!(
         "Fig 13a modeled: {:.1} TB on {} ranks -> {} total ({:.0}% comm); paper ≈3 h",
         dense.logical_bytes() / 1e12,
@@ -28,7 +34,6 @@ fn main() {
 
     // ---- Fig 13a real anchor (trimmed): k recovery at 1/3100 scale ----
     let planted = synthetic::block_tensor(128, 4, 10, 0.01, 13);
-    let job = JobConfig { p: 4, trace: false, ..Default::default() };
     let cfg = RescalkConfig {
         k_min: 9,
         k_max: 11,
@@ -42,7 +47,9 @@ fn main() {
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
     };
-    let report = run_rescalk(&JobData::dense(planted.x), &job, &cfg);
+    let report = engine
+        .model_select(&JobData::dense(planted.x), &cfg)
+        .expect("model-select");
     println!(
         "Fig 13a anchor: recovered k = {} (truth 10) in {}",
         report.k_opt,
@@ -51,7 +58,11 @@ fn main() {
     assert_eq!(report.k_opt, 10);
 
     // ---- Fig 13b modeled ----
-    let rows: Vec<Vec<String>> = exascale::sparse_exabyte_runs(&machine)
+    let sparse_report = engine
+        .simulate(SimSpec { machine, scenario: SimScenario::SparseExabyte })
+        .expect("simulate");
+    let rows: Vec<Vec<String>> = sparse_report
+        .rows
         .iter()
         .map(|r| {
             vec![

@@ -6,14 +6,14 @@
 //! error floor reached at k_true; feature recovery by Pearson correlation.
 
 use drescal::bench_util::{fmt_secs, pin_single_threaded_gemm, print_table};
-use drescal::coordinator::{run_rescalk, JobConfig, JobData};
+use drescal::coordinator::JobData;
 use drescal::data::synthetic;
+use drescal::engine::Engine;
 use drescal::linalg::pearson::best_match_correlation;
 use drescal::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
 
-fn run_case(n: usize, m: usize, k_true: usize, seed: u64) {
+fn run_case(engine: &mut Engine, n: usize, m: usize, k_true: usize, seed: u64) {
     let planted = synthetic::block_tensor(n, m, k_true, 0.01, seed);
-    let job = JobConfig { p: 4, trace: false, ..Default::default() };
     let cfg = RescalkConfig {
         k_min: k_true - 2,
         k_max: k_true + 2,
@@ -27,7 +27,9 @@ fn run_case(n: usize, m: usize, k_true: usize, seed: u64) {
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
     };
-    let report = run_rescalk(&JobData::dense(planted.x.clone()), &job, &cfg);
+    let report = engine
+        .model_select(&JobData::dense(planted.x.clone()), &cfg)
+        .expect("model-select job");
     let rows: Vec<Vec<String>> = report
         .scores
         .iter()
@@ -54,6 +56,9 @@ fn run_case(n: usize, m: usize, k_true: usize, seed: u64) {
 
 fn main() {
     pin_single_threaded_gemm();
-    run_case(96, 4, 7, 5001); // Fig 5a/5c analogue
-    run_case(128, 4, 9, 5002); // Fig 5b/5d analogue (scaled)
+    // both sweeps share one persistent 2×2 engine (tracing off)
+    let mut engine =
+        Engine::new(drescal::engine::EngineConfig::new(4)).expect("engine");
+    run_case(&mut engine, 96, 4, 7, 5001); // Fig 5a/5c analogue
+    run_case(&mut engine, 128, 4, 9, 5002); // Fig 5b/5d analogue (scaled)
 }

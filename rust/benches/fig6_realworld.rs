@@ -6,8 +6,9 @@
 //! NNDSVD-seeded ensemble with the stable-elbow rule.
 
 use drescal::bench_util::{fmt_secs, print_table};
-use drescal::coordinator::{run_rescalk, JobConfig, JobData};
+use drescal::coordinator::JobData;
 use drescal::data::{nations, trade};
+use drescal::engine::{Engine, EngineConfig};
 use drescal::model_selection::{nndsvd_factors, InitStrategy, RescalkConfig, SelectionRule};
 use drescal::tensor::Tensor3;
 
@@ -29,10 +30,11 @@ fn print_scores(title: &str, report: &drescal::coordinator::RescalkReport) {
 
 fn main() {
     drescal::bench_util::pin_single_threaded_gemm();
+    // one persistent 2×2 engine carries both dataset sweeps
+    let mut engine = Engine::new(EngineConfig::new(4)).expect("engine");
 
     // ---- Nations ----
     let x = nations::nations_tensor(11);
-    let job = JobConfig { p: 4, trace: false, ..Default::default() };
     let cfg = RescalkConfig {
         k_min: 1,
         k_max: 6,
@@ -46,7 +48,7 @@ fn main() {
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
     };
-    let report = run_rescalk(&JobData::dense(x), &job, &cfg);
+    let report = engine.model_select(&JobData::dense(x), &cfg).expect("model-select");
     print_scores(
         &format!("Fig 6a Nations 14×14×56 (wall {})", fmt_secs(report.wall_seconds)),
         &report,
@@ -71,7 +73,7 @@ fn main() {
         rule: SelectionRule::StableElbow { threshold: 0.8, min_gain: 0.10 },
         init: InitStrategy::Nndsvd { factors, jitter: 0.1 },
     };
-    let report = run_rescalk(&JobData::dense(x), &job, &cfg);
+    let report = engine.model_select(&JobData::dense(x), &cfg).expect("model-select");
     print_scores(
         &format!("Fig 6b Trade 24×24×30 subsample (wall {})", fmt_secs(report.wall_seconds)),
         &report,

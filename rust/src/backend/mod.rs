@@ -72,7 +72,7 @@ pub enum BackendSpec {
 
 impl BackendSpec {
     /// Instantiate the backend for one rank.
-    pub fn build(&self) -> anyhow::Result<Box<dyn Backend>> {
+    pub fn build(&self) -> crate::error::Result<Box<dyn Backend>> {
         match self {
             BackendSpec::Native => Ok(Box::new(native::NativeBackend::new())),
             BackendSpec::Xla { artifact_dir } => {

@@ -23,7 +23,7 @@ pub struct XlaBackend {
 
 impl XlaBackend {
     /// Load and compile all artifacts in `artifact_dir`.
-    pub fn new(artifact_dir: &str) -> anyhow::Result<Self> {
+    pub fn new(artifact_dir: &str) -> crate::error::Result<Self> {
         let runtime = Runtime::load(artifact_dir)?;
         Ok(XlaBackend { runtime, native: NativeBackend::new(), hits: 0, fallbacks: 0 })
     }

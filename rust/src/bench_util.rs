@@ -120,7 +120,8 @@ mod tests {
 // ---------------------------------------------------------------------------
 
 use crate::coordinator::metrics::RunMetrics;
-use crate::coordinator::{run_rescal, JobConfig, JobData};
+use crate::coordinator::JobData;
+use crate::engine::{Engine, EngineConfig};
 use crate::rescal::RescalOptions;
 
 /// One measured scaling point.
@@ -130,15 +131,23 @@ pub struct ScalingPoint {
     pub metrics: RunMetrics,
 }
 
+/// A traced `p`-rank engine on the native backend (the benches measure
+/// the L3 system, not PJRT call overhead — the XLA path is benchmarked
+/// separately in microbench_ops). `measure_dense`/`measure_sparse` build
+/// one per point because each point uses a different `p`; hold one of
+/// these yourself to run repeated jobs at a fixed `p` on one pool.
+pub fn bench_engine(p: usize) -> Engine {
+    Engine::new(EngineConfig::new(p).with_trace(true)).expect("bench engine")
+}
+
 /// Run distributed RESCAL on a planted dense tensor and return wall time +
-/// per-op metrics (mean over ranks). `iters` MU iterations, no early stop,
-/// native backend (the benches measure the L3 system, not PJRT call
-/// overhead — the XLA path is benchmarked separately in microbench_ops).
+/// per-op metrics (mean over ranks). `iters` MU iterations, no early stop.
 pub fn measure_dense(n: usize, m: usize, k: usize, p: usize, iters: usize, seed: u64) -> ScalingPoint {
     let planted = crate::data::synthetic::planted_tensor(n, m, k, 0.0, seed);
     let data = JobData::dense(planted.x);
-    let job = JobConfig { p, backend: crate::backend::BackendSpec::Native, trace: true };
-    let report = run_rescal(&data, &job, &RescalOptions::new(k, iters), seed);
+    let mut engine = bench_engine(p);
+    let report =
+        engine.factorize(&data, &RescalOptions::new(k, iters), seed).expect("factorize");
     ScalingPoint {
         p,
         wall_seconds: report.wall_seconds,
@@ -158,8 +167,9 @@ pub fn measure_sparse(
 ) -> ScalingPoint {
     let xs = crate::data::synthetic::sparse_planted(n, m, k, density, seed);
     let data = JobData::sparse(xs);
-    let job = JobConfig { p, backend: crate::backend::BackendSpec::Native, trace: true };
-    let report = run_rescal(&data, &job, &RescalOptions::new(k, iters), seed);
+    let mut engine = bench_engine(p);
+    let report =
+        engine.factorize(&data, &RescalOptions::new(k, iters), seed).expect("factorize");
     ScalingPoint {
         p,
         wall_seconds: report.wall_seconds,

@@ -1,12 +1,25 @@
-//! Run configuration: CLI flag parsing (no clap offline) plus optional
-//! JSON config files, feeding the coordinator.
+//! Run configuration.
+//!
+//! Two layers:
+//! * [`Args`] — raw CLI flag parsing (no clap offline) plus optional JSON
+//!   config-file merge (CLI wins);
+//! * [`RunConfig`] — the **typed, validated** layer the binary actually
+//!   consumes: every flag is parsed, range-checked (perfect-square grid,
+//!   sane k ranges, known backends/datasets), and folded into typed
+//!   structs in `RunConfig::from_args`. Nothing outside this module does
+//!   stringly flag lookups.
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
-
 use crate::backend::BackendSpec;
+use crate::coordinator::JobData;
+use crate::data::{nations, synthetic, trade};
+use crate::engine::EngineConfig;
+use crate::error::{Context as _, Result};
 use crate::json::Json;
+use crate::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
+use crate::rescal::RescalOptions;
+use crate::{bail, err};
 
 /// Parsed command line: subcommand + `--key value` flags.
 #[derive(Clone, Debug, Default)]
@@ -25,7 +38,7 @@ impl Args {
         while let Some(tok) = it.next() {
             let key = tok
                 .strip_prefix("--")
-                .ok_or_else(|| anyhow!("expected --flag, got '{tok}'"))?
+                .ok_or_else(|| err!("expected --flag, got '{tok}'"))?
                 .to_string();
             let value = match it.peek() {
                 Some(v) if !v.starts_with("--") => it.next().unwrap(),
@@ -43,21 +56,21 @@ impl Args {
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+            Some(v) => v.parse().map_err(|_| err!("--{key} expects an integer, got '{v}'")),
         }
     }
 
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+            Some(v) => v.parse().map_err(|_| err!("--{key} expects a number, got '{v}'")),
         }
     }
 
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+            Some(v) => v.parse().map_err(|_| err!("--{key} expects an integer, got '{v}'")),
         }
     }
 
@@ -67,9 +80,10 @@ impl Args {
 
     /// Merge flags from a JSON config file (CLI flags win).
     pub fn merge_config_file(&mut self, path: &str) -> Result<()> {
-        let text = std::fs::read_to_string(path)?;
-        let v = Json::parse(&text).map_err(|e| anyhow!("config JSON: {e}"))?;
-        let obj = v.as_obj().ok_or_else(|| anyhow!("config must be a JSON object"))?;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config file {path}"))?;
+        let v = Json::parse(&text).map_err(|e| err!("config JSON: {e}"))?;
+        let obj = v.as_obj().ok_or_else(|| err!("config must be a JSON object"))?;
         for (key, val) in obj {
             if self.flags.contains_key(key) {
                 continue; // CLI overrides file
@@ -102,6 +116,264 @@ impl Args {
             other => bail!("unknown backend '{other}' (native|xla)"),
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Typed layer
+// ---------------------------------------------------------------------------
+
+/// Which dataset a run loads.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSpec {
+    /// Planted Gaussian-feature tensor; `density < 1` takes the CSR path.
+    Synthetic { n: usize, m: usize, k_true: usize, density: f64 },
+    /// Block-community tensor with mild noise.
+    Blocks { n: usize, m: usize, k_true: usize },
+    /// The 14×14×56 Nations relational tensor.
+    Nations,
+    /// The trade tensor, zero-padded to 24 entities so 2×2 and 3×3 grids
+    /// divide the axis (paper §6.2.2).
+    Trade,
+}
+
+impl DataSpec {
+    /// Ground-truth latent dimension, where the dataset has one.
+    pub fn k_true(&self) -> Option<usize> {
+        match self {
+            DataSpec::Synthetic { k_true, .. } | DataSpec::Blocks { k_true, .. } => {
+                Some(*k_true)
+            }
+            DataSpec::Nations => Some(4),
+            DataSpec::Trade => Some(5),
+        }
+    }
+
+    /// Materialize the tensor.
+    pub fn load(&self, seed: u64) -> JobData {
+        match self {
+            DataSpec::Synthetic { n, m, k_true, density } => {
+                if *density < 1.0 {
+                    JobData::sparse(synthetic::sparse_planted(*n, *m, *k_true, *density, seed))
+                } else {
+                    JobData::dense(synthetic::planted_tensor(*n, *m, *k_true, 0.0, seed).x)
+                }
+            }
+            DataSpec::Blocks { n, m, k_true } => {
+                JobData::dense(synthetic::block_tensor(*n, *m, *k_true, 0.01, seed).x)
+            }
+            DataSpec::Nations => JobData::dense(nations::nations_tensor(seed)),
+            DataSpec::Trade => JobData::dense(trade::trade_tensor_padded(seed, 24)),
+        }
+    }
+}
+
+/// Which modeled machine the `exascale` replay uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MachineSpec {
+    Cpu,
+    Gpu,
+    /// Calibrate the dense rate on this host first.
+    Calibrated,
+}
+
+/// `drescal run` — one distributed factorization.
+#[derive(Clone, Debug)]
+pub struct FactorizeCmd {
+    pub data: DataSpec,
+    pub engine: EngineConfig,
+    pub opts: RescalOptions,
+    pub seed: u64,
+    /// Also print the unified report as JSON.
+    pub json: bool,
+}
+
+/// `drescal model-select` — the full RESCALk sweep.
+#[derive(Clone)]
+pub struct ModelSelectCmd {
+    pub data: DataSpec,
+    pub engine: EngineConfig,
+    pub sweep: RescalkConfig,
+    pub json: bool,
+}
+
+/// `drescal exascale` — the Fig 13 replay.
+#[derive(Clone, Copy, Debug)]
+pub struct ExascaleCmd {
+    pub machine: MachineSpec,
+}
+
+/// `drescal artifacts` — inspect the AOT artifact manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactsCmd {
+    pub dir: String,
+}
+
+/// One fully-validated CLI invocation.
+pub enum Command {
+    Run(FactorizeCmd),
+    ModelSelect(ModelSelectCmd),
+    Exascale(ExascaleCmd),
+    Artifacts(ArtifactsCmd),
+    Help,
+}
+
+/// The typed, validated run configuration the binary consumes.
+pub struct RunConfig {
+    pub command: Command,
+}
+
+const RUN_FLAGS: &[&str] = &[
+    "config", "data", "n", "m", "k-true", "density", "seed", "p", "backend", "artifacts",
+    "trace", "k", "iters", "json",
+];
+const MODEL_SELECT_FLAGS: &[&str] = &[
+    "config", "data", "n", "m", "k-true", "density", "seed", "p", "backend", "artifacts",
+    "trace", "iters", "json", "k-min", "k-max", "perturbations", "delta", "tol",
+    "err-every", "regress-iters",
+];
+const EXASCALE_FLAGS: &[&str] = &["config", "machine"];
+const ARTIFACTS_FLAGS: &[&str] = &["config", "artifacts"];
+
+impl RunConfig {
+    /// Parse + validate a full command line (after the binary name),
+    /// merging `--config FILE` first (CLI wins).
+    pub fn from_args<I: IntoIterator<Item = String>>(argv: I) -> Result<RunConfig> {
+        let mut args = Args::parse(argv)?;
+        // only flags the user typed are checked against the allowlist; a
+        // config file may be shared across subcommands, so its unused
+        // keys are silently ignored (as the old CLI did)
+        let cli_flags: Vec<String> = args.flags.keys().cloned().collect();
+        if let Some(path) = args.get("config").map(|s| s.to_string()) {
+            args.merge_config_file(&path)?;
+        }
+        let command = match args.subcommand.as_str() {
+            "run" => {
+                check_known_flags(&args.subcommand, &cli_flags, RUN_FLAGS)?;
+                let k = args.get_usize("k", 4)?;
+                let iters = args.get_usize("iters", 200)?;
+                if k == 0 {
+                    bail!("--k must be >= 1");
+                }
+                if iters == 0 {
+                    bail!("--iters must be >= 1");
+                }
+                Command::Run(FactorizeCmd {
+                    data: data_spec(&args)?,
+                    engine: engine_config(&args)?,
+                    opts: RescalOptions::new(k, iters),
+                    seed: args.get_u64("seed", 42)?,
+                    json: args.get_bool("json"),
+                })
+            }
+            "model-select" => {
+                check_known_flags(&args.subcommand, &cli_flags, MODEL_SELECT_FLAGS)?;
+                Command::ModelSelect(ModelSelectCmd {
+                    data: data_spec(&args)?,
+                    engine: engine_config(&args)?,
+                    sweep: sweep_config(&args)?,
+                    json: args.get_bool("json"),
+                })
+            }
+            "exascale" => {
+                check_known_flags(&args.subcommand, &cli_flags, EXASCALE_FLAGS)?;
+                let machine = match args.get("machine").unwrap_or("cpu") {
+                    "cpu" => MachineSpec::Cpu,
+                    "gpu" => MachineSpec::Gpu,
+                    "calibrated" => MachineSpec::Calibrated,
+                    other => bail!("unknown --machine '{other}' (cpu|gpu|calibrated)"),
+                };
+                Command::Exascale(ExascaleCmd { machine })
+            }
+            "artifacts" => {
+                check_known_flags(&args.subcommand, &cli_flags, ARTIFACTS_FLAGS)?;
+                Command::Artifacts(ArtifactsCmd {
+                    dir: args.get("artifacts").unwrap_or("artifacts").to_string(),
+                })
+            }
+            "help" | "--help" | "-h" => Command::Help,
+            other => bail!("unknown subcommand '{other}' — try `drescal help`"),
+        };
+        Ok(RunConfig { command })
+    }
+}
+
+fn check_known_flags(subcommand: &str, cli_flags: &[String], allowed: &[&str]) -> Result<()> {
+    for key in cli_flags {
+        if !allowed.contains(&key.as_str()) {
+            bail!("unknown flag --{key} for subcommand '{subcommand}'");
+        }
+    }
+    Ok(())
+}
+
+/// Typed engine configuration: grid size (perfect-square-checked), backend
+/// spec, opt-in tracing (`--trace`).
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let cfg = EngineConfig {
+        p: args.get_usize("p", 4)?,
+        backend: args.backend()?,
+        trace: args.get_bool("trace"),
+    };
+    cfg.validate().context("--p")?;
+    Ok(cfg)
+}
+
+fn data_spec(args: &Args) -> Result<DataSpec> {
+    let n = args.get_usize("n", 64)?;
+    let m = args.get_usize("m", 4)?;
+    let k_true = args.get_usize("k-true", 4)?;
+    if n == 0 || m == 0 || k_true == 0 {
+        bail!("--n, --m, and --k-true must all be >= 1");
+    }
+    Ok(match args.get("data").unwrap_or("synthetic") {
+        "synthetic" => {
+            let density = args.get_f64("density", 1.0)?;
+            if density <= 0.0 || density > 1.0 {
+                bail!("--density must be in (0, 1], got {density}");
+            }
+            DataSpec::Synthetic { n, m, k_true, density }
+        }
+        "blocks" => DataSpec::Blocks { n, m, k_true },
+        "nations" => DataSpec::Nations,
+        "trade" => DataSpec::Trade,
+        other => bail!("unknown --data '{other}' (synthetic|blocks|nations|trade)"),
+    })
+}
+
+fn sweep_config(args: &Args) -> Result<RescalkConfig> {
+    let k_min = args.get_usize("k-min", 2)?;
+    let k_max = args.get_usize("k-max", 8)?;
+    if k_min < 1 {
+        bail!("--k-min must be >= 1");
+    }
+    if k_min > k_max {
+        bail!("bad k range: --k-min {k_min} > --k-max {k_max}");
+    }
+    let perturbations = args.get_usize("perturbations", 10)?;
+    if perturbations == 0 {
+        bail!("--perturbations must be >= 1");
+    }
+    let delta = args.get_f64("delta", 0.02)?;
+    if !(0.0..1.0).contains(&delta) {
+        bail!("--delta must be in [0, 1), got {delta}");
+    }
+    let tol = args.get_f64("tol", 0.0)?;
+    if tol < 0.0 {
+        bail!("--tol must be >= 0, got {tol}");
+    }
+    Ok(RescalkConfig {
+        k_min,
+        k_max,
+        perturbations,
+        delta: delta as f32,
+        rescal_iters: args.get_usize("iters", 200)?,
+        tol: tol as f32,
+        err_every: args.get_usize("err-every", 25)?,
+        regress_iters: args.get_usize("regress-iters", 30)?,
+        seed: args.get_u64("seed", 42)?,
+        rule: SelectionRule::default(),
+        init: InitStrategy::Random,
+    })
 }
 
 #[cfg(test)]
@@ -151,5 +423,132 @@ mod tests {
         assert_eq!(a.get_usize("k", 0).unwrap(), 5); // file fills
         assert_eq!(a.get("mode"), Some("rescalk"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- typed layer ----
+
+    #[test]
+    fn run_defaults_are_typed() {
+        let cfg = RunConfig::from_args(argv("run")).unwrap();
+        match cfg.command {
+            Command::Run(cmd) => {
+                assert_eq!(
+                    cmd.data,
+                    DataSpec::Synthetic { n: 64, m: 4, k_true: 4, density: 1.0 }
+                );
+                assert_eq!(cmd.engine.p, 4);
+                assert_eq!(cmd.engine.backend, BackendSpec::Native);
+                assert!(!cmd.engine.trace, "tracing must be opt-in");
+                assert_eq!(cmd.opts.k, 4);
+                assert_eq!(cmd.opts.max_iters, 200);
+                assert_eq!(cmd.seed, 42);
+                assert!(!cmd.json);
+            }
+            _ => panic!("expected run command"),
+        }
+    }
+
+    #[test]
+    fn trace_is_opt_in() {
+        let cfg = RunConfig::from_args(argv("run --trace")).unwrap();
+        match cfg.command {
+            Command::Run(cmd) => assert!(cmd.engine.trace),
+            _ => panic!("expected run command"),
+        }
+    }
+
+    #[test]
+    fn non_square_grid_rejected() {
+        let e = RunConfig::from_args(argv("run --p 8")).unwrap_err();
+        assert!(e.to_string().contains("perfect square"), "{e}");
+        let e = RunConfig::from_args(argv("model-select --p 6")).unwrap_err();
+        assert!(e.to_string().contains("perfect square"), "{e}");
+    }
+
+    #[test]
+    fn bad_k_range_rejected() {
+        let e = RunConfig::from_args(argv("model-select --k-min 5 --k-max 3")).unwrap_err();
+        assert!(e.to_string().contains("bad k range"), "{e}");
+        let e = RunConfig::from_args(argv("model-select --k-min 0")).unwrap_err();
+        assert!(e.to_string().contains("--k-min"), "{e}");
+        assert!(RunConfig::from_args(argv("run --k 0")).is_err());
+    }
+
+    #[test]
+    fn unknown_backend_rejected() {
+        let e = RunConfig::from_args(argv("run --backend cuda")).unwrap_err();
+        assert!(e.to_string().contains("unknown backend"), "{e}");
+    }
+
+    #[test]
+    fn unknown_data_and_machine_rejected() {
+        assert!(RunConfig::from_args(argv("run --data mystery")).is_err());
+        assert!(RunConfig::from_args(argv("exascale --machine quantum")).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_rejected_per_subcommand() {
+        let e = RunConfig::from_args(argv("run --k-min 2")).unwrap_err();
+        assert!(e.to_string().contains("unknown flag --k-min"), "{e}");
+        let e = RunConfig::from_args(argv("exascale --k 4")).unwrap_err();
+        assert!(e.to_string().contains("unknown flag --k"), "{e}");
+    }
+
+    #[test]
+    fn density_validation() {
+        assert!(RunConfig::from_args(argv("run --density 0.5")).is_ok());
+        assert!(RunConfig::from_args(argv("run --density 0")).is_err());
+        assert!(RunConfig::from_args(argv("run --density 1.5")).is_err());
+    }
+
+    #[test]
+    fn config_file_feeds_typed_layer() {
+        let dir =
+            std::env::temp_dir().join(format!("drescal_rcfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"data": "blocks", "n": 24, "k": 3, "p": 9}"#).unwrap();
+        let cfg = RunConfig::from_args(argv(&format!(
+            "run --config {} --n 32",
+            path.to_str().unwrap()
+        )))
+        .unwrap();
+        match cfg.command {
+            Command::Run(cmd) => {
+                // CLI wins over file; file fills the rest
+                assert_eq!(cmd.data, DataSpec::Blocks { n: 32, m: 4, k_true: 4 });
+                assert_eq!(cmd.opts.k, 3);
+                assert_eq!(cmd.engine.p, 9);
+            }
+            _ => panic!("expected run command"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn config_file_keys_for_other_subcommands_are_ignored() {
+        let dir =
+            std::env::temp_dir().join(format!("drescal_shared_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        // "k" belongs to `run`, "k-min" to `model-select`; one shared file
+        // must work with both subcommands
+        std::fs::write(&path, r#"{"k": 3, "k-min": 2, "p": 4}"#).unwrap();
+        let p = path.to_str().unwrap();
+        assert!(RunConfig::from_args(argv(&format!("run --config {p}"))).is_ok());
+        assert!(RunConfig::from_args(argv(&format!("model-select --config {p}"))).is_ok());
+        // but a typed unknown flag is still rejected
+        assert!(RunConfig::from_args(argv(&format!("run --config {p} --k-min 2"))).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn data_spec_ground_truth() {
+        assert_eq!(DataSpec::Nations.k_true(), Some(4));
+        assert_eq!(DataSpec::Trade.k_true(), Some(5));
+        assert_eq!(
+            DataSpec::Blocks { n: 24, m: 2, k_true: 3 }.k_true(),
+            Some(3)
+        );
     }
 }

@@ -1,38 +1,46 @@
-//! The job coordinator: the paper's L3 system contribution as a library.
+//! Job-level data types shared with the [`crate::engine`], plus the
+//! legacy one-shot entry points.
 //!
-//! Takes a relational tensor (dense or CSR), scatters it over the √p×√p
-//! virtual grid, spawns one worker thread per rank with its own compute
-//! backend, runs distributed RESCAL (Alg 3) or the full RESCALk
-//! model-selection sweep (Alg 1), and gathers factors, errors, and per-op
-//! timing traces into a single report.
+//! Historically this module *was* the coordinator: `run_rescal` /
+//! `run_rescalk` spawned a fresh grid of rank threads and rebuilt every
+//! backend per call. That work now lives in the persistent
+//! [`crate::engine::Engine`]; this module keeps the input/result types
+//! ([`JobData`], [`RescalReport`], [`RescalkReport`], [`JobConfig`]) and
+//! thin deprecated shims that delegate to a one-shot engine so old call
+//! sites keep working during migration.
 
 pub mod metrics;
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::backend::BackendSpec;
-use crate::comm::grid::run_on_grid;
 use crate::comm::{Grid, Trace};
-use crate::model_selection::{rescalk_rank, KScore, RescalkConfig};
-use crate::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
+use crate::engine::{Engine, EngineConfig};
+use crate::model_selection::{KScore, RescalkConfig};
 use crate::rescal::{LocalTile, RescalOptions};
 use crate::tensor::{Csr, Mat, Tensor3};
 
-/// Coordinator-level configuration shared by both job kinds.
+/// Legacy coordinator-level configuration (superseded by
+/// [`EngineConfig`], which it converts into).
 #[derive(Clone)]
 pub struct JobConfig {
     /// Number of virtual MPI ranks (perfect square).
     pub p: usize,
     /// Compute backend each rank builds.
     pub backend: BackendSpec,
-    /// Record per-op timing traces.
+    /// Record per-op timing traces (opt-in: tracing taxes every op).
     pub trace: bool,
 }
 
 impl Default for JobConfig {
     fn default() -> Self {
-        JobConfig { p: 4, backend: BackendSpec::Native, trace: true }
+        JobConfig { p: 4, backend: BackendSpec::Native, trace: false }
+    }
+}
+
+impl From<JobConfig> for EngineConfig {
+    fn from(job: JobConfig) -> EngineConfig {
+        EngineConfig { p: job.p, backend: job.backend, trace: job.trace }
     }
 }
 
@@ -69,7 +77,7 @@ impl JobData {
     }
 
     /// Extract rank (row, col)'s tile.
-    fn tile(&self, grid: &Grid, row: usize, col: usize) -> LocalTile {
+    pub(crate) fn tile(&self, grid: &Grid, row: usize, col: usize) -> LocalTile {
         let n = self.n();
         let (r0, r1) = grid.chunk(n, row);
         let (c0, c1) = grid.chunk(n, col);
@@ -106,86 +114,36 @@ pub struct RescalkReport {
     pub wall_seconds: f64,
 }
 
-/// Assemble the full A from the diagonal ranks' row blocks.
-fn gather_a(grid: &Grid, n: usize, k: usize, blocks: &[(usize, usize, Mat)]) -> Mat {
-    let mut a = Mat::zeros(n, k);
-    for (row, col, block) in blocks {
-        if row == col {
-            let (s, _) = grid.chunk(n, *row);
-            for i in 0..block.rows() {
-                for j in 0..k {
-                    a[(s + i, j)] = block[(i, j)];
-                }
-            }
-        }
-    }
-    a
-}
-
-/// Run one distributed non-negative RESCAL factorization.
+/// Run one distributed non-negative RESCAL factorization on a one-shot
+/// engine (the pool is torn down afterwards — build an [`Engine`] for
+/// repeated jobs).
+///
+/// # Panics
+/// On invalid configuration or a dead rank; the engine API returns these
+/// as errors instead.
+#[deprecated(note = "build an engine::Engine and call factorize: the pool persists across jobs")]
 pub fn run_rescal(
     data: &JobData,
     job: &JobConfig,
     opts: &RescalOptions,
     seed: u64,
 ) -> RescalReport {
-    let n = data.n();
-    let grid = Grid::new(job.p);
-    let t0 = Instant::now();
-    let results = run_on_grid(job.p, |ctx| {
-        let tile = data.tile(&ctx.grid, ctx.row, ctx.col);
-        let cfg = DistRescalConfig {
-            opts: opts.clone(),
-            init: DistInit::Random { seed },
-            n,
-        };
-        let mut backend = job.backend.build().expect("backend build");
-        let mut trace = if job.trace { Trace::new() } else { Trace::disabled() };
-        let out = rescal_rank(&ctx, &tile, &cfg, backend.as_mut(), &mut trace);
-        (ctx.row, ctx.col, out, trace)
-    });
-    let wall_seconds = t0.elapsed().as_secs_f64();
-    let blocks: Vec<(usize, usize, Mat)> =
-        results.iter().map(|(r, c, out, _)| (*r, *c, out.a_row.clone())).collect();
-    let a = gather_a(&grid, n, opts.k, &blocks);
-    let (_, _, out0, _) = &results[0];
-    RescalReport {
-        a,
-        r: out0.r.clone(),
-        rel_error: out0.rel_error,
-        iters_run: out0.iters_run,
-        traces: results.into_iter().map(|(_, _, _, t)| t).collect(),
-        wall_seconds,
-    }
+    let mut engine =
+        Engine::new(EngineConfig::from(job.clone())).expect("engine construction");
+    engine.factorize(data, opts, seed).expect("factorize job")
 }
 
-/// Run the full RESCALk model-selection sweep.
+/// Run the full RESCALk model-selection sweep on a one-shot engine (see
+/// [`run_rescal`] on why the engine API is preferred).
+///
+/// # Panics
+/// On invalid configuration, a dead rank, or cross-rank k_opt
+/// disagreement; the engine API returns these as errors instead.
+#[deprecated(note = "build an engine::Engine and call model_select: the pool persists across jobs")]
 pub fn run_rescalk(data: &JobData, job: &JobConfig, cfg: &RescalkConfig) -> RescalkReport {
-    let n = data.n();
-    let grid = Grid::new(job.p);
-    let t0 = Instant::now();
-    let results = run_on_grid(job.p, |ctx| {
-        let tile = data.tile(&ctx.grid, ctx.row, ctx.col);
-        let mut backend = job.backend.build().expect("backend build");
-        let mut trace = if job.trace { Trace::new() } else { Trace::disabled() };
-        let out = rescalk_rank(&ctx, &tile, n, cfg, backend.as_mut(), &mut trace);
-        (ctx.row, ctx.col, out, trace)
-    });
-    let wall_seconds = t0.elapsed().as_secs_f64();
-    let k_opt = results[0].2.k_opt;
-    debug_assert!(results.iter().all(|(_, _, o, _)| o.k_opt == k_opt));
-    let blocks: Vec<(usize, usize, Mat)> =
-        results.iter().map(|(r, c, out, _)| (*r, *c, out.a_opt_row.clone())).collect();
-    let a = gather_a(&grid, n, k_opt, &blocks);
-    let (_, _, out0, _) = &results[0];
-    RescalkReport {
-        scores: out0.scores.clone(),
-        k_opt,
-        a,
-        r: out0.r_opt.clone(),
-        traces: results.into_iter().map(|(_, _, _, t)| t).collect(),
-        wall_seconds,
-    }
+    let mut engine =
+        Engine::new(EngineConfig::from(job.clone())).expect("engine construction");
+    engine.model_select(data, cfg).expect("model-select job")
 }
 
 #[cfg(test)]
@@ -194,7 +152,29 @@ mod tests {
     use crate::data::synthetic;
 
     #[test]
-    fn run_rescal_gathers_consistent_report() {
+    fn job_config_defaults_to_tracing_off() {
+        assert!(!JobConfig::default().trace, "tracing must be opt-in");
+        let engine_cfg = EngineConfig::from(JobConfig::default());
+        assert_eq!(engine_cfg.p, 4);
+        assert!(!engine_cfg.trace);
+    }
+
+    #[test]
+    fn sparse_job_data_shapes() {
+        let xs = synthetic::sparse_planted(16, 2, 2, 0.2, 1202);
+        let data = JobData::sparse(xs);
+        assert_eq!(data.n(), 16);
+        assert_eq!(data.m(), 2);
+        let tile = data.tile(&Grid::new(4), 0, 1);
+        assert_eq!(tile.rows(), 8);
+        assert_eq!(tile.cols(), 8);
+        assert_eq!(tile.m(), 2);
+    }
+
+    /// The deprecated shims must behave exactly like a one-shot engine.
+    #[test]
+    #[allow(deprecated)]
+    fn shims_delegate_to_the_engine() {
         let planted = synthetic::block_tensor(24, 2, 3, 0.01, 1200);
         let data = JobData::dense(planted.x.clone());
         let job = JobConfig { p: 4, backend: BackendSpec::Native, trace: true };
@@ -210,7 +190,8 @@ mod tests {
     }
 
     #[test]
-    fn run_rescalk_selects_k() {
+    #[allow(deprecated)]
+    fn rescalk_shim_selects_k() {
         let planted = synthetic::block_tensor(20, 2, 2, 0.01, 1201);
         let data = JobData::dense(planted.x.clone());
         let job = JobConfig { p: 4, backend: BackendSpec::Native, trace: false };
@@ -227,17 +208,5 @@ mod tests {
         assert_eq!(report.k_opt, 2, "scores {:?}", report.scores);
         assert_eq!(report.a.shape(), (20, 2));
         assert_eq!(report.scores.len(), 4);
-    }
-
-    #[test]
-    fn sparse_job_data_tiles() {
-        let xs = synthetic::sparse_planted(16, 2, 2, 0.2, 1202);
-        let data = JobData::sparse(xs);
-        assert_eq!(data.n(), 16);
-        assert_eq!(data.m(), 2);
-        let job = JobConfig { p: 4, backend: BackendSpec::Native, trace: true };
-        let report = run_rescal(&data, &job, &RescalOptions::new(2, 30), 5);
-        assert_eq!(report.a.shape(), (16, 2));
-        assert!(report.rel_error.is_finite());
     }
 }

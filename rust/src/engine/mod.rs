@@ -1,0 +1,454 @@
+//! The job engine: the crate's public entry point for running distributed
+//! RESCAL(k) work.
+//!
+//! # Lifecycle: configure → submit → report
+//!
+//! An [`Engine`] is constructed **once** from a typed [`EngineConfig`]
+//! (grid size `p`, [`BackendSpec`], trace policy). Construction spawns
+//! the √p×√p grid of rank threads and builds each rank's compute backend
+//! exactly once (see [`pool`]); the engine then accepts any number of
+//! typed jobs:
+//!
+//! * [`JobSpec::Factorize`] — one distributed non-negative RESCAL
+//!   factorization (paper Alg 3);
+//! * [`JobSpec::ModelSelect`] — the full RESCALk sweep with automatic k
+//!   determination (paper Alg 1);
+//! * [`JobSpec::Simulate`] — a cluster-scale replay through the
+//!   calibrated machine model (paper Fig 13).
+//!
+//! Every job returns a unified [`Report`] that serializes to JSON via
+//! [`Report::to_json`]. Because the pool persists, repeated-job workloads
+//! (k sweeps, perturbation ensembles, bench loops) skip the per-job
+//! thread-spawn and backend-rebuild cost the old free functions paid —
+//! including the XLA executable-cache rebuild on the PJRT path.
+//!
+//! ```no_run
+//! use drescal::coordinator::JobData;
+//! use drescal::data::synthetic;
+//! use drescal::engine::{Engine, EngineConfig};
+//! use drescal::rescal::RescalOptions;
+//!
+//! let mut engine = Engine::new(EngineConfig::default()).unwrap();
+//! let data = JobData::dense(synthetic::block_tensor(64, 3, 4, 0.01, 7).x);
+//! // two jobs on the same rank pool — no respawn between them
+//! let coarse = engine.factorize(&data, &RescalOptions::new(4, 50), 42).unwrap();
+//! let fine = engine.factorize(&data, &RescalOptions::new(4, 500), 42).unwrap();
+//! assert!(fine.rel_error <= coarse.rel_error + 1e-4);
+//! ```
+
+mod pool;
+pub mod report;
+
+pub use report::{Report, SimReport, SimRow};
+
+use std::time::Instant;
+
+use crate::backend::BackendSpec;
+use crate::comm::Grid;
+use crate::coordinator::{JobData, RescalReport, RescalkReport};
+use crate::err;
+use crate::error::Result;
+use crate::model_selection::RescalkConfig;
+use crate::rescal::distributed::DistInit;
+use crate::rescal::RescalOptions;
+use crate::simulate::{exascale, Machine};
+use crate::tensor::Mat;
+use crate::{bail, comm::Trace};
+
+/// Engine-level configuration, fixed for the engine's lifetime.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Number of virtual MPI ranks (must be a perfect square).
+    pub p: usize,
+    /// Compute backend each rank builds (once).
+    pub backend: BackendSpec,
+    /// Record per-op timing traces. Off by default: tracing taxes every
+    /// hot-path op, so it is opt-in (`--trace` on the CLI).
+    pub trace: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { p: 4, backend: BackendSpec::Native, trace: false }
+    }
+}
+
+impl EngineConfig {
+    /// Config with `p` ranks, native backend, tracing off.
+    pub fn new(p: usize) -> Self {
+        EngineConfig { p, ..Default::default() }
+    }
+
+    pub fn with_backend(mut self, backend: BackendSpec) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_trace(mut self, trace: bool) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Validate without spawning anything.
+    pub fn validate(&self) -> Result<()> {
+        if self.p == 0 {
+            bail!("engine grid size p must be >= 1");
+        }
+        let q = (self.p as f64).sqrt().round() as usize;
+        if q * q != self.p {
+            bail!(
+                "engine grid size p must be a perfect square (paper §6.1.3), got {}",
+                self.p
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One typed job submission.
+pub enum JobSpec {
+    /// Distributed non-negative RESCAL (Alg 3).
+    Factorize { data: JobData, opts: RescalOptions, init: DistInit },
+    /// RESCALk model-selection sweep (Alg 1).
+    ModelSelect { data: JobData, cfg: RescalkConfig },
+    /// Cluster-scale replay through the calibrated machine model; runs on
+    /// the leader, not the rank pool.
+    Simulate(SimSpec),
+}
+
+/// Which modeled scenario a [`JobSpec::Simulate`] job replays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimScenario {
+    /// Fig 13a: the 11.5 TB dense RESCALk sweep on 4096 ranks.
+    Dense11Tb,
+    /// Fig 13b: the 9.5 EB sparse runs across densities on 22801 ranks.
+    SparseExabyte,
+}
+
+impl SimScenario {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimScenario::Dense11Tb => "dense_11tb",
+            SimScenario::SparseExabyte => "sparse_exabyte",
+        }
+    }
+}
+
+/// Simulation job parameters.
+#[derive(Clone)]
+pub struct SimSpec {
+    pub machine: Machine,
+    pub scenario: SimScenario,
+}
+
+/// Pool health counters, for tests and diagnostics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Grid size p.
+    pub ranks: usize,
+    /// Backend constructions since the engine was built. Equal to
+    /// `ranks` for the engine's whole lifetime — backends are never
+    /// rebuilt between jobs.
+    pub backend_builds: usize,
+    /// Jobs completed successfully (pings not counted).
+    pub jobs_completed: usize,
+}
+
+/// A persistent distributed-execution engine over a fixed rank pool.
+pub struct Engine {
+    cfg: EngineConfig,
+    grid: Grid,
+    pool: pool::RankPool,
+    jobs_completed: usize,
+}
+
+impl Engine {
+    /// Validate the config, spawn the rank pool, and build every rank's
+    /// backend. Fails (instead of panicking mid-job) on a non-square grid
+    /// or an unconstructible backend.
+    pub fn new(cfg: EngineConfig) -> Result<Engine> {
+        cfg.validate()?;
+        let pool = pool::RankPool::spawn(cfg.p, &cfg.backend, cfg.trace)?;
+        let grid = Grid::new(cfg.p);
+        Ok(Engine { grid, pool, cfg, jobs_completed: 0 })
+    }
+
+    /// The configuration this engine was built from.
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Submit one typed job and gather its unified report.
+    pub fn submit(&mut self, job: JobSpec) -> Result<Report> {
+        match job {
+            JobSpec::Factorize { data, opts, init } => {
+                self.run_factorize(data, opts, init).map(Report::Factorize)
+            }
+            JobSpec::ModelSelect { data, cfg } => {
+                self.run_model_select(data, cfg).map(Report::ModelSelect)
+            }
+            JobSpec::Simulate(spec) => {
+                let rows = match spec.scenario {
+                    SimScenario::Dense11Tb => {
+                        vec![SimRow::from(&exascale::dense_11tb_run(&spec.machine))]
+                    }
+                    SimScenario::SparseExabyte => exascale::sparse_exabyte_runs(&spec.machine)
+                        .iter()
+                        .map(SimRow::from)
+                        .collect(),
+                };
+                self.jobs_completed += 1;
+                Ok(Report::Simulate(SimReport {
+                    scenario: spec.scenario.name().to_string(),
+                    rows,
+                }))
+            }
+        }
+    }
+
+    /// Convenience: one seeded-random factorization.
+    pub fn factorize(
+        &mut self,
+        data: &JobData,
+        opts: &RescalOptions,
+        seed: u64,
+    ) -> Result<RescalReport> {
+        let report = self.submit(JobSpec::Factorize {
+            data: data.clone(),
+            opts: opts.clone(),
+            init: DistInit::Random { seed },
+        })?;
+        match report {
+            Report::Factorize(r) => Ok(r),
+            _ => Err(err!("factorize job returned a non-factorize report")),
+        }
+    }
+
+    /// Convenience: one model-selection sweep.
+    pub fn model_select(
+        &mut self,
+        data: &JobData,
+        cfg: &RescalkConfig,
+    ) -> Result<RescalkReport> {
+        let report =
+            self.submit(JobSpec::ModelSelect { data: data.clone(), cfg: cfg.clone() })?;
+        match report {
+            Report::ModelSelect(r) => Ok(r),
+            _ => Err(err!("model-select job returned a non-model-select report")),
+        }
+    }
+
+    /// Convenience: one modeled replay.
+    pub fn simulate(&mut self, spec: SimSpec) -> Result<SimReport> {
+        let report = self.submit(JobSpec::Simulate(spec))?;
+        match report {
+            Report::Simulate(r) => Ok(r),
+            _ => Err(err!("simulate job returned a non-simulate report")),
+        }
+    }
+
+    /// Health probe: every rank replies with its worker thread id (rank
+    /// order). Thread ids are stable across jobs — the pool never
+    /// respawns.
+    pub fn ping(&mut self) -> Result<Vec<std::thread::ThreadId>> {
+        self.pool.broadcast(&pool::RankJob::Ping)?;
+        let outs = self.pool.collect()?;
+        outs.into_iter()
+            .enumerate()
+            .map(|(rank, o)| match o {
+                pool::RankOut::Ping(id) => Ok(id),
+                _ => Err(err!("rank {rank}: unexpected reply to ping")),
+            })
+            .collect()
+    }
+
+    /// Pool health counters.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            ranks: self.pool.p(),
+            backend_builds: self.pool.backend_builds(),
+            jobs_completed: self.jobs_completed,
+        }
+    }
+
+    fn run_factorize(
+        &mut self,
+        data: JobData,
+        opts: RescalOptions,
+        init: DistInit,
+    ) -> Result<RescalReport> {
+        let n = data.n();
+        let k = opts.k;
+        let t0 = Instant::now();
+        self.pool.broadcast(&pool::RankJob::Factorize { data, n, opts, init })?;
+        let outs = self.pool.collect()?;
+        let wall_seconds = t0.elapsed().as_secs_f64();
+        let mut blocks: Vec<(usize, usize, Mat)> = Vec::with_capacity(outs.len());
+        let mut traces: Vec<Trace> = Vec::with_capacity(outs.len());
+        let mut first = None;
+        for (rank, out) in outs.into_iter().enumerate() {
+            match out {
+                pool::RankOut::Factorize { row, col, result, trace } => {
+                    // only diagonal ranks' row blocks enter the gathered A
+                    if row == col {
+                        blocks.push((row, col, result.a_row.clone()));
+                    }
+                    traces.push(trace);
+                    if first.is_none() {
+                        first = Some(result);
+                    }
+                }
+                _ => bail!("rank {rank}: unexpected reply to factorize job"),
+            }
+        }
+        let first = first.ok_or_else(|| err!("factorize job returned no rank results"))?;
+        let a = gather_a(&self.grid, n, k, &blocks);
+        self.jobs_completed += 1;
+        Ok(RescalReport {
+            a,
+            r: first.r.clone(),
+            rel_error: first.rel_error,
+            iters_run: first.iters_run,
+            traces,
+            wall_seconds,
+        })
+    }
+
+    fn run_model_select(
+        &mut self,
+        data: JobData,
+        cfg: RescalkConfig,
+    ) -> Result<RescalkReport> {
+        let n = data.n();
+        let t0 = Instant::now();
+        self.pool.broadcast(&pool::RankJob::ModelSelect { data, n, cfg })?;
+        let outs = self.pool.collect()?;
+        let wall_seconds = t0.elapsed().as_secs_f64();
+        let mut results = Vec::with_capacity(outs.len());
+        let mut traces: Vec<Trace> = Vec::with_capacity(outs.len());
+        for (rank, out) in outs.into_iter().enumerate() {
+            match out {
+                pool::RankOut::ModelSelect { row, col, result, trace } => {
+                    results.push((row, col, result));
+                    traces.push(trace);
+                }
+                _ => bail!("rank {rank}: unexpected reply to model-select job"),
+            }
+        }
+        // deterministic collectives should force agreement; verify it for
+        // real (in release builds too) instead of trusting a debug_assert
+        let k_opts: Vec<usize> = results.iter().map(|(_, _, r)| r.k_opt).collect();
+        let k_opt = check_k_agreement(&k_opts)?;
+        // only diagonal ranks' row blocks enter the gathered A
+        let blocks: Vec<(usize, usize, Mat)> = results
+            .iter()
+            .filter(|(row, col, _)| row == col)
+            .map(|(row, col, r)| (*row, *col, r.a_opt_row.clone()))
+            .collect();
+        let a = gather_a(&self.grid, n, k_opt, &blocks);
+        let (_, _, first) = &results[0];
+        self.jobs_completed += 1;
+        Ok(RescalkReport {
+            scores: first.scores.clone(),
+            k_opt,
+            a,
+            r: first.r_opt.clone(),
+            traces,
+            wall_seconds,
+        })
+    }
+}
+
+/// Verify every rank selected the same k; a disagreement means the
+/// deterministic-collective contract was violated and the gathered factors
+/// would be inconsistent, so it is a hard runtime error, not a debug
+/// assertion.
+pub fn check_k_agreement(k_opts: &[usize]) -> Result<usize> {
+    let k0 = match k_opts.first() {
+        Some(&k) => k,
+        None => bail!("model-selection job returned no rank results"),
+    };
+    for (rank, &k) in k_opts.iter().enumerate() {
+        if k != k0 {
+            bail!(
+                "cross-rank model-selection disagreement: rank 0 chose k={k0} \
+                 but rank {rank} chose k={k} — rank results are inconsistent"
+            );
+        }
+    }
+    Ok(k0)
+}
+
+/// Assemble the full A from the diagonal ranks' row blocks.
+pub(crate) fn gather_a(
+    grid: &Grid,
+    n: usize,
+    k: usize,
+    blocks: &[(usize, usize, Mat)],
+) -> Mat {
+    let mut a = Mat::zeros(n, k);
+    for (row, col, block) in blocks {
+        if row == col {
+            let (s, _) = grid.chunk(n, *row);
+            for i in 0..block.rows() {
+                for j in 0..k {
+                    a[(s + i, j)] = block[(i, j)];
+                }
+            }
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn config_validation_rejects_non_square_grids() {
+        assert!(EngineConfig::new(4).validate().is_ok());
+        assert!(EngineConfig::new(9).validate().is_ok());
+        assert!(EngineConfig::new(1).validate().is_ok());
+        let e = EngineConfig::new(8).validate().unwrap_err();
+        assert!(e.to_string().contains("perfect square"), "{e}");
+        assert!(EngineConfig::new(0).validate().is_err());
+        assert!(Engine::new(EngineConfig::new(6)).is_err());
+    }
+
+    #[test]
+    fn k_agreement_check_is_a_real_runtime_error() {
+        assert_eq!(check_k_agreement(&[3, 3, 3, 3]).unwrap(), 3);
+        assert_eq!(check_k_agreement(&[5]).unwrap(), 5);
+        let e = check_k_agreement(&[3, 3, 4, 3]).unwrap_err();
+        assert!(e.to_string().contains("disagreement"), "{e}");
+        assert!(check_k_agreement(&[]).is_err());
+    }
+
+    #[test]
+    fn engine_defaults_to_tracing_off() {
+        let cfg = EngineConfig::default();
+        assert!(!cfg.trace, "tracing must be opt-in");
+        let mut engine = Engine::new(cfg).unwrap();
+        let planted = synthetic::block_tensor(16, 2, 2, 0.01, 42);
+        let data = JobData::dense(planted.x);
+        let report = engine.factorize(&data, &RescalOptions::new(2, 20), 1).unwrap();
+        for trace in &report.traces {
+            assert!(trace.events().is_empty(), "untraced run recorded events");
+        }
+    }
+
+    #[test]
+    fn simulate_runs_on_the_leader() {
+        let mut engine = Engine::new(EngineConfig::new(1)).unwrap();
+        let report = engine
+            .simulate(SimSpec { machine: Machine::cpu_cluster(), scenario: SimScenario::SparseExabyte })
+            .unwrap();
+        assert_eq!(report.scenario, "sparse_exabyte");
+        assert_eq!(report.rows.len(), 5);
+        for row in &report.rows {
+            assert!(row.comm_fraction() > 0.85);
+        }
+        assert_eq!(engine.stats().jobs_completed, 1);
+    }
+}

@@ -1,0 +1,229 @@
+//! The persistent rank pool behind [`super::Engine`].
+//!
+//! One OS thread per virtual rank, spawned **once** per engine: each
+//! worker owns its [`RankCtx`] (grid coordinates + communicator handles)
+//! and builds its compute backend exactly once, then serves typed jobs
+//! from a channel until the engine drops. This is what makes repeated-job
+//! workloads (k sweeps, perturbation ensembles, bench loops) cheap — the
+//! old free functions respawned every thread and rebuilt every backend
+//! (including the XLA executable cache) per call.
+//!
+//! Collectives stay correct because the engine broadcasts every job to
+//! all ranks before gathering any result, and each worker consumes its
+//! queue in send order — so all ranks execute the same job sequence in
+//! lockstep, exactly like the one-shot grid harness did.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::{JoinHandle, ThreadId};
+
+use crate::backend::BackendSpec;
+use crate::comm::grid::RankCtx;
+use crate::comm::Trace;
+use crate::coordinator::JobData;
+use crate::err;
+use crate::error::Result;
+use crate::model_selection::{rescalk_rank, RescalkConfig, RescalkResult};
+use crate::rescal::distributed::{DistInit, DistRescalConfig};
+use crate::rescal::{rescal_rank, RankResult, RescalOptions};
+
+/// One job as seen by a single rank thread.
+#[derive(Clone)]
+pub(crate) enum RankJob {
+    /// Distributed RESCAL (Alg 3) on this rank's tile.
+    Factorize { data: JobData, n: usize, opts: RescalOptions, init: DistInit },
+    /// Full RESCALk model-selection sweep (Alg 1) on this rank's tile.
+    ModelSelect { data: JobData, n: usize, cfg: RescalkConfig },
+    /// Health probe: reply with the worker's thread id (no collectives).
+    Ping,
+}
+
+/// One rank's reply.
+pub(crate) enum RankOut {
+    /// Startup handshake: backend built, worker thread id attached.
+    Ready(ThreadId),
+    /// Startup failure (e.g. missing artifact directory).
+    BuildError(String),
+    Factorize { row: usize, col: usize, result: Box<RankResult>, trace: Trace },
+    ModelSelect { row: usize, col: usize, result: Box<RescalkResult>, trace: Trace },
+    Ping(ThreadId),
+}
+
+/// Counters shared between the engine and its workers.
+#[derive(Default)]
+struct PoolShared {
+    /// Total backend constructions over the pool's lifetime. Stays equal
+    /// to `p` however many jobs run — the reuse guarantee tests assert on.
+    backend_builds: AtomicUsize,
+}
+
+struct Worker {
+    job_tx: Sender<RankJob>,
+    out_rx: Receiver<RankOut>,
+    handle: JoinHandle<()>,
+    thread_id: ThreadId,
+}
+
+/// A spawned set of rank workers plus their channels.
+pub(crate) struct RankPool {
+    workers: Vec<Worker>,
+    shared: Arc<PoolShared>,
+    /// Set when a worker died mid-job; Drop skips joining (surviving
+    /// ranks may be parked in a collective barrier forever).
+    poisoned: bool,
+}
+
+impl RankPool {
+    /// Spawn `p` rank threads, each building its backend once. Fails if
+    /// any rank's backend cannot be constructed.
+    pub fn spawn(p: usize, backend: &BackendSpec, trace: bool) -> Result<RankPool> {
+        let ctxs = RankCtx::create_all(p);
+        let shared = Arc::new(PoolShared::default());
+        let mut pending = Vec::with_capacity(p);
+        for ctx in ctxs {
+            let (job_tx, job_rx) = channel::<RankJob>();
+            let (out_tx, out_rx) = channel::<RankOut>();
+            let spec = backend.clone();
+            let shared2 = Arc::clone(&shared);
+            let name = format!("drescal-rank-{}", ctx.rank);
+            let handle = std::thread::Builder::new()
+                .name(name)
+                .spawn(move || worker_loop(ctx, spec, trace, shared2, job_rx, out_tx))
+                .map_err(|e| err!("spawning rank thread: {e}"))?;
+            pending.push((job_tx, out_rx, handle));
+        }
+        // startup handshake: every rank reports its backend construction
+        let mut workers = Vec::with_capacity(p);
+        for (rank, (job_tx, out_rx, handle)) in pending.into_iter().enumerate() {
+            let thread_id = match out_rx.recv() {
+                Ok(RankOut::Ready(id)) => id,
+                Ok(RankOut::BuildError(e)) => {
+                    return Err(err!("rank {rank}: backend build failed: {e}"))
+                }
+                Ok(_) => return Err(err!("rank {rank}: unexpected startup message")),
+                Err(_) => return Err(err!("rank {rank}: thread died during startup")),
+            };
+            workers.push(Worker { job_tx, out_rx, handle, thread_id });
+        }
+        Ok(RankPool { workers, shared, poisoned: false })
+    }
+
+    /// Number of ranks.
+    pub fn p(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Total backend constructions since spawn (== p forever, by design).
+    pub fn backend_builds(&self) -> usize {
+        self.shared.backend_builds.load(Ordering::SeqCst)
+    }
+
+    /// The worker thread ids recorded at spawn, rank order.
+    pub fn thread_ids(&self) -> Vec<ThreadId> {
+        self.workers.iter().map(|w| w.thread_id).collect()
+    }
+
+    /// Send one job to every rank (they all must run it, in lockstep).
+    pub fn broadcast(&mut self, job: &RankJob) -> Result<()> {
+        for (rank, w) in self.workers.iter().enumerate() {
+            if w.job_tx.send(job.clone()).is_err() {
+                self.poisoned = true;
+                return Err(err!("rank {rank}: thread is gone"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive one reply from every rank, rank order.
+    pub fn collect(&mut self) -> Result<Vec<RankOut>> {
+        let mut outs = Vec::with_capacity(self.workers.len());
+        for (rank, w) in self.workers.iter().enumerate() {
+            match w.out_rx.recv() {
+                Ok(o) => outs.push(o),
+                Err(_) => {
+                    self.poisoned = true;
+                    return Err(err!("rank {rank}: thread died mid-job"));
+                }
+            }
+        }
+        Ok(outs)
+    }
+}
+
+impl Drop for RankPool {
+    fn drop(&mut self) {
+        let workers: Vec<Worker> = self.workers.drain(..).collect();
+        let mut handles = Vec::with_capacity(workers.len());
+        // close every job channel first so all workers can exit their
+        // recv loop before any join
+        for w in workers {
+            drop(w.job_tx);
+            drop(w.out_rx);
+            handles.push(w.handle);
+        }
+        if self.poisoned {
+            // a dead rank can leave survivors parked in a collective
+            // barrier; detach rather than hang the caller
+            return;
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Body of one rank thread: build the backend once, then serve jobs until
+/// the engine closes the channel.
+fn worker_loop(
+    ctx: RankCtx,
+    spec: BackendSpec,
+    trace_enabled: bool,
+    shared: Arc<PoolShared>,
+    jobs: Receiver<RankJob>,
+    out: Sender<RankOut>,
+) {
+    let mut backend = match spec.build() {
+        Ok(b) => {
+            shared.backend_builds.fetch_add(1, Ordering::SeqCst);
+            if out.send(RankOut::Ready(std::thread::current().id())).is_err() {
+                return;
+            }
+            b
+        }
+        Err(e) => {
+            let _ = out.send(RankOut::BuildError(e.to_string()));
+            return;
+        }
+    };
+    while let Ok(job) = jobs.recv() {
+        let mut trace = if trace_enabled { Trace::new() } else { Trace::disabled() };
+        let reply = match job {
+            RankJob::Ping => RankOut::Ping(std::thread::current().id()),
+            RankJob::Factorize { data, n, opts, init } => {
+                let tile = data.tile(&ctx.grid, ctx.row, ctx.col);
+                let cfg = DistRescalConfig { opts, init, n };
+                let result = rescal_rank(&ctx, &tile, &cfg, backend.as_mut(), &mut trace);
+                RankOut::Factorize {
+                    row: ctx.row,
+                    col: ctx.col,
+                    result: Box::new(result),
+                    trace,
+                }
+            }
+            RankJob::ModelSelect { data, n, cfg } => {
+                let tile = data.tile(&ctx.grid, ctx.row, ctx.col);
+                let result = rescalk_rank(&ctx, &tile, n, &cfg, backend.as_mut(), &mut trace);
+                RankOut::ModelSelect {
+                    row: ctx.row,
+                    col: ctx.col,
+                    result: Box::new(result),
+                    trace,
+                }
+            }
+        };
+        if out.send(reply).is_err() {
+            return;
+        }
+    }
+}

@@ -1,0 +1,393 @@
+//! Unified job reports and their JSON form.
+//!
+//! Every [`super::Engine`] job returns one [`Report`] variant; all three
+//! serialize to JSON through the crate's own [`crate::json::Json`] value
+//! (`Report::to_json`) and parse back (`Report::from_json`), so run
+//! results can be archived, diffed, or fed to external tooling without
+//! any external serialization crate.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::comm::{CommOp, Trace};
+use crate::coordinator::{RescalReport, RescalkReport};
+use crate::err;
+use crate::error::Result;
+use crate::json::Json;
+use crate::model_selection::KScore;
+use crate::simulate::exascale::ExascaleRun;
+use crate::tensor::{Mat, Tensor3};
+
+/// The unified result of one engine job.
+pub enum Report {
+    /// One distributed factorization (Alg 3).
+    Factorize(RescalReport),
+    /// One model-selection sweep (Alg 1).
+    ModelSelect(RescalkReport),
+    /// One cluster-scale replay through the calibrated machine model.
+    Simulate(SimReport),
+}
+
+/// One modeled run row (owned analogue of [`ExascaleRun`], so reports can
+/// round-trip through JSON).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimRow {
+    pub label: String,
+    pub n: usize,
+    pub m: usize,
+    pub p: usize,
+    pub density: f64,
+    pub iters: usize,
+    pub compute_seconds: f64,
+    pub comm_seconds: f64,
+}
+
+impl SimRow {
+    pub fn total(&self) -> f64 {
+        self.compute_seconds + self.comm_seconds
+    }
+
+    pub fn comm_fraction(&self) -> f64 {
+        self.comm_seconds / self.total().max(1e-30)
+    }
+
+    /// Logical tensor size in bytes (f32 dense equivalent).
+    pub fn logical_bytes(&self) -> f64 {
+        self.n as f64 * self.n as f64 * self.m as f64 * 4.0
+    }
+}
+
+impl From<&ExascaleRun> for SimRow {
+    fn from(r: &ExascaleRun) -> Self {
+        SimRow {
+            label: r.label.to_string(),
+            n: r.n,
+            m: r.m,
+            p: r.p,
+            density: r.density,
+            iters: r.iters,
+            compute_seconds: r.compute_seconds,
+            comm_seconds: r.comm_seconds,
+        }
+    }
+}
+
+/// Result of a [`super::JobSpec::Simulate`] job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimReport {
+    /// Scenario name (e.g. "dense_11tb").
+    pub scenario: String,
+    pub rows: Vec<SimRow>,
+}
+
+impl Report {
+    /// Report kind tag used in the JSON form.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Report::Factorize(_) => "factorize",
+            Report::ModelSelect(_) => "model_select",
+            Report::Simulate(_) => "simulate",
+        }
+    }
+
+    /// Serialize through the crate JSON value.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("kind".to_string(), Json::Str(self.kind().to_string()));
+        match self {
+            Report::Factorize(r) => {
+                obj.insert("rel_error".to_string(), Json::Num(r.rel_error as f64));
+                obj.insert("iters_run".to_string(), Json::Num(r.iters_run as f64));
+                obj.insert("wall_seconds".to_string(), Json::Num(r.wall_seconds));
+                obj.insert("a".to_string(), mat_to_json(&r.a));
+                obj.insert("r".to_string(), tensor_to_json(&r.r));
+                obj.insert("traces".to_string(), traces_to_json(&r.traces));
+            }
+            Report::ModelSelect(r) => {
+                obj.insert("k_opt".to_string(), Json::Num(r.k_opt as f64));
+                obj.insert(
+                    "scores".to_string(),
+                    Json::Arr(r.scores.iter().map(score_to_json).collect()),
+                );
+                obj.insert("wall_seconds".to_string(), Json::Num(r.wall_seconds));
+                obj.insert("a".to_string(), mat_to_json(&r.a));
+                obj.insert("r".to_string(), tensor_to_json(&r.r));
+                obj.insert("traces".to_string(), traces_to_json(&r.traces));
+            }
+            Report::Simulate(r) => {
+                obj.insert("scenario".to_string(), Json::Str(r.scenario.clone()));
+                obj.insert(
+                    "runs".to_string(),
+                    Json::Arr(r.rows.iter().map(sim_row_to_json).collect()),
+                );
+            }
+        }
+        Json::Obj(obj)
+    }
+
+    /// Parse a report back from its JSON form. Trace timings are restored
+    /// as one aggregate event per op category (nanosecond-rounded), which
+    /// is exactly what the JSON form carries.
+    pub fn from_json(v: &Json) -> Result<Report> {
+        let kind = v
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| err!("report missing 'kind'"))?;
+        match kind {
+            "factorize" => Ok(Report::Factorize(RescalReport {
+                a: mat_from_json(v.get("a").ok_or_else(|| err!("missing 'a'"))?)?,
+                r: tensor_from_json(v.get("r").ok_or_else(|| err!("missing 'r'"))?)?,
+                rel_error: get_f64(v, "rel_error")? as f32,
+                iters_run: get_f64(v, "iters_run")? as usize,
+                traces: traces_from_json(
+                    v.get("traces").ok_or_else(|| err!("missing 'traces'"))?,
+                )?,
+                wall_seconds: get_f64(v, "wall_seconds")?,
+            })),
+            "model_select" => {
+                let scores = v
+                    .get("scores")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| err!("missing 'scores'"))?
+                    .iter()
+                    .map(score_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Report::ModelSelect(RescalkReport {
+                    scores,
+                    k_opt: get_f64(v, "k_opt")? as usize,
+                    a: mat_from_json(v.get("a").ok_or_else(|| err!("missing 'a'"))?)?,
+                    r: tensor_from_json(v.get("r").ok_or_else(|| err!("missing 'r'"))?)?,
+                    traces: traces_from_json(
+                        v.get("traces").ok_or_else(|| err!("missing 'traces'"))?,
+                    )?,
+                    wall_seconds: get_f64(v, "wall_seconds")?,
+                }))
+            }
+            "simulate" => {
+                let scenario = v
+                    .get("scenario")
+                    .and_then(|s| s.as_str())
+                    .ok_or_else(|| err!("missing 'scenario'"))?
+                    .to_string();
+                let rows = v
+                    .get("runs")
+                    .and_then(|r| r.as_arr())
+                    .ok_or_else(|| err!("missing 'runs'"))?
+                    .iter()
+                    .map(sim_row_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Report::Simulate(SimReport { scenario, rows }))
+            }
+            other => Err(err!("unknown report kind '{other}'")),
+        }
+    }
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| err!("report missing numeric field '{key}'"))
+}
+
+fn mat_to_json(m: &Mat) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("rows".to_string(), Json::Num(m.rows() as f64));
+    obj.insert("cols".to_string(), Json::Num(m.cols() as f64));
+    obj.insert(
+        "data".to_string(),
+        Json::Arr(m.as_slice().iter().map(|&x| Json::Num(x as f64)).collect()),
+    );
+    Json::Obj(obj)
+}
+
+fn mat_from_json(v: &Json) -> Result<Mat> {
+    let rows = get_f64(v, "rows")? as usize;
+    let cols = get_f64(v, "cols")? as usize;
+    let data = v
+        .get("data")
+        .and_then(|d| d.as_arr())
+        .ok_or_else(|| err!("matrix missing 'data'"))?
+        .iter()
+        .map(|x| x.as_f64().map(|f| f as f32).ok_or_else(|| err!("non-numeric matrix entry")))
+        .collect::<Result<Vec<f32>>>()?;
+    if data.len() != rows * cols {
+        return Err(err!("matrix data length {} != {rows}x{cols}", data.len()));
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+fn tensor_to_json(t: &Tensor3) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert(
+        "slices".to_string(),
+        Json::Arr(t.slices().iter().map(mat_to_json).collect()),
+    );
+    Json::Obj(obj)
+}
+
+fn tensor_from_json(v: &Json) -> Result<Tensor3> {
+    let slices = v
+        .get("slices")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| err!("tensor missing 'slices'"))?
+        .iter()
+        .map(mat_from_json)
+        .collect::<Result<Vec<Mat>>>()?;
+    if slices.is_empty() {
+        return Err(err!("tensor has no slices"));
+    }
+    Ok(Tensor3::from_slices(slices))
+}
+
+fn score_to_json(s: &KScore) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("k".to_string(), Json::Num(s.k as f64));
+    obj.insert("sil_min".to_string(), Json::Num(s.sil_min as f64));
+    obj.insert("sil_avg".to_string(), Json::Num(s.sil_avg as f64));
+    obj.insert("rel_error".to_string(), Json::Num(s.rel_error as f64));
+    Json::Obj(obj)
+}
+
+fn score_from_json(v: &Json) -> Result<KScore> {
+    Ok(KScore {
+        k: get_f64(v, "k")? as usize,
+        sil_min: get_f64(v, "sil_min")? as f32,
+        sil_avg: get_f64(v, "sil_avg")? as f32,
+        rel_error: get_f64(v, "rel_error")? as f32,
+    })
+}
+
+/// Per-rank traces serialize as the per-op aggregate (seconds + bytes),
+/// which is what the scaling figures consume.
+fn traces_to_json(traces: &[Trace]) -> Json {
+    Json::Arr(
+        traces
+            .iter()
+            .map(|t| {
+                let mut ops = BTreeMap::new();
+                for &op in CommOp::all() {
+                    let secs = t.seconds(op);
+                    let bytes = t.bytes(op);
+                    if secs > 0.0 || bytes > 0 {
+                        let mut entry = BTreeMap::new();
+                        entry.insert("seconds".to_string(), Json::Num(secs));
+                        entry.insert("bytes".to_string(), Json::Num(bytes as f64));
+                        ops.insert(op.name().to_string(), Json::Obj(entry));
+                    }
+                }
+                Json::Obj(ops)
+            })
+            .collect(),
+    )
+}
+
+fn op_from_name(name: &str) -> Option<CommOp> {
+    CommOp::all().iter().copied().find(|op| op.name() == name)
+}
+
+fn traces_from_json(v: &Json) -> Result<Vec<Trace>> {
+    v.as_arr()
+        .ok_or_else(|| err!("'traces' must be an array"))?
+        .iter()
+        .map(|t| {
+            let obj = t.as_obj().ok_or_else(|| err!("trace must be an object"))?;
+            let mut trace = Trace::new();
+            for (name, entry) in obj {
+                let op = op_from_name(name)
+                    .ok_or_else(|| err!("unknown trace op '{name}'"))?;
+                let secs = get_f64(entry, "seconds")?;
+                let bytes = get_f64(entry, "bytes")? as usize;
+                trace.push(op, bytes, Duration::from_secs_f64(secs));
+            }
+            Ok(trace)
+        })
+        .collect()
+}
+
+fn sim_row_to_json(r: &SimRow) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("label".to_string(), Json::Str(r.label.clone()));
+    obj.insert("n".to_string(), Json::Num(r.n as f64));
+    obj.insert("m".to_string(), Json::Num(r.m as f64));
+    obj.insert("p".to_string(), Json::Num(r.p as f64));
+    obj.insert("density".to_string(), Json::Num(r.density));
+    obj.insert("iters".to_string(), Json::Num(r.iters as f64));
+    obj.insert("compute_seconds".to_string(), Json::Num(r.compute_seconds));
+    obj.insert("comm_seconds".to_string(), Json::Num(r.comm_seconds));
+    Json::Obj(obj)
+}
+
+fn sim_row_from_json(v: &Json) -> Result<SimRow> {
+    Ok(SimRow {
+        label: v
+            .get("label")
+            .and_then(|l| l.as_str())
+            .ok_or_else(|| err!("run missing 'label'"))?
+            .to_string(),
+        n: get_f64(v, "n")? as usize,
+        m: get_f64(v, "m")? as usize,
+        p: get_f64(v, "p")? as usize,
+        density: get_f64(v, "density")?,
+        iters: get_f64(v, "iters")? as usize,
+        compute_seconds: get_f64(v, "compute_seconds")?,
+        comm_seconds: get_f64(v, "comm_seconds")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulate_report_json_roundtrip_exact() {
+        let report = Report::Simulate(SimReport {
+            scenario: "dense_11tb".to_string(),
+            rows: vec![SimRow {
+                label: "dense 11.5TB".to_string(),
+                n: 396_800,
+                m: 20,
+                p: 4096,
+                density: 1.0,
+                iters: 200,
+                compute_seconds: 5000.25,
+                comm_seconds: 1250.5,
+            }],
+        });
+        let json = report.to_json();
+        // serialize -> parse is the identity on the Json value
+        let reparsed = Json::parse(&json.to_string()).unwrap();
+        assert_eq!(reparsed, json);
+        // from_json rebuilds the same report
+        let back = Report::from_json(&reparsed).unwrap();
+        match (report, back) {
+            (Report::Simulate(a), Report::Simulate(b)) => assert_eq!(a, b),
+            _ => panic!("kind changed in roundtrip"),
+        }
+    }
+
+    #[test]
+    fn sim_row_derived_quantities() {
+        let row = SimRow {
+            label: "x".into(),
+            n: 1000,
+            m: 2,
+            p: 4,
+            density: 1.0,
+            iters: 10,
+            compute_seconds: 3.0,
+            comm_seconds: 1.0,
+        };
+        assert_eq!(row.total(), 4.0);
+        assert!((row.comm_fraction() - 0.25).abs() < 1e-12);
+        assert_eq!(row.logical_bytes(), 8e9);
+    }
+
+    #[test]
+    fn rejects_malformed_reports() {
+        assert!(Report::from_json(&Json::parse(r#"{"kind":"nope"}"#).unwrap()).is_err());
+        assert!(Report::from_json(&Json::parse(r#"{"no_kind":1}"#).unwrap()).is_err());
+        assert!(
+            Report::from_json(&Json::parse(r#"{"kind":"factorize"}"#).unwrap()).is_err()
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Crate-local error type: the offline crate set has no `anyhow`, so this
+//! module provides the small slice of it the system needs — a string-backed
+//! error with context chaining, a `Result` alias, and the `bail!`/`err!`
+//! macros. Validation layers ([`crate::config::RunConfig`], the
+//! [`crate::engine::Engine`] job API) return these errors instead of
+//! panicking so callers can surface actionable messages.
+
+use std::fmt;
+
+/// A human-readable error with an optional context chain, rendered
+/// outermost-first (`loading config: reading run.json: No such file`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer.
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error { msg: s.to_string() }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to any `Result` whose error is displayable.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context(self, c: impl fmt::Display) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, c: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string (the `anyhow!` analogue).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_context_chain() {
+        let e = Error::msg("root cause").context("outer");
+        assert_eq!(e.to_string(), "outer: root cause");
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+    }
+
+    #[test]
+    fn result_context_trait() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.context("while testing").unwrap_err();
+        assert_eq!(e.to_string(), "while testing: inner");
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3: inner");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(x: usize) -> crate::error::Result<()> {
+            if x > 2 {
+                bail!("x too large: {x}");
+            }
+            Err(err!("always fails ({x})"))
+        }
+        assert_eq!(fails(5).unwrap_err().to_string(), "x too large: 5");
+        assert_eq!(fails(1).unwrap_err().to_string(), "always fails (1)");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let r: Result<String> = std::fs::read_to_string("/nonexistent/drescal")
+            .map_err(Error::from);
+        assert!(r.is_err());
+    }
+}

@@ -7,18 +7,49 @@
 //! perturbation resampling, LSA-aligned clustering, and silhouette
 //! statistics.
 //!
-//! The stack has three layers (see DESIGN.md):
+//! ## The job engine
+//!
+//! All distributed work goes through [`engine::Engine`], built once from a
+//! typed [`engine::EngineConfig`] and reused for any number of jobs:
+//!
+//! * **configure** — [`engine::Engine::new`] validates the config, spawns
+//!   the √p×√p rank threads, and builds each rank's compute backend
+//!   exactly once;
+//! * **submit** — [`engine::JobSpec::Factorize`] (Alg 3),
+//!   [`engine::JobSpec::ModelSelect`] (Alg 1), or
+//!   [`engine::JobSpec::Simulate`] (the Fig 13 cluster-scale replay);
+//! * **report** — every job returns a unified [`engine::Report`] that
+//!   serializes to JSON.
+//!
+//! The persistent pool is what makes repeated-job workloads (k sweeps,
+//! perturbation ensembles, bench loops) fast: no per-job thread spawn, no
+//! backend or XLA executable-cache rebuild. The typed CLI layer
+//! ([`config::RunConfig`]) parses and validates all flags in one place
+//! before any engine is built.
+//!
+//! ## The stack
+//!
+//! Three layers (see DESIGN.md):
 //! * L1/L2 (build time): Pallas kernels + JAX segments, AOT-lowered to HLO
 //!   text in `artifacts/`.
-//! * L3 (this crate): the distributed algorithm, virtual-MPI substrate,
-//!   model selection, datasets, CLI, and benchmarks. Compute runs either on
-//!   the PJRT runtime (`runtime`/`backend::xla`) or the native fallback.
+//! * L3 (this crate): the distributed algorithm, virtual-MPI substrate
+//!   ([`comm`]), the job engine ([`engine`]), model selection, datasets,
+//!   CLI, and benchmarks. Compute runs either on the PJRT runtime
+//!   ([`runtime`] / [`backend::xla`], `--features pjrt`) or the native
+//!   fallback; the default offline build ships a stub runtime so the whole
+//!   system works without the XLA bindings.
+//!
+//! The crate is dependency-free: JSON ([`json`]), error handling
+//! ([`error`]), RNG ([`rng`]), and the bench harness ([`bench_util`]) are
+//! small internal modules.
 pub mod backend;
 pub mod bench_util;
 pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
+pub mod error;
 pub mod json;
 pub mod linalg;
 pub mod model_selection;

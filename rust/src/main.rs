@@ -1,5 +1,10 @@
 //! drescal CLI — leader entrypoint for the distributed RESCAL(k) system.
 //!
+//! Flags are parsed and validated once by [`drescal::config::RunConfig`];
+//! each subcommand then builds an [`Engine`] from its typed
+//! [`EngineConfig`] and submits jobs, printing the unified report (add
+//! `--json` for the machine-readable form).
+//!
 //! Subcommands:
 //! * `run`          — one distributed factorization on synthetic/real data
 //! * `model-select` — full RESCALk sweep with automatic k determination
@@ -10,19 +15,17 @@
 //! ```text
 //! drescal run --data synthetic --n 64 --m 3 --k 4 --p 4 --iters 200
 //! drescal model-select --data nations --p 4 --k-min 1 --k-max 7
-//! drescal run --config run.json --backend xla
+//! drescal run --config run.json --backend xla --trace
 //! ```
 
-use anyhow::{bail, Result};
-
 use drescal::bench_util;
-use drescal::config::Args;
+use drescal::config::{
+    ArtifactsCmd, Command, ExascaleCmd, FactorizeCmd, MachineSpec, ModelSelectCmd, RunConfig,
+};
 use drescal::coordinator::metrics::RunMetrics;
-use drescal::coordinator::{run_rescal, run_rescalk, JobConfig, JobData};
-use drescal::data::{nations, synthetic, trade};
-use drescal::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
-use drescal::rescal::RescalOptions;
-use drescal::simulate::{exascale, Machine};
+use drescal::engine::{Engine, EngineConfig, Report, SimScenario, SimSpec};
+use drescal::error::Result;
+use drescal::simulate::Machine;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -37,20 +40,15 @@ fn main() {
 }
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
-    let mut args = Args::parse(argv)?;
-    if let Some(path) = args.get("config").map(|s| s.to_string()) {
-        args.merge_config_file(&path)?;
-    }
-    match args.subcommand.as_str() {
-        "run" => cmd_run(&args),
-        "model-select" => cmd_model_select(&args),
-        "exascale" => cmd_exascale(&args),
-        "artifacts" => cmd_artifacts(&args),
-        "help" | "--help" | "-h" => {
+    match RunConfig::from_args(argv)?.command {
+        Command::Run(cmd) => cmd_run(cmd),
+        Command::ModelSelect(cmd) => cmd_model_select(cmd),
+        Command::Exascale(cmd) => cmd_exascale(cmd),
+        Command::Artifacts(cmd) => cmd_artifacts(cmd),
+        Command::Help => {
             print_help();
             Ok(())
         }
-        other => bail!("unknown subcommand '{other}' — try `drescal help`"),
     }
 }
 
@@ -69,115 +67,65 @@ SUBCOMMANDS
                   --k K              rank of the factorization (4)
                   --iters N          MU iterations (200)
                   --backend native|xla  [--artifacts DIR]
-                  --seed S
+                  --seed S  --trace  --json
   model-select  RESCALk sweep with automatic k determination
                   (run flags plus) --k-min --k-max --perturbations --delta
+                  --tol --err-every --regress-iters
   exascale      replay Fig 13 (11.5TB dense + 9.5EB sparse) via the model
                   --machine cpu|gpu|calibrated
   artifacts     list the AOT artifact manifest [--artifacts DIR]
   help          this text
 
-Flags may also come from --config FILE (JSON object; CLI wins)."
+Flags may also come from --config FILE (JSON object; CLI wins).
+Tracing is opt-in (--trace): per-op timing costs on every hot-path op."
     );
 }
 
-fn load_data(args: &Args) -> Result<(JobData, Option<usize>)> {
-    let kind = args.get("data").unwrap_or("synthetic");
-    let seed = args.get_u64("seed", 42)?;
-    Ok(match kind {
-        "synthetic" => {
-            let n = args.get_usize("n", 64)?;
-            let m = args.get_usize("m", 4)?;
-            let k_true = args.get_usize("k-true", 4)?;
-            let density = args.get_f64("density", 1.0)?;
-            if density < 1.0 {
-                let x = synthetic::sparse_planted(n, m, k_true, density, seed);
-                (JobData::sparse(x), Some(k_true))
-            } else {
-                let p = synthetic::planted_tensor(n, m, k_true, 0.0, seed);
-                (JobData::dense(p.x), Some(k_true))
-            }
-        }
-        "blocks" => {
-            let n = args.get_usize("n", 64)?;
-            let m = args.get_usize("m", 4)?;
-            let k_true = args.get_usize("k-true", 4)?;
-            let p = synthetic::block_tensor(n, m, k_true, 0.01, seed);
-            (JobData::dense(p.x), Some(k_true))
-        }
-        "nations" => (JobData::dense(nations::nations_tensor(seed)), Some(4)),
-        "trade" => {
-            // padded to 24 so 2×2 and 3×3 grids divide the axis (paper §6.2.2)
-            (JobData::dense(trade::trade_tensor_padded(seed, 24)), Some(5))
-        }
-        other => bail!("unknown --data '{other}'"),
-    })
-}
-
-fn job_config(args: &Args) -> Result<JobConfig> {
-    Ok(JobConfig {
-        p: args.get_usize("p", 4)?,
-        backend: args.backend()?,
-        trace: !args.get_bool("no-trace"),
-    })
-}
-
-fn cmd_run(args: &Args) -> Result<()> {
-    let (data, k_true) = load_data(args)?;
-    let job = job_config(args)?;
-    let opts = RescalOptions::new(args.get_usize("k", 4)?, args.get_usize("iters", 200)?);
+fn cmd_run(cmd: FactorizeCmd) -> Result<()> {
+    let data = cmd.data.load(cmd.seed);
+    let mut engine = Engine::new(cmd.engine)?;
     println!(
         "distributed RESCAL: n={} m={} k={} p={} backend={:?}",
         data.n(),
         data.m(),
-        opts.k,
-        job.p,
-        job.backend
+        cmd.opts.k,
+        engine.config().p,
+        engine.config().backend
     );
-    let report = run_rescal(&data, &job, &opts, args.get_u64("seed", 42)?);
+    let report = engine.factorize(&data, &cmd.opts, cmd.seed)?;
     println!(
         "done in {}: rel_error={:.4} ({} iterations)",
         bench_util::fmt_secs(report.wall_seconds),
         report.rel_error,
         report.iters_run
     );
-    if let Some(kt) = k_true {
+    if let Some(kt) = cmd.data.k_true() {
         println!("(ground-truth latent dimension of this dataset: {kt})");
     }
-    if job.trace {
+    if engine.config().trace {
         let metrics = RunMetrics::from_traces(&report.traces);
         print!("{}", metrics.format_breakdown());
+    }
+    if cmd.json {
+        println!("{}", Report::Factorize(report).to_json().to_string());
     }
     Ok(())
 }
 
-fn cmd_model_select(args: &Args) -> Result<()> {
-    let (data, k_true) = load_data(args)?;
-    let job = job_config(args)?;
-    let cfg = RescalkConfig {
-        k_min: args.get_usize("k-min", 2)?,
-        k_max: args.get_usize("k-max", 8)?,
-        perturbations: args.get_usize("perturbations", 10)?,
-        delta: args.get_f64("delta", 0.02)? as f32,
-        rescal_iters: args.get_usize("iters", 200)?,
-        tol: args.get_f64("tol", 0.0)? as f32,
-        err_every: args.get_usize("err-every", 25)?,
-        regress_iters: args.get_usize("regress-iters", 30)?,
-        seed: args.get_u64("seed", 42)?,
-        rule: SelectionRule::default(),
-        init: InitStrategy::Random,
-    };
+fn cmd_model_select(cmd: ModelSelectCmd) -> Result<()> {
+    let data = cmd.data.load(cmd.sweep.seed);
+    let mut engine = Engine::new(cmd.engine)?;
     println!(
         "RESCALk sweep: n={} m={} k∈[{},{}] r={} p={} backend={:?}",
         data.n(),
         data.m(),
-        cfg.k_min,
-        cfg.k_max,
-        cfg.perturbations,
-        job.p,
-        job.backend
+        cmd.sweep.k_min,
+        cmd.sweep.k_max,
+        cmd.sweep.perturbations,
+        engine.config().p,
+        engine.config().backend
     );
-    let report = run_rescalk(&data, &job, &cfg);
+    let report = engine.model_select(&data, &cmd.sweep)?;
     let rows: Vec<Vec<String>> = report
         .scores
         .iter()
@@ -200,26 +148,37 @@ fn cmd_model_select(args: &Args) -> Result<()> {
         report.k_opt,
         bench_util::fmt_secs(report.wall_seconds)
     );
-    match k_true {
+    match cmd.data.k_true() {
         Some(kt) if kt == report.k_opt => println!("matches the dataset's ground truth ✓"),
         Some(kt) => println!("(ground truth is {kt})"),
         None => {}
     }
+    if engine.config().trace {
+        let metrics = RunMetrics::from_traces(&report.traces);
+        print!("{}", metrics.format_breakdown());
+    }
+    if cmd.json {
+        println!("{}", Report::ModelSelect(report).to_json().to_string());
+    }
     Ok(())
 }
 
-fn cmd_exascale(args: &Args) -> Result<()> {
-    let machine = match args.get("machine").unwrap_or("cpu") {
-        "cpu" => Machine::cpu_cluster(),
-        "gpu" => Machine::gpu_cluster(),
-        "calibrated" => {
+fn cmd_exascale(cmd: ExascaleCmd) -> Result<()> {
+    let machine = match cmd.machine {
+        MachineSpec::Cpu => Machine::cpu_cluster(),
+        MachineSpec::Gpu => Machine::gpu_cluster(),
+        MachineSpec::Calibrated => {
             let flops = bench_util::calibrate_dense_flops();
             println!("calibrated dense rate: {:.1} GFLOP/s", flops / 1e9);
             Machine::calibrated(flops, 2e-6, 1e-10)
         }
-        other => bail!("unknown --machine '{other}'"),
     };
-    let dense = exascale::dense_11tb_run(&machine);
+    // modeled replays run on the leader; a 1-rank engine keeps the job
+    // API uniform without spawning an idle grid
+    let mut engine = Engine::new(EngineConfig::new(1))?;
+    let dense_report =
+        engine.simulate(SimSpec { machine, scenario: SimScenario::Dense11Tb })?;
+    let dense = &dense_report.rows[0];
     println!(
         "\nFig 13a replay — {}\n  logical size {:.1} TB on {} ranks\n  modeled: compute {} + comm {} = {} ({:.0}% comm)",
         dense.label,
@@ -230,7 +189,10 @@ fn cmd_exascale(args: &Args) -> Result<()> {
         bench_util::fmt_secs(dense.total()),
         100.0 * dense.comm_fraction()
     );
-    let rows: Vec<Vec<String>> = exascale::sparse_exabyte_runs(&machine)
+    let sparse_report =
+        engine.simulate(SimSpec { machine, scenario: SimScenario::SparseExabyte })?;
+    let rows: Vec<Vec<String>> = sparse_report
+        .rows
         .iter()
         .map(|r| {
             vec![
@@ -250,9 +212,8 @@ fn cmd_exascale(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_artifacts(args: &Args) -> Result<()> {
-    let dir = args.get("artifacts").unwrap_or("artifacts");
-    let manifest = drescal::runtime::Manifest::load(std::path::Path::new(dir))?;
+fn cmd_artifacts(cmd: ArtifactsCmd) -> Result<()> {
+    let manifest = drescal::runtime::Manifest::load(std::path::Path::new(&cmd.dir))?;
     let rows: Vec<Vec<String>> = manifest
         .entries
         .iter()
@@ -269,7 +230,7 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
         })
         .collect();
     bench_util::print_table(
-        &format!("{} artifacts in {dir}", manifest.entries.len()),
+        &format!("{} artifacts in {}", manifest.entries.len(), cmd.dir),
         &["kind", "input shapes", "file"],
         &rows,
     );

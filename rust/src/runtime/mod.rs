@@ -3,17 +3,33 @@
 //! `python/compile/aot.py` lowers the L2 JAX segments (which call the L1
 //! Pallas kernels) to HLO **text** — the interchange format that survives
 //! the jax≥0.5 / xla_extension 0.5.1 proto-id mismatch — plus a
-//! `manifest.json` describing each op's input shapes. This module compiles
-//! each artifact once on the PJRT CPU client and exposes typed execution
-//! over [`crate::tensor::Mat`].
+//! `manifest.json` describing each op's input shapes.
+//!
+//! Two implementations sit behind the same [`Runtime`] API:
+//! * with `--features pjrt` (requires the prebuilt `xla` bindings from the
+//!   rust_pallas toolchain image): each artifact compiles once on the PJRT
+//!   CPU client and executes for real;
+//! * by default (offline checkout): a stub that parses the manifest but
+//!   serves no executables, so [`crate::backend::xla::XlaBackend`] reports
+//!   every shape as unsupported and transparently falls back to the native
+//!   GEMM path. `execute` returning `Ok(None)` is the same "no artifact
+//!   for this shape" signal both implementations share.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::error::{Context as _, Result};
 use crate::json::Json;
-use crate::tensor::Mat;
+use crate::{bail, err};
+
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
 
 /// Key identifying one compiled executable: op kind + exact input shapes.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -45,36 +61,36 @@ impl Manifest {
     }
 
     pub fn parse(text: &str) -> Result<Manifest> {
-        let v = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let v = Json::parse(text).map_err(|e| err!("manifest JSON: {e}"))?;
         let ops = v
             .get("ops")
             .and_then(|o| o.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing 'ops' array"))?;
+            .ok_or_else(|| err!("manifest missing 'ops' array"))?;
         let mut entries = Vec::new();
         for op in ops {
             let kind = op
                 .get("kind")
                 .and_then(|k| k.as_str())
-                .ok_or_else(|| anyhow!("op missing 'kind'"))?
+                .ok_or_else(|| err!("op missing 'kind'"))?
                 .to_string();
             let file = op
                 .get("file")
                 .and_then(|k| k.as_str())
-                .ok_or_else(|| anyhow!("op missing 'file'"))?
+                .ok_or_else(|| err!("op missing 'file'"))?
                 .to_string();
             let shapes = op
                 .get("shapes")
                 .and_then(|s| s.as_arr())
-                .ok_or_else(|| anyhow!("op missing 'shapes'"))?
+                .ok_or_else(|| err!("op missing 'shapes'"))?
                 .iter()
                 .map(|sh| {
-                    let dims = sh.as_arr().ok_or_else(|| anyhow!("shape not array"))?;
+                    let dims = sh.as_arr().ok_or_else(|| err!("shape not array"))?;
                     if dims.len() != 2 {
-                        return Err(anyhow!("only rank-2 inputs supported"));
+                        bail!("only rank-2 inputs supported");
                     }
                     Ok((
-                        dims[0].as_usize().ok_or_else(|| anyhow!("bad dim"))?,
-                        dims[1].as_usize().ok_or_else(|| anyhow!("bad dim"))?,
+                        dims[0].as_usize().ok_or_else(|| err!("bad dim"))?,
+                        dims[1].as_usize().ok_or_else(|| err!("bad dim"))?,
                     ))
                 })
                 .collect::<Result<Vec<_>>>()?;
@@ -84,108 +100,9 @@ impl Manifest {
     }
 }
 
-/// A compiled-and-loaded artifact set on the PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    executables: HashMap<OpKey, xla::PjRtLoadedExecutable>,
-    dir: PathBuf,
-}
-
-impl Runtime {
-    /// Load every artifact listed in `dir/manifest.json` and compile it.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut executables = HashMap::new();
-        for entry in &manifest.entries {
-            let path = dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))?;
-            executables.insert(
-                OpKey { kind: entry.kind.clone(), shapes: entry.shapes.clone() },
-                exe,
-            );
-        }
-        Ok(Runtime { client, executables, dir })
-    }
-
-    /// Artifact directory this runtime was loaded from.
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// PJRT platform name (e.g. "cpu" / "Host").
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Number of loaded executables.
-    pub fn len(&self) -> usize {
-        self.executables.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.executables.is_empty()
-    }
-
-    /// True if an executable exists for this op kind and input shapes.
-    pub fn supports(&self, kind: &str, inputs: &[&Mat]) -> bool {
-        self.executables.contains_key(&key_of(kind, inputs))
-    }
-
-    /// Execute `kind` on the given inputs. Returns `None` when no artifact
-    /// matches the shapes (caller falls back to the native backend);
-    /// errors only on real PJRT failures.
-    pub fn execute(&self, kind: &str, inputs: &[&Mat]) -> Result<Option<Mat>> {
-        match self.execute_multi(kind, inputs)? {
-            None => Ok(None),
-            Some(mut outs) => {
-                if outs.len() != 1 {
-                    return Err(anyhow!("expected 1 output, got {}", outs.len()));
-                }
-                Ok(Some(outs.remove(0)))
-            }
-        }
-    }
-
-    /// Execute an artifact with a tuple of outputs (fused segments).
-    pub fn execute_multi(&self, kind: &str, inputs: &[&Mat]) -> Result<Option<Vec<Mat>>> {
-        let exe = match self.executables.get(&key_of(kind, inputs)) {
-            Some(e) => e,
-            None => return Ok(None),
-        };
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|m| {
-                xla::Literal::vec1(m.as_slice())
-                    .reshape(&[m.rows() as i64, m.cols() as i64])
-                    .map_err(|e| anyhow!("literal reshape: {e:?}"))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let elems = result.to_tuple()?;
-        let mut outs = Vec::with_capacity(elems.len());
-        for elem in elems {
-            let shape = elem.array_shape()?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            if dims.len() != 2 {
-                return Err(anyhow!("expected rank-2 output, got {:?}", dims));
-            }
-            let data = elem.to_vec::<f32>()?;
-            outs.push(Mat::from_vec(dims[0], dims[1], data));
-        }
-        Ok(Some(outs))
-    }
-}
-
-fn key_of(kind: &str, inputs: &[&Mat]) -> OpKey {
+/// Build the lookup key for an op invocation.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+pub(crate) fn key_of(kind: &str, inputs: &[&crate::tensor::Mat]) -> OpKey {
     OpKey { kind: kind.to_string(), shapes: inputs.iter().map(|m| m.shape()).collect() }
 }
 
@@ -216,5 +133,6 @@ mod tests {
     }
 
     // Execution against real artifacts is covered by the integration test
-    // `rust/tests/xla_runtime.rs`, which requires `make artifacts` first.
+    // `rust/tests/xla_runtime.rs`, which requires `make artifacts` and the
+    // `pjrt` feature.
 }

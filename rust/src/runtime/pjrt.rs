@@ -1,0 +1,127 @@
+//! Real PJRT runtime (`--features pjrt`): compile each HLO-text artifact
+//! once on the PJRT CPU client and expose typed execution over
+//! [`crate::tensor::Mat`]. Requires the prebuilt `xla` bindings shipped in
+//! the rust_pallas toolchain image.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::{key_of, Manifest, OpKey};
+use crate::err;
+use crate::error::{Context as _, Result};
+use crate::tensor::Mat;
+
+/// A compiled-and-loaded artifact set on the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<OpKey, xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `dir/manifest.json` and compile it.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("PJRT client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for entry in &manifest.entries {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
+            )
+            .map_err(|e| err!("parsing HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| err!("compiling {}: {e:?}", path.display()))?;
+            executables.insert(
+                OpKey { kind: entry.kind.clone(), shapes: entry.shapes.clone() },
+                exe,
+            );
+        }
+        Ok(Runtime { client, executables, manifest, dir })
+    }
+
+    /// Artifact directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// PJRT platform name (e.g. "cpu" / "Host").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of loaded executables.
+    pub fn len(&self) -> usize {
+        self.executables.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.executables.is_empty()
+    }
+
+    /// Manifest entries parsed from disk.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// True if an executable exists for this op kind and input shapes.
+    pub fn supports(&self, kind: &str, inputs: &[&Mat]) -> bool {
+        self.executables.contains_key(&key_of(kind, inputs))
+    }
+
+    /// Execute `kind` on the given inputs. Returns `None` when no artifact
+    /// matches the shapes (caller falls back to the native backend);
+    /// errors only on real PJRT failures.
+    pub fn execute(&self, kind: &str, inputs: &[&Mat]) -> Result<Option<Mat>> {
+        match self.execute_multi(kind, inputs)? {
+            None => Ok(None),
+            Some(mut outs) => {
+                if outs.len() != 1 {
+                    bail_arity(outs.len())?;
+                }
+                Ok(Some(outs.remove(0)))
+            }
+        }
+    }
+
+    /// Execute an artifact with a tuple of outputs (fused segments).
+    pub fn execute_multi(&self, kind: &str, inputs: &[&Mat]) -> Result<Option<Vec<Mat>>> {
+        let exe = match self.executables.get(&key_of(kind, inputs)) {
+            Some(e) => e,
+            None => return Ok(None),
+        };
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| {
+                xla::Literal::vec1(m.as_slice())
+                    .reshape(&[m.rows() as i64, m.cols() as i64])
+                    .map_err(|e| err!("literal reshape: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| err!("PJRT execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("PJRT sync: {e:?}"))?;
+        let elems = result.to_tuple().map_err(|e| err!("PJRT tuple: {e:?}"))?;
+        let mut outs = Vec::with_capacity(elems.len());
+        for elem in elems {
+            let shape = elem.array_shape().map_err(|e| err!("PJRT shape: {e:?}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            if dims.len() != 2 {
+                return Err(err!("expected rank-2 output, got {:?}", dims));
+            }
+            let data = elem.to_vec::<f32>().map_err(|e| err!("PJRT to_vec: {e:?}"))?;
+            outs.push(Mat::from_vec(dims[0], dims[1], data));
+        }
+        Ok(Some(outs))
+    }
+}
+
+fn bail_arity(n: usize) -> Result<()> {
+    Err(err!("expected 1 output, got {n}")).context("artifact execution")
+}

@@ -1,0 +1,66 @@
+//! Offline stub runtime (the default, `--features pjrt` absent).
+//!
+//! Parses the artifact manifest so tooling (`drescal artifacts`, manifest
+//! tests) works, but holds no compiled executables: every `execute` call
+//! answers `Ok(None)` — the shared "no artifact for this shape" signal —
+//! so the XLA backend falls back to the native GEMM for everything.
+
+use std::path::{Path, PathBuf};
+
+use super::Manifest;
+use crate::error::Result;
+use crate::tensor::Mat;
+
+/// Stub artifact runtime: manifest metadata only, no execution.
+pub struct Runtime {
+    manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Parse `dir/manifest.json`; no artifacts are compiled.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        Ok(Runtime { manifest, dir })
+    }
+
+    /// Artifact directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Platform name; marks the build as execution-less.
+    pub fn platform(&self) -> String {
+        "stub (build with --features pjrt for PJRT execution)".to_string()
+    }
+
+    /// Number of loaded executables (always 0 in the stub).
+    pub fn len(&self) -> usize {
+        0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        true
+    }
+
+    /// Manifest entries parsed from disk (metadata is still available).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The stub supports no shapes.
+    pub fn supports(&self, _kind: &str, _inputs: &[&Mat]) -> bool {
+        false
+    }
+
+    /// Always `Ok(None)`: caller falls back to the native backend.
+    pub fn execute(&self, _kind: &str, _inputs: &[&Mat]) -> Result<Option<Mat>> {
+        Ok(None)
+    }
+
+    /// Always `Ok(None)`: caller falls back to the native backend.
+    pub fn execute_multi(&self, _kind: &str, _inputs: &[&Mat]) -> Result<Option<Vec<Mat>>> {
+        Ok(None)
+    }
+}

@@ -43,11 +43,11 @@ fn unknown_subcommand_fails() {
 fn run_blocks_converges() {
     let (ok, text) = run(&[
         "run", "--data", "blocks", "--n", "32", "--m", "2", "--k-true", "3", "--k", "3",
-        "--p", "4", "--iters", "200", "--seed", "5",
+        "--p", "4", "--iters", "200", "--seed", "5", "--trace",
     ]);
     assert!(ok, "{text}");
     assert!(text.contains("rel_error"), "{text}");
-    // breakdown printed when tracing (default)
+    // breakdown printed when tracing is requested
     assert!(text.contains("matrix_mul"), "{text}");
     // extract the error and check it converged
     let err: f32 = text
@@ -63,10 +63,52 @@ fn run_blocks_converges() {
 fn run_sparse_path() {
     let (ok, text) = run(&[
         "run", "--data", "synthetic", "--n", "48", "--m", "2", "--k-true", "3", "--k", "3",
-        "--density", "0.05", "--p", "4", "--iters", "30",
+        "--density", "0.05", "--p", "4", "--iters", "30", "--trace",
     ]);
     assert!(ok, "{text}");
     assert!(text.contains("matrix_mul_sparse"), "sparse path not traced: {text}");
+}
+
+#[test]
+fn tracing_is_opt_in() {
+    let (ok, text) = run(&[
+        "run", "--data", "blocks", "--n", "16", "--m", "2", "--k-true", "2", "--k", "2",
+        "--p", "1", "--iters", "20",
+    ]);
+    assert!(ok, "{text}");
+    // without --trace no per-op breakdown is printed
+    assert!(!text.contains("matrix_mul"), "breakdown printed untraced: {text}");
+}
+
+#[test]
+fn json_report_is_parseable() {
+    let (ok, text) = run(&[
+        "run", "--data", "blocks", "--n", "16", "--m", "2", "--k-true", "2", "--k", "2",
+        "--p", "1", "--iters", "20", "--json",
+    ]);
+    assert!(ok, "{text}");
+    let json_line = text
+        .lines()
+        .find(|l| l.starts_with('{'))
+        .expect("no JSON report line in output");
+    assert!(json_line.contains("\"kind\":\"factorize\""), "{json_line}");
+    assert!(json_line.contains("\"rel_error\""), "{json_line}");
+}
+
+#[test]
+fn validation_errors_are_typed() {
+    // non-square grid
+    let (ok, text) = run(&["run", "--p", "8"]);
+    assert!(!ok);
+    assert!(text.contains("perfect square"), "{text}");
+    // bad k range
+    let (ok, text) = run(&["model-select", "--k-min", "5", "--k-max", "3"]);
+    assert!(!ok);
+    assert!(text.contains("bad k range"), "{text}");
+    // unknown flag for the subcommand
+    let (ok, text) = run(&["exascale", "--k", "4"]);
+    assert!(!ok);
+    assert!(text.contains("unknown flag"), "{text}");
 }
 
 #[test]

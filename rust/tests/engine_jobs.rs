@@ -1,0 +1,181 @@
+//! Engine job API integration: one engine, many jobs, no respawn.
+//!
+//! Covers the pool-reuse guarantee (the acceptance criterion of the
+//! engine redesign), unified-report JSON round-trips, and the engine's
+//! typed error paths.
+
+use drescal::coordinator::JobData;
+use drescal::data::synthetic;
+use drescal::engine::{
+    Engine, EngineConfig, JobSpec, Report, SimScenario, SimSpec,
+};
+use drescal::json::Json;
+use drescal::model_selection::RescalkConfig;
+use drescal::rescal::distributed::DistInit;
+use drescal::rescal::RescalOptions;
+use drescal::simulate::Machine;
+
+/// The headline guarantee: consecutive jobs of *different kinds* run on
+/// the same rank threads with the same backends — nothing respawns or
+/// rebuilds between submissions.
+#[test]
+fn engine_runs_consecutive_jobs_on_one_pool() {
+    let mut engine = Engine::new(EngineConfig::new(4).with_trace(true)).unwrap();
+    let ids_at_start = engine.ping().unwrap();
+    assert_eq!(ids_at_start.len(), 4);
+    assert_eq!(engine.stats().backend_builds, 4, "one backend per rank at spawn");
+
+    // same planted tensor + sweep parameters as the in-module
+    // model-selection tests, which are known to recover k = 3
+    let planted = synthetic::block_tensor(24, 3, 3, 0.01, 700);
+    let data = JobData::dense(planted.x.clone());
+
+    // job 1: factorization
+    let report = engine.factorize(&data, &RescalOptions::new(3, 150), 7).unwrap();
+    assert_eq!(report.a.shape(), (24, 3));
+    assert!(report.rel_error < 0.15, "err={}", report.rel_error);
+    assert_eq!(report.traces.len(), 4);
+    // gathered A actually reconstructs the tensor
+    let direct = planted.x.rel_error(&report.a, &report.r);
+    assert!((direct - report.rel_error).abs() < 1e-3);
+
+    // job 2: model selection on the same pool
+    let cfg = RescalkConfig {
+        k_min: 2,
+        k_max: 5,
+        perturbations: 6,
+        rescal_iters: 150,
+        regress_iters: 30,
+        seed: 1,
+        ..Default::default()
+    };
+    let sweep = engine.model_select(&data, &cfg).unwrap();
+    assert_eq!(sweep.k_opt, 3, "scores {:?}", sweep.scores);
+    assert_eq!(sweep.a.shape(), (24, 3));
+
+    // job 3: another factorization, via the raw JobSpec interface
+    let report2 = engine
+        .submit(JobSpec::Factorize {
+            data: data.clone(),
+            opts: RescalOptions::new(3, 50),
+            init: DistInit::Random { seed: 8 },
+        })
+        .unwrap();
+    assert!(matches!(report2, Report::Factorize(_)));
+
+    // pool reuse: same worker threads, no extra backend builds
+    let ids_at_end = engine.ping().unwrap();
+    assert_eq!(ids_at_start, ids_at_end, "rank threads were respawned");
+    let stats = engine.stats();
+    assert_eq!(stats.ranks, 4);
+    assert_eq!(
+        stats.backend_builds, 4,
+        "backends were rebuilt between jobs ({} builds for 3 jobs)",
+        stats.backend_builds
+    );
+    assert_eq!(stats.jobs_completed, 3);
+}
+
+#[test]
+fn factorize_report_roundtrips_through_json() {
+    let mut engine = Engine::new(EngineConfig::new(4).with_trace(true)).unwrap();
+    let planted = synthetic::block_tensor(16, 2, 2, 0.01, 99);
+    let data = JobData::dense(planted.x);
+    let report = engine.factorize(&data, &RescalOptions::new(2, 60), 1).unwrap();
+    let (rel_error, iters_run, a_shape) =
+        (report.rel_error, report.iters_run, report.a.shape());
+
+    let json = Report::Factorize(report).to_json();
+    // Report -> Json -> text -> parse is lossless at the Json level
+    let reparsed = Json::parse(&json.to_string()).unwrap();
+    assert_eq!(reparsed, json);
+
+    // and the parsed form rebuilds the same report
+    match Report::from_json(&reparsed).unwrap() {
+        Report::Factorize(back) => {
+            assert_eq!(back.a.shape(), a_shape);
+            assert_eq!(back.iters_run, iters_run);
+            assert!((back.rel_error - rel_error).abs() < 1e-6);
+            assert_eq!(back.traces.len(), 4);
+            assert!(back.traces[0].total_seconds() > 0.0, "trace timings lost");
+        }
+        _ => panic!("report kind changed in roundtrip"),
+    }
+}
+
+#[test]
+fn model_select_report_roundtrips_through_json() {
+    let mut engine = Engine::new(EngineConfig::new(1)).unwrap();
+    let planted = synthetic::block_tensor(16, 2, 2, 0.01, 123);
+    let data = JobData::dense(planted.x);
+    let cfg = RescalkConfig {
+        k_min: 1,
+        k_max: 3,
+        perturbations: 4,
+        rescal_iters: 120,
+        regress_iters: 20,
+        seed: 5,
+        ..Default::default()
+    };
+    let report = engine.model_select(&data, &cfg).unwrap();
+    let (k_opt, n_scores) = (report.k_opt, report.scores.len());
+
+    let json = Report::ModelSelect(report).to_json();
+    let reparsed = Json::parse(&json.to_string()).unwrap();
+    assert_eq!(reparsed, json);
+    match Report::from_json(&reparsed).unwrap() {
+        Report::ModelSelect(back) => {
+            assert_eq!(back.k_opt, k_opt);
+            assert_eq!(back.scores.len(), n_scores);
+        }
+        _ => panic!("report kind changed in roundtrip"),
+    }
+}
+
+#[test]
+fn simulate_report_roundtrips_through_json() {
+    let mut engine = Engine::new(EngineConfig::new(1)).unwrap();
+    let report = engine
+        .simulate(SimSpec { machine: Machine::cpu_cluster(), scenario: SimScenario::Dense11Tb })
+        .unwrap();
+    let json = Report::Simulate(report.clone()).to_json();
+    let reparsed = Json::parse(&json.to_string()).unwrap();
+    assert_eq!(reparsed, json);
+    match Report::from_json(&reparsed).unwrap() {
+        Report::Simulate(back) => assert_eq!(back, report),
+        _ => panic!("report kind changed in roundtrip"),
+    }
+}
+
+#[test]
+fn engine_rejects_invalid_grids_with_errors() {
+    let e = Engine::new(EngineConfig::new(12)).unwrap_err();
+    assert!(e.to_string().contains("perfect square"), "{e}");
+    let e = Engine::new(EngineConfig::new(0)).unwrap_err();
+    assert!(e.to_string().contains(">= 1"), "{e}");
+}
+
+#[test]
+fn engine_rejects_unbuildable_backends_at_construction() {
+    let cfg = EngineConfig::new(4).with_backend(drescal::backend::BackendSpec::Xla {
+        artifact_dir: "/nonexistent/drescal-artifacts".to_string(),
+    });
+    let e = Engine::new(cfg).unwrap_err();
+    assert!(e.to_string().contains("backend build failed"), "{e}");
+}
+
+#[test]
+fn sparse_jobs_run_on_the_engine() {
+    let mut engine = Engine::new(EngineConfig::new(4).with_trace(true)).unwrap();
+    let xs = synthetic::sparse_planted(16, 2, 2, 0.2, 77);
+    let data = JobData::sparse(xs);
+    let report = engine.factorize(&data, &RescalOptions::new(2, 30), 5).unwrap();
+    assert_eq!(report.a.shape(), (16, 2));
+    assert!(report.rel_error.is_finite());
+    let sparse_bytes: usize = report
+        .traces
+        .iter()
+        .map(|t| t.bytes(drescal::comm::CommOp::MatrixMulSparse))
+        .sum();
+    assert!(sparse_bytes > 0, "sparse path not exercised");
+}
