@@ -64,9 +64,12 @@ fn main() {
         "sweep: k ∈ [{}, {}], r = {} perturbations, {} MU iters each\n",
         cfg.k_min, cfg.k_max, cfg.perturbations, cfg.rescal_iters
     );
-    let report = engine
-        .model_select(&JobData::dense(planted.x.clone()), &cfg)
-        .expect("model-select job");
+    // register once: the 256×256×4 tensor is tiled to the ranks a single
+    // time, however many perturbation runs the sweep performs
+    let data = engine
+        .load_dataset(JobData::dense(planted.x.clone()))
+        .expect("load dataset");
+    let report = engine.model_select(data, &cfg).expect("model-select job");
 
     // -- results -----------------------------------------------------------
     println!("   k   min-sil   avg-sil   rel-err");

@@ -102,12 +102,16 @@ fn main() {
     println!("paper: >90% of execution in MPI communication, total flat across densities");
 
     // ---- Fig 13b anchor: real sparse run breakdown ----------------------
-    // the 4×4 grid needs its own engine (grid size is fixed per engine)
+    // the 4×4 grid needs its own engine (grid size is fixed per engine);
+    // the tensor is generated rank-locally — exactly the paper's layout,
+    // where the global X never exists on any single node
     println!("\nFig 13b (real anchor): sparse 512×512×4 @ 1e-2 density, p=16");
     let mut wide = Engine::new(EngineConfig::new(16).with_trace(true)).expect("engine");
-    let xs = synthetic::sparse_planted(512, 4, 10, 1e-2, 132);
+    let xs = wide
+        .load_dataset(synthetic::SyntheticSpec::sparse(512, 4, 10, 1e-2, 132))
+        .expect("load dataset");
     let report = wide
-        .factorize(&JobData::sparse(xs), &RescalOptions::new(10, 30), 132)
+        .factorize(xs, &RescalOptions::new(10, 30), 132)
         .expect("factorize");
     let metrics = RunMetrics::from_traces(&report.traces);
     print!("{}", metrics.format_breakdown());

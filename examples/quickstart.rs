@@ -1,6 +1,8 @@
-//! Quickstart for the engine API: build one [`Engine`], factorize a small
-//! relational tensor on its 2×2 persistent rank grid, and recover the
-//! latent communities — then reuse the same pool for a refinement job.
+//! Quickstart for the engine API: build one [`Engine`], register a small
+//! relational tensor once (each rank caches its tile), factorize it on
+//! the 2×2 persistent rank grid, and recover the latent communities —
+//! then reuse the same pool *and the same resident tiles* for a
+//! refinement job.
 //!
 //! ```text
 //! cargo run --release --example quickstart
@@ -23,9 +25,13 @@ fn main() {
 
     // configure once: p = 4 ranks, native backend, tracing off
     let mut engine = Engine::new(EngineConfig::default()).expect("engine");
-    let data = JobData::dense(planted.x.clone());
+    // load once: the tensor is tiled to the ranks a single time; every
+    // job below references the resident tiles through the handle
+    let data = engine
+        .load_dataset(JobData::dense(planted.x.clone()))
+        .expect("load dataset");
     let opts = RescalOptions::new(4, 300).with_tol(0.02, 20);
-    let report = engine.factorize(&data, &opts, 42).expect("factorize");
+    let report = engine.factorize(data, &opts, 42).expect("factorize");
 
     println!(
         "factorized in {:.2}s: rel_error = {:.4} after {} iterations",
@@ -50,16 +56,18 @@ fn main() {
     println!("community assignment consistency: {consistent}/64 entities");
     assert!(report.rel_error < 0.1, "expected a good fit");
 
-    // the pool persists: a second, deeper job on the same engine reuses
-    // every rank thread and backend
+    // the pool and the resident tiles persist: a second, deeper job on
+    // the same engine reuses every rank thread, backend, and tile
     let refined = engine
-        .factorize(&data, &RescalOptions::new(4, 600).with_tol(0.01, 20), 42)
+        .factorize(data, &RescalOptions::new(4, 600).with_tol(0.01, 20), 42)
         .expect("refine");
     println!(
-        "refined on the same pool: rel_error = {:.4} ({} backend builds total)",
+        "refined on the same pool: rel_error = {:.4} ({} backend builds, {} tile builds total)",
         refined.rel_error,
-        engine.stats().backend_builds
+        engine.stats().backend_builds,
+        engine.stats().tile_builds
     );
     assert_eq!(engine.stats().backend_builds, 4, "pool must not rebuild backends");
+    assert_eq!(engine.stats().tile_builds, 4, "jobs must not re-tile the dataset");
     println!("quickstart OK");
 }

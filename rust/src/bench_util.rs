@@ -120,7 +120,7 @@ mod tests {
 // ---------------------------------------------------------------------------
 
 use crate::coordinator::metrics::RunMetrics;
-use crate::coordinator::JobData;
+use crate::data::synthetic::SyntheticSpec;
 use crate::engine::{Engine, EngineConfig};
 use crate::rescal::RescalOptions;
 
@@ -142,12 +142,14 @@ pub fn bench_engine(p: usize) -> Engine {
 
 /// Run distributed RESCAL on a planted dense tensor and return wall time +
 /// per-op metrics (mean over ranks). `iters` MU iterations, no early stop.
+/// The dataset goes through the engine's data plane, so tiles are
+/// generated rank-locally — the bench leader never materializes X and the
+/// scaling shapes are not bounded by leader RAM.
 pub fn measure_dense(n: usize, m: usize, k: usize, p: usize, iters: usize, seed: u64) -> ScalingPoint {
-    let planted = crate::data::synthetic::planted_tensor(n, m, k, 0.0, seed);
-    let data = JobData::dense(planted.x);
     let mut engine = bench_engine(p);
+    let data = engine.load_dataset(SyntheticSpec::dense(n, m, k, seed)).expect("load dataset");
     let report =
-        engine.factorize(&data, &RescalOptions::new(k, iters), seed).expect("factorize");
+        engine.factorize(data, &RescalOptions::new(k, iters), seed).expect("factorize");
     ScalingPoint {
         p,
         wall_seconds: report.wall_seconds,
@@ -165,11 +167,12 @@ pub fn measure_sparse(
     iters: usize,
     seed: u64,
 ) -> ScalingPoint {
-    let xs = crate::data::synthetic::sparse_planted(n, m, k, density, seed);
-    let data = JobData::sparse(xs);
     let mut engine = bench_engine(p);
+    let data = engine
+        .load_dataset(SyntheticSpec::sparse(n, m, k, density, seed))
+        .expect("load dataset");
     let report =
-        engine.factorize(&data, &RescalOptions::new(k, iters), seed).expect("factorize");
+        engine.factorize(data, &RescalOptions::new(k, iters), seed).expect("factorize");
     ScalingPoint {
         p,
         wall_seconds: report.wall_seconds,

@@ -13,8 +13,9 @@ use std::collections::BTreeMap;
 
 use crate::backend::BackendSpec;
 use crate::coordinator::JobData;
+use crate::data::synthetic::SyntheticSpec;
 use crate::data::{nations, synthetic, trade};
-use crate::engine::EngineConfig;
+use crate::engine::{DatasetSpec, EngineConfig};
 use crate::error::{Context as _, Result};
 use crate::json::Json;
 use crate::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
@@ -148,7 +149,9 @@ impl DataSpec {
         }
     }
 
-    /// Materialize the tensor.
+    /// Materialize the tensor **on the leader** (legacy path — prefer
+    /// [`DataSpec::to_dataset_spec`], which keeps synthetic tensors off
+    /// the leader entirely).
     pub fn load(&self, seed: u64) -> JobData {
         match self {
             DataSpec::Synthetic { n, m, k_true, density } => {
@@ -163,6 +166,24 @@ impl DataSpec {
             }
             DataSpec::Nations => JobData::dense(nations::nations_tensor(seed)),
             DataSpec::Trade => JobData::dense(trade::trade_tensor_padded(seed, 24)),
+        }
+    }
+
+    /// The engine-registrable form of this dataset. Synthetic tensors map
+    /// to [`DatasetSpec::Synthetic`] — each rank generates its own tile
+    /// from block-keyed RNG streams, so `drescal run --data synthetic`
+    /// can use shapes larger than leader RAM. The real (small) datasets
+    /// stay leader-resident.
+    pub fn to_dataset_spec(&self, seed: u64) -> DatasetSpec {
+        match self {
+            DataSpec::Synthetic { n, m, k_true, density } => {
+                DatasetSpec::Synthetic(if *density < 1.0 {
+                    SyntheticSpec::sparse(*n, *m, *k_true, *density, seed)
+                } else {
+                    SyntheticSpec::dense(*n, *m, *k_true, seed)
+                })
+            }
+            _ => DatasetSpec::InMemory(self.load(seed)),
         }
     }
 }
@@ -202,6 +223,19 @@ pub struct ExascaleCmd {
     pub machine: MachineSpec,
 }
 
+/// `drescal bench` — the fixed-shape perf harness. Runs factorize and
+/// model-select jobs on dense and sparse synthetic datasets and emits a
+/// machine-readable `BENCH_rescal.json` so the perf trajectory is
+/// tracked in CI (a 1-iteration invocation doubles as a smoke test).
+#[derive(Clone, Debug)]
+pub struct BenchCmd {
+    pub engine: EngineConfig,
+    /// MU iterations per factorization (1 = smoke, default 10).
+    pub iters: usize,
+    /// Output path of the JSON results.
+    pub out: String,
+}
+
 /// `drescal artifacts` — inspect the AOT artifact manifest.
 #[derive(Clone, Debug)]
 pub struct ArtifactsCmd {
@@ -214,6 +248,7 @@ pub enum Command {
     ModelSelect(ModelSelectCmd),
     Exascale(ExascaleCmd),
     Artifacts(ArtifactsCmd),
+    Bench(BenchCmd),
     Help,
 }
 
@@ -233,6 +268,7 @@ const MODEL_SELECT_FLAGS: &[&str] = &[
 ];
 const EXASCALE_FLAGS: &[&str] = &["config", "machine"];
 const ARTIFACTS_FLAGS: &[&str] = &["config", "artifacts"];
+const BENCH_FLAGS: &[&str] = &["config", "p", "backend", "artifacts", "trace", "iters", "out"];
 
 impl RunConfig {
     /// Parse + validate a full command line (after the binary name),
@@ -288,6 +324,18 @@ impl RunConfig {
                 check_known_flags(&args.subcommand, &cli_flags, ARTIFACTS_FLAGS)?;
                 Command::Artifacts(ArtifactsCmd {
                     dir: args.get("artifacts").unwrap_or("artifacts").to_string(),
+                })
+            }
+            "bench" => {
+                check_known_flags(&args.subcommand, &cli_flags, BENCH_FLAGS)?;
+                let iters = args.get_usize("iters", 10)?;
+                if iters == 0 {
+                    bail!("--iters must be >= 1");
+                }
+                Command::Bench(BenchCmd {
+                    engine: engine_config(&args)?,
+                    iters,
+                    out: args.get("out").unwrap_or("BENCH_rescal.json").to_string(),
                 })
             }
             "help" | "--help" | "-h" => Command::Help,
@@ -540,6 +588,54 @@ mod tests {
         // but a typed unknown flag is still rejected
         assert!(RunConfig::from_args(argv(&format!("run --config {p} --k-min 2"))).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_subcommand_is_typed() {
+        let cfg = RunConfig::from_args(argv("bench")).unwrap();
+        match cfg.command {
+            Command::Bench(cmd) => {
+                assert_eq!(cmd.iters, 10);
+                assert_eq!(cmd.out, "BENCH_rescal.json");
+                assert_eq!(cmd.engine.p, 4);
+            }
+            _ => panic!("expected bench command"),
+        }
+        let cfg = RunConfig::from_args(argv("bench --iters 1 --out x.json --p 1")).unwrap();
+        match cfg.command {
+            Command::Bench(cmd) => {
+                assert_eq!(cmd.iters, 1);
+                assert_eq!(cmd.out, "x.json");
+                assert_eq!(cmd.engine.p, 1);
+            }
+            _ => panic!("expected bench command"),
+        }
+        assert!(RunConfig::from_args(argv("bench --iters 0")).is_err());
+        assert!(RunConfig::from_args(argv("bench --k 4")).is_err());
+    }
+
+    #[test]
+    fn synthetic_data_maps_to_rank_local_generation() {
+        let spec = DataSpec::Synthetic { n: 32, m: 2, k_true: 3, density: 1.0 }
+            .to_dataset_spec(7);
+        match spec {
+            DatasetSpec::Synthetic(s) => {
+                assert_eq!((s.n, s.m, s.k, s.seed), (32, 2, 3, 7));
+                assert!(!s.is_sparse());
+            }
+            _ => panic!("dense synthetic must generate rank-locally"),
+        }
+        let spec = DataSpec::Synthetic { n: 32, m: 2, k_true: 3, density: 0.1 }
+            .to_dataset_spec(7);
+        match spec {
+            DatasetSpec::Synthetic(s) => assert!(s.is_sparse()),
+            _ => panic!("sparse synthetic must generate rank-locally"),
+        }
+        // real datasets stay leader-resident
+        assert!(matches!(
+            DataSpec::Nations.to_dataset_spec(1),
+            DatasetSpec::InMemory(_)
+        ));
     }
 
     #[test]

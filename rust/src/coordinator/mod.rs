@@ -60,11 +60,13 @@ impl JobData {
         JobData::Sparse(Arc::new(x))
     }
 
-    /// Global entity count n.
+    /// Global entity count n (0 for an empty sparse relation list, which
+    /// [`JobData::validate`] rejects before any rank sees it — indexing
+    /// here used to panic inside a worker thread and poison the pool).
     pub fn n(&self) -> usize {
         match self {
             JobData::Dense(x) => x.n1(),
-            JobData::Sparse(s) => s[0].rows(),
+            JobData::Sparse(s) => s.first().map_or(0, |c| c.rows()),
         }
     }
 
@@ -74,6 +76,51 @@ impl JobData {
             JobData::Dense(x) => x.m(),
             JobData::Sparse(s) => s.len(),
         }
+    }
+
+    /// Shape validation, run at dataset-registration/submit time so bad
+    /// inputs surface as typed errors on the leader instead of panics in
+    /// rank threads: relation slices must exist, be square, and agree in
+    /// shape.
+    pub fn validate(&self) -> crate::error::Result<()> {
+        match self {
+            JobData::Dense(x) => {
+                if x.n1() != x.n2() {
+                    crate::bail!(
+                        "dense job tensor must have square slices, got {}×{}×{}",
+                        x.n1(),
+                        x.n2(),
+                        x.m()
+                    );
+                }
+            }
+            JobData::Sparse(s) => {
+                let first = match s.first() {
+                    Some(f) => f,
+                    None => crate::bail!("sparse job data has no relation slices"),
+                };
+                if first.rows() != first.cols() {
+                    crate::bail!(
+                        "sparse relation slices must be square, got {}×{}",
+                        first.rows(),
+                        first.cols()
+                    );
+                }
+                for (t, c) in s.iter().enumerate() {
+                    if c.rows() != first.rows() || c.cols() != first.cols() {
+                        crate::bail!(
+                            "sparse relation slice {t} is {}×{} but slice 0 is {}×{} — \
+                             all slices must share one shape",
+                            c.rows(),
+                            c.cols(),
+                            first.rows(),
+                            first.cols()
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Extract rank (row, col)'s tile.
@@ -157,6 +204,28 @@ mod tests {
         let engine_cfg = EngineConfig::from(JobConfig::default());
         assert_eq!(engine_cfg.p, 4);
         assert!(!engine_cfg.trace);
+    }
+
+    #[test]
+    fn job_data_validation_is_typed_not_panicking() {
+        // empty relation list: used to panic via s[0] in n()
+        let empty = JobData::sparse(vec![]);
+        assert_eq!(empty.n(), 0);
+        assert_eq!(empty.m(), 0);
+        let e = empty.validate().unwrap_err();
+        assert!(e.to_string().contains("no relation slices"), "{e}");
+        // non-square slice
+        let rect = JobData::sparse(vec![Csr::from_triplets(4, 6, vec![(0, 0, 1.0)])]);
+        assert!(rect.validate().unwrap_err().to_string().contains("square"));
+        // mismatched slice shapes
+        let mixed = JobData::sparse(vec![
+            Csr::from_triplets(4, 4, vec![(0, 0, 1.0)]),
+            Csr::from_triplets(6, 6, vec![(0, 0, 1.0)]),
+        ]);
+        assert!(mixed.validate().unwrap_err().to_string().contains("slice 1"));
+        // well-formed data passes, dense and sparse
+        assert!(JobData::sparse(synthetic::sparse_planted(8, 2, 2, 0.3, 1)).validate().is_ok());
+        assert!(JobData::dense(synthetic::block_tensor(8, 2, 2, 0.01, 1).x).validate().is_ok());
     }
 
     #[test]

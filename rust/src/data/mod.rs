@@ -6,5 +6,5 @@ pub mod synthetic;
 pub mod trade;
 
 pub use nations::nations_tensor;
-pub use synthetic::{planted_tensor, Planted};
+pub use synthetic::{planted_tensor, Planted, SyntheticSpec};
 pub use trade::trade_tensor;

@@ -1,0 +1,252 @@
+//! The engine's dataset data plane: register once, compute many.
+//!
+//! The paper's premise (§4, Fig 12–13) is that **no single node ever
+//! holds the global tensor** — each rank owns one `X^(i,j)` tile and all
+//! products are tile-local. The job plane used to invert that: every
+//! `Factorize`/`ModelSelect` submission shipped the full tensor to every
+//! rank, and each worker re-extracted its tile per job, so k-sweeps and
+//! perturbation ensembles re-paid O(n²·m) tiling on every submission and
+//! the leader's RAM capped the problem size.
+//!
+//! This module separates data distribution from job submission:
+//!
+//! * [`DatasetSpec`] describes a dataset — either leader-resident
+//!   [`DatasetSpec::InMemory`] data (tiled once, at registration) or a
+//!   rank-locally generated [`DatasetSpec::Synthetic`] tensor (each rank
+//!   materializes its own tile from counter-keyed RNG streams; the global
+//!   tensor never exists anywhere, so shapes can exceed leader RAM);
+//! * [`super::Engine::load_dataset`] broadcasts the spec once; every rank
+//!   builds and caches its resident [`LocalTile`] and the engine returns a
+//!   cheap [`DatasetHandle`];
+//! * jobs reference data through [`DatasetRef`] — a handle, or (for
+//!   migration) inline [`JobData`] that the engine auto-registers and
+//!   caches by `Arc` identity so repeated inline submissions of the same
+//!   tensor still tile exactly once per rank.
+//!
+//! The reuse guarantee is counter-asserted: `EngineStats::tile_builds`
+//! counts per-rank tile materializations, and N consecutive jobs on one
+//! handle perform exactly p of them.
+
+use std::sync::Arc;
+
+use crate::bail;
+use crate::comm::Grid;
+use crate::coordinator::JobData;
+use crate::data::synthetic::SyntheticSpec;
+use crate::error::Result;
+use crate::rescal::LocalTile;
+
+/// Opaque reference to a dataset resident in an engine's rank pool.
+/// Handles are engine-scoped: using one on a different engine is a typed
+/// error at submit time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DatasetHandle(pub(crate) u64);
+
+/// What [`super::Engine::load_dataset`] distributes.
+#[derive(Clone)]
+pub enum DatasetSpec {
+    /// Leader-resident data: each rank extracts (and caches) its tile
+    /// once at registration.
+    InMemory(JobData),
+    /// Rank-locally generated planted tensor: each rank materializes its
+    /// tile from block-keyed RNG streams; the leader never constructs the
+    /// global `Tensor3`/CSR set (the generation API takes block ranges
+    /// only — see [`SyntheticSpec`]).
+    Synthetic(SyntheticSpec),
+}
+
+impl DatasetSpec {
+    /// Validate shape consistency without touching the rank pool: sparse
+    /// relation lists must be non-empty with square, equal-shape slices;
+    /// synthetic specs need sane dimensions and densities.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            DatasetSpec::InMemory(data) => data.validate(),
+            DatasetSpec::Synthetic(s) => {
+                if s.n == 0 || s.m == 0 || s.k == 0 {
+                    bail!(
+                        "synthetic dataset dimensions must all be >= 1, got n={} m={} k={}",
+                        s.n,
+                        s.m,
+                        s.k
+                    );
+                }
+                if s.k > s.n {
+                    bail!("synthetic dataset k={} exceeds n={}", s.k, s.n);
+                }
+                if s.density <= 0.0 || s.density > 1.0 {
+                    bail!("synthetic dataset density must be in (0, 1], got {}", s.density);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Leader-visible shape metadata (requires [`Self::validate`] to have
+    /// passed).
+    pub fn info(&self) -> DatasetInfo {
+        match self {
+            DatasetSpec::InMemory(data) => DatasetInfo {
+                n: data.n(),
+                m: data.m(),
+                sparse: matches!(data, JobData::Sparse(_)),
+                resident_bytes: 0,
+            },
+            DatasetSpec::Synthetic(s) => DatasetInfo {
+                n: s.n,
+                m: s.m,
+                sparse: s.is_sparse(),
+                resident_bytes: 0,
+            },
+        }
+    }
+
+    /// Materialize rank (row, col)'s tile. Runs **on the rank**, not the
+    /// leader: `InMemory` extracts from the shared `Arc`; `Synthetic`
+    /// generates the block directly.
+    pub(crate) fn build_tile(&self, grid: &Grid, row: usize, col: usize) -> LocalTile {
+        match self {
+            DatasetSpec::InMemory(data) => data.tile(grid, row, col),
+            DatasetSpec::Synthetic(s) => {
+                let (r0, r1) = grid.chunk(s.n, row);
+                let (c0, c1) = grid.chunk(s.n, col);
+                if s.is_sparse() {
+                    LocalTile::Sparse(s.sparse_tile(r0, r1, c0, c1))
+                } else {
+                    LocalTile::Dense(s.dense_tile(r0, r1, c0, c1))
+                }
+            }
+        }
+    }
+}
+
+impl From<JobData> for DatasetSpec {
+    fn from(data: JobData) -> Self {
+        DatasetSpec::InMemory(data)
+    }
+}
+
+impl From<&JobData> for DatasetSpec {
+    fn from(data: &JobData) -> Self {
+        DatasetSpec::InMemory(data.clone())
+    }
+}
+
+impl From<SyntheticSpec> for DatasetSpec {
+    fn from(s: SyntheticSpec) -> Self {
+        DatasetSpec::Synthetic(s)
+    }
+}
+
+/// Shape metadata the leader keeps per registered dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DatasetInfo {
+    /// Global entity count (the tensor is n×n×m).
+    pub n: usize,
+    /// Relation count.
+    pub m: usize,
+    pub sparse: bool,
+    /// Total bytes resident across all rank tiles, sampled at load time.
+    /// Sparse tiles may lazily build transpose caches during jobs (up to
+    /// ~2× this figure) — see `Csr::resident_bytes`.
+    pub resident_bytes: usize,
+}
+
+/// How a job names its input data.
+#[derive(Clone)]
+pub enum DatasetRef {
+    /// A dataset previously registered with
+    /// [`super::Engine::load_dataset`] — zero data movement at submit.
+    Handle(DatasetHandle),
+    /// Compatibility shim: leader-resident data registered on first use
+    /// and cached by `Arc` identity, so resubmitting the same `JobData`
+    /// does not re-tile.
+    Inline(JobData),
+}
+
+impl From<DatasetHandle> for DatasetRef {
+    fn from(h: DatasetHandle) -> Self {
+        DatasetRef::Handle(h)
+    }
+}
+
+impl From<&DatasetHandle> for DatasetRef {
+    fn from(h: &DatasetHandle) -> Self {
+        DatasetRef::Handle(*h)
+    }
+}
+
+impl From<JobData> for DatasetRef {
+    fn from(data: JobData) -> Self {
+        DatasetRef::Inline(data)
+    }
+}
+
+impl From<&JobData> for DatasetRef {
+    fn from(data: &JobData) -> Self {
+        DatasetRef::Inline(data.clone())
+    }
+}
+
+/// One registry entry: the spec is retained so `Arc`-identity caching of
+/// inline data can never alias a freed allocation, plus leader-side shape
+/// info for gathers and validation.
+pub(crate) struct DatasetEntry {
+    pub spec: Arc<DatasetSpec>,
+    pub info: DatasetInfo,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Csr, Tensor3};
+
+    #[test]
+    fn validate_rejects_bad_synthetic_specs() {
+        assert!(DatasetSpec::from(SyntheticSpec::dense(16, 2, 3, 1)).validate().is_ok());
+        assert!(DatasetSpec::from(SyntheticSpec::sparse(16, 2, 3, 0.1, 1))
+            .validate()
+            .is_ok());
+        let bad = |s: SyntheticSpec| DatasetSpec::Synthetic(s).validate().is_err();
+        assert!(bad(SyntheticSpec::dense(0, 2, 3, 1)));
+        assert!(bad(SyntheticSpec::dense(16, 0, 3, 1)));
+        assert!(bad(SyntheticSpec::dense(16, 2, 0, 1)));
+        assert!(bad(SyntheticSpec::dense(4, 2, 8, 1)));
+        assert!(bad(SyntheticSpec::sparse(16, 2, 3, 0.0, 1)));
+        assert!(bad(SyntheticSpec::sparse(16, 2, 3, 1.5, 1)));
+    }
+
+    #[test]
+    fn info_reports_shape_and_kind() {
+        let spec = DatasetSpec::from(SyntheticSpec::sparse(32, 5, 4, 0.2, 9));
+        let info = spec.info();
+        assert_eq!((info.n, info.m, info.sparse), (32, 5, true));
+        let dense = DatasetSpec::InMemory(JobData::dense(Tensor3::zeros(8, 8, 2)));
+        let info = dense.info();
+        assert_eq!((info.n, info.m, info.sparse), (8, 2, false));
+    }
+
+    #[test]
+    fn build_tile_covers_the_grid() {
+        let spec = DatasetSpec::from(SyntheticSpec::sparse(10, 2, 2, 0.4, 11));
+        let grid = Grid::new(4);
+        let mut nnz = vec![0usize; 2];
+        for row in 0..2 {
+            for col in 0..2 {
+                match spec.build_tile(&grid, row, col) {
+                    LocalTile::Sparse(s) => {
+                        for (t, c) in s.iter().enumerate() {
+                            nnz[t] += c.nnz();
+                        }
+                    }
+                    LocalTile::Dense(_) => panic!("expected sparse tile"),
+                }
+            }
+        }
+        // the tiles partition the global nonzeros exactly
+        let full: Vec<Csr> = SyntheticSpec::sparse(10, 2, 2, 0.4, 11).sparse_tile(0, 10, 0, 10);
+        for (t, c) in full.iter().enumerate() {
+            assert_eq!(nnz[t], c.nnz(), "slice {t}");
+        }
+    }
+}

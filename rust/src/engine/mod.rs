@@ -1,13 +1,18 @@
 //! The job engine: the crate's public entry point for running distributed
 //! RESCAL(k) work.
 //!
-//! # Lifecycle: configure → submit → report
+//! # Lifecycle: configure → load → submit → report
 //!
 //! An [`Engine`] is constructed **once** from a typed [`EngineConfig`]
 //! (grid size `p`, [`BackendSpec`], trace policy). Construction spawns
 //! the √p×√p grid of rank threads and builds each rank's compute backend
-//! exactly once (see [`pool`]); the engine then accepts any number of
-//! typed jobs:
+//! exactly once (see [`pool`]). Data is then **loaded once**:
+//! [`Engine::load_dataset`] distributes a [`DatasetSpec`] and every rank
+//! caches its resident tile — extracted from leader memory
+//! ([`DatasetSpec::InMemory`]) or generated rank-locally from block-keyed
+//! RNG streams ([`DatasetSpec::Synthetic`], where the global tensor never
+//! exists anywhere). The returned [`DatasetHandle`] then feeds any number
+//! of typed jobs with **zero per-job data movement**:
 //!
 //! * [`JobSpec::Factorize`] — one distributed non-negative RESCAL
 //!   factorization (paper Alg 3);
@@ -17,30 +22,38 @@
 //!   calibrated machine model (paper Fig 13).
 //!
 //! Every job returns a unified [`Report`] that serializes to JSON via
-//! [`Report::to_json`]. Because the pool persists, repeated-job workloads
-//! (k sweeps, perturbation ensembles, bench loops) skip the per-job
-//! thread-spawn and backend-rebuild cost the old free functions paid —
-//! including the XLA executable-cache rebuild on the PJRT path.
+//! [`Report::to_json`]. Because both the pool and the resident tiles
+//! persist, repeated-job workloads (k sweeps, perturbation ensembles,
+//! bench loops) skip the per-job thread-spawn, backend-rebuild, *and*
+//! re-tiling costs the old free functions paid. Inline [`JobData`] is
+//! still accepted everywhere a handle is (auto-registered and cached by
+//! `Arc` identity) so pre-data-plane call sites keep working; auto
+//! registrations are LRU-bounded so a fresh-tensor-per-job loop cannot
+//! grow rank memory without bound.
 //!
 //! ```no_run
-//! use drescal::coordinator::JobData;
-//! use drescal::data::synthetic;
+//! use drescal::data::synthetic::SyntheticSpec;
 //! use drescal::engine::{Engine, EngineConfig};
 //! use drescal::rescal::RescalOptions;
 //!
 //! let mut engine = Engine::new(EngineConfig::default()).unwrap();
-//! let data = JobData::dense(synthetic::block_tensor(64, 3, 4, 0.01, 7).x);
-//! // two jobs on the same rank pool — no respawn between them
-//! let coarse = engine.factorize(&data, &RescalOptions::new(4, 50), 42).unwrap();
-//! let fine = engine.factorize(&data, &RescalOptions::new(4, 500), 42).unwrap();
+//! // tiled once, resident on the ranks; the leader never holds X
+//! let data = engine.load_dataset(SyntheticSpec::dense(64, 3, 4, 7)).unwrap();
+//! // two jobs on the same rank pool and the same resident tiles
+//! let coarse = engine.factorize(data, &RescalOptions::new(4, 50), 42).unwrap();
+//! let fine = engine.factorize(data, &RescalOptions::new(4, 500), 42).unwrap();
 //! assert!(fine.rel_error <= coarse.rel_error + 1e-4);
 //! ```
 
+pub mod dataset;
 mod pool;
 pub mod report;
 
+pub use dataset::{DatasetHandle, DatasetInfo, DatasetRef, DatasetSpec};
 pub use report::{Report, SimReport, SimRow};
 
+use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::backend::BackendSpec;
@@ -54,6 +67,8 @@ use crate::rescal::RescalOptions;
 use crate::simulate::{exascale, Machine};
 use crate::tensor::Mat;
 use crate::{bail, comm::Trace};
+
+use dataset::DatasetEntry;
 
 /// Engine-level configuration, fixed for the engine's lifetime.
 #[derive(Clone, Debug)]
@@ -105,12 +120,15 @@ impl EngineConfig {
     }
 }
 
-/// One typed job submission.
+/// One typed job submission. Compute jobs name their data through a
+/// [`DatasetRef`]: a registered [`DatasetHandle`] (zero data movement at
+/// submit) or inline [`JobData`] (auto-registered, cached by `Arc`
+/// identity).
 pub enum JobSpec {
     /// Distributed non-negative RESCAL (Alg 3).
-    Factorize { data: JobData, opts: RescalOptions, init: DistInit },
+    Factorize { data: DatasetRef, opts: RescalOptions, init: DistInit },
     /// RESCALk model-selection sweep (Alg 1).
-    ModelSelect { data: JobData, cfg: RescalkConfig },
+    ModelSelect { data: DatasetRef, cfg: RescalkConfig },
     /// Cluster-scale replay through the calibrated machine model; runs on
     /// the leader, not the rank pool.
     Simulate(SimSpec),
@@ -150,15 +168,39 @@ pub struct EngineStats {
     /// `ranks` for the engine's whole lifetime — backends are never
     /// rebuilt between jobs.
     pub backend_builds: usize,
-    /// Jobs completed successfully (pings not counted).
+    /// Per-rank tile materializations since the engine was built. Exactly
+    /// `ranks` per registered dataset, however many jobs run on it —
+    /// tiles are never rebuilt between jobs.
+    pub tile_builds: usize,
+    /// Datasets currently registered (resident on the ranks).
+    pub datasets_resident: usize,
+    /// Jobs completed successfully (pings and dataset loads not counted).
     pub jobs_completed: usize,
 }
+
+/// How many *auto-registered* inline datasets stay resident at once.
+/// Submitting a fresh `JobData` per job (the pre-data-plane pattern)
+/// evicts the least-recently-used auto-registration instead of growing
+/// rank memory without bound; explicitly `load_dataset`-ed handles are
+/// never evicted.
+const INLINE_RESIDENT_MAX: usize = 4;
 
 /// A persistent distributed-execution engine over a fixed rank pool.
 pub struct Engine {
     cfg: EngineConfig,
     grid: Grid,
     pool: pool::RankPool,
+    /// Registered datasets by id; entries keep their spec alive so the
+    /// `Arc`-identity inline cache can never alias a freed allocation.
+    datasets: HashMap<u64, DatasetEntry>,
+    /// `Arc` pointer of inline [`JobData`] → the handle it registered
+    /// under, so compat-path resubmissions tile zero times.
+    inline_cache: HashMap<usize, DatasetHandle>,
+    /// Keys of `inline_cache` entries that were **auto**-registered by
+    /// [`Engine::submit`] (not by an explicit `load_dataset` call), in
+    /// least-recently-used order; bounded by [`INLINE_RESIDENT_MAX`].
+    inline_lru: Vec<usize>,
+    next_dataset_id: u64,
     jobs_completed: usize,
 }
 
@@ -170,12 +212,154 @@ impl Engine {
         cfg.validate()?;
         let pool = pool::RankPool::spawn(cfg.p, &cfg.backend, cfg.trace)?;
         let grid = Grid::new(cfg.p);
-        Ok(Engine { grid, pool, cfg, jobs_completed: 0 })
+        Ok(Engine {
+            grid,
+            pool,
+            cfg,
+            datasets: HashMap::new(),
+            inline_cache: HashMap::new(),
+            inline_lru: Vec::new(),
+            next_dataset_id: 0,
+            jobs_completed: 0,
+        })
     }
 
     /// The configuration this engine was built from.
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
+    }
+
+    /// Distribute a dataset once: validate the spec on the leader, then
+    /// have every rank materialize and cache its resident tile. The
+    /// returned handle feeds any number of jobs with no further tiling or
+    /// data movement. For [`DatasetSpec::Synthetic`] the tiles are
+    /// generated rank-locally — the global tensor never exists, so the
+    /// shape is not bounded by leader RAM.
+    pub fn load_dataset(&mut self, spec: impl Into<DatasetSpec>) -> Result<DatasetHandle> {
+        let spec = spec.into();
+        spec.validate()?;
+        let mut info = spec.info();
+        let inline_key = match &spec {
+            DatasetSpec::InMemory(data) => Some(Self::inline_key(data)),
+            DatasetSpec::Synthetic(_) => None,
+        };
+        let id = self.next_dataset_id;
+        let spec = Arc::new(spec);
+        self.pool.broadcast(&pool::RankJob::LoadDataset {
+            id,
+            spec: Arc::clone(&spec),
+            n: info.n,
+        })?;
+        let outs = self.pool.collect()?;
+        let mut resident = 0usize;
+        for (rank, out) in outs.into_iter().enumerate() {
+            match out {
+                pool::RankOut::Loaded { bytes } => resident += bytes,
+                _ => bail!("rank {rank}: unexpected reply to dataset load"),
+            }
+        }
+        info.resident_bytes = resident;
+        self.next_dataset_id += 1;
+        let handle = DatasetHandle(id);
+        self.datasets.insert(id, DatasetEntry { spec, info });
+        if let Some(key) = inline_key {
+            // an explicit load supersedes an *auto*-registration of the
+            // same tensor: unload the auto handle (the caller never saw
+            // it) so its tiles don't stay resident unreachably; the new
+            // handle is caller-owned and never evicted
+            if self.inline_lru.contains(&key) {
+                if let Some(&old) = self.inline_cache.get(&key) {
+                    self.unload_dataset(old)?;
+                }
+            }
+            self.inline_cache.insert(key, handle);
+        }
+        Ok(handle)
+    }
+
+    /// Drop a dataset's resident tiles on every rank and forget the
+    /// handle. Subsequent jobs on the handle fail with a typed error.
+    pub fn unload_dataset(&mut self, handle: DatasetHandle) -> Result<()> {
+        if self.datasets.remove(&handle.0).is_none() {
+            bail!("unknown dataset handle {} (already unloaded?)", handle.0);
+        }
+        self.inline_cache.retain(|_, h| *h != handle);
+        let cache = &self.inline_cache;
+        self.inline_lru.retain(|k| cache.contains_key(k));
+        self.pool.broadcast(&pool::RankJob::UnloadDataset { id: handle.0 })?;
+        let outs = self.pool.collect()?;
+        for (rank, out) in outs.into_iter().enumerate() {
+            match out {
+                pool::RankOut::Unloaded => {}
+                _ => bail!("rank {rank}: unexpected reply to dataset unload"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Shape metadata of a registered dataset (None after unload).
+    pub fn dataset_info(&self, handle: DatasetHandle) -> Option<DatasetInfo> {
+        self.datasets.get(&handle.0).map(|e| e.info)
+    }
+
+    /// The spec a dataset was registered from (None after unload).
+    pub fn dataset_spec(&self, handle: DatasetHandle) -> Option<&DatasetSpec> {
+        self.datasets.get(&handle.0).map(|e| &*e.spec)
+    }
+
+    fn inline_key(data: &JobData) -> usize {
+        match data {
+            JobData::Dense(x) => Arc::as_ptr(x) as usize,
+            JobData::Sparse(s) => Arc::as_ptr(s) as usize,
+        }
+    }
+
+    /// Resolve a job's data reference to a registered handle,
+    /// auto-registering inline data on first sight (keyed by `Arc`
+    /// identity, so resubmitting the same tensor tiles zero times).
+    /// Auto-registrations are bounded: beyond [`INLINE_RESIDENT_MAX`]
+    /// distinct tensors, the least-recently-used one is unloaded so the
+    /// fresh-tensor-per-job pattern cannot grow rank memory without
+    /// bound. Explicit `load_dataset` handles are never evicted.
+    fn resolve(&mut self, data: DatasetRef) -> Result<DatasetHandle> {
+        match data {
+            DatasetRef::Handle(h) => {
+                if !self.datasets.contains_key(&h.0) {
+                    bail!(
+                        "unknown dataset handle {} — was it unloaded, or loaded on a \
+                         different engine?",
+                        h.0
+                    );
+                }
+                Ok(h)
+            }
+            DatasetRef::Inline(data) => {
+                let key = Self::inline_key(&data);
+                if let Some(&h) = self.inline_cache.get(&key) {
+                    // refresh LRU position, but only for auto-registered
+                    // entries — explicit load_dataset handles never enter
+                    // the eviction order
+                    if let Some(pos) = self.inline_lru.iter().position(|k| *k == key) {
+                        self.inline_lru.remove(pos);
+                        self.inline_lru.push(key);
+                    }
+                    return Ok(h);
+                }
+                let handle = self.load_dataset(DatasetSpec::InMemory(data))?;
+                self.inline_lru.push(key);
+                while self.inline_lru.len() > INLINE_RESIDENT_MAX {
+                    let oldest = self.inline_lru[0];
+                    match self.inline_cache.get(&oldest).copied() {
+                        // unload_dataset also removes `oldest` from the LRU
+                        Some(old_handle) => self.unload_dataset(old_handle)?,
+                        None => {
+                            self.inline_lru.remove(0);
+                        }
+                    }
+                }
+                Ok(handle)
+            }
+        }
     }
 
     /// Submit one typed job and gather its unified report.
@@ -206,15 +390,16 @@ impl Engine {
         }
     }
 
-    /// Convenience: one seeded-random factorization.
+    /// Convenience: one seeded-random factorization. Takes a registered
+    /// [`DatasetHandle`] or (compat) `&JobData`/`JobData`.
     pub fn factorize(
         &mut self,
-        data: &JobData,
+        data: impl Into<DatasetRef>,
         opts: &RescalOptions,
         seed: u64,
     ) -> Result<RescalReport> {
         let report = self.submit(JobSpec::Factorize {
-            data: data.clone(),
+            data: data.into(),
             opts: opts.clone(),
             init: DistInit::Random { seed },
         })?;
@@ -224,14 +409,15 @@ impl Engine {
         }
     }
 
-    /// Convenience: one model-selection sweep.
+    /// Convenience: one model-selection sweep. Takes a registered
+    /// [`DatasetHandle`] or (compat) `&JobData`/`JobData`.
     pub fn model_select(
         &mut self,
-        data: &JobData,
+        data: impl Into<DatasetRef>,
         cfg: &RescalkConfig,
     ) -> Result<RescalkReport> {
         let report =
-            self.submit(JobSpec::ModelSelect { data: data.clone(), cfg: cfg.clone() })?;
+            self.submit(JobSpec::ModelSelect { data: data.into(), cfg: cfg.clone() })?;
         match report {
             Report::ModelSelect(r) => Ok(r),
             _ => Err(err!("model-select job returned a non-model-select report")),
@@ -267,20 +453,24 @@ impl Engine {
         EngineStats {
             ranks: self.pool.p(),
             backend_builds: self.pool.backend_builds(),
+            tile_builds: self.pool.tile_builds(),
+            datasets_resident: self.datasets.len(),
             jobs_completed: self.jobs_completed,
         }
     }
 
     fn run_factorize(
         &mut self,
-        data: JobData,
+        data: DatasetRef,
         opts: RescalOptions,
         init: DistInit,
     ) -> Result<RescalReport> {
-        let n = data.n();
+        let handle = self.resolve(data)?;
+        let n = self.datasets[&handle.0].info.n;
         let k = opts.k;
         let t0 = Instant::now();
-        self.pool.broadcast(&pool::RankJob::Factorize { data, n, opts, init })?;
+        self.pool
+            .broadcast(&pool::RankJob::Factorize { dataset: handle.0, n, opts, init })?;
         let outs = self.pool.collect()?;
         let wall_seconds = t0.elapsed().as_secs_f64();
         let mut blocks: Vec<(usize, usize, Mat)> = Vec::with_capacity(outs.len());
@@ -298,6 +488,7 @@ impl Engine {
                         first = Some(result);
                     }
                 }
+                pool::RankOut::JobError(e) => bail!("rank {rank}: {e}"),
                 _ => bail!("rank {rank}: unexpected reply to factorize job"),
             }
         }
@@ -316,12 +507,14 @@ impl Engine {
 
     fn run_model_select(
         &mut self,
-        data: JobData,
+        data: DatasetRef,
         cfg: RescalkConfig,
     ) -> Result<RescalkReport> {
-        let n = data.n();
+        let handle = self.resolve(data)?;
+        let n = self.datasets[&handle.0].info.n;
         let t0 = Instant::now();
-        self.pool.broadcast(&pool::RankJob::ModelSelect { data, n, cfg })?;
+        self.pool
+            .broadcast(&pool::RankJob::ModelSelect { dataset: handle.0, n, cfg })?;
         let outs = self.pool.collect()?;
         let wall_seconds = t0.elapsed().as_secs_f64();
         let mut results = Vec::with_capacity(outs.len());
@@ -332,6 +525,7 @@ impl Engine {
                     results.push((row, col, result));
                     traces.push(trace);
                 }
+                pool::RankOut::JobError(e) => bail!("rank {rank}: {e}"),
                 _ => bail!("rank {rank}: unexpected reply to model-select job"),
             }
         }

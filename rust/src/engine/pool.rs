@@ -1,18 +1,23 @@
 //! The persistent rank pool behind [`super::Engine`].
 //!
 //! One OS thread per virtual rank, spawned **once** per engine: each
-//! worker owns its [`RankCtx`] (grid coordinates + communicator handles)
-//! and builds its compute backend exactly once, then serves typed jobs
-//! from a channel until the engine drops. This is what makes repeated-job
-//! workloads (k sweeps, perturbation ensembles, bench loops) cheap — the
-//! old free functions respawned every thread and rebuilt every backend
-//! (including the XLA executable cache) per call.
+//! worker owns its [`RankCtx`] (grid coordinates + communicator handles),
+//! builds its compute backend exactly once, and keeps a cache of resident
+//! dataset tiles (its block of each registered dataset — see
+//! [`super::dataset`]), then serves typed jobs from a channel until the
+//! engine drops. This is what makes repeated-job workloads (k sweeps,
+//! perturbation ensembles, bench loops) cheap — the old free functions
+//! respawned every thread and rebuilt every backend (including the XLA
+//! executable cache) per call, and jobs used to re-extract their tile
+//! from a broadcast global tensor per submission.
 //!
 //! Collectives stay correct because the engine broadcasts every job to
 //! all ranks before gathering any result, and each worker consumes its
 //! queue in send order — so all ranks execute the same job sequence in
-//! lockstep, exactly like the one-shot grid harness did.
+//! lockstep, exactly like the one-shot grid harness did. Dataset loads
+//! ride the same queue, so a job can never observe a half-loaded dataset.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -21,20 +26,26 @@ use std::thread::{JoinHandle, ThreadId};
 use crate::backend::BackendSpec;
 use crate::comm::grid::RankCtx;
 use crate::comm::Trace;
-use crate::coordinator::JobData;
+use crate::engine::dataset::DatasetSpec;
 use crate::err;
 use crate::error::Result;
 use crate::model_selection::{rescalk_rank, RescalkConfig, RescalkResult};
 use crate::rescal::distributed::{DistInit, DistRescalConfig};
 use crate::rescal::{rescal_rank, RankResult, RescalOptions};
 
-/// One job as seen by a single rank thread.
+/// One job as seen by a single rank thread. Compute jobs name their data
+/// by registry id; the tile itself is already resident from a prior
+/// `LoadDataset`.
 #[derive(Clone)]
 pub(crate) enum RankJob {
-    /// Distributed RESCAL (Alg 3) on this rank's tile.
-    Factorize { data: JobData, n: usize, opts: RescalOptions, init: DistInit },
-    /// Full RESCALk model-selection sweep (Alg 1) on this rank's tile.
-    ModelSelect { data: JobData, n: usize, cfg: RescalkConfig },
+    /// Materialize and cache this rank's tile of a dataset.
+    LoadDataset { id: u64, spec: Arc<DatasetSpec>, n: usize },
+    /// Drop this rank's tile of a dataset.
+    UnloadDataset { id: u64 },
+    /// Distributed RESCAL (Alg 3) on this rank's resident tile.
+    Factorize { dataset: u64, n: usize, opts: RescalOptions, init: DistInit },
+    /// Full RESCALk model-selection sweep (Alg 1) on the resident tile.
+    ModelSelect { dataset: u64, n: usize, cfg: RescalkConfig },
     /// Health probe: reply with the worker's thread id (no collectives).
     Ping,
 }
@@ -45,6 +56,13 @@ pub(crate) enum RankOut {
     Ready(ThreadId),
     /// Startup failure (e.g. missing artifact directory).
     BuildError(String),
+    /// Dataset tile materialized and cached; resident size attached.
+    Loaded { bytes: usize },
+    Unloaded,
+    /// A job-level failure that did not kill the worker (e.g. a dataset
+    /// id that is not resident). Deterministic across ranks, so no rank
+    /// enters a collective the others skipped.
+    JobError(String),
     Factorize { row: usize, col: usize, result: Box<RankResult>, trace: Trace },
     ModelSelect { row: usize, col: usize, result: Box<RescalkResult>, trace: Trace },
     Ping(ThreadId),
@@ -56,6 +74,11 @@ struct PoolShared {
     /// Total backend constructions over the pool's lifetime. Stays equal
     /// to `p` however many jobs run — the reuse guarantee tests assert on.
     backend_builds: AtomicUsize,
+    /// Total tile materializations (extractions or rank-local
+    /// generations) over the pool's lifetime. Exactly `p` per registered
+    /// dataset, however many jobs run on it — the data-plane reuse
+    /// guarantee tests assert on.
+    tile_builds: AtomicUsize,
 }
 
 struct Worker {
@@ -119,6 +142,12 @@ impl RankPool {
         self.shared.backend_builds.load(Ordering::SeqCst)
     }
 
+    /// Total tile materializations since spawn (== p per registered
+    /// dataset, by design).
+    pub fn tile_builds(&self) -> usize {
+        self.shared.tile_builds.load(Ordering::SeqCst)
+    }
+
     /// The worker thread ids recorded at spawn, rank order.
     pub fn thread_ids(&self) -> Vec<ThreadId> {
         self.workers.iter().map(|w| w.thread_id).collect()
@@ -173,8 +202,8 @@ impl Drop for RankPool {
     }
 }
 
-/// Body of one rank thread: build the backend once, then serve jobs until
-/// the engine closes the channel.
+/// Body of one rank thread: build the backend once, keep the resident
+/// dataset tiles, and serve jobs until the engine closes the channel.
 fn worker_loop(
     ctx: RankCtx,
     spec: BackendSpec,
@@ -196,31 +225,51 @@ fn worker_loop(
             return;
         }
     };
+    // this rank's resident tiles, one per registered dataset — built once
+    // at LoadDataset and reused by every subsequent job on the handle
+    let mut datasets: HashMap<u64, crate::rescal::LocalTile> = HashMap::new();
     while let Ok(job) = jobs.recv() {
         let mut trace = if trace_enabled { Trace::new() } else { Trace::disabled() };
         let reply = match job {
             RankJob::Ping => RankOut::Ping(std::thread::current().id()),
-            RankJob::Factorize { data, n, opts, init } => {
-                let tile = data.tile(&ctx.grid, ctx.row, ctx.col);
-                let cfg = DistRescalConfig { opts, init, n };
-                let result = rescal_rank(&ctx, &tile, &cfg, backend.as_mut(), &mut trace);
-                RankOut::Factorize {
-                    row: ctx.row,
-                    col: ctx.col,
-                    result: Box::new(result),
-                    trace,
-                }
+            RankJob::LoadDataset { id, spec, n } => {
+                debug_assert_eq!(spec.info().n, n);
+                let tile = spec.build_tile(&ctx.grid, ctx.row, ctx.col);
+                shared.tile_builds.fetch_add(1, Ordering::SeqCst);
+                let bytes = tile.resident_bytes();
+                datasets.insert(id, tile);
+                RankOut::Loaded { bytes }
             }
-            RankJob::ModelSelect { data, n, cfg } => {
-                let tile = data.tile(&ctx.grid, ctx.row, ctx.col);
-                let result = rescalk_rank(&ctx, &tile, n, &cfg, backend.as_mut(), &mut trace);
-                RankOut::ModelSelect {
-                    row: ctx.row,
-                    col: ctx.col,
-                    result: Box::new(result),
-                    trace,
-                }
+            RankJob::UnloadDataset { id } => {
+                datasets.remove(&id);
+                RankOut::Unloaded
             }
+            RankJob::Factorize { dataset, n, opts, init } => match datasets.get(&dataset) {
+                None => RankOut::JobError(format!("dataset {dataset} is not resident")),
+                Some(tile) => {
+                    let cfg = DistRescalConfig { opts, init, n };
+                    let result = rescal_rank(&ctx, tile, &cfg, backend.as_mut(), &mut trace);
+                    RankOut::Factorize {
+                        row: ctx.row,
+                        col: ctx.col,
+                        result: Box::new(result),
+                        trace,
+                    }
+                }
+            },
+            RankJob::ModelSelect { dataset, n, cfg } => match datasets.get(&dataset) {
+                None => RankOut::JobError(format!("dataset {dataset} is not resident")),
+                Some(tile) => {
+                    let result =
+                        rescalk_rank(&ctx, tile, n, &cfg, backend.as_mut(), &mut trace);
+                    RankOut::ModelSelect {
+                        row: ctx.row,
+                        col: ctx.col,
+                        result: Box::new(result),
+                        trace,
+                    }
+                }
+            },
         };
         if out.send(reply).is_err() {
             return;

@@ -15,15 +15,21 @@
 //! * **configure** — [`engine::Engine::new`] validates the config, spawns
 //!   the √p×√p rank threads, and builds each rank's compute backend
 //!   exactly once;
+//! * **load** — [`engine::Engine::load_dataset`] distributes a
+//!   [`engine::DatasetSpec`] once; every rank caches its resident tile
+//!   (synthetic data is generated rank-locally — the global tensor never
+//!   exists on the leader);
 //! * **submit** — [`engine::JobSpec::Factorize`] (Alg 3),
 //!   [`engine::JobSpec::ModelSelect`] (Alg 1), or
-//!   [`engine::JobSpec::Simulate`] (the Fig 13 cluster-scale replay);
+//!   [`engine::JobSpec::Simulate`] (the Fig 13 cluster-scale replay),
+//!   each referencing a registered [`engine::DatasetHandle`];
 //! * **report** — every job returns a unified [`engine::Report`] that
 //!   serializes to JSON.
 //!
-//! The persistent pool is what makes repeated-job workloads (k sweeps,
-//! perturbation ensembles, bench loops) fast: no per-job thread spawn, no
-//! backend or XLA executable-cache rebuild. The typed CLI layer
+//! The persistent pool and resident dataset tiles are what make
+//! repeated-job workloads (k sweeps, perturbation ensembles, bench loops)
+//! fast: no per-job thread spawn, no backend or XLA executable-cache
+//! rebuild, no per-job re-tiling. The typed CLI layer
 //! ([`config::RunConfig`]) parses and validates all flags in one place
 //! before any engine is built.
 //!

@@ -10,6 +10,11 @@
 //! * `model-select` — full RESCALk sweep with automatic k determination
 //! * `exascale`     — replay the paper's Fig 13 runs through the model
 //! * `artifacts`    — inspect the AOT artifact manifest
+//! * `bench`        — fixed-shape perf harness, emits `BENCH_rescal.json`
+//!
+//! Synthetic datasets are registered as [`drescal::engine::DatasetSpec`]
+//! and generated **rank-locally** — the leader never materializes the
+//! global tensor, so `--n` is not bounded by leader RAM.
 //!
 //! Examples:
 //! ```text
@@ -18,13 +23,20 @@
 //! drescal run --config run.json --backend xla --trace
 //! ```
 
+use std::collections::BTreeMap;
+
 use drescal::bench_util;
 use drescal::config::{
-    ArtifactsCmd, Command, ExascaleCmd, FactorizeCmd, MachineSpec, ModelSelectCmd, RunConfig,
+    ArtifactsCmd, BenchCmd, Command, ExascaleCmd, FactorizeCmd, MachineSpec, ModelSelectCmd,
+    RunConfig,
 };
 use drescal::coordinator::metrics::RunMetrics;
+use drescal::data::synthetic::SyntheticSpec;
 use drescal::engine::{Engine, EngineConfig, Report, SimScenario, SimSpec};
-use drescal::error::Result;
+use drescal::error::{Context as _, Result};
+use drescal::json::Json;
+use drescal::model_selection::RescalkConfig;
+use drescal::rescal::RescalOptions;
 use drescal::simulate::Machine;
 
 fn main() {
@@ -45,6 +57,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Command::ModelSelect(cmd) => cmd_model_select(cmd),
         Command::Exascale(cmd) => cmd_exascale(cmd),
         Command::Artifacts(cmd) => cmd_artifacts(cmd),
+        Command::Bench(cmd) => cmd_bench(cmd),
         Command::Help => {
             print_help();
             Ok(())
@@ -74,6 +87,9 @@ SUBCOMMANDS
   exascale      replay Fig 13 (11.5TB dense + 9.5EB sparse) via the model
                   --machine cpu|gpu|calibrated
   artifacts     list the AOT artifact manifest [--artifacts DIR]
+  bench         fixed-shape perf harness; emits machine-readable JSON
+                  --iters N (10; 1 = smoke)  --out FILE (BENCH_rescal.json)
+                  --p P  --backend native|xla  --trace
   help          this text
 
 Flags may also come from --config FILE (JSON object; CLI wins).
@@ -82,17 +98,20 @@ Tracing is opt-in (--trace): per-op timing costs on every hot-path op."
 }
 
 fn cmd_run(cmd: FactorizeCmd) -> Result<()> {
-    let data = cmd.data.load(cmd.seed);
     let mut engine = Engine::new(cmd.engine)?;
+    // synthetic data is generated rank-locally — the leader never holds X
+    let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.seed))?;
+    let info = engine.dataset_info(data).expect("dataset just registered");
     println!(
-        "distributed RESCAL: n={} m={} k={} p={} backend={:?}",
-        data.n(),
-        data.m(),
+        "distributed RESCAL: n={} m={} k={} p={} backend={:?}{}",
+        info.n,
+        info.m,
         cmd.opts.k,
         engine.config().p,
-        engine.config().backend
+        engine.config().backend,
+        if info.sparse { " (sparse tiles)" } else { "" }
     );
-    let report = engine.factorize(&data, &cmd.opts, cmd.seed)?;
+    let report = engine.factorize(data, &cmd.opts, cmd.seed)?;
     println!(
         "done in {}: rel_error={:.4} ({} iterations)",
         bench_util::fmt_secs(report.wall_seconds),
@@ -113,19 +132,20 @@ fn cmd_run(cmd: FactorizeCmd) -> Result<()> {
 }
 
 fn cmd_model_select(cmd: ModelSelectCmd) -> Result<()> {
-    let data = cmd.data.load(cmd.sweep.seed);
     let mut engine = Engine::new(cmd.engine)?;
+    let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.sweep.seed))?;
+    let info = engine.dataset_info(data).expect("dataset just registered");
     println!(
         "RESCALk sweep: n={} m={} k∈[{},{}] r={} p={} backend={:?}",
-        data.n(),
-        data.m(),
+        info.n,
+        info.m,
         cmd.sweep.k_min,
         cmd.sweep.k_max,
         cmd.sweep.perturbations,
         engine.config().p,
         engine.config().backend
     );
-    let report = engine.model_select(&data, &cmd.sweep)?;
+    let report = engine.model_select(data, &cmd.sweep)?;
     let rows: Vec<Vec<String>> = report
         .scores
         .iter()
@@ -209,6 +229,72 @@ fn cmd_exascale(cmd: ExascaleCmd) -> Result<()> {
         &["density", "compute", "comm", "total", "comm%"],
         &rows,
     );
+    Ok(())
+}
+
+/// Fixed-shape perf harness: factorize + model-select on dense and sparse
+/// synthetic datasets, all through the dataset data plane (tiles are
+/// generated rank-locally and registered once per dataset). Emits one
+/// JSON file so CI and the perf trajectory have a stable artifact.
+fn cmd_bench(cmd: BenchCmd) -> Result<()> {
+    let iters = cmd.iters;
+    let mut engine = Engine::new(cmd.engine)?;
+    let p = engine.config().p;
+    println!("bench: p={p} iters={iters} backend={:?}", engine.config().backend);
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    let mut record = |name: &str, wall: f64| {
+        println!("  {name}: {}", bench_util::fmt_secs(wall));
+        results.push((name.to_string(), wall));
+    };
+
+    // factorize, dense and sparse, same shape
+    let dense = engine.load_dataset(SyntheticSpec::dense(64, 3, 4, 42))?;
+    let report = engine.factorize(dense, &RescalOptions::new(4, iters), 42)?;
+    record("factorize_dense_n64_m3_k4", report.wall_seconds);
+    let sparse = engine.load_dataset(SyntheticSpec::sparse(64, 3, 4, 0.05, 42))?;
+    let report = engine.factorize(sparse, &RescalOptions::new(4, iters), 42)?;
+    record("factorize_sparse_n64_m3_k4_d0.05", report.wall_seconds);
+
+    // model-select, dense and sparse, small sweep
+    let sweep = RescalkConfig {
+        k_min: 2,
+        k_max: 3,
+        perturbations: 2,
+        rescal_iters: iters,
+        regress_iters: 5,
+        seed: 42,
+        ..Default::default()
+    };
+    let dense_ms = engine.load_dataset(SyntheticSpec::dense(24, 2, 2, 43))?;
+    let report = engine.model_select(dense_ms, &sweep)?;
+    record("model_select_dense_n24_m2", report.wall_seconds);
+    let sparse_ms = engine.load_dataset(SyntheticSpec::sparse(24, 2, 2, 0.1, 43))?;
+    let report = engine.model_select(sparse_ms, &sweep)?;
+    record("model_select_sparse_n24_m2_d0.1", report.wall_seconds);
+
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("rescal".to_string()));
+    obj.insert("iters".to_string(), Json::Num(iters as f64));
+    obj.insert("p".to_string(), Json::Num(p as f64));
+    obj.insert(
+        "results".to_string(),
+        Json::Arr(
+            results
+                .iter()
+                .map(|(name, wall)| {
+                    let mut row = BTreeMap::new();
+                    row.insert("name".to_string(), Json::Str(name.clone()));
+                    row.insert("wall_seconds".to_string(), Json::Num(*wall));
+                    Json::Obj(row)
+                })
+                .collect(),
+        ),
+    );
+    let json = Json::Obj(obj);
+    std::fs::write(&cmd.out, json.to_string())
+        .with_context(|| format!("writing bench results to {}", cmd.out))?;
+    println!("wrote {} results to {}", results.len(), cmd.out);
     Ok(())
 }
 

@@ -24,11 +24,13 @@ impl LocalTile {
         }
     }
 
-    /// Tile row count.
+    /// Tile row count (0 for an empty sparse relation list — rejected
+    /// upstream by `JobData::validate`, but never a panic here: a worker
+    /// panic poisons the whole rank pool).
     pub fn rows(&self) -> usize {
         match self {
             LocalTile::Dense(t) => t.n1(),
-            LocalTile::Sparse(s) => s[0].rows(),
+            LocalTile::Sparse(s) => s.first().map_or(0, |c| c.rows()),
         }
     }
 
@@ -36,7 +38,19 @@ impl LocalTile {
     pub fn cols(&self) -> usize {
         match self {
             LocalTile::Dense(t) => t.n2(),
-            LocalTile::Sparse(s) => s[0].cols(),
+            LocalTile::Sparse(s) => s.first().map_or(0, |c| c.cols()),
+        }
+    }
+
+    /// Approximate resident memory of this tile, for the engine's
+    /// per-dataset accounting (dense: f32 per cell; sparse: CSR storage
+    /// including any transpose cache built so far — note the engine
+    /// samples this at load time, before the first sparse job can build
+    /// those caches).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            LocalTile::Dense(t) => t.n1() * t.n2() * t.m() * 4,
+            LocalTile::Sparse(s) => s.iter().map(|c| c.resident_bytes()).sum(),
         }
     }
 
@@ -206,6 +220,22 @@ mod tests {
         let d = LocalTile::Dense(dense).residual_sq(0, &ar, &a_col);
         let sp = LocalTile::Sparse(s).residual_sq(0, &ar, &a_col);
         assert!((d - sp).abs() < 1e-3 * d.max(1.0), "dense {d} vs sparse {sp}");
+    }
+
+    #[test]
+    fn resident_bytes_tracks_storage() {
+        let mut rng = Rng::new(114);
+        let dense = LocalTile::Dense(Tensor3::random_uniform(8, 6, 2, 0.0, 1.0, &mut rng));
+        assert_eq!(dense.resident_bytes(), 8 * 6 * 2 * 4);
+        let c = Csr::random(8, 8, 0.25, &mut rng);
+        let nnz = c.nnz();
+        let sparse = LocalTile::Sparse(vec![c]);
+        let w = std::mem::size_of::<usize>();
+        assert_eq!(sparse.resident_bytes(), nnz * (4 + w) + 9 * w);
+        // defensive shape accessors on an empty relation list
+        let empty = LocalTile::Sparse(vec![]);
+        assert_eq!((empty.rows(), empty.cols(), empty.m()), (0, 0, 0));
+        assert_eq!(empty.resident_bytes(), 0);
     }
 
     #[test]

@@ -7,11 +7,13 @@
 //! products: `CSR·dense`, `CSRᵀ·dense`, plus perturbation over the nonzero
 //! pattern (Alg 4's sparse branch).
 
+use std::fmt;
+use std::sync::OnceLock;
+
 use super::dense::Mat;
 use crate::rng::Rng;
 
 /// Compressed sparse row matrix (f32 values).
-#[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
     rows: usize,
     cols: usize,
@@ -19,6 +21,45 @@ pub struct Csr {
     indptr: Vec<usize>,
     indices: Vec<usize>,
     values: Vec<f32>,
+    /// Lazily built transpose for the threaded [`Csr::t_matmul_dense`]
+    /// path, amortized across the MU iterations that hit one resident
+    /// tile. Excluded from `Clone` (a clone may be mutated), `PartialEq`,
+    /// and `Debug`.
+    t_cache: OnceLock<Box<Csr>>,
+}
+
+impl Clone for Csr {
+    fn clone(&self) -> Csr {
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            values: self.values.clone(),
+            // never copy the cache: `perturb` mutates the clone's values
+            t_cache: OnceLock::new(),
+        }
+    }
+}
+
+impl PartialEq for Csr {
+    fn eq(&self, other: &Csr) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.indptr == other.indptr
+            && self.indices == other.indices
+            && self.values == other.values
+    }
+}
+
+impl fmt::Debug for Csr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Csr")
+            .field("rows", &self.rows)
+            .field("cols", &self.cols)
+            .field("nnz", &self.nnz())
+            .finish()
+    }
 }
 
 impl Csr {
@@ -49,7 +90,7 @@ impl Csr {
                 indptr[i] = indptr[i - 1];
             }
         }
-        Csr { rows, cols, indptr, indices, values }
+        Csr { rows, cols, indptr, indices, values, t_cache: OnceLock::new() }
     }
 
     /// Convert a dense matrix, keeping entries with |v| > 0.
@@ -66,14 +107,20 @@ impl Csr {
         Csr::from_triplets(a.rows(), a.cols(), trips)
     }
 
-    /// Random sparse non-negative matrix with the given density.
+    /// Random sparse non-negative matrix with the given density. Collided
+    /// (r, c) draws are redrawn, so `nnz` hits the target exactly instead
+    /// of silently undershooting when duplicates collapse.
     pub fn random(rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Self {
-        let nnz_target = ((rows * cols) as f64 * density).round() as usize;
+        let cells = rows * cols;
+        let nnz_target = ((cells as f64 * density).round() as usize).min(cells);
+        let mut seen = std::collections::HashSet::with_capacity(nnz_target * 2);
         let mut trips = Vec::with_capacity(nnz_target);
-        for _ in 0..nnz_target {
+        while trips.len() < nnz_target {
             let r = rng.below(rows);
             let c = rng.below(cols);
-            trips.push((r, c, rng.uniform_f32() + 0.01));
+            if seen.insert((r, c)) {
+                trips.push((r, c, rng.uniform_f32() + 0.01));
+            }
         }
         Csr::from_triplets(rows, cols, trips)
     }
@@ -91,6 +138,16 @@ impl Csr {
     #[inline]
     pub fn nnz(&self) -> usize {
         self.values.len()
+    }
+
+    /// Approximate memory footprint in bytes: values + column indices +
+    /// row pointers, plus the lazily built transpose cache once it
+    /// exists (it roughly doubles the footprint after the first
+    /// above-threshold `t_matmul_dense`).
+    pub fn resident_bytes(&self) -> usize {
+        let w = std::mem::size_of::<usize>();
+        let own = self.nnz() * (4 + w) + (self.rows + 1) * w;
+        own + self.t_cache.get().map_or(0, |t| t.resident_bytes())
     }
 
     /// Fill fraction.
@@ -135,7 +192,14 @@ impl Csr {
                 values[dst] = self.values[idx];
             }
         }
-        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+        Csr {
+            rows: self.cols,
+            cols: self.rows,
+            indptr,
+            indices,
+            values,
+            t_cache: OnceLock::new(),
+        }
     }
 
     /// `C = self · B` with dense B — the sparse hot path (X_t · A).
@@ -185,25 +249,36 @@ impl Csr {
         }
     }
 
-    /// `C = selfᵀ · B` without materializing the transpose.
+    /// `C = selfᵀ · B` — the XᵀAR hot path (Alg 3 line 12). Small inputs
+    /// use the allocation-free serial scatter; above the same work
+    /// threshold as [`Csr::matmul_dense`], the cached counting-sort
+    /// transpose (built once per matrix, amortized over the MU
+    /// iterations that hit one resident tile) turns the scatter into a
+    /// row-parallel SpMM on the threaded [`Csr::matmul_dense`] path. (A
+    /// column-partitioned scatter would instead make every thread scan
+    /// all nnz, paying O(threads·nnz) redundant traversal per call.)
     pub fn t_matmul_dense(&self, b: &Mat) -> Mat {
         assert_eq!(self.rows, b.rows(), "spmm_t inner dim");
         let n = b.cols();
-        let mut c = Mat::zeros(self.cols, n);
-        // scatter: for each nonzero (i, j, v): C[j, :] += v * B[i, :]
-        let cd = c.as_mut_slice();
-        for i in 0..self.rows {
-            let brow = b.row(i);
-            for idx in self.indptr[i]..self.indptr[i + 1] {
-                let j = self.indices[idx];
-                let v = self.values[idx];
-                let crow = &mut cd[j * n..(j + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += v * bv;
+        let nt = crate::tensor::dense::num_threads();
+        if self.nnz() * n < (1 << 20) || nt == 1 || self.cols < 2 {
+            // serial scatter: for each nonzero (i, j, v): C[j,:] += v·B[i,:]
+            let mut c = Mat::zeros(self.cols, n);
+            let cd = c.as_mut_slice();
+            for i in 0..self.rows {
+                let brow = b.row(i);
+                for idx in self.indptr[i]..self.indptr[i + 1] {
+                    let j = self.indices[idx];
+                    let v = self.values[idx];
+                    let crow = &mut cd[j * n..(j + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += v * bv;
+                    }
                 }
             }
+            return c;
         }
-        c
+        self.t_cache.get_or_init(|| Box::new(self.transpose())).matmul_dense(b)
     }
 
     /// Multiply every stored value by a fresh uniform factor in
@@ -309,9 +384,44 @@ mod tests {
     #[test]
     fn random_density() {
         let mut rng = Rng::new(33);
+        // collisions are redrawn, so the target is hit exactly
         let s = Csr::random(100, 100, 0.05, &mut rng);
-        // duplicates collapse, so nnz ≤ target; should be close
-        assert!(s.nnz() > 400 && s.nnz() <= 500, "nnz={}", s.nnz());
+        assert_eq!(s.nnz(), 500);
+        assert_eq!(s.density(), 0.05);
+        // saturation: a full matrix is reachable without spinning forever
+        let f = Csr::random(8, 8, 1.0, &mut rng);
+        assert_eq!(f.nnz(), 64);
+    }
+
+    /// Sized above the `nnz·k ≥ 2²⁰` threading threshold so the
+    /// cached-transpose + threaded-SpMM path runs; it must match the
+    /// dense transpose product.
+    #[test]
+    fn spmm_t_threaded_matches_dense() {
+        let mut rng = Rng::new(36);
+        let s = Csr::random(600, 600, 0.5, &mut rng);
+        let b = Mat::random_uniform(600, 8, -1.0, 1.0, &mut rng);
+        assert!(s.nnz() * b.cols() >= 1 << 20, "test no longer crosses the threshold");
+        let got = s.t_matmul_dense(&b);
+        let want = s.to_dense().transpose().matmul(&b);
+        assert_close(got.as_slice(), want.as_slice(), 2e-3);
+    }
+
+    /// The cached transpose is reused across calls and never leaks into a
+    /// clone whose values diverge (perturb mutates the clone in place).
+    #[test]
+    fn spmm_t_cache_repeats_and_resets_on_clone() {
+        let mut rng = Rng::new(37);
+        let s = Csr::random(600, 600, 0.5, &mut rng);
+        let b = Mat::random_uniform(600, 8, -1.0, 1.0, &mut rng);
+        let first = s.t_matmul_dense(&b);
+        let second = s.t_matmul_dense(&b); // served from the cache
+        assert_eq!(first.as_slice(), second.as_slice());
+        // a perturbed clone must not see the parent's stale transpose
+        let p = s.perturb(0.5, &mut rng);
+        let got = p.t_matmul_dense(&b);
+        let want = p.to_dense().transpose().matmul(&b);
+        assert_close(got.as_slice(), want.as_slice(), 2e-3);
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Dataset data-plane integration: register once, compute many.
+//!
+//! Covers the tile-reuse guarantee (the acceptance criterion of this
+//! refactor: N consecutive jobs on one handle perform exactly p tile
+//! materializations), rank-local synthetic generation equivalence with
+//! leader-materialized data, sparse end-to-end jobs through the engine,
+//! and the typed error paths of the registry.
+
+use drescal::coordinator::JobData;
+use drescal::data::synthetic::SyntheticSpec;
+use drescal::data::synthetic;
+use drescal::engine::{DatasetSpec, Engine, EngineConfig};
+use drescal::model_selection::RescalkConfig;
+use drescal::rescal::RescalOptions;
+use drescal::tensor::Csr;
+
+/// The headline counter-asserted guarantee: one `load_dataset` performs
+/// exactly p tile extractions, and any number of subsequent jobs on the
+/// handle performs zero more.
+#[test]
+fn repeated_jobs_on_one_handle_tile_exactly_once_per_rank() {
+    let mut engine = Engine::new(EngineConfig::new(4)).unwrap();
+    assert_eq!(engine.stats().tile_builds, 0);
+
+    let planted = synthetic::block_tensor(24, 2, 3, 0.01, 800);
+    let handle = engine.load_dataset(JobData::dense(planted.x.clone())).unwrap();
+    assert_eq!(engine.stats().tile_builds, 4, "one tile per rank at load");
+
+    // N = 3 consecutive factorize jobs + 1 model-select on the same handle
+    for seed in 0..3 {
+        let report = engine.factorize(handle, &RescalOptions::new(3, 40), seed).unwrap();
+        assert_eq!(report.a.shape(), (24, 3));
+    }
+    let cfg = RescalkConfig {
+        k_min: 2,
+        k_max: 3,
+        perturbations: 3,
+        rescal_iters: 60,
+        regress_iters: 10,
+        seed: 2,
+        ..Default::default()
+    };
+    engine.model_select(handle, &cfg).unwrap();
+
+    let stats = engine.stats();
+    assert_eq!(
+        stats.tile_builds, 4,
+        "{} tile builds after 4 jobs — jobs must reuse resident tiles",
+        stats.tile_builds
+    );
+    assert_eq!(stats.jobs_completed, 4);
+    assert_eq!(stats.datasets_resident, 1);
+
+    // a second dataset pays its own p extractions, nothing more
+    let other = engine
+        .load_dataset(DatasetSpec::from(SyntheticSpec::dense(16, 2, 2, 9)))
+        .unwrap();
+    engine.factorize(other, &RescalOptions::new(2, 20), 1).unwrap();
+    assert_eq!(engine.stats().tile_builds, 8);
+    assert_eq!(engine.stats().datasets_resident, 2);
+}
+
+/// The inline compat shim caches by `Arc` identity: resubmitting the same
+/// `JobData` value must not re-tile, while a distinct tensor must.
+#[test]
+fn inline_job_data_is_registered_once_per_tensor() {
+    let mut engine = Engine::new(EngineConfig::new(4)).unwrap();
+    let data = JobData::dense(synthetic::block_tensor(16, 2, 2, 0.01, 801).x);
+    engine.factorize(&data, &RescalOptions::new(2, 20), 1).unwrap();
+    engine.factorize(&data, &RescalOptions::new(2, 20), 2).unwrap();
+    assert_eq!(engine.stats().tile_builds, 4, "same JobData re-tiled");
+    let fresh = JobData::dense(synthetic::block_tensor(16, 2, 2, 0.01, 802).x);
+    engine.factorize(&fresh, &RescalOptions::new(2, 20), 1).unwrap();
+    assert_eq!(engine.stats().tile_builds, 8, "distinct JobData must re-tile");
+}
+
+/// Auto-registrations are LRU-bounded: a fresh-tensor-per-job loop (the
+/// pre-data-plane pattern) must not grow resident rank memory without
+/// bound, while explicitly loaded handles survive the churn.
+#[test]
+fn inline_auto_registrations_are_evicted_lru() {
+    let mut engine = Engine::new(EngineConfig::new(1)).unwrap();
+    let pinned = engine
+        .load_dataset(JobData::dense(synthetic::block_tensor(12, 2, 2, 0.01, 820).x))
+        .unwrap();
+    // 7 distinct inline tensors, each submitted once
+    for seed in 0..7 {
+        let data = JobData::dense(synthetic::block_tensor(12, 2, 2, 0.01, 830 + seed).x);
+        engine.factorize(&data, &RescalOptions::new(2, 5), seed).unwrap();
+    }
+    let stats = engine.stats();
+    // every distinct tensor tiled once (p = 1): the pinned one + 7 inline
+    assert_eq!(stats.tile_builds, 8);
+    // ...but only the LRU-bounded tail stays resident, plus the pinned one
+    assert!(
+        stats.datasets_resident <= 5,
+        "{} datasets resident — inline auto-registrations must be evicted",
+        stats.datasets_resident
+    );
+    // the explicitly loaded handle was never evicted
+    assert!(engine.dataset_info(pinned).is_some());
+    engine.factorize(pinned, &RescalOptions::new(2, 5), 0).unwrap();
+}
+
+/// Rank-local synthetic generation is equivalent to loading the
+/// leader-materialized tensor: identical tiles ⇒ identical factorization.
+#[test]
+fn rank_local_generation_matches_leader_materialized_run() {
+    let spec = SyntheticSpec::dense(20, 2, 3, 803);
+    let mut engine = Engine::new(EngineConfig::new(4)).unwrap();
+    // leader path: materialize the full tensor, register it in-memory
+    let full = spec.dense_tile(0, 20, 0, 20);
+    let leader = engine.load_dataset(JobData::dense(full)).unwrap();
+    // rank-local path: each rank generates its own tile; the leader-side
+    // spec carries block ranges only
+    let local = engine.load_dataset(spec).unwrap();
+    let opts = RescalOptions::new(3, 50);
+    let a = engine.factorize(leader, &opts, 7).unwrap();
+    let b = engine.factorize(local, &opts, 7).unwrap();
+    assert_eq!(a.a.shape(), b.a.shape());
+    assert!((a.rel_error - b.rel_error).abs() < 1e-6, "{} vs {}", a.rel_error, b.rel_error);
+    for (x, y) in a.a.as_slice().iter().zip(b.a.as_slice()) {
+        assert!((x - y).abs() < 1e-5, "factor mismatch: {x} vs {y}");
+    }
+}
+
+/// Same equivalence on the CSR path, plus an engine-level sparse
+/// end-to-end model-selection job (engine sweeps used to be dense-only).
+#[test]
+fn sparse_end_to_end_through_the_data_plane() {
+    let spec = SyntheticSpec::sparse(24, 2, 3, 0.25, 804);
+    let mut engine = Engine::new(EngineConfig::new(4).with_trace(true)).unwrap();
+    // leader-materialized CSR set vs rank-local generation
+    let full: Vec<Csr> = spec.sparse_tile(0, 24, 0, 24);
+    let leader = engine.load_dataset(JobData::sparse(full)).unwrap();
+    let local = engine.load_dataset(spec).unwrap();
+    let info = engine.dataset_info(local).unwrap();
+    assert!(info.sparse);
+    assert_eq!((info.n, info.m), (24, 2));
+    assert!(info.resident_bytes > 0);
+
+    let opts = RescalOptions::new(3, 40);
+    let a = engine.factorize(leader, &opts, 5).unwrap();
+    let b = engine.factorize(local, &opts, 5).unwrap();
+    assert!((a.rel_error - b.rel_error).abs() < 1e-6);
+    let sparse_bytes: usize = b
+        .traces
+        .iter()
+        .map(|t| t.bytes(drescal::comm::CommOp::MatrixMulSparse))
+        .sum();
+    assert!(sparse_bytes > 0, "sparse path not exercised");
+
+    // full sparse model-selection sweep on the resident handle
+    let cfg = RescalkConfig {
+        k_min: 2,
+        k_max: 4,
+        perturbations: 3,
+        rescal_iters: 60,
+        regress_iters: 10,
+        seed: 3,
+        ..Default::default()
+    };
+    let sweep = engine.model_select(local, &cfg).unwrap();
+    assert_eq!(sweep.scores.len(), 3);
+    assert_eq!(sweep.a.shape().0, 24);
+    assert!(sweep.scores.iter().all(|s| s.rel_error.is_finite()));
+}
+
+/// Registry error paths are typed and do not poison the pool.
+#[test]
+fn data_plane_errors_are_typed_and_recoverable() {
+    let mut engine = Engine::new(EngineConfig::new(1)).unwrap();
+
+    // empty sparse relation list: used to panic inside a rank thread
+    let e = engine.load_dataset(JobData::sparse(vec![])).unwrap_err();
+    assert!(e.to_string().contains("no relation slices"), "{e}");
+
+    // mismatched slice shapes
+    let e = engine
+        .load_dataset(JobData::sparse(vec![
+            Csr::from_triplets(4, 4, vec![(0, 0, 1.0)]),
+            Csr::from_triplets(6, 6, vec![(1, 1, 1.0)]),
+        ]))
+        .unwrap_err();
+    assert!(e.to_string().contains("slice 1"), "{e}");
+
+    // unload, then submit on the dangling handle
+    let handle = engine.load_dataset(SyntheticSpec::dense(8, 2, 2, 1)).unwrap();
+    engine.unload_dataset(handle).unwrap();
+    assert_eq!(engine.dataset_info(handle), None);
+    let e = engine.factorize(handle, &RescalOptions::new(2, 5), 1).unwrap_err();
+    assert!(e.to_string().contains("unknown dataset handle"), "{e}");
+    let e = engine.unload_dataset(handle).unwrap_err();
+    assert!(e.to_string().contains("unknown dataset handle"), "{e}");
+
+    // the pool survived all of the above: a good job still runs
+    let ok = engine.load_dataset(SyntheticSpec::dense(8, 2, 2, 2)).unwrap();
+    let report = engine.factorize(ok, &RescalOptions::new(2, 10), 1).unwrap();
+    assert!(report.rel_error.is_finite());
+    assert_eq!(engine.stats().datasets_resident, 1);
+}

@@ -56,7 +56,7 @@ fn engine_runs_consecutive_jobs_on_one_pool() {
     // job 3: another factorization, via the raw JobSpec interface
     let report2 = engine
         .submit(JobSpec::Factorize {
-            data: data.clone(),
+            data: (&data).into(),
             opts: RescalOptions::new(3, 50),
             init: DistInit::Random { seed: 8 },
         })
@@ -73,6 +73,10 @@ fn engine_runs_consecutive_jobs_on_one_pool() {
         "backends were rebuilt between jobs ({} builds for 3 jobs)",
         stats.backend_builds
     );
+    // all three jobs shared one JobData, so the inline compat path
+    // auto-registered it exactly once: p tile extractions total
+    assert_eq!(stats.tile_builds, 4, "tiles were re-extracted between jobs");
+    assert_eq!(stats.datasets_resident, 1);
     assert_eq!(stats.jobs_completed, 3);
 }
 
