@@ -186,3 +186,84 @@ pub fn measure_sparse(
 pub fn pin_single_threaded_gemm() {
     std::env::set_var("DRESCAL_THREADS", "1");
 }
+
+// ---------------------------------------------------------------------------
+// Serving-throughput helpers (`drescal serve-bench` and the serve section
+// of `drescal bench`)
+// ---------------------------------------------------------------------------
+
+use crate::error::Result;
+use crate::serve::{FactorModel, Query, QueryEngine, ServeStats};
+
+/// One measured serving pass: wall time plus the pass's serve counters.
+pub struct ServePoint {
+    pub wall_seconds: f64,
+    pub stats: ServeStats,
+}
+
+/// The standard serve-bench workload: `total` top-k object completions
+/// cycling over all subjects and relations of the model.
+fn serve_workload(model: &FactorModel, total: usize, top: usize) -> Vec<Query> {
+    let n = model.n();
+    let m = model.m();
+    (0..total)
+        .map(|i| Query::TopObjects { s: i % n, r: (i / n) % m, top })
+        .collect()
+}
+
+/// Measure batched top-k serving throughput: `total` `(s, r, ?)`
+/// completions submitted in micro-batches of `batch`, answer cache
+/// disabled so every query is scored. `batch = 1` measures the
+/// unbatched (one GEMV per query) path.
+pub fn measure_serve_topk(
+    model: &FactorModel,
+    batch: usize,
+    total: usize,
+    top: usize,
+) -> Result<ServePoint> {
+    let mut qe = QueryEngine::with_cache_capacity(model.clone(), 0);
+    let queries = serve_workload(model, total, top);
+    let t0 = Instant::now();
+    for chunk in queries.chunks(batch.max(1)) {
+        qe.submit_batch(chunk)?;
+    }
+    Ok(ServePoint { wall_seconds: t0.elapsed().as_secs_f64(), stats: qe.stats() })
+}
+
+/// Measure the cached path: the same workload twice on one engine with
+/// an ample LRU. Returns (cold pass, warm pass); the warm pass's
+/// counters are the delta, so `warm.stats.scored_candidates == 0`
+/// proves the replay never touched the scoring kernels.
+pub fn measure_serve_cached_replay(
+    model: &FactorModel,
+    batch: usize,
+    total: usize,
+    top: usize,
+) -> Result<(ServePoint, ServePoint)> {
+    let mut qe = QueryEngine::with_cache_capacity(model.clone(), total.max(1));
+    let queries = serve_workload(model, total, top);
+    let t0 = Instant::now();
+    for chunk in queries.chunks(batch.max(1)) {
+        qe.submit_batch(chunk)?;
+    }
+    let cold = ServePoint { wall_seconds: t0.elapsed().as_secs_f64(), stats: qe.stats() };
+    let t1 = Instant::now();
+    for chunk in queries.chunks(batch.max(1)) {
+        qe.submit_batch(chunk)?;
+    }
+    let warm = ServePoint {
+        wall_seconds: t1.elapsed().as_secs_f64(),
+        stats: stats_since(qe.stats(), cold.stats),
+    };
+    Ok((cold, warm))
+}
+
+/// Counter delta between two cumulative [`ServeStats`] snapshots.
+fn stats_since(now: ServeStats, earlier: ServeStats) -> ServeStats {
+    ServeStats {
+        queries: now.queries - earlier.queries,
+        cache_hits: now.cache_hits - earlier.cache_hits,
+        batches: now.batches - earlier.batches,
+        scored_candidates: now.scored_candidates - earlier.scored_candidates,
+    }
+}

@@ -75,6 +75,18 @@ impl Args {
         }
     }
 
+    /// An optional integer flag: `None` when absent, error when
+    /// non-numeric.
+    pub fn get_opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| err!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
@@ -223,10 +235,12 @@ pub struct ExascaleCmd {
     pub machine: MachineSpec,
 }
 
-/// `drescal bench` — the fixed-shape perf harness. Runs factorize and
-/// model-select jobs on dense and sparse synthetic datasets and emits a
+/// `drescal bench` — the fixed-shape perf harness. Runs factorize,
+/// model-select, and serving jobs on synthetic datasets and emits a
 /// machine-readable `BENCH_rescal.json` so the perf trajectory is
 /// tracked in CI (a 1-iteration invocation doubles as a smoke test).
+/// When a baseline file exists, per-section deltas are reported and a
+/// wall-time regression beyond `--max-regression` is a hard error.
 #[derive(Clone, Debug)]
 pub struct BenchCmd {
     pub engine: EngineConfig,
@@ -234,6 +248,71 @@ pub struct BenchCmd {
     pub iters: usize,
     /// Output path of the JSON results.
     pub out: String,
+    /// Baseline to diff against (defaults to the previous contents of
+    /// `out`; missing file = no comparison).
+    pub baseline: String,
+    /// Fail when any section's wall time exceeds `baseline × this`
+    /// (0 = report deltas only, never fail).
+    pub max_regression: f64,
+    /// Sections whose baseline wall is below this many seconds are
+    /// reported but never gated — sub-10ms timings on shared CI runners
+    /// swing severalfold without any code change.
+    pub gate_floor: f64,
+}
+
+/// `drescal export` — train (factorize, or a full model-select sweep
+/// with `--sweep`) and persist the factors as a servable
+/// [`crate::serve::FactorModel`] JSON artifact.
+#[derive(Clone)]
+pub struct ExportCmd {
+    pub data: DataSpec,
+    pub engine: EngineConfig,
+    pub opts: RescalOptions,
+    /// `Some` = run the RESCALk sweep and export the k_opt model.
+    pub sweep: Option<RescalkConfig>,
+    pub seed: u64,
+    /// Output path of the model artifact.
+    pub model: String,
+}
+
+/// `drescal query` — load a persisted model and answer one
+/// link-prediction query: `--s --o` = pointwise score, `--s` alone =
+/// top-k objects `(s,r,?)`, `--o` alone = top-k subjects `(?,r,o)`.
+#[derive(Clone, Debug)]
+pub struct QueryCmd {
+    /// Model artifact path.
+    pub model: String,
+    pub s: Option<usize>,
+    pub o: Option<usize>,
+    /// Relation index.
+    pub r: usize,
+    /// Completion depth for top-k queries.
+    pub top: usize,
+    /// Also print the answer as JSON.
+    pub json: bool,
+}
+
+/// `drescal serve-bench` — train a synthetic model, then measure
+/// serving throughput: batched vs per-query top-k completion and the
+/// cached path.
+#[derive(Clone, Debug)]
+pub struct ServeBenchCmd {
+    pub engine: EngineConfig,
+    /// Entities in the synthetic model.
+    pub n: usize,
+    /// Relations.
+    pub m: usize,
+    /// Latent dimension.
+    pub k: usize,
+    /// Training iterations.
+    pub iters: usize,
+    /// Total top-k queries per measured pass.
+    pub queries: usize,
+    /// Micro-batch size of the batched pass.
+    pub batch: usize,
+    /// Completion depth.
+    pub top: usize,
+    pub seed: u64,
 }
 
 /// `drescal artifacts` — inspect the AOT artifact manifest.
@@ -249,6 +328,9 @@ pub enum Command {
     Exascale(ExascaleCmd),
     Artifacts(ArtifactsCmd),
     Bench(BenchCmd),
+    Export(ExportCmd),
+    Query(QueryCmd),
+    ServeBench(ServeBenchCmd),
     Help,
 }
 
@@ -268,7 +350,20 @@ const MODEL_SELECT_FLAGS: &[&str] = &[
 ];
 const EXASCALE_FLAGS: &[&str] = &["config", "machine"];
 const ARTIFACTS_FLAGS: &[&str] = &["config", "artifacts"];
-const BENCH_FLAGS: &[&str] = &["config", "p", "backend", "artifacts", "trace", "iters", "out"];
+const BENCH_FLAGS: &[&str] = &[
+    "config", "p", "backend", "artifacts", "trace", "iters", "out", "baseline",
+    "max-regression", "gate-floor",
+];
+const EXPORT_FLAGS: &[&str] = &[
+    "config", "data", "n", "m", "k-true", "density", "seed", "p", "backend", "artifacts",
+    "trace", "k", "iters", "sweep", "model", "k-min", "k-max", "perturbations", "delta",
+    "tol", "err-every", "regress-iters",
+];
+const QUERY_FLAGS: &[&str] = &["config", "model", "s", "o", "r", "top", "json"];
+const SERVE_BENCH_FLAGS: &[&str] = &[
+    "config", "p", "backend", "artifacts", "trace", "n", "m", "k", "iters", "queries",
+    "batch", "top", "seed",
+];
 
 impl RunConfig {
     /// Parse + validate a full command line (after the binary name),
@@ -332,10 +427,95 @@ impl RunConfig {
                 if iters == 0 {
                     bail!("--iters must be >= 1");
                 }
+                let out = args.get("out").unwrap_or("BENCH_rescal.json").to_string();
+                let max_regression = args.get_f64("max-regression", 0.0)?;
+                if max_regression < 0.0 {
+                    bail!("--max-regression must be >= 0 (0 = report only)");
+                }
+                let gate_floor = args.get_f64("gate-floor", 0.01)?;
+                if gate_floor < 0.0 {
+                    bail!("--gate-floor must be >= 0 seconds");
+                }
                 Command::Bench(BenchCmd {
                     engine: engine_config(&args)?,
                     iters,
-                    out: args.get("out").unwrap_or("BENCH_rescal.json").to_string(),
+                    // default baseline: the previous run's output
+                    baseline: args.get("baseline").unwrap_or(&out).to_string(),
+                    out,
+                    max_regression,
+                    gate_floor,
+                })
+            }
+            "export" => {
+                check_known_flags(&args.subcommand, &cli_flags, EXPORT_FLAGS)?;
+                let k = args.get_usize("k", 4)?;
+                let iters = args.get_usize("iters", 200)?;
+                if k == 0 {
+                    bail!("--k must be >= 1");
+                }
+                if iters == 0 {
+                    bail!("--iters must be >= 1");
+                }
+                let sweep =
+                    if args.get_bool("sweep") { Some(sweep_config(&args)?) } else { None };
+                Command::Export(ExportCmd {
+                    data: data_spec(&args)?,
+                    engine: engine_config(&args)?,
+                    opts: RescalOptions::new(k, iters),
+                    sweep,
+                    seed: args.get_u64("seed", 42)?,
+                    model: args.get("model").unwrap_or("model.json").to_string(),
+                })
+            }
+            "query" => {
+                check_known_flags(&args.subcommand, &cli_flags, QUERY_FLAGS)?;
+                let s = args.get_opt_usize("s")?;
+                let o = args.get_opt_usize("o")?;
+                if s.is_none() && o.is_none() {
+                    bail!(
+                        "query needs --s and/or --o: --s --o = score, --s = top-k \
+                         objects (s,r,?), --o = top-k subjects (?,r,o)"
+                    );
+                }
+                let top = args.get_usize("top", 5)?;
+                if top == 0 {
+                    bail!("--top must be >= 1");
+                }
+                Command::Query(QueryCmd {
+                    model: args.get("model").unwrap_or("model.json").to_string(),
+                    s,
+                    o,
+                    r: args.get_usize("r", 0)?,
+                    top,
+                    json: args.get_bool("json"),
+                })
+            }
+            "serve-bench" => {
+                check_known_flags(&args.subcommand, &cli_flags, SERVE_BENCH_FLAGS)?;
+                let n = args.get_usize("n", 512)?;
+                let m = args.get_usize("m", 2)?;
+                let k = args.get_usize("k", 8)?;
+                let iters = args.get_usize("iters", 30)?;
+                let queries = args.get_usize("queries", 2048)?;
+                let batch = args.get_usize("batch", 64)?;
+                let top = args.get_usize("top", 10)?;
+                let sizes = [n, m, k, iters, queries, batch, top];
+                if sizes.contains(&0) {
+                    bail!(
+                        "serve-bench sizes (--n --m --k --iters --queries --batch \
+                         --top) must all be >= 1"
+                    );
+                }
+                Command::ServeBench(ServeBenchCmd {
+                    engine: engine_config(&args)?,
+                    n,
+                    m,
+                    k,
+                    iters,
+                    queries,
+                    batch,
+                    top,
+                    seed: args.get_u64("seed", 42)?,
                 })
             }
             "help" | "--help" | "-h" => Command::Help,
@@ -612,6 +792,98 @@ mod tests {
         }
         assert!(RunConfig::from_args(argv("bench --iters 0")).is_err());
         assert!(RunConfig::from_args(argv("bench --k 4")).is_err());
+    }
+
+    #[test]
+    fn bench_baseline_defaults_to_out_path() {
+        let cfg = RunConfig::from_args(argv("bench --out here.json")).unwrap();
+        match cfg.command {
+            Command::Bench(cmd) => {
+                assert_eq!(cmd.baseline, "here.json");
+                assert_eq!(cmd.max_regression, 0.0, "regression gate is opt-in");
+                assert_eq!(cmd.gate_floor, 0.01, "10ms noise floor by default");
+            }
+            _ => panic!("expected bench command"),
+        }
+        let cfg = RunConfig::from_args(argv(
+            "bench --baseline old.json --max-regression 2",
+        ))
+        .unwrap();
+        match cfg.command {
+            Command::Bench(cmd) => {
+                assert_eq!(cmd.baseline, "old.json");
+                assert_eq!(cmd.out, "BENCH_rescal.json");
+                assert_eq!(cmd.max_regression, 2.0);
+            }
+            _ => panic!("expected bench command"),
+        }
+        assert!(RunConfig::from_args(argv("bench --max-regression -1")).is_err());
+        assert!(RunConfig::from_args(argv("bench --gate-floor -0.5")).is_err());
+    }
+
+    #[test]
+    fn export_subcommand_is_typed() {
+        let cfg = RunConfig::from_args(argv("export --n 32 --k 3")).unwrap();
+        match cfg.command {
+            Command::Export(cmd) => {
+                assert_eq!(cmd.opts.k, 3);
+                assert!(cmd.sweep.is_none());
+                assert_eq!(cmd.model, "model.json");
+            }
+            _ => panic!("expected export command"),
+        }
+        let cfg = RunConfig::from_args(argv(
+            "export --sweep --k-min 2 --k-max 4 --model m.json",
+        ))
+        .unwrap();
+        match cfg.command {
+            Command::Export(cmd) => {
+                let sweep = cmd.sweep.expect("--sweep selects model-select export");
+                assert_eq!((sweep.k_min, sweep.k_max), (2, 4));
+                assert_eq!(cmd.model, "m.json");
+            }
+            _ => panic!("expected export command"),
+        }
+        assert!(RunConfig::from_args(argv("export --k 0")).is_err());
+    }
+
+    #[test]
+    fn query_subcommand_validation() {
+        // no anchors at all is rejected
+        let e = RunConfig::from_args(argv("query --model m.json")).unwrap_err();
+        assert!(e.to_string().contains("--s and/or --o"), "{e}");
+        let cfg = RunConfig::from_args(argv("query --model m.json --s 3 --r 1")).unwrap();
+        match cfg.command {
+            Command::Query(cmd) => {
+                assert_eq!((cmd.s, cmd.o, cmd.r, cmd.top), (Some(3), None, 1, 5));
+            }
+            _ => panic!("expected query command"),
+        }
+        let cfg = RunConfig::from_args(argv("query --s 1 --o 2")).unwrap();
+        match cfg.command {
+            Command::Query(cmd) => {
+                assert_eq!((cmd.s, cmd.o), (Some(1), Some(2)));
+                assert_eq!(cmd.model, "model.json");
+            }
+            _ => panic!("expected query command"),
+        }
+        assert!(RunConfig::from_args(argv("query --s 1 --top 0")).is_err());
+        assert!(RunConfig::from_args(argv("query --s abc")).is_err());
+        assert!(RunConfig::from_args(argv("query --s 1 --k 4")).is_err());
+    }
+
+    #[test]
+    fn serve_bench_defaults() {
+        let cfg = RunConfig::from_args(argv("serve-bench")).unwrap();
+        match cfg.command {
+            Command::ServeBench(cmd) => {
+                assert_eq!((cmd.n, cmd.m, cmd.k), (512, 2, 8));
+                assert_eq!((cmd.queries, cmd.batch, cmd.top), (2048, 64, 10));
+                assert_eq!(cmd.engine.p, 4);
+            }
+            _ => panic!("expected serve-bench command"),
+        }
+        assert!(RunConfig::from_args(argv("serve-bench --batch 0")).is_err());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The job engine: the crate's public entry point for running distributed
 //! RESCAL(k) work.
 //!
-//! # Lifecycle: configure → load → submit → report
+//! # Lifecycle: configure → load → submit → report → export → serve
 //!
 //! An [`Engine`] is constructed **once** from a typed [`EngineConfig`]
 //! (grid size `p`, [`BackendSpec`], trace policy). Construction spawns
@@ -22,7 +22,16 @@
 //!   calibrated machine model (paper Fig 13).
 //!
 //! Every job returns a unified [`Report`] that serializes to JSON via
-//! [`Report::to_json`]. Because both the pool and the resident tiles
+//! [`Report::to_json`]. A factorize or model-select report can then be
+//! **exported**: [`Engine::export_model`] turns its factors into a
+//! [`crate::serve::FactorModel`] artifact (persisted with
+//! `FactorModel::save`, reloaded with `FactorModel::load`) that a
+//! [`crate::serve::QueryEngine`] **serves** — pointwise triple scores
+//! and batched top-k link-prediction completions, with no engine or
+//! rank pool in the serving process. On the CLI this is
+//! `drescal export` (train → write model JSON) followed by
+//! `drescal query` (load model → answer `(s,r,?)` / `(?,r,o)` / scored
+//! triples). Because both the pool and the resident tiles
 //! persist, repeated-job workloads (k sweeps, perturbation ensembles,
 //! bench loops) skip the per-job thread-spawn, backend-rebuild, *and*
 //! re-tiling costs the old free functions paid. Inline [`JobData`] is
@@ -422,6 +431,20 @@ impl Engine {
             Report::ModelSelect(r) => Ok(r),
             _ => Err(err!("model-select job returned a non-model-select report")),
         }
+    }
+
+    /// Export a training report's factors as a servable
+    /// [`FactorModel`](crate::serve::FactorModel) artifact, stamping the
+    /// engine's grid size and backend into its provenance. The returned
+    /// model is self-contained: persist it with `FactorModel::save` and
+    /// serve it from a process that never builds an engine. `Simulate`
+    /// reports carry no factors and are a typed error.
+    pub fn export_model(&self, report: &Report) -> Result<crate::serve::FactorModel> {
+        let mut model = crate::serve::FactorModel::from_report(report)?;
+        let prov = model.provenance_mut();
+        prov.p = self.cfg.p;
+        prov.backend = format!("{:?}", self.cfg.backend);
+        Ok(model)
     }
 
     /// Convenience: one modeled replay.

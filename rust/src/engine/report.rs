@@ -189,7 +189,7 @@ fn get_f64(v: &Json, key: &str) -> Result<f64> {
         .ok_or_else(|| err!("report missing numeric field '{key}'"))
 }
 
-fn mat_to_json(m: &Mat) -> Json {
+pub(crate) fn mat_to_json(m: &Mat) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("rows".to_string(), Json::Num(m.rows() as f64));
     obj.insert("cols".to_string(), Json::Num(m.cols() as f64));
@@ -200,7 +200,7 @@ fn mat_to_json(m: &Mat) -> Json {
     Json::Obj(obj)
 }
 
-fn mat_from_json(v: &Json) -> Result<Mat> {
+pub(crate) fn mat_from_json(v: &Json) -> Result<Mat> {
     let rows = get_f64(v, "rows")? as usize;
     let cols = get_f64(v, "cols")? as usize;
     let data = v
@@ -210,13 +210,19 @@ fn mat_from_json(v: &Json) -> Result<Mat> {
         .iter()
         .map(|x| x.as_f64().map(|f| f as f32).ok_or_else(|| err!("non-numeric matrix entry")))
         .collect::<Result<Vec<f32>>>()?;
-    if data.len() != rows * cols {
+    // untrusted-input path: absurd shapes must not overflow the
+    // expected-length product (debug panic), and the length mismatch
+    // stays a typed error rather than the Mat::from_vec assert
+    let expect = rows
+        .checked_mul(cols)
+        .ok_or_else(|| err!("matrix shape {rows}x{cols} overflows"))?;
+    if data.len() != expect {
         return Err(err!("matrix data length {} != {rows}x{cols}", data.len()));
     }
     Ok(Mat::from_vec(rows, cols, data))
 }
 
-fn tensor_to_json(t: &Tensor3) -> Json {
+pub(crate) fn tensor_to_json(t: &Tensor3) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert(
         "slices".to_string(),
@@ -225,7 +231,7 @@ fn tensor_to_json(t: &Tensor3) -> Json {
     Json::Obj(obj)
 }
 
-fn tensor_from_json(v: &Json) -> Result<Tensor3> {
+pub(crate) fn tensor_from_json(v: &Json) -> Result<Tensor3> {
     let slices = v
         .get("slices")
         .and_then(|s| s.as_arr())
@@ -235,6 +241,19 @@ fn tensor_from_json(v: &Json) -> Result<Tensor3> {
         .collect::<Result<Vec<Mat>>>()?;
     if slices.is_empty() {
         return Err(err!("tensor has no slices"));
+    }
+    // this function parses untrusted files (model artifacts, archived
+    // reports): ragged slices must be a typed error, not the
+    // `Tensor3::from_slices` assert
+    let shape = slices[0].shape();
+    if let Some(t) = slices.iter().position(|s| s.shape() != shape) {
+        return Err(err!(
+            "tensor slice {t} is {}×{} but slice 0 is {}×{} — all slices must share one shape",
+            slices[t].rows(),
+            slices[t].cols(),
+            shape.0,
+            shape.1
+        ));
     }
     Ok(Tensor3::from_slices(slices))
 }
@@ -380,6 +399,17 @@ mod tests {
         assert_eq!(row.total(), 4.0);
         assert!((row.comm_fraction() - 0.25).abs() < 1e-12);
         assert_eq!(row.logical_bytes(), 8e9);
+    }
+
+    #[test]
+    fn ragged_tensor_slices_are_a_typed_error() {
+        // untrusted artifact JSON must not reach the Tensor3 assert
+        let json = Json::parse(
+            r#"{"slices":[{"rows":1,"cols":1,"data":[1]},{"rows":2,"cols":2,"data":[1,2,3,4]}]}"#,
+        )
+        .unwrap();
+        let e = tensor_from_json(&json).unwrap_err();
+        assert!(e.to_string().contains("share one shape"), "{e}");
     }
 
     #[test]

@@ -24,7 +24,13 @@
 //!   [`engine::JobSpec::Simulate`] (the Fig 13 cluster-scale replay),
 //!   each referencing a registered [`engine::DatasetHandle`];
 //! * **report** — every job returns a unified [`engine::Report`] that
-//!   serializes to JSON.
+//!   serializes to JSON;
+//! * **export** — [`engine::Engine::export_model`] turns a factorize or
+//!   model-select report into a persisted [`serve::FactorModel`]
+//!   artifact;
+//! * **serve** — a [`serve::QueryEngine`] answers pointwise and batched
+//!   top-k link-prediction queries from the reloaded artifact (the read
+//!   path that mirrors the engine's write path — see [`serve`]).
 //!
 //! The persistent pool and resident dataset tiles are what make
 //! repeated-job workloads (k sweeps, perturbation ensembles, bench loops)
@@ -61,6 +67,7 @@ pub mod linalg;
 pub mod model_selection;
 pub mod rescal;
 pub mod rng;
+pub mod serve;
 pub mod simulate;
 pub mod runtime;
 pub mod tensor;

@@ -8,9 +8,13 @@
 //! Subcommands:
 //! * `run`          — one distributed factorization on synthetic/real data
 //! * `model-select` — full RESCALk sweep with automatic k determination
+//! * `export`       — train and persist a servable factor-model artifact
+//! * `query`        — answer link-prediction queries from a saved model
+//! * `serve-bench`  — serving-throughput harness (batched vs unbatched)
 //! * `exascale`     — replay the paper's Fig 13 runs through the model
 //! * `artifacts`    — inspect the AOT artifact manifest
 //! * `bench`        — fixed-shape perf harness, emits `BENCH_rescal.json`
+//!   and diffs it against the previous run (`--max-regression` gates CI)
 //!
 //! Synthetic datasets are registered as [`drescal::engine::DatasetSpec`]
 //! and generated **rank-locally** — the leader never materializes the
@@ -27,8 +31,8 @@ use std::collections::BTreeMap;
 
 use drescal::bench_util;
 use drescal::config::{
-    ArtifactsCmd, BenchCmd, Command, ExascaleCmd, FactorizeCmd, MachineSpec, ModelSelectCmd,
-    RunConfig,
+    ArtifactsCmd, BenchCmd, Command, ExascaleCmd, ExportCmd, FactorizeCmd, MachineSpec,
+    ModelSelectCmd, QueryCmd, RunConfig, ServeBenchCmd,
 };
 use drescal::coordinator::metrics::RunMetrics;
 use drescal::data::synthetic::SyntheticSpec;
@@ -37,6 +41,7 @@ use drescal::error::{Context as _, Result};
 use drescal::json::Json;
 use drescal::model_selection::RescalkConfig;
 use drescal::rescal::RescalOptions;
+use drescal::serve::{Answer, FactorModel, Query, QueryEngine};
 use drescal::simulate::Machine;
 
 fn main() {
@@ -58,6 +63,9 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Command::Exascale(cmd) => cmd_exascale(cmd),
         Command::Artifacts(cmd) => cmd_artifacts(cmd),
         Command::Bench(cmd) => cmd_bench(cmd),
+        Command::Export(cmd) => cmd_export(cmd),
+        Command::Query(cmd) => cmd_query(cmd),
+        Command::ServeBench(cmd) => cmd_serve_bench(cmd),
         Command::Help => {
             print_help();
             Ok(())
@@ -84,11 +92,22 @@ SUBCOMMANDS
   model-select  RESCALk sweep with automatic k determination
                   (run flags plus) --k-min --k-max --perturbations --delta
                   --tol --err-every --regress-iters
+  export        train, then persist the factors as a servable model
+                  (run flags; --sweep adds the model-select flags and
+                  exports the k_opt model)  --model FILE (model.json)
+  query         answer a link-prediction query from a saved model
+                  --model FILE  --r REL  --top K (5)  --json
+                  --s S --o O = score   --s S = (s,r,?)   --o O = (?,r,o)
+  serve-bench   serving-throughput harness on a synthetic model
+                  --n --m --k --iters   model shape / training depth
+                  --queries Q (2048)  --batch B (64)  --top K (10)
   exascale      replay Fig 13 (11.5TB dense + 9.5EB sparse) via the model
                   --machine cpu|gpu|calibrated
   artifacts     list the AOT artifact manifest [--artifacts DIR]
   bench         fixed-shape perf harness; emits machine-readable JSON
                   --iters N (10; 1 = smoke)  --out FILE (BENCH_rescal.json)
+                  --baseline FILE (prev out)  --max-regression X (0 = off)
+                  --gate-floor SECS (0.01; smaller walls are not gated)
                   --p P  --backend native|xla  --trace
   help          this text
 
@@ -126,7 +145,7 @@ fn cmd_run(cmd: FactorizeCmd) -> Result<()> {
         print!("{}", metrics.format_breakdown());
     }
     if cmd.json {
-        println!("{}", Report::Factorize(report).to_json().to_string());
+        println!("{}", Report::Factorize(report).to_json());
     }
     Ok(())
 }
@@ -178,7 +197,7 @@ fn cmd_model_select(cmd: ModelSelectCmd) -> Result<()> {
         print!("{}", metrics.format_breakdown());
     }
     if cmd.json {
-        println!("{}", Report::ModelSelect(report).to_json().to_string());
+        println!("{}", Report::ModelSelect(report).to_json());
     }
     Ok(())
 }
@@ -233,9 +252,10 @@ fn cmd_exascale(cmd: ExascaleCmd) -> Result<()> {
 }
 
 /// Fixed-shape perf harness: factorize + model-select on dense and sparse
-/// synthetic datasets, all through the dataset data plane (tiles are
-/// generated rank-locally and registered once per dataset). Emits one
-/// JSON file so CI and the perf trajectory have a stable artifact.
+/// synthetic datasets (all through the dataset data plane) plus the
+/// serving read path. Emits one JSON file so CI and the perf trajectory
+/// have a stable artifact; when a baseline exists, per-section deltas are
+/// printed and `--max-regression` turns a blow-up into a hard error.
 fn cmd_bench(cmd: BenchCmd) -> Result<()> {
     let iters = cmd.iters;
     let mut engine = Engine::new(cmd.engine)?;
@@ -252,6 +272,8 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
     let dense = engine.load_dataset(SyntheticSpec::dense(64, 3, 4, 42))?;
     let report = engine.factorize(dense, &RescalOptions::new(4, iters), 42)?;
     record("factorize_dense_n64_m3_k4", report.wall_seconds);
+    // the dense factors double as the serve-section model below
+    let model = engine.export_model(&Report::Factorize(report))?;
     let sparse = engine.load_dataset(SyntheticSpec::sparse(64, 3, 4, 0.05, 42))?;
     let report = engine.factorize(sparse, &RescalOptions::new(4, iters), 42)?;
     record("factorize_sparse_n64_m3_k4_d0.05", report.wall_seconds);
@@ -273,6 +295,12 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
     let report = engine.model_select(sparse_ms, &sweep)?;
     record("model_select_sparse_n24_m2_d0.1", report.wall_seconds);
 
+    // serving: batched vs unbatched top-k completion on the dense model
+    let point = bench_util::measure_serve_topk(&model, 64, 256, 10)?;
+    record("serve_topk_batched_n64_q256", point.wall_seconds);
+    let point = bench_util::measure_serve_topk(&model, 1, 256, 10)?;
+    record("serve_topk_unbatched_n64_q256", point.wall_seconds);
+
     let mut obj = BTreeMap::new();
     obj.insert("bench".to_string(), Json::Str("rescal".to_string()));
     obj.insert("iters".to_string(), Json::Num(iters as f64));
@@ -291,10 +319,240 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
                 .collect(),
         ),
     );
+    // perf trajectory: per-section deltas vs the previous run, and an
+    // optional hard gate on wall-time regressions (the CI smoke step
+    // passes --max-regression 2). The gate runs *before* the results are
+    // written: a failed run must not replace the baseline with its own
+    // regressed numbers, or the second run would silently pass.
+    // Sections where both walls sit under --gate-floor seconds are
+    // reported but not gated — sub-10ms timings on shared runners swing
+    // severalfold without any code change; a genuine blow-up crosses
+    // the floor and is still caught.
+    if let Some(base) = load_bench_baseline(&cmd.baseline) {
+        let mut rows: Vec<Vec<String>> = Vec::new();
+        let mut worst_name = String::new();
+        let mut worst_ratio = 0.0f64;
+        for (name, wall) in &results {
+            match base.get(name) {
+                Some(&prev) if prev > 0.0 => {
+                    let ratio = wall / prev;
+                    rows.push(vec![
+                        name.clone(),
+                        bench_util::fmt_secs(prev),
+                        bench_util::fmt_secs(*wall),
+                        format!("{ratio:.2}x"),
+                    ]);
+                    let gated = prev >= cmd.gate_floor || *wall >= cmd.gate_floor;
+                    if gated && ratio > worst_ratio {
+                        worst_ratio = ratio;
+                        worst_name = name.clone();
+                    }
+                }
+                _ => rows.push(vec![
+                    name.clone(),
+                    "-".to_string(),
+                    bench_util::fmt_secs(*wall),
+                    "new".to_string(),
+                ]),
+            }
+        }
+        bench_util::print_table(
+            &format!("perf trajectory vs {}", cmd.baseline),
+            &["section", "baseline", "now", "ratio"],
+            &rows,
+        );
+        if cmd.max_regression > 0.0 && worst_ratio > cmd.max_regression {
+            return Err(drescal::err!(
+                "perf regression: {worst_name} is {worst_ratio:.2}x its baseline \
+                 (limit {:.2}x; baseline kept — {} was not overwritten)",
+                cmd.max_regression,
+                cmd.out
+            ));
+        }
+    } else {
+        println!("(no baseline at {} — deltas start next run)", cmd.baseline);
+    }
+
     let json = Json::Obj(obj);
     std::fs::write(&cmd.out, json.to_string())
         .with_context(|| format!("writing bench results to {}", cmd.out))?;
     println!("wrote {} results to {}", results.len(), cmd.out);
+    Ok(())
+}
+
+/// Parse a previous `BENCH_rescal.json` into section → wall seconds.
+/// Missing or malformed files mean "no baseline", never an error: the
+/// first run of a fresh checkout must succeed.
+fn load_bench_baseline(path: &str) -> Option<BTreeMap<String, f64>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let v = Json::parse(&text).ok()?;
+    let mut map = BTreeMap::new();
+    for row in v.get("results")?.as_arr()? {
+        let name = row.get("name")?.as_str()?.to_string();
+        let wall = row.get("wall_seconds")?.as_f64()?;
+        map.insert(name, wall);
+    }
+    Some(map)
+}
+
+/// Train (factorize or full sweep), export the factors through the
+/// engine, and persist the servable model artifact.
+fn cmd_export(cmd: ExportCmd) -> Result<()> {
+    let mut engine = Engine::new(cmd.engine)?;
+    let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.seed))?;
+    let info = engine.dataset_info(data).expect("dataset just registered");
+    let report = match &cmd.sweep {
+        Some(sweep) => {
+            println!(
+                "export: RESCALk sweep n={} m={} k∈[{},{}] p={}",
+                info.n,
+                info.m,
+                sweep.k_min,
+                sweep.k_max,
+                engine.config().p
+            );
+            let r = engine.model_select(data, sweep)?;
+            println!("k_opt = {} (wall {})", r.k_opt, bench_util::fmt_secs(r.wall_seconds));
+            Report::ModelSelect(r)
+        }
+        None => {
+            println!(
+                "export: factorize n={} m={} k={} p={}",
+                info.n,
+                info.m,
+                cmd.opts.k,
+                engine.config().p
+            );
+            let r = engine.factorize(data, &cmd.opts, cmd.seed)?;
+            println!(
+                "rel_error = {:.4} after {} iterations (wall {})",
+                r.rel_error,
+                r.iters_run,
+                bench_util::fmt_secs(r.wall_seconds)
+            );
+            Report::Factorize(r)
+        }
+    };
+    let model = engine.export_model(&report)?;
+    model.save(&cmd.model)?;
+    println!(
+        "exported factor model (n={} entities, m={} relations, k={}) to {}",
+        model.n(),
+        model.m(),
+        model.k(),
+        cmd.model
+    );
+    println!("query it:  drescal query --model {} --s 0 --r 0 --top 5", cmd.model);
+    Ok(())
+}
+
+/// Load a persisted model and answer one link-prediction query.
+fn cmd_query(cmd: QueryCmd) -> Result<()> {
+    let model = FactorModel::load(&cmd.model)?;
+    println!(
+        "model {}: n={} m={} k={} (from {} job{})",
+        cmd.model,
+        model.n(),
+        model.m(),
+        model.k(),
+        model.provenance().job,
+        if model.provenance().rel_error >= 0.0 {
+            format!(", train rel_error {:.4}", model.provenance().rel_error)
+        } else {
+            String::new()
+        }
+    );
+    let query = match (cmd.s, cmd.o) {
+        (Some(s), Some(o)) => Query::Score { s, r: cmd.r, o },
+        (Some(s), None) => Query::TopObjects { s, r: cmd.r, top: cmd.top },
+        (None, Some(o)) => Query::TopSubjects { o, r: cmd.r, top: cmd.top },
+        (None, None) => unreachable!("config validation requires --s and/or --o"),
+    };
+    let mut qe = QueryEngine::new(model);
+    let answer = qe.query(query)?;
+    let entity_label = |i: usize| match qe.model().entity_names() {
+        Some(names) => format!("{} ({})", i, names[i]),
+        None => i.to_string(),
+    };
+    match &answer {
+        Answer::Score(v) => println!("score = {v:.6}"),
+        Answer::TopK(hits) => {
+            let rows: Vec<Vec<String>> = hits
+                .iter()
+                .enumerate()
+                .map(|(rank, h)| {
+                    vec![
+                        (rank + 1).to_string(),
+                        entity_label(h.entity),
+                        format!("{:.6}", h.score),
+                    ]
+                })
+                .collect();
+            let title = match query {
+                Query::TopObjects { s, r, .. } => format!("top objects for (s={s}, r={r}, ?)"),
+                Query::TopSubjects { o, r, .. } => format!("top subjects for (?, r={r}, o={o})"),
+                Query::Score { .. } => unreachable!("score answers are scalar"),
+            };
+            bench_util::print_table(&title, &["rank", "entity", "score"], &rows);
+        }
+    }
+    if cmd.json {
+        println!("{}", answer.to_json());
+    }
+    Ok(())
+}
+
+/// Serving-throughput harness: train a synthetic model, then measure
+/// batched, unbatched, and cached top-k completion.
+fn cmd_serve_bench(cmd: ServeBenchCmd) -> Result<()> {
+    let mut engine = Engine::new(cmd.engine)?;
+    println!(
+        "serve-bench: training n={} m={} k={} ({} iters, p={})",
+        cmd.n,
+        cmd.m,
+        cmd.k,
+        cmd.iters,
+        engine.config().p
+    );
+    let data = engine.load_dataset(SyntheticSpec::dense(cmd.n, cmd.m, cmd.k, cmd.seed))?;
+    let report = engine.factorize(data, &RescalOptions::new(cmd.k, cmd.iters), cmd.seed)?;
+    let model = engine.export_model(&Report::Factorize(report))?;
+    println!(
+        "model ready (train rel_error {:.4}); serving {} top-{} completions",
+        model.provenance().rel_error,
+        cmd.queries,
+        cmd.top
+    );
+
+    let batched = bench_util::measure_serve_topk(&model, cmd.batch, cmd.queries, cmd.top)?;
+    let unbatched = bench_util::measure_serve_topk(&model, 1, cmd.queries, cmd.top)?;
+    let (cold, warm) =
+        bench_util::measure_serve_cached_replay(&model, cmd.batch, cmd.queries, cmd.top)?;
+    let row = |label: &str, batch: usize, p: &bench_util::ServePoint| {
+        vec![
+            label.to_string(),
+            batch.to_string(),
+            bench_util::fmt_secs(p.wall_seconds),
+            format!("{:.0}", cmd.queries as f64 / p.wall_seconds.max(1e-12)),
+            p.stats.batches.to_string(),
+            p.stats.scored_candidates.to_string(),
+        ]
+    };
+    bench_util::print_table(
+        &format!("serving throughput — n={} m={} k={}", cmd.n, cmd.m, cmd.k),
+        &["pass", "batch", "wall", "queries/s", "gemm batches", "scored"],
+        &[
+            row("batched", cmd.batch, &batched),
+            row("unbatched", 1, &unbatched),
+            row("cached cold", cmd.batch, &cold),
+            row("cached warm", cmd.batch, &warm),
+        ],
+    );
+    println!(
+        "\nwarm pass: {} cache hits, {} candidates scored (a replay never \
+         touches the scoring kernels)",
+        warm.stats.cache_hits, warm.stats.scored_candidates
+    );
     Ok(())
 }
 

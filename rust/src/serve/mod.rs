@@ -1,0 +1,41 @@
+//! The serving plane: the read path that mirrors the engine's write path.
+//!
+//! Training produces factors (`X_t ≈ A R_t Aᵀ`); this module is the
+//! subsystem that *answers queries* from them — the paper's motivating
+//! use of a factorized knowledge tensor is "predictions of missing
+//! relations", which is a batched-GEMM scoring problem of its own,
+//! distinct from training (cf. DGL-KE, arXiv 2004.08532).
+//!
+//! # Lifecycle: train → export → persist → serve
+//!
+//! * **export** — [`crate::engine::Engine::export_model`] turns a
+//!   [`crate::engine::Report`] (`Factorize` or `ModelSelect`) into a
+//!   [`FactorModel`]: the entity factors `A`, the relation cores `R`,
+//!   optional entity/relation names, and the provenance of the producing
+//!   job. The model precomputes per-relation projections `A·R_t` and
+//!   `A·R_tᵀ`, so any completion query is one dense GEMV over the
+//!   candidate entities.
+//! * **persist** — [`FactorModel::save`]/[`FactorModel::load`] round-trip
+//!   the artifact through the crate's own JSON (`drescal export` writes
+//!   it, `drescal query` reads it). Projections are recomputed on load,
+//!   never serialized.
+//! * **serve** — a [`QueryEngine`] answers typed [`Query`]s with typed
+//!   [`Answer`]s (mirroring `JobSpec`/`Report` on the write path):
+//!   pointwise scores `score(s,r,o) = aₛᵀ·R_r·aₒ` and batched top-k
+//!   completion `(s,r,?)` / `(?,r,o)`. Concurrent completion queries on
+//!   one relation are micro-batched into a single GEMM, answers are
+//!   LRU-cached by query, and [`ServeStats`] counters (cache hits,
+//!   GEMM batches, scored candidates) make the reuse guarantees
+//!   testable.
+//!
+//! Top-k selection is deterministic under score ties (ties break toward
+//! the lower entity index), so serving results are reproducible across
+//! thread counts and batch shapes.
+
+pub mod model;
+pub mod query;
+pub mod score;
+
+pub use model::{FactorModel, Provenance};
+pub use query::{Answer, Query, QueryEngine, ServeStats};
+pub use score::{Direction, Hit};

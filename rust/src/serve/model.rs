@@ -1,0 +1,389 @@
+//! The persisted factor-model artifact.
+//!
+//! A [`FactorModel`] is what training leaves behind for the serving
+//! plane: entity factors `A` (n×k), relation cores `R` (k×k×m), optional
+//! names, and the provenance of the producing job. It is constructed
+//! from a [`Report`] (via [`crate::engine::Engine::export_model`]) and
+//! round-trips through the crate's own JSON, so a trained model can be
+//! archived and served by a process that never ran the factorization.
+//!
+//! On construction (and again on load) the model precomputes the
+//! per-relation projections `P_t = A·R_t` and `Q_t = A·R_tᵀ`. With them,
+//! every query is cheap:
+//!
+//! * `score(s,r,o) = aₛᵀ·R_r·aₒ = P_r[s,:] · aₒ` — one length-k dot;
+//! * `(s,r,?)` completion: scores over all objects are `A · P_r[s,:]ᵀ` —
+//!   one GEMV over the n candidates;
+//! * `(?,r,o)` completion: scores over all subjects are `A · Q_r[o,:]ᵀ`.
+//!
+//! The projections cost `m·n·k` floats and are never serialized.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::engine::report::{mat_from_json, mat_to_json, tensor_from_json, tensor_to_json};
+use crate::engine::Report;
+use crate::error::{Context as _, Result};
+use crate::json::Json;
+use crate::tensor::{Mat, Tensor3};
+use crate::{bail, err};
+
+use super::score::Direction;
+
+/// Where a model came from: the job kind that produced it and, when
+/// exported through an [`crate::engine::Engine`], the grid and backend
+/// it was trained on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Provenance {
+    /// Producing job kind: `"factorize"`, `"model_select"`, or
+    /// `"external"` for models built directly from factors.
+    pub job: String,
+    /// Grid size of the producing engine (0 = unknown/external).
+    pub p: usize,
+    /// Backend of the producing engine (empty = unknown/external).
+    pub backend: String,
+    /// Final relative reconstruction error of the training job
+    /// (negative = unknown).
+    pub rel_error: f64,
+    /// Wall-clock seconds of the training job (0 = unknown).
+    pub wall_seconds: f64,
+}
+
+impl Provenance {
+    /// Provenance for a model built directly from factors, outside any
+    /// engine job.
+    pub fn external() -> Self {
+        Provenance {
+            job: "external".to_string(),
+            p: 0,
+            backend: String::new(),
+            rel_error: -1.0,
+            wall_seconds: 0.0,
+        }
+    }
+}
+
+/// A trained, servable factor model `X_t ≈ A R_t Aᵀ`.
+#[derive(Clone, Debug)]
+pub struct FactorModel {
+    /// Entity factors, n×k, row i = latent vector of entity i.
+    a: Mat,
+    /// Relation cores, k×k×m.
+    r: Tensor3,
+    entity_names: Option<Vec<String>>,
+    relation_names: Option<Vec<String>>,
+    provenance: Provenance,
+    /// Per-relation `A·R_t` (n×k); row s scores `(s, t, ?)` queries.
+    proj_obj: Vec<Mat>,
+    /// Per-relation `A·R_tᵀ` (n×k); row o scores `(?, t, o)` queries.
+    proj_subj: Vec<Mat>,
+}
+
+impl FactorModel {
+    /// Build (and validate) a model from factors. `a` is n×k; `r` must
+    /// hold k×k relation cores. Precomputes the serving projections.
+    pub fn new(a: Mat, r: Tensor3, provenance: Provenance) -> Result<FactorModel> {
+        let (n, k) = a.shape();
+        if n == 0 || k == 0 {
+            bail!("factor model needs a non-empty A, got {n}×{k}");
+        }
+        if r.n1() != k || r.n2() != k {
+            bail!(
+                "relation cores must be {k}×{k} to match A's {k} columns, got {}×{}×{}",
+                r.n1(),
+                r.n2(),
+                r.m()
+            );
+        }
+        let proj_obj: Vec<Mat> = r.slices().iter().map(|rt| a.matmul(rt)).collect();
+        let proj_subj: Vec<Mat> = r.slices().iter().map(|rt| a.matmul_t(rt)).collect();
+        Ok(FactorModel {
+            a,
+            r,
+            entity_names: None,
+            relation_names: None,
+            provenance,
+            proj_obj,
+            proj_subj,
+        })
+    }
+
+    /// Export a model from a training report. `Factorize` and
+    /// `ModelSelect` reports carry factors; a `Simulate` report does not
+    /// and is a typed error.
+    pub fn from_report(report: &Report) -> Result<FactorModel> {
+        match report {
+            Report::Factorize(r) => FactorModel::new(
+                r.a.clone(),
+                r.r.clone(),
+                Provenance {
+                    job: "factorize".to_string(),
+                    p: 0,
+                    backend: String::new(),
+                    rel_error: r.rel_error as f64,
+                    wall_seconds: r.wall_seconds,
+                },
+            ),
+            Report::ModelSelect(r) => {
+                let rel_error = r
+                    .scores
+                    .iter()
+                    .find(|s| s.k == r.k_opt)
+                    .map(|s| s.rel_error as f64)
+                    .unwrap_or(-1.0);
+                FactorModel::new(
+                    r.a.clone(),
+                    r.r.clone(),
+                    Provenance {
+                        job: "model_select".to_string(),
+                        p: 0,
+                        backend: String::new(),
+                        rel_error,
+                        wall_seconds: r.wall_seconds,
+                    },
+                )
+            }
+            Report::Simulate(_) => {
+                Err(err!("cannot export a factor model from a simulate report (no factors)"))
+            }
+        }
+    }
+
+    /// Attach entity names (must be one per entity).
+    pub fn with_entity_names(mut self, names: Vec<String>) -> Result<FactorModel> {
+        if names.len() != self.n() {
+            bail!("{} entity names for {} entities", names.len(), self.n());
+        }
+        self.entity_names = Some(names);
+        Ok(self)
+    }
+
+    /// Attach relation names (must be one per relation).
+    pub fn with_relation_names(mut self, names: Vec<String>) -> Result<FactorModel> {
+        if names.len() != self.m() {
+            bail!("{} relation names for {} relations", names.len(), self.m());
+        }
+        self.relation_names = Some(names);
+        Ok(self)
+    }
+
+    /// Number of entities n.
+    pub fn n(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Number of relations m.
+    pub fn m(&self) -> usize {
+        self.r.m()
+    }
+
+    /// Latent dimension k.
+    pub fn k(&self) -> usize {
+        self.a.cols()
+    }
+
+    /// Entity factors A (n×k).
+    pub fn a(&self) -> &Mat {
+        &self.a
+    }
+
+    /// Relation cores R (k×k×m).
+    pub fn r(&self) -> &Tensor3 {
+        &self.r
+    }
+
+    pub fn entity_names(&self) -> Option<&[String]> {
+        self.entity_names.as_deref()
+    }
+
+    pub fn relation_names(&self) -> Option<&[String]> {
+        self.relation_names.as_deref()
+    }
+
+    pub fn provenance(&self) -> &Provenance {
+        &self.provenance
+    }
+
+    pub fn provenance_mut(&mut self) -> &mut Provenance {
+        &mut self.provenance
+    }
+
+    /// The cached projection that answers completion queries in the
+    /// given direction for relation `rel`: `A·R_rel` for `(s, rel, ?)`,
+    /// `A·R_relᵀ` for `(?, rel, o)`. Row `anchor` of the returned matrix
+    /// dotted with `A`'s rows yields the candidate scores.
+    pub fn projection(&self, dir: Direction, rel: usize) -> &Mat {
+        match dir {
+            Direction::Objects => &self.proj_obj[rel],
+            Direction::Subjects => &self.proj_subj[rel],
+        }
+    }
+
+    /// Serialize the artifact (factors + metadata, not the projections).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("kind".to_string(), Json::Str("factor_model".to_string()));
+        obj.insert("k".to_string(), Json::Num(self.k() as f64));
+        obj.insert("a".to_string(), mat_to_json(&self.a));
+        obj.insert("r".to_string(), tensor_to_json(&self.r));
+        let mut prov = BTreeMap::new();
+        prov.insert("job".to_string(), Json::Str(self.provenance.job.clone()));
+        prov.insert("p".to_string(), Json::Num(self.provenance.p as f64));
+        prov.insert("backend".to_string(), Json::Str(self.provenance.backend.clone()));
+        prov.insert("rel_error".to_string(), Json::Num(self.provenance.rel_error));
+        prov.insert("wall_seconds".to_string(), Json::Num(self.provenance.wall_seconds));
+        obj.insert("provenance".to_string(), Json::Obj(prov));
+        if let Some(names) = &self.entity_names {
+            obj.insert(
+                "entity_names".to_string(),
+                Json::Arr(names.iter().map(|s| Json::Str(s.clone())).collect()),
+            );
+        }
+        if let Some(names) = &self.relation_names {
+            obj.insert(
+                "relation_names".to_string(),
+                Json::Arr(names.iter().map(|s| Json::Str(s.clone())).collect()),
+            );
+        }
+        Json::Obj(obj)
+    }
+
+    /// Rebuild a model from its JSON artifact (recomputing projections).
+    pub fn from_json(v: &Json) -> Result<FactorModel> {
+        match v.get("kind").and_then(|k| k.as_str()) {
+            Some("factor_model") => {}
+            Some(other) => bail!("expected a factor_model artifact, got kind '{other}'"),
+            None => bail!("model artifact missing 'kind'"),
+        }
+        let a = mat_from_json(v.get("a").ok_or_else(|| err!("model missing 'a'"))?)?;
+        let r = tensor_from_json(v.get("r").ok_or_else(|| err!("model missing 'r'"))?)?;
+        let k = v
+            .get("k")
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| err!("model missing 'k'"))? as usize;
+        if a.cols() != k {
+            bail!("model declares k={k} but A has {} columns", a.cols());
+        }
+        let provenance = match v.get("provenance") {
+            Some(p) => Provenance {
+                job: p
+                    .get("job")
+                    .and_then(|j| j.as_str())
+                    .unwrap_or("external")
+                    .to_string(),
+                p: p.get("p").and_then(|x| x.as_f64()).unwrap_or(0.0) as usize,
+                backend: p
+                    .get("backend")
+                    .and_then(|b| b.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                rel_error: p.get("rel_error").and_then(|x| x.as_f64()).unwrap_or(-1.0),
+                wall_seconds: p.get("wall_seconds").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            },
+            None => Provenance::external(),
+        };
+        let mut model = FactorModel::new(a, r, provenance)?;
+        if let Some(names) = v.get("entity_names") {
+            model = model.with_entity_names(string_array(names, "entity_names")?)?;
+        }
+        if let Some(names) = v.get("relation_names") {
+            model = model.with_relation_names(string_array(names, "relation_names")?)?;
+        }
+        Ok(model)
+    }
+
+    /// Write the JSON artifact to a file (the `drescal export` output).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing factor model to {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a JSON artifact from a file (the `drescal query` input).
+    pub fn load(path: impl AsRef<Path>) -> Result<FactorModel> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading factor model from {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| err!("model JSON: {e}"))?;
+        FactorModel::from_json(&v).with_context(|| format!("loading {}", path.display()))
+    }
+}
+
+fn string_array(v: &Json, what: &str) -> Result<Vec<String>> {
+    v.as_arr()
+        .ok_or_else(|| err!("'{what}' must be an array"))?
+        .iter()
+        .map(|s| {
+            s.as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| err!("'{what}' entries must be strings"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tiny_model() -> FactorModel {
+        let mut rng = Rng::new(3);
+        let a = Mat::random_uniform(6, 2, 0.0, 1.0, &mut rng);
+        let r = Tensor3::random_uniform(2, 2, 3, 0.0, 1.0, &mut rng);
+        FactorModel::new(a, r, Provenance::external()).unwrap()
+    }
+
+    #[test]
+    fn shape_validation() {
+        let a = Mat::zeros(4, 3);
+        let r = Tensor3::zeros(2, 2, 1);
+        let e = FactorModel::new(a, r, Provenance::external()).unwrap_err();
+        assert!(e.to_string().contains("3 columns"), "{e}");
+        let e = FactorModel::new(Mat::zeros(0, 0), Tensor3::zeros(1, 1, 1), Provenance::external())
+            .unwrap_err();
+        assert!(e.to_string().contains("non-empty"), "{e}");
+    }
+
+    #[test]
+    fn projections_match_definition() {
+        let m = tiny_model();
+        for t in 0..m.m() {
+            let want_obj = m.a().matmul(m.r().slice(t));
+            let want_subj = m.a().matmul(&m.r().slice(t).transpose());
+            assert_eq!(m.projection(Direction::Objects, t), &want_obj);
+            assert_eq!(m.projection(Direction::Subjects, t), &want_subj);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_factors_and_metadata() {
+        let m = tiny_model()
+            .with_entity_names((0..6).map(|i| format!("e{i}")).collect())
+            .unwrap()
+            .with_relation_names(vec!["likes".into(), "knows".into(), "owns".into()])
+            .unwrap();
+        let json = m.to_json();
+        let reparsed = Json::parse(&json.to_string()).unwrap();
+        let back = FactorModel::from_json(&reparsed).unwrap();
+        assert_eq!(back.a(), m.a());
+        assert_eq!(back.r(), m.r());
+        assert_eq!(back.provenance(), m.provenance());
+        assert_eq!(back.entity_names(), m.entity_names());
+        assert_eq!(back.relation_names(), m.relation_names());
+    }
+
+    #[test]
+    fn name_length_validation() {
+        assert!(tiny_model().with_entity_names(vec!["a".into()]).is_err());
+        assert!(tiny_model().with_relation_names(vec!["a".into()]).is_err());
+    }
+
+    #[test]
+    fn rejects_foreign_artifacts() {
+        let e = FactorModel::from_json(&Json::parse(r#"{"kind":"report"}"#).unwrap())
+            .unwrap_err();
+        assert!(e.to_string().contains("factor_model"), "{e}");
+        assert!(FactorModel::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+}

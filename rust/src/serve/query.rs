@@ -1,0 +1,365 @@
+//! The typed query layer: micro-batching, answer caching, and serve
+//! counters.
+//!
+//! A [`QueryEngine`] owns a [`FactorModel`] and answers typed
+//! [`Query`]s with typed [`Answer`]s, mirroring the engine's
+//! `JobSpec`/`Report` pair on the write path. [`QueryEngine::submit_batch`]
+//! is the serving hot path:
+//!
+//! 1. every query is bounds-checked up front (typed errors, no partial
+//!    batches);
+//! 2. cache hits are answered from the LRU answer cache without scoring
+//!    anything;
+//! 3. the remaining completion queries are grouped by
+//!    `(relation, direction, top)` and each group runs **one GEMM**
+//!    over the model's cached projection — duplicate anchors within a
+//!    group are scored once;
+//! 4. pointwise score queries are answered with a length-k dot each.
+//!
+//! [`ServeStats`] counts cache hits, GEMM batches, and scored
+//! candidates so tests can *prove* the reuse guarantees (a repeated
+//! query must add zero scored candidates).
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::error::Result;
+use crate::json::Json;
+
+use super::model::FactorModel;
+use super::score::{self, Direction, Hit};
+
+/// One typed serving request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Query {
+    /// Pointwise triple score `aₛᵀ·R_r·aₒ`.
+    Score { s: usize, r: usize, o: usize },
+    /// `(s, r, ?)`: the `top` best candidate objects.
+    TopObjects { s: usize, r: usize, top: usize },
+    /// `(?, r, o)`: the `top` best candidate subjects.
+    TopSubjects { o: usize, r: usize, top: usize },
+}
+
+/// The typed result of one [`Query`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Answer {
+    Score(f32),
+    TopK(Vec<Hit>),
+}
+
+impl Answer {
+    /// JSON form (for `drescal query --json`).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        match self {
+            Answer::Score(v) => {
+                obj.insert("kind".to_string(), Json::Str("score".to_string()));
+                obj.insert("score".to_string(), Json::Num(*v as f64));
+            }
+            Answer::TopK(hits) => {
+                obj.insert("kind".to_string(), Json::Str("top_k".to_string()));
+                obj.insert(
+                    "hits".to_string(),
+                    Json::Arr(
+                        hits.iter()
+                            .map(|h| {
+                                let mut hit = BTreeMap::new();
+                                hit.insert("entity".to_string(), Json::Num(h.entity as f64));
+                                hit.insert("score".to_string(), Json::Num(h.score as f64));
+                                Json::Obj(hit)
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// Serving counters, cumulative since the engine was built.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Queries answered (hits and misses).
+    pub queries: usize,
+    /// Queries answered from the LRU cache — zero candidates scored.
+    pub cache_hits: usize,
+    /// GEMM micro-batches issued (one per `(relation, direction, top)`
+    /// group of cache-missing completion queries per submit).
+    pub batches: usize,
+    /// Candidate entities scored (n per completion anchor, 1 per
+    /// pointwise score). Unchanged by cache hits.
+    pub scored_candidates: usize,
+}
+
+/// How many answers the LRU cache keeps by default.
+const DEFAULT_CACHE_CAPACITY: usize = 1024;
+
+/// One cached answer plus its last-use stamp (monotonic clock). Stamps
+/// keep the hot path O(1): a hit refreshes one entry's stamp; only an
+/// over-capacity insert scans for the minimum stamp to evict.
+struct CacheEntry {
+    answer: Answer,
+    stamp: u64,
+}
+
+/// A serving engine over one loaded [`FactorModel`].
+pub struct QueryEngine {
+    model: FactorModel,
+    cache: HashMap<Query, CacheEntry>,
+    /// Monotonic use clock backing the LRU stamps.
+    clock: u64,
+    capacity: usize,
+    stats: ServeStats,
+}
+
+impl QueryEngine {
+    /// Serving engine with the default answer-cache capacity.
+    pub fn new(model: FactorModel) -> QueryEngine {
+        QueryEngine::with_cache_capacity(model, DEFAULT_CACHE_CAPACITY)
+    }
+
+    /// Serving engine with an explicit answer-cache capacity
+    /// (0 disables caching).
+    pub fn with_cache_capacity(model: FactorModel, capacity: usize) -> QueryEngine {
+        QueryEngine {
+            model,
+            cache: HashMap::new(),
+            clock: 0,
+            capacity,
+            stats: ServeStats::default(),
+        }
+    }
+
+    /// The model being served.
+    pub fn model(&self) -> &FactorModel {
+        &self.model
+    }
+
+    /// Cumulative serving counters.
+    pub fn stats(&self) -> ServeStats {
+        self.stats
+    }
+
+    /// Answer one query (a batch of one).
+    pub fn query(&mut self, q: Query) -> Result<Answer> {
+        let mut answers = self.submit_batch(std::slice::from_ref(&q))?;
+        Ok(answers.pop().expect("one answer per query"))
+    }
+
+    /// Answer a batch of concurrent queries. Cache-missing completion
+    /// queries that share `(relation, direction, top)` are scored by a
+    /// single GEMM; answers come back in query order.
+    pub fn submit_batch(&mut self, queries: &[Query]) -> Result<Vec<Answer>> {
+        // validate everything before scoring anything
+        for q in queries {
+            match *q {
+                Query::Score { s, r, o } => {
+                    score::check_query_bounds(&self.model, s, r)?;
+                    score::check_query_bounds(&self.model, o, r)?;
+                }
+                Query::TopObjects { s, r, .. } => {
+                    score::check_query_bounds(&self.model, s, r)?;
+                }
+                Query::TopSubjects { o, r, .. } => {
+                    score::check_query_bounds(&self.model, o, r)?;
+                }
+            }
+        }
+        self.stats.queries += queries.len();
+
+        let mut answers: Vec<Option<Answer>> = vec![None; queries.len()];
+        // (rel, dir, top) → slots awaiting a completion answer
+        let mut groups: BTreeMap<(usize, Direction, usize), Vec<usize>> = BTreeMap::new();
+        for (slot, q) in queries.iter().enumerate() {
+            if let Some(hit) = self.cache_get(q) {
+                self.stats.cache_hits += 1;
+                answers[slot] = Some(hit);
+                continue;
+            }
+            match *q {
+                Query::Score { s, r, o } => {
+                    let ans = Answer::Score(score::score_one(&self.model, s, r, o)?);
+                    self.stats.scored_candidates += 1;
+                    self.cache_insert(*q, ans.clone());
+                    answers[slot] = Some(ans);
+                }
+                Query::TopObjects { r, top, .. } => {
+                    groups.entry((r, Direction::Objects, top)).or_default().push(slot);
+                }
+                Query::TopSubjects { r, top, .. } => {
+                    groups.entry((r, Direction::Subjects, top)).or_default().push(slot);
+                }
+            }
+        }
+
+        for ((rel, dir, top), slots) in groups {
+            // dedupe anchors: identical queries in one batch score once
+            let mut anchors: Vec<usize> = Vec::with_capacity(slots.len());
+            let mut anchor_row: HashMap<usize, usize> = HashMap::new();
+            for &slot in &slots {
+                let anchor = anchor_of(&queries[slot]);
+                anchor_row.entry(anchor).or_insert_with(|| {
+                    anchors.push(anchor);
+                    anchors.len() - 1
+                });
+            }
+            let per_anchor = score::complete_batch(&self.model, dir, rel, &anchors, top)?;
+            self.stats.batches += 1;
+            self.stats.scored_candidates += anchors.len() * self.model.n();
+            for &slot in &slots {
+                let row = anchor_row[&anchor_of(&queries[slot])];
+                let ans = Answer::TopK(per_anchor[row].clone());
+                self.cache_insert(queries[slot], ans.clone());
+                answers[slot] = Some(ans);
+            }
+        }
+
+        Ok(answers
+            .into_iter()
+            .map(|a| a.expect("every query slot answered"))
+            .collect())
+    }
+
+    fn cache_get(&mut self, q: &Query) -> Option<Answer> {
+        self.clock += 1;
+        let clock = self.clock;
+        let entry = self.cache.get_mut(q)?;
+        entry.stamp = clock; // refresh LRU position, O(1)
+        Some(entry.answer.clone())
+    }
+
+    fn cache_insert(&mut self, q: Query, answer: Answer) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.clock += 1;
+        self.cache.insert(q, CacheEntry { answer, stamp: self.clock });
+        if self.cache.len() > self.capacity {
+            // over-capacity insert (not the hit path): evict the
+            // least-recently-used entry; stamps are unique, so the
+            // minimum is deterministic
+            if let Some(oldest) =
+                self.cache.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| *k)
+            {
+                self.cache.remove(&oldest);
+            }
+        }
+    }
+}
+
+/// The entity a completion query is anchored on (its projection row).
+fn anchor_of(q: &Query) -> usize {
+    match *q {
+        Query::TopObjects { s, .. } => s,
+        Query::TopSubjects { o, .. } => o,
+        Query::Score { s, .. } => s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::serve::model::Provenance;
+    use crate::tensor::{Mat, Tensor3};
+
+    fn engine(n: usize, capacity: usize) -> QueryEngine {
+        let mut rng = Rng::new(11);
+        let a = Mat::random_uniform(n, 3, 0.0, 1.0, &mut rng);
+        let r = Tensor3::random_uniform(3, 3, 2, 0.0, 1.0, &mut rng);
+        let model = FactorModel::new(a, r, Provenance::external()).unwrap();
+        QueryEngine::with_cache_capacity(model, capacity)
+    }
+
+    #[test]
+    fn repeated_query_is_served_from_cache() {
+        let mut qe = engine(16, 8);
+        let q = Query::TopObjects { s: 3, r: 1, top: 4 };
+        let first = qe.query(q).unwrap();
+        let after_first = qe.stats();
+        assert_eq!(after_first.batches, 1);
+        assert_eq!(after_first.scored_candidates, 16);
+        assert_eq!(after_first.cache_hits, 0);
+        // same query again: zero additional scored candidates
+        let second = qe.query(q).unwrap();
+        let after_second = qe.stats();
+        assert_eq!(first, second);
+        assert_eq!(after_second.cache_hits, 1);
+        assert_eq!(after_second.batches, 1, "no new GEMM for a cache hit");
+        assert_eq!(after_second.scored_candidates, 16, "zero additional candidates");
+    }
+
+    #[test]
+    fn batch_groups_one_gemm_per_relation_direction() {
+        let mut qe = engine(10, 0);
+        let batch = [
+            Query::TopObjects { s: 0, r: 0, top: 3 },
+            Query::TopObjects { s: 1, r: 0, top: 3 },
+            Query::TopObjects { s: 0, r: 0, top: 3 }, // duplicate: scored once
+            Query::TopSubjects { o: 2, r: 0, top: 3 },
+            Query::TopObjects { s: 4, r: 1, top: 3 },
+        ];
+        let answers = qe.submit_batch(&batch).unwrap();
+        assert_eq!(answers.len(), 5);
+        assert_eq!(answers[0], answers[2], "duplicate queries agree");
+        let stats = qe.stats();
+        // groups: (r0, obj), (r0, subj), (r1, obj)
+        assert_eq!(stats.batches, 3);
+        // anchors scored: {0,1} + {2} + {4} = 4 anchors × 10 candidates
+        assert_eq!(stats.scored_candidates, 40);
+        assert_eq!(stats.queries, 5);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_answer() {
+        let mut qe = engine(8, 1);
+        let q1 = Query::TopObjects { s: 0, r: 0, top: 2 };
+        let q2 = Query::TopObjects { s: 1, r: 0, top: 2 };
+        qe.query(q1).unwrap();
+        qe.query(q2).unwrap(); // evicts q1
+        let scored_before = qe.stats().scored_candidates;
+        qe.query(q1).unwrap(); // must rescore
+        assert_eq!(qe.stats().cache_hits, 0);
+        assert_eq!(qe.stats().scored_candidates, scored_before + 8);
+        // q1 is now cached again
+        qe.query(q1).unwrap();
+        assert_eq!(qe.stats().cache_hits, 1);
+    }
+
+    #[test]
+    fn pointwise_scores_count_one_candidate() {
+        let mut qe = engine(12, 4);
+        let q = Query::Score { s: 1, r: 0, o: 2 };
+        let a1 = qe.query(q).unwrap();
+        assert_eq!(qe.stats().scored_candidates, 1);
+        assert_eq!(qe.stats().batches, 0, "pointwise scores issue no GEMM batch");
+        let a2 = qe.query(q).unwrap();
+        assert_eq!(a1, a2);
+        assert_eq!(qe.stats().cache_hits, 1);
+        assert_eq!(qe.stats().scored_candidates, 1);
+    }
+
+    #[test]
+    fn invalid_queries_fail_before_scoring() {
+        let mut qe = engine(6, 4);
+        let bad = [
+            Query::TopObjects { s: 0, r: 0, top: 2 },
+            Query::TopObjects { s: 99, r: 0, top: 2 },
+        ];
+        assert!(qe.submit_batch(&bad).is_err());
+        assert_eq!(qe.stats().queries, 0, "failed batches answer nothing");
+        assert_eq!(qe.stats().scored_candidates, 0);
+        assert!(qe.query(Query::Score { s: 0, r: 5, o: 0 }).is_err());
+        assert!(qe.query(Query::TopSubjects { o: 6, r: 0, top: 1 }).is_err());
+    }
+
+    #[test]
+    fn answer_json_forms() {
+        let score = Answer::Score(0.5).to_json();
+        assert_eq!(score.get("kind").and_then(|k| k.as_str()), Some("score"));
+        let topk = Answer::TopK(vec![Hit { entity: 3, score: 1.0 }]).to_json();
+        let hits = topk.get("hits").and_then(|h| h.as_arr()).unwrap();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].get("entity").and_then(|e| e.as_f64()), Some(3.0));
+    }
+}

@@ -1,0 +1,344 @@
+//! Scoring kernels: pointwise triple scores and batched top-k
+//! completion over all candidate entities.
+//!
+//! `score(s,r,o) = aₛᵀ·R_r·aₒ`. With the model's cached projection
+//! `P_r = A·R_r`, a pointwise score is one length-k dot
+//! (`P_r[s,:]·aₒ`), and a `(s,r,?)` completion is one GEMV
+//! (`A·P_r[s,:]ᵀ`) followed by a partial top-k selection over the n
+//! candidates. A batch of B completion queries on one relation gathers
+//! the B projection rows into a B×k matrix and runs a single
+//! `B×k · k×n` GEMM — the batched-GEMM shape that dominates
+//! link-prediction serving (DGL-KE, arXiv 2004.08532) — which threads
+//! through the existing blocked GEMM above its work threshold.
+//!
+//! Top-k selection breaks score ties toward the **lower entity index**.
+//! The comparator is a strict total order, so the selected set and its
+//! order are unique: results are reproducible across thread counts,
+//! chunk shapes, and batch compositions.
+
+use std::cmp::Ordering;
+
+use crate::bail;
+use crate::error::Result;
+use crate::tensor::dense::num_threads;
+use crate::tensor::Mat;
+
+use super::model::FactorModel;
+
+/// Which side of a triple a completion query fills in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Direction {
+    /// `(s, r, ?)` — rank candidate objects.
+    Objects,
+    /// `(?, r, o)` — rank candidate subjects.
+    Subjects,
+}
+
+/// One ranked completion candidate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    /// Candidate entity index.
+    pub entity: usize,
+    /// Its score `aₛᵀ·R_r·aₒ`.
+    pub score: f32,
+}
+
+/// Strict total order on hits: higher score first, ties toward the
+/// lower entity index. Every pair of distinct hits compares unequal
+/// (entity indices are unique), which is what makes top-k selection
+/// deterministic however the candidates are chunked.
+pub fn cmp_hits(a: &Hit, b: &Hit) -> Ordering {
+    b.score.total_cmp(&a.score).then(a.entity.cmp(&b.entity))
+}
+
+/// Pointwise `score(s, rel, o)` via the cached projection: one
+/// length-k dot product.
+pub fn score_one(model: &FactorModel, s: usize, rel: usize, o: usize) -> Result<f32> {
+    check_entity(model, s)?;
+    check_entity(model, o)?;
+    check_relation(model, rel)?;
+    let p = model.projection(Direction::Objects, rel);
+    Ok(dot(p.row(s), model.a().row(o)))
+}
+
+#[inline]
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (a, b) in x.iter().zip(y) {
+        acc += a * b;
+    }
+    acc
+}
+
+fn check_entity(model: &FactorModel, e: usize) -> Result<()> {
+    if e >= model.n() {
+        bail!("entity index {e} out of range (model has {} entities)", model.n());
+    }
+    Ok(())
+}
+
+fn check_relation(model: &FactorModel, rel: usize) -> Result<()> {
+    if rel >= model.m() {
+        bail!("relation index {rel} out of range (model has {} relations)", model.m());
+    }
+    Ok(())
+}
+
+/// Batched completion: for each anchor entity, rank all n candidates on
+/// relation `rel` and return the top `top` hits (deterministic order).
+///
+/// All anchors share one `B×k · k×n` GEMM over the cached projection;
+/// the per-row selection then runs threaded when the candidate count
+/// crosses [`SELECT_PAR_THRESHOLD`]. Returns one hit list per anchor,
+/// anchor order preserved.
+pub fn complete_batch(
+    model: &FactorModel,
+    dir: Direction,
+    rel: usize,
+    anchors: &[usize],
+    top: usize,
+) -> Result<Vec<Vec<Hit>>> {
+    check_relation(model, rel)?;
+    for &anchor in anchors {
+        check_entity(model, anchor)?;
+    }
+    if anchors.is_empty() {
+        return Ok(Vec::new());
+    }
+    let proj = model.projection(dir, rel);
+    let k = model.k();
+    // gather the anchor rows of the projection into one B×k block
+    let mut q = Mat::zeros(anchors.len(), k);
+    for (i, &anchor) in anchors.iter().enumerate() {
+        q.row_mut(i).copy_from_slice(proj.row(anchor));
+    }
+    // one GEMM scores every candidate for every anchor: B×k · (n×k)ᵀ
+    let scores = q.matmul_t(model.a());
+    Ok((0..anchors.len()).map(|i| top_k(scores.row(i), top)).collect())
+}
+
+/// Candidate count above which top-k selection splits across threads.
+pub const SELECT_PAR_THRESHOLD: usize = 1 << 15;
+
+/// Select the `top` best-scoring candidates from a dense score vector
+/// (candidate index = position). Deterministic: see [`cmp_hits`].
+pub fn top_k(scores: &[f32], top: usize) -> Vec<Hit> {
+    let nt = num_threads();
+    let chunks = if scores.len() >= SELECT_PAR_THRESHOLD && nt > 1 {
+        nt.min(scores.len())
+    } else {
+        1
+    };
+    top_k_chunked(scores, top, chunks)
+}
+
+/// Chunked top-k: split the candidates into `chunks` contiguous ranges,
+/// select each range's local top-k, and merge. Ranges run on scoped
+/// threads when the chunk count is near the host's parallelism (the
+/// shape [`top_k`] produces); a pathological chunk count falls back to
+/// a sequential sweep rather than spawning unbounded threads. Either
+/// way the merge is pure, and because [`cmp_hits`] is a strict total
+/// order the result is identical for every chunk count — the property
+/// the determinism tests pin down.
+pub fn top_k_chunked(scores: &[f32], top: usize, chunks: usize) -> Vec<Hit> {
+    if top == 0 || scores.is_empty() {
+        return Vec::new();
+    }
+    let chunks = chunks.clamp(1, scores.len());
+    if chunks == 1 {
+        return select_range(scores, 0, top);
+    }
+    let chunk_len = scores.len().div_ceil(chunks);
+    let ranges = scores.chunks(chunk_len).enumerate();
+    let locals: Vec<Vec<Hit>> = if chunks <= num_threads().max(1) * 2 {
+        let mut locals = Vec::with_capacity(chunks);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .map(|(c, range)| s.spawn(move || select_range(range, c * chunk_len, top)))
+                .collect();
+            for h in handles {
+                locals.push(h.join().expect("top-k selection thread"));
+            }
+        });
+        locals
+    } else {
+        ranges.map(|(c, range)| select_range(range, c * chunk_len, top)).collect()
+    };
+    let mut merged: Vec<Hit> = locals.into_iter().flatten().collect();
+    merged.sort_by(cmp_hits);
+    merged.truncate(top);
+    merged
+}
+
+/// Serial top-k over one contiguous candidate range whose first
+/// candidate has global index `base`.
+fn select_range(scores: &[f32], base: usize, top: usize) -> Vec<Hit> {
+    let mut hits: Vec<Hit> = scores
+        .iter()
+        .enumerate()
+        .map(|(i, &score)| Hit { entity: base + i, score })
+        .collect();
+    if hits.len() > top {
+        // partial selection: O(n) partition puts the best `top` first
+        hits.select_nth_unstable_by(top - 1, cmp_hits);
+        hits.truncate(top);
+    }
+    hits.sort_by(cmp_hits);
+    hits
+}
+
+/// Brute-force reference: score every candidate pointwise and fully
+/// sort. Used by the parity tests and the `serve-bench` baseline; the
+/// batched path must match it exactly.
+pub fn brute_force_top_k(
+    model: &FactorModel,
+    dir: Direction,
+    rel: usize,
+    anchor: usize,
+    top: usize,
+) -> Result<Vec<Hit>> {
+    check_relation(model, rel)?;
+    check_entity(model, anchor)?;
+    let hits: Result<Vec<Hit>> = (0..model.n())
+        .map(|cand| {
+            let score = match dir {
+                Direction::Objects => score_one(model, anchor, rel, cand)?,
+                Direction::Subjects => score_one(model, cand, rel, anchor)?,
+            };
+            Ok(Hit { entity: cand, score })
+        })
+        .collect();
+    let mut hits = hits?;
+    hits.sort_by(cmp_hits);
+    hits.truncate(top);
+    Ok(hits)
+}
+
+/// A full dense score vector for one anchor (no selection) — the
+/// serving analogue of a probability row, handy for calibration and
+/// tests.
+pub fn score_row(
+    model: &FactorModel,
+    dir: Direction,
+    rel: usize,
+    anchor: usize,
+) -> Result<Vec<f32>> {
+    check_relation(model, rel)?;
+    check_entity(model, anchor)?;
+    let proj = model.projection(dir, rel);
+    let anchor_row = proj.row(anchor);
+    Ok((0..model.n()).map(|cand| dot(anchor_row, model.a().row(cand))).collect())
+}
+
+/// Validate that `top_k` inputs describe a well-formed query (used by
+/// the query layer before any compute).
+pub fn check_query_bounds(model: &FactorModel, anchor: usize, rel: usize) -> Result<()> {
+    check_entity(model, anchor)?;
+    check_relation(model, rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::serve::model::Provenance;
+    use crate::tensor::Tensor3;
+
+    fn model(n: usize, k: usize, m: usize, seed: u64) -> FactorModel {
+        let mut rng = Rng::new(seed);
+        let a = Mat::random_uniform(n, k, 0.0, 1.0, &mut rng);
+        let r = Tensor3::random_uniform(k, k, m, 0.0, 1.0, &mut rng);
+        FactorModel::new(a, r, Provenance::external()).unwrap()
+    }
+
+    #[test]
+    fn score_one_matches_definition() {
+        let m = model(8, 3, 2, 1);
+        for s in 0..8 {
+            for o in 0..8 {
+                for t in 0..2 {
+                    // aₛᵀ·R_t·aₒ computed longhand in f64
+                    let mut want = 0.0f64;
+                    for i in 0..3 {
+                        for j in 0..3 {
+                            want += m.a()[(s, i)] as f64
+                                * m.r().slice(t)[(i, j)] as f64
+                                * m.a()[(o, j)] as f64;
+                        }
+                    }
+                    let got = score_one(&m, s, t, o).unwrap();
+                    assert!((got as f64 - want).abs() < 1e-4, "s={s} o={o} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_breaks_ties_by_entity_index() {
+        // plateau of equal scores: selection must prefer lower indices
+        let scores = [1.0f32, 3.0, 3.0, 2.0, 3.0, 1.0];
+        let hits = top_k_chunked(&scores, 4, 1);
+        let idx: Vec<usize> = hits.iter().map(|h| h.entity).collect();
+        assert_eq!(idx, [1, 2, 4, 3]);
+        // identical under any chunking
+        for chunks in [2, 3, 4, 6] {
+            assert_eq!(top_k_chunked(&scores, 4, chunks), hits, "chunks={chunks}");
+        }
+    }
+
+    #[test]
+    fn top_k_edge_cases() {
+        assert!(top_k_chunked(&[], 3, 2).is_empty());
+        assert!(top_k_chunked(&[1.0, 2.0], 0, 1).is_empty());
+        // top larger than n returns all, sorted
+        let hits = top_k_chunked(&[1.0, 2.0], 10, 3);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].entity, 1);
+        assert_eq!(hits[1].entity, 0);
+    }
+
+    #[test]
+    fn chunked_selection_is_chunk_invariant_on_random_scores() {
+        let mut rng = Rng::new(7);
+        let mut scores = vec![0.0f32; 500];
+        rng.fill_uniform(&mut scores, -1.0, 1.0);
+        // inject exact ties to stress the tie-break
+        for i in (0..500).step_by(7) {
+            scores[i] = 0.5;
+        }
+        let want = top_k_chunked(&scores, 25, 1);
+        for chunks in [2, 3, 8, 16, 499, 500] {
+            assert_eq!(top_k_chunked(&scores, 25, chunks), want, "chunks={chunks}");
+        }
+    }
+
+    #[test]
+    fn batched_completion_matches_brute_force() {
+        let m = model(30, 4, 3, 9);
+        for dir in [Direction::Objects, Direction::Subjects] {
+            let anchors = [0usize, 7, 29, 7];
+            let batched = complete_batch(&m, dir, 1, &anchors, 5).unwrap();
+            assert_eq!(batched.len(), anchors.len());
+            for (i, &anchor) in anchors.iter().enumerate() {
+                let brute = brute_force_top_k(&m, dir, 1, anchor, 5).unwrap();
+                let got: Vec<usize> = batched[i].iter().map(|h| h.entity).collect();
+                let want: Vec<usize> = brute.iter().map(|h| h.entity).collect();
+                assert_eq!(got, want, "dir={dir:?} anchor={anchor}");
+                for (g, w) in batched[i].iter().zip(&brute) {
+                    assert!((g.score - w.score).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn typed_errors_on_out_of_range() {
+        let m = model(5, 2, 2, 3);
+        assert!(score_one(&m, 5, 0, 0).is_err());
+        assert!(score_one(&m, 0, 2, 0).is_err());
+        assert!(score_one(&m, 0, 0, 9).is_err());
+        assert!(complete_batch(&m, Direction::Objects, 0, &[4, 5], 3).is_err());
+        assert!(complete_batch(&m, Direction::Objects, 7, &[0], 3).is_err());
+        assert!(brute_force_top_k(&m, Direction::Subjects, 0, 99, 3).is_err());
+    }
+}

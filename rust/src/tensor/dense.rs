@@ -318,7 +318,7 @@ pub fn gemm_at_b(a: &Mat, b: &Mat, c: &mut Mat) {
     let work = m * k * n;
     let nt = num_threads();
     if work < PAR_THRESHOLD || nt == 1 || k < 2 {
-        atb_serial(&a.data, &b.data, &mut c.data, m, k, n, 0, k);
+        atb_serial(&a.data, &b.data, &mut c.data, m, k, n, 0..k);
         return;
     }
     // Parallelize over column blocks of Aᵀ == column ranges of A.
@@ -331,14 +331,24 @@ pub fn gemm_at_b(a: &Mat, b: &Mat, c: &mut Mat) {
             s.spawn(move || {
                 let k0 = t * chunk;
                 let k1 = (k0 + chunk).min(k);
-                atb_serial(a_data, b_data, c_chunk, m, k, n, k0, k1);
+                atb_serial(a_data, b_data, c_chunk, m, k, n, k0..k1);
             });
         }
     });
 }
 
-/// C[k0..k1, :] += A[:, k0..k1]ᵀ·B, C buffer holds rows k0..k1 only.
-fn atb_serial(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, k0: usize, k1: usize) {
+/// C[kr, :] += A[:, kr]ᵀ·B, C buffer holds rows `kr` only.
+fn atb_serial(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    kr: std::ops::Range<usize>,
+) {
+    let k0 = kr.start;
+    let k1 = kr.end;
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let brow = &b[i * n..(i + 1) * n];

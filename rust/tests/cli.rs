@@ -161,6 +161,75 @@ fn config_file_round_trip() {
 }
 
 #[test]
+fn export_then_query_round_trip() {
+    let dir = std::env::temp_dir().join(format!("drescal_cli_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dir.join("model.json");
+    let model_path = model.to_str().unwrap();
+    // train a small blocks tensor and persist the factor model
+    let (ok, text) = run(&[
+        "export", "--data", "blocks", "--n", "24", "--m", "2", "--k-true", "3", "--k", "3",
+        "--p", "4", "--iters", "100", "--model", model_path,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("exported factor model"), "{text}");
+    assert!(model.exists(), "model artifact not written");
+    // top-k objects from the saved artifact (no engine in this process)
+    let (ok, text) = run(&["query", "--model", model_path, "--s", "0", "--r", "0", "--top", "3"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("top objects for (s=0, r=0, ?)"), "{text}");
+    // pointwise score, JSON form
+    let (ok, text) = run(&[
+        "query", "--model", model_path, "--s", "0", "--o", "1", "--r", "0", "--json",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("\"kind\":\"score\""), "{text}");
+    // typed errors: out-of-range entity, missing anchors
+    let (ok, text) = run(&["query", "--model", model_path, "--s", "999", "--r", "0"]);
+    assert!(!ok);
+    assert!(text.contains("out of range"), "{text}");
+    let (ok, text) = run(&["query", "--model", model_path]);
+    assert!(!ok);
+    assert!(text.contains("--s and/or --o"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_smoke_tracks_a_trajectory() {
+    let dir = std::env::temp_dir().join(format!("drescal_cli_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("BENCH.json");
+    let out_path = out.to_str().unwrap();
+    // first run: no baseline yet
+    let (ok, text) = run(&["bench", "--iters", "1", "--p", "1", "--out", out_path]);
+    assert!(ok, "{text}");
+    assert!(text.contains("serve_topk_batched"), "serve section missing: {text}");
+    assert!(text.contains("no baseline"), "{text}");
+    // second run: self-baselines against the first output, prints deltas
+    let (ok, text) = run(&[
+        "bench", "--iters", "1", "--p", "1", "--out", out_path, "--max-regression", "1000",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("perf trajectory"), "{text}");
+    assert!(text.contains("ratio"), "{text}");
+    // an absurdly tight gate (with the noise floor disabled) trips the
+    // typed regression error, and the failed run keeps the baseline
+    let before = std::fs::read_to_string(&out).unwrap();
+    let (ok, text) = run(&[
+        "bench", "--iters", "1", "--p", "1", "--out", out_path, "--max-regression",
+        "0.0000001", "--gate-floor", "0",
+    ]);
+    assert!(!ok, "a 1e-7x regression limit must fail");
+    assert!(text.contains("perf regression"), "{text}");
+    assert_eq!(
+        std::fs::read_to_string(&out).unwrap(),
+        before,
+        "a gated run must not overwrite its own baseline"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn bad_flags_are_reported() {
     let (ok, text) = run(&["run", "--p", "notanumber"]);
     assert!(!ok);

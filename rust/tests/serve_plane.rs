@@ -1,0 +1,238 @@
+//! Serving-plane integration: scoring parity, determinism, artifact
+//! round-trips, and the LRU/batching counter guarantees.
+//!
+//! The acceptance bar: batched/threaded top-k must *exactly* match a
+//! brute-force `score(s,r,o)` loop (for both `Factorize`- and
+//! `ModelSelect`-derived models), a model must survive a JSON
+//! save→load→re-query round-trip, and a repeated query must be served
+//! from the LRU cache with zero additional scored candidates.
+
+use drescal::coordinator::JobData;
+use drescal::data::synthetic;
+use drescal::engine::{Engine, EngineConfig, Report};
+use drescal::model_selection::RescalkConfig;
+use drescal::rescal::RescalOptions;
+use drescal::rng::Rng;
+use drescal::serve::score::{brute_force_top_k, complete_batch, score_one, top_k_chunked};
+use drescal::serve::{
+    Answer, Direction, FactorModel, Provenance, Query, QueryEngine,
+};
+use drescal::tensor::{Mat, Tensor3};
+
+/// A trained model from a real factorize job on the engine.
+fn factorize_model() -> FactorModel {
+    let planted = synthetic::block_tensor(24, 2, 3, 0.01, 501);
+    let mut engine = Engine::new(EngineConfig::new(4)).unwrap();
+    let data = engine.load_dataset(JobData::dense(planted.x)).unwrap();
+    let report = engine.factorize(data, &RescalOptions::new(3, 150), 7).unwrap();
+    engine.export_model(&Report::Factorize(report)).unwrap()
+}
+
+/// Per-anchor parity: the batched GEMM path must rank candidates
+/// exactly like the brute-force pointwise loop, ties included.
+fn assert_parity(model: &FactorModel, top: usize) {
+    let anchors: Vec<usize> = (0..model.n()).collect();
+    for dir in [Direction::Objects, Direction::Subjects] {
+        for rel in 0..model.m() {
+            let batched = complete_batch(model, dir, rel, &anchors, top).unwrap();
+            for (anchor, got) in anchors.iter().zip(&batched) {
+                let want = brute_force_top_k(model, dir, rel, *anchor, top).unwrap();
+                let got_idx: Vec<usize> = got.iter().map(|h| h.entity).collect();
+                let want_idx: Vec<usize> = want.iter().map(|h| h.entity).collect();
+                assert_eq!(
+                    got_idx, want_idx,
+                    "dir={dir:?} rel={rel} anchor={anchor}: batched != brute force"
+                );
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g.score - w.score).abs() < 1e-5,
+                        "score drift at dir={dir:?} rel={rel} anchor={anchor}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn factorize_model_batched_topk_matches_brute_force() {
+    let model = factorize_model();
+    assert_eq!(model.provenance().job, "factorize");
+    assert_eq!(model.provenance().p, 4, "engine stamps its grid into provenance");
+    assert_parity(&model, 5);
+}
+
+#[test]
+fn model_select_model_batched_topk_matches_brute_force() {
+    // same planted tensor + sweep parameters as the coordinator tests,
+    // which are known to recover k = 2
+    let planted = synthetic::block_tensor(20, 2, 2, 0.01, 1201);
+    let mut engine = Engine::new(EngineConfig::new(4)).unwrap();
+    let data = engine.load_dataset(JobData::dense(planted.x)).unwrap();
+    let cfg = RescalkConfig {
+        k_min: 1,
+        k_max: 4,
+        perturbations: 5,
+        rescal_iters: 500,
+        regress_iters: 25,
+        seed: 9,
+        ..Default::default()
+    };
+    let report = engine.model_select(data, &cfg).unwrap();
+    let model = engine.export_model(&Report::ModelSelect(report)).unwrap();
+    assert_eq!(model.provenance().job, "model_select");
+    assert_eq!(model.k(), 2, "sweep recovers the planted k");
+    assert!(model.provenance().rel_error >= 0.0, "k_opt rel_error recorded");
+    assert_parity(&model, 4);
+}
+
+#[test]
+fn topk_is_deterministic_across_chunk_counts_under_ties() {
+    // many exact ties: every entity in a community block shares factor
+    // rows, so scores collide and only the index tie-break orders them
+    let a = Mat::from_fn(32, 2, |i, j| if (i / 8) % 2 == j { 1.0 } else { 0.25 });
+    let r = Tensor3::from_slices(vec![Mat::eye(2)]);
+    let model = FactorModel::new(a, r, Provenance::external()).unwrap();
+    let reference = complete_batch(&model, Direction::Objects, 0, &[0], 12).unwrap();
+    // tied candidates must come out in ascending entity order
+    let top = &reference[0];
+    for pair in top.windows(2) {
+        assert!(
+            pair[0].score > pair[1].score
+                || (pair[0].score == pair[1].score && pair[0].entity < pair[1].entity),
+            "tie broken away from the lower index: {pair:?}"
+        );
+    }
+    // raw selection kernel: identical output for every chunking of the
+    // same score vector (what a different thread count would produce)
+    let mut rng = Rng::new(77);
+    let mut scores = vec![0.0f32; 4096];
+    rng.fill_uniform(&mut scores, 0.0, 1.0);
+    for i in (0..4096).step_by(3) {
+        scores[i] = 0.75; // plateau of ties
+    }
+    let want = top_k_chunked(&scores, 64, 1);
+    for chunks in [2, 4, 7, 16, 64, 4096] {
+        assert_eq!(top_k_chunked(&scores, 64, chunks), want, "chunks={chunks}");
+    }
+}
+
+#[test]
+fn model_json_roundtrip_requeries_identically() {
+    let model = factorize_model();
+    let dir = std::env::temp_dir().join(format!("drescal_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+    model.save(&path).unwrap();
+    let reloaded = FactorModel::load(&path).unwrap();
+    assert_eq!(reloaded.a(), model.a(), "A survives the JSON round-trip exactly");
+    assert_eq!(reloaded.r(), model.r(), "R survives the JSON round-trip exactly");
+    assert_eq!(reloaded.provenance(), model.provenance());
+
+    // re-query: answers from the reloaded model are identical
+    let queries: Vec<Query> = (0..model.n())
+        .map(|s| Query::TopObjects { s, r: 1, top: 4 })
+        .chain((0..model.n()).map(|o| Query::TopSubjects { o, r: 0, top: 3 }))
+        .chain([Query::Score { s: 0, r: 0, o: 5 }])
+        .collect();
+    let mut qe1 = QueryEngine::new(model);
+    let mut qe2 = QueryEngine::new(reloaded);
+    let a1 = qe1.submit_batch(&queries).unwrap();
+    let a2 = qe2.submit_batch(&queries).unwrap();
+    assert_eq!(a1, a2, "save -> load -> re-query must be the identity");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The headline cache guarantee (acceptance criterion): a repeated
+/// query is answered from the LRU with **zero additional scored
+/// candidates**, while a threaded/batched top-k stays exactly equal to
+/// brute force.
+#[test]
+fn repeated_query_served_from_cache_with_zero_scoring() {
+    let model = factorize_model();
+    let n = model.n();
+    let brute = brute_force_top_k(&model, Direction::Objects, 0, 3, 5).unwrap();
+    let mut qe = QueryEngine::new(model);
+    let q = Query::TopObjects { s: 3, r: 0, top: 5 };
+
+    let first = qe.query(q).unwrap();
+    assert_eq!(first, Answer::TopK(brute), "served top-k == brute-force top-k");
+    let cold = qe.stats();
+    assert_eq!(cold.queries, 1);
+    assert_eq!(cold.cache_hits, 0);
+    assert_eq!(cold.batches, 1);
+    assert_eq!(cold.scored_candidates, n, "one anchor scored against all n");
+
+    let second = qe.query(q).unwrap();
+    let warm = qe.stats();
+    assert_eq!(second, first, "cache returns the identical answer");
+    assert_eq!(warm.cache_hits, 1);
+    assert_eq!(warm.batches, cold.batches, "no new GEMM batch");
+    assert_eq!(
+        warm.scored_candidates, cold.scored_candidates,
+        "zero additional scored candidates on a cache hit"
+    );
+}
+
+#[test]
+fn micro_batch_coalesces_same_relation_queries_into_one_gemm() {
+    let model = factorize_model();
+    let n = model.n();
+    let mut qe = QueryEngine::with_cache_capacity(model, 0);
+    let batch: Vec<Query> =
+        (0..6).map(|s| Query::TopObjects { s, r: 0, top: 3 }).collect();
+    qe.submit_batch(&batch).unwrap();
+    let stats = qe.stats();
+    assert_eq!(stats.batches, 1, "six same-relation queries share one GEMM");
+    assert_eq!(stats.scored_candidates, 6 * n);
+}
+
+#[test]
+fn export_is_typed_about_factorless_reports() {
+    use drescal::engine::{SimScenario, SimSpec};
+    use drescal::simulate::Machine;
+    let mut engine = Engine::new(EngineConfig::new(1)).unwrap();
+    let sim = engine
+        .simulate(SimSpec { machine: Machine::cpu_cluster(), scenario: SimScenario::Dense11Tb })
+        .unwrap();
+    let e = engine.export_model(&Report::Simulate(sim)).unwrap_err();
+    assert!(e.to_string().contains("simulate"), "{e}");
+}
+
+#[test]
+fn serve_bench_helpers_count_what_they_score() {
+    let mut rng = Rng::new(5);
+    let a = Mat::random_uniform(20, 3, 0.0, 1.0, &mut rng);
+    let r = Tensor3::random_uniform(3, 3, 2, 0.0, 1.0, &mut rng);
+    let model = FactorModel::new(a, r, Provenance::external()).unwrap();
+
+    // batch 10 divides the 20 subjects per relation evenly, so every
+    // micro-batch holds one relation and maps to exactly one GEMM
+    let point = drescal::bench_util::measure_serve_topk(&model, 10, 40, 5).unwrap();
+    assert_eq!(point.stats.queries, 40);
+    assert_eq!(point.stats.cache_hits, 0, "throughput pass runs uncached");
+    assert_eq!(point.stats.batches, 40 / 10, "one GEMM per full micro-batch");
+    assert_eq!(point.stats.scored_candidates, 40 * 20);
+
+    let (cold, warm) =
+        drescal::bench_util::measure_serve_cached_replay(&model, 10, 40, 5).unwrap();
+    assert_eq!(cold.stats.queries, 40);
+    assert_eq!(warm.stats.queries, 40);
+    assert_eq!(warm.stats.cache_hits, 40, "replay is all cache hits");
+    assert_eq!(warm.stats.scored_candidates, 0, "replay scores nothing");
+    assert_eq!(warm.stats.batches, 0);
+    assert!(cold.stats.scored_candidates > 0);
+}
+
+#[test]
+fn out_of_range_queries_are_typed_errors() {
+    let model = factorize_model();
+    let n = model.n();
+    let m = model.m();
+    assert!(score_one(&model, n, 0, 0).is_err());
+    assert!(score_one(&model, 0, m, 0).is_err());
+    let mut qe = QueryEngine::new(model);
+    assert!(qe.query(Query::TopObjects { s: n, r: 0, top: 3 }).is_err());
+    assert!(qe.query(Query::TopSubjects { o: 0, r: m, top: 3 }).is_err());
+    assert_eq!(qe.stats().queries, 0, "failed queries answer nothing");
+}
