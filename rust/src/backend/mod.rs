@@ -1,14 +1,58 @@
-//! Compute backends.
+//! Compute backends and the kernel plane's write-into contract.
 //!
 //! The paper swaps NumPy/OpenBLAS (CPU) for CuPy/cuBLAS (GPU) behind one
-//! array API; we do the same behind [`Backend`]: `Native` is the
-//! hand-written blocked GEMM in `tensor::dense`, `Xla` executes the
-//! AOT-compiled JAX/Pallas artifacts through PJRT (see `runtime`). Each
-//! virtual rank owns one backend instance (`&mut self` lets backends keep
-//! executable caches and workspaces without locks).
+//! array API; we do the same behind [`Backend`]: `Native` runs the
+//! packed microkernel GEMM in [`crate::tensor::kernel`], `Xla` executes
+//! the AOT-compiled JAX/Pallas artifacts through PJRT (see
+//! `crate::runtime`). Each virtual rank owns one backend instance
+//! (`&mut self` lets backends keep executable caches without locks).
+//!
+//! # The write-into API and workspace ownership
+//!
+//! The hot path runs on the `*_into` methods ([`Backend::matmul_into`],
+//! [`Backend::t_matmul_into`], [`Backend::matmul_t_into`],
+//! [`Backend::gram_into`]): the **caller** owns the output matrix and
+//! the backend only fills it. Outputs and every iteration temporary come
+//! from the per-rank [`Workspace`] arena — acquired once, reused by
+//! every subsequent iteration and job — so a steady-state MU iteration
+//! performs **zero matrix-buffer allocations**. (When a single GEMM is
+//! large enough to cross the kernel's internal threading threshold, its
+//! short-lived scoped workers still allocate their own pack scratch —
+//! inherent to spawning; the engine's virtual-rank topology keeps
+//! per-rank tiles below that threshold, and the scaling benches pin
+//! `DRESCAL_THREADS=1`.) Two layers make the guarantee hold:
+//!
+//! * the [`Workspace`] owns all `Mat`-level temporaries (`XA`, `AᵀXA`,
+//!   `AR`, numerator/denominator blocks, serve batch buffers) and counts
+//!   alloc-vs-reuse checkouts ([`WorkspaceStats`]), surfaced in job
+//!   reports and `ServeStats` so tests can *prove* the reuse;
+//! * the packed kernel owns its A/B pack panels in per-thread scratch
+//!   (see [`crate::tensor::kernel`]), sized once per thread.
+//!
+//! ## Contract
+//!
+//! `*_into` outputs must already have the product's exact shape (the
+//! kernels assert it); contents are overwritten, not accumulated. The
+//! allocating methods ([`Backend::matmul`] &c.) remain as thin compat
+//! shims — one `Workspace`-free allocation plus the `*_into` call — for
+//! cold paths and tests.
+//!
+//! ## How XLA fused paths coexist with native packing
+//!
+//! The XLA backend first offers each call to its artifact manifest
+//! (static shapes baked by `aot.py`); on a hit the PJRT result is copied
+//! into the caller's output buffer, on a miss it falls through to the
+//! same native packed kernels. The bigger fused artifacts
+//! ([`Backend::r_update_fused`], [`Backend::slice_segment`]) keep their
+//! allocating `Option` signatures: they return multiple artifact outputs
+//! at once and are XLA-only — the native path composes the same algebra
+//! from `*_into` calls on workspace buffers instead.
 
 pub mod native;
+pub mod workspace;
 pub mod xla;
+
+pub use workspace::{Workspace, WorkspaceStats};
 
 use crate::tensor::Mat;
 
@@ -17,16 +61,43 @@ use crate::tensor::Mat;
 /// Not `Send`: the PJRT handles in the XLA backend hold raw pointers, so
 /// each rank thread builds its own backend via [`BackendSpec::build`].
 pub trait Backend {
-    /// `A · B`
-    fn matmul(&mut self, a: &Mat, b: &Mat) -> Mat;
-    /// `Aᵀ · B`
-    fn t_matmul(&mut self, a: &Mat, b: &Mat) -> Mat;
-    /// `A · Bᵀ`
-    fn matmul_t(&mut self, a: &Mat, b: &Mat) -> Mat;
-    /// `AᵀA`
-    fn gram(&mut self, a: &Mat) -> Mat {
-        self.t_matmul(&a.clone(), a)
+    /// `out = A · B`. `out` must be `a.rows() × b.cols()`.
+    fn matmul_into(&mut self, a: &Mat, b: &Mat, out: &mut Mat);
+    /// `out = Aᵀ · B`. `out` must be `a.cols() × b.cols()`.
+    fn t_matmul_into(&mut self, a: &Mat, b: &Mat, out: &mut Mat);
+    /// `out = A · Bᵀ`. `out` must be `a.rows() × b.rows()`.
+    fn matmul_t_into(&mut self, a: &Mat, b: &Mat, out: &mut Mat);
+    /// `out = AᵀA` (exactly symmetric). `out` must be
+    /// `a.cols() × a.cols()`.
+    fn gram_into(&mut self, a: &Mat, out: &mut Mat);
+
+    /// `A · B`, allocating — compat shim over [`Backend::matmul_into`].
+    fn matmul(&mut self, a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows(), b.cols());
+        self.matmul_into(a, b, &mut out);
+        out
     }
+    /// `Aᵀ · B`, allocating — compat shim over
+    /// [`Backend::t_matmul_into`].
+    fn t_matmul(&mut self, a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.cols(), b.cols());
+        self.t_matmul_into(a, b, &mut out);
+        out
+    }
+    /// `A · Bᵀ`, allocating — compat shim over
+    /// [`Backend::matmul_t_into`].
+    fn matmul_t(&mut self, a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows(), b.rows());
+        self.matmul_t_into(a, b, &mut out);
+        out
+    }
+    /// `AᵀA`, allocating — compat shim over [`Backend::gram_into`].
+    fn gram(&mut self, a: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.cols(), a.cols());
+        self.gram_into(a, &mut out);
+        out
+    }
+
     /// Fused multiplicative update `target *= num / (deno + eps)`.
     fn mu_update(&mut self, target: &mut Mat, num: &Mat, deno: &Mat, eps: f32) {
         crate::tensor::ops::mu_update(target, num, deno, eps);
@@ -60,7 +131,7 @@ pub trait Backend {
 /// How to construct a backend on each rank thread.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub enum BackendSpec {
-    /// Hand-written blocked GEMM (works for every shape).
+    /// Hand-written packed microkernel GEMM (works for every shape).
     #[default]
     Native,
     /// PJRT execution of the AOT artifacts in the given directory, with

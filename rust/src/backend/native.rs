@@ -1,7 +1,9 @@
-//! Native backend: the blocked, thread-parallel GEMM from `tensor::dense`.
+//! Native backend: the packed microkernel GEMM from
+//! [`crate::tensor::kernel`], written straight into caller-owned
+//! (workspace) buffers.
 
 use super::Backend;
-use crate::tensor::Mat;
+use crate::tensor::{kernel, Mat};
 
 /// CPU backend with no external dependencies; handles every shape.
 #[derive(Default)]
@@ -14,20 +16,20 @@ impl NativeBackend {
 }
 
 impl Backend for NativeBackend {
-    fn matmul(&mut self, a: &Mat, b: &Mat) -> Mat {
-        a.matmul(b)
+    fn matmul_into(&mut self, a: &Mat, b: &Mat, out: &mut Mat) {
+        kernel::gemm_nn_into(a, b, out, false);
     }
 
-    fn t_matmul(&mut self, a: &Mat, b: &Mat) -> Mat {
-        a.t_matmul(b)
+    fn t_matmul_into(&mut self, a: &Mat, b: &Mat, out: &mut Mat) {
+        kernel::gemm_tn_into(a, b, out);
     }
 
-    fn matmul_t(&mut self, a: &Mat, b: &Mat) -> Mat {
-        a.matmul_t(b)
+    fn matmul_t_into(&mut self, a: &Mat, b: &Mat, out: &mut Mat) {
+        kernel::gemm_nt_into(a, b, out);
     }
 
-    fn gram(&mut self, a: &Mat) -> Mat {
-        a.gram()
+    fn gram_into(&mut self, a: &Mat, out: &mut Mat) {
+        kernel::gram_into(a, out);
     }
 
     fn name(&self) -> &'static str {
@@ -54,6 +56,37 @@ mod tests {
         assert_close(be.matmul_t(&a, &d).as_slice(), a.matmul_t(&d).as_slice(), 1e-6);
         assert_close(be.gram(&a).as_slice(), a.gram().as_slice(), 1e-6);
         assert_eq!(be.name(), "native");
+    }
+
+    #[test]
+    fn into_ops_overwrite_stale_contents() {
+        let mut rng = Rng::new(91);
+        let mut be = NativeBackend::new();
+        let a = Mat::random_uniform(9, 4, 0.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(4, 6, 0.0, 1.0, &mut rng);
+        // a reused workspace buffer arrives with stale values; the into
+        // contract is overwrite, not accumulate
+        let mut out = Mat::full(9, 6, 123.0);
+        be.matmul_into(&a, &b, &mut out);
+        assert_close(out.as_slice(), a.matmul(&b).as_slice(), 1e-6);
+        let mut g = Mat::full(4, 4, -7.0);
+        be.gram_into(&a, &mut g);
+        assert_close(g.as_slice(), a.gram().as_slice(), 1e-6);
+    }
+
+    #[test]
+    fn gram_never_clones_and_is_symmetric() {
+        let mut rng = Rng::new(92);
+        let mut be = NativeBackend::new();
+        let a = Mat::random_uniform(40, 8, 0.0, 1.0, &mut rng);
+        let g = be.gram(&a);
+        // exactly symmetric by construction (upper triangle mirrored)
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+        assert_close(g.as_slice(), a.t_matmul(&a).as_slice(), 1e-4);
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! The per-rank workspace arena behind the write-into [`super::Backend`]
+//! API.
+//!
+//! Every iteration temporary of the training hot loop (`XA`, `AᵀXA`,
+//! `AR`, the MU numerator/denominator blocks) and the serving scorer's
+//! batch buffers are checked out of a [`Workspace`] instead of freshly
+//! allocated. A checkout ([`Workspace::acquire`]) hands back a [`Mat`]
+//! built on a recycled buffer whenever one with enough capacity has
+//! been [`Workspace::release`]d before — so a steady-state iteration
+//! (or a repeated job on the engine's persistent rank pool) performs
+//! **zero** heap allocations for its matrix temporaries. Checkout
+//! contents are **unspecified** (recycled buffers keep their stale
+//! values, skipping a redundant memset): every consumer follows the
+//! write-into contract and fully overwrites before reading.
+//!
+//! The arena counts both outcomes ([`WorkspaceStats`]): `mat_allocs` is
+//! the number of checkouts that had to allocate a new buffer,
+//! `mat_reuses` the number served from the free list. Those counters are
+//! the proof mechanism for the zero-allocation guarantee: they surface
+//! per job in `Report` (training) and cumulatively in `ServeStats`
+//! (serving), and the kernel-plane tests assert `mat_allocs` stops
+//! growing after warm-up.
+//!
+//! Buffer matching is best-fit on capacity, so a workspace shared by
+//! mixed shapes (a model-selection sweep over several k, say) keeps the
+//! small k×k core buffers from pinning the large n×k panels.
+
+use crate::tensor::Mat;
+
+/// Checkout counters, cumulative over a workspace's lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// Checkouts that allocated a fresh buffer (free list empty or all
+    /// candidates too small).
+    pub mat_allocs: usize,
+    /// Checkouts served by recycling a released buffer — no allocation.
+    pub mat_reuses: usize,
+}
+
+impl WorkspaceStats {
+    /// Counter delta since an earlier snapshot of the same workspace.
+    pub fn since(self, earlier: WorkspaceStats) -> WorkspaceStats {
+        WorkspaceStats {
+            mat_allocs: self.mat_allocs - earlier.mat_allocs,
+            mat_reuses: self.mat_reuses - earlier.mat_reuses,
+        }
+    }
+
+    /// Elementwise sum (used to aggregate per-rank deltas into a job
+    /// report).
+    pub fn merged(self, other: WorkspaceStats) -> WorkspaceStats {
+        WorkspaceStats {
+            mat_allocs: self.mat_allocs + other.mat_allocs,
+            mat_reuses: self.mat_reuses + other.mat_reuses,
+        }
+    }
+}
+
+/// A buffer arena for matrix temporaries: acquire mats (contents
+/// unspecified — the write-into contract), release them back when done,
+/// and the allocations live on for the next checkout of a compatible
+/// shape.
+#[derive(Default)]
+pub struct Workspace {
+    /// Released backing buffers, unordered; checkout scans for the
+    /// best (smallest sufficient) capacity.
+    free: Vec<Vec<f32>>,
+    stats: WorkspaceStats,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Check out a `rows×cols` matrix with **unspecified contents**
+    /// (callers fully overwrite it — the write-into contract), recycling
+    /// the smallest released buffer whose capacity suffices and
+    /// allocating only when none does.
+    pub fn acquire(&mut self, rows: usize, cols: usize) -> Mat {
+        let need = rows * cols;
+        let mut best: Option<(usize, usize)> = None;
+        for (i, buf) in self.free.iter().enumerate() {
+            let cap = buf.capacity();
+            let better = match best {
+                None => true,
+                Some((_, best_cap)) => cap < best_cap,
+            };
+            if cap >= need && better {
+                best = Some((i, cap));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                self.stats.mat_reuses += 1;
+                Mat::from_buffer_raw(rows, cols, self.free.swap_remove(i))
+            }
+            None => {
+                self.stats.mat_allocs += 1;
+                Mat::zeros(rows, cols)
+            }
+        }
+    }
+
+    /// Return a matrix's buffer to the arena for future checkouts.
+    pub fn release(&mut self, m: Mat) {
+        self.free.push(m.into_vec());
+    }
+
+    /// Cumulative checkout counters.
+    pub fn stats(&self) -> WorkspaceStats {
+        self.stats
+    }
+
+    /// Number of buffers currently parked in the free list.
+    pub fn free_buffers(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_reuses_allocations() {
+        let mut ws = Workspace::new();
+        let a = ws.acquire(4, 5);
+        assert_eq!(a.shape(), (4, 5));
+        assert_eq!(ws.stats(), WorkspaceStats { mat_allocs: 1, mat_reuses: 0 });
+        ws.release(a);
+        // same shape comes back from the free list (contents are
+        // unspecified — consumers overwrite before reading)
+        let b = ws.acquire(4, 5);
+        assert_eq!(ws.stats(), WorkspaceStats { mat_allocs: 1, mat_reuses: 1 });
+        assert_eq!(b.shape(), (4, 5));
+        // a smaller checkout also reuses
+        ws.release(b);
+        let c = ws.acquire(2, 3);
+        assert_eq!(c.shape(), (2, 3));
+        assert_eq!(ws.stats().mat_reuses, 2);
+        // a larger one must allocate
+        let d = ws.acquire(10, 10);
+        assert_eq!(ws.stats().mat_allocs, 2);
+        ws.release(c);
+        ws.release(d);
+        assert_eq!(ws.free_buffers(), 2);
+    }
+
+    #[test]
+    fn best_fit_prefers_the_smallest_sufficient_buffer() {
+        let mut ws = Workspace::new();
+        let small = ws.acquire(2, 2);
+        let big = ws.acquire(100, 100);
+        ws.release(big);
+        ws.release(small);
+        // a tiny checkout must not consume the 100×100 buffer
+        let t = ws.acquire(2, 2);
+        ws.release(t);
+        let back = ws.acquire(100, 100);
+        assert_eq!(
+            ws.stats(),
+            WorkspaceStats { mat_allocs: 2, mat_reuses: 2 },
+            "both checkouts after warm-up must be reuses"
+        );
+        ws.release(back);
+    }
+
+    #[test]
+    fn stats_delta_and_merge() {
+        let a = WorkspaceStats { mat_allocs: 5, mat_reuses: 9 };
+        let b = WorkspaceStats { mat_allocs: 2, mat_reuses: 4 };
+        assert_eq!(a.since(b), WorkspaceStats { mat_allocs: 3, mat_reuses: 5 });
+        assert_eq!(b.merged(b), WorkspaceStats { mat_allocs: 4, mat_reuses: 8 });
+    }
+}

@@ -57,20 +57,32 @@ impl XlaBackend {
 }
 
 impl Backend for XlaBackend {
-    fn matmul(&mut self, a: &Mat, b: &Mat) -> Mat {
-        self.run("matmul", &[a, b]).unwrap_or_else(|| self.native.matmul(a, b))
+    fn matmul_into(&mut self, a: &Mat, b: &Mat, out: &mut Mat) {
+        match self.run("matmul", &[a, b]) {
+            Some(m) => out.copy_from(&m),
+            None => self.native.matmul_into(a, b, out),
+        }
     }
 
-    fn t_matmul(&mut self, a: &Mat, b: &Mat) -> Mat {
-        self.run("t_matmul", &[a, b]).unwrap_or_else(|| self.native.t_matmul(a, b))
+    fn t_matmul_into(&mut self, a: &Mat, b: &Mat, out: &mut Mat) {
+        match self.run("t_matmul", &[a, b]) {
+            Some(m) => out.copy_from(&m),
+            None => self.native.t_matmul_into(a, b, out),
+        }
     }
 
-    fn matmul_t(&mut self, a: &Mat, b: &Mat) -> Mat {
-        self.run("matmul_t", &[a, b]).unwrap_or_else(|| self.native.matmul_t(a, b))
+    fn matmul_t_into(&mut self, a: &Mat, b: &Mat, out: &mut Mat) {
+        match self.run("matmul_t", &[a, b]) {
+            Some(m) => out.copy_from(&m),
+            None => self.native.matmul_t_into(a, b, out),
+        }
     }
 
-    fn gram(&mut self, a: &Mat) -> Mat {
-        self.run("gram", &[a]).unwrap_or_else(|| self.native.gram(a))
+    fn gram_into(&mut self, a: &Mat, out: &mut Mat) {
+        match self.run("gram", &[a]) {
+            Some(m) => out.copy_from(&m),
+            None => self.native.gram_into(a, out),
+        }
     }
 
     fn r_update_fused(&mut self, r_t: &Mat, ata: &Mat, atxa: &Mat) -> Option<Mat> {

@@ -265,5 +265,7 @@ fn stats_since(now: ServeStats, earlier: ServeStats) -> ServeStats {
         cache_hits: now.cache_hits - earlier.cache_hits,
         batches: now.batches - earlier.batches,
         scored_candidates: now.scored_candidates - earlier.scored_candidates,
+        ws_allocs: now.ws_allocs - earlier.ws_allocs,
+        ws_reuses: now.ws_reuses - earlier.ws_reuses,
     }
 }

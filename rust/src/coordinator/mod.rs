@@ -13,7 +13,7 @@ pub mod metrics;
 
 use std::sync::Arc;
 
-use crate::backend::BackendSpec;
+use crate::backend::{BackendSpec, WorkspaceStats};
 use crate::comm::{Grid, Trace};
 use crate::engine::{Engine, EngineConfig};
 use crate::model_selection::{KScore, RescalkConfig};
@@ -147,6 +147,10 @@ pub struct RescalReport {
     pub traces: Vec<Trace>,
     /// Wall-clock of the distributed section.
     pub wall_seconds: f64,
+    /// Workspace checkout counters summed over ranks (delta for this
+    /// job): `mat_allocs == 0` on a warm pool proves the zero-allocation
+    /// steady state.
+    pub workspace: WorkspaceStats,
 }
 
 /// Gathered result of a model-selection job.
@@ -159,6 +163,9 @@ pub struct RescalkReport {
     pub r: Tensor3,
     pub traces: Vec<Trace>,
     pub wall_seconds: f64,
+    /// Workspace checkout counters summed over ranks (delta for this
+    /// job).
+    pub workspace: WorkspaceStats,
 }
 
 /// Run one distributed non-negative RESCAL factorization on a one-shot

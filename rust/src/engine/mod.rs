@@ -498,6 +498,7 @@ impl Engine {
         let wall_seconds = t0.elapsed().as_secs_f64();
         let mut blocks: Vec<(usize, usize, Mat)> = Vec::with_capacity(outs.len());
         let mut traces: Vec<Trace> = Vec::with_capacity(outs.len());
+        let mut workspace = crate::backend::WorkspaceStats::default();
         let mut first = None;
         for (rank, out) in outs.into_iter().enumerate() {
             match out {
@@ -507,6 +508,7 @@ impl Engine {
                         blocks.push((row, col, result.a_row.clone()));
                     }
                     traces.push(trace);
+                    workspace = workspace.merged(result.workspace);
                     if first.is_none() {
                         first = Some(result);
                     }
@@ -525,6 +527,7 @@ impl Engine {
             iters_run: first.iters_run,
             traces,
             wall_seconds,
+            workspace,
         })
     }
 
@@ -563,6 +566,11 @@ impl Engine {
             .map(|(row, col, r)| (*row, *col, r.a_opt_row.clone()))
             .collect();
         let a = gather_a(&self.grid, n, k_opt, &blocks);
+        let workspace = results
+            .iter()
+            .fold(crate::backend::WorkspaceStats::default(), |acc, (_, _, r)| {
+                acc.merged(r.workspace)
+            });
         let (_, _, first) = &results[0];
         self.jobs_completed += 1;
         Ok(RescalkReport {
@@ -572,6 +580,7 @@ impl Engine {
             r: first.r_opt.clone(),
             traces,
             wall_seconds,
+            workspace,
         })
     }
 }

@@ -23,7 +23,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::{JoinHandle, ThreadId};
 
-use crate::backend::BackendSpec;
+use crate::backend::{BackendSpec, Workspace};
 use crate::comm::grid::RankCtx;
 use crate::comm::Trace;
 use crate::engine::dataset::DatasetSpec;
@@ -228,6 +228,9 @@ fn worker_loop(
     // this rank's resident tiles, one per registered dataset — built once
     // at LoadDataset and reused by every subsequent job on the handle
     let mut datasets: HashMap<u64, crate::rescal::LocalTile> = HashMap::new();
+    // this rank's workspace arena: iteration temporaries persist across
+    // jobs, so a warm rank's factorizations allocate nothing
+    let mut ws = Workspace::new();
     while let Ok(job) = jobs.recv() {
         let mut trace = if trace_enabled { Trace::new() } else { Trace::disabled() };
         let reply = match job {
@@ -248,7 +251,8 @@ fn worker_loop(
                 None => RankOut::JobError(format!("dataset {dataset} is not resident")),
                 Some(tile) => {
                     let cfg = DistRescalConfig { opts, init, n };
-                    let result = rescal_rank(&ctx, tile, &cfg, backend.as_mut(), &mut trace);
+                    let result =
+                        rescal_rank(&ctx, tile, &cfg, backend.as_mut(), &mut ws, &mut trace);
                     RankOut::Factorize {
                         row: ctx.row,
                         col: ctx.col,
@@ -261,7 +265,7 @@ fn worker_loop(
                 None => RankOut::JobError(format!("dataset {dataset} is not resident")),
                 Some(tile) => {
                     let result =
-                        rescalk_rank(&ctx, tile, n, &cfg, backend.as_mut(), &mut trace);
+                        rescalk_rank(&ctx, tile, n, &cfg, backend.as_mut(), &mut ws, &mut trace);
                     RankOut::ModelSelect {
                         row: ctx.row,
                         col: ctx.col,

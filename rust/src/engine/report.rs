@@ -102,6 +102,7 @@ impl Report {
                 obj.insert("a".to_string(), mat_to_json(&r.a));
                 obj.insert("r".to_string(), tensor_to_json(&r.r));
                 obj.insert("traces".to_string(), traces_to_json(&r.traces));
+                obj.insert("workspace".to_string(), workspace_to_json(r.workspace));
             }
             Report::ModelSelect(r) => {
                 obj.insert("k_opt".to_string(), Json::Num(r.k_opt as f64));
@@ -113,6 +114,7 @@ impl Report {
                 obj.insert("a".to_string(), mat_to_json(&r.a));
                 obj.insert("r".to_string(), tensor_to_json(&r.r));
                 obj.insert("traces".to_string(), traces_to_json(&r.traces));
+                obj.insert("workspace".to_string(), workspace_to_json(r.workspace));
             }
             Report::Simulate(r) => {
                 obj.insert("scenario".to_string(), Json::Str(r.scenario.clone()));
@@ -143,6 +145,7 @@ impl Report {
                     v.get("traces").ok_or_else(|| err!("missing 'traces'"))?,
                 )?,
                 wall_seconds: get_f64(v, "wall_seconds")?,
+                workspace: workspace_from_json(v.get("workspace")),
             })),
             "model_select" => {
                 let scores = v
@@ -161,6 +164,7 @@ impl Report {
                         v.get("traces").ok_or_else(|| err!("missing 'traces'"))?,
                     )?,
                     wall_seconds: get_f64(v, "wall_seconds")?,
+                    workspace: workspace_from_json(v.get("workspace")),
                 }))
             }
             "simulate" => {
@@ -256,6 +260,28 @@ pub(crate) fn tensor_from_json(v: &Json) -> Result<Tensor3> {
         ));
     }
     Ok(Tensor3::from_slices(slices))
+}
+
+/// Workspace counters serialize as a small object; absent in archived
+/// pre-kernel-plane reports, so parsing treats a missing field as zeros.
+fn workspace_to_json(w: crate::backend::WorkspaceStats) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("mat_allocs".to_string(), Json::Num(w.mat_allocs as f64));
+    obj.insert("mat_reuses".to_string(), Json::Num(w.mat_reuses as f64));
+    Json::Obj(obj)
+}
+
+fn workspace_from_json(v: Option<&Json>) -> crate::backend::WorkspaceStats {
+    let mut w = crate::backend::WorkspaceStats::default();
+    if let Some(v) = v {
+        if let Some(x) = v.get("mat_allocs").and_then(|x| x.as_f64()) {
+            w.mat_allocs = x as usize;
+        }
+        if let Some(x) = v.get("mat_reuses").and_then(|x| x.as_f64()) {
+            w.mat_reuses = x as usize;
+        }
+    }
+    w
 }
 
 fn score_to_json(s: &KScore) -> Json {

@@ -132,10 +132,12 @@ fn cmd_run(cmd: FactorizeCmd) -> Result<()> {
     );
     let report = engine.factorize(data, &cmd.opts, cmd.seed)?;
     println!(
-        "done in {}: rel_error={:.4} ({} iterations)",
+        "done in {}: rel_error={:.4} ({} iterations, workspace {} allocs / {} reuses)",
         bench_util::fmt_secs(report.wall_seconds),
         report.rel_error,
-        report.iters_run
+        report.iters_run,
+        report.workspace.mat_allocs,
+        report.workspace.mat_reuses
     );
     if let Some(kt) = cmd.data.k_true() {
         println!("(ground-truth latent dimension of this dataset: {kt})");
@@ -252,10 +254,12 @@ fn cmd_exascale(cmd: ExascaleCmd) -> Result<()> {
 }
 
 /// Fixed-shape perf harness: factorize + model-select on dense and sparse
-/// synthetic datasets (all through the dataset data plane) plus the
-/// serving read path. Emits one JSON file so CI and the perf trajectory
-/// have a stable artifact; when a baseline exists, per-section deltas are
-/// printed and `--max-regression` turns a blow-up into a hard error.
+/// synthetic datasets (all through the dataset data plane), the serving
+/// read path, and the kernel plane (packed vs legacy GEMM at
+/// representative RESCAL and serve shapes). Emits one JSON file so CI and
+/// the perf trajectory have a stable artifact; when a baseline exists,
+/// per-section deltas are printed and `--max-regression` turns a blow-up
+/// into a hard error.
 fn cmd_bench(cmd: BenchCmd) -> Result<()> {
     let iters = cmd.iters;
     let mut engine = Engine::new(cmd.engine)?;
@@ -300,6 +304,43 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
     record("serve_topk_batched_n64_q256", point.wall_seconds);
     let point = bench_util::measure_serve_topk(&model, 1, 256, 10)?;
     record("serve_topk_unbatched_n64_q256", point.wall_seconds);
+
+    // kernel plane: the packed microkernel vs the legacy unpacked kernel
+    // at representative shapes. The large dense square is the headline
+    // number — the packed kernel must beat legacy there; both rows also
+    // feed the --max-regression gate so kernel regressions fail CI.
+    {
+        use drescal::rng::Rng;
+        use drescal::tensor::dense::{gemm, gemm_legacy};
+        use drescal::tensor::Mat;
+        let mut rng = Rng::new(77);
+        // large dense GEMM (512³)
+        let a = Mat::random_uniform(512, 512, 0.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(512, 512, 0.0, 1.0, &mut rng);
+        let mut c = Mat::zeros(512, 512);
+        let packed = bench_util::time_fn(1, 3, || gemm(&a, &b, &mut c, false));
+        record("kernel_packed_gemm_512", packed.median);
+        let legacy = bench_util::time_fn(1, 3, || gemm_legacy(&a, &b, &mut c, false));
+        record("kernel_legacy_gemm_512", legacy.median);
+        println!(
+            "  packed kernel speedup at 512^3: {:.2}x",
+            legacy.median / packed.median.max(1e-12)
+        );
+        // RESCAL training shape: X_t·A (n×n · n×k)
+        let x = Mat::random_uniform(768, 768, 0.0, 1.0, &mut rng);
+        let f = Mat::random_uniform(768, 16, 0.0, 1.0, &mut rng);
+        let mut xa = Mat::zeros(768, 16);
+        let st = bench_util::time_fn(1, 3, || gemm(&x, &f, &mut xa, false));
+        record("kernel_packed_xa_n768_k16", st.median);
+        // batched serve shape: B×k · (n×k)ᵀ completion scoring
+        let q = Mat::random_uniform(64, 16, 0.0, 1.0, &mut rng);
+        let entities = Mat::random_uniform(8192, 16, 0.0, 1.0, &mut rng);
+        let mut scores = Mat::zeros(64, 8192);
+        let st = bench_util::time_fn(1, 3, || {
+            drescal::tensor::kernel::gemm_nt_into(&q, &entities, &mut scores)
+        });
+        record("kernel_packed_serve_b64_n8192", st.median);
+    }
 
     let mut obj = BTreeMap::new();
     obj.insert("bench".to_string(), Json::Str("rescal".to_string()));

@@ -7,7 +7,7 @@
 //! unperturbed tensor, and evaluate the reconstruction error. The scores
 //! feed [`super::selection::select_k`].
 
-use crate::backend::Backend;
+use crate::backend::{Backend, Workspace, WorkspaceStats};
 use crate::comm::grid::RankCtx;
 use crate::comm::Trace;
 use crate::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
@@ -115,6 +115,9 @@ pub struct RescalkResult {
     pub a_opt_row: Mat,
     /// Robust core for k_opt (replicated).
     pub r_opt: Tensor3,
+    /// Workspace checkout counters across the whole sweep (delta): a
+    /// warm rank re-running the same sweep reports zero allocs.
+    pub workspace: WorkspaceStats,
 }
 
 /// Run the full model-selection sweep on this rank's tile. `n` is the
@@ -125,10 +128,12 @@ pub fn rescalk_rank(
     n: usize,
     cfg: &RescalkConfig,
     backend: &mut dyn Backend,
+    ws: &mut Workspace,
     trace: &mut Trace,
 ) -> RescalkResult {
     assert!(cfg.k_min >= 1 && cfg.k_min <= cfg.k_max);
     assert!(cfg.perturbations >= 1);
+    let ws_before = ws.stats();
     let mut scores = Vec::new();
     let mut per_k: Vec<(Mat, Tensor3)> = Vec::new();
     for k in cfg.k_min..=cfg.k_max {
@@ -170,7 +175,7 @@ pub fn rescalk_rank(
                 init,
                 n,
             };
-            let out = rescal_rank(ctx, &perturbed, &dist_cfg, backend, trace);
+            let out = rescal_rank(ctx, &perturbed, &dist_cfg, backend, ws, trace);
             stack.push(out.a_row);
         }
         // ---- align solutions (Alg 1 line 6, Alg 5) ----
@@ -187,7 +192,7 @@ pub fn rescalk_rank(
     let k_opt = select_k(&scores, cfg.rule).expect("non-empty sweep");
     let idx = k_opt - cfg.k_min;
     let (a_opt_row, r_opt) = per_k.swap_remove(idx);
-    RescalkResult { scores, k_opt, a_opt_row, r_opt }
+    RescalkResult { scores, k_opt, a_opt_row, r_opt, workspace: ws.stats().since(ws_before) }
 }
 
 /// Distributed relative reconstruction error for explicit factors.
@@ -242,8 +247,9 @@ mod tests {
             let (c0, c1) = ctx.grid.chunk(24, ctx.col);
             let tile = LocalTile::Dense(x.tile(r0, r1, c0, c1));
             let mut backend = NativeBackend::new();
+            let mut ws = Workspace::new();
             let mut trace = Trace::disabled();
-            rescalk_rank(&ctx, &tile, 24, &cfg, &mut backend, &mut trace)
+            rescalk_rank(&ctx, &tile, 24, &cfg, &mut backend, &mut ws, &mut trace)
         });
         for res in &results {
             assert_eq!(res.k_opt, 3, "scores: {:?}", res.scores);
@@ -276,8 +282,9 @@ mod tests {
         let results = run_on_grid(1, |ctx| {
             let tile = LocalTile::Dense(x.clone());
             let mut backend = NativeBackend::new();
+            let mut ws = Workspace::new();
             let mut trace = Trace::disabled();
-            rescalk_rank(&ctx, &tile, 20, &cfg, &mut backend, &mut trace)
+            rescalk_rank(&ctx, &tile, 20, &cfg, &mut backend, &mut ws, &mut trace)
         });
         let scores = &results[0].scores;
         // error at k>=2 well below error at k=1

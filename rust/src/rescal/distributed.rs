@@ -20,10 +20,10 @@
 
 use std::sync::Arc;
 
-use super::distmm::{all_reduce_mat, broadcast_mat, dist_mm};
+use super::distmm::{all_reduce_mat, broadcast_mat};
 use super::local::LocalTile;
 use super::RescalOptions;
-use crate::backend::Backend;
+use crate::backend::{Backend, Workspace, WorkspaceStats};
 use crate::comm::grid::RankCtx;
 use crate::comm::{CommOp, Trace};
 use crate::rng::Rng;
@@ -95,21 +95,123 @@ pub struct RankResult {
     /// Final relative reconstruction error (identical on all ranks).
     pub rel_error: f32,
     pub iters_run: usize,
+    /// Workspace checkout counters for this job (delta, not cumulative):
+    /// `mat_allocs` is 0 on a warm rank — every temporary was arena
+    /// reuse.
+    pub workspace: WorkspaceStats,
+}
+
+/// The iteration temporaries of one factorization, all checked out of
+/// the per-rank [`Workspace`] **once** — the MU loop itself performs
+/// zero workspace checkouts, so steady-state iterations are
+/// allocation-free (and on a warm rank even these checkouts are arena
+/// reuses, which [`RankResult::workspace`] proves).
+struct IterBufs {
+    /// `AᵀA` (k×k, replicated).
+    ata: Mat,
+    /// `X_t·A` (rows×k).
+    xa: Mat,
+    /// `AᵀX_tA` (k×k).
+    atxa: Mat,
+    /// `R_t·AᵀA` (k×k).
+    rata: Mat,
+    /// `AᵀA·R_t·AᵀA` (k×k) — the R-update denominator.
+    deno_r: Mat,
+    /// `X_tA·R_tᵀ` (rows×k).
+    xart: Mat,
+    /// `A·R_t` (rows×k).
+    ar: Mat,
+    /// `AᵀA·R_t` (k×k).
+    atar: Mat,
+    /// `A·R_tᵀ` (rows×k).
+    art: Mat,
+    /// `A·R_tᵀ·AᵀA·R_t` (rows×k).
+    artatar: Mat,
+    /// `AᵀA·R_tᵀ` (k×k).
+    atart: Mat,
+    /// `A·R_t·AᵀA·R_tᵀ` (rows×k).
+    aratart: Mat,
+    /// A-update numerator accumulator (rows×k).
+    num_a: Mat,
+    /// A-update denominator accumulator (rows×k).
+    deno_a: Mat,
+    /// `X_tᵀ·AR` partial (cols×k).
+    xtar: Mat,
+    /// Diagonal-broadcast row block of XᵀAR (rows×k).
+    xtar_row: Mat,
+}
+
+impl IterBufs {
+    fn acquire(ws: &mut Workspace, rows: usize, cols: usize, k: usize) -> IterBufs {
+        IterBufs {
+            ata: ws.acquire(k, k),
+            xa: ws.acquire(rows, k),
+            atxa: ws.acquire(k, k),
+            rata: ws.acquire(k, k),
+            deno_r: ws.acquire(k, k),
+            xart: ws.acquire(rows, k),
+            ar: ws.acquire(rows, k),
+            atar: ws.acquire(k, k),
+            art: ws.acquire(rows, k),
+            artatar: ws.acquire(rows, k),
+            atart: ws.acquire(k, k),
+            aratart: ws.acquire(rows, k),
+            num_a: ws.acquire(rows, k),
+            deno_a: ws.acquire(rows, k),
+            xtar: ws.acquire(cols, k),
+            xtar_row: ws.acquire(rows, k),
+        }
+    }
+
+    fn release(self, ws: &mut Workspace) {
+        let IterBufs {
+            ata,
+            xa,
+            atxa,
+            rata,
+            deno_r,
+            xart,
+            ar,
+            atar,
+            art,
+            artatar,
+            atart,
+            aratart,
+            num_a,
+            deno_a,
+            xtar,
+            xtar_row,
+        } = self;
+        for m in [
+            ata, xa, atxa, rata, deno_r, xart, ar, atar, art, artatar, atart, aratart,
+            num_a, deno_a, xtar, xtar_row,
+        ] {
+            ws.release(m);
+        }
+    }
 }
 
 /// Run distributed RESCAL on this rank's tile. All ranks must call this
 /// with consistent arguments; collectives keep them in lockstep.
+///
+/// `ws` is the rank's persistent workspace arena: every iteration
+/// temporary is checked out of it once before the MU loop, so the loop
+/// itself performs zero heap allocations — and on a warm rank (second
+/// job onward) even the checkouts are reuses, which
+/// [`RankResult::workspace`] counter-asserts.
 pub fn rescal_rank(
     ctx: &RankCtx,
     tile: &LocalTile,
     cfg: &DistRescalConfig,
     backend: &mut dyn Backend,
+    ws: &mut Workspace,
     trace: &mut Trace,
 ) -> RankResult {
     let n = cfg.n;
     let k = cfg.opts.k;
     let m = tile.m();
     let eps = cfg.opts.eps;
+    let ws_before = ws.stats();
     let (mut a_row, mut a_col, mut r) = cfg.init.materialize(ctx, n, k, m);
     assert_eq!(a_row.rows(), tile.rows(), "A_row/tile row mismatch");
     assert_eq!(a_col.rows(), tile.cols(), "A_col/tile col mismatch");
@@ -119,98 +221,116 @@ pub fn rescal_rank(
     ctx.world.all_reduce_sum(norm_buf.as_mut_slice());
     let x_norm_sq = norm_buf[(0, 0)] as f64;
 
+    let rows = a_row.rows();
+    let cols = a_col.rows();
+    let mut bufs = IterBufs::acquire(ws, rows, cols, k);
+
     let mut iters_run = 0;
     for iter in 0..cfg.opts.max_iters {
         iters_run = iter + 1;
         // ---- AᵀA, replicated (Alg 3 line 3) ----
-        let ata_partial = trace.record(CommOp::GramMul, a_col.as_slice().len() * 4, || {
-            backend.gram(&a_col)
+        trace.record(CommOp::GramMul, a_col.as_slice().len() * 4, || {
+            backend.gram_into(&a_col, &mut bufs.ata)
         });
-        let ata = dist_mm(&ctx.row_comm, ata_partial, CommOp::RowReduce, trace);
+        all_reduce_mat(&ctx.row_comm, &mut bufs.ata, CommOp::RowReduce, trace);
 
-        let mut num_a = Mat::zeros(a_row.rows(), k);
-        let mut deno_a = Mat::zeros(a_row.rows(), k);
+        bufs.num_a.clear();
+        bufs.deno_a.clear();
         for t in 0..m {
             // ---- XA (Alg 3 line 5) ----
-            let xa_partial = tile.xa(t, &a_col, backend, trace);
-            let xa = dist_mm(&ctx.row_comm, xa_partial, CommOp::RowReduce, trace);
+            tile.xa_into(t, &a_col, &mut bufs.xa, backend, trace);
+            all_reduce_mat(&ctx.row_comm, &mut bufs.xa, CommOp::RowReduce, trace);
             // ---- AᵀXA (line 6) ----
-            let atxa_partial = trace.record(CommOp::MatrixMul, 0, || backend.t_matmul(&a_row, &xa));
-            let atxa = dist_mm(&ctx.col_comm, atxa_partial, CommOp::ColumnReduce, trace);
+            trace.record(CommOp::MatrixMul, 0, || {
+                backend.t_matmul_into(&a_row, &bufs.xa, &mut bufs.atxa)
+            });
+            all_reduce_mat(&ctx.col_comm, &mut bufs.atxa, CommOp::ColumnReduce, trace);
             // ---- local slice segment: R update + A-update terms (lines
             // 7-11, 15-19). One fused artifact on the XLA backend (§Perf);
-            // composed from generic ops otherwise. ----
+            // composed from write-into ops on the workspace otherwise. ----
             let fused = trace.record(CommOp::MatrixMul, 0, || {
-                backend.slice_segment(r.slice(t), &ata, &atxa, &xa, &a_row)
+                backend.slice_segment(r.slice(t), &bufs.ata, &bufs.atxa, &bufs.xa, &a_row)
             });
-            let (xart, ar, deno) = match fused {
+            // the fused arm owns its artifact-returned AR; the composed
+            // arm writes AR into the workspace buffer — either way the
+            // XᵀAR product below reads it without copying
+            let fused_ar = match fused {
                 Some((r_new, xart, ar, deno)) => {
                     *r.slice_mut(t) = r_new;
-                    (xart, ar, deno)
+                    bufs.num_a.add_assign(&xart);
+                    bufs.deno_a.add_assign(&deno);
+                    Some(ar)
                 }
                 None => {
                     // R update (lines 7-9), possibly via the smaller fused
                     // r_update kernel
                     let r_fused = trace.record(CommOp::MatrixMul, 0, || {
-                        backend.r_update_fused(r.slice(t), &ata, &atxa)
+                        backend.r_update_fused(r.slice(t), &bufs.ata, &bufs.atxa)
                     });
                     match r_fused {
                         Some(new_rt) => *r.slice_mut(t) = new_rt,
                         None => {
-                            let deno_r = {
-                                let rt = r.slice(t);
-                                let rata = trace
-                                    .record(CommOp::MatrixMul, 0, || backend.matmul(rt, &ata));
-                                trace.record(CommOp::MatrixMul, 0, || {
-                                    backend.matmul(&ata, &rata)
-                                })
-                            };
-                            mu_update(r.slice_mut(t), &atxa, &deno_r, eps);
+                            trace.record(CommOp::MatrixMul, 0, || {
+                                backend.matmul_into(r.slice(t), &bufs.ata, &mut bufs.rata)
+                            });
+                            trace.record(CommOp::MatrixMul, 0, || {
+                                backend.matmul_into(&bufs.ata, &bufs.rata, &mut bufs.deno_r)
+                            });
+                            mu_update(r.slice_mut(t), &bufs.atxa, &bufs.deno_r, eps);
                         }
                     }
-                    let rt = r.slice(t).clone();
+                    let rt = r.slice(t);
                     // A-update numerator terms (lines 10-11)
-                    let xart =
-                        trace.record(CommOp::MatrixMul, 0, || backend.matmul_t(&xa, &rt));
-                    let ar = trace.record(CommOp::MatrixMul, 0, || backend.matmul(&a_row, &rt));
+                    trace.record(CommOp::MatrixMul, 0, || {
+                        backend.matmul_t_into(&bufs.xa, rt, &mut bufs.xart)
+                    });
+                    trace.record(CommOp::MatrixMul, 0, || {
+                        backend.matmul_into(&a_row, rt, &mut bufs.ar)
+                    });
                     // A-update denominator (lines 15-20)
-                    let atar = trace.record(CommOp::MatrixMul, 0, || backend.matmul(&ata, &rt));
-                    let art =
-                        trace.record(CommOp::MatrixMul, 0, || backend.matmul_t(&a_row, &rt));
-                    let artatar =
-                        trace.record(CommOp::MatrixMul, 0, || backend.matmul(&art, &atar));
-                    let atart =
-                        trace.record(CommOp::MatrixMul, 0, || backend.matmul_t(&ata, &rt));
-                    let aratart =
-                        trace.record(CommOp::MatrixMul, 0, || backend.matmul(&ar, &atart));
-                    let mut deno = artatar;
-                    deno.add_assign(&aratart);
-                    (xart, ar, deno)
+                    trace.record(CommOp::MatrixMul, 0, || {
+                        backend.matmul_into(&bufs.ata, rt, &mut bufs.atar)
+                    });
+                    trace.record(CommOp::MatrixMul, 0, || {
+                        backend.matmul_t_into(&a_row, rt, &mut bufs.art)
+                    });
+                    trace.record(CommOp::MatrixMul, 0, || {
+                        backend.matmul_into(&bufs.art, &bufs.atar, &mut bufs.artatar)
+                    });
+                    trace.record(CommOp::MatrixMul, 0, || {
+                        backend.matmul_t_into(&bufs.ata, rt, &mut bufs.atart)
+                    });
+                    trace.record(CommOp::MatrixMul, 0, || {
+                        backend.matmul_into(&bufs.ar, &bufs.atart, &mut bufs.aratart)
+                    });
+                    bufs.num_a.add_assign(&bufs.xart);
+                    bufs.deno_a.add_assign(&bufs.artatar);
+                    bufs.deno_a.add_assign(&bufs.aratart);
+                    None
                 }
             };
+            let ar = fused_ar.as_ref().unwrap_or(&bufs.ar);
             // ---- XᵀAR: tile product + column reduce + diagonal row
             // broadcast (lines 12-13) ----
-            let xtar_partial = tile.xta(t, &ar, backend, trace);
-            let xtar_col = dist_mm(&ctx.col_comm, xtar_partial, CommOp::ColumnReduce, trace);
+            tile.xta_into(t, ar, &mut bufs.xtar, backend, trace);
+            all_reduce_mat(&ctx.col_comm, &mut bufs.xtar, CommOp::ColumnReduce, trace);
             // row broadcast from the diagonal rank: member index within the
             // row comm equals the grid column, and the diagonal of row i is
-            // at column i.
-            let mut xtar_row = if ctx.is_diagonal() {
-                xtar_col
-            } else {
-                Mat::zeros(a_row.rows(), k)
-            };
-            broadcast_mat(&ctx.row_comm, ctx.row, &mut xtar_row, CommOp::RowBroadcast, trace);
-            num_a.add_assign(&xart);
-            num_a.add_assign(&xtar_row);
-            deno_a.add_assign(&deno);
+            // at column i. Off-diagonal ranks are pure receivers — the
+            // broadcast overwrites their buffer in place.
+            if ctx.is_diagonal() {
+                bufs.xtar_row.copy_from(&bufs.xtar);
+            }
+            broadcast_mat(&ctx.row_comm, ctx.row, &mut bufs.xtar_row, CommOp::RowBroadcast, trace);
+            bufs.num_a.add_assign(&bufs.xtar_row);
         }
         // ---- A update (line 22) ----
-        mu_update(&mut a_row, &num_a, &deno_a, eps);
+        mu_update(&mut a_row, &bufs.num_a, &bufs.deno_a, eps);
         // ---- refresh A^(j): column broadcast from the diagonal (line 23) ----
-        let mut a_col_new = if ctx.is_diagonal() { a_row.clone() } else { a_col };
-        broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col_new, CommOp::ColumnBroadcast, trace);
-        a_col = a_col_new;
+        if ctx.is_diagonal() {
+            a_col.copy_from(&a_row);
+        }
+        broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col, CommOp::ColumnBroadcast, trace);
 
         // optional convergence check
         if cfg.opts.err_every > 0 && (iter + 1) % cfg.opts.err_every == 0 {
@@ -220,6 +340,7 @@ pub fn rescal_rank(
             }
         }
     }
+    bufs.release(ws);
 
     // ---- final normalization: global column norms via column all_reduce ----
     let mut sq = Mat::from_vec(
@@ -248,11 +369,18 @@ pub fn rescal_rank(
         rescale_core(r.slice_mut(t), &scales);
     }
     // refresh a_col one last time for the error evaluation
-    let mut a_col_new = if ctx.is_diagonal() { a_row.clone() } else { a_col };
-    broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col_new, CommOp::ColumnBroadcast, trace);
-    a_col = a_col_new;
+    if ctx.is_diagonal() {
+        a_col.copy_from(&a_row);
+    }
+    broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col, CommOp::ColumnBroadcast, trace);
     let rel = distributed_rel_error(ctx, tile, &a_row, &a_col, &r, x_norm_sq, backend, trace);
-    RankResult { a_row, r, rel_error: rel, iters_run }
+    RankResult {
+        a_row,
+        r,
+        rel_error: rel,
+        iters_run,
+        workspace: ws.stats().since(ws_before),
+    }
 }
 
 /// ‖X − A R Aᵀ‖_F / ‖X‖_F computed from the local tiles (identical on all
@@ -302,8 +430,9 @@ mod tests {
             let tile = LocalTile::Dense(x.tile(r0, r1, c0, c1));
             let cfg = DistRescalConfig { opts: opts.clone(), init: init.clone(), n };
             let mut backend = NativeBackend::new();
+            let mut ws = Workspace::new();
             let mut trace = Trace::disabled();
-            let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+            let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
             (ctx.row, ctx.col, out)
         });
         // gather A blocks from the diagonal ranks
@@ -415,8 +544,9 @@ mod tests {
                     n,
                 };
                 let mut backend = NativeBackend::new();
+                let mut ws = Workspace::new();
                 let mut trace = Trace::new();
-                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
                 (out, trace.bytes(CommOp::MatrixMulSparse))
             })
         };
@@ -443,8 +573,9 @@ mod tests {
                 n: 12,
             };
             let mut backend = NativeBackend::new();
+            let mut ws = Workspace::new();
             let mut trace = Trace::new();
-            rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+            rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
             trace
         });
         for trace in results {

@@ -58,32 +58,65 @@ impl LocalTile {
         matches!(self, LocalTile::Sparse(_))
     }
 
-    /// `X_t · B` (rows×k), traced as dense or sparse matmul.
-    pub fn xa(&self, t: usize, b: &Mat, backend: &mut dyn Backend, trace: &mut Trace) -> Mat {
+    /// `X_t · B` (rows×k) written into `out`, traced as dense or sparse
+    /// matmul. `out` comes from the caller's workspace — the hot loop
+    /// reuses one buffer across every slice and iteration.
+    pub fn xa_into(
+        &self,
+        t: usize,
+        b: &Mat,
+        out: &mut Mat,
+        backend: &mut dyn Backend,
+        trace: &mut Trace,
+    ) {
         match self {
             LocalTile::Dense(x) => {
                 let bytes = x.n1() * x.n2() * 4;
-                trace.record(CommOp::MatrixMul, bytes, || backend.matmul(x.slice(t), b))
+                trace.record(CommOp::MatrixMul, bytes, || backend.matmul_into(x.slice(t), b, out))
             }
             LocalTile::Sparse(s) => {
                 let bytes = s[t].nnz() * 8;
-                trace.record(CommOp::MatrixMulSparse, bytes, || s[t].matmul_dense(b))
+                trace.record(CommOp::MatrixMulSparse, bytes, || s[t].matmul_dense_into(b, out))
             }
         }
     }
 
-    /// `X_tᵀ · B` (cols×k).
-    pub fn xta(&self, t: usize, b: &Mat, backend: &mut dyn Backend, trace: &mut Trace) -> Mat {
+    /// `X_tᵀ · B` (cols×k) written into `out`.
+    pub fn xta_into(
+        &self,
+        t: usize,
+        b: &Mat,
+        out: &mut Mat,
+        backend: &mut dyn Backend,
+        trace: &mut Trace,
+    ) {
         match self {
             LocalTile::Dense(x) => {
                 let bytes = x.n1() * x.n2() * 4;
-                trace.record(CommOp::MatrixMul, bytes, || backend.t_matmul(x.slice(t), b))
+                trace
+                    .record(CommOp::MatrixMul, bytes, || backend.t_matmul_into(x.slice(t), b, out))
             }
             LocalTile::Sparse(s) => {
                 let bytes = s[t].nnz() * 8;
-                trace.record(CommOp::MatrixMulSparse, bytes, || s[t].t_matmul_dense(b))
+                trace.record(CommOp::MatrixMulSparse, bytes, || s[t].t_matmul_dense_into(b, out))
             }
         }
+    }
+
+    /// `X_t · B` (rows×k), allocating — compat shim over
+    /// [`LocalTile::xa_into`].
+    pub fn xa(&self, t: usize, b: &Mat, backend: &mut dyn Backend, trace: &mut Trace) -> Mat {
+        let mut out = Mat::zeros(self.rows(), b.cols());
+        self.xa_into(t, b, &mut out, backend, trace);
+        out
+    }
+
+    /// `X_tᵀ · B` (cols×k), allocating — compat shim over
+    /// [`LocalTile::xta_into`].
+    pub fn xta(&self, t: usize, b: &Mat, backend: &mut dyn Backend, trace: &mut Trace) -> Mat {
+        let mut out = Mat::zeros(self.cols(), b.cols());
+        self.xta_into(t, b, &mut out, backend, trace);
+        out
     }
 
     /// Squared Frobenius norm of the local tile.
@@ -118,19 +151,19 @@ impl LocalTile {
                 acc
             }
             LocalTile::Sparse(s) => {
-                // ‖X − Rec‖² over the dense reconstruction: visit all cells
-                // via Rec and patch the sparse entries.
+                // ‖X − Rec‖² over the dense reconstruction: Σ rec² over
+                // all cells, then patch the stored entries by walking the
+                // CSR row pointers directly — the tile is never
+                // densified (it used to be, per slice × iteration ×
+                // perturbation).
                 let xt = &s[t];
                 let mut acc: f64 =
                     rec.as_slice().iter().map(|&v| (v as f64) * (v as f64)).sum();
-                let dense = xt.to_dense();
-                for i in 0..dense.rows() {
-                    for j in 0..dense.cols() {
-                        let x = dense[(i, j)];
-                        if x != 0.0 {
-                            let r = rec[(i, j)];
-                            acc += ((x - r) as f64).powi(2) - (r as f64).powi(2);
-                        }
+                for i in 0..xt.rows() {
+                    let (cols, vals) = xt.row_entries(i);
+                    for (&j, &x) in cols.iter().zip(vals) {
+                        let r = rec[(i, j)];
+                        acc += ((x - r) as f64).powi(2) - (r as f64).powi(2);
                     }
                 }
                 acc

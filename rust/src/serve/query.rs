@@ -22,6 +22,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 
+use crate::backend::Workspace;
 use crate::error::Result;
 use crate::json::Json;
 
@@ -89,6 +90,12 @@ pub struct ServeStats {
     /// Candidate entities scored (n per completion anchor, 1 per
     /// pointwise score). Unchanged by cache hits.
     pub scored_candidates: usize,
+    /// Workspace checkouts that allocated a fresh GEMM buffer. Stops
+    /// growing once the arena is warm — the serving analogue of the
+    /// training plane's zero-allocation steady state.
+    pub ws_allocs: usize,
+    /// Workspace checkouts served by arena reuse (no allocation).
+    pub ws_reuses: usize,
 }
 
 /// How many answers the LRU cache keeps by default.
@@ -110,6 +117,9 @@ pub struct QueryEngine {
     clock: u64,
     capacity: usize,
     stats: ServeStats,
+    /// Arena for the batched-GEMM temporaries (anchor block + score
+    /// matrix): steady-state batches are served entirely from reuse.
+    ws: Workspace,
 }
 
 impl QueryEngine {
@@ -127,6 +137,7 @@ impl QueryEngine {
             clock: 0,
             capacity,
             stats: ServeStats::default(),
+            ws: Workspace::new(),
         }
     }
 
@@ -203,7 +214,8 @@ impl QueryEngine {
                     anchors.len() - 1
                 });
             }
-            let per_anchor = score::complete_batch(&self.model, dir, rel, &anchors, top)?;
+            let per_anchor =
+                score::complete_batch(&self.model, dir, rel, &anchors, top, &mut self.ws)?;
             self.stats.batches += 1;
             self.stats.scored_candidates += anchors.len() * self.model.n();
             for &slot in &slots {
@@ -214,6 +226,9 @@ impl QueryEngine {
             }
         }
 
+        let w = self.ws.stats();
+        self.stats.ws_allocs = w.mat_allocs;
+        self.stats.ws_reuses = w.mat_reuses;
         Ok(answers
             .into_iter()
             .map(|a| a.expect("every query slot answered"))
@@ -308,6 +323,24 @@ mod tests {
         // anchors scored: {0,1} + {2} + {4} = 4 anchors × 10 candidates
         assert_eq!(stats.scored_candidates, 40);
         assert_eq!(stats.queries, 5);
+    }
+
+    #[test]
+    fn steady_state_batches_stop_allocating() {
+        let mut qe = engine(32, 0); // cache off: every batch runs the GEMM
+        let batch = [
+            Query::TopObjects { s: 0, r: 0, top: 4 },
+            Query::TopObjects { s: 3, r: 0, top: 4 },
+        ];
+        qe.submit_batch(&batch).unwrap();
+        let warm = qe.stats();
+        assert!(warm.ws_allocs > 0, "first batch populates the arena");
+        for _ in 0..4 {
+            qe.submit_batch(&batch).unwrap();
+        }
+        let steady = qe.stats();
+        assert_eq!(steady.ws_allocs, warm.ws_allocs, "warm batches allocate nothing");
+        assert!(steady.ws_reuses > warm.ws_reuses);
     }
 
     #[test]

@@ -18,10 +18,11 @@
 
 use std::cmp::Ordering;
 
+use crate::backend::Workspace;
 use crate::bail;
 use crate::error::Result;
 use crate::tensor::dense::num_threads;
-use crate::tensor::Mat;
+use crate::tensor::kernel;
 
 use super::model::FactorModel;
 
@@ -87,16 +88,19 @@ fn check_relation(model: &FactorModel, rel: usize) -> Result<()> {
 /// Batched completion: for each anchor entity, rank all n candidates on
 /// relation `rel` and return the top `top` hits (deterministic order).
 ///
-/// All anchors share one `B×k · k×n` GEMM over the cached projection;
-/// the per-row selection then runs threaded when the candidate count
-/// crosses [`SELECT_PAR_THRESHOLD`]. Returns one hit list per anchor,
-/// anchor order preserved.
+/// All anchors share one `B×k · k×n` GEMM over the cached projection,
+/// with the anchor block and the score matrix checked out of `ws` — a
+/// query engine serving a steady stream of same-sized batches allocates
+/// no GEMM temporaries after warm-up. The per-row selection then runs
+/// threaded when the candidate count crosses [`SELECT_PAR_THRESHOLD`].
+/// Returns one hit list per anchor, anchor order preserved.
 pub fn complete_batch(
     model: &FactorModel,
     dir: Direction,
     rel: usize,
     anchors: &[usize],
     top: usize,
+    ws: &mut Workspace,
 ) -> Result<Vec<Vec<Hit>>> {
     check_relation(model, rel)?;
     for &anchor in anchors {
@@ -108,13 +112,18 @@ pub fn complete_batch(
     let proj = model.projection(dir, rel);
     let k = model.k();
     // gather the anchor rows of the projection into one B×k block
-    let mut q = Mat::zeros(anchors.len(), k);
+    let mut q = ws.acquire(anchors.len(), k);
     for (i, &anchor) in anchors.iter().enumerate() {
         q.row_mut(i).copy_from_slice(proj.row(anchor));
     }
-    // one GEMM scores every candidate for every anchor: B×k · (n×k)ᵀ
-    let scores = q.matmul_t(model.a());
-    Ok((0..anchors.len()).map(|i| top_k(scores.row(i), top)).collect())
+    // one GEMM scores every candidate for every anchor: B×k · (n×k)ᵀ,
+    // straight into the workspace score buffer on the packed kernel
+    let mut scores = ws.acquire(anchors.len(), model.n());
+    kernel::gemm_nt_into(&q, model.a(), &mut scores);
+    let hits = (0..anchors.len()).map(|i| top_k(scores.row(i), top)).collect();
+    ws.release(q);
+    ws.release(scores);
+    Ok(hits)
 }
 
 /// Candidate count above which top-k selection splits across threads.
@@ -242,7 +251,7 @@ mod tests {
     use super::*;
     use crate::rng::Rng;
     use crate::serve::model::Provenance;
-    use crate::tensor::Tensor3;
+    use crate::tensor::{Mat, Tensor3};
 
     fn model(n: usize, k: usize, m: usize, seed: u64) -> FactorModel {
         let mut rng = Rng::new(seed);
@@ -315,9 +324,10 @@ mod tests {
     #[test]
     fn batched_completion_matches_brute_force() {
         let m = model(30, 4, 3, 9);
+        let mut ws = Workspace::new();
         for dir in [Direction::Objects, Direction::Subjects] {
             let anchors = [0usize, 7, 29, 7];
-            let batched = complete_batch(&m, dir, 1, &anchors, 5).unwrap();
+            let batched = complete_batch(&m, dir, 1, &anchors, 5, &mut ws).unwrap();
             assert_eq!(batched.len(), anchors.len());
             for (i, &anchor) in anchors.iter().enumerate() {
                 let brute = brute_force_top_k(&m, dir, 1, anchor, 5).unwrap();
@@ -332,13 +342,30 @@ mod tests {
     }
 
     #[test]
+    fn repeated_batches_reuse_the_workspace() {
+        let m = model(40, 4, 2, 21);
+        let mut ws = Workspace::new();
+        let anchors = [1usize, 5, 9];
+        complete_batch(&m, Direction::Objects, 0, &anchors, 3, &mut ws).unwrap();
+        let warm = ws.stats();
+        assert!(warm.mat_allocs > 0, "first batch must populate the arena");
+        for _ in 0..5 {
+            complete_batch(&m, Direction::Subjects, 1, &anchors, 3, &mut ws).unwrap();
+        }
+        let steady = ws.stats();
+        assert_eq!(steady.mat_allocs, warm.mat_allocs, "steady-state batches allocate nothing");
+        assert_eq!(steady.mat_reuses, warm.mat_reuses + 10, "2 buffers per batch, all reused");
+    }
+
+    #[test]
     fn typed_errors_on_out_of_range() {
         let m = model(5, 2, 2, 3);
         assert!(score_one(&m, 5, 0, 0).is_err());
         assert!(score_one(&m, 0, 2, 0).is_err());
         assert!(score_one(&m, 0, 0, 9).is_err());
-        assert!(complete_batch(&m, Direction::Objects, 0, &[4, 5], 3).is_err());
-        assert!(complete_batch(&m, Direction::Objects, 7, &[0], 3).is_err());
+        let mut ws = Workspace::new();
+        assert!(complete_batch(&m, Direction::Objects, 0, &[4, 5], 3, &mut ws).is_err());
+        assert!(complete_batch(&m, Direction::Objects, 7, &[0], 3, &mut ws).is_err());
         assert!(brute_force_top_k(&m, Direction::Subjects, 0, 99, 3).is_err());
     }
 }

@@ -1,5 +1,9 @@
-//! Dense row-major f32 matrix with blocked, parallel GEMM.
+//! Dense row-major f32 matrix. All products run on the packed
+//! microkernel in [`super::kernel`]; the pre-packing blocked kernel is
+//! kept as [`gemm_legacy`] for the `drescal bench` packed-vs-legacy
+//! comparison and as a second implementation for parity tests.
 
+use super::kernel;
 use crate::rng::Rng;
 
 /// Dense row-major single-precision matrix.
@@ -13,8 +17,9 @@ pub struct Mat {
     data: Vec<f32>,
 }
 
-/// GEMM block sizes tuned in the §Perf pass (see EXPERIMENTS.md §Perf):
-/// MC×KC panels of A stay L2-resident, KC×NC panels of B stream through L1.
+/// Legacy GEMM block sizes (see EXPERIMENTS.md §Perf): MC×KC panels of A
+/// stay L2-resident, KC×NC panels of B stream through L1. The packed
+/// kernel has its own blocking in [`super::kernel`].
 const MC: usize = 64;
 const KC: usize = 256;
 const NC: usize = 1024;
@@ -179,6 +184,42 @@ impl Mat {
         self.data.iter_mut().for_each(|x| *x = 0.0);
     }
 
+    /// Copy `other`'s contents into this matrix (shapes must match).
+    pub fn copy_from(&mut self, other: &Mat) {
+        assert_eq!(self.shape(), other.shape(), "copy_from shape mismatch");
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Surrender the backing buffer (used by the workspace arena to keep
+    /// allocations alive across checkouts).
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Build a zero-filled `rows×cols` matrix on top of an existing
+    /// buffer, reusing its allocation when the capacity suffices.
+    pub fn from_buffer(rows: usize, cols: usize, mut buf: Vec<f32>) -> Self {
+        buf.clear();
+        buf.resize(rows * cols, 0.0);
+        Mat { rows, cols, data: buf }
+    }
+
+    /// Like [`Mat::from_buffer`] but without the zero-fill: whatever
+    /// values the recycled buffer holds are kept (truncated or
+    /// zero-extended to the target length). For write-into outputs that
+    /// are fully overwritten before any read — the workspace arena's
+    /// checkout path, where the skipped memset is a full extra pass over
+    /// the largest serve buffer per batch.
+    pub(crate) fn from_buffer_raw(rows: usize, cols: usize, mut buf: Vec<f32>) -> Self {
+        let need = rows * cols;
+        if buf.len() > need {
+            buf.truncate(need);
+        } else {
+            buf.resize(need, 0.0);
+        }
+        Mat { rows, cols, data: buf }
+    }
+
     /// `C = A · B` allocating the output.
     pub fn matmul(&self, b: &Mat) -> Mat {
         let mut c = Mat::zeros(self.rows, b.cols);
@@ -204,9 +245,11 @@ impl Mat {
         c
     }
 
-    /// Gram matrix `AᵀA` (k×k for an n×k input).
+    /// Gram matrix `AᵀA` (k×k for an n×k input), exactly symmetric.
     pub fn gram(&self) -> Mat {
-        self.t_matmul(self)
+        let mut c = Mat::zeros(self.cols, self.cols);
+        kernel::gram_into(self, &mut c);
+        c
     }
 }
 
@@ -244,12 +287,18 @@ pub fn num_threads() -> usize {
 /// Work threshold (in fused multiply-adds) below which GEMM stays serial.
 const PAR_THRESHOLD: usize = 1 << 20;
 
-/// `C (+)= A · B`. If `accumulate` is false, C is overwritten.
-///
-/// Blocked i-k-j kernel: the inner j-loop is a unit-stride axpy over C and
-/// B rows, which the compiler auto-vectorizes. Row blocks of C go to worker
-/// threads when the problem is large enough.
+/// `C (+)= A · B` on the packed microkernel. If `accumulate` is false, C
+/// is overwritten.
 pub fn gemm(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
+    kernel::gemm_nn_into(a, b, c, accumulate);
+}
+
+/// `C (+)= A · B` on the legacy (unpacked) blocked kernel: the inner
+/// j-loop is a unit-stride axpy over C and B rows, re-reading each C row
+/// once per depth step. Kept for the `drescal bench` kernel section
+/// (packed vs legacy) and as an independent parity reference; production
+/// paths use [`gemm`].
+pub fn gemm_legacy(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
     assert_eq!(a.cols, b.rows, "gemm inner dim");
     assert_eq!(c.rows, a.rows, "gemm out rows");
     assert_eq!(c.cols, b.cols, "gemm out cols");
@@ -307,104 +356,15 @@ fn gemm_serial(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize
 }
 
 /// `C = Aᵀ · B` without materializing Aᵀ: A is m×k, B is m×n, C is k×n.
-/// The natural loop (over rows of A/B, rank-1 update of C) keeps all
-/// accesses unit-stride.
+/// Runs the packed microkernel reading A through a transposed view.
 pub fn gemm_at_b(a: &Mat, b: &Mat, c: &mut Mat) {
-    assert_eq!(a.rows, b.rows);
-    assert_eq!(c.rows, a.cols);
-    assert_eq!(c.cols, b.cols);
-    c.clear();
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let work = m * k * n;
-    let nt = num_threads();
-    if work < PAR_THRESHOLD || nt == 1 || k < 2 {
-        atb_serial(&a.data, &b.data, &mut c.data, m, k, n, 0..k);
-        return;
-    }
-    // Parallelize over column blocks of Aᵀ == column ranges of A.
-    let nt = nt.min(k);
-    let chunk = k.div_ceil(nt);
-    let c_chunks: Vec<&mut [f32]> = c.data.chunks_mut(chunk * n).collect();
-    std::thread::scope(|s| {
-        for (t, c_chunk) in c_chunks.into_iter().enumerate() {
-            let (a_data, b_data) = (&a.data, &b.data);
-            s.spawn(move || {
-                let k0 = t * chunk;
-                let k1 = (k0 + chunk).min(k);
-                atb_serial(a_data, b_data, c_chunk, m, k, n, k0..k1);
-            });
-        }
-    });
+    kernel::gemm_tn_into(a, b, c);
 }
 
-/// C[kr, :] += A[:, kr]ᵀ·B, C buffer holds rows `kr` only.
-fn atb_serial(
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    kr: std::ops::Range<usize>,
-) {
-    let k0 = kr.start;
-    let k1 = kr.end;
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for kk in k0..k1 {
-            let av = arow[kk];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[(kk - k0) * n..(kk - k0 + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
-}
-
-/// `C = A · Bᵀ`: A is m×k, B is n×k, C is m×n. Inner loop is a dot of two
-/// unit-stride rows.
+/// `C = A · Bᵀ`: A is m×k, B is n×k, C is m×n. Runs the packed
+/// microkernel reading B through a transposed view.
 pub fn gemm_a_bt(a: &Mat, b: &Mat, c: &mut Mat) {
-    assert_eq!(a.cols, b.cols);
-    assert_eq!(c.rows, a.rows);
-    assert_eq!(c.cols, b.rows);
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    let work = m * k * n;
-    let nt = num_threads();
-    if work < PAR_THRESHOLD || nt == 1 || m < 2 {
-        abt_serial(&a.data, &b.data, &mut c.data, m, k, n);
-        return;
-    }
-    let nt = nt.min(m);
-    let chunk = m.div_ceil(nt);
-    let a_chunks: Vec<&[f32]> = a.data.chunks(chunk * k).collect();
-    let c_chunks: Vec<&mut [f32]> = c.data.chunks_mut(chunk * n).collect();
-    std::thread::scope(|s| {
-        for (a_chunk, c_chunk) in a_chunks.into_iter().zip(c_chunks) {
-            let b_data = &b.data;
-            s.spawn(move || {
-                let rows = a_chunk.len() / k;
-                abt_serial(a_chunk, b_data, c_chunk, rows, k, n);
-            });
-        }
-    });
-}
-
-fn abt_serial(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
-            }
-            c[i * n + j] = acc;
-        }
-    }
+    kernel::gemm_nt_into(a, b, c);
 }
 
 #[cfg(test)]
@@ -499,6 +459,22 @@ mod tests {
         let mut rng = Rng::new(6);
         let a = Mat::random_uniform(37, 53, -1.0, 1.0, &mut rng);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    // packed-vs-legacy agreement (serial and threaded) is covered once,
+    // in rust/tests/kernel_plane.rs
+
+    #[test]
+    fn from_buffer_reuses_capacity() {
+        let big = Mat::zeros(10, 10).into_vec();
+        let cap = big.capacity();
+        let m = Mat::from_buffer(3, 4, big);
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m.as_slice(), &[0.0; 12][..]);
+        assert!(m.into_vec().capacity() >= cap.min(100));
+        let mut a = Mat::from_vec(1, 2, vec![5.0, 6.0]);
+        a.copy_from(&Mat::from_vec(1, 2, vec![1.0, 2.0]));
+        assert_eq!(a.as_slice(), &[1.0, 2.0]);
     }
 
     #[test]

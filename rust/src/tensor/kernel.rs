@@ -1,0 +1,455 @@
+//! The packed microkernel GEMM — the crate's dense compute kernel plane.
+//!
+//! The per-rank dense products (`X_t·B`, `X_tᵀ·B`, and the k×k core
+//! algebra of Algorithm 3) dominate wall time at scale, so they run on a
+//! BLIS-style packed kernel instead of a plain blocked triple loop:
+//!
+//! * **Packing** — before multiplying, panels of A and B are copied into
+//!   contiguous, microkernel-ordered buffers (`MR×KC` micro-panels of A,
+//!   `KC×NR` micro-panels of B). Every transpose variant is just a
+//!   different read [`View`] during packing, so the four entry points
+//!   ([`gemm_nn_into`], [`gemm_tn_into`], [`gemm_nt_into`],
+//!   [`gemm_tt_into`]) share one inner loop and transposes are never
+//!   materialized.
+//! * **Register tiling** — the microkernel holds an `MR×NR` tile of C in
+//!   registers across the whole `KC` depth, so C traffic drops from one
+//!   read+write per multiply (the old axpy kernel) to one per `KC`
+//!   multiplies. Ragged edges run the same kernel on zero-padded packed
+//!   panels and write back only the valid `mr×nr` corner.
+//! * **Reusable scratch** — pack buffers live in per-thread scratch
+//!   (`thread_local`), sized once and reused by every subsequent call on
+//!   that thread, so steady-state GEMMs on the persistent rank threads
+//!   perform no pack allocations. Iteration-level temporaries are owned
+//!   by the per-rank [`crate::backend::Workspace`] arena; together the
+//!   two make the training hot loop allocation-free in steady state.
+//! * **Threading** — macro-panels of C rows go to scoped worker threads
+//!   above the same work threshold as before ([`PAR_THRESHOLD`] fused
+//!   multiply-adds); each worker packs into its own scratch.
+//!
+//! [`gram_into`] is the symmetric special case `AᵀA`: it accumulates only
+//! the upper triangle (half the multiplies) and mirrors the rest.
+//!
+//! The previous unpacked kernel survives as
+//! [`super::dense::gemm_legacy`] so `drescal bench` can track the
+//! packed-vs-legacy gap and parity tests have a second implementation.
+
+use std::cell::RefCell;
+
+use super::dense::{num_threads, Mat};
+
+/// Microkernel tile height (rows of C held in registers).
+pub const MR: usize = 8;
+/// Microkernel tile width (columns of C held in registers).
+pub const NR: usize = 8;
+/// Rows of A packed per L2-resident macro-panel (multiple of MR).
+pub const MC: usize = 64;
+/// Shared inner (depth) blocking.
+pub const KC: usize = 256;
+/// Columns of B packed per macro-panel (multiple of NR).
+pub const NC: usize = 1024;
+
+/// Work threshold (fused multiply-adds) below which GEMM stays serial.
+const PAR_THRESHOLD: usize = 1 << 20;
+
+/// A read-only strided view of a row-major buffer: element `(r, c)` is
+/// `data[r*rs + c*cs]`. A transposed operand is the same buffer with the
+/// strides swapped — packing through a view makes all transpose variants
+/// share the packed inner loop.
+#[derive(Clone, Copy)]
+struct View<'a> {
+    data: &'a [f32],
+    rs: usize,
+    cs: usize,
+}
+
+impl<'a> View<'a> {
+    #[inline(always)]
+    fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.rs + c * self.cs]
+    }
+
+    /// The sub-view starting at row `r0` (same strides).
+    fn from_row(&self, r0: usize) -> View<'a> {
+        View { data: &self.data[r0 * self.rs..], rs: self.rs, cs: self.cs }
+    }
+}
+
+/// Reusable per-thread pack scratch. Persistent threads (the engine's
+/// rank workers) size it on first use and never allocate again; scoped
+/// GEMM worker threads get a fresh one per spawn, which is noise next to
+/// the spawn itself.
+struct PackScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<PackScratch> =
+        const { RefCell::new(PackScratch { a: Vec::new(), b: Vec::new() }) };
+}
+
+#[inline]
+fn round_up(x: usize, to: usize) -> usize {
+    x.div_ceil(to) * to
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points: the four transpose variants + symmetric gram
+// ---------------------------------------------------------------------------
+
+/// `C (+)= A · B` with A `m×k`, B `k×n`. When `accumulate` is false, C is
+/// overwritten.
+pub fn gemm_nn_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
+    assert_eq!(a.cols(), b.rows(), "gemm inner dim");
+    assert_eq!(c.rows(), a.rows(), "gemm out rows");
+    assert_eq!(c.cols(), b.cols(), "gemm out cols");
+    if !accumulate {
+        c.clear();
+    }
+    let (m, kdim, n) = (a.rows(), a.cols(), b.cols());
+    let av = View { data: a.as_slice(), rs: a.cols(), cs: 1 };
+    let bv = View { data: b.as_slice(), rs: b.cols(), cs: 1 };
+    gemm_dispatch(m, kdim, n, av, bv, c.as_mut_slice());
+}
+
+/// `C = Aᵀ · B` with A stored `m×k`, B `m×n` (C is `k×n`). Aᵀ is never
+/// materialized: packing reads A through the transposed view.
+pub fn gemm_tn_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.rows(), b.rows(), "t_matmul inner dim");
+    assert_eq!(c.rows(), a.cols(), "t_matmul out rows");
+    assert_eq!(c.cols(), b.cols(), "t_matmul out cols");
+    c.clear();
+    let (m, kdim, n) = (a.cols(), a.rows(), b.cols());
+    let av = View { data: a.as_slice(), rs: 1, cs: a.cols() };
+    let bv = View { data: b.as_slice(), rs: b.cols(), cs: 1 };
+    gemm_dispatch(m, kdim, n, av, bv, c.as_mut_slice());
+}
+
+/// `C = A · Bᵀ` with A `m×k`, B stored `n×k` (C is `m×n`).
+pub fn gemm_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols(), b.cols(), "matmul_t inner dim");
+    assert_eq!(c.rows(), a.rows(), "matmul_t out rows");
+    assert_eq!(c.cols(), b.rows(), "matmul_t out cols");
+    c.clear();
+    let (m, kdim, n) = (a.rows(), a.cols(), b.rows());
+    let av = View { data: a.as_slice(), rs: a.cols(), cs: 1 };
+    let bv = View { data: b.as_slice(), rs: 1, cs: b.cols() };
+    gemm_dispatch(m, kdim, n, av, bv, c.as_mut_slice());
+}
+
+/// `C = Aᵀ · Bᵀ` with A stored `k×m`, B stored `n×k` (C is `m×n`).
+pub fn gemm_tt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.rows(), b.cols(), "tt inner dim");
+    assert_eq!(c.rows(), a.cols(), "tt out rows");
+    assert_eq!(c.cols(), b.rows(), "tt out cols");
+    c.clear();
+    let (m, kdim, n) = (a.cols(), a.rows(), b.rows());
+    let av = View { data: a.as_slice(), rs: 1, cs: a.cols() };
+    let bv = View { data: b.as_slice(), rs: 1, cs: b.cols() };
+    gemm_dispatch(m, kdim, n, av, bv, c.as_mut_slice());
+}
+
+/// Symmetric gram `C = AᵀA` for A `m×k` (C is `k×k`): only the upper
+/// triangle is accumulated (half the multiplies of a general `AᵀB`),
+/// then mirrored — so the result is exactly symmetric by construction.
+pub fn gram_into(a: &Mat, c: &mut Mat) {
+    let (m, k) = a.shape();
+    assert_eq!(c.shape(), (k, k), "gram out shape");
+    c.clear();
+    if m == 0 || k == 0 {
+        return;
+    }
+    let work = m * k * k / 2;
+    let nt = num_threads();
+    if work < PAR_THRESHOLD || nt == 1 || m < 2 {
+        gram_upper_rows(a, c.as_mut_slice(), 0, m, k);
+    } else {
+        let nt = nt.min(m);
+        let chunk = m.div_ceil(nt);
+        let cd = c.as_mut_slice();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..m.div_ceil(chunk))
+                .map(|t| {
+                    let r0 = t * chunk;
+                    let r1 = (r0 + chunk).min(m);
+                    s.spawn(move || {
+                        let mut part = vec![0.0f32; k * k];
+                        gram_upper_rows(a, &mut part, r0, r1, k);
+                        part
+                    })
+                })
+                .collect();
+            for h in handles {
+                let part = h.join().expect("gram worker");
+                for (cv, pv) in cd.iter_mut().zip(&part) {
+                    *cv += pv;
+                }
+            }
+        });
+    }
+    // mirror the upper triangle into the lower
+    let cd = c.as_mut_slice();
+    for p in 0..k {
+        for q in 0..p {
+            cd[p * k + q] = cd[q * k + p];
+        }
+    }
+}
+
+/// Accumulate the upper triangle of `A[r0..r1, :]ᵀ · A[r0..r1, :]` into
+/// `c` (a k×k buffer).
+fn gram_upper_rows(a: &Mat, c: &mut [f32], r0: usize, r1: usize, k: usize) {
+    for i in r0..r1 {
+        let row = a.row(i);
+        for p in 0..k {
+            let ap = row[p];
+            if ap == 0.0 {
+                continue;
+            }
+            let crow = &mut c[p * k + p..(p + 1) * k];
+            for (cv, &aq) in crow.iter_mut().zip(&row[p..]) {
+                *cv += ap * aq;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver: threading over C row macro-panels, then the packed serial core
+// ---------------------------------------------------------------------------
+
+/// `C += OpA · OpB` over strided operand views; C is row-major `m×n`
+/// (leading dimension n). Callers clear C first unless accumulating.
+fn gemm_dispatch(m: usize, kdim: usize, n: usize, a: View, b: View, c: &mut [f32]) {
+    if m == 0 || n == 0 || kdim == 0 {
+        return;
+    }
+    let work = m * kdim * n;
+    let nt = num_threads();
+    if work < PAR_THRESHOLD || nt == 1 || m < 2 {
+        gemm_serial_packed(m, kdim, n, a, b, c);
+        return;
+    }
+    let nt = nt.min(m);
+    let chunk = m.div_ceil(nt);
+    let c_chunks: Vec<&mut [f32]> = c.chunks_mut(chunk * n).collect();
+    std::thread::scope(|s| {
+        for (t, c_chunk) in c_chunks.into_iter().enumerate() {
+            let a_sub = a.from_row(t * chunk);
+            s.spawn(move || {
+                let rows = c_chunk.len() / n;
+                gemm_serial_packed(rows, kdim, n, a_sub, b, c_chunk);
+            });
+        }
+    });
+}
+
+/// The serial packed core: 5-loop blocking with pack-then-microkernel.
+fn gemm_serial_packed(m: usize, kdim: usize, n: usize, a: View, b: View, c: &mut [f32]) {
+    let a_need = round_up(MC.min(m), MR) * KC.min(kdim);
+    let b_need = KC.min(kdim) * round_up(NC.min(n), NR);
+    SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let PackScratch { a: abuf, b: bbuf } = &mut *scratch;
+        if abuf.len() < a_need {
+            abuf.resize(a_need, 0.0);
+        }
+        if bbuf.len() < b_need {
+            bbuf.resize(b_need, 0.0);
+        }
+        for jc in (0..n).step_by(NC) {
+            let nb = NC.min(n - jc);
+            for pc in (0..kdim).step_by(KC) {
+                let kb = KC.min(kdim - pc);
+                pack_b(b, pc, kb, jc, nb, bbuf);
+                for ic in (0..m).step_by(MC) {
+                    let mb = MC.min(m - ic);
+                    pack_a(a, ic, mb, pc, kb, abuf);
+                    macro_kernel(
+                        mb,
+                        kb,
+                        nb,
+                        (abuf.as_slice(), bbuf.as_slice()),
+                        &mut c[ic * n + jc..],
+                        n,
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Pack the `mb×kb` block of A at `(ic, pc)` into MR-row micro-panels:
+/// panel `ir/MR` holds `out[p*MR + i] = A[ic+ir+i, pc+p]`, zero-padded to
+/// a full MR so the microkernel never branches on ragged rows.
+fn pack_a(a: View, ic: usize, mb: usize, pc: usize, kb: usize, out: &mut [f32]) {
+    let mut idx = 0;
+    for ir in (0..mb).step_by(MR) {
+        for p in 0..kb {
+            for i in 0..MR {
+                out[idx] = if ir + i < mb { a.at(ic + ir + i, pc + p) } else { 0.0 };
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Pack the `kb×nb` block of B at `(pc, jc)` into NR-column micro-panels:
+/// panel `jr/NR` holds `out[p*NR + j] = B[pc+p, jc+jr+j]`, zero-padded to
+/// a full NR.
+fn pack_b(b: View, pc: usize, kb: usize, jc: usize, nb: usize, out: &mut [f32]) {
+    let mut idx = 0;
+    for jr in (0..nb).step_by(NR) {
+        for p in 0..kb {
+            for j in 0..NR {
+                out[idx] = if jr + j < nb { b.at(pc + p, jc + jr + j) } else { 0.0 };
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Run the microkernel over every `MR×NR` tile of one packed macro-block.
+/// `c` starts at the block's top-left corner of the full C (leading
+/// dimension `ldc`).
+fn macro_kernel(
+    mb: usize,
+    kb: usize,
+    nb: usize,
+    (apack, bpack): (&[f32], &[f32]),
+    c: &mut [f32],
+    ldc: usize,
+) {
+    for jr in (0..nb).step_by(NR) {
+        let nr = NR.min(nb - jr);
+        let bp = &bpack[(jr / NR) * (kb * NR)..][..kb * NR];
+        for ir in (0..mb).step_by(MR) {
+            let mr = MR.min(mb - ir);
+            let ap = &apack[(ir / MR) * (MR * kb)..][..MR * kb];
+            let c_off = ir * ldc + jr;
+            if mr == MR && nr == NR {
+                kernel_full(kb, ap, bp, &mut c[c_off..], ldc);
+            } else {
+                let acc = compute_acc(kb, ap, bp);
+                // ragged edge: write back only the valid mr×nr corner
+                for (i, arow) in acc.iter().enumerate().take(mr) {
+                    let crow = &mut c[c_off + i * ldc..c_off + i * ldc + nr];
+                    for (cv, &av) in crow.iter_mut().zip(arow.iter()) {
+                        *cv += av;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The register tile: `acc[i][j] += Σ_p ap[p][i] · bp[p][j]` over packed
+/// micro-panels. MR·NR accumulators stay in registers across the whole
+/// kb depth — the entire point of packing.
+#[inline(always)]
+fn compute_acc(kb: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kb {
+        let av: &[f32; MR] = ap[p * MR..p * MR + MR].try_into().unwrap();
+        let bv: &[f32; NR] = bp[p * NR..p * NR + NR].try_into().unwrap();
+        for i in 0..MR {
+            let ai = av[i];
+            for j in 0..NR {
+                acc[i][j] += ai * bv[j];
+            }
+        }
+    }
+    acc
+}
+
+/// Full-tile microkernel: accumulate into C directly.
+#[inline(always)]
+fn kernel_full(kb: usize, ap: &[f32], bp: &[f32], c: &mut [f32], ldc: usize) {
+    let acc = compute_acc(kb, ap, bp);
+    for (i, arow) in acc.iter().enumerate() {
+        let crow = &mut c[i * ldc..i * ldc + NR];
+        for (cv, &av) in crow.iter_mut().zip(arow.iter()) {
+            *cv += av;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::assert_close;
+
+    // Naive-reference parity across adversarial shapes and all four
+    // transpose variants lives in rust/tests/kernel_plane.rs (one copy,
+    // exercised through the public Backend/kernel API); the tests here
+    // cover what only this module can reach — blocking edges, the
+    // accumulate contract, the symmetric gram, and the private serial
+    // core vs the threaded dispatcher.
+
+    #[test]
+    fn empty_dims_are_fine() {
+        // k = 0: the product of an m×0 and a 0×n matrix is all zeros
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 4);
+        let mut c = Mat::full(3, 4, 7.0);
+        gemm_nn_into(&a, &b, &mut c, false);
+        assert_eq!(c.as_slice(), &[0.0; 12][..]);
+        // m = 0 / n = 0: empty outputs, no panic
+        let mut c = Mat::zeros(0, 4);
+        gemm_nn_into(&Mat::zeros(0, 5), &Mat::zeros(5, 4), &mut c, false);
+        let mut c = Mat::zeros(3, 0);
+        gemm_nn_into(&Mat::zeros(3, 5), &Mat::zeros(5, 0), &mut c, false);
+        let mut g = Mat::zeros(0, 0);
+        gram_into(&Mat::zeros(4, 0), &mut g);
+    }
+
+    #[test]
+    fn accumulate_adds_on_top() {
+        let a = Mat::eye(5);
+        let b = Mat::full(5, 5, 2.0);
+        let mut c = Mat::full(5, 5, 1.0);
+        gemm_nn_into(&a, &b, &mut c, true);
+        assert_eq!(c.as_slice(), &[3.0f32; 25][..]);
+    }
+
+    #[test]
+    fn gram_matches_tn_and_is_exactly_symmetric() {
+        let mut rng = Rng::new(501);
+        for &(m, k) in &[(1, 1), (5, 3), (40, 8), (130, 17), (300, 33)] {
+            let a = Mat::random_uniform(m, k, -1.0, 1.0, &mut rng);
+            let mut g = Mat::zeros(k, k);
+            gram_into(&a, &mut g);
+            let mut want = Mat::zeros(k, k);
+            gemm_tn_into(&a, &a, &mut want);
+            assert_close(g.as_slice(), want.as_slice(), 1e-3);
+            for p in 0..k {
+                for q in 0..k {
+                    assert_eq!(g[(p, q)], g[(q, p)], "gram not exactly symmetric");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_path_matches_serial_result() {
+        // large enough to cross PAR_THRESHOLD on multi-core hosts; on a
+        // single-core host this still exercises the serial packed core
+        let mut rng = Rng::new(502);
+        let (m, kdim, n) = (190, 85, 110);
+        let a = Mat::random_uniform(m, kdim, -1.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(kdim, n, -1.0, 1.0, &mut rng);
+        let mut c = Mat::zeros(m, n);
+        gemm_nn_into(&a, &b, &mut c, false);
+        let mut serial = Mat::zeros(m, n);
+        gemm_serial_packed(
+            m,
+            kdim,
+            n,
+            View { data: a.as_slice(), rs: kdim, cs: 1 },
+            View { data: b.as_slice(), rs: n, cs: 1 },
+            serial.as_mut_slice(),
+        );
+        assert_close(c.as_slice(), serial.as_slice(), 1e-4);
+    }
+}

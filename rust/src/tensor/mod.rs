@@ -7,6 +7,7 @@
 //! relation slices, and a CSR sparse matrix for the sparse experiments.
 
 pub mod dense;
+pub mod kernel;
 pub mod ops;
 pub mod sparse;
 pub mod tensor3;

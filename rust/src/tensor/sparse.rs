@@ -202,15 +202,34 @@ impl Csr {
         }
     }
 
+    /// Row `i`'s stored entries as parallel `(column, value)` slices —
+    /// lets callers (the residual accumulator, fill analyses) walk the
+    /// CSR structure directly instead of densifying the tile.
+    #[inline]
+    pub fn row_entries(&self, i: usize) -> (&[usize], &[f32]) {
+        let span = self.indptr[i]..self.indptr[i + 1];
+        (&self.indices[span.clone()], &self.values[span])
+    }
+
     /// `C = self · B` with dense B — the sparse hot path (X_t · A).
     pub fn matmul_dense(&self, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(self.rows, b.cols());
+        self.matmul_dense_into(b, &mut c);
+        c
+    }
+
+    /// Write-into form of [`Csr::matmul_dense`]: `c` must be
+    /// `rows × b.cols()` and is overwritten (workspace buffers arrive
+    /// with stale contents).
+    pub fn matmul_dense_into(&self, b: &Mat, c: &mut Mat) {
         assert_eq!(self.cols, b.rows(), "spmm inner dim");
+        assert_eq!(c.shape(), (self.rows, b.cols()), "spmm out shape");
         let n = b.cols();
-        let mut c = Mat::zeros(self.rows, n);
+        c.clear();
         let nt = crate::tensor::dense::num_threads();
         if self.nnz() * n < (1 << 20) || nt == 1 || self.rows < 2 {
-            self.spmm_rows(b, &mut c, 0, self.rows);
-            return c;
+            self.spmm_rows(b, c, 0, self.rows);
+            return;
         }
         let nt = nt.min(self.rows);
         let chunk = self.rows.div_ceil(nt);
@@ -225,7 +244,6 @@ impl Csr {
                 });
             }
         });
-        c
     }
 
     fn spmm_rows(&self, b: &Mat, c: &mut Mat, r0: usize, r1: usize) {
@@ -258,12 +276,21 @@ impl Csr {
     /// column-partitioned scatter would instead make every thread scan
     /// all nnz, paying O(threads·nnz) redundant traversal per call.)
     pub fn t_matmul_dense(&self, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(self.cols, b.cols());
+        self.t_matmul_dense_into(b, &mut c);
+        c
+    }
+
+    /// Write-into form of [`Csr::t_matmul_dense`]: `c` must be
+    /// `cols × b.cols()` and is overwritten.
+    pub fn t_matmul_dense_into(&self, b: &Mat, c: &mut Mat) {
         assert_eq!(self.rows, b.rows(), "spmm_t inner dim");
+        assert_eq!(c.shape(), (self.cols, b.cols()), "spmm_t out shape");
         let n = b.cols();
+        c.clear();
         let nt = crate::tensor::dense::num_threads();
         if self.nnz() * n < (1 << 20) || nt == 1 || self.cols < 2 {
             // serial scatter: for each nonzero (i, j, v): C[j,:] += v·B[i,:]
-            let mut c = Mat::zeros(self.cols, n);
             let cd = c.as_mut_slice();
             for i in 0..self.rows {
                 let brow = b.row(i);
@@ -276,9 +303,9 @@ impl Csr {
                     }
                 }
             }
-            return c;
+            return;
         }
-        self.t_cache.get_or_init(|| Box::new(self.transpose())).matmul_dense(b)
+        self.t_cache.get_or_init(|| Box::new(self.transpose())).matmul_dense_into(b, c)
     }
 
     /// Multiply every stored value by a fresh uniform factor in
@@ -319,6 +346,31 @@ mod tests {
 
     fn sample() -> Csr {
         Csr::from_triplets(3, 4, vec![(0, 1, 2.0), (1, 0, 3.0), (1, 3, 4.0), (2, 2, 5.0)])
+    }
+
+    #[test]
+    fn row_entries_walk_the_structure() {
+        let s = sample();
+        assert_eq!(s.row_entries(0), (&[1usize][..], &[2.0f32][..]));
+        let (cols, vals) = s.row_entries(1);
+        assert_eq!(cols, &[0, 3]);
+        assert_eq!(vals, &[3.0, 4.0]);
+        let empty = Csr::from_triplets(2, 2, vec![]);
+        assert_eq!(empty.row_entries(0).0.len(), 0);
+    }
+
+    #[test]
+    fn into_products_overwrite_stale_buffers() {
+        let mut rng = Rng::new(38);
+        let s = Csr::random(20, 15, 0.2, &mut rng);
+        let b = Mat::random_uniform(15, 4, -1.0, 1.0, &mut rng);
+        let mut c = Mat::full(20, 4, 9.0);
+        s.matmul_dense_into(&b, &mut c);
+        assert_close(c.as_slice(), s.matmul_dense(&b).as_slice(), 1e-6);
+        let bt = Mat::random_uniform(20, 4, -1.0, 1.0, &mut rng);
+        let mut ct = Mat::full(15, 4, -3.0);
+        s.t_matmul_dense_into(&bt, &mut ct);
+        assert_close(ct.as_slice(), s.t_matmul_dense(&bt).as_slice(), 1e-6);
     }
 
     #[test]

@@ -20,6 +20,29 @@ pub fn assert_close(got: &[f32], want: &[f32], tol: f32) {
     }
 }
 
+/// f64-accumulated reference GEMM for kernel parity tests. Operands are
+/// `(row, col)` lookup closures, so a transposed operand is just a
+/// swapped closure — one reference covers every transpose variant.
+pub fn naive_gemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    at: impl Fn(usize, usize) -> f32,
+    bt: impl Fn(usize, usize) -> f32,
+) -> crate::tensor::Mat {
+    let mut c = crate::tensor::Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += at(i, p) as f64 * bt(p, j) as f64;
+            }
+            c[(i, j)] = acc as f32;
+        }
+    }
+    c
+}
+
 /// Assert two scalars are close.
 pub fn assert_close_scalar(got: f32, want: f32, tol: f32) {
     let scale = 1.0f32.max(want.abs());

@@ -204,6 +204,9 @@ fn bench_smoke_tracks_a_trajectory() {
     let (ok, text) = run(&["bench", "--iters", "1", "--p", "1", "--out", out_path]);
     assert!(ok, "{text}");
     assert!(text.contains("serve_topk_batched"), "serve section missing: {text}");
+    assert!(text.contains("kernel_packed_gemm_512"), "kernel section missing: {text}");
+    assert!(text.contains("kernel_legacy_gemm_512"), "legacy comparison missing: {text}");
+    assert!(text.contains("packed kernel speedup"), "{text}");
     assert!(text.contains("no baseline"), "{text}");
     // second run: self-baselines against the first output, prints deltas
     let (ok, text) = run(&[

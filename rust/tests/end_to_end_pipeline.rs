@@ -7,7 +7,7 @@
 //! `make artifacts` (skips when absent).
 #![cfg(feature = "pjrt")]
 
-use drescal::backend::{native::NativeBackend, xla::XlaBackend, Backend};
+use drescal::backend::{native::NativeBackend, xla::XlaBackend, Backend, Workspace};
 use drescal::comm::grid::run_on_grid;
 use drescal::comm::Trace;
 use drescal::data::synthetic;
@@ -45,14 +45,15 @@ fn distributed_rescal_over_pjrt_artifacts() {
                 init: DistInit::Random { seed: 12 },
                 n,
             };
+            let mut ws = Workspace::new();
             let mut trace = Trace::new();
             if use_xla {
                 let mut backend = XlaBackend::new(&dir).expect("xla backend");
-                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
                 (out.rel_error, backend.hits, backend.fallbacks)
             } else {
                 let mut backend = NativeBackend::new();
-                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
                 (out.rel_error, 0, 0)
             }
         })

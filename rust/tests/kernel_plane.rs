@@ -1,0 +1,202 @@
+//! Kernel-plane integration tests: packed-microkernel parity across
+//! adversarial shapes and transpose variants, legacy-kernel agreement,
+//! and the counter-asserted zero-allocation steady state of the
+//! workspace-backed training hot loop.
+
+use drescal::backend::native::NativeBackend;
+use drescal::backend::{Backend, Workspace};
+use drescal::comm::grid::run_on_grid;
+use drescal::comm::Trace;
+use drescal::data::synthetic::{self, SyntheticSpec};
+use drescal::engine::{Engine, EngineConfig, Report};
+use drescal::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
+use drescal::rescal::{LocalTile, RescalOptions};
+use drescal::rng::Rng;
+use drescal::tensor::dense::{gemm, gemm_legacy};
+use drescal::tensor::{kernel, Mat};
+use drescal::testing::{assert_close, naive_gemm as naive};
+
+/// Shapes straddling the microkernel (MR/NR), blocking (MC/KC/NC), and
+/// threading boundaries, plus degenerate vectors.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 300, 1),   // 1×n · n×1
+    (300, 1, 5),   // m×1 outer-product-ish
+    (5, 1, 300),
+    (7, 9, 11),    // nothing divides MR/NR
+    (8, 8, 8),     // exactly one microkernel tile
+    (9, 257, 17),  // KC straddle with ragged edges
+    (64, 64, 64),
+    (65, 129, 127),
+    (130, 40, 200),
+];
+
+#[test]
+fn backend_variants_match_naive_reference_across_shapes() {
+    let mut rng = Rng::new(900);
+    let mut be = NativeBackend::new();
+    for &(m, k, n) in SHAPES {
+        let a = Mat::random_uniform(m, k, -1.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(k, n, -1.0, 1.0, &mut rng);
+        let want = naive(m, k, n, |i, p| a[(i, p)], |p, j| b[(p, j)]);
+
+        // NN via the backend into-API
+        let mut c = Mat::zeros(m, n);
+        be.matmul_into(&a, &b, &mut c);
+        assert_close(c.as_slice(), want.as_slice(), 2e-3);
+
+        // TN: Aᵀ·B with A stored k-major
+        let at = a.transpose();
+        let mut c = Mat::zeros(m, n);
+        be.t_matmul_into(&at, &b, &mut c);
+        assert_close(c.as_slice(), want.as_slice(), 2e-3);
+
+        // NT: A·Bᵀ with B stored n×k
+        let bt = b.transpose();
+        let mut c = Mat::zeros(m, n);
+        be.matmul_t_into(&a, &bt, &mut c);
+        assert_close(c.as_slice(), want.as_slice(), 2e-3);
+
+        // TT via the kernel entry point (no Backend method needs it yet)
+        let mut c = Mat::zeros(m, n);
+        kernel::gemm_tt_into(&at, &bt, &mut c);
+        assert_close(c.as_slice(), want.as_slice(), 2e-3);
+
+        // gram: AᵀA, exactly symmetric
+        let mut g = Mat::zeros(k, k);
+        be.gram_into(&a, &mut g);
+        let want_g = naive(k, m, k, |i, p| a[(p, i)], |p, j| a[(p, j)]);
+        assert_close(g.as_slice(), want_g.as_slice(), 2e-3);
+        for i in 0..k {
+            for j in 0..k {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_and_legacy_kernels_agree_serial_and_threaded() {
+    let mut rng = Rng::new(901);
+    // small stays serial; the large ones cross the 2^20 FMA threshold on
+    // multi-core hosts and take the threaded macro-panel path
+    for &(m, k, n) in &[(6, 10, 4), (150, 120, 110), (300, 130, 90)] {
+        let a = Mat::random_uniform(m, k, -1.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(k, n, -1.0, 1.0, &mut rng);
+        let mut packed = Mat::zeros(m, n);
+        gemm(&a, &b, &mut packed, false);
+        let mut legacy = Mat::zeros(m, n);
+        gemm_legacy(&a, &b, &mut legacy, false);
+        assert_close(packed.as_slice(), legacy.as_slice(), 2e-3);
+        let want = naive(m, k, n, |i, p| a[(i, p)], |p, j| b[(p, j)]);
+        assert_close(packed.as_slice(), want.as_slice(), 2e-3);
+    }
+}
+
+#[test]
+fn high_level_mat_ops_ride_the_packed_kernel() {
+    let mut rng = Rng::new(902);
+    let a = Mat::random_uniform(33, 21, -1.0, 1.0, &mut rng);
+    let b = Mat::random_uniform(21, 19, -1.0, 1.0, &mut rng);
+    let want = naive(33, 21, 19, |i, p| a[(i, p)], |p, j| b[(p, j)]);
+    assert_close(a.matmul(&b).as_slice(), want.as_slice(), 1e-3);
+    assert_close(
+        a.transpose().t_matmul(&b).as_slice(),
+        want.as_slice(),
+        1e-3,
+    );
+    assert_close(a.matmul_t(&b.transpose()).as_slice(), want.as_slice(), 1e-3);
+    assert_close(a.gram().as_slice(), a.t_matmul(&a).as_slice(), 1e-3);
+}
+
+/// The zero-allocation guarantee inside one job: every iteration
+/// temporary is checked out before the MU loop, so the workspace alloc
+/// count is independent of how many iterations run.
+#[test]
+fn factorize_allocs_are_independent_of_iteration_count() {
+    let x = synthetic::planted_tensor(16, 2, 3, 0.0, 903).x;
+    let run = |iters: usize| {
+        let results = run_on_grid(1, |ctx| {
+            let tile = LocalTile::Dense(x.clone());
+            let cfg = DistRescalConfig {
+                opts: RescalOptions::new(3, iters),
+                init: DistInit::Random { seed: 4 },
+                n: 16,
+            };
+            let mut backend = NativeBackend::new();
+            let mut ws = Workspace::new();
+            let mut trace = Trace::disabled();
+            rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace).workspace
+        });
+        results[0]
+    };
+    let one = run(1);
+    let many = run(12);
+    assert!(one.mat_allocs > 0, "cold workspace must allocate the iteration buffers");
+    assert_eq!(
+        one.mat_allocs, many.mat_allocs,
+        "12 iterations must allocate exactly what 1 iteration does — \
+         all subsequent iterations are buffer reuse"
+    );
+}
+
+/// The zero-allocation guarantee across jobs: the engine's rank pool
+/// keeps each rank's workspace alive, so a repeated factorize job
+/// performs zero workspace allocations — every checkout is arena reuse.
+#[test]
+fn warm_pool_factorize_performs_zero_workspace_allocations() {
+    let mut engine = Engine::new(EngineConfig::new(4)).unwrap();
+    let data = engine.load_dataset(SyntheticSpec::dense(24, 2, 3, 7)).unwrap();
+    let opts = RescalOptions::new(3, 6);
+    let cold = engine.factorize(data, &opts, 42).unwrap();
+    assert!(cold.workspace.mat_allocs > 0, "cold ranks must populate their arenas");
+    let warm = engine.factorize(data, &opts, 42).unwrap();
+    assert_eq!(
+        warm.workspace.mat_allocs, 0,
+        "a warm rank pool must serve every iteration temporary from reuse"
+    );
+    assert_eq!(
+        warm.workspace.mat_reuses, cold.workspace.mat_allocs + cold.workspace.mat_reuses,
+        "warm job checks out exactly the buffers the cold job allocated"
+    );
+    // results are identical — the arena changes where buffers live, not
+    // what the algorithm computes
+    assert_close(warm.a.as_slice(), cold.a.as_slice(), 1e-6);
+    assert_eq!(warm.rel_error, cold.rel_error);
+}
+
+#[test]
+fn report_json_carries_workspace_counters() {
+    let mut engine = Engine::new(EngineConfig::new(1)).unwrap();
+    let data = engine.load_dataset(SyntheticSpec::dense(12, 2, 2, 5)).unwrap();
+    let report = engine.factorize(data, &RescalOptions::new(2, 3), 1).unwrap();
+    let ws = report.workspace;
+    let json = Report::Factorize(report).to_json();
+    let back = Report::from_json(&json).unwrap();
+    match back {
+        Report::Factorize(r) => assert_eq!(r.workspace, ws),
+        _ => panic!("kind changed in roundtrip"),
+    }
+    // archived pre-kernel-plane reports (no workspace field) still parse
+    let legacy = drescal::json::Json::parse(
+        r#"{"kind":"simulate","scenario":"s","runs":[]}"#,
+    )
+    .unwrap();
+    assert!(Report::from_json(&legacy).is_ok());
+}
+
+/// The sparse residual accumulator walks CSR structure directly; it must
+/// agree with the dense residual on identical data (and never densify).
+#[test]
+fn sparse_residual_matches_dense_on_shared_data() {
+    let mut rng = Rng::new(905);
+    let s = vec![drescal::tensor::Csr::random(40, 40, 0.15, &mut rng)];
+    let dense = drescal::tensor::Tensor3::from_slices(vec![s[0].to_dense()]);
+    let a_row = Mat::random_uniform(40, 3, 0.0, 1.0, &mut rng);
+    let a_col = Mat::random_uniform(40, 3, 0.0, 1.0, &mut rng);
+    let r = Mat::random_uniform(3, 3, 0.0, 1.0, &mut rng);
+    let ar = a_row.matmul(&r);
+    let d = LocalTile::Dense(dense).residual_sq(0, &ar, &a_col);
+    let sp = LocalTile::Sparse(s).residual_sq(0, &ar, &a_col);
+    assert!((d - sp).abs() < 1e-3 * d.max(1.0), "dense {d} vs sparse {sp}");
+}

@@ -4,6 +4,7 @@
 //! (The full-width 100-tensor study is `examples/model_selection_synthetic`.)
 
 use drescal::backend::native::NativeBackend;
+use drescal::backend::Workspace;
 use drescal::comm::grid::run_on_grid;
 use drescal::comm::{Grid, Trace};
 use drescal::data::synthetic;
@@ -42,8 +43,9 @@ fn run_case(case: &Case) -> (usize, f32) {
         let (c0, c1) = ctx.grid.chunk(n, ctx.col);
         let tile = LocalTile::Dense(x.tile(r0, r1, c0, c1));
         let mut backend = NativeBackend::new();
+        let mut ws = Workspace::new();
         let mut trace = Trace::disabled();
-        let out = rescalk_rank(&ctx, &tile, n, &cfg, &mut backend, &mut trace);
+        let out = rescalk_rank(&ctx, &tile, n, &cfg, &mut backend, &mut ws, &mut trace);
         (ctx.row, ctx.col, out)
     });
     // assemble full A from diagonal ranks
@@ -119,8 +121,9 @@ fn higher_noise_still_recovers_k() {
         let (c0, c1) = ctx.grid.chunk(24, ctx.col);
         let tile = LocalTile::Dense(x.tile(r0, r1, c0, c1));
         let mut backend = NativeBackend::new();
+        let mut ws = Workspace::new();
         let mut trace = Trace::disabled();
-        rescalk_rank(&ctx, &tile, 24, &cfg, &mut backend, &mut trace).k_opt
+        rescalk_rank(&ctx, &tile, 24, &cfg, &mut backend, &mut ws, &mut trace).k_opt
     });
     assert_eq!(results[0], 3, "noise broke k recovery");
 }

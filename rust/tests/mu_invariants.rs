@@ -5,6 +5,7 @@
 //! (`drescal::testing::property`, seeded and replayable).
 
 use drescal::backend::native::NativeBackend;
+use drescal::backend::Workspace;
 use drescal::comm::grid::run_on_grid;
 use drescal::comm::Trace;
 use drescal::data::synthetic;
@@ -95,8 +96,9 @@ fn distributed_equals_sequential_random_configs() {
                 n,
             };
             let mut backend = NativeBackend::new();
+            let mut ws = Workspace::new();
             let mut trace = Trace::disabled();
-            let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+            let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
             (ctx.row, ctx.col, out)
         });
         for (row, col, out) in &results {

@@ -3,6 +3,7 @@
 //! §5 complexity analysis.
 
 use drescal::backend::native::NativeBackend;
+use drescal::backend::Workspace;
 use drescal::comm::grid::run_on_grid;
 use drescal::comm::{CommOp, Trace};
 use drescal::data::synthetic;
@@ -26,8 +27,9 @@ fn run_p(x: &Tensor3, p: usize, k: usize, iters: usize) -> (Mat, f32, Vec<Trace>
             n,
         };
         let mut backend = NativeBackend::new();
+        let mut ws = Workspace::new();
         let mut trace = Trace::new();
-        let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut trace);
+        let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
         (ctx.row, ctx.col, out, trace)
     });
     let grid = drescal::comm::Grid::new(p);

@@ -7,6 +7,7 @@
 //! save→load→re-query round-trip, and a repeated query must be served
 //! from the LRU cache with zero additional scored candidates.
 
+use drescal::backend::Workspace;
 use drescal::coordinator::JobData;
 use drescal::data::synthetic;
 use drescal::engine::{Engine, EngineConfig, Report};
@@ -32,9 +33,10 @@ fn factorize_model() -> FactorModel {
 /// exactly like the brute-force pointwise loop, ties included.
 fn assert_parity(model: &FactorModel, top: usize) {
     let anchors: Vec<usize> = (0..model.n()).collect();
+    let mut ws = Workspace::new();
     for dir in [Direction::Objects, Direction::Subjects] {
         for rel in 0..model.m() {
-            let batched = complete_batch(model, dir, rel, &anchors, top).unwrap();
+            let batched = complete_batch(model, dir, rel, &anchors, top, &mut ws).unwrap();
             for (anchor, got) in anchors.iter().zip(&batched) {
                 let want = brute_force_top_k(model, dir, rel, *anchor, top).unwrap();
                 let got_idx: Vec<usize> = got.iter().map(|h| h.entity).collect();
@@ -93,7 +95,8 @@ fn topk_is_deterministic_across_chunk_counts_under_ties() {
     let a = Mat::from_fn(32, 2, |i, j| if (i / 8) % 2 == j { 1.0 } else { 0.25 });
     let r = Tensor3::from_slices(vec![Mat::eye(2)]);
     let model = FactorModel::new(a, r, Provenance::external()).unwrap();
-    let reference = complete_batch(&model, Direction::Objects, 0, &[0], 12).unwrap();
+    let reference =
+        complete_batch(&model, Direction::Objects, 0, &[0], 12, &mut Workspace::new()).unwrap();
     // tied candidates must come out in ascending entity order
     let top = &reference[0];
     for pair in top.windows(2) {
