@@ -59,6 +59,20 @@ pub fn fmt_secs(s: f64) -> String {
     }
 }
 
+/// Format a byte count with an adaptive unit.
+pub fn fmt_bytes(b: usize) -> String {
+    let b = b as f64;
+    if b < 1024.0 {
+        format!("{b:.0} B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.1} MiB", b / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
 /// Print a table: header then rows of equal length, space-aligned.
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n== {title} ==");

@@ -40,7 +40,7 @@ impl Default for JobConfig {
 
 impl From<JobConfig> for EngineConfig {
     fn from(job: JobConfig) -> EngineConfig {
-        EngineConfig { p: job.p, backend: job.backend, trace: job.trace }
+        EngineConfig { p: job.p, backend: job.backend, trace: job.trace, ..Default::default() }
     }
 }
 

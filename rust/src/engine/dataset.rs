@@ -10,11 +10,15 @@
 //!
 //! This module separates data distribution from job submission:
 //!
-//! * [`DatasetSpec`] describes a dataset — either leader-resident
-//!   [`DatasetSpec::InMemory`] data (tiled once, at registration) or a
+//! * [`DatasetSpec`] describes a dataset — leader-resident
+//!   [`DatasetSpec::InMemory`] data (tiled once, at registration), a
 //!   rank-locally generated [`DatasetSpec::Synthetic`] tensor (each rank
 //!   materializes its own tile from counter-keyed RNG streams; the global
-//!   tensor never exists anywhere, so shapes can exceed leader RAM);
+//!   tensor never exists anywhere, so shapes can exceed leader RAM), or
+//!   an ingested on-disk corpus [`DatasetSpec::File`] (each rank reads —
+//!   dense corpora memory-map zero-copy — only its own shards; the
+//!   leader parses `manifest.json` and nothing else — see
+//!   [`crate::store`]);
 //! * [`super::Engine::load_dataset`] broadcasts the spec once; every rank
 //!   builds and caches its resident [`LocalTile`] and the engine returns a
 //!   cheap [`DatasetHandle`];
@@ -35,6 +39,7 @@ use crate::coordinator::JobData;
 use crate::data::synthetic::SyntheticSpec;
 use crate::error::Result;
 use crate::rescal::LocalTile;
+use crate::store::{self, StoreManifest};
 
 /// Opaque reference to a dataset resident in an engine's rank pool.
 /// Handles are engine-scoped: using one on a different engine is a typed
@@ -53,9 +58,31 @@ pub enum DatasetSpec {
     /// global `Tensor3`/CSR set (the generation API takes block ranges
     /// only — see [`SyntheticSpec`]).
     Synthetic(SyntheticSpec),
+    /// An ingested on-disk corpus (see [`crate::store`]): the leader
+    /// holds only the parsed manifest; each rank reads — and, for dense
+    /// corpora at a matching grid, memory-maps zero-copy — exclusively
+    /// its own shard(s). Grid mismatches re-shard at load time.
+    File(Arc<StoreManifest>),
 }
 
 impl DatasetSpec {
+    /// Load and validate a dataset manifest (`manifest.json` path or its
+    /// directory) into a registrable spec — the `--data file:<manifest>`
+    /// entry point.
+    pub fn from_manifest_path(path: impl AsRef<std::path::Path>) -> Result<DatasetSpec> {
+        Ok(DatasetSpec::File(Arc::new(StoreManifest::load(path)?)))
+    }
+
+    /// The interned (entity, relation) name dictionaries, for datasets
+    /// that carry them — lets exported models answer by name.
+    pub fn names(&self) -> Option<(&[String], &[String])> {
+        match self {
+            DatasetSpec::File(man) if !man.entities.is_empty() => {
+                Some((&man.entities, &man.relations))
+            }
+            _ => None,
+        }
+    }
     /// Validate shape consistency without touching the rank pool: sparse
     /// relation lists must be non-empty with square, equal-shape slices;
     /// synthetic specs need sane dimensions and densities.
@@ -79,6 +106,7 @@ impl DatasetSpec {
                 }
                 Ok(())
             }
+            DatasetSpec::File(man) => man.validate(),
         }
     }
 
@@ -98,25 +126,47 @@ impl DatasetSpec {
                 sparse: s.is_sparse(),
                 resident_bytes: 0,
             },
+            DatasetSpec::File(man) => DatasetInfo {
+                n: man.n,
+                m: man.m,
+                sparse: man.layout.is_sparse(),
+                resident_bytes: 0,
+            },
         }
     }
 
     /// Materialize rank (row, col)'s tile. Runs **on the rank**, not the
     /// leader: `InMemory` extracts from the shared `Arc`; `Synthetic`
-    /// generates the block directly.
-    pub(crate) fn build_tile(&self, grid: &Grid, row: usize, col: usize) -> LocalTile {
+    /// generates the block directly; `File` reads (or memory-maps) only
+    /// the shards overlapping this tile. Shard corruption surfaces here
+    /// as a typed error, which the pool converts into a job error
+    /// instead of a worker panic.
+    pub(crate) fn build_tile(&self, grid: &Grid, row: usize, col: usize) -> Result<LocalTile> {
         match self {
-            DatasetSpec::InMemory(data) => data.tile(grid, row, col),
+            DatasetSpec::InMemory(data) => Ok(data.tile(grid, row, col)),
             DatasetSpec::Synthetic(s) => {
                 let (r0, r1) = grid.chunk(s.n, row);
                 let (c0, c1) = grid.chunk(s.n, col);
-                if s.is_sparse() {
+                Ok(if s.is_sparse() {
                     LocalTile::Sparse(s.sparse_tile(r0, r1, c0, c1))
                 } else {
                     LocalTile::Dense(s.dense_tile(r0, r1, c0, c1))
-                }
+                })
             }
+            DatasetSpec::File(man) => store::rank_tile(man, grid, row, col),
         }
+    }
+}
+
+impl From<Arc<StoreManifest>> for DatasetSpec {
+    fn from(man: Arc<StoreManifest>) -> Self {
+        DatasetSpec::File(man)
+    }
+}
+
+impl From<StoreManifest> for DatasetSpec {
+    fn from(man: StoreManifest) -> Self {
+        DatasetSpec::File(Arc::new(man))
     }
 }
 
@@ -189,11 +239,16 @@ impl From<&JobData> for DatasetRef {
 }
 
 /// One registry entry: the spec is retained so `Arc`-identity caching of
-/// inline data can never alias a freed allocation, plus leader-side shape
-/// info for gathers and validation.
+/// inline data can never alias a freed allocation — and so an **evicted**
+/// dataset (see `EngineConfig::dataset_cache_bytes`) can be rebuilt on
+/// its next use — plus leader-side shape info for gathers and
+/// validation.
 pub(crate) struct DatasetEntry {
     pub spec: Arc<DatasetSpec>,
     pub info: DatasetInfo,
+    /// Whether the rank tiles are currently resident. Cleared by a cache
+    /// eviction; jobs on a non-resident handle transparently reload it.
+    pub resident: bool,
 }
 
 #[cfg(test)]
@@ -233,7 +288,7 @@ mod tests {
         let mut nnz = vec![0usize; 2];
         for row in 0..2 {
             for col in 0..2 {
-                match spec.build_tile(&grid, row, col) {
+                match spec.build_tile(&grid, row, col).unwrap() {
                     LocalTile::Sparse(s) => {
                         for (t, c) in s.iter().enumerate() {
                             nnz[t] += c.nnz();

@@ -1,17 +1,25 @@
 //! The job engine: the crate's public entry point for running distributed
 //! RESCAL(k) work.
 //!
-//! # Lifecycle: configure → load → submit → report → export → serve
+//! # Lifecycle: ingest → configure → load → submit → report → export → serve
 //!
-//! An [`Engine`] is constructed **once** from a typed [`EngineConfig`]
-//! (grid size `p`, [`BackendSpec`], trace policy). Construction spawns
+//! Real corpora enter the system through the storage plane
+//! ([`crate::store`]): `drescal ingest` streams a
+//! `subject<TAB>relation<TAB>object` triple list into checksummed binary
+//! tile shards plus a JSON manifest, once, offline. An [`Engine`] is
+//! then constructed **once** from a typed [`EngineConfig`]
+//! (grid size `p`, [`BackendSpec`], trace policy, resident-tile cache
+//! budget). Construction spawns
 //! the √p×√p grid of rank threads and builds each rank's compute backend
 //! exactly once (see [`pool`]). Data is then **loaded once**:
 //! [`Engine::load_dataset`] distributes a [`DatasetSpec`] and every rank
 //! caches its resident tile — extracted from leader memory
-//! ([`DatasetSpec::InMemory`]) or generated rank-locally from block-keyed
+//! ([`DatasetSpec::InMemory`]), generated rank-locally from block-keyed
 //! RNG streams ([`DatasetSpec::Synthetic`], where the global tensor never
-//! exists anywhere). The returned [`DatasetHandle`] then feeds any number
+//! exists anywhere), or read rank-locally from an ingested corpus's
+//! shards ([`DatasetSpec::File`], where the leader parses only the
+//! manifest and dense tiles memory-map zero-copy at a matching grid).
+//! The returned [`DatasetHandle`] then feeds any number
 //! of typed jobs with **zero per-job data movement**:
 //!
 //! * [`JobSpec::Factorize`] — one distributed non-negative RESCAL
@@ -38,7 +46,15 @@
 //! still accepted everywhere a handle is (auto-registered and cached by
 //! `Arc` identity) so pre-data-plane call sites keep working; auto
 //! registrations are LRU-bounded so a fresh-tensor-per-job loop cannot
-//! grow rank memory without bound.
+//! grow rank memory without bound. Orthogonally,
+//! [`EngineConfig::dataset_cache_bytes`] puts a byte budget on *all*
+//! resident tiles: exceeding it evicts the least-recently-used dataset's
+//! tiles from the ranks (registration survives; the next job on the
+//! handle rebuilds them), counter-asserted through
+//! [`EngineStats::tile_evictions`]. Models exported with
+//! [`Engine::export_model_for`] from an ingested corpus carry its
+//! interned entity/relation names, so `drescal query` resolves names end
+//! to end.
 //!
 //! ```no_run
 //! use drescal::data::synthetic::SyntheticSpec;
@@ -89,11 +105,24 @@ pub struct EngineConfig {
     /// Record per-op timing traces. Off by default: tracing taxes every
     /// hot-path op, so it is opt-in (`--trace` on the CLI).
     pub trace: bool,
+    /// Memory budget (bytes, summed over all rank tiles) for resident
+    /// datasets; 0 = unbounded. When a load pushes the total over the
+    /// budget, the least-recently-used dataset's tiles are dropped from
+    /// the ranks — the registration survives, and the next job on an
+    /// evicted handle transparently rebuilds its tiles (counted in
+    /// `EngineStats::{tile_builds, tile_evictions}`). CLI:
+    /// `--cache-bytes`.
+    pub dataset_cache_bytes: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { p: 4, backend: BackendSpec::Native, trace: false }
+        EngineConfig {
+            p: 4,
+            backend: BackendSpec::Native,
+            trace: false,
+            dataset_cache_bytes: 0,
+        }
     }
 }
 
@@ -110,6 +139,12 @@ impl EngineConfig {
 
     pub fn with_trace(mut self, trace: bool) -> Self {
         self.trace = trace;
+        self
+    }
+
+    /// Set the resident-tile memory budget (0 = unbounded).
+    pub fn with_dataset_cache_bytes(mut self, bytes: usize) -> Self {
+        self.dataset_cache_bytes = bytes;
         self
     }
 
@@ -179,10 +214,18 @@ pub struct EngineStats {
     pub backend_builds: usize,
     /// Per-rank tile materializations since the engine was built. Exactly
     /// `ranks` per registered dataset, however many jobs run on it —
-    /// tiles are never rebuilt between jobs.
+    /// tiles are never rebuilt between jobs — **plus** `ranks` per
+    /// cache-eviction rebuild when `dataset_cache_bytes` is set.
     pub tile_builds: usize,
-    /// Datasets currently registered (resident on the ranks).
+    /// Datasets currently registered (resident on the ranks unless
+    /// evicted by the cache budget).
     pub datasets_resident: usize,
+    /// Dataset evictions forced by `EngineConfig::dataset_cache_bytes`
+    /// (0 forever when the budget is unbounded).
+    pub tile_evictions: usize,
+    /// Bytes of rank-resident tiles right now, summed across datasets
+    /// (the quantity the cache budget bounds).
+    pub resident_bytes: usize,
     /// Jobs completed successfully (pings and dataset loads not counted).
     pub jobs_completed: usize,
 }
@@ -209,6 +252,11 @@ pub struct Engine {
     /// [`Engine::submit`] (not by an explicit `load_dataset` call), in
     /// least-recently-used order; bounded by [`INLINE_RESIDENT_MAX`].
     inline_lru: Vec<usize>,
+    /// Dataset ids whose tiles are currently rank-resident, in
+    /// least-recently-used order — the eviction order when
+    /// `dataset_cache_bytes` is exceeded.
+    resident_lru: Vec<u64>,
+    tile_evictions: usize,
     next_dataset_id: u64,
     jobs_completed: usize,
 }
@@ -228,6 +276,8 @@ impl Engine {
             datasets: HashMap::new(),
             inline_cache: HashMap::new(),
             inline_lru: Vec::new(),
+            resident_lru: Vec::new(),
+            tile_evictions: 0,
             next_dataset_id: 0,
             jobs_completed: 0,
         })
@@ -250,27 +300,15 @@ impl Engine {
         let mut info = spec.info();
         let inline_key = match &spec {
             DatasetSpec::InMemory(data) => Some(Self::inline_key(data)),
-            DatasetSpec::Synthetic(_) => None,
+            _ => None,
         };
         let id = self.next_dataset_id;
         let spec = Arc::new(spec);
-        self.pool.broadcast(&pool::RankJob::LoadDataset {
-            id,
-            spec: Arc::clone(&spec),
-            n: info.n,
-        })?;
-        let outs = self.pool.collect()?;
-        let mut resident = 0usize;
-        for (rank, out) in outs.into_iter().enumerate() {
-            match out {
-                pool::RankOut::Loaded { bytes } => resident += bytes,
-                _ => bail!("rank {rank}: unexpected reply to dataset load"),
-            }
-        }
-        info.resident_bytes = resident;
+        info.resident_bytes = self.distribute_tiles(id, &spec, info.n)?;
         self.next_dataset_id += 1;
         let handle = DatasetHandle(id);
-        self.datasets.insert(id, DatasetEntry { spec, info });
+        self.datasets.insert(id, DatasetEntry { spec, info, resident: true });
+        self.resident_lru.push(id);
         if let Some(key) = inline_key {
             // an explicit load supersedes an *auto*-registration of the
             // same tensor: unload the auto handle (the caller never saw
@@ -283,7 +321,118 @@ impl Engine {
             }
             self.inline_cache.insert(key, handle);
         }
+        self.enforce_cache_budget(id)?;
         Ok(handle)
+    }
+
+    /// Broadcast a dataset's tiles to the ranks and gather the resident
+    /// byte total. On any rank's failure (e.g. a corrupt shard) the
+    /// partial load is rolled back on every rank before the typed error
+    /// is returned, so no rank keeps an orphan tile.
+    fn distribute_tiles(&mut self, id: u64, spec: &Arc<DatasetSpec>, n: usize) -> Result<usize> {
+        self.pool.broadcast(&pool::RankJob::LoadDataset {
+            id,
+            spec: Arc::clone(spec),
+            n,
+        })?;
+        let outs = self.pool.collect()?;
+        let mut resident = 0usize;
+        let mut failure: Option<String> = None;
+        for (rank, out) in outs.into_iter().enumerate() {
+            let msg = match out {
+                pool::RankOut::Loaded { bytes } => {
+                    resident += bytes;
+                    continue;
+                }
+                pool::RankOut::JobError(e) => format!("rank {rank}: {e}"),
+                _ => format!("rank {rank}: unexpected reply to dataset load"),
+            };
+            failure.get_or_insert(msg);
+        }
+        if let Some(msg) = failure {
+            self.pool.broadcast(&pool::RankJob::UnloadDataset { id })?;
+            let _ = self.pool.collect()?;
+            bail!("{msg}");
+        }
+        Ok(resident)
+    }
+
+    /// Make a registered dataset's tiles rank-resident again if the
+    /// cache budget evicted them, and mark it most-recently used.
+    fn ensure_resident(&mut self, id: u64) -> Result<()> {
+        let entry = self
+            .datasets
+            .get(&id)
+            .ok_or_else(|| err!("unknown dataset handle {id}"))?;
+        if entry.resident {
+            self.touch_resident(id);
+            return Ok(());
+        }
+        let spec = Arc::clone(&entry.spec);
+        let n = entry.info.n;
+        let resident = self.distribute_tiles(id, &spec, n)?;
+        let entry = self.datasets.get_mut(&id).expect("entry existence checked above");
+        entry.resident = true;
+        entry.info.resident_bytes = resident;
+        self.resident_lru.push(id);
+        self.enforce_cache_budget(id)
+    }
+
+    fn touch_resident(&mut self, id: u64) {
+        if let Some(pos) = self.resident_lru.iter().position(|&d| d == id) {
+            self.resident_lru.remove(pos);
+            self.resident_lru.push(id);
+        }
+    }
+
+    /// Drop a dataset's rank tiles but keep its registration — the cache
+    /// eviction path, vs [`Engine::unload_dataset`] which forgets the
+    /// handle entirely. The next job on the handle rebuilds the tiles.
+    fn evict_dataset(&mut self, id: u64) -> Result<()> {
+        self.pool.broadcast(&pool::RankJob::UnloadDataset { id })?;
+        let outs = self.pool.collect()?;
+        for (rank, out) in outs.into_iter().enumerate() {
+            match out {
+                pool::RankOut::Unloaded => {}
+                _ => bail!("rank {rank}: unexpected reply to dataset eviction"),
+            }
+        }
+        if let Some(entry) = self.datasets.get_mut(&id) {
+            entry.resident = false;
+            // the tiles are gone from every rank; keep the public
+            // dataset_info accounting truthful until a reload remeasures
+            entry.info.resident_bytes = 0;
+        }
+        self.resident_lru.retain(|&d| d != id);
+        self.tile_evictions += 1;
+        Ok(())
+    }
+
+    /// Enforce [`EngineConfig::dataset_cache_bytes`]: evict
+    /// least-recently-used datasets (never `protect`, the one just
+    /// loaded or used) until the resident total fits. A single dataset
+    /// larger than the whole budget stays resident — evicting it would
+    /// buy nothing.
+    fn enforce_cache_budget(&mut self, protect: u64) -> Result<()> {
+        let budget = self.cfg.dataset_cache_bytes;
+        if budget == 0 {
+            return Ok(());
+        }
+        while self.resident_bytes() > budget {
+            match self.resident_lru.iter().copied().find(|&d| d != protect) {
+                Some(victim) => self.evict_dataset(victim)?,
+                None => break,
+            }
+        }
+        Ok(())
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.datasets
+            .values()
+            .filter(|e| e.resident)
+            .map(|e| e.info.resident_bytes)
+            .sum()
     }
 
     /// Drop a dataset's resident tiles on every rank and forget the
@@ -295,6 +444,7 @@ impl Engine {
         self.inline_cache.retain(|_, h| *h != handle);
         let cache = &self.inline_cache;
         self.inline_lru.retain(|k| cache.contains_key(k));
+        self.resident_lru.retain(|&d| d != handle.0);
         self.pool.broadcast(&pool::RankJob::UnloadDataset { id: handle.0 })?;
         let outs = self.pool.collect()?;
         for (rank, out) in outs.into_iter().enumerate() {
@@ -447,6 +597,26 @@ impl Engine {
         Ok(model)
     }
 
+    /// Like [`Engine::export_model`], but also attaches the training
+    /// dataset's interned entity/relation name dictionaries when it
+    /// carries them (an ingested [`DatasetSpec::File`] corpus does), so
+    /// the served model answers queries by name end to end.
+    pub fn export_model_for(
+        &self,
+        report: &Report,
+        data: DatasetHandle,
+    ) -> Result<crate::serve::FactorModel> {
+        let mut model = self.export_model(report)?;
+        if let Some(entry) = self.datasets.get(&data.0) {
+            if let Some((ents, rels)) = entry.spec.names() {
+                model = model
+                    .with_entity_names(ents.to_vec())?
+                    .with_relation_names(rels.to_vec())?;
+            }
+        }
+        Ok(model)
+    }
+
     /// Convenience: one modeled replay.
     pub fn simulate(&mut self, spec: SimSpec) -> Result<SimReport> {
         let report = self.submit(JobSpec::Simulate(spec))?;
@@ -478,6 +648,8 @@ impl Engine {
             backend_builds: self.pool.backend_builds(),
             tile_builds: self.pool.tile_builds(),
             datasets_resident: self.datasets.len(),
+            tile_evictions: self.tile_evictions,
+            resident_bytes: self.resident_bytes(),
             jobs_completed: self.jobs_completed,
         }
     }
@@ -489,6 +661,7 @@ impl Engine {
         init: DistInit,
     ) -> Result<RescalReport> {
         let handle = self.resolve(data)?;
+        self.ensure_resident(handle.0)?;
         let n = self.datasets[&handle.0].info.n;
         let k = opts.k;
         let t0 = Instant::now();
@@ -537,6 +710,7 @@ impl Engine {
         cfg: RescalkConfig,
     ) -> Result<RescalkReport> {
         let handle = self.resolve(data)?;
+        self.ensure_resident(handle.0)?;
         let n = self.datasets[&handle.0].info.n;
         let t0 = Instant::now();
         self.pool

@@ -237,11 +237,19 @@ fn worker_loop(
             RankJob::Ping => RankOut::Ping(std::thread::current().id()),
             RankJob::LoadDataset { id, spec, n } => {
                 debug_assert_eq!(spec.info().n, n);
-                let tile = spec.build_tile(&ctx.grid, ctx.row, ctx.col);
-                shared.tile_builds.fetch_add(1, Ordering::SeqCst);
-                let bytes = tile.resident_bytes();
-                datasets.insert(id, tile);
-                RankOut::Loaded { bytes }
+                // a failed build (e.g. a corrupt or truncated shard on
+                // this rank's disk) is a typed job error, not a worker
+                // panic — the pool survives and the engine unloads the
+                // partially loaded dataset from the other ranks
+                match spec.build_tile(&ctx.grid, ctx.row, ctx.col) {
+                    Ok(tile) => {
+                        shared.tile_builds.fetch_add(1, Ordering::SeqCst);
+                        let bytes = tile.resident_bytes();
+                        datasets.insert(id, tile);
+                        RankOut::Loaded { bytes }
+                    }
+                    Err(e) => RankOut::JobError(format!("loading dataset {id}: {e}")),
+                }
             }
             RankJob::UnloadDataset { id } => {
                 datasets.remove(&id);

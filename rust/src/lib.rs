@@ -12,13 +12,18 @@
 //! All distributed work goes through [`engine::Engine`], built once from a
 //! typed [`engine::EngineConfig`] and reused for any number of jobs:
 //!
+//! * **ingest** — real corpora enter through the storage plane
+//!   ([`store`]): `drescal ingest` streams a triple list into
+//!   checksummed binary tile shards plus a manifest, with entity and
+//!   relation names interned to deterministic ids;
 //! * **configure** — [`engine::Engine::new`] validates the config, spawns
 //!   the √p×√p rank threads, and builds each rank's compute backend
 //!   exactly once;
 //! * **load** — [`engine::Engine::load_dataset`] distributes a
 //!   [`engine::DatasetSpec`] once; every rank caches its resident tile
-//!   (synthetic data is generated rank-locally — the global tensor never
-//!   exists on the leader);
+//!   (synthetic data is generated rank-locally, and ingested corpora are
+//!   read shard-by-shard on the ranks — dense tiles memory-map
+//!   zero-copy — so the global tensor never exists on the leader);
 //! * **submit** — [`engine::JobSpec::Factorize`] (Alg 3),
 //!   [`engine::JobSpec::ModelSelect`] (Alg 1), or
 //!   [`engine::JobSpec::Simulate`] (the Fig 13 cluster-scale replay),
@@ -69,6 +74,7 @@ pub mod rescal;
 pub mod rng;
 pub mod serve;
 pub mod simulate;
+pub mod store;
 pub mod runtime;
 pub mod tensor;
 pub mod testing;

@@ -31,8 +31,8 @@ use std::collections::BTreeMap;
 
 use drescal::bench_util;
 use drescal::config::{
-    ArtifactsCmd, BenchCmd, Command, ExascaleCmd, ExportCmd, FactorizeCmd, MachineSpec,
-    ModelSelectCmd, QueryCmd, RunConfig, ServeBenchCmd,
+    ArtifactsCmd, BenchCmd, Command, ExascaleCmd, ExportCmd, FactorizeCmd, IngestCmd,
+    MachineSpec, ModelSelectCmd, QueryCmd, RunConfig, ServeBenchCmd,
 };
 use drescal::coordinator::metrics::RunMetrics;
 use drescal::data::synthetic::SyntheticSpec;
@@ -66,6 +66,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Command::Export(cmd) => cmd_export(cmd),
         Command::Query(cmd) => cmd_query(cmd),
         Command::ServeBench(cmd) => cmd_serve_bench(cmd),
+        Command::Ingest(cmd) => cmd_ingest(cmd),
         Command::Help => {
             print_help();
             Ok(())
@@ -81,13 +82,14 @@ USAGE: drescal <subcommand> [--flag value ...]
 
 SUBCOMMANDS
   run           one distributed factorization
-                  --data synthetic|blocks|nations|trade  (default synthetic)
+                  --data synthetic|blocks|nations|trade|file:<manifest>
                   --n --m --k-true   synthetic tensor shape/truth
                   --density D        sparse synthetic tensor (CSR path)
                   --p P              virtual ranks, perfect square (4)
                   --k K              rank of the factorization (4)
                   --iters N          MU iterations (200)
                   --backend native|xla  [--artifacts DIR]
+                  --cache-bytes B    resident-tile budget, LRU-evicted (0 = off)
                   --seed S  --trace  --json
   model-select  RESCALk sweep with automatic k determination
                   (run flags plus) --k-min --k-max --perturbations --delta
@@ -95,9 +97,16 @@ SUBCOMMANDS
   export        train, then persist the factors as a servable model
                   (run flags; --sweep adds the model-select flags and
                   exports the k_opt model)  --model FILE (model.json)
+  ingest        triples -> binary tile shards + manifest (see --data file:)
+                  --input FILE   subject<TAB>relation<TAB>object[<TAB>weight]
+                  --out DIR (corpus)  --grid G (1; GxG shards)
+                  --dense        dense mmap-able blocks instead of CSR
+                  --json
   query         answer a link-prediction query from a saved model
                   --model FILE  --r REL  --top K (5)  --json
                   --s S --o O = score   --s S = (s,r,?)   --o O = (?,r,o)
+                  anchors/--r take indices or names (ingested corpora
+                  carry interned dictionaries into exported models)
   serve-bench   serving-throughput harness on a synthetic model
                   --n --m --k --iters   model shape / training depth
                   --queries Q (2048)  --batch B (64)  --top K (10)
@@ -118,8 +127,9 @@ Tracing is opt-in (--trace): per-op timing costs on every hot-path op."
 
 fn cmd_run(cmd: FactorizeCmd) -> Result<()> {
     let mut engine = Engine::new(cmd.engine)?;
-    // synthetic data is generated rank-locally — the leader never holds X
-    let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.seed))?;
+    // synthetic data is generated rank-locally, file corpora are read
+    // shard-by-shard on the ranks — the leader never holds X
+    let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.seed)?)?;
     let info = engine.dataset_info(data).expect("dataset just registered");
     println!(
         "distributed RESCAL: n={} m={} k={} p={} backend={:?}{}",
@@ -154,7 +164,7 @@ fn cmd_run(cmd: FactorizeCmd) -> Result<()> {
 
 fn cmd_model_select(cmd: ModelSelectCmd) -> Result<()> {
     let mut engine = Engine::new(cmd.engine)?;
-    let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.sweep.seed))?;
+    let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.sweep.seed)?)?;
     let info = engine.dataset_info(data).expect("dataset just registered");
     println!(
         "RESCALk sweep: n={} m={} k∈[{},{}] r={} p={} backend={:?}",
@@ -255,8 +265,9 @@ fn cmd_exascale(cmd: ExascaleCmd) -> Result<()> {
 
 /// Fixed-shape perf harness: factorize + model-select on dense and sparse
 /// synthetic datasets (all through the dataset data plane), the serving
-/// read path, and the kernel plane (packed vs legacy GEMM at
-/// representative RESCAL and serve shapes). Emits one JSON file so CI and
+/// read path, the kernel plane (packed vs legacy GEMM at
+/// representative RESCAL and serve shapes), and the storage plane
+/// (triple ingestion + shard loading). Emits one JSON file so CI and
 /// the perf trajectory have a stable artifact; when a baseline exists,
 /// per-section deltas are printed and `--max-regression` turns a blow-up
 /// into a hard error.
@@ -340,6 +351,44 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
             drescal::tensor::kernel::gemm_nt_into(&q, &entities, &mut scores)
         });
         record("kernel_packed_serve_b64_n8192", st.median);
+    }
+
+    // storage plane: synthesize a triple corpus, ingest it to binary
+    // shards, and load it back through DatasetSpec::File — both rows ride
+    // the same --max-regression gate as the compute sections
+    {
+        use std::io::Write as _;
+        let dir =
+            std::env::temp_dir().join(format!("drescal_bench_ingest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let triples_path = dir.join("triples.tsv");
+        {
+            let file = std::fs::File::create(&triples_path)
+                .with_context(|| format!("creating {}", triples_path.display()))?;
+            let mut w = std::io::BufWriter::new(file);
+            let mut rng = drescal::rng::Rng::new(91);
+            for _ in 0..8192 {
+                writeln!(w, "e{}\tr{}\te{}", rng.below(256), rng.below(2), rng.below(256))
+                    .context("writing bench triples")?;
+            }
+            w.flush().context("flushing bench triples")?;
+        }
+        let corpus = dir.join("corpus");
+        let opts = drescal::store::IngestOptions {
+            grid: 2,
+            dense: false,
+            source: "bench".to_string(),
+        };
+        let t0 = std::time::Instant::now();
+        drescal::store::ingest_triples_file(&triples_path, &corpus, &opts)?;
+        record("ingest_triples_8k_g2", t0.elapsed().as_secs_f64());
+        let spec = drescal::engine::DatasetSpec::from_manifest_path(&corpus)?;
+        let t0 = std::time::Instant::now();
+        let handle = engine.load_dataset(spec)?;
+        record("load_from_file_sparse_g2", t0.elapsed().as_secs_f64());
+        engine.unload_dataset(handle)?;
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     let mut obj = BTreeMap::new();
@@ -440,7 +489,7 @@ fn load_bench_baseline(path: &str) -> Option<BTreeMap<String, f64>> {
 /// engine, and persist the servable model artifact.
 fn cmd_export(cmd: ExportCmd) -> Result<()> {
     let mut engine = Engine::new(cmd.engine)?;
-    let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.seed))?;
+    let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.seed)?)?;
     let info = engine.dataset_info(data).expect("dataset just registered");
     let report = match &cmd.sweep {
         Some(sweep) => {
@@ -474,16 +523,26 @@ fn cmd_export(cmd: ExportCmd) -> Result<()> {
             Report::Factorize(r)
         }
     };
-    let model = engine.export_model(&report)?;
+    // an ingested corpus's interned names ride into the model, so the
+    // served answers are resolvable by entity/relation name
+    let model = engine.export_model_for(&report, data)?;
     model.save(&cmd.model)?;
     println!(
-        "exported factor model (n={} entities, m={} relations, k={}) to {}",
+        "exported factor model (n={} entities, m={} relations, k={}{}) to {}",
         model.n(),
         model.m(),
         model.k(),
+        if model.entity_names().is_some() { ", named" } else { "" },
         cmd.model
     );
-    println!("query it:  drescal query --model {} --s 0 --r 0 --top 5", cmd.model);
+    match model.entity_names().and_then(|names| names.first().cloned()) {
+        Some(first) => println!(
+            "query it:  drescal query --model {} --s {first} --r {} --top 5",
+            cmd.model,
+            model.relation_names().and_then(|r| r.first().cloned()).unwrap_or_default()
+        ),
+        None => println!("query it:  drescal query --model {} --s 0 --r 0 --top 5", cmd.model),
+    }
     Ok(())
 }
 
@@ -503,10 +562,15 @@ fn cmd_query(cmd: QueryCmd) -> Result<()> {
             String::new()
         }
     );
-    let query = match (cmd.s, cmd.o) {
-        (Some(s), Some(o)) => Query::Score { s, r: cmd.r, o },
-        (Some(s), None) => Query::TopObjects { s, r: cmd.r, top: cmd.top },
-        (None, Some(o)) => Query::TopSubjects { o, r: cmd.r, top: cmd.top },
+    // anchors and relation are tokens: integer indices, or names resolved
+    // through the model's interned dictionaries (typed errors either way)
+    let r = model.resolve_relation(&cmd.r)?;
+    let s = cmd.s.as_deref().map(|t| model.resolve_entity(t)).transpose()?;
+    let o = cmd.o.as_deref().map(|t| model.resolve_entity(t)).transpose()?;
+    let query = match (s, o) {
+        (Some(s), Some(o)) => Query::Score { s, r, o },
+        (Some(s), None) => Query::TopObjects { s, r, top: cmd.top },
+        (None, Some(o)) => Query::TopSubjects { o, r, top: cmd.top },
         (None, None) => unreachable!("config validation requires --s and/or --o"),
     };
     let mut qe = QueryEngine::new(model);
@@ -594,6 +658,42 @@ fn cmd_serve_bench(cmd: ServeBenchCmd) -> Result<()> {
          touches the scoring kernels)",
         warm.stats.cache_hits, warm.stats.scored_candidates
     );
+    Ok(())
+}
+
+/// Stream a triple list into binary tile shards + manifest — the entry
+/// point of the storage plane (`--data file:<manifest>` consumes it).
+fn cmd_ingest(cmd: IngestCmd) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let opts = drescal::store::IngestOptions {
+        grid: cmd.grid,
+        dense: cmd.dense,
+        source: cmd.input.clone(),
+    };
+    let report = drescal::store::ingest_triples_file(
+        std::path::Path::new(&cmd.input),
+        std::path::Path::new(&cmd.out),
+        &opts,
+    )?;
+    println!(
+        "ingested {} triples in {}: {} entities x {} relations -> {} {} shard(s), {} \
+         on disk",
+        report.triples,
+        bench_util::fmt_secs(t0.elapsed().as_secs_f64()),
+        report.n,
+        report.m,
+        report.grid * report.grid,
+        report.layout.as_str(),
+        bench_util::fmt_bytes(report.shard_bytes as usize),
+    );
+    println!(
+        "train from it:  drescal run --data file:{} --p {}",
+        report.manifest_path.display(),
+        report.grid * report.grid
+    );
+    if cmd.json {
+        println!("{}", report.to_json());
+    }
     Ok(())
 }
 

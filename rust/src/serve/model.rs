@@ -200,6 +200,63 @@ impl FactorModel {
         self.relation_names.as_deref()
     }
 
+    /// Index of the entity with this exact interned name.
+    pub fn entity_id(&self, name: &str) -> Option<usize> {
+        self.entity_names.as_ref()?.iter().position(|n| n == name)
+    }
+
+    /// Index of the relation with this exact interned name.
+    pub fn relation_id(&self, name: &str) -> Option<usize> {
+        self.relation_names.as_ref()?.iter().position(|n| n == name)
+    }
+
+    /// Resolve a CLI token to an entity index. An exact interned-name
+    /// match wins first — knowledge graphs routinely intern numeric
+    /// names like "1984", which would otherwise be shadowed by index
+    /// parsing and silently resolve to the wrong entity — then a decimal
+    /// integer is taken as an index (bounds-checked). Typed errors
+    /// either way.
+    pub fn resolve_entity(&self, token: &str) -> Result<usize> {
+        if let Some(i) = self.entity_id(token) {
+            return Ok(i);
+        }
+        if let Ok(i) = token.parse::<usize>() {
+            if i < self.n() {
+                return Ok(i);
+            }
+            bail!("entity index {i} out of range (model has {} entities)", self.n());
+        }
+        match &self.entity_names {
+            Some(_) => Err(err!("unknown entity name '{token}'")),
+            None => Err(err!(
+                "entity '{token}' is not an index and this model carries no entity \
+                 names (export from an ingested corpus to query by name)"
+            )),
+        }
+    }
+
+    /// Resolve a CLI token to a relation index — the relation analogue
+    /// of [`FactorModel::resolve_entity`] (exact name first, then
+    /// integer index).
+    pub fn resolve_relation(&self, token: &str) -> Result<usize> {
+        if let Some(r) = self.relation_id(token) {
+            return Ok(r);
+        }
+        if let Ok(r) = token.parse::<usize>() {
+            if r < self.m() {
+                return Ok(r);
+            }
+            bail!("relation index {r} out of range (model has {} relations)", self.m());
+        }
+        match &self.relation_names {
+            Some(_) => Err(err!("unknown relation name '{token}'")),
+            None => Err(err!(
+                "relation '{token}' is not an index and this model carries no relation \
+                 names (export from an ingested corpus to query by name)"
+            )),
+        }
+    }
+
     pub fn provenance(&self) -> &Provenance {
         &self.provenance
     }
@@ -377,6 +434,48 @@ mod tests {
     fn name_length_validation() {
         assert!(tiny_model().with_entity_names(vec!["a".into()]).is_err());
         assert!(tiny_model().with_relation_names(vec!["a".into()]).is_err());
+    }
+
+    #[test]
+    fn name_resolution_accepts_ids_and_names() {
+        let named = tiny_model()
+            .with_entity_names((0..6).map(|i| format!("node{i}")).collect())
+            .unwrap()
+            .with_relation_names(vec!["likes".into(), "knows".into(), "owns".into()])
+            .unwrap();
+        assert_eq!(named.entity_id("node4"), Some(4));
+        assert_eq!(named.relation_id("owns"), Some(2));
+        assert_eq!(named.resolve_entity("node2").unwrap(), 2);
+        assert_eq!(named.resolve_entity("5").unwrap(), 5, "integers stay indices");
+        assert_eq!(named.resolve_relation("knows").unwrap(), 1);
+        // a numeric *name* beats index parsing — entity "3" at index 0
+        // must not silently resolve to index 3
+        let numeric = tiny_model()
+            .with_entity_names(vec![
+                "3".into(),
+                "1984".into(),
+                "a".into(),
+                "b".into(),
+                "c".into(),
+                "d".into(),
+            ])
+            .unwrap();
+        assert_eq!(numeric.resolve_entity("3").unwrap(), 0, "exact name wins");
+        assert_eq!(numeric.resolve_entity("1984").unwrap(), 1);
+        assert_eq!(numeric.resolve_entity("4").unwrap(), 4, "non-name integer = index");
+        let e = named.resolve_entity("nobody").unwrap_err();
+        assert!(e.to_string().contains("unknown entity name"), "{e}");
+        let e = named.resolve_entity("99").unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+        let e = named.resolve_relation("99").unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+        // a nameless model still resolves indices, with a pointed error
+        // for names
+        let bare = tiny_model();
+        assert_eq!(bare.resolve_entity("3").unwrap(), 3);
+        let e = bare.resolve_entity("alice").unwrap_err();
+        assert!(e.to_string().contains("no entity names"), "{e}");
+        assert!(bare.resolve_relation("knows").is_err());
     }
 
     #[test]

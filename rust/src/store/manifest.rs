@@ -1,0 +1,391 @@
+//! The JSON manifest that describes an ingested dataset directory.
+//!
+//! `manifest.json` sits next to the shard files and records everything a
+//! loader needs without touching any payload: global dims, the ingest
+//! grid, layout, per-shard file names with sizes and checksums, the
+//! interned entity/relation name dictionaries (deterministic
+//! first-appearance IDs), and provenance. The leader reads *only* this
+//! file; shard payloads are read rank-locally.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Context as _, Result};
+use crate::json::Json;
+use crate::{bail, err};
+
+/// Current manifest format version.
+pub const MANIFEST_VERSION: u64 = 1;
+/// File name of the manifest inside a dataset directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// How tiles are stored on disk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// Contiguous row-major f32 blocks (memory-mappable).
+    Dense,
+    /// CSR slices per relation.
+    Sparse,
+}
+
+impl Layout {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Layout::Dense => "dense",
+            Layout::Sparse => "sparse",
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Layout::Sparse)
+    }
+
+    pub fn parse(s: &str) -> Result<Layout> {
+        match s {
+            "dense" => Ok(Layout::Dense),
+            "sparse" => Ok(Layout::Sparse),
+            other => Err(err!("unknown shard layout '{other}' (dense|sparse)")),
+        }
+    }
+}
+
+/// One shard file's manifest entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMeta {
+    /// Grid row of the tile this shard holds.
+    pub row: usize,
+    /// Grid column.
+    pub col: usize,
+    /// File name, relative to the manifest's directory.
+    pub file: String,
+    /// Total file size (header + payload) in bytes.
+    pub bytes: u64,
+    /// FNV-1a 64 of the payload, mirrored in the shard header.
+    pub checksum: u64,
+}
+
+/// Where the corpus came from.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct IngestProvenance {
+    /// Source label (the input triple file's path at ingest time).
+    pub source: String,
+    /// Triple lines imported (before duplicate merging).
+    pub triples: u64,
+}
+
+/// A parsed dataset manifest plus the directory it lives in.
+#[derive(Clone, Debug)]
+pub struct StoreManifest {
+    /// Global entity count (the tensor is n×n×m).
+    pub n: usize,
+    /// Relation count.
+    pub m: usize,
+    /// Ingest grid side length g — the directory holds g×g shards.
+    pub grid: usize,
+    pub layout: Layout,
+    pub shards: Vec<ShardMeta>,
+    /// Entity names by interned id (first-appearance order).
+    pub entities: Vec<String>,
+    /// Relation names by interned id.
+    pub relations: Vec<String>,
+    pub provenance: IngestProvenance,
+    /// Directory holding the manifest and shards (not serialized).
+    pub dir: PathBuf,
+}
+
+impl StoreManifest {
+    /// Structural validation: sane dims, a complete g×g shard set with no
+    /// duplicates, and name dictionaries matching the dims.
+    pub fn validate(&self) -> Result<()> {
+        if self.n == 0 || self.m == 0 {
+            bail!("manifest has empty dims n={} m={}", self.n, self.m);
+        }
+        if self.grid == 0 {
+            bail!("manifest grid must be >= 1");
+        }
+        if self.grid > self.n {
+            bail!("manifest grid {} exceeds entity count {}", self.grid, self.n);
+        }
+        if self.shards.len() != self.grid * self.grid {
+            bail!(
+                "manifest lists {} shards for a {g}×{g} grid (need {})",
+                self.shards.len(),
+                self.grid * self.grid,
+                g = self.grid
+            );
+        }
+        let mut seen = vec![false; self.grid * self.grid];
+        for s in &self.shards {
+            if s.row >= self.grid || s.col >= self.grid {
+                bail!("shard {} is at ({}, {}), outside the grid", s.file, s.row, s.col);
+            }
+            let idx = s.row * self.grid + s.col;
+            if seen[idx] {
+                bail!("duplicate shard entry for tile ({}, {})", s.row, s.col);
+            }
+            seen[idx] = true;
+        }
+        if self.entities.len() != self.n {
+            bail!(
+                "manifest has {} entity names for n={} entities",
+                self.entities.len(),
+                self.n
+            );
+        }
+        if self.relations.len() != self.m {
+            bail!(
+                "manifest has {} relation names for m={} relations",
+                self.relations.len(),
+                self.m
+            );
+        }
+        Ok(())
+    }
+
+    /// The manifest entry of tile (row, col).
+    pub fn shard(&self, row: usize, col: usize) -> Result<&ShardMeta> {
+        self.shards
+            .iter()
+            .find(|s| s.row == row && s.col == col)
+            .ok_or_else(|| err!("manifest has no shard for tile ({row}, {col})"))
+    }
+
+    /// Absolute path of a shard file.
+    pub fn shard_path(&self, meta: &ShardMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Total on-disk size of all shards.
+    pub fn shard_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.bytes).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("kind".to_string(), Json::Str("drescal_dataset".to_string()));
+        obj.insert("version".to_string(), Json::Num(MANIFEST_VERSION as f64));
+        obj.insert("n".to_string(), Json::Num(self.n as f64));
+        obj.insert("m".to_string(), Json::Num(self.m as f64));
+        obj.insert("grid".to_string(), Json::Num(self.grid as f64));
+        obj.insert("layout".to_string(), Json::Str(self.layout.as_str().to_string()));
+        obj.insert(
+            "shards".to_string(),
+            Json::Arr(
+                self.shards
+                    .iter()
+                    .map(|s| {
+                        let mut row = BTreeMap::new();
+                        row.insert("row".to_string(), Json::Num(s.row as f64));
+                        row.insert("col".to_string(), Json::Num(s.col as f64));
+                        row.insert("file".to_string(), Json::Str(s.file.clone()));
+                        row.insert("bytes".to_string(), Json::Num(s.bytes as f64));
+                        // u64 checksums don't fit an f64 exactly — hex string
+                        row.insert(
+                            "checksum".to_string(),
+                            Json::Str(format!("{:016x}", s.checksum)),
+                        );
+                        Json::Obj(row)
+                    })
+                    .collect(),
+            ),
+        );
+        let names = |v: &[String]| Json::Arr(v.iter().map(|s| Json::Str(s.clone())).collect());
+        obj.insert("entities".to_string(), names(&self.entities));
+        obj.insert("relations".to_string(), names(&self.relations));
+        let mut prov = BTreeMap::new();
+        prov.insert("source".to_string(), Json::Str(self.provenance.source.clone()));
+        prov.insert("triples".to_string(), Json::Num(self.provenance.triples as f64));
+        obj.insert("provenance".to_string(), Json::Obj(prov));
+        Json::Obj(obj)
+    }
+
+    /// Parse a manifest rooted at `dir`.
+    pub fn from_json(v: &Json, dir: PathBuf) -> Result<StoreManifest> {
+        match v.get("kind").and_then(|k| k.as_str()) {
+            Some("drescal_dataset") => {}
+            Some(other) => bail!("expected a drescal_dataset manifest, got kind '{other}'"),
+            None => bail!("manifest is missing 'kind'"),
+        }
+        let version = v
+            .get("version")
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| err!("manifest is missing 'version'"))? as u64;
+        if version != MANIFEST_VERSION {
+            bail!(
+                "manifest version {version} is not supported (this build reads \
+                 {MANIFEST_VERSION})"
+            );
+        }
+        let usize_field = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .map(|x| x as usize)
+                .ok_or_else(|| err!("manifest is missing '{key}'"))
+        };
+        let layout = Layout::parse(
+            v.get("layout")
+                .and_then(|l| l.as_str())
+                .ok_or_else(|| err!("manifest is missing 'layout'"))?,
+        )?;
+        let mut shards = Vec::new();
+        for (i, row) in v
+            .get("shards")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| err!("manifest is missing 'shards'"))?
+            .iter()
+            .enumerate()
+        {
+            let field = |key: &str| -> Result<&Json> {
+                row.get(key).ok_or_else(|| err!("shard entry {i} is missing '{key}'"))
+            };
+            let checksum_hex = field("checksum")?
+                .as_str()
+                .ok_or_else(|| err!("shard entry {i}: 'checksum' must be a hex string"))?;
+            let checksum = u64::from_str_radix(checksum_hex, 16)
+                .map_err(|_| err!("shard entry {i}: bad checksum '{checksum_hex}'"))?;
+            shards.push(ShardMeta {
+                row: field("row")?
+                    .as_usize()
+                    .ok_or_else(|| err!("shard entry {i}: 'row' must be a number"))?,
+                col: field("col")?
+                    .as_usize()
+                    .ok_or_else(|| err!("shard entry {i}: 'col' must be a number"))?,
+                file: field("file")?
+                    .as_str()
+                    .ok_or_else(|| err!("shard entry {i}: 'file' must be a string"))?
+                    .to_string(),
+                bytes: field("bytes")?
+                    .as_f64()
+                    .ok_or_else(|| err!("shard entry {i}: 'bytes' must be a number"))?
+                    as u64,
+                checksum,
+            });
+        }
+        let names = |key: &str| -> Result<Vec<String>> {
+            v.get(key)
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| err!("manifest is missing '{key}'"))?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| err!("'{key}' entries must be strings"))
+                })
+                .collect()
+        };
+        let provenance = match v.get("provenance") {
+            Some(p) => IngestProvenance {
+                source: p
+                    .get("source")
+                    .and_then(|s| s.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                triples: p.get("triples").and_then(|t| t.as_f64()).unwrap_or(0.0) as u64,
+            },
+            None => IngestProvenance::default(),
+        };
+        let manifest = StoreManifest {
+            n: usize_field("n")?,
+            m: usize_field("m")?,
+            grid: usize_field("grid")?,
+            layout,
+            shards,
+            entities: names("entities")?,
+            relations: names("relations")?,
+            provenance,
+            dir,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Write `manifest.json` into `self.dir`, returning its path.
+    pub fn save(&self) -> Result<PathBuf> {
+        let path = self.dir.join(MANIFEST_FILE);
+        std::fs::write(&path, self.to_json().to_string())
+            .with_context(|| format!("writing manifest to {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load a manifest from a `manifest.json` path or a dataset
+    /// directory containing one.
+    pub fn load(path: impl AsRef<Path>) -> Result<StoreManifest> {
+        let given = path.as_ref();
+        let file = if given.is_dir() { given.join(MANIFEST_FILE) } else { given.to_path_buf() };
+        let text = std::fs::read_to_string(&file)
+            .with_context(|| format!("reading dataset manifest {}", file.display()))?;
+        let v = Json::parse(&text).map_err(|e| err!("manifest JSON: {e}"))?;
+        let dir = file.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."));
+        StoreManifest::from_json(&v, dir)
+            .with_context(|| format!("loading {}", file.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StoreManifest {
+        StoreManifest {
+            n: 3,
+            m: 2,
+            grid: 1,
+            layout: Layout::Sparse,
+            shards: vec![ShardMeta {
+                row: 0,
+                col: 0,
+                file: "shard_0_0.bin".to_string(),
+                bytes: 128,
+                checksum: 0xdead_beef_cafe_f00d,
+            }],
+            entities: vec!["alice".into(), "bob".into(), "carol".into()],
+            relations: vec!["knows".into(), "likes".into()],
+            provenance: IngestProvenance { source: "toy.tsv".into(), triples: 4 },
+            dir: PathBuf::from("/tmp"),
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let man = sample();
+        let text = man.to_json().to_string();
+        let back =
+            StoreManifest::from_json(&Json::parse(&text).unwrap(), PathBuf::from("/tmp"))
+                .unwrap();
+        assert_eq!(back.n, man.n);
+        assert_eq!(back.m, man.m);
+        assert_eq!(back.grid, man.grid);
+        assert_eq!(back.layout, man.layout);
+        assert_eq!(back.shards, man.shards);
+        assert_eq!(back.entities, man.entities);
+        assert_eq!(back.relations, man.relations);
+        assert_eq!(back.provenance, man.provenance);
+    }
+
+    #[test]
+    fn validation_rejects_inconsistency() {
+        let mut man = sample();
+        man.entities.pop();
+        assert!(man.validate().unwrap_err().to_string().contains("entity names"));
+        let mut man = sample();
+        man.grid = 2; // 1 shard for a 2×2 grid
+        assert!(man.validate().is_err());
+        let mut man = sample();
+        man.shards.push(man.shards[0].clone());
+        man.grid = 1;
+        assert!(man.validate().is_err());
+        let mut man = sample();
+        man.grid = 9; // grid larger than n
+        assert!(man.validate().is_err());
+    }
+
+    #[test]
+    fn foreign_json_is_rejected() {
+        let bad = Json::parse(r#"{"kind":"factor_model"}"#).unwrap();
+        let e = StoreManifest::from_json(&bad, PathBuf::from(".")).unwrap_err();
+        assert!(e.to_string().contains("drescal_dataset"), "{e}");
+        assert!(StoreManifest::from_json(&Json::parse("{}").unwrap(), PathBuf::from("."))
+            .is_err());
+        assert!(StoreManifest::load("/nonexistent/manifest.json").is_err());
+    }
+}

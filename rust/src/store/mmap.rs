@@ -1,0 +1,216 @@
+//! Small internal memory-map wrapper (the offline crate set has no
+//! `memmap2`).
+//!
+//! [`MmapFile`] is a read-only byte view of a file: a real private
+//! `mmap(2)` on unix (declared directly against the C library std
+//! already links — no new dependency), and a plain heap read everywhere
+//! else or when the mapping syscall fails. Callers branch on
+//! [`MmapFile::is_mapped`] only for accounting; the byte view behaves
+//! identically either way.
+//!
+//! [`MappedF32`] reinterprets an aligned little-endian window of the
+//! bytes as `[f32]` so dense shard payloads can back
+//! [`crate::tensor::Mat::from_shared`] windows with zero copies.
+
+use std::fs::File;
+use std::path::Path;
+
+use crate::error::{Context as _, Result};
+
+enum Inner {
+    /// A live `mmap(2)` region, unmapped on drop.
+    #[cfg(unix)]
+    Mapped { ptr: *mut u8, len: usize },
+    /// Fallback: the whole file read onto the heap.
+    Heap(Vec<u8>),
+}
+
+/// A read-only byte view of a file (memory-mapped where possible).
+pub struct MmapFile {
+    inner: Inner,
+}
+
+// The mapped region is private and read-only for the struct's lifetime.
+unsafe impl Send for MmapFile {}
+unsafe impl Sync for MmapFile {}
+
+#[cfg(unix)]
+mod sys {
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+impl MmapFile {
+    /// Map (or read) a whole file.
+    pub fn open(path: &Path) -> Result<MmapFile> {
+        let file =
+            File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len() as usize;
+        #[cfg(unix)]
+        if len > 0 {
+            use std::os::unix::io::AsRawFd;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if !ptr.is_null() && ptr as isize != -1 {
+                return Ok(MmapFile { inner: Inner::Mapped { ptr, len } });
+            }
+            // mmap refused (weird filesystem?) — fall through to a read
+        }
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Ok(MmapFile { inner: Inner::Heap(bytes) })
+    }
+
+    /// Total length in bytes.
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            #[cfg(unix)]
+            Inner::Mapped { len, .. } => *len,
+            Inner::Heap(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this view is a real mapping (vs the heap-read fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.inner {
+            #[cfg(unix)]
+            Inner::Mapped { .. } => true,
+            Inner::Heap(_) => false,
+        }
+    }
+
+    /// The full byte view.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.inner {
+            #[cfg(unix)]
+            Inner::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            Inner::Heap(v) => v,
+        }
+    }
+}
+
+impl Drop for MmapFile {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Inner::Mapped { ptr, len } = &self.inner {
+            unsafe {
+                sys::munmap(*ptr, *len);
+            }
+        }
+    }
+}
+
+/// An f32 window of a file view, shareable across the relation slices of
+/// one dense tile through [`crate::tensor::Mat::from_shared`].
+pub struct MappedF32 {
+    map: MmapFile,
+    /// Byte offset of the first f32.
+    off: usize,
+    /// Window length in f32s.
+    len: usize,
+}
+
+impl MappedF32 {
+    /// Wrap `byte_len` payload bytes starting at `byte_off` as f32s.
+    /// Gives the file view back (`Err`) when zero-copy reinterpretation
+    /// is unsound: misaligned pointer, out-of-range window, or a
+    /// big-endian host (shards are little-endian on disk).
+    pub fn new(map: MmapFile, byte_off: usize, byte_len: usize) -> Result<MappedF32, MmapFile> {
+        let ok = cfg!(target_endian = "little")
+            && byte_len % 4 == 0
+            && byte_off + byte_len <= map.len()
+            && (map.bytes().as_ptr() as usize + byte_off) % std::mem::align_of::<f32>() == 0;
+        if ok {
+            Ok(MappedF32 { map, off: byte_off, len: byte_len / 4 })
+        } else {
+            Err(map)
+        }
+    }
+
+    /// Whether the underlying view is a real mapping.
+    pub fn is_mapped(&self) -> bool {
+        self.map.is_mapped()
+    }
+}
+
+impl AsRef<[f32]> for MappedF32 {
+    fn as_ref(&self) -> &[f32] {
+        let b = &self.map.bytes()[self.off..self.off + self.len * 4];
+        // alignment and endianness were checked at construction
+        unsafe { std::slice::from_raw_parts(b.as_ptr() as *const f32, self.len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_and_reads_a_file() {
+        let dir = std::env::temp_dir().join(format!("drescal_mmap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let payload: Vec<u8> = (0u8..255).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let map = MmapFile::open(&path).unwrap();
+        assert_eq!(map.len(), payload.len());
+        assert_eq!(map.bytes(), &payload[..]);
+        #[cfg(unix)]
+        assert!(map.is_mapped(), "unix must take the real mmap path");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn f32_window_round_trips() {
+        let dir = std::env::temp_dir().join(format!("drescal_mmapf_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("f32s.bin");
+        let mut bytes = Vec::new();
+        for v in [1.5f32, -2.25, 0.0, 123.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let map = MmapFile::open(&path).unwrap();
+        let win = MappedF32::new(map, 0, 16).ok().expect("aligned LE window");
+        assert_eq!(win.as_ref(), &[1.5, -2.25, 0.0, 123.0]);
+        // an odd byte offset cannot be reinterpreted
+        let map = MmapFile::open(&path).unwrap();
+        assert!(MappedF32::new(map, 1, 8).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_a_typed_error() {
+        let e = MmapFile::open(Path::new("/nonexistent/drescal.shard")).unwrap_err();
+        assert!(e.to_string().contains("opening"), "{e}");
+    }
+}

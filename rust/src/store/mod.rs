@@ -1,0 +1,391 @@
+//! The dataset ingestion & storage plane: real corpora, from text to
+//! rank-resident tiles.
+//!
+//! The paper's exascale premise is that **no process ever holds the
+//! global tensor** — each rank owns one `X^(i,j)` tile. The engine's
+//! data plane already enforced that at compute time
+//! ([`crate::engine::dataset`]); this subsystem extends it to *storage*,
+//! mirroring the engine/serve split with a third plane:
+//!
+//! * **ingest** ([`triples`]) — a streaming importer takes a
+//!   `subject<TAB>relation<TAB>object[<TAB>weight]` triple list,
+//!   interns names to deterministic first-appearance ids, and routes
+//!   every triple through per-shard spill files so peak memory is
+//!   `O(dictionaries + largest tile)`, never `O(triples)`. CLI:
+//!   `drescal ingest`.
+//! * **store** ([`shard`], [`manifest`]) — one versioned binary file
+//!   per (grid-row, grid-col) tile: CSR slices for sparse corpora,
+//!   contiguous row-major f32 blocks for dense ones, each carrying its
+//!   own FNV-1a 64 payload checksum; a JSON `manifest.json` records
+//!   dims, grid, layout, per-shard checksums, the entity/relation name
+//!   dictionaries, and provenance. Truncation, bit-flips, and
+//!   manifest/shard mismatches surface as typed errors, never panics.
+//! * **load** ([`rank_tile`], [`mmap`]) — each rank of a loading engine
+//!   reads **only its own shard(s)**: the leader parses the manifest and
+//!   nothing else. When the engine grid matches the ingest grid, dense
+//!   tiles are memory-mapped and handed to the rank **zero-copy**
+//!   ([`crate::tensor::Mat::from_shared`] windows into the mapping, with
+//!   copy-on-write semantics the read-only training loop never
+//!   triggers). Any other grid size re-shards at load time by splicing
+//!   the overlapping shards. Wired into the engine as
+//!   [`crate::engine::DatasetSpec::File`] (CLI: `--data
+//!   file:<manifest>`).
+//!
+//! The [`stats`] counters (shard reads, mapped vs spliced tiles) make
+//! the locality guarantees counter-assertable in tests, the same way
+//! `EngineStats::tile_builds` proves tile reuse.
+
+pub mod manifest;
+pub mod mmap;
+pub mod shard;
+pub mod triples;
+
+pub use manifest::{IngestProvenance, Layout, ShardMeta, StoreManifest};
+pub use mmap::{MappedF32, MmapFile};
+pub use shard::{ShardDigest, ShardHeader};
+pub use triples::{ingest_triples_file, IngestOptions, IngestReport};
+
+use crate::comm::Grid;
+use crate::coordinator::JobData;
+use crate::error::Result;
+use crate::rescal::LocalTile;
+use crate::tensor::{Csr, Mat, Tensor3};
+use crate::{bail, err};
+
+/// Process-wide storage-plane counters, for tests and diagnostics.
+pub mod stats {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static SHARD_READS: AtomicUsize = AtomicUsize::new(0);
+    static SHARD_BYTES_READ: AtomicUsize = AtomicUsize::new(0);
+    static MAPPED_TILES: AtomicUsize = AtomicUsize::new(0);
+    static MAPPED_BYTES: AtomicUsize = AtomicUsize::new(0);
+    static SPLICED_TILES: AtomicUsize = AtomicUsize::new(0);
+
+    /// A snapshot of the cumulative counters.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct StoreStats {
+        /// Shard payloads opened and checksum-verified.
+        pub shard_reads: usize,
+        /// Total shard bytes those reads covered.
+        pub shard_bytes_read: usize,
+        /// Dense tiles resident as zero-copy mmap windows.
+        pub mapped_tiles: usize,
+        /// Payload bytes backing those mapped tiles.
+        pub mapped_bytes: usize,
+        /// Tiles materialized by re-sharding (grid mismatch).
+        pub spliced_tiles: usize,
+    }
+
+    pub fn snapshot() -> StoreStats {
+        StoreStats {
+            shard_reads: SHARD_READS.load(Ordering::SeqCst),
+            shard_bytes_read: SHARD_BYTES_READ.load(Ordering::SeqCst),
+            mapped_tiles: MAPPED_TILES.load(Ordering::SeqCst),
+            mapped_bytes: MAPPED_BYTES.load(Ordering::SeqCst),
+            spliced_tiles: SPLICED_TILES.load(Ordering::SeqCst),
+        }
+    }
+
+    pub(crate) fn note_shard_read(bytes: usize) {
+        SHARD_READS.fetch_add(1, Ordering::SeqCst);
+        SHARD_BYTES_READ.fetch_add(bytes, Ordering::SeqCst);
+    }
+
+    pub(crate) fn note_mapped_tile(bytes: usize) {
+        MAPPED_TILES.fetch_add(1, Ordering::SeqCst);
+        MAPPED_BYTES.fetch_add(bytes, Ordering::SeqCst);
+    }
+
+    pub(crate) fn note_spliced_tile() {
+        SPLICED_TILES.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// Read one shard's tile exactly as stored (no re-sharding).
+fn read_tile_direct(man: &StoreManifest, row: usize, col: usize) -> Result<LocalTile> {
+    let meta = man.shard(row, col)?;
+    let path = man.shard_path(meta);
+    let (hd, map) = shard::read_shard(&path, Some(meta))?;
+    let src_grid = Grid::new(man.grid * man.grid);
+    let (r0, r1) = src_grid.chunk(man.n, row);
+    let (c0, c1) = src_grid.chunk(man.n, col);
+    if hd.rows != r1 - r0 || hd.cols != c1 - c0 || hd.m != man.m {
+        bail!(
+            "shard {} holds a {}×{}×{} tile but the manifest expects {}×{}×{} at \
+             ({row}, {col})",
+            path.display(),
+            hd.rows,
+            hd.cols,
+            hd.m,
+            r1 - r0,
+            c1 - c0,
+            man.m
+        );
+    }
+    match man.layout {
+        Layout::Dense => {
+            if hd.kind != shard::KIND_DENSE {
+                bail!("shard {} is sparse but the manifest says dense", path.display());
+            }
+            let (tile, mapped) = shard::dense_tile_from(map, &hd, &path)?;
+            if mapped {
+                stats::note_mapped_tile(hd.payload_len as usize);
+            }
+            Ok(LocalTile::Dense(tile))
+        }
+        Layout::Sparse => {
+            if hd.kind != shard::KIND_SPARSE {
+                bail!("shard {} is dense but the manifest says sparse", path.display());
+            }
+            Ok(LocalTile::Sparse(shard::sparse_tile_from(&map, &hd, &path)?))
+        }
+    }
+}
+
+/// Materialize rank (row, col)'s tile of an engine grid from an ingested
+/// dataset. Runs **on the rank**: only the shards overlapping this tile
+/// are opened; the leader never reads a payload.
+///
+/// * engine grid == ingest grid: the tile *is* one shard — dense tiles
+///   become zero-copy mmap windows;
+/// * otherwise the corpus is **re-sharded at load time**: the rank
+///   splices its row/col range out of every overlapping shard. Dense
+///   source shards are read through the mapping and only the overlap is
+///   copied; sparse shards are decoded as a row *window*
+///   ([`shard::sparse_rows_from`]) — so splice memory stays
+///   O(target tile), never O(source shard), even when many ranks load a
+///   grid-1 corpus concurrently.
+pub fn rank_tile(
+    man: &StoreManifest,
+    grid: &Grid,
+    row: usize,
+    col: usize,
+) -> Result<LocalTile> {
+    if grid.q == man.grid {
+        return read_tile_direct(man, row, col);
+    }
+    stats::note_spliced_tile();
+    let (r0, r1) = grid.chunk(man.n, row);
+    let (c0, c1) = grid.chunk(man.n, col);
+    let (rows, cols) = (r1 - r0, c1 - c0);
+    let src_grid = Grid::new(man.grid * man.grid);
+    let mut dense_slices: Vec<Mat> = match man.layout {
+        Layout::Dense => (0..man.m).map(|_| Mat::zeros(rows, cols)).collect(),
+        Layout::Sparse => Vec::new(),
+    };
+    let mut sparse_trips: Vec<Vec<(usize, usize, f32)>> = match man.layout {
+        Layout::Sparse => vec![Vec::new(); man.m],
+        Layout::Dense => Vec::new(),
+    };
+    for si in 0..man.grid {
+        let (sr0, sr1) = src_grid.chunk(man.n, si);
+        if sr1 <= r0 || sr0 >= r1 {
+            continue;
+        }
+        for sj in 0..man.grid {
+            let (sc0, sc1) = src_grid.chunk(man.n, sj);
+            if sc1 <= c0 || sc0 >= c1 {
+                continue;
+            }
+            let (rlo, rhi) = (r0.max(sr0), r1.min(sr1));
+            let (clo, chi) = (c0.max(sc0), c1.min(sc1));
+            match man.layout {
+                Layout::Dense => match read_tile_direct(man, si, sj)? {
+                    LocalTile::Dense(t3) => {
+                        for (t, dst) in dense_slices.iter_mut().enumerate() {
+                            let src = t3.slice(t);
+                            for gr in rlo..rhi {
+                                let srow = &src.row(gr - sr0)[clo - sc0..chi - sc0];
+                                dst.row_mut(gr - r0)[clo - c0..chi - c0]
+                                    .copy_from_slice(srow);
+                            }
+                        }
+                    }
+                    LocalTile::Sparse(_) => {
+                        bail!("dense manifest produced a sparse tile")
+                    }
+                },
+                Layout::Sparse => {
+                    // decode only this rank's row window of the shard —
+                    // never the shard's full CSR arrays
+                    let meta = man.shard(si, sj)?;
+                    let path = man.shard_path(meta);
+                    let (hd, map) = shard::read_shard(&path, Some(meta))?;
+                    if hd.rows != sr1 - sr0 || hd.cols != sc1 - sc0 || hd.m != man.m {
+                        bail!(
+                            "shard {} holds a {}×{}×{} tile but the manifest expects \
+                             {}×{}×{} at ({si}, {sj})",
+                            path.display(),
+                            hd.rows,
+                            hd.cols,
+                            hd.m,
+                            sr1 - sr0,
+                            sc1 - sc0,
+                            man.m
+                        );
+                    }
+                    let window =
+                        shard::sparse_rows_from(&map, &hd, &path, rlo - sr0, rhi - sr0)?;
+                    for (t, csr) in window.iter().enumerate() {
+                        for wr in 0..csr.rows() {
+                            let gr = rlo + wr;
+                            let (cols_idx, vals) = csr.row_entries(wr);
+                            for (&j, &v) in cols_idx.iter().zip(vals) {
+                                let gc = sc0 + j;
+                                if gc >= clo && gc < chi {
+                                    sparse_trips[t].push((gr - r0, gc - c0, v));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(match man.layout {
+        Layout::Dense => LocalTile::Dense(Tensor3::from_slices(dense_slices)),
+        Layout::Sparse => LocalTile::Sparse(
+            sparse_trips
+                .into_iter()
+                .map(|t| Csr::from_triplets(rows, cols, t))
+                .collect(),
+        ),
+    })
+}
+
+/// Materialize the whole corpus on the caller — the legacy leader-side
+/// form, for parity tests and the `DataSpec::load` compatibility path.
+/// Production loading goes through [`rank_tile`] instead.
+pub fn read_dataset_inline(man: &StoreManifest) -> Result<JobData> {
+    match rank_tile(man, &Grid::new(1), 0, 0)? {
+        LocalTile::Dense(t3) => Ok(JobData::dense(t3)),
+        LocalTile::Sparse(slices) => {
+            // an ingested corpus is always square (n×n×m) by construction
+            if slices.iter().any(|c| c.rows() != man.n || c.cols() != man.n) {
+                return Err(err!("corpus tiles do not assemble to an n×n tensor"));
+            }
+            Ok(JobData::sparse(slices))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("drescal_store_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn toy_corpus(dir: &PathBuf, grid: usize, dense: bool) -> StoreManifest {
+        let input = dir.join("kg.tsv");
+        let mut text = String::new();
+        let mut rng = Rng::new(41);
+        for _ in 0..300 {
+            text.push_str(&format!(
+                "e{}\tr{}\te{}\n",
+                rng.below(19),
+                rng.below(2),
+                rng.below(19)
+            ));
+        }
+        std::fs::write(&input, &text).unwrap();
+        let out = dir.join(format!("corpus_g{grid}_{dense}"));
+        let report = ingest_triples_file(
+            &input,
+            &out,
+            &IngestOptions { grid, dense, source: "kg.tsv".into() },
+        )
+        .unwrap();
+        StoreManifest::load(&report.manifest_path).unwrap()
+    }
+
+    /// Re-sharding: any (ingest grid, engine grid) pair assembles the
+    /// same global tensor, tile by tile.
+    #[test]
+    fn resharding_is_grid_invariant() {
+        let dir = tmp("reshard");
+        for dense in [false, true] {
+            let man1 = toy_corpus(&dir, 1, dense);
+            let man2 = toy_corpus(&dir, 2, dense);
+            let full1 = match read_dataset_inline(&man1).unwrap() {
+                JobData::Dense(x) => (*x).clone(),
+                JobData::Sparse(s) => {
+                    Tensor3::from_slices(s.iter().map(|c| c.to_dense()).collect())
+                }
+            };
+            let full2 = match read_dataset_inline(&man2).unwrap() {
+                JobData::Dense(x) => (*x).clone(),
+                JobData::Sparse(s) => {
+                    Tensor3::from_slices(s.iter().map(|c| c.to_dense()).collect())
+                }
+            };
+            for t in 0..man1.m {
+                assert_eq!(
+                    full1.slice(t).as_slice(),
+                    full2.slice(t).as_slice(),
+                    "dense={dense} slice {t}: grid-1 and grid-2 ingests disagree"
+                );
+            }
+            // loading the grid-1 corpus on a 2×2 engine matches the
+            // grid-2 corpus's direct shards
+            let grid = Grid::new(4);
+            for row in 0..2 {
+                for col in 0..2 {
+                    let spliced = rank_tile(&man1, &grid, row, col).unwrap();
+                    let direct = rank_tile(&man2, &grid, row, col).unwrap();
+                    match (spliced, direct) {
+                        (LocalTile::Dense(a), LocalTile::Dense(b)) => {
+                            for t in 0..man1.m {
+                                assert_eq!(a.slice(t).as_slice(), b.slice(t).as_slice());
+                            }
+                        }
+                        (LocalTile::Sparse(a), LocalTile::Sparse(b)) => {
+                            for t in 0..man1.m {
+                                assert_eq!(
+                                    a[t].to_dense().as_slice(),
+                                    b[t].to_dense().as_slice()
+                                );
+                            }
+                        }
+                        _ => panic!("tile kind mismatch"),
+                    }
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Matching grids memory-map dense tiles zero-copy (on unix,
+    /// little-endian): the resident slices still read from shared
+    /// storage.
+    #[test]
+    fn matching_grid_dense_tiles_are_mapped() {
+        let dir = tmp("mapped");
+        let man = toy_corpus(&dir, 2, true);
+        let grid = Grid::new(4);
+        let before = stats::snapshot();
+        let tile = rank_tile(&man, &grid, 1, 0).unwrap();
+        let after = stats::snapshot();
+        assert!(after.shard_reads > before.shard_reads);
+        match tile {
+            LocalTile::Dense(t3) => {
+                if cfg!(unix) && cfg!(target_endian = "little") {
+                    assert!(
+                        t3.slice(0).is_shared(),
+                        "dense tile must window the mapping zero-copy"
+                    );
+                    assert!(after.mapped_tiles > before.mapped_tiles);
+                }
+            }
+            LocalTile::Sparse(_) => panic!("expected dense"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

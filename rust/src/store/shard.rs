@@ -1,0 +1,632 @@
+//! The versioned binary tile-shard format.
+//!
+//! One shard file holds one (grid-row, grid-col) tile of the relational
+//! tensor, dense or sparse. Everything is little-endian; integers are
+//! u64, values are f32.
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic "DRSHRD01"
+//!      8     4  format version (u32, = 1)
+//!     12     4  kind (u32): 1 = dense, 2 = sparse
+//!     16     8  rows (u64)        — tile rows
+//!     24     8  cols (u64)        — tile cols
+//!     32     8  m (u64)           — relation slices
+//!     40     8  payload_len (u64) — bytes after the header
+//!     48     8  checksum (u64)    — FNV-1a 64 over the payload bytes
+//!     56     8  reserved (zeros)
+//!     64     …  payload
+//! ```
+//!
+//! * **Dense payload**: `m` consecutive row-major `rows×cols` f32
+//!   blocks. The payload starts at byte 64, so within a page-aligned
+//!   mapping it is f32-aligned and [`dense_tile_from`] can hand the
+//!   mapping to [`Mat::from_shared`] with zero copies.
+//! * **Sparse payload**, per relation slice: `nnz` (u64), `rows+1`
+//!   indptr u64s, `nnz` column-index u64s, `nnz` f32 values.
+//!
+//! Every read re-verifies the magic, version, shape arithmetic, and
+//! payload checksum, and cross-checks the manifest's recorded size and
+//! checksum when one is supplied — truncation and bit-flips surface as
+//! typed [`crate::error::Error`]s, never panics.
+
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{Context as _, Result};
+use crate::tensor::{Csr, Mat, SharedBuf, Tensor3};
+use crate::{bail, err};
+
+use super::manifest::ShardMeta;
+use super::mmap::{MappedF32, MmapFile};
+
+pub const MAGIC: &[u8; 8] = b"DRSHRD01";
+pub const VERSION: u32 = 1;
+pub const HEADER_LEN: usize = 64;
+pub const KIND_DENSE: u32 = 1;
+pub const KIND_SPARSE: u32 = 2;
+
+/// What a writer reports back for the manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardDigest {
+    /// Total file size (header + payload) in bytes.
+    pub bytes: u64,
+    /// FNV-1a 64 checksum of the payload bytes.
+    pub checksum: u64,
+}
+
+/// Incremental FNV-1a 64.
+pub struct Fnv1a64 {
+    hash: u64,
+}
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Fnv1a64 { hash: 0xcbf2_9ce4_8422_2325 }
+    }
+}
+
+impl Fnv1a64 {
+    pub fn update(&mut self, data: &[u8]) {
+        for &b in data {
+            self.hash ^= b as u64;
+            self.hash = self.hash.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+/// One-shot FNV-1a 64 of a byte slice.
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut f = Fnv1a64::default();
+    f.update(data);
+    f.finish()
+}
+
+/// The decoded fixed-size header of a shard file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    pub kind: u32,
+    pub rows: usize,
+    pub cols: usize,
+    pub m: usize,
+    pub payload_len: u64,
+    pub checksum: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+/// A payload writer that hashes everything it forwards.
+struct HashingWriter<W: Write> {
+    w: W,
+    fnv: Fnv1a64,
+    bytes: u64,
+}
+
+impl<W: Write> HashingWriter<W> {
+    fn put(&mut self, data: &[u8]) -> Result<()> {
+        self.fnv.update(data);
+        self.bytes += data.len() as u64;
+        self.w.write_all(data).context("writing shard payload")?;
+        Ok(())
+    }
+
+    fn put_u64(&mut self, v: u64) -> Result<()> {
+        self.put(&v.to_le_bytes())
+    }
+
+    fn put_f32(&mut self, v: f32) -> Result<()> {
+        self.put(&v.to_le_bytes())
+    }
+}
+
+fn header_bytes(
+    kind: u32,
+    rows: usize,
+    cols: usize,
+    m: usize,
+    payload_len: u64,
+    checksum: u64,
+) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0..8].copy_from_slice(MAGIC);
+    h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    h[12..16].copy_from_slice(&kind.to_le_bytes());
+    h[16..24].copy_from_slice(&(rows as u64).to_le_bytes());
+    h[24..32].copy_from_slice(&(cols as u64).to_le_bytes());
+    h[32..40].copy_from_slice(&(m as u64).to_le_bytes());
+    h[40..48].copy_from_slice(&payload_len.to_le_bytes());
+    h[48..56].copy_from_slice(&checksum.to_le_bytes());
+    h
+}
+
+/// Stream a payload out behind a placeholder header, then patch the real
+/// checksum in — the payload is never buffered whole.
+fn write_shard_file(
+    path: &Path,
+    kind: u32,
+    rows: usize,
+    cols: usize,
+    m: usize,
+    payload: impl FnOnce(&mut HashingWriter<&mut BufWriter<File>>) -> Result<()>,
+) -> Result<ShardDigest> {
+    let file = File::create(path)
+        .with_context(|| format!("creating shard {}", path.display()))?;
+    let mut buf = BufWriter::new(file);
+    buf.write_all(&header_bytes(kind, rows, cols, m, 0, 0))
+        .context("writing shard header")?;
+    let mut hw = HashingWriter { w: &mut buf, fnv: Fnv1a64::default(), bytes: 0 };
+    payload(&mut hw)?;
+    let (payload_len, checksum) = (hw.bytes, hw.fnv.finish());
+    buf.flush().context("flushing shard")?;
+    let mut file = buf
+        .into_inner()
+        .map_err(|e| err!("flushing shard {}: {e}", path.display()))?;
+    file.seek(SeekFrom::Start(0)).context("rewinding shard header")?;
+    file.write_all(&header_bytes(kind, rows, cols, m, payload_len, checksum))
+        .context("patching shard header")?;
+    Ok(ShardDigest { bytes: HEADER_LEN as u64 + payload_len, checksum })
+}
+
+/// Write one dense tile (`rows×cols×m`, row-major slices back to back).
+pub fn write_dense_shard(path: &Path, x: &Tensor3) -> Result<ShardDigest> {
+    let (rows, cols, m) = x.shape();
+    write_shard_file(path, KIND_DENSE, rows, cols, m, |w| {
+        let mut chunk = Vec::with_capacity(4096);
+        for t in 0..m {
+            for v in x.slice(t).as_slice() {
+                chunk.extend_from_slice(&v.to_le_bytes());
+                if chunk.len() >= 4096 {
+                    w.put(&chunk)?;
+                    chunk.clear();
+                }
+            }
+        }
+        if !chunk.is_empty() {
+            w.put(&chunk)?;
+        }
+        Ok(())
+    })
+}
+
+/// Write one sparse tile: `m` CSR slices that must all be `rows×cols`.
+pub fn write_sparse_shard(
+    path: &Path,
+    rows: usize,
+    cols: usize,
+    slices: &[Csr],
+) -> Result<ShardDigest> {
+    for (t, c) in slices.iter().enumerate() {
+        if c.rows() != rows || c.cols() != cols {
+            bail!(
+                "sparse shard slice {t} is {}×{}, expected {rows}×{cols}",
+                c.rows(),
+                c.cols()
+            );
+        }
+    }
+    write_shard_file(path, KIND_SPARSE, rows, cols, slices.len(), |w| {
+        for c in slices {
+            w.put_u64(c.nnz() as u64)?;
+            for &p in c.indptr() {
+                w.put_u64(p as u64)?;
+            }
+            for &j in c.indices() {
+                w.put_u64(j as u64)?;
+            }
+            for &v in c.values() {
+                w.put_f32(v)?;
+            }
+        }
+        Ok(())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+/// Decode and sanity-check the 64-byte header.
+pub fn parse_header(bytes: &[u8], path: &Path) -> Result<ShardHeader> {
+    if bytes.len() < HEADER_LEN {
+        bail!(
+            "shard {} is truncated: {} bytes is smaller than the {HEADER_LEN}-byte header",
+            path.display(),
+            bytes.len()
+        );
+    }
+    if &bytes[0..8] != MAGIC {
+        bail!("{} is not a drescal shard (bad magic)", path.display());
+    }
+    let u32_at = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let u64_at = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+    let version = u32_at(8);
+    if version != VERSION {
+        bail!(
+            "shard {} has format version {version}, this build reads version {VERSION}",
+            path.display()
+        );
+    }
+    let kind = u32_at(12);
+    if kind != KIND_DENSE && kind != KIND_SPARSE {
+        bail!("shard {} has unknown kind {kind}", path.display());
+    }
+    let hd = ShardHeader {
+        kind,
+        rows: u64_at(16) as usize,
+        cols: u64_at(24) as usize,
+        m: u64_at(32) as usize,
+        payload_len: u64_at(40),
+        checksum: u64_at(48),
+    };
+    let have = (bytes.len() - HEADER_LEN) as u64;
+    if hd.payload_len != have {
+        bail!(
+            "shard {} is truncated or padded: header promises {} payload bytes, file \
+             holds {have}",
+            path.display(),
+            hd.payload_len
+        );
+    }
+    Ok(hd)
+}
+
+/// Map a shard file, verify its header + payload checksum, and
+/// cross-check the manifest's recorded size/checksum when given.
+pub fn read_shard(path: &Path, expect: Option<&ShardMeta>) -> Result<(ShardHeader, MmapFile)> {
+    let map = MmapFile::open(path)?;
+    let hd = parse_header(map.bytes(), path)?;
+    let actual = fnv1a64(&map.bytes()[HEADER_LEN..]);
+    if actual != hd.checksum {
+        bail!(
+            "shard {} failed its checksum ({actual:016x} != recorded {:016x}) — the file \
+             is corrupt",
+            path.display(),
+            hd.checksum
+        );
+    }
+    if let Some(meta) = expect {
+        if meta.bytes != map.len() as u64 {
+            bail!(
+                "shard {}: manifest records {} bytes but the file holds {}",
+                path.display(),
+                meta.bytes,
+                map.len()
+            );
+        }
+        if meta.checksum != hd.checksum {
+            bail!(
+                "shard {}: manifest checksum {:016x} does not match the shard's \
+                 {:016x} — manifest and shard are out of sync",
+                path.display(),
+                meta.checksum,
+                hd.checksum
+            );
+        }
+    }
+    super::stats::note_shard_read(map.len());
+    Ok((hd, map))
+}
+
+/// Decode a dense shard into a `Tensor3`. Zero-copy when the view can be
+/// reinterpreted as f32s in place (little-endian host, aligned mapping):
+/// every relation slice becomes a [`Mat::from_shared`] window into one
+/// shared mapping. Returns whether the tile reads from a real mapping.
+pub fn dense_tile_from(map: MmapFile, hd: &ShardHeader, path: &Path) -> Result<(Tensor3, bool)> {
+    if hd.kind != KIND_DENSE {
+        bail!("shard {} is not dense", path.display());
+    }
+    let slice_len = hd.rows * hd.cols;
+    let payload_bytes = slice_len
+        .checked_mul(hd.m)
+        .and_then(|x| x.checked_mul(4))
+        .ok_or_else(|| err!("shard {}: dense shape overflows", path.display()))?;
+    if payload_bytes as u64 != hd.payload_len {
+        bail!(
+            "shard {}: dense payload is {} bytes but {}×{}×{} f32s need {payload_bytes}",
+            path.display(),
+            hd.payload_len,
+            hd.rows,
+            hd.cols,
+            hd.m
+        );
+    }
+    match MappedF32::new(map, HEADER_LEN, payload_bytes) {
+        Ok(shared) => {
+            let mapped = shared.is_mapped();
+            let src: SharedBuf = Arc::new(shared);
+            let slices = (0..hd.m)
+                .map(|t| Mat::from_shared(hd.rows, hd.cols, Arc::clone(&src), t * slice_len))
+                .collect();
+            Ok((Tensor3::from_slices(slices), mapped))
+        }
+        Err(map) => {
+            // misaligned or big-endian: decode a copy
+            let b = map.bytes();
+            let slices = (0..hd.m)
+                .map(|t| {
+                    let off = HEADER_LEN + t * slice_len * 4;
+                    let mut v = Vec::with_capacity(slice_len);
+                    for i in 0..slice_len {
+                        let p = off + i * 4;
+                        v.push(f32::from_le_bytes([b[p], b[p + 1], b[p + 2], b[p + 3]]));
+                    }
+                    Mat::from_vec(hd.rows, hd.cols, v)
+                })
+                .collect();
+            Ok((Tensor3::from_slices(slices), false))
+        }
+    }
+}
+
+/// A bounds-checked little-endian payload reader.
+struct PayloadReader<'a> {
+    b: &'a [u8],
+    pos: usize,
+    path: &'a Path,
+}
+
+impl<'a> PayloadReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!(
+                "shard {} payload is truncated at byte {} (wanted {n} more)",
+                self.path.display(),
+                self.pos
+            );
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u64s(&mut self, count: usize) -> Result<Vec<usize>> {
+        let bytes = self.take(count.checked_mul(8).ok_or_else(|| {
+            err!("shard {} declares an absurd element count", self.path.display())
+        })?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect())
+    }
+
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(count.checked_mul(4).ok_or_else(|| {
+            err!("shard {} declares an absurd element count", self.path.display())
+        })?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Decode a sparse shard into its CSR slices, validating every structural
+/// invariant ([`Csr::from_parts`]) so corrupt files become typed errors.
+pub fn sparse_tile_from(map: &MmapFile, hd: &ShardHeader, path: &Path) -> Result<Vec<Csr>> {
+    if hd.kind != KIND_SPARSE {
+        bail!("shard {} is not sparse", path.display());
+    }
+    let mut r = PayloadReader { b: &map.bytes()[HEADER_LEN..], pos: 0, path };
+    let mut slices = Vec::with_capacity(hd.m);
+    for t in 0..hd.m {
+        let nnz = r.u64()? as usize;
+        let indptr = r.u64s(hd.rows + 1)?;
+        let indices = r.u64s(nnz)?;
+        let values = r.f32s(nnz)?;
+        let csr = Csr::from_parts(hd.rows, hd.cols, indptr, indices, values)
+            .with_context(|| format!("shard {} relation {t}", path.display()))?;
+        slices.push(csr);
+    }
+    if r.pos != r.b.len() {
+        bail!(
+            "shard {} has {} trailing payload bytes after {} relation slices",
+            path.display(),
+            r.b.len() - r.pos,
+            hd.m
+        );
+    }
+    Ok(slices)
+}
+
+/// Decode only global rows `r0..r1` of every relation slice of a sparse
+/// shard, by direct offset arithmetic into the payload — no whole-tile
+/// materialization. This is what keeps the re-sharding load path at
+/// O(target tile) memory: a rank splicing its range out of a coarser
+/// ingest (e.g. a grid-1 corpus loaded on 16 ranks) reads only its row
+/// window of each relation, never the full shard's CSR arrays.
+///
+/// The returned slices are `(r1-r0) × cols` with the window's rows
+/// re-based to 0.
+pub fn sparse_rows_from(
+    map: &MmapFile,
+    hd: &ShardHeader,
+    path: &Path,
+    r0: usize,
+    r1: usize,
+) -> Result<Vec<Csr>> {
+    if hd.kind != KIND_SPARSE {
+        bail!("shard {} is not sparse", path.display());
+    }
+    if r0 > r1 || r1 > hd.rows {
+        bail!(
+            "row window {r0}..{r1} out of range for {}-row shard {}",
+            hd.rows,
+            path.display()
+        );
+    }
+    let b = &map.bytes()[HEADER_LEN..];
+    let err_trunc = || err!("shard {} payload is truncated", path.display());
+    let u64_at = |off: usize| -> Result<u64> {
+        let end = off.checked_add(8).ok_or_else(err_trunc)?;
+        if end > b.len() {
+            return Err(err_trunc());
+        }
+        Ok(u64::from_le_bytes(b[off..end].try_into().unwrap()))
+    };
+    let checked = |base: usize, count: usize, width: usize| -> Result<usize> {
+        count
+            .checked_mul(width)
+            .and_then(|len| base.checked_add(len))
+            .ok_or_else(err_trunc)
+    };
+    let mut cur = 0usize;
+    let mut out = Vec::with_capacity(hd.m);
+    for t in 0..hd.m {
+        let nnz = u64_at(cur)? as usize;
+        let indptr_base = cur.checked_add(8).ok_or_else(err_trunc)?;
+        let indices_base = checked(indptr_base, hd.rows + 1, 8)?;
+        let values_base = checked(indices_base, nnz, 8)?;
+        let next = checked(values_base, nnz, 4)?;
+        if next > b.len() {
+            return Err(err_trunc());
+        }
+        // the window of indptr we need: entries r0..=r1
+        let mut window = Vec::with_capacity(r1 - r0 + 1);
+        for i in r0..=r1 {
+            window.push(u64_at(indptr_base + i * 8)? as usize);
+        }
+        for w in window.windows(2) {
+            if w[1] < w[0] {
+                bail!(
+                    "shard {} relation {t} has a non-monotone indptr window",
+                    path.display()
+                );
+            }
+        }
+        let (start, end) = (window[0], window[r1 - r0]);
+        if end > nnz {
+            bail!(
+                "shard {} relation {t} indptr window exceeds nnz {nnz}",
+                path.display()
+            );
+        }
+        let indices = b[indices_base + start * 8..indices_base + end * 8]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        let values = b[values_base + start * 4..values_base + end * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let indptr = window.iter().map(|&p| p - start).collect();
+        let csr = Csr::from_parts(r1 - r0, hd.cols, indptr, indices, values)
+            .with_context(|| format!("shard {} relation {t}", path.display()))?;
+        out.push(csr);
+        cur = next;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("drescal_shard_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn dense_shard_round_trips() {
+        let dir = tmp("dense");
+        let path = dir.join("s.bin");
+        let mut rng = Rng::new(5);
+        let x = Tensor3::random_uniform(6, 4, 3, -1.0, 1.0, &mut rng);
+        let digest = write_dense_shard(&path, &x).unwrap();
+        assert_eq!(digest.bytes, 64 + 6 * 4 * 3 * 4);
+        let (hd, map) = read_shard(&path, None).unwrap();
+        assert_eq!((hd.rows, hd.cols, hd.m), (6, 4, 3));
+        let (back, _mapped) = dense_tile_from(map, &hd, &path).unwrap();
+        for t in 0..3 {
+            assert_eq!(back.slice(t).as_slice(), x.slice(t).as_slice(), "slice {t}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sparse_shard_round_trips() {
+        let dir = tmp("sparse");
+        let path = dir.join("s.bin");
+        let mut rng = Rng::new(6);
+        let slices: Vec<Csr> = (0..2).map(|_| Csr::random(8, 5, 0.3, &mut rng)).collect();
+        write_sparse_shard(&path, 8, 5, &slices).unwrap();
+        let (hd, map) = read_shard(&path, None).unwrap();
+        let back = sparse_tile_from(&map, &hd, &path).unwrap();
+        assert_eq!(back.len(), 2);
+        for t in 0..2 {
+            assert_eq!(back[t], slices[t], "slice {t}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Every row window of a sparse shard equals the corresponding rows
+    /// of the fully decoded tile.
+    #[test]
+    fn sparse_row_windows_match_full_decode() {
+        let dir = tmp("window");
+        let path = dir.join("s.bin");
+        let mut rng = Rng::new(8);
+        let slices: Vec<Csr> = (0..2).map(|_| Csr::random(9, 7, 0.35, &mut rng)).collect();
+        write_sparse_shard(&path, 9, 7, &slices).unwrap();
+        let (hd, map) = read_shard(&path, None).unwrap();
+        let full = sparse_tile_from(&map, &hd, &path).unwrap();
+        for (r0, r1) in [(0usize, 9usize), (0, 4), (3, 7), (8, 9), (5, 5)] {
+            let window = sparse_rows_from(&map, &hd, &path, r0, r1).unwrap();
+            for t in 0..2 {
+                assert_eq!(window[t].rows(), r1 - r0);
+                for wr in 0..(r1 - r0) {
+                    assert_eq!(
+                        window[t].row_entries(wr),
+                        full[t].row_entries(r0 + wr),
+                        "rows {r0}..{r1}, relation {t}, window row {wr}"
+                    );
+                }
+            }
+        }
+        assert!(sparse_rows_from(&map, &hd, &path, 4, 12).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_is_a_typed_error() {
+        let dir = tmp("corrupt");
+        let path = dir.join("s.bin");
+        let mut rng = Rng::new(7);
+        let x = Tensor3::random_uniform(4, 4, 2, 0.0, 1.0, &mut rng);
+        write_dense_shard(&path, &x).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+
+        // any payload bit-flip fails the checksum
+        let mut bad = clean.clone();
+        bad[HEADER_LEN + 5] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        let e = read_shard(&path, None).unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
+
+        // truncation is detected before any decode
+        std::fs::write(&path, &clean[..clean.len() - 7]).unwrap();
+        let e = read_shard(&path, None).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+
+        // a foreign file is rejected by magic
+        std::fs::write(&path, b"definitely not a shard, but 64+ bytes long padding padding")
+            .unwrap();
+        let e = read_shard(&path, None).unwrap_err();
+        assert!(e.to_string().contains("magic") || e.to_string().contains("truncated"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,503 @@
+//! Streaming triple-list importer: text triples → binary tile shards.
+//!
+//! Input is one triple per line, `subject<TAB>relation<TAB>object` with
+//! an optional fourth `weight` column (default 1.0); blank lines and
+//! `#` comments are skipped, and plain whitespace separation is accepted
+//! when names contain no spaces. Entity and relation names are interned
+//! to deterministic ids in **first-appearance order** (subject before
+//! object within a line), so re-ingesting the same file always yields
+//! the same ids and dictionaries.
+//!
+//! The importer never holds the triple set in memory:
+//!
+//! 1. **pass 1** streams the file to build the name dictionaries and
+//!    count triples (memory: the dictionaries);
+//! 2. **pass 2** streams the file again, routing each triple's 16-byte
+//!    COO record to a per-shard spill file through bounded in-memory
+//!    buffers appended one file at a time (memory: g² × 16 KiB buffers;
+//!    file descriptors: O(1), so the grid is not capped by the fd
+//!    limit);
+//! 3. **finalize** materializes one shard at a time from its spill —
+//!    CSR slices (duplicates summed) or a dense block — writes the
+//!    checksummed shard file, and deletes the spill (memory: one tile).
+//!
+//! Peak memory is therefore `O(dictionaries + largest tile)`, never
+//! `O(triples)`.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::comm::Grid;
+use crate::error::{Context as _, Result};
+use crate::tensor::{Csr, Mat, Tensor3};
+use crate::{bail, err};
+
+use super::manifest::{IngestProvenance, Layout, ShardMeta, StoreManifest};
+use super::shard;
+
+/// How `ingest_triples_file` shards a corpus.
+#[derive(Clone, Debug)]
+pub struct IngestOptions {
+    /// Shard grid side length g: the output holds g×g tile shards.
+    /// Matches engines of √p = g with zero re-sharding; any other grid
+    /// size re-shards at load time.
+    pub grid: usize,
+    /// Store dense row-major blocks (memory-mappable) instead of CSR.
+    pub dense: bool,
+    /// Provenance label recorded in the manifest (usually the input
+    /// path).
+    pub source: String,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions { grid: 1, dense: false, source: String::new() }
+    }
+}
+
+/// What an ingest run produced.
+#[derive(Clone, Debug)]
+pub struct IngestReport {
+    /// Distinct entities interned.
+    pub n: usize,
+    /// Distinct relations interned.
+    pub m: usize,
+    /// Triple lines imported (before duplicate merging).
+    pub triples: u64,
+    pub grid: usize,
+    pub layout: Layout,
+    /// Total shard bytes written.
+    pub shard_bytes: u64,
+    pub manifest_path: PathBuf,
+}
+
+impl IngestReport {
+    /// JSON form (for `drescal ingest --json`).
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("kind".to_string(), Json::Str("ingest_report".to_string()));
+        obj.insert("n".to_string(), Json::Num(self.n as f64));
+        obj.insert("m".to_string(), Json::Num(self.m as f64));
+        obj.insert("triples".to_string(), Json::Num(self.triples as f64));
+        obj.insert("grid".to_string(), Json::Num(self.grid as f64));
+        obj.insert("layout".to_string(), Json::Str(self.layout.as_str().to_string()));
+        obj.insert("shard_bytes".to_string(), Json::Num(self.shard_bytes as f64));
+        obj.insert(
+            "manifest".to_string(),
+            Json::Str(self.manifest_path.display().to_string()),
+        );
+        Json::Obj(obj)
+    }
+}
+
+/// First-appearance-order name interner.
+#[derive(Default)]
+struct Interner {
+    ids: HashMap<String, u32>,
+    names: Vec<String>,
+}
+
+impl Interner {
+    fn intern(&mut self, name: &str) -> Result<u32> {
+        if let Some(&id) = self.ids.get(name) {
+            return Ok(id);
+        }
+        if self.names.len() >= u32::MAX as usize {
+            bail!("dictionary overflow: more than {} distinct names", u32::MAX);
+        }
+        let id = self.names.len() as u32;
+        self.ids.insert(name.to_string(), id);
+        self.names.push(name.to_string());
+        Ok(id)
+    }
+
+    fn get(&self, name: &str) -> Option<u32> {
+        self.ids.get(name).copied()
+    }
+
+    fn len(&self) -> usize {
+        self.names.len()
+    }
+}
+
+/// One parsed triple line: `(subject, relation, object, weight)`.
+type ParsedLine<'a> = (&'a str, &'a str, &'a str, f32);
+
+/// Parse one line; `None` for blanks and `#` comments.
+fn parse_line(line: &str, lineno: usize) -> Result<Option<ParsedLine<'_>>> {
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') {
+        return Ok(None);
+    }
+    // TSV first; fall back to any-whitespace separation for hand-written
+    // files whose names contain no spaces
+    let fields: Vec<&str> = if t.contains('\t') {
+        t.split('\t').map(str::trim).collect()
+    } else {
+        t.split_whitespace().collect()
+    };
+    match fields.as_slice() {
+        &[s, r, o] => Ok(Some((s, r, o, 1.0))),
+        &[s, r, o, w] => {
+            let w: f32 = w.parse().map_err(|_| {
+                err!("line {lineno}: weight '{w}' is not a number")
+            })?;
+            Ok(Some((s, r, o, w)))
+        }
+        _ => Err(err!(
+            "line {lineno}: expected subject<TAB>relation<TAB>object[<TAB>weight], got {} \
+             field(s)",
+            fields.len()
+        )),
+    }
+}
+
+/// Stream every triple of `input` through `f`.
+fn for_each_triple(
+    input: &Path,
+    mut f: impl FnMut(ParsedLine<'_>) -> Result<()>,
+) -> Result<()> {
+    let file = File::open(input)
+        .with_context(|| format!("opening triple list {}", input.display()))?;
+    let reader = BufReader::new(file);
+    for (i, line) in reader.lines().enumerate() {
+        let lineno = i + 1;
+        let line = line.with_context(|| format!("reading line {lineno}"))?;
+        if let Some(parsed) = parse_line(&line, lineno)? {
+            f(parsed)?;
+        }
+    }
+    Ok(())
+}
+
+/// Spill record: one triple routed to its shard, in tile-local
+/// coordinates. 16 little-endian bytes.
+const SPILL_RECORD: usize = 16;
+
+fn spill_record(li: u32, lj: u32, rel: u32, w: f32) -> [u8; SPILL_RECORD] {
+    let mut rec = [0u8; SPILL_RECORD];
+    rec[0..4].copy_from_slice(&li.to_le_bytes());
+    rec[4..8].copy_from_slice(&lj.to_le_bytes());
+    rec[8..12].copy_from_slice(&rel.to_le_bytes());
+    rec[12..16].copy_from_slice(&w.to_le_bytes());
+    rec
+}
+
+/// Flush a spill buffer once it holds this many bytes.
+const SPILL_FLUSH_BYTES: usize = 16 << 10;
+
+/// One shard's spill: records collect in a bounded memory buffer and
+/// append to the file in chunks, so pass 2 holds **one** file
+/// descriptor at a time however large the grid — keeping g² open
+/// `BufWriter`s would hit the process fd limit around g ≈ 32.
+struct Spill {
+    path: PathBuf,
+    buf: Vec<u8>,
+}
+
+impl Spill {
+    fn create(path: PathBuf) -> Result<Spill> {
+        // materialize an empty file now so finalize can read it even if
+        // this shard receives no records
+        File::create(&path)
+            .with_context(|| format!("creating spill {}", path.display()))?;
+        Ok(Spill { path, buf: Vec::new() })
+    }
+
+    fn push(&mut self, rec: &[u8; SPILL_RECORD]) -> Result<()> {
+        self.buf.extend_from_slice(rec);
+        if self.buf.len() >= SPILL_FLUSH_BYTES {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("appending spill {}", self.path.display()))?;
+        f.write_all(&self.buf).context("writing spill records")?;
+        self.buf.clear();
+        Ok(())
+    }
+}
+
+/// Ingest a triple file into `out_dir`: g×g binary tile shards plus
+/// `manifest.json`. Streaming — see the module docs for the memory
+/// bound.
+pub fn ingest_triples_file(
+    input: &Path,
+    out_dir: &Path,
+    opts: &IngestOptions,
+) -> Result<IngestReport> {
+    if opts.grid == 0 {
+        bail!("ingest grid must be >= 1");
+    }
+    // pass 1: dictionaries + triple count
+    let mut ents = Interner::default();
+    let mut rels = Interner::default();
+    let mut triples = 0u64;
+    for_each_triple(input, |(s, r, o, _w)| {
+        ents.intern(s)?;
+        rels.intern(r)?;
+        ents.intern(o)?;
+        triples += 1;
+        Ok(())
+    })?;
+    let (n, m) = (ents.len(), rels.len());
+    if triples == 0 {
+        bail!("{} holds no triples", input.display());
+    }
+    if opts.grid > n {
+        bail!(
+            "ingest grid {} exceeds the corpus's {} entities — every tile needs at \
+             least one row",
+            opts.grid,
+            n
+        );
+    }
+
+    // pass 2: route COO records to per-shard spill files
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating dataset directory {}", out_dir.display()))?;
+    let g = opts.grid;
+    let grid = Grid::new(g * g);
+    // invert Grid::chunk: which chunk owns global index i
+    let base = n / g;
+    let rem = n % g;
+    let chunk_of = move |i: usize| -> usize {
+        if i < rem * (base + 1) {
+            i / (base + 1)
+        } else {
+            rem + (i - rem * (base + 1)) / base
+        }
+    };
+    let spill_path =
+        |gi: usize, gj: usize| out_dir.join(format!(".spill_{gi}_{gj}.coo"));
+    let mut spills: Vec<Spill> = Vec::with_capacity(g * g);
+    for gi in 0..g {
+        for gj in 0..g {
+            spills.push(Spill::create(spill_path(gi, gj))?);
+        }
+    }
+    for_each_triple(input, |(s, r, o, w)| {
+        // pass-1 dictionaries must still cover the file
+        let (si, ri, oi) = match (ents.get(s), rels.get(r), ents.get(o)) {
+            (Some(si), Some(ri), Some(oi)) => (si as usize, ri as usize, oi as usize),
+            _ => bail!("{} changed between ingest passes", input.display()),
+        };
+        let (gi, gj) = (chunk_of(si), chunk_of(oi));
+        let (r0, _) = grid.chunk(n, gi);
+        let (c0, _) = grid.chunk(n, gj);
+        let rec =
+            spill_record((si - r0) as u32, (oi - c0) as u32, ri as u32, w);
+        spills[gi * g + gj].push(&rec)?;
+        Ok(())
+    })?;
+    for s in &mut spills {
+        s.flush()?;
+    }
+    drop(spills);
+
+    // finalize: one shard at a time
+    let layout = if opts.dense { Layout::Dense } else { Layout::Sparse };
+    let mut shards = Vec::with_capacity(g * g);
+    let mut shard_bytes = 0u64;
+    for gi in 0..g {
+        for gj in 0..g {
+            let (r0, r1) = grid.chunk(n, gi);
+            let (c0, c1) = grid.chunk(n, gj);
+            let (rows, cols) = (r1 - r0, c1 - c0);
+            let spath = spill_path(gi, gj);
+            let mut raw = Vec::new();
+            File::open(&spath)
+                .and_then(|mut f| f.read_to_end(&mut raw))
+                .with_context(|| format!("reading spill {}", spath.display()))?;
+            let records = raw.chunks_exact(SPILL_RECORD).map(|rec| {
+                let u = |a: usize| {
+                    u32::from_le_bytes(rec[a..a + 4].try_into().unwrap()) as usize
+                };
+                let w = f32::from_le_bytes(rec[12..16].try_into().unwrap());
+                (u(0), u(4), u(8), w)
+            });
+            let file_name = format!("shard_{gi}_{gj}.bin");
+            let path = out_dir.join(&file_name);
+            let digest = if opts.dense {
+                let mut slices: Vec<Mat> = (0..m).map(|_| Mat::zeros(rows, cols)).collect();
+                for (li, lj, t, w) in records {
+                    slices[t][(li, lj)] += w; // duplicates sum
+                }
+                shard::write_dense_shard(&path, &Tensor3::from_slices(slices))?
+            } else {
+                let mut trips: Vec<Vec<(usize, usize, f32)>> = vec![Vec::new(); m];
+                for (li, lj, t, w) in records {
+                    trips[t].push((li, lj, w));
+                }
+                let slices: Vec<Csr> = trips
+                    .into_iter()
+                    .map(|t| Csr::from_triplets(rows, cols, t)) // duplicates sum
+                    .collect();
+                shard::write_sparse_shard(&path, rows, cols, &slices)?
+            };
+            shard_bytes += digest.bytes;
+            shards.push(ShardMeta {
+                row: gi,
+                col: gj,
+                file: file_name,
+                bytes: digest.bytes,
+                checksum: digest.checksum,
+            });
+            std::fs::remove_file(&spath).ok();
+        }
+    }
+
+    let manifest = StoreManifest {
+        n,
+        m,
+        grid: g,
+        layout,
+        shards,
+        entities: ents.names,
+        relations: rels.names,
+        provenance: IngestProvenance { source: opts.source.clone(), triples },
+        dir: out_dir.to_path_buf(),
+    };
+    manifest.validate()?;
+    let manifest_path = manifest.save()?;
+    Ok(IngestReport {
+        n,
+        m,
+        triples,
+        grid: g,
+        layout,
+        shard_bytes,
+        manifest_path,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("drescal_triples_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parse_line_grammar() {
+        assert_eq!(parse_line("a\tb\tc", 1).unwrap(), Some(("a", "b", "c", 1.0)));
+        assert_eq!(parse_line("a\tb\tc\t2.5", 1).unwrap(), Some(("a", "b", "c", 2.5)));
+        assert_eq!(parse_line("a b c", 1).unwrap(), Some(("a", "b", "c", 1.0)));
+        assert_eq!(parse_line("", 1).unwrap(), None);
+        assert_eq!(parse_line("   ", 1).unwrap(), None);
+        assert_eq!(parse_line("# comment", 1).unwrap(), None);
+        assert!(parse_line("a\tb", 3).unwrap_err().to_string().contains("line 3"));
+        assert!(parse_line("a\tb\tc\tx", 4).unwrap_err().to_string().contains("weight"));
+    }
+
+    #[test]
+    fn interning_is_first_appearance_order() {
+        let dir = tmp("intern");
+        let input = dir.join("toy.tsv");
+        std::fs::write(
+            &input,
+            "alice\tknows\tbob\nbob\tknows\tcarol\nalice\tlikes\tcarol\t2.5\nalice\tknows\tbob\n",
+        )
+        .unwrap();
+        let out = dir.join("corpus");
+        let report = ingest_triples_file(
+            &input,
+            &out,
+            &IngestOptions { grid: 1, dense: false, source: "toy.tsv".into() },
+        )
+        .unwrap();
+        assert_eq!((report.n, report.m, report.triples), (3, 2, 4));
+        let man = StoreManifest::load(&report.manifest_path).unwrap();
+        assert_eq!(man.entities, vec!["alice", "bob", "carol"]);
+        assert_eq!(man.relations, vec!["knows", "likes"]);
+        assert_eq!(man.provenance.triples, 4);
+        // the duplicate alice-knows-bob line summed to 2.0
+        let meta = man.shard(0, 0).unwrap();
+        let (hd, map) = shard::read_shard(&man.shard_path(meta), Some(meta)).unwrap();
+        let slices = shard::sparse_tile_from(&map, &hd, &man.shard_path(meta)).unwrap();
+        let knows = slices[0].to_dense();
+        assert_eq!(knows[(0, 1)], 2.0, "duplicate triples must sum");
+        assert_eq!(knows[(1, 2)], 1.0);
+        let likes = slices[1].to_dense();
+        assert_eq!(likes[(0, 2)], 2.5, "explicit weight column");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grid_routing_partitions_exactly() {
+        let dir = tmp("routing");
+        let input = dir.join("kg.tsv");
+        let mut text = String::new();
+        let mut rng = crate::rng::Rng::new(17);
+        for _ in 0..400 {
+            text.push_str(&format!(
+                "e{}\tr{}\te{}\n",
+                rng.below(23),
+                rng.below(3),
+                rng.below(23)
+            ));
+        }
+        std::fs::write(&input, &text).unwrap();
+        let g1 = dir.join("g1");
+        let g2 = dir.join("g2");
+        let mk = |grid| IngestOptions { grid, dense: false, source: String::new() };
+        let r1 = ingest_triples_file(&input, &g1, &mk(1)).unwrap();
+        let r2 = ingest_triples_file(&input, &g2, &mk(2)).unwrap();
+        assert_eq!(r1.n, r2.n);
+        assert_eq!(r1.triples, r2.triples);
+        // the g=2 shards partition the corpus: total nnz matches g=1
+        let nnz_of = |path: &Path| -> usize {
+            let man = StoreManifest::load(path).unwrap();
+            let mut nnz = 0;
+            for meta in &man.shards {
+                let p = man.shard_path(meta);
+                let (hd, map) = shard::read_shard(&p, Some(meta)).unwrap();
+                for c in shard::sparse_tile_from(&map, &hd, &p).unwrap() {
+                    nnz += c.nnz();
+                }
+            }
+            nnz
+        };
+        assert_eq!(nnz_of(&g1), nnz_of(&g2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_inputs_are_typed_errors() {
+        let dir = tmp("bad");
+        let input = dir.join("bad.tsv");
+        std::fs::write(&input, "only_two\tfields\n").unwrap();
+        let out = dir.join("corpus");
+        let e = ingest_triples_file(&input, &out, &IngestOptions::default()).unwrap_err();
+        assert!(e.to_string().contains("line 1"), "{e}");
+        std::fs::write(&input, "# nothing but comments\n\n").unwrap();
+        let e = ingest_triples_file(&input, &out, &IngestOptions::default()).unwrap_err();
+        assert!(e.to_string().contains("no triples"), "{e}");
+        std::fs::write(&input, "a\tr\tb\n").unwrap();
+        let e = ingest_triples_file(
+            &input,
+            &out,
+            &IngestOptions { grid: 5, dense: false, source: String::new() },
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("grid"), "{e}");
+        assert!(ingest_triples_file(Path::new("/nonexistent.tsv"), &out, &IngestOptions::default())
+            .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

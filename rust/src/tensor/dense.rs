@@ -6,6 +6,73 @@
 use super::kernel;
 use crate::rng::Rng;
 
+/// Read-only storage a matrix can window into without copying — in
+/// practice the memory-mapped payload of a dense shard file (see
+/// `crate::store`). The trait object hands out the full `[f32]` payload;
+/// each [`Mat`] keeps an offset/length window into it.
+pub type SharedBuf = std::sync::Arc<dyn AsRef<[f32]> + Send + Sync>;
+
+/// Matrix storage: an owned heap buffer, or a read-only window into a
+/// shared (typically memory-mapped) buffer. Reads go straight to the
+/// window; the first mutable access copies the window into an owned
+/// buffer (copy-on-write), so resident mmap-backed tiles stay zero-copy
+/// for the read-only training hot path.
+#[derive(Clone)]
+enum MatBuf {
+    Owned(Vec<f32>),
+    Shared { src: SharedBuf, off: usize, len: usize },
+}
+
+impl std::ops::Deref for MatBuf {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        match self {
+            MatBuf::Owned(v) => v,
+            MatBuf::Shared { src, off, len } => {
+                let s: &[f32] = (**src).as_ref();
+                &s[*off..*off + *len]
+            }
+        }
+    }
+}
+
+impl std::ops::DerefMut for MatBuf {
+    /// Copy-on-write: a shared window is copied into an owned buffer on
+    /// the first mutable access, then mutated in place forever after.
+    fn deref_mut(&mut self) -> &mut [f32] {
+        if let MatBuf::Shared { .. } = self {
+            let owned: Vec<f32> = self.to_vec();
+            *self = MatBuf::Owned(owned);
+        }
+        match self {
+            MatBuf::Owned(v) => v,
+            MatBuf::Shared { .. } => unreachable!("shared storage was just copied"),
+        }
+    }
+}
+
+impl PartialEq for MatBuf {
+    fn eq(&self, other: &MatBuf) -> bool {
+        **self == **other
+    }
+}
+
+impl std::fmt::Debug for MatBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MatBuf::Owned(v) => write!(f, "Owned({} f32)", v.len()),
+            MatBuf::Shared { off, len, .. } => write!(f, "Shared {{ off: {off}, len: {len} }}"),
+        }
+    }
+}
+
+impl From<Vec<f32>> for MatBuf {
+    fn from(v: Vec<f32>) -> MatBuf {
+        MatBuf::Owned(v)
+    }
+}
+
 /// Dense row-major single-precision matrix.
 ///
 /// All pyDRESCALk factor math is f32 (the paper benchmarks in
@@ -14,7 +81,7 @@ use crate::rng::Rng;
 pub struct Mat {
     rows: usize,
     cols: usize,
-    data: Vec<f32>,
+    data: MatBuf,
 }
 
 /// Legacy GEMM block sizes (see EXPERIMENTS.md §Perf): MC×KC panels of A
@@ -27,18 +94,34 @@ const NC: usize = 1024;
 impl Mat {
     /// Zero-filled matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+        Mat { rows, cols, data: MatBuf::Owned(vec![0.0; rows * cols]) }
     }
 
     /// Matrix filled with `v`.
     pub fn full(rows: usize, cols: usize, v: f32) -> Self {
-        Mat { rows, cols, data: vec![v; rows * cols] }
+        Mat { rows, cols, data: MatBuf::Owned(vec![v; rows * cols]) }
     }
 
     /// Build from an existing row-major buffer.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "buffer size mismatch");
-        Mat { rows, cols, data }
+        Mat { rows, cols, data: MatBuf::Owned(data) }
+    }
+
+    /// Build a read-only matrix as a window of `rows·cols` f32s into a
+    /// shared buffer starting at element `offset` — zero-copy: the matrix
+    /// borrows the buffer (e.g. a memory-mapped shard payload) until its
+    /// first mutation, which copies-on-write into an owned buffer.
+    pub fn from_shared(rows: usize, cols: usize, src: SharedBuf, offset: usize) -> Self {
+        let total = (*src).as_ref().len();
+        assert!(offset + rows * cols <= total, "shared buffer window out of range");
+        Mat { rows, cols, data: MatBuf::Shared { src, off: offset, len: rows * cols } }
+    }
+
+    /// Whether this matrix still reads from shared (e.g. memory-mapped)
+    /// storage, i.e. no mutation has forced a copy yet.
+    pub fn is_shared(&self) -> bool {
+        matches!(self.data, MatBuf::Shared { .. })
     }
 
     /// Build from a closure over (row, col).
@@ -49,7 +132,7 @@ impl Mat {
                 data.push(f(i, j));
             }
         }
-        Mat { rows, cols, data }
+        Mat { rows, cols, data: MatBuf::Owned(data) }
     }
 
     /// Uniform random entries in [lo, hi).
@@ -151,7 +234,7 @@ impl Mat {
     /// Elementwise `self += other`.
     pub fn add_assign(&mut self, other: &Mat) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
             *a += b;
         }
     }
@@ -159,7 +242,7 @@ impl Mat {
     /// Elementwise `self -= other`.
     pub fn sub_assign(&mut self, other: &Mat) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
             *a -= b;
         }
     }
@@ -174,7 +257,7 @@ impl Mat {
     /// Elementwise product (Hadamard), in place.
     pub fn hadamard_assign(&mut self, other: &Mat) {
         assert_eq!(self.shape(), other.shape());
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
             *a *= b;
         }
     }
@@ -191,9 +274,13 @@ impl Mat {
     }
 
     /// Surrender the backing buffer (used by the workspace arena to keep
-    /// allocations alive across checkouts).
+    /// allocations alive across checkouts). A shared (mapped) matrix
+    /// surrenders a copy — its storage belongs to the mapping.
     pub fn into_vec(self) -> Vec<f32> {
-        self.data
+        match self.data {
+            MatBuf::Owned(v) => v,
+            shared => shared.to_vec(),
+        }
     }
 
     /// Build a zero-filled `rows×cols` matrix on top of an existing
@@ -201,7 +288,7 @@ impl Mat {
     pub fn from_buffer(rows: usize, cols: usize, mut buf: Vec<f32>) -> Self {
         buf.clear();
         buf.resize(rows * cols, 0.0);
-        Mat { rows, cols, data: buf }
+        Mat { rows, cols, data: MatBuf::Owned(buf) }
     }
 
     /// Like [`Mat::from_buffer`] but without the zero-fill: whatever
@@ -217,7 +304,7 @@ impl Mat {
         } else {
             buf.resize(need, 0.0);
         }
-        Mat { rows, cols, data: buf }
+        Mat { rows, cols, data: MatBuf::Owned(buf) }
     }
 
     /// `C = A · B` allocating the output.
@@ -521,5 +608,35 @@ mod tests {
         a.set_col(1, &[1., 2., 3.]);
         assert_eq!(a.col(1), vec![1., 2., 3.]);
         assert_eq!(a.col(0), vec![0., 0., 0.]);
+    }
+
+    /// Shared storage: two matrices window one buffer zero-copy; reads and
+    /// products see the windowed values; the first mutation copies on
+    /// write without disturbing the sibling window.
+    #[test]
+    fn shared_windows_are_zero_copy_until_mutated() {
+        let backing: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let src: SharedBuf = std::sync::Arc::new(backing);
+        let a = Mat::from_shared(2, 3, std::sync::Arc::clone(&src), 0);
+        let mut b = Mat::from_shared(2, 3, std::sync::Arc::clone(&src), 6);
+        assert!(a.is_shared() && b.is_shared());
+        assert_eq!(a.as_slice(), &[0., 1., 2., 3., 4., 5.]);
+        assert_eq!(b[(1, 2)], 11.0);
+        assert_eq!(b.row(0), &[6., 7., 8.]);
+        // products read through the window
+        let c = a.matmul(&b.transpose());
+        assert_eq!(c.shape(), (2, 2));
+        assert!(a.is_shared(), "a read must not trigger the copy");
+        // first mutation copies on write; the sibling window is untouched
+        b[(0, 0)] = -1.0;
+        assert!(!b.is_shared());
+        assert_eq!(b[(0, 0)], -1.0);
+        assert_eq!(a.as_slice(), &[0., 1., 2., 3., 4., 5.]);
+        // equality and clone behave like owned matrices
+        let owned = Mat::from_vec(2, 3, (0..6).map(|i| i as f32).collect());
+        assert_eq!(a, owned);
+        let a2 = a.clone();
+        assert!(a2.is_shared());
+        assert_eq!(a2.into_vec(), vec![0., 1., 2., 3., 4., 5.]);
     }
 }

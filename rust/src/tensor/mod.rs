@@ -12,6 +12,6 @@ pub mod ops;
 pub mod sparse;
 pub mod tensor3;
 
-pub use dense::Mat;
+pub use dense::{Mat, SharedBuf};
 pub use sparse::Csr;
 pub use tensor3::Tensor3;

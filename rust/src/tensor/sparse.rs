@@ -93,6 +93,68 @@ impl Csr {
         Csr { rows, cols, indptr, indices, values, t_cache: OnceLock::new() }
     }
 
+    /// Rebuild a CSR matrix from its raw arrays (the shard-file decode
+    /// path), validating every structural invariant so corrupt or
+    /// hand-crafted inputs surface as typed errors instead of
+    /// out-of-bounds panics in the SpMM kernels later: `indptr` must be
+    /// a monotone ramp of length `rows + 1` from 0 to `nnz`, arrays must
+    /// agree in length, and every column index must be in range.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        values: Vec<f32>,
+    ) -> crate::error::Result<Self> {
+        if indptr.len() != rows + 1 {
+            crate::bail!("CSR indptr has {} entries for {} rows", indptr.len(), rows);
+        }
+        if indptr[0] != 0 {
+            crate::bail!("CSR indptr must start at 0, got {}", indptr[0]);
+        }
+        for i in 1..indptr.len() {
+            if indptr[i] < indptr[i - 1] {
+                crate::bail!(
+                    "CSR indptr is not monotone at row {}: {} < {}",
+                    i - 1,
+                    indptr[i],
+                    indptr[i - 1]
+                );
+            }
+        }
+        let nnz = *indptr.last().unwrap();
+        if indices.len() != nnz || values.len() != nnz {
+            crate::bail!(
+                "CSR arrays disagree: indptr ends at {nnz} but indices/values hold {}/{}",
+                indices.len(),
+                values.len()
+            );
+        }
+        if let Some(&bad) = indices.iter().find(|&&j| j >= cols) {
+            crate::bail!("CSR column index {bad} out of range for {cols} columns");
+        }
+        Ok(Csr { rows, cols, indptr, indices, values, t_cache: OnceLock::new() })
+    }
+
+    /// Row-pointer array (`rows + 1` entries; row i spans
+    /// `indptr[i]..indptr[i+1]`).
+    #[inline]
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    /// Column indices of the stored entries, row-major.
+    #[inline]
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    /// Values of the stored entries, parallel to [`Csr::indices`].
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
     /// Convert a dense matrix, keeping entries with |v| > 0.
     pub fn from_dense(a: &Mat) -> Self {
         let mut trips = Vec::new();
@@ -496,6 +558,49 @@ mod tests {
         let d = s.to_dense();
         let want = Mat::from_fn(8, 8, |i, j| d[(4 + i, 8 + j)]);
         assert_close(t.to_dense().as_slice(), want.as_slice(), 1e-6);
+    }
+
+    /// `from_parts` accepts exactly the arrays `from_triplets` builds and
+    /// rejects every structural corruption a damaged shard could decode
+    /// into.
+    #[test]
+    fn from_parts_validates_structure() {
+        let s = sample();
+        let rebuilt = Csr::from_parts(
+            s.rows(),
+            s.cols(),
+            s.indptr().to_vec(),
+            s.indices().to_vec(),
+            s.values().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt, s);
+        let bad = |r: crate::error::Result<Csr>, what: &str| {
+            let e = r.unwrap_err().to_string();
+            assert!(e.contains("CSR"), "{what}: {e}");
+        };
+        // wrong indptr length
+        bad(Csr::from_parts(3, 4, vec![0, 1], vec![0], vec![1.0]), "short indptr");
+        // indptr not starting at zero
+        bad(
+            Csr::from_parts(1, 4, vec![1, 1], vec![], vec![]),
+            "indptr[0] != 0",
+        );
+        // non-monotone indptr
+        bad(
+            Csr::from_parts(2, 4, vec![0, 2, 1], vec![0, 1], vec![1.0, 2.0]),
+            "non-monotone",
+        );
+        // array length mismatch
+        bad(
+            Csr::from_parts(1, 4, vec![0, 2], vec![0], vec![1.0, 2.0]),
+            "length mismatch",
+        );
+        // column index out of range
+        bad(
+            Csr::from_parts(1, 4, vec![0, 1], vec![9], vec![1.0]),
+            "column out of range",
+        );
     }
 
     #[test]

@@ -232,6 +232,78 @@ fn bench_smoke_tracks_a_trajectory() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The full storage-plane flow on the real binary: synthesize triples,
+/// ingest at grid 1, train from the manifest on a 2×2 engine (re-shard
+/// at load), export a named model, and query it by name.
+#[test]
+fn ingest_train_query_by_name_flow() {
+    let dir = std::env::temp_dir().join(format!("drescal_cli_ingest_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let triples = dir.join("kg.tsv");
+    let mut text = String::new();
+    for i in 0..20 {
+        for j in 0..20 {
+            if (i + j) % 3 == 0 {
+                text.push_str(&format!("e{i}\tknows\te{j}\n"));
+            }
+            if (i * j) % 7 == 1 {
+                text.push_str(&format!("e{i}\tlikes\te{j}\n"));
+            }
+        }
+    }
+    std::fs::write(&triples, text).unwrap();
+    let corpus = dir.join("corpus");
+    let manifest = corpus.join("manifest.json");
+    let (ok, out) = run(&[
+        "ingest", "--input", triples.to_str().unwrap(), "--out", corpus.to_str().unwrap(),
+        "--grid", "1",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("ingested"), "{out}");
+    assert!(manifest.exists(), "manifest not written");
+
+    let file_arg = format!("file:{}", manifest.display());
+    let (ok, out) = run(&[
+        "run", "--data", &file_arg, "--p", "4", "--k", "3", "--iters", "40",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("rel_error"), "{out}");
+
+    let model = dir.join("kg_model.json");
+    let (ok, out) = run(&[
+        "export", "--data", &file_arg, "--p", "4", "--k", "3", "--iters", "40",
+        "--model", model.to_str().unwrap(),
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("named"), "exported model must carry names: {out}");
+
+    // query by entity/relation *name*; answers resolve back to names
+    let (ok, out) = run(&[
+        "query", "--model", model.to_str().unwrap(), "--s", "e1", "--r", "knows",
+        "--top", "3",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("top objects"), "{out}");
+    assert!(out.contains("(e"), "hits must be name-labelled: {out}");
+    // unknown names are typed errors
+    let (ok, out) = run(&[
+        "query", "--model", model.to_str().unwrap(), "--s", "mallory", "--r", "knows",
+    ]);
+    assert!(!ok);
+    assert!(out.contains("unknown entity name"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ingest_errors_are_typed() {
+    let (ok, out) = run(&["ingest"]);
+    assert!(!ok);
+    assert!(out.contains("--input"), "{out}");
+    let (ok, out) = run(&["run", "--data", "file:/nonexistent/manifest.json", "--p", "1"]);
+    assert!(!ok);
+    assert!(out.contains("manifest"), "{out}");
+}
+
 #[test]
 fn bad_flags_are_reported() {
     let (ok, text) = run(&["run", "--p", "notanumber"]);

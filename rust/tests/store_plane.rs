@@ -1,0 +1,361 @@
+//! Storage/ingestion-plane integration: triples → shards → rank-resident
+//! tiles → factors → named answers.
+//!
+//! Covers the acceptance criteria of the storage plane:
+//! * ingest → `DatasetSpec::File` → train parity: **bit-identical**
+//!   factors vs the same corpus passed inline as `JobData`, across grid
+//!   sizes (1×1 and 2×2) and dense + sparse layouts;
+//! * re-sharding: a corpus ingested at one grid size trains at another;
+//! * per-rank shard reads only, dense tiles memory-mapped zero-copy
+//!   (counter-asserted through `EngineStats` and `store::stats`);
+//! * corrupt/truncated shards surface as typed errors that neither
+//!   panic nor poison the rank pool (fuzz-style bit-flips);
+//! * the `dataset_cache_bytes` LRU budget evicts and rebuilds tiles,
+//!   counter-asserted like `tile_builds`;
+//! * interned names ride ingest → export → serve, end to end.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use drescal::engine::{DatasetSpec, Engine, EngineConfig, Report};
+use drescal::rescal::RescalOptions;
+use drescal::rng::Rng;
+use drescal::serve::QueryEngine;
+use drescal::serve::Query;
+use drescal::store::{self, IngestOptions, StoreManifest};
+
+/// `store::stats` counters are process-global and the test harness runs
+/// tests concurrently; counter-asserting tests serialize on this.
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("drescal_store_plane_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Deterministic toy knowledge graph: every entity/relation id appears,
+/// so the interned dictionaries have a known size.
+fn write_triples(path: &Path, n: usize, m: usize, count: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let mut text = String::new();
+    // guarantee every name appears at least once (ids 0..n, 0..m)
+    for i in 0..n {
+        text.push_str(&format!("e{i}\tr{}\te{}\n", i % m, (i + 1) % n));
+    }
+    for _ in 0..count {
+        text.push_str(&format!(
+            "e{}\tr{}\te{}\t{:.3}\n",
+            rng.below(n),
+            rng.below(m),
+            rng.below(n),
+            0.1 + rng.uniform_f32()
+        ));
+    }
+    std::fs::write(path, text).unwrap();
+}
+
+fn ingest(dir: &Path, input: &Path, tag: &str, grid: usize, dense: bool) -> StoreManifest {
+    let out = dir.join(format!("corpus_{tag}"));
+    let report = store::ingest_triples_file(
+        input,
+        &out,
+        &IngestOptions { grid, dense, source: input.display().to_string() },
+    )
+    .unwrap();
+    StoreManifest::load(&report.manifest_path).unwrap()
+}
+
+/// The headline parity guarantee: factorizing a corpus loaded via
+/// `DatasetSpec::File` produces **bit-identical** factors to the same
+/// data passed inline as `JobData` — across engine grids 1×1 and 2×2,
+/// for both sparse and dense layouts, including the re-sharding path
+/// (corpus ingested at grid 2, trained at grid 1).
+#[test]
+fn ingest_train_parity_is_bit_identical_across_grids() {
+    let _g = lock();
+    let dir = tmp("parity");
+    let input = dir.join("kg.tsv");
+    write_triples(&input, 18, 2, 250, 7);
+    for dense in [false, true] {
+        let man = ingest(&dir, &input, &format!("parity_{dense}"), 2, dense);
+        let inline = store::read_dataset_inline(&man).unwrap();
+        for p in [1usize, 4] {
+            let mut engine = Engine::new(EngineConfig::new(p)).unwrap();
+            let from_file = engine
+                .load_dataset(DatasetSpec::File(std::sync::Arc::new(man.clone())))
+                .unwrap();
+            let from_inline = engine.load_dataset(inline.clone()).unwrap();
+            let opts = RescalOptions::new(3, 40);
+            let a = engine.factorize(from_file, &opts, 11).unwrap();
+            let b = engine.factorize(from_inline, &opts, 11).unwrap();
+            assert_eq!(
+                a.a.as_slice(),
+                b.a.as_slice(),
+                "A factors differ (dense={dense}, p={p})"
+            );
+            for t in 0..a.r.m() {
+                assert_eq!(
+                    a.r.slice(t).as_slice(),
+                    b.r.slice(t).as_slice(),
+                    "R slice {t} differs (dense={dense}, p={p})"
+                );
+            }
+            assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits());
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Locality, counter-asserted: loading a File dataset on a matching-grid
+/// engine performs exactly p tile builds and p shard reads (each rank
+/// touches only its own shard; the leader reads just the manifest), and
+/// dense tiles stay memory-mapped zero-copy on unix.
+#[test]
+fn ranks_read_only_their_own_shards_and_dense_tiles_are_mapped() {
+    let _g = lock();
+    let dir = tmp("local");
+    let input = dir.join("kg.tsv");
+    write_triples(&input, 16, 2, 200, 9);
+    let man = ingest(&dir, &input, "local", 2, true);
+    let mut engine = Engine::new(EngineConfig::new(4)).unwrap();
+    let before_store = store::stats::snapshot();
+    assert_eq!(engine.stats().tile_builds, 0);
+    let handle = engine.load_dataset(DatasetSpec::from(man)).unwrap();
+    let after_store = store::stats::snapshot();
+    let stats = engine.stats();
+    assert_eq!(stats.tile_builds, 4, "one tile build per rank");
+    assert_eq!(
+        after_store.shard_reads - before_store.shard_reads,
+        4,
+        "each rank reads exactly its own shard"
+    );
+    assert_eq!(
+        after_store.spliced_tiles, before_store.spliced_tiles,
+        "matching grids must not re-shard"
+    );
+    let info = engine.dataset_info(handle).unwrap();
+    assert!(!info.sparse);
+    assert_eq!((info.n, info.m), (16, 2));
+    assert!(info.resident_bytes > 0);
+    if cfg!(unix) && cfg!(target_endian = "little") {
+        assert_eq!(
+            after_store.mapped_tiles - before_store.mapped_tiles,
+            4,
+            "dense tiles at a matching grid must be mmap windows"
+        );
+        assert!(after_store.mapped_bytes > before_store.mapped_bytes);
+    }
+    // jobs run straight off the mapped tiles
+    let report = engine.factorize(handle, &RescalOptions::new(3, 30), 5).unwrap();
+    assert!(report.rel_error.is_finite());
+    // ...and tiles were not rebuilt or re-read by the job
+    assert_eq!(engine.stats().tile_builds, 4);
+    assert_eq!(store::stats::snapshot().shard_reads - before_store.shard_reads, 4);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A corpus ingested once loads on engines of any grid size: grid
+/// mismatches re-shard at load time (counter-asserted), and the spliced
+/// tiles train to the same factors as a matching-grid load.
+#[test]
+fn resharding_loads_any_grid_from_one_ingest() {
+    let _g = lock();
+    let dir = tmp("reshard");
+    let input = dir.join("kg.tsv");
+    write_triples(&input, 15, 2, 220, 13);
+    let man1 = ingest(&dir, &input, "g1", 1, false);
+    let man2 = ingest(&dir, &input, "g2", 2, false);
+    let opts = RescalOptions::new(3, 40);
+    // grid-1 corpus on a 2×2 engine (split) vs grid-2 corpus direct
+    let before = store::stats::snapshot();
+    let mut engine = Engine::new(EngineConfig::new(4)).unwrap();
+    let split = engine.load_dataset(DatasetSpec::from(man1.clone())).unwrap();
+    assert!(
+        store::stats::snapshot().spliced_tiles > before.spliced_tiles,
+        "grid mismatch must take the re-sharding path"
+    );
+    let direct = engine.load_dataset(DatasetSpec::from(man2.clone())).unwrap();
+    let a = engine.factorize(split, &opts, 3).unwrap();
+    let b = engine.factorize(direct, &opts, 3).unwrap();
+    assert_eq!(a.a.as_slice(), b.a.as_slice(), "split and direct loads must agree");
+    // grid-2 corpus on a 1×1 engine (merge)
+    let mut engine1 = Engine::new(EngineConfig::new(1)).unwrap();
+    let merged = engine1.load_dataset(DatasetSpec::from(man2)).unwrap();
+    let c = engine1.factorize(merged, &opts, 3).unwrap();
+    let mut engine1b = Engine::new(EngineConfig::new(1)).unwrap();
+    let one = engine1b.load_dataset(DatasetSpec::from(man1)).unwrap();
+    let d = engine1b.factorize(one, &opts, 3).unwrap();
+    assert_eq!(c.a.as_slice(), d.a.as_slice(), "merge load must agree with direct");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Fuzz-style corruption: bit-flips and truncations anywhere in a shard
+/// file surface as typed errors; the engine rolls back the partial load
+/// and the pool keeps serving jobs.
+#[test]
+fn corrupt_shards_are_typed_errors_and_do_not_poison_the_pool() {
+    let _g = lock();
+    let dir = tmp("corrupt");
+    let input = dir.join("kg.tsv");
+    write_triples(&input, 12, 2, 120, 21);
+    for dense in [false, true] {
+        let man = ingest(&dir, &input, &format!("corrupt_{dense}"), 2, dense);
+        let shard_path = man.shard_path(man.shard(1, 1).unwrap());
+        let clean = std::fs::read(&shard_path).unwrap();
+        let mut engine = Engine::new(EngineConfig::new(4)).unwrap();
+
+        // bit-flips across the file: header magic, header dims, payload
+        let positions =
+            [0usize, 9, 17, 41, 70, clean.len() / 2, clean.len() - 1];
+        for &pos in positions.iter().filter(|&&p| p < clean.len()) {
+            let mut bad = clean.clone();
+            bad[pos] ^= 0x10;
+            std::fs::write(&shard_path, &bad).unwrap();
+            let e = engine
+                .load_dataset(DatasetSpec::from(man.clone()))
+                .expect_err(&format!("bit-flip at byte {pos} must fail (dense={dense})"));
+            let msg = e.to_string();
+            assert!(
+                msg.contains("rank"),
+                "error must name the failing rank: {msg}"
+            );
+        }
+
+        // truncations at several points (mid-header, just past the
+        // 64-byte header, and mid-payload)
+        for cut in [10usize, 65, clean.len() - 3] {
+            let cut = cut.min(clean.len() - 1);
+            std::fs::write(&shard_path, &clean[..cut]).unwrap();
+            assert!(
+                engine.load_dataset(DatasetSpec::from(man.clone())).is_err(),
+                "truncation to {cut} bytes must fail"
+            );
+        }
+
+        // a missing shard file
+        std::fs::remove_file(&shard_path).unwrap();
+        assert!(engine.load_dataset(DatasetSpec::from(man.clone())).is_err());
+
+        // restore: the pool survived every failure, the partial loads
+        // were rolled back, and a clean load + job still works
+        std::fs::write(&shard_path, &clean).unwrap();
+        assert_eq!(engine.stats().datasets_resident, 0, "failed loads must roll back");
+        let handle = engine.load_dataset(DatasetSpec::from(man)).unwrap();
+        let report = engine.factorize(handle, &RescalOptions::new(2, 10), 1).unwrap();
+        assert!(report.rel_error.is_finite());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The `dataset_cache_bytes` budget: loads beyond the budget evict the
+/// LRU dataset's tiles (registration survives), and the next job on an
+/// evicted handle rebuilds them — all counter-asserted like
+/// `tile_builds`.
+#[test]
+fn dataset_cache_budget_evicts_and_rebuilds_lru() {
+    use drescal::data::synthetic::SyntheticSpec;
+    // one 16×16×2 dense tile on a 1-rank engine = 2048 bytes resident
+    let tile_bytes = 16 * 16 * 2 * 4;
+    let mut engine = Engine::new(
+        EngineConfig::new(1).with_dataset_cache_bytes(tile_bytes + tile_bytes / 2),
+    )
+    .unwrap();
+    let a = engine.load_dataset(SyntheticSpec::dense(16, 2, 2, 1)).unwrap();
+    let s = engine.stats();
+    assert_eq!((s.tile_builds, s.tile_evictions), (1, 0));
+    assert_eq!(s.resident_bytes, tile_bytes);
+
+    // loading B blows the budget: A (the LRU) is evicted but stays
+    // registered
+    let b = engine.load_dataset(SyntheticSpec::dense(16, 2, 2, 2)).unwrap();
+    let s = engine.stats();
+    assert_eq!(s.tile_builds, 2);
+    assert_eq!(s.tile_evictions, 1, "A must be evicted by B's load");
+    assert_eq!(s.resident_bytes, tile_bytes, "only B resident");
+    assert_eq!(s.datasets_resident, 2, "eviction keeps the registration");
+    let a_info = engine.dataset_info(a).expect("eviction keeps the registration");
+    assert_eq!(a_info.resident_bytes, 0, "evicted tiles must not be double-counted");
+
+    // a job on the evicted handle transparently rebuilds its tiles (and
+    // evicts B in turn)
+    let report = engine.factorize(a, &RescalOptions::new(2, 10), 1).unwrap();
+    assert!(report.rel_error.is_finite());
+    let s = engine.stats();
+    assert_eq!(s.tile_builds, 3, "evicted handle must rebuild exactly once");
+    assert_eq!(s.tile_evictions, 2, "B evicted while A rebuilt");
+
+    // repeated jobs on the now-resident handle rebuild nothing
+    engine.factorize(a, &RescalOptions::new(2, 10), 2).unwrap();
+    engine.factorize(a, &RescalOptions::new(2, 10), 3).unwrap();
+    assert_eq!(engine.stats().tile_builds, 3);
+
+    // B works too, and unbounded engines never evict
+    engine.factorize(b, &RescalOptions::new(2, 10), 1).unwrap();
+    let mut unbounded = Engine::new(EngineConfig::new(1)).unwrap();
+    let x = unbounded.load_dataset(SyntheticSpec::dense(16, 2, 2, 3)).unwrap();
+    let y = unbounded.load_dataset(SyntheticSpec::dense(16, 2, 2, 4)).unwrap();
+    unbounded.factorize(x, &RescalOptions::new(2, 5), 1).unwrap();
+    unbounded.factorize(y, &RescalOptions::new(2, 5), 1).unwrap();
+    assert_eq!(unbounded.stats().tile_evictions, 0);
+    assert_eq!(unbounded.stats().resident_bytes, 2 * tile_bytes);
+}
+
+/// Names ride the whole pipe: ingest interns them, `export_model_for`
+/// attaches them, the persisted artifact round-trips them, and the
+/// query layer resolves them — so served answers are name-resolvable
+/// end to end.
+#[test]
+fn interned_names_flow_from_ingest_to_served_answers() {
+    let _g = lock();
+    let dir = tmp("names");
+    let input = dir.join("toy.tsv");
+    std::fs::write(
+        &input,
+        "alice\tknows\tbob\n\
+         bob\tknows\tcarol\n\
+         carol\tknows\talice\n\
+         alice\tlikes\tcarol\n\
+         bob\tlikes\talice\n",
+    )
+    .unwrap();
+    let man = ingest(&dir, &input, "names", 1, false);
+    assert_eq!(man.entities, vec!["alice", "bob", "carol"]);
+    assert_eq!(man.relations, vec!["knows", "likes"]);
+
+    let mut engine = Engine::new(EngineConfig::new(1)).unwrap();
+    let data = engine.load_dataset(DatasetSpec::from(man)).unwrap();
+    let report = engine.factorize(data, &RescalOptions::new(2, 60), 5).unwrap();
+    let model = engine.export_model_for(&Report::Factorize(report), data).unwrap();
+    assert_eq!(model.entity_names().unwrap(), &["alice", "bob", "carol"]);
+    assert_eq!(model.relation_names().unwrap(), &["knows", "likes"]);
+
+    // persist → reload → resolve by name
+    let model_path = dir.join("model.json");
+    model.save(&model_path).unwrap();
+    let reloaded = drescal::serve::FactorModel::load(&model_path).unwrap();
+    assert_eq!(reloaded.resolve_entity("carol").unwrap(), 2);
+    assert_eq!(reloaded.resolve_relation("likes").unwrap(), 1);
+    assert!(reloaded.resolve_entity("mallory").is_err());
+
+    let s = reloaded.resolve_entity("alice").unwrap();
+    let r = reloaded.resolve_relation("knows").unwrap();
+    let mut qe = QueryEngine::new(reloaded);
+    let answer = qe.query(Query::TopObjects { s, r, top: 2 }).unwrap();
+    match answer {
+        drescal::serve::Answer::TopK(hits) => {
+            assert_eq!(hits.len(), 2);
+            // every hit maps back to a name
+            for h in &hits {
+                assert!(qe.model().entity_names().unwrap().get(h.entity).is_some());
+            }
+        }
+        other => panic!("expected top-k hits, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
