@@ -57,7 +57,7 @@ fn main() {
             let results = run_on_grid(p, |ctx| {
                 let mut v = vec![ctx.rank as f32; len];
                 for _ in 0..10 {
-                    ctx.world.all_reduce_sum(&mut v);
+                    ctx.world.all_reduce_sum(&mut v).unwrap();
                 }
                 v[0]
             });

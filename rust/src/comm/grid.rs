@@ -185,7 +185,7 @@ mod tests {
         // row * q (sum over the row), NOT involving other rows
         let results = run_on_grid(9, |ctx| {
             let mut v = vec![ctx.row as f32];
-            ctx.row_comm.all_reduce_sum(&mut v);
+            ctx.row_comm.all_reduce_sum(&mut v).unwrap();
             v[0]
         });
         for (rank, r) in results.iter().enumerate() {
@@ -198,7 +198,7 @@ mod tests {
     fn col_reduce_stays_in_col() {
         let results = run_on_grid(9, |ctx| {
             let mut v = vec![ctx.col as f32];
-            ctx.col_comm.all_reduce_sum(&mut v);
+            ctx.col_comm.all_reduce_sum(&mut v).unwrap();
             v[0]
         });
         for (rank, r) in results.iter().enumerate() {
@@ -214,7 +214,7 @@ mod tests {
             let mut v = vec![if ctx.is_diagonal() { (ctx.col * 100) as f32 } else { 0.0 }];
             // within col_comm the member index equals the grid row, and the
             // diagonal of column `col` sits at row == col
-            ctx.col_comm.broadcast(ctx.col, &mut v);
+            ctx.col_comm.broadcast(ctx.col, &mut v).unwrap();
             v[0]
         });
         for (rank, r) in results.iter().enumerate() {
@@ -225,7 +225,7 @@ mod tests {
 
     #[test]
     fn world_gather_orders_by_rank() {
-        let results = run_on_grid(4, |ctx| ctx.world.all_gather(&[ctx.rank as f32]));
+        let results = run_on_grid(4, |ctx| ctx.world.all_gather(&[ctx.rank as f32]).unwrap());
         for r in results {
             assert_eq!(r, vec![0.0, 1.0, 2.0, 3.0]);
         }
@@ -235,8 +235,8 @@ mod tests {
     fn single_rank_grid() {
         let results = run_on_grid(1, |ctx| {
             let mut v = vec![3.0f32];
-            ctx.row_comm.all_reduce_sum(&mut v);
-            ctx.col_comm.all_reduce_sum(&mut v);
+            ctx.row_comm.all_reduce_sum(&mut v).unwrap();
+            ctx.col_comm.all_reduce_sum(&mut v).unwrap();
             v[0]
         });
         assert_eq!(results, vec![3.0]);

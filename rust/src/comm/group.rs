@@ -1,154 +1,119 @@
 //! A communicator group: the member set of one collective scope
 //! (a grid row, a grid column, or the world).
 //!
-//! Collectives are implemented over per-member shared slots plus a
-//! reusable barrier: write-own → barrier → read-all → barrier. This is the
-//! shared-memory analogue of allgather-then-local-reduce; message counts
-//! and volumes match the MPI collectives the paper uses, and per-op
-//! timings are recorded in the caller's [`super::Trace`].
+//! `Group` is a thin cloneable handle over a [`Transport`] backend.
+//! The default backend is [`transport::inprocess::InProcess`] —
+//! per-member shared slots plus a reusable barrier (write-own → barrier
+//! → read-all → barrier), the shared-memory analogue of
+//! allgather-then-local-reduce. The TCP backend
+//! ([`transport::tcp::TcpGroup`]) carries the same collectives between
+//! OS processes; both reduce in member order, so results are
+//! bit-identical across backends. Message counts and volumes match the
+//! MPI collectives the paper uses, and per-op timings are recorded in
+//! the caller's [`super::Trace`].
+//!
+//! Collectives are fallible: a dead or timed-out peer surfaces as a
+//! typed [`CommError`] that rank code propagates up to the job layer
+//! (in-process groups only fail on length mismatches).
 
-use std::sync::{Arc, Barrier, RwLock};
+use std::sync::{Arc, Mutex};
 
-/// State shared by all members of a group.
-pub struct GroupShared {
-    slots: Vec<RwLock<Vec<f32>>>,
-    barrier: Barrier,
-}
+use super::transport::{self, CommResult, Transport, WireStats};
 
-impl GroupShared {
-    pub fn new(size: usize) -> Arc<Self> {
-        Arc::new(GroupShared {
-            slots: (0..size).map(|_| RwLock::new(Vec::new())).collect(),
-            barrier: Barrier::new(size),
-        })
-    }
-}
+pub use super::transport::inprocess::GroupShared;
 
 /// One member's handle on a group.
 #[derive(Clone)]
 pub struct Group {
-    shared: Arc<GroupShared>,
+    transport: Arc<Mutex<dyn Transport>>,
     /// This member's index within the group (0..size).
     pub rank: usize,
+    size: usize,
 }
 
 impl Group {
+    /// Wrap a transport backend.
+    pub fn from_transport(t: impl Transport + 'static) -> Self {
+        let rank = t.rank();
+        let size = t.size();
+        Group { transport: Arc::new(Mutex::new(t)), rank, size }
+    }
+
+    /// Attach to an existing in-process shared group (legacy
+    /// constructor).
     pub fn new(shared: Arc<GroupShared>, rank: usize) -> Self {
-        Group { shared, rank }
+        Group::from_transport(transport::inprocess::InProcess::new(shared, rank))
     }
 
     /// Group size.
     pub fn size(&self) -> usize {
-        self.shared.slots.len()
+        self.size
     }
 
-    /// Create the full set of member handles for a fresh group.
+    /// Backend name ("in_process" / "tcp") for reports.
+    pub fn backend(&self) -> &'static str {
+        self.transport.lock().unwrap().backend()
+    }
+
+    /// Cumulative wire traffic moved by this member (used to charge
+    /// real per-op byte counts in traces).
+    pub fn wire_stats(&self) -> WireStats {
+        self.transport.lock().unwrap().wire_stats()
+    }
+
+    /// Create the full set of member handles for a fresh in-process
+    /// group.
     pub fn create(size: usize) -> Vec<Group> {
-        let shared = GroupShared::new(size);
-        (0..size).map(|r| Group::new(shared.clone(), r)).collect()
+        transport::inprocess::InProcess::create(size)
+            .into_iter()
+            .map(Group::from_transport)
+            .collect()
     }
 
     /// Barrier over the group.
-    pub fn barrier(&self) {
-        self.shared.barrier.wait();
+    pub fn barrier(&self) -> CommResult<()> {
+        self.transport.lock().unwrap().barrier()
     }
 
     /// Elementwise-sum all_reduce: on return every member's `data` holds
-    /// the sum of all members' inputs.
-    pub fn all_reduce_sum(&self, data: &mut [f32]) {
-        if self.size() == 1 {
-            return;
-        }
-        {
-            let mut slot = self.shared.slots[self.rank].write().unwrap();
-            slot.clear();
-            slot.extend_from_slice(data);
-        }
-        self.barrier();
-        // Sum in fixed slot order (including our own slot) so every member
-        // computes the bit-identical result — MPI all_reduce gives the same
-        // guarantee, and Algorithm 3 relies on it to keep the replicated
-        // factors consistent across a row.
-        data.iter_mut().for_each(|d| *d = 0.0);
-        for slot in self.shared.slots.iter() {
-            let other = slot.read().unwrap();
-            assert_eq!(other.len(), data.len(), "all_reduce length mismatch");
-            for (d, &o) in data.iter_mut().zip(other.iter()) {
-                *d += o;
-            }
-        }
-        // second barrier: nobody may overwrite a slot before all have read
-        self.barrier();
+    /// the sum of all members' inputs, folded in member order so the
+    /// result is bit-identical on every member (and across backends).
+    pub fn all_reduce_sum(&self, data: &mut [f32]) -> CommResult<()> {
+        self.transport.lock().unwrap().all_reduce_sum(data)
     }
 
     /// Elementwise max all_reduce.
-    pub fn all_reduce_max(&self, data: &mut [f32]) {
-        if self.size() == 1 {
-            return;
-        }
-        {
-            let mut slot = self.shared.slots[self.rank].write().unwrap();
-            slot.clear();
-            slot.extend_from_slice(data);
-        }
-        self.barrier();
-        data.iter_mut().for_each(|d| *d = f32::NEG_INFINITY);
-        for slot in self.shared.slots.iter() {
-            let other = slot.read().unwrap();
-            for (d, &o) in data.iter_mut().zip(other.iter()) {
-                if o > *d {
-                    *d = o;
-                }
-            }
-        }
-        self.barrier();
+    pub fn all_reduce_max(&self, data: &mut [f32]) -> CommResult<()> {
+        self.transport.lock().unwrap().all_reduce_max(data)
     }
 
     /// Broadcast from `root` (group-local index): on return every member's
     /// `data` equals the root's input.
-    pub fn broadcast(&self, root: usize, data: &mut [f32]) {
-        if self.size() == 1 {
-            return;
-        }
-        if self.rank == root {
-            let mut slot = self.shared.slots[root].write().unwrap();
-            slot.clear();
-            slot.extend_from_slice(data);
-        }
-        self.barrier();
-        if self.rank != root {
-            let slot = self.shared.slots[root].read().unwrap();
-            assert_eq!(slot.len(), data.len(), "broadcast length mismatch");
-            data.copy_from_slice(&slot);
-        }
-        self.barrier();
+    pub fn broadcast(&self, root: usize, data: &mut [f32]) -> CommResult<()> {
+        self.transport.lock().unwrap().broadcast(root, data)
     }
 
     /// All-gather: every member contributes `data`; returns the
     /// concatenation ordered by group rank.
-    pub fn all_gather(&self, data: &[f32]) -> Vec<f32> {
-        if self.size() == 1 {
-            return data.to_vec();
-        }
-        {
-            let mut slot = self.shared.slots[self.rank].write().unwrap();
-            slot.clear();
-            slot.extend_from_slice(data);
-        }
-        self.barrier();
-        let mut out = Vec::new();
-        for slot in self.shared.slots.iter() {
-            out.extend_from_slice(&slot.read().unwrap());
-        }
-        self.barrier();
-        out
+    pub fn all_gather(&self, data: &[f32]) -> CommResult<Vec<f32>> {
+        self.transport.lock().unwrap().all_gather(data)
+    }
+
+    /// Point-to-point send to group member `peer`.
+    pub fn send(&self, peer: usize, data: &[f32]) -> CommResult<()> {
+        self.transport.lock().unwrap().send(peer, data)
+    }
+
+    /// Point-to-point receive from group member `peer`.
+    pub fn recv(&self, peer: usize) -> CommResult<Vec<f32>> {
+        self.transport.lock().unwrap().recv(peer)
     }
 
     /// Gather scalar f64 values (for timing/metric aggregation).
-    pub fn all_gather_f64(&self, v: f64) -> Vec<f64> {
-        let gathered = self.all_gather(&[(v as f32)]);
+    pub fn all_gather_f64(&self, v: f64) -> CommResult<Vec<f64>> {
+        let gathered = self.all_gather(&[(v as f32)])?;
         // f32 precision is fine for metric aggregation, but keep f64 shape
-        gathered.into_iter().map(|x| x as f64).collect()
+        Ok(gathered.into_iter().map(|x| x as f64).collect())
     }
 }
 
@@ -171,7 +136,7 @@ mod tests {
     fn all_reduce_sums() {
         let results = run_group(4, |g| {
             let mut data = vec![g.rank as f32, 1.0];
-            g.all_reduce_sum(&mut data);
+            g.all_reduce_sum(&mut data).unwrap();
             data
         });
         for r in results {
@@ -183,7 +148,7 @@ mod tests {
     fn all_reduce_max_works() {
         let results = run_group(3, |g| {
             let mut data = vec![g.rank as f32 * 10.0, -(g.rank as f32)];
-            g.all_reduce_max(&mut data);
+            g.all_reduce_max(&mut data).unwrap();
             data
         });
         for r in results {
@@ -196,7 +161,7 @@ mod tests {
         for root in 0..3 {
             let results = run_group(3, move |g| {
                 let mut data = vec![if g.rank == root { 42.0 } else { 0.0 }];
-                g.broadcast(root, &mut data);
+                g.broadcast(root, &mut data).unwrap();
                 data[0]
             });
             assert_eq!(results, vec![42.0; 3]);
@@ -205,7 +170,7 @@ mod tests {
 
     #[test]
     fn all_gather_concatenates_in_rank_order() {
-        let results = run_group(4, |g| g.all_gather(&[g.rank as f32]));
+        let results = run_group(4, |g| g.all_gather(&[g.rank as f32]).unwrap());
         for r in results {
             assert_eq!(r, vec![0.0, 1.0, 2.0, 3.0]);
         }
@@ -217,7 +182,7 @@ mod tests {
             let mut total = 0.0;
             for iter in 0..50 {
                 let mut data = vec![(g.rank + iter) as f32];
-                g.all_reduce_sum(&mut data);
+                g.all_reduce_sum(&mut data).unwrap();
                 total += data[0];
             }
             total
@@ -233,10 +198,10 @@ mod tests {
         let mut g = Group::create(1);
         let g = g.remove(0);
         let mut data = vec![5.0];
-        g.all_reduce_sum(&mut data);
+        g.all_reduce_sum(&mut data).unwrap();
         assert_eq!(data, vec![5.0]);
-        g.broadcast(0, &mut data);
-        assert_eq!(g.all_gather(&data), vec![5.0]);
+        g.broadcast(0, &mut data).unwrap();
+        assert_eq!(g.all_gather(&data).unwrap(), vec![5.0]);
     }
 
     #[test]
@@ -245,15 +210,44 @@ mod tests {
         // program order so reusable barriers stay aligned
         let results = run_group(4, |g| {
             let mut x = vec![1.0f32];
-            g.all_reduce_sum(&mut x);
+            g.all_reduce_sum(&mut x).unwrap();
             let mut y = vec![g.rank as f32];
-            g.broadcast(2, &mut y);
-            let z = g.all_gather(&[x[0], y[0]]);
+            g.broadcast(2, &mut y).unwrap();
+            let z = g.all_gather(&[x[0], y[0]]).unwrap();
             z.iter().sum::<f32>()
         });
         // x=4, y=2 for all, gather = [4,2]*4 -> 24
         for r in results {
             assert_eq!(r, 24.0);
+        }
+    }
+
+    #[test]
+    fn point_to_point_lanes() {
+        let results = run_group(2, |g| {
+            if g.rank == 0 {
+                g.send(1, &[3.0, 4.0]).unwrap();
+                g.recv(1).unwrap()
+            } else {
+                let got = g.recv(0).unwrap();
+                g.send(0, &[got[0] + got[1]]).unwrap();
+                got
+            }
+        });
+        assert_eq!(results[0], vec![7.0]);
+        assert_eq!(results[1], vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn wire_stats_accumulate() {
+        let results = run_group(2, |g| {
+            let mut v = vec![1.0f32; 8];
+            g.all_reduce_sum(&mut v).unwrap();
+            g.wire_stats()
+        });
+        for s in results {
+            assert_eq!(s.ops, 1);
+            assert!(s.bytes > 0);
         }
     }
 }

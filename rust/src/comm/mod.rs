@@ -11,13 +11,21 @@
 //! are identical to the MPI original; wall-clock extrapolation to cluster
 //! scale uses the α-β [`model::NetworkModel`], calibrated exactly like the
 //! paper's §5 complexity analysis.
+//!
+//! Since the transport plane landed, the same collectives also run
+//! between real OS processes: [`transport::Transport`] abstracts the
+//! backend, with [`transport::inprocess`] (the default described above)
+//! and [`transport::tcp`] (framed messages over a leader-rendezvoused
+//! socket mesh) producing bit-identical results.
 
 pub mod grid;
 pub mod group;
 pub mod model;
 pub mod trace;
+pub mod transport;
 
 pub use grid::{Grid, RankCtx};
 pub use group::Group;
 pub use model::NetworkModel;
 pub use trace::{CommOp, Trace};
+pub use transport::{CommError, CommResult, Transport, WireStats};

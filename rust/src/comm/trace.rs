@@ -108,6 +108,29 @@ impl Trace {
         out
     }
 
+    /// Time a fallible collective on `group`, charging `op` with the
+    /// *real* wire traffic the transport moved (payload + frame headers
+    /// for TCP, slot traffic for in-process) instead of a caller-claimed
+    /// byte count. The event is recorded even when the collective fails,
+    /// so timed-out ops still show up in the breakdown.
+    #[inline]
+    pub fn record_comm<T>(
+        &mut self,
+        op: CommOp,
+        group: &crate::comm::Group,
+        f: impl FnOnce() -> crate::comm::CommResult<T>,
+    ) -> crate::comm::CommResult<T> {
+        if !self.enabled {
+            return f();
+        }
+        let w0 = group.wire_stats();
+        let t0 = Instant::now();
+        let out = f();
+        let wire = group.wire_stats().since(w0);
+        self.events.push(TraceEvent { op, bytes: wire.bytes as usize, duration: t0.elapsed() });
+        out
+    }
+
     /// Record an event with a known duration (used when replaying modeled
     /// timings).
     pub fn push(&mut self, op: CommOp, bytes: usize, duration: Duration) {
@@ -151,6 +174,20 @@ impl Trace {
             }
         }
         (comp, comm)
+    }
+
+    /// (total wire bytes, event count) over communication categories —
+    /// the per-rank row of the report's `transport` section.
+    pub fn comm_totals(&self) -> (usize, usize) {
+        let mut bytes = 0;
+        let mut ops = 0;
+        for e in &self.events {
+            if e.op.is_comm() {
+                bytes += e.bytes;
+                ops += 1;
+            }
+        }
+        (bytes, ops)
     }
 
     /// Merge another trace into this one (coordinator-side aggregation).

@@ -1,0 +1,277 @@
+//! Shared-memory transport: per-member slots plus a reusable barrier.
+//!
+//! This is the original virtual-MPI substrate — write-own → barrier →
+//! read-all → barrier — now behind the [`Transport`] trait. Collectives
+//! fold contributions in fixed slot order (including the member's own
+//! slot), the property Algorithm 3 relies on to keep replicated factors
+//! bit-identical across a row, and the contract the TCP backend must
+//! match.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex, RwLock};
+
+use super::{CommError, CommResult, Transport, WireStats};
+
+/// State shared by all members of an in-process group.
+pub struct GroupShared {
+    slots: Vec<RwLock<Vec<f32>>>,
+    barrier: Barrier,
+}
+
+impl GroupShared {
+    pub fn new(size: usize) -> Arc<Self> {
+        Arc::new(GroupShared {
+            slots: (0..size).map(|_| RwLock::new(Vec::new())).collect(),
+            barrier: Barrier::new(size),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// One member's shared-memory transport handle.
+pub struct InProcess {
+    shared: Arc<GroupShared>,
+    rank: usize,
+    /// Point-to-point lanes: `tx[j]` sends to member j, `rx[j]` receives
+    /// from member j (None for self).
+    tx: Vec<Option<Sender<Vec<f32>>>>,
+    rx: Vec<Option<Mutex<Receiver<Vec<f32>>>>>,
+    stats: WireStats,
+}
+
+impl InProcess {
+    /// Create the full set of member transports for a fresh group.
+    pub fn create(size: usize) -> Vec<InProcess> {
+        let shared = GroupShared::new(size);
+        // one mpsc lane per ordered pair (i -> j)
+        let mut txs: Vec<Vec<Option<Sender<Vec<f32>>>>> =
+            (0..size).map(|_| (0..size).map(|_| None).collect()).collect();
+        let mut rxs: Vec<Vec<Option<Mutex<Receiver<Vec<f32>>>>>> =
+            (0..size).map(|_| (0..size).map(|_| None).collect()).collect();
+        for i in 0..size {
+            for j in 0..size {
+                if i == j {
+                    continue;
+                }
+                let (tx, rx) = std::sync::mpsc::channel();
+                txs[i][j] = Some(tx);
+                rxs[j][i] = Some(Mutex::new(rx));
+            }
+        }
+        txs.into_iter()
+            .zip(rxs)
+            .enumerate()
+            .map(|(rank, (tx, rx))| InProcess {
+                shared: shared.clone(),
+                rank,
+                tx,
+                rx,
+                stats: WireStats::default(),
+            })
+            .collect()
+    }
+
+    /// Attach a member handle to an existing shared group (legacy
+    /// constructor; no point-to-point lanes).
+    pub fn new(shared: Arc<GroupShared>, rank: usize) -> Self {
+        let size = shared.size();
+        InProcess {
+            shared,
+            rank,
+            tx: (0..size).map(|_| None).collect(),
+            rx: (0..size).map(|_| None).collect(),
+            stats: WireStats::default(),
+        }
+    }
+
+    fn wait(&self) {
+        self.shared.barrier.wait();
+    }
+
+    /// Charge one completed op moving `payload` f32s out and
+    /// `(size-1) * payload` f32s in — the volume that actually crosses
+    /// the shared slots (zero for singleton groups).
+    fn charge(&mut self, payload: usize) {
+        if self.shared.size() > 1 {
+            self.stats.bytes += (payload * 4 * self.shared.size()) as u64;
+        }
+        self.stats.ops += 1;
+    }
+}
+
+impl Transport for InProcess {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.shared.size()
+    }
+
+    fn backend(&self) -> &'static str {
+        "in_process"
+    }
+
+    fn barrier(&mut self) -> CommResult<()> {
+        if self.size() > 1 {
+            self.wait();
+        }
+        self.stats.ops += 1;
+        Ok(())
+    }
+
+    fn all_reduce_sum(&mut self, data: &mut [f32]) -> CommResult<()> {
+        if self.size() == 1 {
+            self.charge(0);
+            return Ok(());
+        }
+        {
+            let mut slot = self.shared.slots[self.rank].write().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        self.wait();
+        // Sum in fixed slot order (including our own slot) so every member
+        // computes the bit-identical result — MPI all_reduce gives the same
+        // guarantee, and Algorithm 3 relies on it to keep the replicated
+        // factors consistent across a row.
+        data.iter_mut().for_each(|d| *d = 0.0);
+        let mut mismatch = None;
+        for (peer, slot) in self.shared.slots.iter().enumerate() {
+            let other = slot.read().unwrap();
+            if other.len() != data.len() {
+                mismatch = Some((peer, other.len()));
+                continue;
+            }
+            for (d, &o) in data.iter_mut().zip(other.iter()) {
+                *d += o;
+            }
+        }
+        // second barrier: nobody may overwrite a slot before all have read
+        self.wait();
+        if let Some((peer, len)) = mismatch {
+            return Err(CommError::Protocol {
+                reason: format!(
+                    "all_reduce length mismatch: peer {peer} contributed {len} elements, \
+                     expected {}",
+                    data.len()
+                ),
+            });
+        }
+        self.charge(data.len());
+        Ok(())
+    }
+
+    fn all_reduce_max(&mut self, data: &mut [f32]) -> CommResult<()> {
+        if self.size() == 1 {
+            self.charge(0);
+            return Ok(());
+        }
+        {
+            let mut slot = self.shared.slots[self.rank].write().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        self.wait();
+        data.iter_mut().for_each(|d| *d = f32::NEG_INFINITY);
+        for slot in self.shared.slots.iter() {
+            let other = slot.read().unwrap();
+            for (d, &o) in data.iter_mut().zip(other.iter()) {
+                if o > *d {
+                    *d = o;
+                }
+            }
+        }
+        self.wait();
+        self.charge(data.len());
+        Ok(())
+    }
+
+    fn broadcast(&mut self, root: usize, data: &mut [f32]) -> CommResult<()> {
+        if self.size() == 1 {
+            self.charge(0);
+            return Ok(());
+        }
+        if self.rank == root {
+            let mut slot = self.shared.slots[root].write().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        self.wait();
+        let mut mismatch = None;
+        if self.rank != root {
+            let slot = self.shared.slots[root].read().unwrap();
+            if slot.len() == data.len() {
+                data.copy_from_slice(&slot);
+            } else {
+                mismatch = Some(slot.len());
+            }
+        }
+        self.wait();
+        if let Some(len) = mismatch {
+            return Err(CommError::Protocol {
+                reason: format!(
+                    "broadcast length mismatch: root {root} sent {len} elements, expected {}",
+                    data.len()
+                ),
+            });
+        }
+        // root sends one copy, others receive one copy
+        if self.size() > 1 {
+            self.stats.bytes += (data.len() * 4) as u64;
+        }
+        self.stats.ops += 1;
+        Ok(())
+    }
+
+    fn all_gather(&mut self, data: &[f32]) -> CommResult<Vec<f32>> {
+        if self.size() == 1 {
+            self.charge(0);
+            return Ok(data.to_vec());
+        }
+        {
+            let mut slot = self.shared.slots[self.rank].write().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        self.wait();
+        let mut out = Vec::new();
+        for slot in self.shared.slots.iter() {
+            out.extend_from_slice(&slot.read().unwrap());
+        }
+        self.wait();
+        self.charge(data.len());
+        Ok(out)
+    }
+
+    fn send(&mut self, peer: usize, data: &[f32]) -> CommResult<()> {
+        let lane = self.tx.get(peer).and_then(|t| t.as_ref()).ok_or_else(|| {
+            CommError::Protocol { reason: format!("no point-to-point lane to peer {peer}") }
+        })?;
+        lane.send(data.to_vec()).map_err(|_| CommError::PeerDisconnected { peer })?;
+        self.stats.bytes += (data.len() * 4) as u64;
+        self.stats.ops += 1;
+        Ok(())
+    }
+
+    fn recv(&mut self, peer: usize) -> CommResult<Vec<f32>> {
+        let lane = self.rx.get(peer).and_then(|r| r.as_ref()).ok_or_else(|| {
+            CommError::Protocol { reason: format!("no point-to-point lane from peer {peer}") }
+        })?;
+        let data = lane
+            .lock()
+            .unwrap()
+            .recv()
+            .map_err(|_| CommError::PeerDisconnected { peer })?;
+        self.stats.bytes += (data.len() * 4) as u64;
+        self.stats.ops += 1;
+        Ok(data)
+    }
+
+    fn wire_stats(&self) -> WireStats {
+        self.stats
+    }
+}

@@ -1,0 +1,129 @@
+//! The transport plane: pluggable collective/point-to-point backends.
+//!
+//! A [`Transport`] owns one communicator scope (a grid row, a grid
+//! column, or the world) for one member and implements the collectives
+//! the paper uses — `all_reduce`, `all_gather`, `broadcast`, barrier —
+//! plus point-to-point send/recv. Two backends exist:
+//!
+//! * [`inprocess::InProcess`] — today's shared-memory slots (one OS
+//!   thread per rank inside a single process). The default, and the
+//!   reference for bit-identical results.
+//! * [`tcp::TcpGroup`] — length-prefixed frames over std TCP between
+//!   real OS processes, built on a full peer mesh established by a
+//!   leader-coordinated rendezvous (see [`crate::engine::cluster`]).
+//!
+//! **Bit-identity contract**: both backends reduce contributions in
+//! group-member order `0..size`, so a TCP run produces byte-identical
+//! factors to an in-process run of the same job. The TCP backend moves
+//! data with a ring all-gather and then folds locally in member order —
+//! ring data movement, deterministic reduction order.
+//!
+//! All operations return typed [`CommError`]s instead of panicking:
+//! a dead peer surfaces as `PeerDisconnected`/`Timeout` on the survivors
+//! and is rolled back as a job error, never a poisoned rank thread.
+
+pub mod inprocess;
+pub mod tcp;
+
+use std::fmt;
+
+/// Typed communication failure. Carried through the rank code as
+/// `Result<_, CommError>` and converted to a job error at the pool
+/// boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// A read or write did not complete within the transport deadline.
+    Timeout { op: &'static str, peer: usize },
+    /// The peer's connection closed mid-collective (process death).
+    PeerDisconnected { peer: usize },
+    /// Version/magic mismatch while establishing a connection.
+    Handshake { reason: String },
+    /// Frames arrived but did not line up with the collective program
+    /// order (group/sequence/length mismatch) — a logic error or a
+    /// corrupted stream.
+    Protocol { reason: String },
+    /// Any other socket-level failure.
+    Io { op: &'static str, detail: String },
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::Timeout { op, peer } => {
+                write!(f, "comm timeout: {op} with peer {peer} exceeded the transport deadline")
+            }
+            CommError::PeerDisconnected { peer } => {
+                write!(f, "peer {peer} disconnected mid-collective")
+            }
+            CommError::Handshake { reason } => write!(f, "transport handshake failed: {reason}"),
+            CommError::Protocol { reason } => write!(f, "transport protocol error: {reason}"),
+            CommError::Io { op, detail } => write!(f, "transport i/o error during {op}: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+impl From<CommError> for crate::error::Error {
+    fn from(e: CommError) -> Self {
+        crate::error::Error::msg(e)
+    }
+}
+
+/// Result alias for transport operations.
+pub type CommResult<T> = Result<T, CommError>;
+
+/// Cumulative wire-traffic counters for one transport handle: bytes and
+/// operation counts actually moved (payload + frame headers for TCP,
+/// bytes through the shared slots for in-process). Callers snapshot
+/// before/after a collective to charge *real* per-op volumes in the
+/// trace instead of caller-claimed estimates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Bytes sent + received by this member.
+    pub bytes: u64,
+    /// Collective / point-to-point operations completed.
+    pub ops: u64,
+}
+
+impl WireStats {
+    /// Traffic since an earlier snapshot.
+    pub fn since(&self, earlier: WireStats) -> WireStats {
+        WireStats {
+            bytes: self.bytes.saturating_sub(earlier.bytes),
+            ops: self.ops.saturating_sub(earlier.ops),
+        }
+    }
+}
+
+/// One member's handle on a communicator scope. Implementations must
+/// guarantee the member-order reduction contract documented on the
+/// module: `all_reduce_*` folds contributions in group index order
+/// `0..size` so every backend produces bit-identical results.
+pub trait Transport: Send {
+    /// This member's index within the group (0..size).
+    fn rank(&self) -> usize;
+    /// Number of members.
+    fn size(&self) -> usize;
+    /// Backend name for reports ("in_process" / "tcp").
+    fn backend(&self) -> &'static str;
+
+    /// Synchronize all members.
+    fn barrier(&mut self) -> CommResult<()>;
+    /// Elementwise sum; on return every member holds the identical sum.
+    fn all_reduce_sum(&mut self, data: &mut [f32]) -> CommResult<()>;
+    /// Elementwise max.
+    fn all_reduce_max(&mut self, data: &mut [f32]) -> CommResult<()>;
+    /// Replicate `root`'s buffer to all members.
+    fn broadcast(&mut self, root: usize, data: &mut [f32]) -> CommResult<()>;
+    /// Concatenate all members' buffers in member order.
+    fn all_gather(&mut self, data: &[f32]) -> CommResult<Vec<f32>>;
+
+    /// Point-to-point send to group member `peer`.
+    fn send(&mut self, peer: usize, data: &[f32]) -> CommResult<()>;
+    /// Point-to-point receive from group member `peer`.
+    fn recv(&mut self, peer: usize) -> CommResult<Vec<f32>>;
+
+    /// Cumulative wire traffic for this member.
+    fn wire_stats(&self) -> WireStats;
+}

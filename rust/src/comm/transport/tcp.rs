@@ -1,0 +1,871 @@
+//! TCP transport: length-prefixed frames over a full peer mesh.
+//!
+//! ## Wire format
+//!
+//! Every message is one frame:
+//!
+//! ```text
+//! magic   u32 LE   0x44525450 ("DRTP")
+//! kind    u8       1 = hello (mesh handshake), 2 = data
+//! group   u32 LE   communicator scope id (world = 0, rows, cols)
+//! seq     u64 LE   per-group collective sequence number
+//! len     u32 LE   payload length in bytes
+//! payload [u8; len]
+//! ```
+//!
+//! The `group`/`seq` pair is verified on every receive: because all
+//! ranks execute collectives in the same program order, a mismatch
+//! means a desynchronized or corrupted stream and surfaces as a typed
+//! [`CommError::Protocol`] instead of silently folding wrong data.
+//!
+//! ## Mesh and collectives
+//!
+//! [`TcpMesh::establish`] builds one socket per peer pair (rank `i`
+//! dials every `j < i` and accepts every `j > i`; each connection opens
+//! with a hello frame carrying `{version, epoch, rank}` so mismatched
+//! builds or stale epochs fail fast with [`CommError::Handshake`]).
+//! Row, column, and world [`TcpGroup`]s share the one mesh — legal
+//! because a rank thread runs its collectives strictly in program
+//! order, so a socket never carries two scopes' traffic at once.
+//!
+//! Collectives move data around a **ring**: `all_gather` rotates blocks
+//! `size-1` steps, and `all_reduce` is that ring all-gather followed by
+//! a *local fold in group-member order 0..size* — the same order the
+//! in-process slots use, which is what makes TCP runs bit-identical to
+//! in-process runs (a classic reduce-scatter ring would change the f32
+//! summation order). Deadlock freedom with blocking sockets comes from
+//! one rule: group member 0 receives before it sends, everyone else
+//! sends before receiving, which breaks the ring's wait cycle no matter
+//! how large the payload.
+//!
+//! All socket operations carry read/write deadlines with bounded retry;
+//! a dead peer surfaces as [`CommError::PeerDisconnected`] (EOF/reset)
+//! or [`CommError::Timeout`], never a panic or a hang.
+
+use std::io::{Read, Write};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{CommError, CommResult, Transport, WireStats};
+use crate::comm::grid::{Grid, RankCtx};
+use crate::comm::Group;
+
+/// Transport wire-protocol version; bumped on incompatible frame or
+/// rendezvous changes. Mismatches fail the handshake.
+pub const TRANSPORT_VERSION: u32 = 1;
+
+const MAGIC: u32 = 0x4452_5450; // "DRTP"
+const KIND_HELLO: u8 = 1;
+const KIND_DATA: u8 = 2;
+const HEADER_LEN: usize = 4 + 1 + 4 + 8 + 4;
+
+/// Socket deadlines and retry budget for one mesh.
+#[derive(Clone, Copy, Debug)]
+pub struct TcpConfig {
+    /// Per-read/-write deadline. One collective step waits at most
+    /// `timeout * (retries + 1)` before surfacing [`CommError::Timeout`].
+    pub timeout: Duration,
+    /// Bounded retries after a timed-out partial read/write.
+    pub retries: u32,
+}
+
+impl Default for TcpConfig {
+    fn default() -> Self {
+        TcpConfig { timeout: Duration::from_secs(10), retries: 2 }
+    }
+}
+
+/// A bound, not-yet-connected mesh endpoint. Created *before* addresses
+/// are exchanged so every peer's dial is guaranteed a listener.
+pub struct MeshListener {
+    listener: TcpListener,
+    /// The bound address (ephemeral port resolved).
+    pub addr: SocketAddr,
+}
+
+impl MeshListener {
+    /// Bind an ephemeral port on `ip`.
+    pub fn bind(ip: IpAddr) -> CommResult<Self> {
+        let listener = TcpListener::bind((ip, 0)).map_err(|e| CommError::Io {
+            op: "bind mesh listener",
+            detail: e.to_string(),
+        })?;
+        let addr = listener.local_addr().map_err(|e| CommError::Io {
+            op: "resolve mesh listener addr",
+            detail: e.to_string(),
+        })?;
+        Ok(MeshListener { listener, addr })
+    }
+}
+
+/// The fully-connected socket mesh of one process (one rank), shared by
+/// all of that rank's communicator scopes.
+pub struct TcpMesh {
+    rank: usize,
+    size: usize,
+    cfg: TcpConfig,
+    conns: Vec<Option<TcpStream>>,
+}
+
+impl TcpMesh {
+    /// This rank's world index.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// World size.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Connect the mesh: dial every lower rank, accept every higher
+    /// rank, and validate a hello handshake (version + epoch + peer
+    /// identity) on each connection. `addrs[j]` must be rank j's
+    /// [`MeshListener`] address; `epoch` increments on every rendezvous
+    /// so survivors of a crash can't cross-connect with a stale mesh.
+    pub fn establish(
+        rank: usize,
+        size: usize,
+        epoch: u64,
+        listener: MeshListener,
+        addrs: &[SocketAddr],
+        cfg: TcpConfig,
+    ) -> CommResult<TcpMesh> {
+        if addrs.len() != size {
+            return Err(CommError::Protocol {
+                reason: format!("mesh wants {size} addresses, got {}", addrs.len()),
+            });
+        }
+        let mut conns: Vec<Option<TcpStream>> = (0..size).map(|_| None).collect();
+        // dial lower ranks
+        for (peer, addr) in addrs.iter().enumerate().take(rank) {
+            let stream = dial(*addr, peer, cfg)?;
+            send_hello(&stream, epoch, rank, peer, cfg)?;
+            let from = recv_hello(&stream, epoch, peer, cfg)?;
+            if from != peer {
+                return Err(CommError::Handshake {
+                    reason: format!("dialed rank {peer} but peer identified as {from}"),
+                });
+            }
+            conns[peer] = Some(stream);
+        }
+        // accept higher ranks (any arrival order; identified by hello)
+        let expected = size - rank - 1;
+        let mut accepted = 0;
+        listener.listener.set_nonblocking(true).map_err(|e| CommError::Io {
+            op: "mesh accept",
+            detail: e.to_string(),
+        })?;
+        let deadline = Instant::now() + cfg.timeout.mul_f64((cfg.retries + 1) as f64);
+        while accepted < expected {
+            match listener.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).map_err(|e| CommError::Io {
+                        op: "mesh accept",
+                        detail: e.to_string(),
+                    })?;
+                    configure(&stream, cfg)?;
+                    let from = recv_hello(&stream, epoch, usize::MAX, cfg)?;
+                    if from <= rank || from >= size {
+                        return Err(CommError::Handshake {
+                            reason: format!("unexpected hello from rank {from} (we are {rank})"),
+                        });
+                    }
+                    send_hello(&stream, epoch, rank, from, cfg)?;
+                    if conns[from].is_some() {
+                        return Err(CommError::Handshake {
+                            reason: format!("rank {from} connected twice"),
+                        });
+                    }
+                    conns[from] = Some(stream);
+                    accepted += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(CommError::Timeout { op: "mesh accept", peer: usize::MAX });
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => {
+                    return Err(CommError::Io { op: "mesh accept", detail: e.to_string() })
+                }
+            }
+        }
+        Ok(TcpMesh { rank, size, cfg, conns })
+    }
+
+    fn conn(&mut self, peer: usize) -> CommResult<&mut TcpStream> {
+        self.conns
+            .get_mut(peer)
+            .and_then(|c| c.as_mut())
+            .ok_or(CommError::PeerDisconnected { peer })
+    }
+
+    /// Send one data frame to world rank `peer`; returns wire bytes.
+    fn send_frame(
+        &mut self,
+        peer: usize,
+        group: u32,
+        seq: u64,
+        payload: &[u8],
+    ) -> CommResult<usize> {
+        let cfg = self.cfg;
+        let stream = self.conn(peer)?;
+        let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.push(KIND_DATA);
+        buf.extend_from_slice(&group.to_le_bytes());
+        buf.extend_from_slice(&seq.to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(payload);
+        write_all_retry(stream, &buf, "collective send", peer, cfg)?;
+        Ok(buf.len())
+    }
+
+    /// Receive one data frame from world rank `peer`, verifying frame
+    /// alignment against the expected group/sequence; returns
+    /// (payload, wire bytes).
+    fn recv_frame(&mut self, peer: usize, group: u32, seq: u64) -> CommResult<(Vec<u8>, usize)> {
+        let cfg = self.cfg;
+        let stream = self.conn(peer)?;
+        let mut header = [0u8; HEADER_LEN];
+        read_exact_retry(stream, &mut header, "collective recv", peer, cfg)?;
+        let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        let kind = header[4];
+        let got_group = u32::from_le_bytes(header[5..9].try_into().unwrap());
+        let got_seq = u64::from_le_bytes(header[9..17].try_into().unwrap());
+        let len = u32::from_le_bytes(header[17..21].try_into().unwrap()) as usize;
+        if magic != MAGIC || kind != KIND_DATA {
+            return Err(CommError::Protocol {
+                reason: format!(
+                    "bad frame from rank {peer}: magic={magic:#x} kind={kind} (corrupt stream?)"
+                ),
+            });
+        }
+        if got_group != group || got_seq != seq {
+            return Err(CommError::Protocol {
+                reason: format!(
+                    "collective misalignment with rank {peer}: got group {got_group} seq \
+                     {got_seq}, expected group {group} seq {seq}"
+                ),
+            });
+        }
+        let mut payload = vec![0u8; len];
+        read_exact_retry(stream, &mut payload, "collective recv", peer, cfg)?;
+        Ok((payload, HEADER_LEN + len))
+    }
+}
+
+/// One member's handle on a communicator scope over a shared
+/// [`TcpMesh`]. `members` lists the scope's world ranks in group order;
+/// the member-order fold over that list is what keeps results
+/// bit-identical to the in-process backend.
+pub struct TcpGroup {
+    mesh: Arc<Mutex<TcpMesh>>,
+    members: Vec<usize>,
+    my: usize,
+    group_id: u32,
+    seq: u64,
+    stats: WireStats,
+}
+
+impl TcpGroup {
+    /// Build a scope over `members` (world ranks, group order). The
+    /// calling rank must be a member; every member must construct the
+    /// scope with the same `members` and `group_id`.
+    pub fn new(
+        mesh: Arc<Mutex<TcpMesh>>,
+        members: Vec<usize>,
+        group_id: u32,
+    ) -> CommResult<TcpGroup> {
+        let world_rank = mesh.lock().unwrap().rank;
+        let my = members.iter().position(|&m| m == world_rank).ok_or_else(|| {
+            CommError::Protocol {
+                reason: format!("rank {world_rank} is not a member of group {group_id}"),
+            }
+        })?;
+        Ok(TcpGroup { mesh, members, my, group_id, seq: 0, stats: WireStats::default() })
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    fn peer_at(&self, offset: usize) -> usize {
+        let n = self.members.len();
+        self.members[(self.my + offset) % n]
+    }
+
+    fn send_f32(&mut self, world_peer: usize, seq: u64, data: &[f32]) -> CommResult<()> {
+        let payload = f32s_to_bytes(data);
+        let bytes =
+            self.mesh.lock().unwrap().send_frame(world_peer, self.group_id, seq, &payload)?;
+        self.stats.bytes += bytes as u64;
+        Ok(())
+    }
+
+    fn recv_f32(&mut self, world_peer: usize, seq: u64) -> CommResult<Vec<f32>> {
+        let (payload, bytes) =
+            self.mesh.lock().unwrap().recv_frame(world_peer, self.group_id, seq)?;
+        self.stats.bytes += bytes as u64;
+        bytes_to_f32s(&payload, world_peer)
+    }
+
+    /// Ring all-gather: after `size-1` rotation steps every member holds
+    /// every block, indexed by origin member. Member 0 receives before
+    /// sending (everyone else sends first), which breaks the ring's
+    /// blocking-write cycle for arbitrarily large payloads.
+    fn ring_gather_blocks(&mut self, data: &[f32]) -> CommResult<Vec<Vec<f32>>> {
+        let n = self.members.len();
+        let seq = self.next_seq();
+        let mut blocks: Vec<Vec<f32>> = vec![Vec::new(); n];
+        blocks[self.my] = data.to_vec();
+        let mut carry = data.to_vec();
+        for step in 1..n {
+            let next = self.peer_at(1);
+            let prev = self.peer_at(n - 1);
+            let received = if self.my == 0 {
+                let r = self.recv_f32(prev, seq)?;
+                self.send_f32(next, seq, &carry)?;
+                r
+            } else {
+                self.send_f32(next, seq, &carry)?;
+                self.recv_f32(prev, seq)?
+            };
+            let origin = (self.my + n - step) % n;
+            blocks[origin] = received.clone();
+            carry = received;
+        }
+        Ok(blocks)
+    }
+}
+
+impl Transport for TcpGroup {
+    fn rank(&self) -> usize {
+        self.my
+    }
+
+    fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    fn backend(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn barrier(&mut self) -> CommResult<()> {
+        if self.size() > 1 {
+            // an empty-payload ring all-gather: leaving it requires a
+            // frame originating at every other member, i.e. everyone
+            // has entered
+            self.ring_gather_blocks(&[])?;
+        }
+        self.stats.ops += 1;
+        Ok(())
+    }
+
+    fn all_reduce_sum(&mut self, data: &mut [f32]) -> CommResult<()> {
+        if self.size() > 1 {
+            let blocks = self.ring_gather_blocks(data)?;
+            for (member, b) in blocks.iter().enumerate() {
+                if b.len() != data.len() {
+                    return Err(CommError::Protocol {
+                        reason: format!(
+                            "all_reduce length mismatch: member {member} contributed {} \
+                             elements, expected {}",
+                            b.len(),
+                            data.len()
+                        ),
+                    });
+                }
+            }
+            // fold in member order 0..size — bit-identical to the
+            // in-process slot loop
+            data.iter_mut().for_each(|d| *d = 0.0);
+            for b in &blocks {
+                for (d, &o) in data.iter_mut().zip(b.iter()) {
+                    *d += o;
+                }
+            }
+        }
+        self.stats.ops += 1;
+        Ok(())
+    }
+
+    fn all_reduce_max(&mut self, data: &mut [f32]) -> CommResult<()> {
+        if self.size() > 1 {
+            let blocks = self.ring_gather_blocks(data)?;
+            data.iter_mut().for_each(|d| *d = f32::NEG_INFINITY);
+            for b in &blocks {
+                for (d, &o) in data.iter_mut().zip(b.iter()) {
+                    if o > *d {
+                        *d = o;
+                    }
+                }
+            }
+        }
+        self.stats.ops += 1;
+        Ok(())
+    }
+
+    fn broadcast(&mut self, root: usize, data: &mut [f32]) -> CommResult<()> {
+        let n = self.size();
+        if n > 1 {
+            if root >= n {
+                return Err(CommError::Protocol {
+                    reason: format!("broadcast root {root} out of range (size {n})"),
+                });
+            }
+            let seq = self.next_seq();
+            // forward chain in ring order starting at the root
+            let pos = (self.my + n - root) % n;
+            if pos == 0 {
+                self.send_f32(self.peer_at(1), seq, data)?;
+            } else {
+                let prev = self.peer_at(n - 1);
+                let received = self.recv_f32(prev, seq)?;
+                if received.len() != data.len() {
+                    return Err(CommError::Protocol {
+                        reason: format!(
+                            "broadcast length mismatch: root {root} sent {} elements, \
+                             expected {}",
+                            received.len(),
+                            data.len()
+                        ),
+                    });
+                }
+                data.copy_from_slice(&received);
+                if pos < n - 1 {
+                    self.send_f32(self.peer_at(1), seq, data)?;
+                }
+            }
+        }
+        self.stats.ops += 1;
+        Ok(())
+    }
+
+    fn all_gather(&mut self, data: &[f32]) -> CommResult<Vec<f32>> {
+        let out = if self.size() > 1 {
+            let blocks = self.ring_gather_blocks(data)?;
+            let mut out = Vec::with_capacity(blocks.iter().map(|b| b.len()).sum());
+            for b in blocks {
+                out.extend_from_slice(&b);
+            }
+            out
+        } else {
+            data.to_vec()
+        };
+        self.stats.ops += 1;
+        Ok(out)
+    }
+
+    fn send(&mut self, peer: usize, data: &[f32]) -> CommResult<()> {
+        let world = *self.members.get(peer).ok_or_else(|| CommError::Protocol {
+            reason: format!("send peer {peer} out of range (size {})", self.size()),
+        })?;
+        let seq = self.next_seq();
+        self.send_f32(world, seq, data)?;
+        self.stats.ops += 1;
+        Ok(())
+    }
+
+    fn recv(&mut self, peer: usize) -> CommResult<Vec<f32>> {
+        let world = *self.members.get(peer).ok_or_else(|| CommError::Protocol {
+            reason: format!("recv peer {peer} out of range (size {})", self.size()),
+        })?;
+        let seq = self.next_seq();
+        let out = self.recv_f32(world, seq)?;
+        self.stats.ops += 1;
+        Ok(out)
+    }
+
+    fn wire_stats(&self) -> WireStats {
+        self.stats
+    }
+}
+
+/// Build one rank's full [`RankCtx`] (world + row + column scopes) over
+/// a connected mesh. Group ids are derived from the grid topology, so
+/// every rank numbers the scopes identically: world = 0, row `i` =
+/// `1 + i`, column `j` = `1 + q + j`.
+pub fn rank_ctx_from_mesh(mesh: TcpMesh, grid: Grid) -> CommResult<RankCtx> {
+    let rank = mesh.rank();
+    if mesh.size() != grid.p() {
+        return Err(CommError::Protocol {
+            reason: format!("mesh size {} does not match grid p {}", mesh.size(), grid.p()),
+        });
+    }
+    let q = grid.q;
+    let row = grid.row_of(rank);
+    let col = grid.col_of(rank);
+    let mesh = Arc::new(Mutex::new(mesh));
+    let world_members: Vec<usize> = (0..grid.p()).collect();
+    let row_members: Vec<usize> = (0..q).map(|c| grid.rank_at(row, c)).collect();
+    let col_members: Vec<usize> = (0..q).map(|r| grid.rank_at(r, col)).collect();
+    let world = Group::from_transport(TcpGroup::new(mesh.clone(), world_members, 0)?);
+    let row_comm =
+        Group::from_transport(TcpGroup::new(mesh.clone(), row_members, 1 + row as u32)?);
+    let col_comm =
+        Group::from_transport(TcpGroup::new(mesh, col_members, 1 + q as u32 + col as u32)?);
+    Ok(RankCtx { grid, rank, row, col, row_comm, col_comm, world })
+}
+
+/// Test/bench harness: bind `size` listeners on localhost and establish
+/// all meshes concurrently. Returns the meshes in rank order.
+pub fn loopback_meshes(size: usize, cfg: TcpConfig) -> CommResult<Vec<TcpMesh>> {
+    let ip: IpAddr = "127.0.0.1".parse().expect("loopback ip");
+    let mut listeners = Vec::with_capacity(size);
+    for _ in 0..size {
+        listeners.push(MeshListener::bind(ip)?);
+    }
+    let addrs: Vec<SocketAddr> = listeners.iter().map(|l| l.addr).collect();
+    let metas: Vec<(usize, MeshListener)> = listeners.into_iter().enumerate().collect();
+    let meshes = std::thread::scope(|s| {
+        let handles: Vec<_> = metas
+            .into_iter()
+            .map(|(rank, listener)| {
+                let addrs = addrs.clone();
+                s.spawn(move || TcpMesh::establish(rank, size, 0, listener, &addrs, cfg))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("mesh thread panicked"))
+            .collect::<CommResult<Vec<_>>>()
+    })?;
+    Ok(meshes)
+}
+
+fn f32s_to_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(payload: &[u8], peer: usize) -> CommResult<Vec<f32>> {
+    if payload.len() % 4 != 0 {
+        return Err(CommError::Protocol {
+            reason: format!("payload from rank {peer} is {} bytes, not a multiple of 4", payload.len()),
+        });
+    }
+    Ok(payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn configure(stream: &TcpStream, cfg: TcpConfig) -> CommResult<()> {
+    let apply = || -> std::io::Result<()> {
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(cfg.timeout))?;
+        stream.set_write_timeout(Some(cfg.timeout))?;
+        Ok(())
+    };
+    apply().map_err(|e| CommError::Io { op: "configure socket", detail: e.to_string() })
+}
+
+/// Dial a peer's listener with bounded retry (its listener is bound
+/// before addresses are exchanged, but the connect can still race the
+/// OS accept queue under load).
+fn dial(addr: SocketAddr, peer: usize, cfg: TcpConfig) -> CommResult<TcpStream> {
+    let deadline = Instant::now() + cfg.timeout.mul_f64((cfg.retries + 1) as f64);
+    loop {
+        match TcpStream::connect_timeout(&addr, cfg.timeout) {
+            Ok(stream) => {
+                configure(&stream, cfg)?;
+                return Ok(stream);
+            }
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return if e.kind() == std::io::ErrorKind::TimedOut {
+                        Err(CommError::Timeout { op: "mesh dial", peer })
+                    } else {
+                        Err(CommError::Io { op: "mesh dial", detail: e.to_string() })
+                    };
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn send_hello(
+    stream: &TcpStream,
+    epoch: u64,
+    from: usize,
+    peer: usize,
+    cfg: TcpConfig,
+) -> CommResult<()> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + 16);
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.push(KIND_HELLO);
+    buf.extend_from_slice(&0u32.to_le_bytes()); // group (unused in hello)
+    buf.extend_from_slice(&0u64.to_le_bytes()); // seq (unused in hello)
+    buf.extend_from_slice(&16u32.to_le_bytes());
+    buf.extend_from_slice(&TRANSPORT_VERSION.to_le_bytes());
+    buf.extend_from_slice(&epoch.to_le_bytes());
+    buf.extend_from_slice(&(from as u32).to_le_bytes());
+    let mut s = stream;
+    write_all_retry(&mut s, &buf, "mesh hello", peer, cfg)
+}
+
+/// Read and validate a hello; returns the peer's claimed rank.
+fn recv_hello(
+    stream: &TcpStream,
+    epoch: u64,
+    peer: usize,
+    cfg: TcpConfig,
+) -> CommResult<usize> {
+    let mut buf = [0u8; HEADER_LEN + 16];
+    let mut s = stream;
+    read_exact_retry(&mut s, &mut buf, "mesh hello", peer, cfg)?;
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    let kind = buf[4];
+    let len = u32::from_le_bytes(buf[17..21].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(CommError::Handshake {
+            reason: format!("bad magic {magic:#x} (not a drescal transport peer?)"),
+        });
+    }
+    if kind != KIND_HELLO || len != 16 {
+        return Err(CommError::Handshake {
+            reason: format!("expected hello frame, got kind {kind} len {len}"),
+        });
+    }
+    let version = u32::from_le_bytes(buf[21..25].try_into().unwrap());
+    let got_epoch = u64::from_le_bytes(buf[25..33].try_into().unwrap());
+    let from = u32::from_le_bytes(buf[33..37].try_into().unwrap()) as usize;
+    if version != TRANSPORT_VERSION {
+        return Err(CommError::Handshake {
+            reason: format!(
+                "transport version mismatch: peer speaks v{version}, we speak \
+                 v{TRANSPORT_VERSION}"
+            ),
+        });
+    }
+    if got_epoch != epoch {
+        return Err(CommError::Handshake {
+            reason: format!("stale mesh epoch: peer is at {got_epoch}, we are at {epoch}"),
+        });
+    }
+    Ok(from)
+}
+
+fn map_io(e: std::io::Error, op: &'static str, peer: usize) -> CommError {
+    use std::io::ErrorKind::*;
+    match e.kind() {
+        WouldBlock | TimedOut => CommError::Timeout { op, peer },
+        UnexpectedEof | ConnectionReset | ConnectionAborted | BrokenPipe | NotConnected => {
+            CommError::PeerDisconnected { peer }
+        }
+        _ => CommError::Io { op, detail: e.to_string() },
+    }
+}
+
+fn write_all_retry(
+    stream: &mut (impl Write + ?Sized),
+    buf: &[u8],
+    op: &'static str,
+    peer: usize,
+    cfg: TcpConfig,
+) -> CommResult<()> {
+    let mut off = 0;
+    let mut timeouts = 0;
+    while off < buf.len() {
+        match stream.write(&buf[off..]) {
+            Ok(0) => return Err(CommError::PeerDisconnected { peer }),
+            Ok(k) => off += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                timeouts += 1;
+                if timeouts > cfg.retries {
+                    return Err(CommError::Timeout { op, peer });
+                }
+            }
+            Err(e) => return Err(map_io(e, op, peer)),
+        }
+    }
+    Ok(())
+}
+
+fn read_exact_retry(
+    stream: &mut (impl Read + ?Sized),
+    buf: &mut [u8],
+    op: &'static str,
+    peer: usize,
+    cfg: TcpConfig,
+) -> CommResult<()> {
+    let mut off = 0;
+    let mut timeouts = 0;
+    while off < buf.len() {
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => return Err(CommError::PeerDisconnected { peer }),
+            Ok(k) => off += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                timeouts += 1;
+                if timeouts > cfg.retries {
+                    return Err(CommError::Timeout { op, peer });
+                }
+            }
+            Err(e) => return Err(map_io(e, op, peer)),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> TcpConfig {
+        TcpConfig { timeout: Duration::from_secs(5), retries: 1 }
+    }
+
+    /// Run `f` on every member of a `size`-rank loopback mesh, each on
+    /// its own thread, with a world-scope TcpGroup.
+    fn run_world<T: Send>(size: usize, f: impl Fn(TcpGroup) -> T + Sync) -> Vec<T> {
+        let meshes = loopback_meshes(size, quick_cfg()).expect("loopback mesh");
+        std::thread::scope(|s| {
+            let handles: Vec<_> = meshes
+                .into_iter()
+                .map(|mesh| {
+                    let members: Vec<usize> = (0..size).collect();
+                    let g = TcpGroup::new(Arc::new(Mutex::new(mesh)), members, 0)
+                        .expect("world group");
+                    s.spawn(|| f(g))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn ring_all_reduce_sums_in_member_order() {
+        let results = run_world(3, |mut g| {
+            let mut v = vec![g.rank() as f32, 1.0];
+            g.all_reduce_sum(&mut v).unwrap();
+            v
+        });
+        for r in results {
+            assert_eq!(r, vec![3.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn broadcast_and_gather_over_ring() {
+        let results = run_world(4, |mut g| {
+            let mut v = vec![if g.rank() == 2 { 7.5 } else { 0.0 }];
+            g.broadcast(2, &mut v).unwrap();
+            let gathered = g.all_gather(&[g.rank() as f32]).unwrap();
+            (v[0], gathered)
+        });
+        for (b, gathered) in results {
+            assert_eq!(b, 7.5);
+            assert_eq!(gathered, vec![0.0, 1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn barrier_and_empty_payloads() {
+        let results = run_world(3, |mut g| {
+            g.barrier().unwrap();
+            let gathered = g.all_gather(&[]).unwrap();
+            let mut nothing: [f32; 0] = [];
+            g.all_reduce_sum(&mut nothing).unwrap();
+            g.barrier().unwrap();
+            gathered.len()
+        });
+        assert_eq!(results, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn point_to_point_roundtrip() {
+        let results = run_world(2, |mut g| {
+            if g.rank() == 0 {
+                g.send(1, &[1.0, 2.0]).unwrap();
+                g.recv(1).unwrap()
+            } else {
+                let got = g.recv(0).unwrap();
+                g.send(0, &[got[0] * 10.0, got[1] * 10.0]).unwrap();
+                got
+            }
+        });
+        assert_eq!(results[0], vec![10.0, 20.0]);
+        assert_eq!(results[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn wire_stats_count_real_bytes() {
+        let results = run_world(2, |mut g| {
+            let mut v = vec![1.0f32; 8];
+            g.all_reduce_sum(&mut v).unwrap();
+            g.wire_stats()
+        });
+        for s in results {
+            // one ring step each way: 2 frames * (21B header + 32B payload)
+            assert_eq!(s.bytes, 2 * (HEADER_LEN as u64 + 32));
+            assert_eq!(s.ops, 1);
+        }
+    }
+
+    #[test]
+    fn dead_peer_is_a_typed_error() {
+        let results = run_world(2, |mut g| {
+            if g.rank() == 1 {
+                // die without participating: drop the mesh
+                return Ok(());
+            }
+            let mut v = vec![1.0f32; 4];
+            g.all_reduce_sum(&mut v)
+        });
+        assert!(results[1].is_ok());
+        match &results[0] {
+            Err(CommError::PeerDisconnected { .. }) | Err(CommError::Timeout { .. }) => {}
+            other => panic!("expected disconnect/timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_mismatch_fails_handshake() {
+        // hand-roll a hello with the wrong version against a real listener
+        let ip: IpAddr = "127.0.0.1".parse().unwrap();
+        let listener = MeshListener::bind(ip).unwrap();
+        let addr = listener.addr;
+        let t = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            configure(&stream, quick_cfg()).unwrap();
+            let mut buf = Vec::new();
+            buf.extend_from_slice(&MAGIC.to_le_bytes());
+            buf.push(KIND_HELLO);
+            buf.extend_from_slice(&0u32.to_le_bytes());
+            buf.extend_from_slice(&0u64.to_le_bytes());
+            buf.extend_from_slice(&16u32.to_le_bytes());
+            buf.extend_from_slice(&999u32.to_le_bytes()); // bogus version
+            buf.extend_from_slice(&0u64.to_le_bytes());
+            buf.extend_from_slice(&1u32.to_le_bytes());
+            let mut s = &stream;
+            write_all_retry(&mut s, &buf, "test hello", 1, quick_cfg()).unwrap();
+            // keep the socket open until the other side has judged us
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let err = TcpMesh::establish(0, 2, 0, listener, &[addr, addr], quick_cfg())
+            .err()
+            .expect("establish must fail");
+        match err {
+            CommError::Handshake { reason } => assert!(reason.contains("version")),
+            other => panic!("expected handshake error, got {other:?}"),
+        }
+        t.join().unwrap();
+    }
+}

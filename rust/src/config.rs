@@ -10,12 +10,13 @@
 //!   stringly flag lookups.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 use crate::backend::BackendSpec;
 use crate::coordinator::JobData;
 use crate::data::synthetic::SyntheticSpec;
 use crate::data::{nations, synthetic, trade};
-use crate::engine::{DatasetSpec, EngineConfig};
+use crate::engine::{ClusterConfig, DatasetSpec, EngineConfig, TransportKind};
 use crate::error::{Context as _, Result};
 use crate::json::Json;
 use crate::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
@@ -245,6 +246,28 @@ pub struct ExascaleCmd {
     pub machine: MachineSpec,
 }
 
+/// `drescal train` — lead a multi-process TCP cluster factorization:
+/// this process runs rank 0 and coordinates `--workers` remote
+/// `drescal worker` processes (so p = workers + 1 must be a perfect
+/// square).
+#[derive(Clone)]
+pub struct TrainCmd {
+    pub data: DataSpec,
+    /// Engine config with `transport = TcpLeader` already folded in.
+    pub engine: EngineConfig,
+    pub opts: RescalOptions,
+    pub seed: u64,
+    pub json: bool,
+}
+
+/// `drescal worker` — join a leader's cluster and serve rank jobs until
+/// it shuts down.
+#[derive(Clone, Debug)]
+pub struct WorkerCmd {
+    /// Leader control address, e.g. `127.0.0.1:47001`.
+    pub connect: String,
+}
+
 /// `drescal bench` — the fixed-shape perf harness. Runs factorize,
 /// model-select, and serving jobs on synthetic datasets and emits a
 /// machine-readable `BENCH_rescal.json` so the perf trajectory is
@@ -356,6 +379,8 @@ pub enum Command {
     Run(FactorizeCmd),
     ModelSelect(ModelSelectCmd),
     Exascale(ExascaleCmd),
+    Train(TrainCmd),
+    Worker(WorkerCmd),
     Artifacts(ArtifactsCmd),
     Bench(BenchCmd),
     Export(ExportCmd),
@@ -396,6 +421,11 @@ const SERVE_BENCH_FLAGS: &[&str] = &[
     "batch", "top", "seed", "cache-bytes",
 ];
 const INGEST_FLAGS: &[&str] = &["config", "input", "out", "grid", "dense", "json"];
+const TRAIN_FLAGS: &[&str] = &[
+    "config", "data", "n", "m", "k-true", "density", "seed", "trace", "k", "iters",
+    "json", "workers", "listen", "port-file", "comm-timeout-ms", "max-replacements",
+];
+const WORKER_FLAGS: &[&str] = &["config", "connect"];
 
 impl RunConfig {
     /// Parse + validate a full command line (after the binary name),
@@ -574,6 +604,58 @@ impl RunConfig {
                     seed: args.get_u64("seed", 42)?,
                 })
             }
+            "train" => {
+                check_known_flags(&args.subcommand, &cli_flags, TRAIN_FLAGS)?;
+                let workers = args.get_usize("workers", 3)?;
+                let p = workers + 1;
+                let q = (p as f64).sqrt().round() as usize;
+                if q * q != p {
+                    bail!(
+                        "--workers {workers} gives p = {p} ranks (workers + leader), \
+                         which must be a perfect square — try --workers 3, 8, or 15"
+                    );
+                }
+                let k = args.get_usize("k", 4)?;
+                let iters = args.get_usize("iters", 200)?;
+                if k == 0 {
+                    bail!("--k must be >= 1");
+                }
+                if iters == 0 {
+                    bail!("--iters must be >= 1");
+                }
+                let timeout_ms = args.get_u64("comm-timeout-ms", 10_000)?;
+                if timeout_ms == 0 {
+                    bail!("--comm-timeout-ms must be >= 1");
+                }
+                let cluster = ClusterConfig {
+                    listen: args.get("listen").unwrap_or("127.0.0.1:0").to_string(),
+                    timeout_ms,
+                    max_replacements: args.get_u64("max-replacements", 1)? as u32,
+                    port_file: args.get("port-file").map(PathBuf::from),
+                };
+                let engine = EngineConfig {
+                    p,
+                    backend: BackendSpec::Native,
+                    trace: args.get_bool("trace"),
+                    transport: TransportKind::TcpLeader(cluster),
+                    ..Default::default()
+                };
+                Command::Train(TrainCmd {
+                    data: data_spec(&args)?,
+                    engine,
+                    opts: RescalOptions::new(k, iters),
+                    seed: args.get_u64("seed", 42)?,
+                    json: args.get_bool("json"),
+                })
+            }
+            "worker" => {
+                check_known_flags(&args.subcommand, &cli_flags, WORKER_FLAGS)?;
+                let connect = args
+                    .get("connect")
+                    .ok_or_else(|| err!("worker needs --connect <leader addr>"))?
+                    .to_string();
+                Command::Worker(WorkerCmd { connect })
+            }
             "help" | "--help" | "-h" => Command::Help,
             other => bail!("unknown subcommand '{other}' — try `drescal help`"),
         };
@@ -599,6 +681,7 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         trace: args.get_bool("trace"),
         // resident-tile memory budget; 0 (the default) = unbounded
         dataset_cache_bytes: args.get_usize("cache-bytes", 0)?,
+        transport: TransportKind::InProcess,
     };
     cfg.validate().context("--p")?;
     Ok(cfg)
@@ -1055,6 +1138,44 @@ mod tests {
             DataSpec::Nations.to_dataset_spec(1).unwrap(),
             DatasetSpec::InMemory(_)
         ));
+    }
+
+    #[test]
+    fn train_and_worker_subcommands_are_typed() {
+        let cfg = RunConfig::from_args(argv(
+            "train --workers 3 --listen 127.0.0.1:0 --k 3 --port-file leader.addr",
+        ))
+        .unwrap();
+        match cfg.command {
+            Command::Train(cmd) => {
+                assert_eq!(cmd.engine.p, 4, "p = workers + leader");
+                match &cmd.engine.transport {
+                    TransportKind::TcpLeader(c) => {
+                        assert_eq!(c.listen, "127.0.0.1:0");
+                        assert_eq!(c.timeout_ms, 10_000);
+                        assert_eq!(c.max_replacements, 1);
+                        assert_eq!(c.port_file.as_deref(), Some(std::path::Path::new("leader.addr")));
+                    }
+                    _ => panic!("train must select the TCP transport"),
+                }
+                assert_eq!(cmd.opts.k, 3);
+            }
+            _ => panic!("expected train command"),
+        }
+        // workers + leader must form a square grid
+        let e = RunConfig::from_args(argv("train --workers 2")).unwrap_err();
+        assert!(e.to_string().contains("perfect square"), "{e}");
+        assert!(RunConfig::from_args(argv("train --comm-timeout-ms 0")).is_err());
+        // worker needs a leader address
+        let e = RunConfig::from_args(argv("worker")).unwrap_err();
+        assert!(e.to_string().contains("--connect"), "{e}");
+        let cfg = RunConfig::from_args(argv("worker --connect 127.0.0.1:9000")).unwrap();
+        match cfg.command {
+            Command::Worker(cmd) => assert_eq!(cmd.connect, "127.0.0.1:9000"),
+            _ => panic!("expected worker command"),
+        }
+        // everything else on the worker command line is rejected
+        assert!(RunConfig::from_args(argv("worker --connect x --k 4")).is_err());
     }
 
     #[test]

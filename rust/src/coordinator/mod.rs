@@ -151,6 +151,9 @@ pub struct RescalReport {
     /// job): `mat_allocs == 0` on a warm pool proves the zero-allocation
     /// steady state.
     pub workspace: WorkspaceStats,
+    /// Transport backend the job's collectives ran over: `"in_process"`
+    /// (thread pool, the default) or `"tcp"` (multi-process cluster).
+    pub transport_backend: String,
 }
 
 /// Gathered result of a model-selection job.
@@ -166,6 +169,9 @@ pub struct RescalkReport {
     /// Workspace checkout counters summed over ranks (delta for this
     /// job).
     pub workspace: WorkspaceStats,
+    /// Transport backend the job's collectives ran over: `"in_process"`
+    /// or `"tcp"`.
+    pub transport_backend: String,
 }
 
 /// Run one distributed non-negative RESCAL factorization on a one-shot

@@ -1,0 +1,1153 @@
+//! Multi-process cluster execution: a TCP leader pool and the
+//! `drescal worker` process loop.
+//!
+//! ## Roles and rendezvous
+//!
+//! `drescal train --workers N --listen <addr>` runs the **leader**: it
+//! owns the [`super::Engine`], executes world rank 0 itself (on the
+//! calling thread, with the same [`RankState`] the in-process pool
+//! uses), and coordinates N remote **workers** (`drescal worker
+//! --connect <addr>`) over a newline-delimited JSON control plane.
+//! Rendezvous is leader-coordinated and epoch-stamped:
+//!
+//! ```text
+//! worker → leader   hello   {version}
+//! leader → worker   welcome {rank, p, epoch, timeout_ms, trace}
+//! leader → worker   prepare {epoch}          (mesh build/rebuild begins)
+//! worker → leader   listening {addr}         (fresh mesh listener per epoch)
+//! leader → worker   assign  {epoch, addrs}   (addrs[r] = rank r's mesh addr)
+//!      …all ranks run TcpMesh::establish concurrently…
+//! worker → leader   ready
+//! leader → worker   job     {job}            (repeated; replies are one
+//! worker → leader   <rank reply>              out line per job)
+//! leader → worker   shutdown
+//! ```
+//!
+//! Collective traffic never touches the control plane: after `assign`,
+//! ranks talk over the framed [`crate::comm::transport::tcp`] socket
+//! mesh, and **no tensor data crosses any wire** — each worker
+//! materializes its own tiles from the shipped [`DatasetSpec`]
+//! (rank-local synthetic generation, or shard reads from an ingested
+//! corpus's manifest directory). Leader-resident `InMemory` data is a
+//! typed error in cluster mode.
+//!
+//! ## Crash recovery
+//!
+//! A worker death surfaces as a control-stream EOF on the leader and as
+//! typed [`crate::comm::CommError`]s on the survivors (their collectives
+//! time out or see the peer reset). The leader then: drains the
+//! survivors' `comm_error` replies, admits a replacement worker from the
+//! control listener, bumps the mesh **epoch** (stale-mesh hellos fail
+//! the handshake, so survivors can never cross-connect old and new
+//! meshes), runs the full mesh rebuild with everyone, replays the
+//! resident `LoadDataset` jobs to the replacement (which reloads the
+//! dead rank's tiles from its shards), and resubmits the failed job to
+//! all ranks. Jobs are deterministic given (dataset, options, seed), so
+//! the rerun is bit-identical to an undisturbed run. Admissions are
+//! bounded by [`ClusterConfig::max_replacements`]; past the budget the
+//! job fails with a typed error instead of waiting forever.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::backend::BackendSpec;
+use crate::comm::transport::tcp::{
+    rank_ctx_from_mesh, MeshListener, TcpConfig, TcpMesh, TRANSPORT_VERSION,
+};
+use crate::comm::{Grid, Trace};
+use crate::data::synthetic::SyntheticSpec;
+use crate::engine::dataset::DatasetSpec;
+use crate::engine::pool::{RankJob, RankOut, RankState};
+use crate::engine::report;
+use crate::error::{Context as _, Result};
+use crate::json::Json;
+use crate::model_selection::{InitStrategy, RescalkConfig, RescalkResult, SelectionRule};
+use crate::rescal::distributed::DistInit;
+use crate::rescal::{RankResult, RescalOptions};
+use crate::{bail, err};
+
+/// Mesh-socket retry budget, fixed on both sides of the wire.
+const RETRIES: u32 = 2;
+
+/// Leader-side cluster parameters (`drescal train`).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Control-plane listen address, e.g. `127.0.0.1:0` (port 0 binds an
+    /// ephemeral port; see `port_file`).
+    pub listen: String,
+    /// Per-read/-write socket deadline for mesh collectives, in
+    /// milliseconds. Also paces failure detection: a dead peer is
+    /// noticed within roughly `timeout_ms × (retries + 1)`.
+    pub timeout_ms: u64,
+    /// How many worker replacements the leader admits over its lifetime
+    /// before a communication failure becomes a hard job error.
+    pub max_replacements: u32,
+    /// When set, the leader writes its bound control address here once
+    /// it is listening — how scripts discover an ephemeral `--listen`
+    /// port.
+    pub port_file: Option<PathBuf>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            listen: "127.0.0.1:0".to_string(),
+            timeout_ms: 10_000,
+            max_replacements: 1,
+            port_file: None,
+        }
+    }
+}
+
+/// One worker's control-plane link (mesh traffic flows elsewhere).
+struct WorkerLink {
+    /// The worker's world rank (1..p; the leader is rank 0).
+    rank: usize,
+    writer: TcpStream,
+    reader: LineReader,
+}
+
+/// Why an exchange round could not complete: the world ranks whose
+/// control links died, plus a human-readable cause (also covers pure
+/// collective timeouts where every control link survived).
+struct ExchangeFailure {
+    dead: Vec<usize>,
+    detail: String,
+}
+
+/// The multi-process counterpart of the in-process rank pool: rank 0
+/// runs inside this struct (same [`RankState`], stepped synchronously on
+/// the submitting thread), ranks 1..p are remote `drescal worker`
+/// processes.
+pub(crate) struct ClusterPool {
+    p: usize,
+    trace: bool,
+    tcp: TcpConfig,
+    cfg: ClusterConfig,
+    /// Control listener; kept open after rendezvous so crash recovery
+    /// can admit replacement workers.
+    listener: TcpListener,
+    workers: Vec<WorkerLink>,
+    /// The leader's own rank 0 state.
+    state: RankState,
+    /// Mesh generation, bumped on every rebuild so stale peers fail the
+    /// hello handshake instead of cross-connecting meshes.
+    epoch: u64,
+    /// Resident dataset loads in id order, replayed to a replacement
+    /// worker so it reloads the dead rank's tiles from its shards.
+    resident: BTreeMap<u64, RankJob>,
+    replacements_used: u32,
+    backend_builds: usize,
+    tile_builds: usize,
+}
+
+impl ClusterPool {
+    /// Bind the control listener, rendezvous with `p - 1` workers, build
+    /// the epoch-0 mesh, and construct the leader's rank-0 state.
+    pub fn new(p: usize, backend: &BackendSpec, trace: bool, cfg: ClusterConfig) -> Result<ClusterPool> {
+        let addr = cfg
+            .listen
+            .to_socket_addrs()
+            .with_context(|| format!("resolving --listen address '{}'", cfg.listen))?
+            .next()
+            .ok_or_else(|| err!("--listen address '{}' resolved to nothing", cfg.listen))?;
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding cluster control listener on {addr}"))?;
+        let bound = listener.local_addr().context("resolving bound control address")?;
+        if let Some(path) = &cfg.port_file {
+            std::fs::write(path, format!("{bound}\n"))
+                .with_context(|| format!("writing port file {}", path.display()))?;
+        }
+        eprintln!("drescal: leader listening on {bound}, waiting for {} worker(s)", p - 1);
+        let tcp = TcpConfig { timeout: Duration::from_millis(cfg.timeout_ms.max(1)), retries: RETRIES };
+        let mut pool = ClusterPool {
+            p,
+            trace,
+            tcp,
+            cfg,
+            listener,
+            workers: Vec::with_capacity(p - 1),
+            // placeholder until the first mesh exists; replaced below
+            state: RankState::new(
+                crate::comm::grid::RankCtx::create_all(1).remove(0),
+                backend,
+                trace,
+            )?,
+            epoch: 0,
+            resident: BTreeMap::new(),
+            replacements_used: 0,
+            backend_builds: 0,
+            tile_builds: 0,
+        };
+        let deadline = Instant::now() + pool.rendezvous_window();
+        for rank in 1..p {
+            let link = pool.admit(rank, deadline)?;
+            pool.workers.push(link);
+        }
+        let ctx = pool.mesh_handshake()?;
+        pool.state = RankState::new(ctx, backend, trace)?;
+        // one backend per rank: the leader's plus each worker's
+        pool.backend_builds = p;
+        eprintln!("drescal: cluster of {p} rank(s) established (epoch 0)");
+        Ok(pool)
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn backend_builds(&self) -> usize {
+        self.backend_builds
+    }
+
+    pub fn tile_builds(&self) -> usize {
+        self.tile_builds
+    }
+
+    /// How long to wait for workers to appear (initial rendezvous and
+    /// replacement admission).
+    fn rendezvous_window(&self) -> Duration {
+        (self.tcp.timeout * 10).max(Duration::from_secs(30))
+    }
+
+    /// How long to wait for every rank's reply to one job. Collectives
+    /// bound their own stalls (`timeout × (retries + 1)` per blocked
+    /// op), and the leader's rank 0 runs the same collectives before it
+    /// starts reading, so replies trail its own step by at most one
+    /// timeout cascade plus serialization.
+    fn collect_window(&self) -> Duration {
+        self.tcp.timeout * (RETRIES + 1) * 2 + Duration::from_secs(60)
+    }
+
+    fn write_window(&self) -> Duration {
+        (self.tcp.timeout * (RETRIES + 1)).max(Duration::from_secs(30))
+    }
+
+    /// Accept one worker on the control listener, validate its hello,
+    /// and welcome it as world rank `rank` at the current epoch.
+    fn admit(&mut self, rank: usize, deadline: Instant) -> Result<WorkerLink> {
+        self.listener
+            .set_nonblocking(true)
+            .context("configuring control listener")?;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    stream.set_nonblocking(false).context("configuring control stream")?;
+                    configure_control(&stream, self.write_window())?;
+                    let writer = stream.try_clone().context("cloning control stream")?;
+                    let mut link = WorkerLink { rank, writer, reader: LineReader::new(stream) };
+                    let hello = Json::parse(&link.reader.read_line(deadline)?)
+                        .map_err(|e| err!("malformed hello from {peer}: {e}"))?;
+                    if get_str(&hello, "type")? != "hello" {
+                        bail!("worker at {peer} opened with '{}', not hello", get_str(&hello, "type")?);
+                    }
+                    let version = get_usize(&hello, "version")? as u32;
+                    if version != TRANSPORT_VERSION {
+                        bail!(
+                            "transport version mismatch: worker at {peer} speaks v{version}, \
+                             leader speaks v{TRANSPORT_VERSION}"
+                        );
+                    }
+                    let welcome = obj(vec![
+                        ("type", jstr("welcome")),
+                        ("rank", jnum(rank as f64)),
+                        ("p", jnum(self.p as f64)),
+                        ("epoch", u64_to_json(self.epoch)),
+                        ("timeout_ms", u64_to_json(self.tcp.timeout.as_millis() as u64)),
+                        ("trace", Json::Bool(self.trace)),
+                    ]);
+                    write_line(&mut link.writer, &welcome)?;
+                    eprintln!("drescal: admitted worker at {peer} as rank {rank}");
+                    return Ok(link);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "timed out waiting for a worker to claim rank {rank} — start \
+                             `drescal worker --connect <leader addr>` processes"
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => bail!("accepting worker connection: {e}"),
+            }
+        }
+    }
+
+    /// Build (or rebuild) the socket mesh at the current epoch with every
+    /// worker, returning the leader's rank-0 grid context. Fresh mesh
+    /// listeners are bound on both sides each time, so a rebuild never
+    /// races traffic from the torn-down mesh.
+    fn mesh_handshake(&mut self) -> Result<crate::comm::grid::RankCtx> {
+        let deadline = Instant::now() + self.rendezvous_window();
+        let prepare = obj(vec![("type", jstr("prepare")), ("epoch", u64_to_json(self.epoch))]);
+        for w in &mut self.workers {
+            write_line(&mut w.writer, &prepare)
+                .with_context(|| format!("sending prepare to rank {}", w.rank))?;
+        }
+        let bind_ip = self.listener.local_addr().context("control listener addr")?.ip();
+        let mesh_listener = MeshListener::bind(bind_ip)?;
+        let mut addrs: Vec<SocketAddr> = vec![mesh_listener.addr; self.p];
+        for w in &mut self.workers {
+            let line = w
+                .reader
+                .read_line(deadline)
+                .with_context(|| format!("waiting for rank {}'s mesh listener", w.rank))?;
+            let msg = Json::parse(&line).map_err(|e| err!("malformed listening message: {e}"))?;
+            if get_str(&msg, "type")? != "listening" {
+                bail!("rank {} sent '{}' instead of listening", w.rank, get_str(&msg, "type")?);
+            }
+            addrs[w.rank] = get_str(&msg, "addr")?
+                .parse::<SocketAddr>()
+                .map_err(|e| err!("rank {} sent an unparseable mesh address: {e}", w.rank))?;
+        }
+        let assign = obj(vec![
+            ("type", jstr("assign")),
+            ("epoch", u64_to_json(self.epoch)),
+            (
+                "addrs",
+                Json::Arr(addrs.iter().map(|a| jstr(a.to_string())).collect()),
+            ),
+        ]);
+        for w in &mut self.workers {
+            write_line(&mut w.writer, &assign)
+                .with_context(|| format!("sending mesh assignment to rank {}", w.rank))?;
+        }
+        let mesh = TcpMesh::establish(0, self.p, self.epoch, mesh_listener, &addrs, self.tcp)?;
+        let ctx = rank_ctx_from_mesh(mesh, Grid::new(self.p))?;
+        for w in &mut self.workers {
+            let line = w
+                .reader
+                .read_line(deadline)
+                .with_context(|| format!("waiting for rank {} to join the mesh", w.rank))?;
+            let msg = Json::parse(&line).map_err(|e| err!("malformed ready message: {e}"))?;
+            if get_str(&msg, "type")? != "ready" {
+                bail!("rank {} sent '{}' instead of ready", w.rank, get_str(&msg, "type")?);
+            }
+        }
+        Ok(ctx)
+    }
+
+    /// Run one job on every rank and gather the replies in rank order,
+    /// recovering from worker crashes within the replacement budget.
+    pub fn exchange(&mut self, job: &RankJob) -> Result<Vec<RankOut>> {
+        // serialize once: unshippable jobs (in-memory data, explicit
+        // init factors) fail here with a typed error, before any wire
+        // traffic or recovery machinery
+        let mut line = job_to_json(job)?.to_string().into_bytes();
+        line.push(b'\n');
+        loop {
+            match self.try_exchange(&line, job) {
+                Ok(outs) => {
+                    self.note_job(job, &outs);
+                    return Ok(outs);
+                }
+                Err(failure) => {
+                    eprintln!("drescal: cluster job round failed: {}", failure.detail);
+                    if self.replacements_used >= self.cfg.max_replacements {
+                        bail!(
+                            "cluster job failed ({}) and the worker-replacement budget \
+                             ({}) is exhausted",
+                            failure.detail,
+                            self.cfg.max_replacements
+                        );
+                    }
+                    self.replacements_used += 1;
+                    self.recover(&failure.dead)
+                        .with_context(|| format!("recovering from: {}", failure.detail))?;
+                    // deterministic jobs make the resubmission below
+                    // bit-identical to an undisturbed run
+                }
+            }
+        }
+    }
+
+    /// One exchange round: fan the job line out, step rank 0 locally,
+    /// read one reply per worker. Any dead control link or collective
+    /// failure aborts the round.
+    fn try_exchange(
+        &mut self,
+        line: &[u8],
+        job: &RankJob,
+    ) -> std::result::Result<Vec<RankOut>, ExchangeFailure> {
+        let mut dead: Vec<usize> = Vec::new();
+        let mut causes: Vec<String> = Vec::new();
+        let mut sent = vec![false; self.workers.len()];
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            match w.writer.write_all(line) {
+                Ok(()) => sent[i] = true,
+                Err(e) => {
+                    dead.push(w.rank);
+                    causes.push(format!("rank {} control link dead on send: {e}", w.rank));
+                }
+            }
+        }
+        // the leader executes its own rank synchronously; skipped when a
+        // send already failed (its collectives could only time out
+        // against the unreachable peer)
+        let rank0 = if dead.is_empty() { Some(self.state.step(job.clone())) } else { None };
+        if let Some(RankOut::CommError(e)) = &rank0 {
+            causes.push(format!("rank 0: {e}"));
+        }
+        // drain one reply from every worker that received the job, even
+        // after a failure — survivors unblock via their own socket
+        // deadlines and must not leave stale replies queued on the
+        // control stream
+        let deadline = Instant::now() + self.collect_window();
+        let mut replies: Vec<Option<RankOut>> = Vec::with_capacity(self.workers.len());
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            if !sent[i] {
+                replies.push(None);
+                continue;
+            }
+            let reply = w
+                .reader
+                .read_line(deadline)
+                .map_err(|e| e.to_string())
+                .and_then(|l| Json::parse(&l).map_err(|e| format!("malformed reply: {e}")))
+                .and_then(|v| out_from_json(&v).map_err(|e| e.to_string()));
+            match reply {
+                Ok(out) => {
+                    if let RankOut::CommError(e) = &out {
+                        causes.push(format!("rank {}: {e}", w.rank));
+                    }
+                    replies.push(Some(out));
+                }
+                Err(e) => {
+                    dead.push(w.rank);
+                    causes.push(format!("rank {} control link dead on reply: {e}", w.rank));
+                    replies.push(None);
+                }
+            }
+        }
+        if dead.is_empty() && causes.is_empty() {
+            let mut outs = Vec::with_capacity(self.p);
+            outs.push(rank0.expect("rank 0 always steps when no send failed"));
+            outs.extend(replies.into_iter().map(|r| r.expect("reply present when link alive")));
+            return Ok(outs);
+        }
+        dead.sort_unstable();
+        dead.dedup();
+        Err(ExchangeFailure { dead, detail: causes.join("; ") })
+    }
+
+    /// Crash recovery: admit a replacement for every dead rank, rebuild
+    /// the mesh at a fresh epoch with all workers, and replay the
+    /// resident dataset loads to the replacements so they rebuild the
+    /// dead ranks' tiles from their own shards.
+    fn recover(&mut self, dead: &[usize]) -> Result<()> {
+        self.epoch += 1;
+        let deadline = Instant::now() + self.rendezvous_window();
+        for &rank in dead {
+            eprintln!(
+                "drescal: rank {rank} lost; waiting for a replacement worker (epoch {})",
+                self.epoch
+            );
+            let link = self.admit(rank, deadline)?;
+            self.workers[rank - 1] = link;
+            self.backend_builds += 1;
+        }
+        let ctx = self.mesh_handshake()?;
+        // the leader's tiles and warm workspace survive; only its
+        // communicators change
+        self.state.set_ctx(ctx);
+        let replay: Vec<RankJob> = self.resident.values().cloned().collect();
+        for &rank in dead {
+            for job in &replay {
+                let mut line = job_to_json(job)?.to_string().into_bytes();
+                line.push(b'\n');
+                let w = &mut self.workers[rank - 1];
+                w.writer
+                    .write_all(&line)
+                    .with_context(|| format!("replaying dataset load to rank {rank}"))?;
+                let reply_deadline = Instant::now() + self.collect_window();
+                let reply = Json::parse(&w.reader.read_line(reply_deadline)?)
+                    .map_err(|e| err!("malformed replay reply: {e}"))
+                    .and_then(|v| out_from_json(&v))?;
+                match reply {
+                    RankOut::Loaded { .. } => self.tile_builds += 1,
+                    RankOut::JobError(e) => {
+                        bail!("replacement rank {rank} failed to reload its tiles: {e}")
+                    }
+                    _ => bail!("replacement rank {rank} sent an unexpected replay reply"),
+                }
+            }
+        }
+        eprintln!("drescal: cluster recovered at epoch {}", self.epoch);
+        Ok(())
+    }
+
+    /// Post-exchange bookkeeping: resident-dataset replay log and the
+    /// tile-build counter the engine's reuse guarantees assert on.
+    fn note_job(&mut self, job: &RankJob, outs: &[RankOut]) {
+        match job {
+            RankJob::LoadDataset { id, .. } => {
+                let loaded = outs.iter().filter(|o| matches!(o, RankOut::Loaded { .. })).count();
+                self.tile_builds += loaded;
+                if loaded == outs.len() {
+                    self.resident.insert(*id, job.clone());
+                }
+            }
+            RankJob::UnloadDataset { id } => {
+                self.resident.remove(id);
+            }
+            _ => {}
+        }
+    }
+}
+
+impl Drop for ClusterPool {
+    fn drop(&mut self) {
+        let bye = obj(vec![("type", jstr("shutdown"))]);
+        for w in &mut self.workers {
+            let _ = write_line(&mut w.writer, &bye);
+        }
+    }
+}
+
+/// The `drescal worker --connect <addr>` process body: join the leader's
+/// rendezvous, build this rank's state once, then serve mesh rebuilds
+/// and jobs until the leader says shutdown (or its control stream
+/// closes, which means the leader is gone and the worker exits cleanly).
+pub fn run_worker(connect: &str) -> Result<()> {
+    let addr = connect
+        .to_socket_addrs()
+        .with_context(|| format!("resolving leader address '{connect}'"))?
+        .next()
+        .ok_or_else(|| err!("leader address '{connect}' resolved to nothing"))?;
+    let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(30))
+        .with_context(|| format!("connecting to leader at {addr}"))?;
+    configure_control(&stream, Duration::from_secs(30))?;
+    let mut writer = stream.try_clone().context("cloning control stream")?;
+    let local_ip = stream.local_addr().context("resolving local address")?.ip();
+    let leader_ip = stream.peer_addr().context("resolving leader address")?.ip();
+    let mut reader = LineReader::new(stream);
+    write_line(
+        &mut writer,
+        &obj(vec![
+            ("type", jstr("hello")),
+            ("version", jnum(TRANSPORT_VERSION as f64)),
+        ]),
+    )?;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let welcome = Json::parse(&reader.read_line(deadline)?)
+        .map_err(|e| err!("malformed welcome from leader: {e}"))?;
+    if get_str(&welcome, "type")? != "welcome" {
+        bail!("leader answered hello with '{}'", get_str(&welcome, "type")?);
+    }
+    let rank = get_usize(&welcome, "rank")?;
+    let p = get_usize(&welcome, "p")?;
+    let q = (p as f64).sqrt().round() as usize;
+    if rank == 0 || rank >= p || q * q != p {
+        bail!("leader assigned an invalid slot: rank {rank} of p {p}");
+    }
+    let timeout_ms = u64_from_json(&welcome, "timeout_ms")?;
+    let trace = welcome.get("trace").and_then(|t| t.as_bool()).unwrap_or(false);
+    let tcp = TcpConfig { timeout: Duration::from_millis(timeout_ms.max(1)), retries: RETRIES };
+    eprintln!("drescal worker: joined as rank {rank} of {p}");
+    let mut state: Option<RankState> = None;
+    loop {
+        // idle reads wait on the leader indefinitely; a closed control
+        // stream (leader exit) ends the worker cleanly
+        let line = match reader.read_line(Instant::now() + Duration::from_secs(86_400)) {
+            Ok(l) => l,
+            Err(e) if e.to_string().contains("closed by peer") => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        let msg = Json::parse(&line).map_err(|e| err!("malformed control message: {e}"))?;
+        match get_str(&msg, "type")? {
+            "shutdown" => return Ok(()),
+            "prepare" => {
+                let epoch = u64_from_json(&msg, "epoch")?;
+                let listener = MeshListener::bind(local_ip)?;
+                write_line(
+                    &mut writer,
+                    &obj(vec![
+                        ("type", jstr("listening")),
+                        ("addr", jstr(listener.addr.to_string())),
+                    ]),
+                )?;
+                let assign_deadline = Instant::now() + (tcp.timeout * 10).max(Duration::from_secs(30));
+                let assign = Json::parse(&reader.read_line(assign_deadline)?)
+                    .map_err(|e| err!("malformed assign message: {e}"))?;
+                if get_str(&assign, "type")? != "assign" {
+                    bail!("leader sent '{}' instead of assign", get_str(&assign, "type")?);
+                }
+                if u64_from_json(&assign, "epoch")? != epoch {
+                    bail!("mesh assignment is for a different epoch");
+                }
+                let addr_list = assign
+                    .get("addrs")
+                    .and_then(|a| a.as_arr())
+                    .ok_or_else(|| err!("assign message missing 'addrs'"))?;
+                if addr_list.len() != p {
+                    bail!("assign lists {} mesh addresses, expected {p}", addr_list.len());
+                }
+                let mut addrs = Vec::with_capacity(p);
+                for (r, a) in addr_list.iter().enumerate() {
+                    let mut parsed = a
+                        .as_str()
+                        .ok_or_else(|| err!("mesh address {r} is not a string"))?
+                        .parse::<SocketAddr>()
+                        .map_err(|e| err!("unparseable mesh address for rank {r}: {e}"))?;
+                    // a leader listening on an unspecified IP (0.0.0.0)
+                    // advertises it verbatim; dial the IP its control
+                    // plane actually answers on
+                    if parsed.ip().is_unspecified() {
+                        parsed.set_ip(leader_ip);
+                    }
+                    addrs.push(parsed);
+                }
+                let mesh = TcpMesh::establish(rank, p, epoch, listener, &addrs, tcp)?;
+                let ctx = rank_ctx_from_mesh(mesh, Grid::new(p))?;
+                match &mut state {
+                    // first mesh: build the rank state (backend, empty
+                    // tile cache, workspace arena) exactly once
+                    None => state = Some(RankState::new(ctx, &BackendSpec::Native, trace)?),
+                    // rebuild: tiles and warm workspace survive, only
+                    // the communicators change
+                    Some(s) => s.set_ctx(ctx),
+                }
+                write_line(&mut writer, &obj(vec![("type", jstr("ready"))]))?;
+            }
+            "job" => {
+                let s = state
+                    .as_mut()
+                    .ok_or_else(|| err!("leader sent a job before the first mesh handshake"))?;
+                let job = job_from_json(
+                    msg.get("job").ok_or_else(|| err!("job message missing 'job'"))?,
+                )?;
+                let out = s.step(job);
+                write_line(&mut writer, &out_to_json(&out)?)?;
+            }
+            other => bail!("unknown control message '{other}' from leader"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Control-plane plumbing
+// ---------------------------------------------------------------------
+
+fn configure_control(stream: &TcpStream, write_timeout: Duration) -> Result<()> {
+    let apply = || -> std::io::Result<()> {
+        stream.set_nodelay(true)?;
+        // short read slices keep LineReader's deadline granular; the
+        // line-level deadline is what callers actually wait on
+        stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+        stream.set_write_timeout(Some(write_timeout))?;
+        Ok(())
+    };
+    apply().context("configuring control socket")
+}
+
+fn write_line(stream: &mut TcpStream, msg: &Json) -> Result<()> {
+    let mut line = msg.to_string().into_bytes();
+    line.push(b'\n');
+    stream.write_all(&line).context("control write failed")
+}
+
+/// Newline-delimited message reader over a control socket: one JSON
+/// document per line, each read bounded by a caller-supplied deadline.
+struct LineReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl LineReader {
+    fn new(stream: TcpStream) -> LineReader {
+        LineReader { stream, buf: Vec::new() }
+    }
+
+    /// Read one line (without its newline) before `deadline`.
+    fn read_line(&mut self, deadline: Instant) -> Result<String> {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                line.pop();
+                return String::from_utf8(line).map_err(|_| err!("control line is not valid UTF-8"));
+            }
+            if Instant::now() >= deadline {
+                bail!("timed out waiting for a control message");
+            }
+            let mut chunk = [0u8; 8192];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => bail!("control connection closed by peer"),
+                Ok(k) => self.buf.extend_from_slice(&chunk[..k]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => bail!("control read failed: {e}"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire form: jobs, replies, and their parts
+// ---------------------------------------------------------------------
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn jstr(s: impl Into<String>) -> Json {
+    Json::Str(s.into())
+}
+
+fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// u64 values (dataset ids, seeds, epochs) cross the wire as strings:
+/// JSON numbers are f64 and would silently round above 2^53.
+fn u64_to_json(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn u64_from_json(v: &Json, key: &str) -> Result<u64> {
+    match v.get(key).ok_or_else(|| err!("message missing '{key}'"))? {
+        Json::Str(s) => s.parse::<u64>().map_err(|_| err!("field '{key}' is not a u64")),
+        Json::Num(n) => Ok(*n as u64),
+        _ => Err(err!("field '{key}' is not a u64")),
+    }
+}
+
+fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| err!("message missing string field '{key}'"))
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| err!("message missing numeric field '{key}'"))
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize> {
+    Ok(get_f64(v, key)? as usize)
+}
+
+fn spec_to_json(spec: &DatasetSpec) -> Result<Json> {
+    match spec {
+        DatasetSpec::InMemory(_) => bail!(
+            "in-memory datasets cannot be shipped to a TCP cluster (tensor data never \
+             crosses the wire); ingest the corpus with `drescal ingest` and load it with \
+             --data file:<manifest> so each worker reads its own shards"
+        ),
+        DatasetSpec::Synthetic(s) => Ok(obj(vec![
+            ("type", jstr("synthetic")),
+            ("n", jnum(s.n as f64)),
+            ("m", jnum(s.m as f64)),
+            ("k", jnum(s.k as f64)),
+            ("density", jnum(s.density)),
+            ("noise", jnum(s.noise as f64)),
+            ("sparse", Json::Bool(s.sparse)),
+            ("seed", u64_to_json(s.seed)),
+        ])),
+        DatasetSpec::File(man) => {
+            let dir = man
+                .dir
+                .to_str()
+                .ok_or_else(|| err!("manifest dir {} is not valid UTF-8", man.dir.display()))?;
+            Ok(obj(vec![("type", jstr("file")), ("manifest", jstr(dir))]))
+        }
+    }
+}
+
+fn spec_from_json(v: &Json) -> Result<DatasetSpec> {
+    match get_str(v, "type")? {
+        "synthetic" => Ok(DatasetSpec::Synthetic(SyntheticSpec {
+            n: get_usize(v, "n")?,
+            m: get_usize(v, "m")?,
+            k: get_usize(v, "k")?,
+            density: get_f64(v, "density")?,
+            noise: get_f64(v, "noise")? as f32,
+            sparse: v.get("sparse").and_then(|s| s.as_bool()).unwrap_or(false),
+            seed: u64_from_json(v, "seed")?,
+        })),
+        // the worker re-reads manifest + shards from its own filesystem;
+        // only the path crosses the wire
+        "file" => DatasetSpec::from_manifest_path(get_str(v, "manifest")?),
+        other => Err(err!("unknown dataset spec kind '{other}'")),
+    }
+}
+
+fn opts_to_json(o: &RescalOptions) -> Json {
+    obj(vec![
+        ("k", jnum(o.k as f64)),
+        ("max_iters", jnum(o.max_iters as f64)),
+        ("tol", jnum(o.tol as f64)),
+        ("err_every", jnum(o.err_every as f64)),
+        ("eps", jnum(o.eps as f64)),
+    ])
+}
+
+fn opts_from_json(v: &Json) -> Result<RescalOptions> {
+    Ok(RescalOptions {
+        k: get_usize(v, "k")?,
+        max_iters: get_usize(v, "max_iters")?,
+        tol: get_f64(v, "tol")? as f32,
+        err_every: get_usize(v, "err_every")?,
+        eps: get_f64(v, "eps")? as f32,
+    })
+}
+
+fn rule_to_json(r: &SelectionRule) -> Json {
+    match r {
+        SelectionRule::StableThreshold { threshold } => obj(vec![
+            ("kind", jstr("stable_threshold")),
+            ("threshold", jnum(*threshold as f64)),
+        ]),
+        SelectionRule::MaxSeparation => obj(vec![("kind", jstr("max_separation"))]),
+        SelectionRule::StableElbow { threshold, min_gain } => obj(vec![
+            ("kind", jstr("stable_elbow")),
+            ("threshold", jnum(*threshold as f64)),
+            ("min_gain", jnum(*min_gain as f64)),
+        ]),
+    }
+}
+
+fn rule_from_json(v: &Json) -> Result<SelectionRule> {
+    match get_str(v, "kind")? {
+        "stable_threshold" => Ok(SelectionRule::StableThreshold {
+            threshold: get_f64(v, "threshold")? as f32,
+        }),
+        "max_separation" => Ok(SelectionRule::MaxSeparation),
+        "stable_elbow" => Ok(SelectionRule::StableElbow {
+            threshold: get_f64(v, "threshold")? as f32,
+            min_gain: get_f64(v, "min_gain")? as f32,
+        }),
+        other => Err(err!("unknown selection rule '{other}'")),
+    }
+}
+
+fn rescalk_cfg_to_json(c: &RescalkConfig) -> Result<Json> {
+    if !matches!(c.init, InitStrategy::Random) {
+        bail!(
+            "NNDSVD-seeded model selection cannot run on a TCP cluster (the precomputed \
+             factor map is leader-resident); use the random init"
+        );
+    }
+    Ok(obj(vec![
+        ("k_min", jnum(c.k_min as f64)),
+        ("k_max", jnum(c.k_max as f64)),
+        ("perturbations", jnum(c.perturbations as f64)),
+        ("delta", jnum(c.delta as f64)),
+        ("rescal_iters", jnum(c.rescal_iters as f64)),
+        ("tol", jnum(c.tol as f64)),
+        ("err_every", jnum(c.err_every as f64)),
+        ("regress_iters", jnum(c.regress_iters as f64)),
+        ("seed", u64_to_json(c.seed)),
+        ("rule", rule_to_json(&c.rule)),
+    ]))
+}
+
+fn rescalk_cfg_from_json(v: &Json) -> Result<RescalkConfig> {
+    Ok(RescalkConfig {
+        k_min: get_usize(v, "k_min")?,
+        k_max: get_usize(v, "k_max")?,
+        perturbations: get_usize(v, "perturbations")?,
+        delta: get_f64(v, "delta")? as f32,
+        rescal_iters: get_usize(v, "rescal_iters")?,
+        tol: get_f64(v, "tol")? as f32,
+        err_every: get_usize(v, "err_every")?,
+        regress_iters: get_usize(v, "regress_iters")?,
+        seed: u64_from_json(v, "seed")?,
+        rule: rule_from_json(v.get("rule").ok_or_else(|| err!("config missing 'rule'"))?)?,
+        init: InitStrategy::Random,
+    })
+}
+
+/// Serialize one rank job as a `job` control message. Fails (typed) on
+/// jobs that cannot cross process boundaries: in-memory datasets and
+/// explicitly-given initial factors.
+fn job_to_json(job: &RankJob) -> Result<Json> {
+    let body = match job {
+        RankJob::LoadDataset { id, spec, n } => obj(vec![
+            ("type", jstr("load")),
+            ("id", u64_to_json(*id)),
+            ("n", jnum(*n as f64)),
+            ("spec", spec_to_json(spec)?),
+        ]),
+        RankJob::UnloadDataset { id } => {
+            obj(vec![("type", jstr("unload")), ("id", u64_to_json(*id))])
+        }
+        RankJob::Factorize { dataset, n, opts, init } => {
+            let init_json = match init {
+                DistInit::Random { seed } => {
+                    obj(vec![("kind", jstr("random")), ("seed", u64_to_json(*seed))])
+                }
+                DistInit::Given(..) => bail!(
+                    "factorize jobs with explicitly-given initial factors cannot run on a \
+                     TCP cluster; use a seeded random init"
+                ),
+            };
+            obj(vec![
+                ("type", jstr("factorize")),
+                ("dataset", u64_to_json(*dataset)),
+                ("n", jnum(*n as f64)),
+                ("opts", opts_to_json(opts)),
+                ("init", init_json),
+            ])
+        }
+        RankJob::ModelSelect { dataset, n, cfg } => obj(vec![
+            ("type", jstr("model_select")),
+            ("dataset", u64_to_json(*dataset)),
+            ("n", jnum(*n as f64)),
+            ("cfg", rescalk_cfg_to_json(cfg)?),
+        ]),
+        RankJob::Ping => obj(vec![("type", jstr("ping"))]),
+    };
+    Ok(obj(vec![("type", jstr("job")), ("job", body)]))
+}
+
+fn job_from_json(v: &Json) -> Result<RankJob> {
+    match get_str(v, "type")? {
+        "load" => Ok(RankJob::LoadDataset {
+            id: u64_from_json(v, "id")?,
+            spec: std::sync::Arc::new(spec_from_json(
+                v.get("spec").ok_or_else(|| err!("load job missing 'spec'"))?,
+            )?),
+            n: get_usize(v, "n")?,
+        }),
+        "unload" => Ok(RankJob::UnloadDataset { id: u64_from_json(v, "id")? }),
+        "factorize" => {
+            let init = v.get("init").ok_or_else(|| err!("factorize job missing 'init'"))?;
+            if get_str(init, "kind")? != "random" {
+                bail!("unknown init kind '{}'", get_str(init, "kind")?);
+            }
+            Ok(RankJob::Factorize {
+                dataset: u64_from_json(v, "dataset")?,
+                n: get_usize(v, "n")?,
+                opts: opts_from_json(
+                    v.get("opts").ok_or_else(|| err!("factorize job missing 'opts'"))?,
+                )?,
+                init: DistInit::Random { seed: u64_from_json(init, "seed")? },
+            })
+        }
+        "model_select" => Ok(RankJob::ModelSelect {
+            dataset: u64_from_json(v, "dataset")?,
+            n: get_usize(v, "n")?,
+            cfg: rescalk_cfg_from_json(
+                v.get("cfg").ok_or_else(|| err!("model-select job missing 'cfg'"))?,
+            )?,
+        }),
+        other => Err(err!("unknown job kind '{other}'")),
+    }
+}
+
+/// Serialize a rank reply. Factor blocks ride the factor JSON helpers
+/// from [`report`], whose f32 → f64 → shortest-decimal path is exact —
+/// the gathered factors are bitwise what the worker computed.
+fn out_to_json(out: &RankOut) -> Result<Json> {
+    Ok(match out {
+        RankOut::Loaded { bytes } => {
+            obj(vec![("type", jstr("loaded")), ("bytes", jnum(*bytes as f64))])
+        }
+        RankOut::Unloaded => obj(vec![("type", jstr("unloaded"))]),
+        RankOut::JobError(e) => {
+            obj(vec![("type", jstr("job_error")), ("error", jstr(e.clone()))])
+        }
+        RankOut::CommError(e) => {
+            obj(vec![("type", jstr("comm_error")), ("error", jstr(e.clone()))])
+        }
+        RankOut::Ping(_) => obj(vec![("type", jstr("pong"))]),
+        RankOut::Factorize { row, col, result, trace } => obj(vec![
+            ("type", jstr("factorize")),
+            ("row", jnum(*row as f64)),
+            ("col", jnum(*col as f64)),
+            ("a_row", report::mat_to_json(&result.a_row)),
+            ("core", report::tensor_to_json(&result.r)),
+            ("rel_error", jnum(result.rel_error as f64)),
+            ("iters_run", jnum(result.iters_run as f64)),
+            ("workspace", report::workspace_to_json(result.workspace)),
+            ("trace", report::traces_to_json(std::slice::from_ref(trace))),
+        ]),
+        RankOut::ModelSelect { row, col, result, trace } => obj(vec![
+            ("type", jstr("model_select")),
+            ("row", jnum(*row as f64)),
+            ("col", jnum(*col as f64)),
+            ("scores", Json::Arr(result.scores.iter().map(report::score_to_json).collect())),
+            ("k_opt", jnum(result.k_opt as f64)),
+            ("a_opt_row", report::mat_to_json(&result.a_opt_row)),
+            ("core", report::tensor_to_json(&result.r_opt)),
+            ("workspace", report::workspace_to_json(result.workspace)),
+            ("trace", report::traces_to_json(std::slice::from_ref(trace))),
+        ]),
+        RankOut::Ready(_) | RankOut::BuildError(_) => {
+            bail!("internal: startup messages never cross the cluster wire")
+        }
+    })
+}
+
+fn trace_from_json(v: Option<&Json>) -> Result<Trace> {
+    match v {
+        None => Ok(Trace::disabled()),
+        Some(v) => {
+            let mut traces = report::traces_from_json(v)?;
+            if traces.len() != 1 {
+                bail!("rank reply must carry exactly one trace, got {}", traces.len());
+            }
+            Ok(traces.remove(0))
+        }
+    }
+}
+
+fn out_from_json(v: &Json) -> Result<RankOut> {
+    Ok(match get_str(v, "type")? {
+        "loaded" => RankOut::Loaded { bytes: get_usize(v, "bytes")? },
+        "unloaded" => RankOut::Unloaded,
+        "job_error" => RankOut::JobError(get_str(v, "error")?.to_string()),
+        "comm_error" => RankOut::CommError(get_str(v, "error")?.to_string()),
+        // thread ids are process-local and cannot cross the wire; the
+        // leader stamps its own so the engine's ping plumbing is
+        // type-uniform across transports
+        "pong" => RankOut::Ping(std::thread::current().id()),
+        "factorize" => RankOut::Factorize {
+            row: get_usize(v, "row")?,
+            col: get_usize(v, "col")?,
+            result: Box::new(RankResult {
+                a_row: report::mat_from_json(
+                    v.get("a_row").ok_or_else(|| err!("reply missing 'a_row'"))?,
+                )?,
+                r: report::tensor_from_json(
+                    v.get("core").ok_or_else(|| err!("reply missing 'core'"))?,
+                )?,
+                rel_error: get_f64(v, "rel_error")? as f32,
+                iters_run: get_usize(v, "iters_run")?,
+                workspace: report::workspace_from_json(v.get("workspace")),
+            }),
+            trace: trace_from_json(v.get("trace"))?,
+        },
+        "model_select" => RankOut::ModelSelect {
+            row: get_usize(v, "row")?,
+            col: get_usize(v, "col")?,
+            result: Box::new(RescalkResult {
+                scores: v
+                    .get("scores")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| err!("reply missing 'scores'"))?
+                    .iter()
+                    .map(report::score_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                k_opt: get_usize(v, "k_opt")?,
+                a_opt_row: report::mat_from_json(
+                    v.get("a_opt_row").ok_or_else(|| err!("reply missing 'a_opt_row'"))?,
+                )?,
+                r_opt: report::tensor_from_json(
+                    v.get("core").ok_or_else(|| err!("reply missing 'core'"))?,
+                )?,
+                workspace: report::workspace_from_json(v.get("workspace")),
+            }),
+            trace: trace_from_json(v.get("trace"))?,
+        },
+        other => bail!("unknown rank reply kind '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Mat, Tensor3};
+
+    #[test]
+    fn job_wire_roundtrip_preserves_options() {
+        let job = RankJob::Factorize {
+            dataset: 3,
+            n: 64,
+            opts: RescalOptions::new(4, 120).with_tol(1e-5, 10),
+            init: DistInit::Random { seed: 0xdead_beef_cafe },
+        };
+        let wire = job_to_json(&job).unwrap();
+        let body = wire.get("job").unwrap();
+        let back = job_from_json(body).unwrap();
+        match back {
+            RankJob::Factorize { dataset, n, opts, init } => {
+                assert_eq!((dataset, n), (3, 64));
+                assert_eq!((opts.k, opts.max_iters, opts.err_every), (4, 120, 10));
+                assert_eq!(opts.tol, 1e-5);
+                match init {
+                    DistInit::Random { seed } => assert_eq!(seed, 0xdead_beef_cafe),
+                    _ => panic!("init kind changed in roundtrip"),
+                }
+            }
+            _ => panic!("job kind changed in roundtrip"),
+        }
+    }
+
+    #[test]
+    fn synthetic_spec_roundtrips_and_inmemory_is_rejected() {
+        let spec = DatasetSpec::Synthetic(SyntheticSpec::sparse(48, 3, 4, 0.15, 99));
+        let back = spec_from_json(&spec_to_json(&spec).unwrap()).unwrap();
+        match back {
+            DatasetSpec::Synthetic(s) => {
+                assert_eq!((s.n, s.m, s.k, s.seed), (48, 3, 4, 99));
+                assert_eq!(s.density, 0.15);
+                assert!(s.sparse);
+            }
+            _ => panic!("spec kind changed in roundtrip"),
+        }
+        let inline = DatasetSpec::InMemory(crate::coordinator::JobData::dense(
+            Tensor3::zeros(4, 4, 1),
+        ));
+        let e = spec_to_json(&inline).unwrap_err();
+        assert!(e.to_string().contains("ingest"), "{e}");
+    }
+
+    #[test]
+    fn factorize_reply_roundtrips_factors_bitwise() {
+        let mut rng = crate::rng::Rng::new(7);
+        let a = Mat::random_uniform(5, 3, 0.0, 1.0, &mut rng);
+        let r = Tensor3::from_slices(vec![Mat::random_uniform(3, 3, 0.0, 1.0, &mut rng)]);
+        let out = RankOut::Factorize {
+            row: 1,
+            col: 0,
+            result: Box::new(RankResult {
+                a_row: a.clone(),
+                r: r.clone(),
+                rel_error: 0.123_456_79,
+                iters_run: 17,
+                workspace: Default::default(),
+            }),
+            trace: Trace::disabled(),
+        };
+        let back = out_from_json(&out_to_json(&out).unwrap()).unwrap();
+        match back {
+            RankOut::Factorize { row, col, result, .. } => {
+                assert_eq!((row, col), (1, 0));
+                assert_eq!(result.a_row.as_slice(), a.as_slice());
+                for (s, t) in result.r.slices().iter().zip(r.slices()) {
+                    assert_eq!(s.as_slice(), t.as_slice());
+                }
+                assert_eq!(result.rel_error, 0.123_456_79);
+                assert_eq!(result.iters_run, 17);
+            }
+            _ => panic!("reply kind changed in roundtrip"),
+        }
+    }
+
+    #[test]
+    fn rescalk_config_roundtrips_all_rules() {
+        for rule in [
+            SelectionRule::StableThreshold { threshold: 0.8 },
+            SelectionRule::MaxSeparation,
+            SelectionRule::StableElbow { threshold: 0.7, min_gain: 0.01 },
+        ] {
+            let cfg = RescalkConfig { rule, seed: u64::MAX, ..Default::default() };
+            let back = rescalk_cfg_from_json(&rescalk_cfg_to_json(&cfg).unwrap()).unwrap();
+            assert_eq!(back.rule, cfg.rule);
+            // u64::MAX survives because seeds cross the wire as strings
+            assert_eq!(back.seed, u64::MAX);
+            assert_eq!(back.k_max, cfg.k_max);
+        }
+    }
+}

@@ -1,7 +1,7 @@
 //! The job engine: the crate's public entry point for running distributed
 //! RESCAL(k) work.
 //!
-//! # Lifecycle: ingest → configure → load → submit → report → export → serve
+//! # Lifecycle: ingest → configure → rendezvous → load → submit → report → export → serve
 //!
 //! Real corpora enter the system through the storage plane
 //! ([`crate::store`]): `drescal ingest` streams a
@@ -9,9 +9,14 @@
 //! tile shards plus a JSON manifest, once, offline. An [`Engine`] is
 //! then constructed **once** from a typed [`EngineConfig`]
 //! (grid size `p`, [`BackendSpec`], trace policy, resident-tile cache
-//! budget). Construction spawns
+//! budget, [`TransportKind`]). Construction spawns
 //! the √p×√p grid of rank threads and builds each rank's compute backend
-//! exactly once (see [`pool`]). Data is then **loaded once**:
+//! exactly once (see [`pool`]) — or, with
+//! [`TransportKind::TcpLeader`], **rendezvouses** with `p − 1` remote
+//! `drescal worker` processes over TCP (see [`cluster`]): the leader
+//! runs rank 0 itself, workers claim ranks 1..p, and the ranks wire up
+//! a framed socket mesh whose collectives are bit-identical to the
+//! in-process transport. Data is then **loaded once**:
 //! [`Engine::load_dataset`] distributes a [`DatasetSpec`] and every rank
 //! caches its resident tile — extracted from leader memory
 //! ([`DatasetSpec::InMemory`]), generated rank-locally from block-keyed
@@ -19,6 +24,10 @@
 //! exists anywhere), or read rank-locally from an ingested corpus's
 //! shards ([`DatasetSpec::File`], where the leader parses only the
 //! manifest and dense tiles memory-map zero-copy at a matching grid).
+//! On a TCP cluster only the *spec* crosses the wire — every worker
+//! materializes its own tiles, so tensor data never transits the
+//! network and a dead worker's replacement can rebuild its rank's tiles
+//! from the shards alone.
 //! The returned [`DatasetHandle`] then feeds any number
 //! of typed jobs with **zero per-job data movement**:
 //!
@@ -70,10 +79,12 @@
 //! assert!(fine.rel_error <= coarse.rel_error + 1e-4);
 //! ```
 
+pub mod cluster;
 pub mod dataset;
 mod pool;
 pub mod report;
 
+pub use cluster::ClusterConfig;
 pub use dataset::{DatasetHandle, DatasetInfo, DatasetRef, DatasetSpec};
 pub use report::{Report, SimReport, SimRow};
 
@@ -95,6 +106,21 @@ use crate::{bail, comm::Trace};
 
 use dataset::DatasetEntry;
 
+/// Which transport the engine's rank collectives run over.
+#[derive(Clone, Debug, Default)]
+pub enum TransportKind {
+    /// One OS thread per rank inside this process — the default, and
+    /// the reference behavior every other transport must match
+    /// bit-identically.
+    #[default]
+    InProcess,
+    /// This process leads a multi-process TCP cluster: it executes rank
+    /// 0 itself and coordinates `p − 1` `drescal worker` processes
+    /// (control plane, mesh rendezvous, crash recovery — see
+    /// [`cluster`]).
+    TcpLeader(ClusterConfig),
+}
+
 /// Engine-level configuration, fixed for the engine's lifetime.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -113,6 +139,9 @@ pub struct EngineConfig {
     /// `EngineStats::{tile_builds, tile_evictions}`). CLI:
     /// `--cache-bytes`.
     pub dataset_cache_bytes: usize,
+    /// Execution transport: in-process rank threads (default) or a
+    /// leader-coordinated TCP cluster of worker processes.
+    pub transport: TransportKind,
 }
 
 impl Default for EngineConfig {
@@ -122,6 +151,7 @@ impl Default for EngineConfig {
             backend: BackendSpec::Native,
             trace: false,
             dataset_cache_bytes: 0,
+            transport: TransportKind::InProcess,
         }
     }
 }
@@ -145,6 +175,12 @@ impl EngineConfig {
     /// Set the resident-tile memory budget (0 = unbounded).
     pub fn with_dataset_cache_bytes(mut self, bytes: usize) -> Self {
         self.dataset_cache_bytes = bytes;
+        self
+    }
+
+    /// Select the execution transport (default: in-process threads).
+    pub fn with_transport(mut self, transport: TransportKind) -> Self {
+        self.transport = transport;
         self
     }
 
@@ -237,11 +273,62 @@ pub struct EngineStats {
 /// never evicted.
 const INLINE_RESIDENT_MAX: usize = 4;
 
+/// The engine's execution substrate: an in-process thread pool (the
+/// default) or a TCP cluster of worker processes led by this one. Both
+/// expose one primitive — run a job on every rank, gather replies in
+/// rank order — so the engine's job logic is transport-blind.
+enum PoolImpl {
+    Local(pool::RankPool),
+    Cluster(cluster::ClusterPool),
+}
+
+impl PoolImpl {
+    fn p(&self) -> usize {
+        match self {
+            PoolImpl::Local(p) => p.p(),
+            PoolImpl::Cluster(c) => c.p(),
+        }
+    }
+
+    fn backend_builds(&self) -> usize {
+        match self {
+            PoolImpl::Local(p) => p.backend_builds(),
+            PoolImpl::Cluster(c) => c.backend_builds(),
+        }
+    }
+
+    fn tile_builds(&self) -> usize {
+        match self {
+            PoolImpl::Local(p) => p.tile_builds(),
+            PoolImpl::Cluster(c) => c.tile_builds(),
+        }
+    }
+
+    /// Transport name stamped into reports: `"in_process"` or `"tcp"`.
+    fn backend_name(&self) -> &'static str {
+        match self {
+            PoolImpl::Local(_) => "in_process",
+            PoolImpl::Cluster(_) => "tcp",
+        }
+    }
+
+    /// Run one job on every rank and gather the replies in rank order.
+    fn exchange(&mut self, job: &pool::RankJob) -> Result<Vec<pool::RankOut>> {
+        match self {
+            PoolImpl::Local(p) => {
+                p.broadcast(job)?;
+                p.collect()
+            }
+            PoolImpl::Cluster(c) => c.exchange(job),
+        }
+    }
+}
+
 /// A persistent distributed-execution engine over a fixed rank pool.
 pub struct Engine {
     cfg: EngineConfig,
     grid: Grid,
-    pool: pool::RankPool,
+    pool: PoolImpl,
     /// Registered datasets by id; entries keep their spec alive so the
     /// `Arc`-identity inline cache can never alias a freed allocation.
     datasets: HashMap<u64, DatasetEntry>,
@@ -267,7 +354,25 @@ impl Engine {
     /// or an unconstructible backend.
     pub fn new(cfg: EngineConfig) -> Result<Engine> {
         cfg.validate()?;
-        let pool = pool::RankPool::spawn(cfg.p, &cfg.backend, cfg.trace)?;
+        let pool = match &cfg.transport {
+            TransportKind::InProcess => {
+                PoolImpl::Local(pool::RankPool::spawn(cfg.p, &cfg.backend, cfg.trace)?)
+            }
+            TransportKind::TcpLeader(cluster_cfg) => {
+                if !matches!(cfg.backend, BackendSpec::Native) {
+                    bail!(
+                        "TCP cluster mode supports only the native backend — each \
+                         worker process builds its own"
+                    );
+                }
+                PoolImpl::Cluster(cluster::ClusterPool::new(
+                    cfg.p,
+                    &cfg.backend,
+                    cfg.trace,
+                    cluster_cfg.clone(),
+                )?)
+            }
+        };
         let grid = Grid::new(cfg.p);
         Ok(Engine {
             grid,
@@ -330,12 +435,11 @@ impl Engine {
     /// partial load is rolled back on every rank before the typed error
     /// is returned, so no rank keeps an orphan tile.
     fn distribute_tiles(&mut self, id: u64, spec: &Arc<DatasetSpec>, n: usize) -> Result<usize> {
-        self.pool.broadcast(&pool::RankJob::LoadDataset {
+        let outs = self.pool.exchange(&pool::RankJob::LoadDataset {
             id,
             spec: Arc::clone(spec),
             n,
         })?;
-        let outs = self.pool.collect()?;
         let mut resident = 0usize;
         let mut failure: Option<String> = None;
         for (rank, out) in outs.into_iter().enumerate() {
@@ -345,13 +449,15 @@ impl Engine {
                     continue;
                 }
                 pool::RankOut::JobError(e) => format!("rank {rank}: {e}"),
+                pool::RankOut::CommError(e) => {
+                    format!("rank {rank}: communication failure: {e}")
+                }
                 _ => format!("rank {rank}: unexpected reply to dataset load"),
             };
             failure.get_or_insert(msg);
         }
         if let Some(msg) = failure {
-            self.pool.broadcast(&pool::RankJob::UnloadDataset { id })?;
-            let _ = self.pool.collect()?;
+            let _ = self.pool.exchange(&pool::RankJob::UnloadDataset { id })?;
             bail!("{msg}");
         }
         Ok(resident)
@@ -389,8 +495,7 @@ impl Engine {
     /// eviction path, vs [`Engine::unload_dataset`] which forgets the
     /// handle entirely. The next job on the handle rebuilds the tiles.
     fn evict_dataset(&mut self, id: u64) -> Result<()> {
-        self.pool.broadcast(&pool::RankJob::UnloadDataset { id })?;
-        let outs = self.pool.collect()?;
+        let outs = self.pool.exchange(&pool::RankJob::UnloadDataset { id })?;
         for (rank, out) in outs.into_iter().enumerate() {
             match out {
                 pool::RankOut::Unloaded => {}
@@ -445,8 +550,7 @@ impl Engine {
         let cache = &self.inline_cache;
         self.inline_lru.retain(|k| cache.contains_key(k));
         self.resident_lru.retain(|&d| d != handle.0);
-        self.pool.broadcast(&pool::RankJob::UnloadDataset { id: handle.0 })?;
-        let outs = self.pool.collect()?;
+        let outs = self.pool.exchange(&pool::RankJob::UnloadDataset { id: handle.0 })?;
         for (rank, out) in outs.into_iter().enumerate() {
             match out {
                 pool::RankOut::Unloaded => {}
@@ -630,8 +734,7 @@ impl Engine {
     /// order). Thread ids are stable across jobs — the pool never
     /// respawns.
     pub fn ping(&mut self) -> Result<Vec<std::thread::ThreadId>> {
-        self.pool.broadcast(&pool::RankJob::Ping)?;
-        let outs = self.pool.collect()?;
+        let outs = self.pool.exchange(&pool::RankJob::Ping)?;
         outs.into_iter()
             .enumerate()
             .map(|(rank, o)| match o {
@@ -665,9 +768,9 @@ impl Engine {
         let n = self.datasets[&handle.0].info.n;
         let k = opts.k;
         let t0 = Instant::now();
-        self.pool
-            .broadcast(&pool::RankJob::Factorize { dataset: handle.0, n, opts, init })?;
-        let outs = self.pool.collect()?;
+        let outs = self
+            .pool
+            .exchange(&pool::RankJob::Factorize { dataset: handle.0, n, opts, init })?;
         let wall_seconds = t0.elapsed().as_secs_f64();
         let mut blocks: Vec<(usize, usize, Mat)> = Vec::with_capacity(outs.len());
         let mut traces: Vec<Trace> = Vec::with_capacity(outs.len());
@@ -687,6 +790,9 @@ impl Engine {
                     }
                 }
                 pool::RankOut::JobError(e) => bail!("rank {rank}: {e}"),
+                pool::RankOut::CommError(e) => {
+                    bail!("rank {rank}: communication failure: {e}")
+                }
                 _ => bail!("rank {rank}: unexpected reply to factorize job"),
             }
         }
@@ -701,6 +807,7 @@ impl Engine {
             traces,
             wall_seconds,
             workspace,
+            transport_backend: self.pool.backend_name().to_string(),
         })
     }
 
@@ -713,9 +820,9 @@ impl Engine {
         self.ensure_resident(handle.0)?;
         let n = self.datasets[&handle.0].info.n;
         let t0 = Instant::now();
-        self.pool
-            .broadcast(&pool::RankJob::ModelSelect { dataset: handle.0, n, cfg })?;
-        let outs = self.pool.collect()?;
+        let outs = self
+            .pool
+            .exchange(&pool::RankJob::ModelSelect { dataset: handle.0, n, cfg })?;
         let wall_seconds = t0.elapsed().as_secs_f64();
         let mut results = Vec::with_capacity(outs.len());
         let mut traces: Vec<Trace> = Vec::with_capacity(outs.len());
@@ -726,6 +833,9 @@ impl Engine {
                     traces.push(trace);
                 }
                 pool::RankOut::JobError(e) => bail!("rank {rank}: {e}"),
+                pool::RankOut::CommError(e) => {
+                    bail!("rank {rank}: communication failure: {e}")
+                }
                 _ => bail!("rank {rank}: unexpected reply to model-select job"),
             }
         }
@@ -755,6 +865,7 @@ impl Engine {
             traces,
             wall_seconds,
             workspace,
+            transport_backend: self.pool.backend_name().to_string(),
         })
     }
 }

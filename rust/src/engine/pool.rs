@@ -63,6 +63,11 @@ pub(crate) enum RankOut {
     /// id that is not resident). Deterministic across ranks, so no rank
     /// enters a collective the others skipped.
     JobError(String),
+    /// A collective failed under this rank (peer death, timeout,
+    /// protocol desync). The worker survives; over TCP the cluster pool
+    /// treats this as a trigger for mesh rebuild + replacement admission
+    /// rather than a deterministic job error.
+    CommError(String),
     Factorize { row: usize, col: usize, result: Box<RankResult>, trace: Trace },
     ModelSelect { row: usize, col: usize, result: Box<RescalkResult>, trace: Trace },
     Ping(ThreadId),
@@ -202,6 +207,123 @@ impl Drop for RankPool {
     }
 }
 
+/// One rank's whole mutable execution state: grid context (communicator
+/// handles), compute backend, resident dataset tiles, and the workspace
+/// arena. [`RankState::step`] executes one [`RankJob`] against it.
+///
+/// Shared by the two places a rank can live: an in-process pool thread
+/// ([`worker_loop`]) and a remote `drescal worker` process
+/// ([`super::cluster`]) — so both execute byte-for-byte the same job
+/// logic, which is what makes TCP runs bit-identical to in-process runs.
+pub(crate) struct RankState {
+    ctx: RankCtx,
+    backend: Box<dyn crate::backend::Backend>,
+    datasets: HashMap<u64, crate::rescal::LocalTile>,
+    /// The workspace arena: iteration temporaries persist across jobs,
+    /// so a warm rank's factorizations allocate nothing.
+    ws: Workspace,
+    trace_enabled: bool,
+}
+
+impl RankState {
+    /// Build the rank's backend (once) and an empty dataset cache.
+    pub fn new(ctx: RankCtx, spec: &BackendSpec, trace_enabled: bool) -> Result<RankState> {
+        let backend = spec.build()?;
+        Ok(RankState {
+            ctx,
+            backend,
+            datasets: HashMap::new(),
+            ws: Workspace::new(),
+            trace_enabled,
+        })
+    }
+
+    /// Replace the grid context. Used after a crash-recovery mesh
+    /// rebuild: the communicators change, the resident tiles and warm
+    /// workspace survive.
+    pub fn set_ctx(&mut self, ctx: RankCtx) {
+        self.ctx = ctx;
+    }
+
+    /// Execute one job. Never panics on job-level failures: dataset
+    /// errors become [`RankOut::JobError`], collective failures (a dead
+    /// TCP peer, a timeout) become [`RankOut::CommError`] — the rank
+    /// survives either and serves the next job.
+    pub fn step(&mut self, job: RankJob) -> RankOut {
+        let mut trace = if self.trace_enabled { Trace::new() } else { Trace::disabled() };
+        match job {
+            RankJob::Ping => RankOut::Ping(std::thread::current().id()),
+            RankJob::LoadDataset { id, spec, n } => {
+                debug_assert_eq!(spec.info().n, n);
+                // a failed build (e.g. a corrupt or truncated shard on
+                // this rank's disk) is a typed job error, not a worker
+                // panic — the pool survives and the engine unloads the
+                // partially loaded dataset from the other ranks
+                match spec.build_tile(&self.ctx.grid, self.ctx.row, self.ctx.col) {
+                    Ok(tile) => {
+                        let bytes = tile.resident_bytes();
+                        self.datasets.insert(id, tile);
+                        RankOut::Loaded { bytes }
+                    }
+                    Err(e) => RankOut::JobError(format!("loading dataset {id}: {e}")),
+                }
+            }
+            RankJob::UnloadDataset { id } => {
+                self.datasets.remove(&id);
+                RankOut::Unloaded
+            }
+            RankJob::Factorize { dataset, n, opts, init } => {
+                match self.datasets.get(&dataset) {
+                    None => RankOut::JobError(format!("dataset {dataset} is not resident")),
+                    Some(tile) => {
+                        let cfg = DistRescalConfig { opts, init, n };
+                        match rescal_rank(
+                            &self.ctx,
+                            tile,
+                            &cfg,
+                            self.backend.as_mut(),
+                            &mut self.ws,
+                            &mut trace,
+                        ) {
+                            Ok(result) => RankOut::Factorize {
+                                row: self.ctx.row,
+                                col: self.ctx.col,
+                                result: Box::new(result),
+                                trace,
+                            },
+                            Err(e) => RankOut::CommError(format!("factorize: {e}")),
+                        }
+                    }
+                }
+            }
+            RankJob::ModelSelect { dataset, n, cfg } => {
+                match self.datasets.get(&dataset) {
+                    None => RankOut::JobError(format!("dataset {dataset} is not resident")),
+                    Some(tile) => {
+                        match rescalk_rank(
+                            &self.ctx,
+                            tile,
+                            n,
+                            &cfg,
+                            self.backend.as_mut(),
+                            &mut self.ws,
+                            &mut trace,
+                        ) {
+                            Ok(result) => RankOut::ModelSelect {
+                                row: self.ctx.row,
+                                col: self.ctx.col,
+                                result: Box::new(result),
+                                trace,
+                            },
+                            Err(e) => RankOut::CommError(format!("model-select: {e}")),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Body of one rank thread: build the backend once, keep the resident
 /// dataset tiles, and serve jobs until the engine closes the channel.
 fn worker_loop(
@@ -212,77 +334,24 @@ fn worker_loop(
     jobs: Receiver<RankJob>,
     out: Sender<RankOut>,
 ) {
-    let mut backend = match spec.build() {
-        Ok(b) => {
+    let mut state = match RankState::new(ctx, &spec, trace_enabled) {
+        Ok(s) => {
             shared.backend_builds.fetch_add(1, Ordering::SeqCst);
             if out.send(RankOut::Ready(std::thread::current().id())).is_err() {
                 return;
             }
-            b
+            s
         }
         Err(e) => {
             let _ = out.send(RankOut::BuildError(e.to_string()));
             return;
         }
     };
-    // this rank's resident tiles, one per registered dataset — built once
-    // at LoadDataset and reused by every subsequent job on the handle
-    let mut datasets: HashMap<u64, crate::rescal::LocalTile> = HashMap::new();
-    // this rank's workspace arena: iteration temporaries persist across
-    // jobs, so a warm rank's factorizations allocate nothing
-    let mut ws = Workspace::new();
     while let Ok(job) = jobs.recv() {
-        let mut trace = if trace_enabled { Trace::new() } else { Trace::disabled() };
-        let reply = match job {
-            RankJob::Ping => RankOut::Ping(std::thread::current().id()),
-            RankJob::LoadDataset { id, spec, n } => {
-                debug_assert_eq!(spec.info().n, n);
-                // a failed build (e.g. a corrupt or truncated shard on
-                // this rank's disk) is a typed job error, not a worker
-                // panic — the pool survives and the engine unloads the
-                // partially loaded dataset from the other ranks
-                match spec.build_tile(&ctx.grid, ctx.row, ctx.col) {
-                    Ok(tile) => {
-                        shared.tile_builds.fetch_add(1, Ordering::SeqCst);
-                        let bytes = tile.resident_bytes();
-                        datasets.insert(id, tile);
-                        RankOut::Loaded { bytes }
-                    }
-                    Err(e) => RankOut::JobError(format!("loading dataset {id}: {e}")),
-                }
-            }
-            RankJob::UnloadDataset { id } => {
-                datasets.remove(&id);
-                RankOut::Unloaded
-            }
-            RankJob::Factorize { dataset, n, opts, init } => match datasets.get(&dataset) {
-                None => RankOut::JobError(format!("dataset {dataset} is not resident")),
-                Some(tile) => {
-                    let cfg = DistRescalConfig { opts, init, n };
-                    let result =
-                        rescal_rank(&ctx, tile, &cfg, backend.as_mut(), &mut ws, &mut trace);
-                    RankOut::Factorize {
-                        row: ctx.row,
-                        col: ctx.col,
-                        result: Box::new(result),
-                        trace,
-                    }
-                }
-            },
-            RankJob::ModelSelect { dataset, n, cfg } => match datasets.get(&dataset) {
-                None => RankOut::JobError(format!("dataset {dataset} is not resident")),
-                Some(tile) => {
-                    let result =
-                        rescalk_rank(&ctx, tile, n, &cfg, backend.as_mut(), &mut ws, &mut trace);
-                    RankOut::ModelSelect {
-                        row: ctx.row,
-                        col: ctx.col,
-                        result: Box::new(result),
-                        trace,
-                    }
-                }
-            },
-        };
+        let reply = state.step(job);
+        if let RankOut::Loaded { .. } = reply {
+            shared.tile_builds.fetch_add(1, Ordering::SeqCst);
+        }
         if out.send(reply).is_err() {
             return;
         }

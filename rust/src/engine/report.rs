@@ -103,6 +103,10 @@ impl Report {
                 obj.insert("r".to_string(), tensor_to_json(&r.r));
                 obj.insert("traces".to_string(), traces_to_json(&r.traces));
                 obj.insert("workspace".to_string(), workspace_to_json(r.workspace));
+                obj.insert(
+                    "transport".to_string(),
+                    transport_to_json(&r.transport_backend, &r.traces),
+                );
             }
             Report::ModelSelect(r) => {
                 obj.insert("k_opt".to_string(), Json::Num(r.k_opt as f64));
@@ -115,6 +119,10 @@ impl Report {
                 obj.insert("r".to_string(), tensor_to_json(&r.r));
                 obj.insert("traces".to_string(), traces_to_json(&r.traces));
                 obj.insert("workspace".to_string(), workspace_to_json(r.workspace));
+                obj.insert(
+                    "transport".to_string(),
+                    transport_to_json(&r.transport_backend, &r.traces),
+                );
             }
             Report::Simulate(r) => {
                 obj.insert("scenario".to_string(), Json::Str(r.scenario.clone()));
@@ -146,6 +154,7 @@ impl Report {
                 )?,
                 wall_seconds: get_f64(v, "wall_seconds")?,
                 workspace: workspace_from_json(v.get("workspace")),
+                transport_backend: transport_backend_from_json(v),
             })),
             "model_select" => {
                 let scores = v
@@ -165,6 +174,7 @@ impl Report {
                     )?,
                     wall_seconds: get_f64(v, "wall_seconds")?,
                     workspace: workspace_from_json(v.get("workspace")),
+                    transport_backend: transport_backend_from_json(v),
                 }))
             }
             "simulate" => {
@@ -262,16 +272,52 @@ pub(crate) fn tensor_from_json(v: &Json) -> Result<Tensor3> {
     Ok(Tensor3::from_slices(slices))
 }
 
+/// The report's `transport` section: which backend the collectives ran
+/// over, plus the per-rank compute/comm split with real wire traffic.
+fn transport_to_json(backend: &str, traces: &[Trace]) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("backend".to_string(), Json::Str(backend.to_string()));
+    obj.insert(
+        "ranks".to_string(),
+        Json::Arr(
+            traces
+                .iter()
+                .map(|t| {
+                    let (comp, comm) = t.compute_comm_split();
+                    let (bytes, ops) = t.comm_totals();
+                    let mut r = BTreeMap::new();
+                    r.insert("compute_seconds".to_string(), Json::Num(comp));
+                    r.insert("comm_seconds".to_string(), Json::Num(comm));
+                    r.insert("comm_bytes".to_string(), Json::Num(bytes as f64));
+                    r.insert("comm_ops".to_string(), Json::Num(ops as f64));
+                    Json::Obj(r)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(obj)
+}
+
+/// Archived pre-transport-plane reports have no `transport` section;
+/// those jobs all ran in-process.
+fn transport_backend_from_json(v: &Json) -> String {
+    v.get("transport")
+        .and_then(|t| t.get("backend"))
+        .and_then(|b| b.as_str())
+        .unwrap_or("in_process")
+        .to_string()
+}
+
 /// Workspace counters serialize as a small object; absent in archived
 /// pre-kernel-plane reports, so parsing treats a missing field as zeros.
-fn workspace_to_json(w: crate::backend::WorkspaceStats) -> Json {
+pub(crate) fn workspace_to_json(w: crate::backend::WorkspaceStats) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("mat_allocs".to_string(), Json::Num(w.mat_allocs as f64));
     obj.insert("mat_reuses".to_string(), Json::Num(w.mat_reuses as f64));
     Json::Obj(obj)
 }
 
-fn workspace_from_json(v: Option<&Json>) -> crate::backend::WorkspaceStats {
+pub(crate) fn workspace_from_json(v: Option<&Json>) -> crate::backend::WorkspaceStats {
     let mut w = crate::backend::WorkspaceStats::default();
     if let Some(v) = v {
         if let Some(x) = v.get("mat_allocs").and_then(|x| x.as_f64()) {
@@ -284,7 +330,7 @@ fn workspace_from_json(v: Option<&Json>) -> crate::backend::WorkspaceStats {
     w
 }
 
-fn score_to_json(s: &KScore) -> Json {
+pub(crate) fn score_to_json(s: &KScore) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("k".to_string(), Json::Num(s.k as f64));
     obj.insert("sil_min".to_string(), Json::Num(s.sil_min as f64));
@@ -293,7 +339,7 @@ fn score_to_json(s: &KScore) -> Json {
     Json::Obj(obj)
 }
 
-fn score_from_json(v: &Json) -> Result<KScore> {
+pub(crate) fn score_from_json(v: &Json) -> Result<KScore> {
     Ok(KScore {
         k: get_f64(v, "k")? as usize,
         sil_min: get_f64(v, "sil_min")? as f32,
@@ -304,7 +350,7 @@ fn score_from_json(v: &Json) -> Result<KScore> {
 
 /// Per-rank traces serialize as the per-op aggregate (seconds + bytes),
 /// which is what the scaling figures consume.
-fn traces_to_json(traces: &[Trace]) -> Json {
+pub(crate) fn traces_to_json(traces: &[Trace]) -> Json {
     Json::Arr(
         traces
             .iter()
@@ -330,7 +376,7 @@ fn op_from_name(name: &str) -> Option<CommOp> {
     CommOp::all().iter().copied().find(|op| op.name() == name)
 }
 
-fn traces_from_json(v: &Json) -> Result<Vec<Trace>> {
+pub(crate) fn traces_from_json(v: &Json) -> Result<Vec<Trace>> {
     v.as_arr()
         .ok_or_else(|| err!("'traces' must be an array"))?
         .iter()

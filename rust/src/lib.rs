@@ -16,9 +16,13 @@
 //!   ([`store`]): `drescal ingest` streams a triple list into
 //!   checksummed binary tile shards plus a manifest, with entity and
 //!   relation names interned to deterministic ids;
-//! * **configure** — [`engine::Engine::new`] validates the config, spawns
-//!   the √p×√p rank threads, and builds each rank's compute backend
-//!   exactly once;
+//! * **configure / rendezvous** — [`engine::Engine::new`] validates the
+//!   config and builds the rank pool for the configured
+//!   [`engine::TransportKind`]: in-process √p×√p rank threads (the
+//!   default), or a TCP cluster where construction blocks until the
+//!   remote `drescal worker` processes have joined (see
+//!   [`engine::cluster`] and [`comm::transport`]); either way each
+//!   rank's compute backend is built exactly once;
 //! * **load** — [`engine::Engine::load_dataset`] distributes a
 //!   [`engine::DatasetSpec`] once; every rank caches its resident tile
 //!   (synthetic data is generated rank-locally, and ingested corpora are

@@ -7,6 +7,9 @@
 //!
 //! Subcommands:
 //! * `run`          — one distributed factorization on synthetic/real data
+//! * `train`        — the same factorization led over a TCP cluster of
+//!   `worker` processes (bit-identical factors to `run`)
+//! * `worker`       — join a `train` leader and serve rank jobs
 //! * `model-select` — full RESCALk sweep with automatic k determination
 //! * `export`       — train and persist a servable factor-model artifact
 //! * `query`        — answer link-prediction queries from a saved model
@@ -32,7 +35,7 @@ use std::collections::BTreeMap;
 use drescal::bench_util;
 use drescal::config::{
     ArtifactsCmd, BenchCmd, Command, ExascaleCmd, ExportCmd, FactorizeCmd, IngestCmd,
-    MachineSpec, ModelSelectCmd, QueryCmd, RunConfig, ServeBenchCmd,
+    MachineSpec, ModelSelectCmd, QueryCmd, RunConfig, ServeBenchCmd, TrainCmd,
 };
 use drescal::coordinator::metrics::RunMetrics;
 use drescal::data::synthetic::SyntheticSpec;
@@ -59,6 +62,8 @@ fn main() {
 fn dispatch(argv: Vec<String>) -> Result<()> {
     match RunConfig::from_args(argv)?.command {
         Command::Run(cmd) => cmd_run(cmd),
+        Command::Train(cmd) => cmd_train(cmd),
+        Command::Worker(cmd) => drescal::engine::cluster::run_worker(&cmd.connect),
         Command::ModelSelect(cmd) => cmd_model_select(cmd),
         Command::Exascale(cmd) => cmd_exascale(cmd),
         Command::Artifacts(cmd) => cmd_artifacts(cmd),
@@ -91,6 +96,15 @@ SUBCOMMANDS
                   --backend native|xla  [--artifacts DIR]
                   --cache-bytes B    resident-tile budget, LRU-evicted (0 = off)
                   --seed S  --trace  --json
+  train         lead a multi-process TCP cluster factorization: this
+                process runs rank 0 and waits for --workers processes
+                  --workers W (3; W+1 must be a perfect square)
+                  --listen ADDR (127.0.0.1:0)  --port-file FILE
+                  --comm-timeout-ms MS (10000)  --max-replacements K (1)
+                  --data synthetic|blocks|nations|trade|file:<manifest>
+                  --n --m --k-true --density --k --iters --seed --trace --json
+  worker        join a train leader and serve rank jobs until shutdown
+                  --connect ADDR
   model-select  RESCALk sweep with automatic k determination
                   (run flags plus) --k-min --k-max --perturbations --delta
                   --tol --err-every --regress-iters
@@ -152,6 +166,64 @@ fn cmd_run(cmd: FactorizeCmd) -> Result<()> {
     if let Some(kt) = cmd.data.k_true() {
         println!("(ground-truth latent dimension of this dataset: {kt})");
     }
+    println!("factor digest: {:016x}", factor_digest(&report.a, &report.r));
+    if engine.config().trace {
+        let metrics = RunMetrics::from_traces(&report.traces);
+        print!("{}", metrics.format_breakdown());
+    }
+    if cmd.json {
+        println!("{}", Report::Factorize(report).to_json());
+    }
+    Ok(())
+}
+
+/// FNV-1a over the factors' exact f32 bit patterns: two runs print the
+/// same digest iff their gathered factors are bit-identical. The CI
+/// multi-process smoke compares this line between `run` (in-process)
+/// and `train` (TCP cluster).
+fn factor_digest(a: &drescal::tensor::Mat, r: &drescal::tensor::Tensor3) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |h: &mut u64, bits: u32| {
+        for b in bits.to_le_bytes() {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for v in a.as_slice() {
+        eat(&mut h, v.to_bits());
+    }
+    for s in r.slices() {
+        for v in s.as_slice() {
+            eat(&mut h, v.to_bits());
+        }
+    }
+    h
+}
+
+/// Lead a TCP cluster factorization: construction rendezvouses with the
+/// workers, then the job runs exactly like `run` — same collectives,
+/// same deterministic factors, different transport.
+fn cmd_train(cmd: TrainCmd) -> Result<()> {
+    let mut engine = Engine::new(cmd.engine)?;
+    let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.seed)?)?;
+    let info = engine.dataset_info(data).expect("dataset just registered");
+    println!(
+        "cluster RESCAL: n={} m={} k={} p={} transport=tcp{}",
+        info.n,
+        info.m,
+        cmd.opts.k,
+        engine.config().p,
+        if info.sparse { " (sparse tiles)" } else { "" }
+    );
+    let report = engine.factorize(data, &cmd.opts, cmd.seed)?;
+    println!(
+        "done in {}: rel_error={:.4} ({} iterations, transport {})",
+        bench_util::fmt_secs(report.wall_seconds),
+        report.rel_error,
+        report.iters_run,
+        report.transport_backend
+    );
+    println!("factor digest: {:016x}", factor_digest(&report.a, &report.r));
     if engine.config().trace {
         let metrics = RunMetrics::from_traces(&report.traces);
         print!("{}", metrics.format_breakdown());
@@ -351,6 +423,43 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
             drescal::tensor::kernel::gemm_nt_into(&q, &entities, &mut scores)
         });
         record("kernel_packed_serve_b64_n8192", st.median);
+    }
+
+    // transport plane: ring all-reduce throughput over 4 ranks, 1 MiB of
+    // f32 payload per rank per round, in-process vs TCP loopback — both
+    // rows ride the --max-regression gate so a collective regression
+    // (extra copies, lost batching, frame bloat) fails CI
+    {
+        use drescal::comm::transport::tcp::{loopback_meshes, TcpConfig, TcpGroup};
+        use drescal::comm::Group;
+        use std::sync::{Arc, Mutex};
+        const FLOATS: usize = 262_144; // 1 MiB of f32 per rank
+        const ROUNDS: usize = 8;
+        let time_allreduce = |groups: Vec<Group>| {
+            let t0 = std::time::Instant::now();
+            std::thread::scope(|s| {
+                for g in groups {
+                    s.spawn(move || {
+                        let mut v = vec![1.0f32; FLOATS];
+                        for _ in 0..ROUNDS {
+                            g.all_reduce_sum(&mut v).expect("bench all_reduce");
+                            v.iter_mut().for_each(|x| *x = 1.0);
+                        }
+                    });
+                }
+            });
+            t0.elapsed().as_secs_f64()
+        };
+        record("transport_allreduce_inprocess_4x1mb", time_allreduce(Group::create(4)));
+        let meshes = loopback_meshes(4, TcpConfig::default())?;
+        let tcp_groups = meshes
+            .into_iter()
+            .map(|m| {
+                TcpGroup::new(Arc::new(Mutex::new(m)), (0..4).collect(), 0)
+                    .map(Group::from_transport)
+            })
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        record("transport_allreduce_tcp_4x1mb", time_allreduce(tcp_groups));
     }
 
     // storage plane: synthesize a triple corpus, ingest it to binary

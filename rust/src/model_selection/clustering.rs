@@ -8,7 +8,7 @@
 //! permutation, permutes, and refreshes the medoid with the elementwise
 //! median. Converges when every assignment is the identity.
 
-use crate::comm::{CommOp, Group, Trace};
+use crate::comm::{CommOp, CommResult, Group, Trace};
 use crate::linalg::lsa::lsa_max;
 use crate::linalg::median::matrix_median;
 use crate::tensor::Mat;
@@ -35,7 +35,7 @@ pub fn custom_cluster_rank(
     stack: &[Mat],
     max_iters: usize,
     trace: &mut Trace,
-) -> ClusterOutput {
+) -> CommResult<ClusterOutput> {
     let r = stack.len();
     assert!(r >= 1, "need at least one perturbation");
     let (n_local, k) = stack[0].shape();
@@ -57,9 +57,7 @@ pub fn custom_cluster_rank(
             g_buf[q * k * k..(q + 1) * k * k].copy_from_slice(d.as_slice());
         }
         // line 6: total similarity G via all_reduce
-        trace.record(CommOp::ColumnReduce, g_buf.len() * 4, || {
-            comm.all_reduce_sum(&mut g_buf)
-        });
+        trace.record_comm(CommOp::ColumnReduce, comm, || comm.all_reduce_sum(&mut g_buf))?;
         // lines 7-10: LSA per perturbation, permute columns
         let mut all_identity = true;
         for q in 0..r {
@@ -85,7 +83,7 @@ pub fn custom_cluster_rank(
             break;
         }
     }
-    ClusterOutput { aligned, median: medoid, perms, iters }
+    Ok(ClusterOutput { aligned, median: medoid, perms, iters })
 }
 
 #[cfg(test)]
@@ -128,7 +126,7 @@ mod tests {
                 .map(|m| Mat::from_fn(e - s, k, |i, j| m[(s + i, j)]))
                 .collect();
             let mut trace = Trace::new();
-            let out = custom_cluster_rank(&ctx.col_comm, &stack, 50, &mut trace);
+            let out = custom_cluster_rank(&ctx.col_comm, &stack, 50, &mut trace).unwrap();
             (ctx.row, ctx.col, out)
         });
         // after alignment all perturbations should agree elementwise
@@ -165,7 +163,7 @@ mod tests {
         let stack = vec![a.clone(), a.clone(), a.clone()];
         let groups = Group::create(1);
         let mut trace = Trace::new();
-        let out = custom_cluster_rank(&groups[0], &stack, 20, &mut trace);
+        let out = custom_cluster_rank(&groups[0], &stack, 20, &mut trace).unwrap();
         assert_eq!(out.iters, 1); // converges immediately
         for p in &out.perms {
             assert_eq!(*p, vec![0, 1, 2]);
@@ -179,7 +177,7 @@ mod tests {
         let a = Mat::random_uniform(8, 2, 0.1, 1.0, &mut rng);
         let groups = Group::create(1);
         let mut trace = Trace::new();
-        let out = custom_cluster_rank(&groups[0], &[a.clone()], 20, &mut trace);
+        let out = custom_cluster_rank(&groups[0], &[a.clone()], 20, &mut trace).unwrap();
         assert_close(out.median.as_slice(), a.as_slice(), 1e-6);
     }
 }

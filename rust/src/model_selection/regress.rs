@@ -8,7 +8,7 @@
 
 use crate::backend::Backend;
 use crate::comm::grid::RankCtx;
-use crate::comm::{CommOp, Trace};
+use crate::comm::{CommOp, CommResult, Trace};
 use crate::rescal::distmm::{broadcast_mat, dist_mm};
 use crate::rescal::LocalTile;
 use crate::tensor::ops::{mu_update, MU_EPS};
@@ -24,7 +24,7 @@ pub fn regress_r_rank(
     iters: usize,
     backend: &mut dyn Backend,
     trace: &mut Trace,
-) -> (Tensor3, Mat) {
+) -> CommResult<(Tensor3, Mat)> {
     let k = a_row.cols();
     let m = tile.m();
     // a_col from the diagonal of this rank's grid column (its width is the
@@ -34,25 +34,25 @@ pub fn regress_r_rank(
     } else {
         Mat::zeros(tile.cols(), k)
     };
-    broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col, CommOp::ColumnBroadcast, trace);
+    broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col, CommOp::ColumnBroadcast, trace)?;
 
     // replicated AᵀA
     let ata_partial = trace.record(CommOp::GramMul, 0, || backend.gram(&a_col));
-    let ata = dist_mm(&ctx.row_comm, ata_partial, CommOp::RowReduce, trace);
+    let ata = dist_mm(&ctx.row_comm, ata_partial, CommOp::RowReduce, trace)?;
 
     let mut r = Tensor3::from_slices((0..m).map(|_| Mat::full(k, k, 0.5)).collect());
     for t in 0..m {
         let xa_partial = tile.xa(t, &a_col, backend, trace);
-        let xa = dist_mm(&ctx.row_comm, xa_partial, CommOp::RowReduce, trace);
+        let xa = dist_mm(&ctx.row_comm, xa_partial, CommOp::RowReduce, trace)?;
         let atxa_partial = trace.record(CommOp::MatrixMul, 0, || backend.t_matmul(a_row, &xa));
-        let atxa = dist_mm(&ctx.col_comm, atxa_partial, CommOp::ColumnReduce, trace);
+        let atxa = dist_mm(&ctx.col_comm, atxa_partial, CommOp::ColumnReduce, trace)?;
         for _ in 0..iters {
             let rata = trace.record(CommOp::MatrixMul, 0, || backend.matmul(r.slice(t), &ata));
             let deno = trace.record(CommOp::MatrixMul, 0, || backend.matmul(&ata, &rata));
             mu_update(r.slice_mut(t), &atxa, &deno, MU_EPS);
         }
     }
-    (r, a_col)
+    Ok((r, a_col))
 }
 
 #[cfg(test)]
@@ -76,7 +76,8 @@ mod tests {
             let a_row = Mat::from_fn(r1 - r0, 2, |i, j| a_true[(r0 + i, j)]);
             let mut backend = NativeBackend::new();
             let mut trace = Trace::new();
-            let (r, _a_col) = regress_r_rank(&ctx, &tile, &a_row, 60, &mut backend, &mut trace);
+            let (r, _a_col) =
+                regress_r_rank(&ctx, &tile, &a_row, 60, &mut backend, &mut trace).unwrap();
             r
         });
         // all ranks agree on the replicated R

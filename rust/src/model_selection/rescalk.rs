@@ -9,7 +9,7 @@
 
 use crate::backend::{Backend, Workspace, WorkspaceStats};
 use crate::comm::grid::RankCtx;
-use crate::comm::Trace;
+use crate::comm::{CommResult, Trace};
 use crate::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
 use crate::rescal::{LocalTile, RescalOptions};
 use crate::tensor::{Mat, Tensor3};
@@ -130,7 +130,7 @@ pub fn rescalk_rank(
     backend: &mut dyn Backend,
     ws: &mut Workspace,
     trace: &mut Trace,
-) -> RescalkResult {
+) -> CommResult<RescalkResult> {
     assert!(cfg.k_min >= 1 && cfg.k_min <= cfg.k_max);
     assert!(cfg.perturbations >= 1);
     let ws_before = ws.stats();
@@ -175,24 +175,25 @@ pub fn rescalk_rank(
                 init,
                 n,
             };
-            let out = rescal_rank(ctx, &perturbed, &dist_cfg, backend, ws, trace);
+            let out = rescal_rank(ctx, &perturbed, &dist_cfg, backend, ws, trace)?;
             stack.push(out.a_row);
         }
         // ---- align solutions (Alg 1 line 6, Alg 5) ----
-        let clustered = custom_cluster_rank(&ctx.col_comm, &stack, 100, trace);
+        let clustered = custom_cluster_rank(&ctx.col_comm, &stack, 100, trace)?;
         // ---- cluster stability (line 8, Alg 6) ----
-        let sil = silhouette_rank(&ctx.col_comm, &clustered.aligned, trace);
+        let sil = silhouette_rank(&ctx.col_comm, &clustered.aligned, trace)?;
         // ---- robust core + reconstruction error (lines 7, 9, 10) ----
         let (r_reg, a_col) =
-            regress_r_rank(ctx, tile, &clustered.median, cfg.regress_iters, backend, trace);
-        let rel_error = rel_error_rank(ctx, tile, &clustered.median, &a_col, &r_reg, backend, trace);
+            regress_r_rank(ctx, tile, &clustered.median, cfg.regress_iters, backend, trace)?;
+        let rel_error =
+            rel_error_rank(ctx, tile, &clustered.median, &a_col, &r_reg, backend, trace)?;
         scores.push(KScore { k, sil_min: sil.min, sil_avg: sil.avg, rel_error });
         per_k.push((clustered.median, r_reg));
     }
     let k_opt = select_k(&scores, cfg.rule).expect("non-empty sweep");
     let idx = k_opt - cfg.k_min;
     let (a_opt_row, r_opt) = per_k.swap_remove(idx);
-    RescalkResult { scores, k_opt, a_opt_row, r_opt, workspace: ws.stats().since(ws_before) }
+    Ok(RescalkResult { scores, k_opt, a_opt_row, r_opt, workspace: ws.stats().since(ws_before) })
 }
 
 /// Distributed relative reconstruction error for explicit factors.
@@ -204,7 +205,7 @@ fn rel_error_rank(
     r: &Tensor3,
     backend: &mut dyn Backend,
     trace: &mut Trace,
-) -> f32 {
+) -> CommResult<f32> {
     use crate::comm::CommOp;
     let mut local = 0.0f64;
     for t in 0..tile.m() {
@@ -212,8 +213,8 @@ fn rel_error_rank(
         local += tile.residual_sq(t, &ar, a_col);
     }
     let mut buf = vec![local as f32, tile.norm_sq() as f32];
-    ctx.world.all_reduce_sum(&mut buf);
-    ((buf[0] as f64).max(0.0).sqrt() / (buf[1] as f64).max(1e-300).sqrt()) as f32
+    ctx.world.all_reduce_sum(&mut buf)?;
+    Ok(((buf[0] as f64).max(0.0).sqrt() / (buf[1] as f64).max(1e-300).sqrt()) as f32)
 }
 
 #[cfg(test)]
@@ -250,6 +251,7 @@ mod tests {
             let mut ws = Workspace::new();
             let mut trace = Trace::disabled();
             rescalk_rank(&ctx, &tile, 24, &cfg, &mut backend, &mut ws, &mut trace)
+                .expect("in-process rescalk_rank")
         });
         for res in &results {
             assert_eq!(res.k_opt, 3, "scores: {:?}", res.scores);
@@ -285,6 +287,7 @@ mod tests {
             let mut ws = Workspace::new();
             let mut trace = Trace::disabled();
             rescalk_rank(&ctx, &tile, 20, &cfg, &mut backend, &mut ws, &mut trace)
+                .expect("in-process rescalk_rank")
         });
         let scores = &results[0].scores;
         // error at k>=2 well below error at k=1

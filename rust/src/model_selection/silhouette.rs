@@ -11,7 +11,7 @@
 //! sub-communicator — the same one-collective-per-similarity-tensor
 //! structure as Algorithm 6 (lines 5 and 15).
 
-use crate::comm::{CommOp, Group, Trace};
+use crate::comm::{CommOp, CommResult, Group, Trace};
 use crate::tensor::Mat;
 
 /// Silhouette summary for one k.
@@ -28,7 +28,11 @@ pub struct Silhouettes {
 /// Compute distributed silhouettes for this rank's aligned row-block stack
 /// (`aligned[q]` is the `n_local × k` block of perturbation q). `comm`
 /// must contain exactly one rank per row block.
-pub fn silhouette_rank(comm: &Group, aligned: &[Mat], trace: &mut Trace) -> Silhouettes {
+pub fn silhouette_rank(
+    comm: &Group,
+    aligned: &[Mat],
+    trace: &mut Trace,
+) -> CommResult<Silhouettes> {
     let r = aligned.len();
     assert!(r >= 1);
     let (_n_local, k) = aligned[0].shape();
@@ -36,7 +40,7 @@ pub fn silhouette_rank(comm: &Group, aligned: &[Mat], trace: &mut Trace) -> Silh
         // a single cluster has no "other" cluster: define s = 1 (perfectly
         // separated by convention), matching the stability curve starting
         // high at k=1
-        return Silhouettes { per_cluster: vec![1.0], min: 1.0, avg: 1.0 };
+        return Ok(Silhouettes { per_cluster: vec![1.0], min: 1.0, avg: 1.0 });
     }
 
     // ---- global column norms (needed to turn inner products into cosines)
@@ -50,9 +54,7 @@ pub fn silhouette_rank(comm: &Group, aligned: &[Mat], trace: &mut Trace) -> Silh
             }
         }
     }
-    trace.record(CommOp::ColumnReduce, norm_buf.len() * 4, || {
-        comm.all_reduce_sum(&mut norm_buf)
-    });
+    trace.record_comm(CommOp::ColumnReduce, comm, || comm.all_reduce_sum(&mut norm_buf))?;
     let norm = |q: usize, c: usize| norm_buf[q * k + c].max(1e-30).sqrt();
 
     // ---- inner products between all (q, c) pairs, one all_reduce:
@@ -77,7 +79,7 @@ pub fn silhouette_rank(comm: &Group, aligned: &[Mat], trace: &mut Trace) -> Silh
             }
         }
     });
-    trace.record(CommOp::ColumnReduce, sim.len() * 4, || comm.all_reduce_sum(&mut sim));
+    trace.record_comm(CommOp::ColumnReduce, comm, || comm.all_reduce_sum(&mut sim))?;
 
     // cosine distance between member (q1 of cluster c1) and (q2 of c2)
     let dist = |c1: usize, q1: usize, c2: usize, q2: usize| -> f32 {
@@ -114,7 +116,7 @@ pub fn silhouette_rank(comm: &Group, aligned: &[Mat], trace: &mut Trace) -> Silh
         total += cluster_sum;
         min_cluster = min_cluster.min(mean_c);
     }
-    Silhouettes { per_cluster, min: min_cluster, avg: total / (k * r) as f32 }
+    Ok(Silhouettes { per_cluster, min: min_cluster, avg: total / (k * r) as f32 })
 }
 
 #[cfg(test)]
@@ -146,7 +148,7 @@ mod tests {
             })
             .collect();
         let mut trace = Trace::new();
-        let s = silhouette_rank(&group1(), &stack, &mut trace);
+        let s = silhouette_rank(&group1(), &stack, &mut trace).unwrap();
         assert!(s.min > 0.9, "min={}", s.min);
         assert!(s.avg > 0.9);
         assert_eq!(s.per_cluster.len(), 3);
@@ -158,7 +160,7 @@ mod tests {
         let stack: Vec<Mat> =
             (0..5).map(|_| Mat::random_uniform(30, 4, 0.0, 1.0, &mut rng)).collect();
         let mut trace = Trace::new();
-        let s = silhouette_rank(&group1(), &stack, &mut trace);
+        let s = silhouette_rank(&group1(), &stack, &mut trace).unwrap();
         assert!(s.min < 0.5, "min={}", s.min);
     }
 
@@ -168,7 +170,7 @@ mod tests {
         let stack: Vec<Mat> =
             (0..3).map(|_| Mat::random_uniform(10, 1, 0.0, 1.0, &mut rng)).collect();
         let mut trace = Trace::new();
-        let s = silhouette_rank(&group1(), &stack, &mut trace);
+        let s = silhouette_rank(&group1(), &stack, &mut trace).unwrap();
         assert_eq!(s.min, 1.0);
     }
 
@@ -181,7 +183,7 @@ mod tests {
         let full: Vec<Mat> =
             (0..r).map(|_| Mat::random_uniform(n, k, 0.0, 1.0, &mut rng)).collect();
         let mut trace = Trace::new();
-        let want = silhouette_rank(&group1(), &full, &mut trace);
+        let want = silhouette_rank(&group1(), &full, &mut trace).unwrap();
         let results = run_on_grid(4, |ctx| {
             let (s, e) = ctx.grid.chunk(n, ctx.row);
             let stack: Vec<Mat> = full
@@ -189,7 +191,7 @@ mod tests {
                 .map(|m| Mat::from_fn(e - s, k, |i, j| m[(s + i, j)]))
                 .collect();
             let mut trace = Trace::new();
-            silhouette_rank(&ctx.col_comm, &stack, &mut trace)
+            silhouette_rank(&ctx.col_comm, &stack, &mut trace).unwrap()
         });
         for got in results {
             assert!((got.min - want.min).abs() < 1e-4, "{} vs {}", got.min, want.min);
@@ -204,7 +206,7 @@ mod tests {
             let stack: Vec<Mat> =
                 (0..4).map(|_| Mat::random_uniform(12, 3, 0.0, 1.0, &mut rng)).collect();
             let mut trace = Trace::new();
-            let s = silhouette_rank(&group1(), &stack, &mut trace);
+            let s = silhouette_rank(&group1(), &stack, &mut trace).unwrap();
             assert!(s.min >= -1.0 - 1e-5 && s.min <= 1.0 + 1e-5);
             assert!(s.avg >= -1.0 - 1e-5 && s.avg <= 1.0 + 1e-5);
         }

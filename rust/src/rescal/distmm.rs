@@ -4,29 +4,42 @@
 //! local products — each member holds one block of the summed inner
 //! dimension, so the reduced result is the full product, replicated on
 //! every member of the group.
+//!
+//! All helpers are fallible (the group may sit on a TCP transport whose
+//! peers can die) and charge the trace with the wire bytes the transport
+//! actually moved.
 
-use crate::comm::{CommOp, Group, Trace};
+use crate::comm::{CommOp, CommResult, Group, Trace};
 use crate::tensor::Mat;
 
 /// All-reduce a matrix over a group, charging `op` in the trace. The
 /// matrix is replaced by the elementwise sum across members.
-pub fn all_reduce_mat(group: &Group, m: &mut Mat, op: CommOp, trace: &mut Trace) {
-    let bytes = m.as_slice().len() * 4;
-    trace.record(op, bytes, || group.all_reduce_sum(m.as_mut_slice()));
+pub fn all_reduce_mat(
+    group: &Group,
+    m: &mut Mat,
+    op: CommOp,
+    trace: &mut Trace,
+) -> CommResult<()> {
+    trace.record_comm(op, group, || group.all_reduce_sum(m.as_mut_slice()))
 }
 
 /// Broadcast a matrix from group-local `root`, charging `op`.
-pub fn broadcast_mat(group: &Group, root: usize, m: &mut Mat, op: CommOp, trace: &mut Trace) {
-    let bytes = m.as_slice().len() * 4;
-    trace.record(op, bytes, || group.broadcast(root, m.as_mut_slice()));
+pub fn broadcast_mat(
+    group: &Group,
+    root: usize,
+    m: &mut Mat,
+    op: CommOp,
+    trace: &mut Trace,
+) -> CommResult<()> {
+    trace.record_comm(op, group, || group.broadcast(root, m.as_mut_slice()))
 }
 
 /// distMM: sum the local partial product over `group`. `partial` is this
 /// member's `A_local · B_local`; on return it holds the full product.
-pub fn dist_mm(group: &Group, partial: Mat, op: CommOp, trace: &mut Trace) -> Mat {
+pub fn dist_mm(group: &Group, partial: Mat, op: CommOp, trace: &mut Trace) -> CommResult<Mat> {
     let mut out = partial;
-    all_reduce_mat(group, &mut out, op, trace);
-    out
+    all_reduce_mat(group, &mut out, op, trace)?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -55,7 +68,8 @@ mod tests {
             let b_blk = Mat::from_fn(e - s, k, |i, j| b[(s + i, j)]);
             let mut trace = Trace::new();
             let partial = a_blk.t_matmul(&b_blk);
-            let full = dist_mm(&ctx.row_comm, partial, CommOp::RowReduce, &mut trace);
+            let full = dist_mm(&ctx.row_comm, partial, CommOp::RowReduce, &mut trace)
+                .expect("in-process dist_mm");
             (full, trace)
         });
         for (full, trace) in results {
@@ -73,7 +87,8 @@ mod tests {
                 Mat::zeros(2, 2)
             };
             let mut trace = Trace::new();
-            broadcast_mat(&ctx.row_comm, 0, &mut m, CommOp::RowBroadcast, &mut trace);
+            broadcast_mat(&ctx.row_comm, 0, &mut m, CommOp::RowBroadcast, &mut trace)
+                .expect("in-process broadcast");
             m
         });
         for (rank, m) in results.iter().enumerate() {

@@ -25,7 +25,7 @@ use super::local::LocalTile;
 use super::RescalOptions;
 use crate::backend::{Backend, Workspace, WorkspaceStats};
 use crate::comm::grid::RankCtx;
-use crate::comm::{CommOp, Trace};
+use crate::comm::{CommOp, CommResult, Trace};
 use crate::rng::Rng;
 use crate::tensor::ops::{mu_update, rescale_core};
 use crate::tensor::{Mat, Tensor3};
@@ -194,6 +194,10 @@ impl IterBufs {
 /// Run distributed RESCAL on this rank's tile. All ranks must call this
 /// with consistent arguments; collectives keep them in lockstep.
 ///
+/// Fallible: on a multi-process transport a dead or timed-out peer
+/// surfaces here as a typed [`crate::comm::CommError`], which the pool
+/// rolls back as a job error.
+///
 /// `ws` is the rank's persistent workspace arena: every iteration
 /// temporary is checked out of it once before the MU loop, so the loop
 /// itself performs zero heap allocations — and on a warm rank (second
@@ -206,7 +210,7 @@ pub fn rescal_rank(
     backend: &mut dyn Backend,
     ws: &mut Workspace,
     trace: &mut Trace,
-) -> RankResult {
+) -> CommResult<RankResult> {
     let n = cfg.n;
     let k = cfg.opts.k;
     let m = tile.m();
@@ -218,7 +222,7 @@ pub fn rescal_rank(
 
     // ‖X‖² once, for relative error
     let mut norm_buf = Mat::from_vec(1, 1, vec![tile.norm_sq() as f32]);
-    ctx.world.all_reduce_sum(norm_buf.as_mut_slice());
+    ctx.world.all_reduce_sum(norm_buf.as_mut_slice())?;
     let x_norm_sq = norm_buf[(0, 0)] as f64;
 
     let rows = a_row.rows();
@@ -232,19 +236,19 @@ pub fn rescal_rank(
         trace.record(CommOp::GramMul, a_col.as_slice().len() * 4, || {
             backend.gram_into(&a_col, &mut bufs.ata)
         });
-        all_reduce_mat(&ctx.row_comm, &mut bufs.ata, CommOp::RowReduce, trace);
+        all_reduce_mat(&ctx.row_comm, &mut bufs.ata, CommOp::RowReduce, trace)?;
 
         bufs.num_a.clear();
         bufs.deno_a.clear();
         for t in 0..m {
             // ---- XA (Alg 3 line 5) ----
             tile.xa_into(t, &a_col, &mut bufs.xa, backend, trace);
-            all_reduce_mat(&ctx.row_comm, &mut bufs.xa, CommOp::RowReduce, trace);
+            all_reduce_mat(&ctx.row_comm, &mut bufs.xa, CommOp::RowReduce, trace)?;
             // ---- AᵀXA (line 6) ----
             trace.record(CommOp::MatrixMul, 0, || {
                 backend.t_matmul_into(&a_row, &bufs.xa, &mut bufs.atxa)
             });
-            all_reduce_mat(&ctx.col_comm, &mut bufs.atxa, CommOp::ColumnReduce, trace);
+            all_reduce_mat(&ctx.col_comm, &mut bufs.atxa, CommOp::ColumnReduce, trace)?;
             // ---- local slice segment: R update + A-update terms (lines
             // 7-11, 15-19). One fused artifact on the XLA backend (§Perf);
             // composed from write-into ops on the workspace otherwise. ----
@@ -313,7 +317,7 @@ pub fn rescal_rank(
             // ---- XᵀAR: tile product + column reduce + diagonal row
             // broadcast (lines 12-13) ----
             tile.xta_into(t, ar, &mut bufs.xtar, backend, trace);
-            all_reduce_mat(&ctx.col_comm, &mut bufs.xtar, CommOp::ColumnReduce, trace);
+            all_reduce_mat(&ctx.col_comm, &mut bufs.xtar, CommOp::ColumnReduce, trace)?;
             // row broadcast from the diagonal rank: member index within the
             // row comm equals the grid column, and the diagonal of row i is
             // at column i. Off-diagonal ranks are pure receivers — the
@@ -321,7 +325,7 @@ pub fn rescal_rank(
             if ctx.is_diagonal() {
                 bufs.xtar_row.copy_from(&bufs.xtar);
             }
-            broadcast_mat(&ctx.row_comm, ctx.row, &mut bufs.xtar_row, CommOp::RowBroadcast, trace);
+            broadcast_mat(&ctx.row_comm, ctx.row, &mut bufs.xtar_row, CommOp::RowBroadcast, trace)?;
             bufs.num_a.add_assign(&bufs.xtar_row);
         }
         // ---- A update (line 22) ----
@@ -330,11 +334,11 @@ pub fn rescal_rank(
         if ctx.is_diagonal() {
             a_col.copy_from(&a_row);
         }
-        broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col, CommOp::ColumnBroadcast, trace);
+        broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col, CommOp::ColumnBroadcast, trace)?;
 
         // optional convergence check
         if cfg.opts.err_every > 0 && (iter + 1) % cfg.opts.err_every == 0 {
-            let e = distributed_rel_error(ctx, tile, &a_row, &a_col, &r, x_norm_sq, backend, trace);
+            let e = distributed_rel_error(ctx, tile, &a_row, &a_col, &r, x_norm_sq, backend, trace)?;
             if cfg.opts.tol > 0.0 && e < cfg.opts.tol {
                 break;
             }
@@ -357,7 +361,7 @@ pub fn rescal_rank(
             acc
         },
     );
-    all_reduce_mat(&ctx.col_comm, &mut sq, CommOp::ColumnReduce, trace);
+    all_reduce_mat(&ctx.col_comm, &mut sq, CommOp::ColumnReduce, trace)?;
     let scales: Vec<f32> = sq.as_slice().iter().map(|&s| if s > 0.0 { s.sqrt() } else { 1.0 }).collect();
     for i in 0..a_row.rows() {
         let row = a_row.row_mut(i);
@@ -372,15 +376,15 @@ pub fn rescal_rank(
     if ctx.is_diagonal() {
         a_col.copy_from(&a_row);
     }
-    broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col, CommOp::ColumnBroadcast, trace);
-    let rel = distributed_rel_error(ctx, tile, &a_row, &a_col, &r, x_norm_sq, backend, trace);
-    RankResult {
+    broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col, CommOp::ColumnBroadcast, trace)?;
+    let rel = distributed_rel_error(ctx, tile, &a_row, &a_col, &r, x_norm_sq, backend, trace)?;
+    Ok(RankResult {
         a_row,
         r,
         rel_error: rel,
         iters_run,
         workspace: ws.stats().since(ws_before),
-    }
+    })
 }
 
 /// ‖X − A R Aᵀ‖_F / ‖X‖_F computed from the local tiles (identical on all
@@ -395,15 +399,15 @@ fn distributed_rel_error(
     x_norm_sq: f64,
     backend: &mut dyn Backend,
     trace: &mut Trace,
-) -> f32 {
+) -> CommResult<f32> {
     let mut local = 0.0f64;
     for t in 0..tile.m() {
         let ar = trace.record(CommOp::MatrixMul, 0, || backend.matmul(a_row, r.slice(t)));
         local += tile.residual_sq(t, &ar, a_col);
     }
     let mut buf = Mat::from_vec(1, 1, vec![local as f32]);
-    all_reduce_mat(&ctx.world, &mut buf, CommOp::RowReduce, trace);
-    ((buf[(0, 0)] as f64).max(0.0).sqrt() / x_norm_sq.max(1e-300).sqrt()) as f32
+    all_reduce_mat(&ctx.world, &mut buf, CommOp::RowReduce, trace)?;
+    Ok(((buf[(0, 0)] as f64).max(0.0).sqrt() / x_norm_sq.max(1e-300).sqrt()) as f32)
 }
 
 #[cfg(test)]
@@ -432,7 +436,8 @@ mod tests {
             let mut backend = NativeBackend::new();
             let mut ws = Workspace::new();
             let mut trace = Trace::disabled();
-            let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
+            let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+                .expect("in-process rescal_rank");
             (ctx.row, ctx.col, out)
         });
         // gather A blocks from the diagonal ranks
@@ -546,7 +551,8 @@ mod tests {
                 let mut backend = NativeBackend::new();
                 let mut ws = Workspace::new();
                 let mut trace = Trace::new();
-                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
+                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+                    .expect("in-process rescal_rank");
                 (out, trace.bytes(CommOp::MatrixMulSparse))
             })
         };
@@ -575,7 +581,8 @@ mod tests {
             let mut backend = NativeBackend::new();
             let mut ws = Workspace::new();
             let mut trace = Trace::new();
-            rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
+            rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+                .expect("in-process rescal_rank");
             trace
         });
         for trace in results {

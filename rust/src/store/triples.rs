@@ -17,12 +17,15 @@
 //!    buffers appended one file at a time (memory: g² × 16 KiB buffers;
 //!    file descriptors: O(1), so the grid is not capped by the fd
 //!    limit);
-//! 3. **finalize** materializes one shard at a time from its spill —
-//!    CSR slices (duplicates summed) or a dense block — writes the
-//!    checksummed shard file, and deletes the spill (memory: one tile).
+//! 3. **finalize** materializes shards in parallel, one tile per
+//!    worker thread: each worker reads a spill, builds CSR slices
+//!    (duplicates summed) or a dense block, writes the checksummed
+//!    shard file, and deletes the spill (memory: one tile per worker,
+//!    workers capped at the machine's parallelism).
 //!
-//! Peak memory is therefore `O(dictionaries + largest tile)`, never
-//! `O(triples)`.
+//! Peak memory is therefore `O(dictionaries + workers × largest tile)`,
+//! never `O(triples)`. Shard files and manifest order are byte-identical
+//! to a sequential finalize — parallelism only changes wall-clock time.
 
 use std::collections::HashMap;
 use std::fs::File;
@@ -306,56 +309,85 @@ pub fn ingest_triples_file(
     }
     drop(spills);
 
-    // finalize: one shard at a time
+    // finalize: materialize shards in parallel — every tile is owned by
+    // exactly one worker (spill read, tile build, checksummed write, and
+    // spill cleanup are all tile-local), so workers share nothing but
+    // the atomic work counter and their own result slots
     let layout = if opts.dense { Layout::Dense } else { Layout::Sparse };
+    let finalize_tile = |gi: usize, gj: usize| -> Result<ShardMeta> {
+        let (r0, r1) = grid.chunk(n, gi);
+        let (c0, c1) = grid.chunk(n, gj);
+        let (rows, cols) = (r1 - r0, c1 - c0);
+        let spath = spill_path(gi, gj);
+        let mut raw = Vec::new();
+        File::open(&spath)
+            .and_then(|mut f| f.read_to_end(&mut raw))
+            .with_context(|| format!("reading spill {}", spath.display()))?;
+        let records = raw.chunks_exact(SPILL_RECORD).map(|rec| {
+            let u = |a: usize| {
+                u32::from_le_bytes(rec[a..a + 4].try_into().unwrap()) as usize
+            };
+            let w = f32::from_le_bytes(rec[12..16].try_into().unwrap());
+            (u(0), u(4), u(8), w)
+        });
+        let file_name = format!("shard_{gi}_{gj}.bin");
+        let path = out_dir.join(&file_name);
+        let digest = if opts.dense {
+            let mut slices: Vec<Mat> = (0..m).map(|_| Mat::zeros(rows, cols)).collect();
+            for (li, lj, t, w) in records {
+                slices[t][(li, lj)] += w; // duplicates sum
+            }
+            shard::write_dense_shard(&path, &Tensor3::from_slices(slices))?
+        } else {
+            let mut trips: Vec<Vec<(usize, usize, f32)>> = vec![Vec::new(); m];
+            for (li, lj, t, w) in records {
+                trips[t].push((li, lj, w));
+            }
+            let slices: Vec<Csr> = trips
+                .into_iter()
+                .map(|t| Csr::from_triplets(rows, cols, t)) // duplicates sum
+                .collect();
+            shard::write_sparse_shard(&path, rows, cols, &slices)?
+        };
+        std::fs::remove_file(&spath).ok();
+        Ok(ShardMeta {
+            row: gi,
+            col: gj,
+            file: file_name,
+            bytes: digest.bytes,
+            checksum: digest.checksum,
+        })
+    };
+    let tiles: Vec<(usize, usize)> =
+        (0..g).flat_map(|gi| (0..g).map(move |gj| (gi, gj))).collect();
+    let workers = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(1)
+        .min(tiles.len());
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<Result<ShardMeta>>>> =
+        tiles.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let idx = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let Some(&(gi, gj)) = tiles.get(idx) else { break };
+                let res = finalize_tile(gi, gj);
+                *slots[idx].lock().unwrap() = Some(res);
+            });
+        }
+    });
+    // slots are in (gi, gj) row-major order, so the manifest's shard
+    // order is identical to the old sequential finalize
     let mut shards = Vec::with_capacity(g * g);
     let mut shard_bytes = 0u64;
-    for gi in 0..g {
-        for gj in 0..g {
-            let (r0, r1) = grid.chunk(n, gi);
-            let (c0, c1) = grid.chunk(n, gj);
-            let (rows, cols) = (r1 - r0, c1 - c0);
-            let spath = spill_path(gi, gj);
-            let mut raw = Vec::new();
-            File::open(&spath)
-                .and_then(|mut f| f.read_to_end(&mut raw))
-                .with_context(|| format!("reading spill {}", spath.display()))?;
-            let records = raw.chunks_exact(SPILL_RECORD).map(|rec| {
-                let u = |a: usize| {
-                    u32::from_le_bytes(rec[a..a + 4].try_into().unwrap()) as usize
-                };
-                let w = f32::from_le_bytes(rec[12..16].try_into().unwrap());
-                (u(0), u(4), u(8), w)
-            });
-            let file_name = format!("shard_{gi}_{gj}.bin");
-            let path = out_dir.join(&file_name);
-            let digest = if opts.dense {
-                let mut slices: Vec<Mat> = (0..m).map(|_| Mat::zeros(rows, cols)).collect();
-                for (li, lj, t, w) in records {
-                    slices[t][(li, lj)] += w; // duplicates sum
-                }
-                shard::write_dense_shard(&path, &Tensor3::from_slices(slices))?
-            } else {
-                let mut trips: Vec<Vec<(usize, usize, f32)>> = vec![Vec::new(); m];
-                for (li, lj, t, w) in records {
-                    trips[t].push((li, lj, w));
-                }
-                let slices: Vec<Csr> = trips
-                    .into_iter()
-                    .map(|t| Csr::from_triplets(rows, cols, t)) // duplicates sum
-                    .collect();
-                shard::write_sparse_shard(&path, rows, cols, &slices)?
-            };
-            shard_bytes += digest.bytes;
-            shards.push(ShardMeta {
-                row: gi,
-                col: gj,
-                file: file_name,
-                bytes: digest.bytes,
-                checksum: digest.checksum,
-            });
-            std::fs::remove_file(&spath).ok();
-        }
+    for slot in slots {
+        let meta = slot
+            .into_inner()
+            .unwrap()
+            .expect("scope joined every finalize worker")?;
+        shard_bytes += meta.bytes;
+        shards.push(meta);
     }
 
     let manifest = StoreManifest {

@@ -49,11 +49,13 @@ fn distributed_rescal_over_pjrt_artifacts() {
             let mut trace = Trace::new();
             if use_xla {
                 let mut backend = XlaBackend::new(&dir).expect("xla backend");
-                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
+                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+                    .expect("in-process rescal_rank");
                 (out.rel_error, backend.hits, backend.fallbacks)
             } else {
                 let mut backend = NativeBackend::new();
-                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
+                let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+                    .expect("in-process rescal_rank");
                 (out.rel_error, 0, 0)
             }
         })

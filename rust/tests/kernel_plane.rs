@@ -126,7 +126,9 @@ fn factorize_allocs_are_independent_of_iteration_count() {
             let mut backend = NativeBackend::new();
             let mut ws = Workspace::new();
             let mut trace = Trace::disabled();
-            rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace).workspace
+            rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+                .expect("in-process rescal_rank")
+                .workspace
         });
         results[0]
     };

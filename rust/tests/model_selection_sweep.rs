@@ -45,7 +45,8 @@ fn run_case(case: &Case) -> (usize, f32) {
         let mut backend = NativeBackend::new();
         let mut ws = Workspace::new();
         let mut trace = Trace::disabled();
-        let out = rescalk_rank(&ctx, &tile, n, &cfg, &mut backend, &mut ws, &mut trace);
+        let out = rescalk_rank(&ctx, &tile, n, &cfg, &mut backend, &mut ws, &mut trace)
+            .expect("in-process rescalk_rank");
         (ctx.row, ctx.col, out)
     });
     // assemble full A from diagonal ranks
@@ -123,7 +124,9 @@ fn higher_noise_still_recovers_k() {
         let mut backend = NativeBackend::new();
         let mut ws = Workspace::new();
         let mut trace = Trace::disabled();
-        rescalk_rank(&ctx, &tile, 24, &cfg, &mut backend, &mut ws, &mut trace).k_opt
+        rescalk_rank(&ctx, &tile, 24, &cfg, &mut backend, &mut ws, &mut trace)
+            .expect("in-process rescalk_rank")
+            .k_opt
     });
     assert_eq!(results[0], 3, "noise broke k recovery");
 }

@@ -98,7 +98,8 @@ fn distributed_equals_sequential_random_configs() {
             let mut backend = NativeBackend::new();
             let mut ws = Workspace::new();
             let mut trace = Trace::disabled();
-            let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
+            let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+                .expect("in-process rescal_rank");
             (ctx.row, ctx.col, out)
         });
         for (row, col, out) in &results {

@@ -29,7 +29,8 @@ fn run_p(x: &Tensor3, p: usize, k: usize, iters: usize) -> (Mat, f32, Vec<Trace>
         let mut backend = NativeBackend::new();
         let mut ws = Workspace::new();
         let mut trace = Trace::new();
-        let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace);
+        let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+            .expect("in-process rescal_rank");
         (ctx.row, ctx.col, out, trace)
     });
     let grid = drescal::comm::Grid::new(p);

@@ -1,0 +1,457 @@
+//! Transport plane integration: the TCP backend must be bit-identical
+//! to the in-process backend at every level — raw collectives, grid
+//! contexts, and whole factorization runs across real OS processes —
+//! and a killed worker must be replaceable without changing the result.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use drescal::comm::transport::tcp::{loopback_meshes, rank_ctx_from_mesh, TcpConfig, TcpGroup};
+use drescal::comm::{Group, RankCtx};
+
+/// Deterministic per-rank payload with values that exercise f32
+/// rounding when summed in different orders.
+fn payload(tag: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|i| ((tag * 31 + i * 7) % 97) as f32 * 0.137 - 3.0).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// World-group handles over a fresh TCP loopback mesh.
+fn tcp_world_groups(size: usize) -> Vec<Group> {
+    loopback_meshes(size, TcpConfig::default())
+        .expect("loopback mesh")
+        .into_iter()
+        .map(|m| {
+            TcpGroup::new(Arc::new(Mutex::new(m)), (0..size).collect(), 0)
+                .map(Group::from_transport)
+                .expect("tcp group")
+        })
+        .collect()
+}
+
+/// Run `f` on every member handle, one OS thread each, results in
+/// member order.
+fn on_each<T: Send>(groups: Vec<Group>, f: impl Fn(Group) -> T + Sync) -> Vec<T> {
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = groups.into_iter().map(|g| s.spawn(move || f(g))).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Every collective, across both world sizes and payload shapes the
+/// engine actually produces (including empty and non-power-of-two),
+/// must agree with the in-process backend to the last bit.
+#[test]
+fn tcp_collectives_match_inprocess_bitwise() {
+    for size in [1usize, 4] {
+        for len in [0usize, 1, 7, 64] {
+            let run = |groups: Vec<Group>| {
+                on_each(groups, |g| {
+                    let r = g.rank;
+                    let root = g.size() - 1;
+                    let mut sum = payload(r, len);
+                    g.all_reduce_sum(&mut sum).unwrap();
+                    let mut max = payload(r + 5, len);
+                    g.all_reduce_max(&mut max).unwrap();
+                    let mut bc =
+                        if r == root { payload(9, len) } else { vec![0.0; len] };
+                    g.broadcast(root, &mut bc).unwrap();
+                    let gathered = g.all_gather(&payload(r, len)).unwrap();
+                    (bits(&sum), bits(&max), bits(&bc), bits(&gathered))
+                })
+            };
+            let inproc = run(Group::create(size));
+            let tcp = run(tcp_world_groups(size));
+            assert_eq!(inproc, tcp, "divergence at size={size} len={len}");
+        }
+    }
+}
+
+/// Ragged sub-communicators: a 6-rank world arranged 2×3, with row
+/// groups of 3 and column groups of 2 sharing one mesh per rank. The
+/// in-process reference builds the same arrangement from independent
+/// groups.
+#[test]
+fn ragged_2x3_subgroups_match_inprocess() {
+    type Pair = (Group, Group); // (row handle, col handle) per world rank
+    let work = |pairs: Vec<Pair>| {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = pairs
+                .into_iter()
+                .enumerate()
+                .map(|(r, (row, col))| {
+                    s.spawn(move || {
+                        let mut v = payload(r, 5);
+                        row.all_reduce_sum(&mut v).unwrap();
+                        let gathered = col.all_gather(&v).unwrap();
+                        // column member 0 is world rank r % 3 under both
+                        // backends, so the broadcast source data agrees
+                        let mut b =
+                            if col.rank == 0 { payload(r, 3) } else { vec![0.0; 3] };
+                        col.broadcast(0, &mut b).unwrap();
+                        (bits(&v), bits(&gathered), bits(&b))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        })
+    };
+
+    // in-process: world rank r sits in row r/3 (member r%3) and column
+    // r%3 (member r/3); pop in reverse rank order like RankCtx does
+    let mut rows: Vec<Vec<Group>> = (0..2).map(|_| Group::create(3)).collect();
+    let mut cols: Vec<Vec<Group>> = (0..3).map(|_| Group::create(2)).collect();
+    let mut inproc_pairs: Vec<Pair> = Vec::new();
+    for r in (0..6usize).rev() {
+        inproc_pairs.push((rows[r / 3].pop().unwrap(), cols[r % 3].pop().unwrap()));
+    }
+    inproc_pairs.reverse();
+
+    // tcp: both subgroup handles of a rank share its mesh, with group
+    // ids agreed across the world (rows 1..=2, columns 3..=5)
+    let tcp_pairs: Vec<Pair> = loopback_meshes(6, TcpConfig::default())
+        .expect("loopback mesh")
+        .into_iter()
+        .enumerate()
+        .map(|(r, m)| {
+            let m = Arc::new(Mutex::new(m));
+            let base = (r / 3) * 3;
+            let row = TcpGroup::new(m.clone(), (base..base + 3).collect(), 1 + (r / 3) as u32)
+                .map(Group::from_transport)
+                .expect("row group");
+            let col = TcpGroup::new(m, vec![r % 3, r % 3 + 3], 3 + (r % 3) as u32)
+                .map(Group::from_transport)
+                .expect("col group");
+            (row, col)
+        })
+        .collect();
+
+    assert_eq!(work(inproc_pairs), work(tcp_pairs), "ragged subgroup divergence");
+}
+
+/// Full grid contexts (world + row + column communicators) built from
+/// TCP meshes must agree with `RankCtx::create_all`.
+#[test]
+fn grid_contexts_match_inprocess_bitwise() {
+    for p in [1usize, 4] {
+        let run = |ctxs: Vec<RankCtx>| {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = ctxs
+                    .into_iter()
+                    .map(|ctx| {
+                        s.spawn(move || {
+                            let mut v = payload(ctx.rank, 6);
+                            ctx.row_comm.all_reduce_sum(&mut v).unwrap();
+                            let mut w = payload(ctx.rank + 11, 6);
+                            ctx.col_comm.all_reduce_sum(&mut w).unwrap();
+                            let g =
+                                ctx.world.all_gather(&[ctx.rank as f32 * 0.3]).unwrap();
+                            (bits(&v), bits(&w), bits(&g))
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+            })
+        };
+        let inproc = run(RankCtx::create_all(p));
+        let grid = drescal::comm::Grid::new(p);
+        let tcp_ctxs: Vec<RankCtx> = loopback_meshes(p, TcpConfig::default())
+            .expect("loopback mesh")
+            .into_iter()
+            .map(|m| rank_ctx_from_mesh(m, grid).expect("tcp rank ctx"))
+            .collect();
+        assert_eq!(inproc, run(tcp_ctxs), "grid divergence at p={p}");
+    }
+}
+
+/// The TCP backend reports real framed wire traffic, not a model.
+#[test]
+fn tcp_wire_stats_count_real_traffic() {
+    let stats = on_each(tcp_world_groups(4), |g| {
+        let mut v = vec![1.0f32; 16];
+        g.all_reduce_sum(&mut v).unwrap();
+        (g.backend(), g.wire_stats())
+    });
+    for (backend, st) in stats {
+        assert_eq!(backend, "tcp");
+        assert!(st.ops > 0, "tcp op count not recorded");
+        // a 4-rank ring all-reduce of 64 payload bytes moves at least
+        // one frame of payload plus headers in each direction
+        assert!(st.bytes > 64, "tcp byte count implausibly low: {}", st.bytes);
+    }
+}
+
+// ---------------------------------------------------------------------
+// multi-process: real `drescal train` / `drescal worker` children
+// ---------------------------------------------------------------------
+
+fn drescal() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_drescal"))
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("drescal_transport_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Poll until the leader writes its bound address to the port file.
+fn wait_port_file(path: &Path) -> String {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            let t = s.trim();
+            if !t.is_empty() {
+                return t.to_string();
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "leader never wrote its port file {}",
+            path.display()
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn spawn_worker(addr: &str) -> Child {
+    drescal()
+        .args(["worker", "--connect", addr])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn drescal worker")
+}
+
+/// Wait for a child with a deadline; kill and fail if it wedges.
+fn reap(mut child: Child, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match child.try_wait() {
+            Ok(Some(_)) => return,
+            Ok(None) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            _ => {
+                let _ = child.kill();
+                let _ = child.wait();
+                panic!("{what} did not exit after the leader finished");
+            }
+        }
+    }
+}
+
+fn digest_of(text: &str) -> String {
+    text.lines()
+        .find_map(|l| l.strip_prefix("factor digest: "))
+        .unwrap_or_else(|| panic!("no factor digest line in:\n{text}"))
+        .trim()
+        .to_string()
+}
+
+fn combined(out: &std::process::Output) -> String {
+    format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    )
+}
+
+/// Read leader stdout until the line proving the dataset is loaded and
+/// the factorize job is about to be dispatched.
+fn read_until_job_start(stdout: &mut BufReader<std::process::ChildStdout>) -> String {
+    let mut seen = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if stdout.read_line(&mut line).unwrap() == 0 {
+            panic!("leader exited before dispatching the job:\n{seen}");
+        }
+        seen.push_str(&line);
+        if line.contains("cluster RESCAL") {
+            return seen;
+        }
+    }
+}
+
+/// A 2×2 TCP cluster of real OS processes must produce bit-identical
+/// factors to the single-process in-process engine: same data spec,
+/// same seed, same digest.
+#[test]
+fn tcp_cluster_run_is_bit_identical_to_inprocess() {
+    let dir = tmpdir("parity");
+    let port_file = dir.join("leader.addr");
+    let data = [
+        "--data", "synthetic", "--n", "40", "--m", "2", "--k-true", "3", "--density",
+        "0.2", "--k", "3", "--iters", "30", "--seed", "7",
+    ];
+    let leader = drescal()
+        .arg("train")
+        .args(data)
+        .args(["--workers", "3", "--listen", "127.0.0.1:0"])
+        .args(["--port-file", port_file.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn leader");
+    let addr = wait_port_file(&port_file);
+    let workers: Vec<Child> = (0..3).map(|_| spawn_worker(&addr)).collect();
+    let out = leader.wait_with_output().expect("leader run");
+    let text = combined(&out);
+    for w in workers {
+        reap(w, "worker");
+    }
+    assert!(out.status.success(), "leader failed:\n{text}");
+    assert!(text.contains("transport tcp"), "report not stamped tcp:\n{text}");
+    let cluster = digest_of(&text);
+
+    let solo = drescal().arg("run").args(data).args(["--p", "4"]).output().unwrap();
+    let solo_text = combined(&solo);
+    assert!(solo.status.success(), "{solo_text}");
+    assert_eq!(
+        digest_of(&solo_text),
+        cluster,
+        "TCP cluster factors diverge from in-process factors"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Chaos: ingest a corpus to tile shards, start a 2×2 cluster over it,
+/// kill one worker mid-factorization, and offer a fresh process. The
+/// leader must admit the replacement, replay the dead rank's dataset
+/// load from the shards on disk, rerun the job, and land on exactly
+/// the factors the in-process engine computes.
+#[test]
+fn killed_worker_is_replaced_and_factors_match() {
+    let dir = tmpdir("chaos");
+    let triples = dir.join("kg.tsv");
+    let mut text = String::new();
+    for i in 0..60 {
+        for j in 0..60 {
+            if (i + 2 * j) % 5 == 0 {
+                text.push_str(&format!("e{i}\trel0\te{j}\n"));
+            }
+            if (i * j) % 11 == 3 {
+                text.push_str(&format!("e{i}\trel1\te{j}\n"));
+            }
+        }
+    }
+    std::fs::write(&triples, text).unwrap();
+    let corpus = dir.join("corpus");
+    let ingest = drescal()
+        .args(["ingest", "--input", triples.to_str().unwrap()])
+        .args(["--out", corpus.to_str().unwrap(), "--grid", "2"])
+        .output()
+        .unwrap();
+    assert!(ingest.status.success(), "{}", combined(&ingest));
+    let file_arg = format!("file:{}", corpus.join("manifest.json").display());
+    let common = ["--k", "3", "--iters", "500", "--seed", "3"];
+
+    let solo = drescal()
+        .arg("run")
+        .args(["--data", &file_arg])
+        .args(common)
+        .args(["--p", "4"])
+        .output()
+        .unwrap();
+    let solo_text = combined(&solo);
+    assert!(solo.status.success(), "{solo_text}");
+    let want = digest_of(&solo_text);
+
+    let port_file = dir.join("leader.addr");
+    let mut leader = drescal()
+        .arg("train")
+        .args(["--data", &file_arg])
+        .args(common)
+        .args(["--workers", "3", "--listen", "127.0.0.1:0"])
+        .args(["--port-file", port_file.to_str().unwrap()])
+        .args(["--comm-timeout-ms", "2000", "--max-replacements", "1"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let addr = wait_port_file(&port_file);
+    let mut workers: Vec<Child> = (0..3).map(|_| spawn_worker(&addr)).collect();
+
+    let mut stdout = BufReader::new(leader.stdout.take().unwrap());
+    let mut seen = read_until_job_start(&mut stdout);
+
+    // kill a worker while the factorization is in flight, then offer a
+    // fresh process as its replacement
+    let mut victim = workers.remove(1);
+    victim.kill().unwrap();
+    let _ = victim.wait();
+    workers.push(spawn_worker(&addr));
+
+    stdout.read_to_string(&mut seen).unwrap();
+    let status = leader.wait().unwrap();
+    let mut err = String::new();
+    leader.stderr.take().unwrap().read_to_string(&mut err).unwrap();
+    for w in workers {
+        reap(w, "worker");
+    }
+    assert!(status.success(), "leader failed\nstdout:\n{seen}\nstderr:\n{err}");
+    assert!(
+        err.contains("recovered at epoch"),
+        "worker kill was not detected/recovered\nstderr:\n{err}"
+    );
+    assert_eq!(
+        digest_of(&seen),
+        want,
+        "recovered cluster diverged from in-process factors\nstderr:\n{err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// With the replacement budget at zero, a worker crash is a typed job
+/// failure: the leader exits non-zero naming the exhausted budget
+/// instead of hanging or corrupting state.
+#[test]
+fn replacement_budget_zero_fails_with_typed_error() {
+    let dir = tmpdir("budget");
+    let port_file = dir.join("leader.addr");
+    let mut leader = drescal()
+        .arg("train")
+        .args(["--data", "synthetic", "--n", "48", "--m", "2", "--k-true", "3"])
+        .args(["--density", "0.3", "--k", "3", "--iters", "2000", "--seed", "11"])
+        .args(["--workers", "3", "--listen", "127.0.0.1:0"])
+        .args(["--port-file", port_file.to_str().unwrap()])
+        .args(["--comm-timeout-ms", "1500", "--max-replacements", "0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let addr = wait_port_file(&port_file);
+    let mut workers: Vec<Child> = (0..3).map(|_| spawn_worker(&addr)).collect();
+
+    let mut stdout = BufReader::new(leader.stdout.take().unwrap());
+    let mut seen = read_until_job_start(&mut stdout);
+    let mut victim = workers.remove(0);
+    victim.kill().unwrap();
+    let _ = victim.wait();
+
+    stdout.read_to_string(&mut seen).unwrap();
+    let status = leader.wait().unwrap();
+    let mut err = String::new();
+    leader.stderr.take().unwrap().read_to_string(&mut err).unwrap();
+    for w in workers {
+        reap(w, "worker");
+    }
+    assert!(
+        !status.success(),
+        "leader must fail with no replacement budget\nstdout:\n{seen}\nstderr:\n{err}"
+    );
+    assert!(
+        err.contains("worker-replacement budget"),
+        "missing typed budget error\nstderr:\n{err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
