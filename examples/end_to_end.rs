@@ -59,6 +59,7 @@ fn main() {
         seed: 7,
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
+        ..Default::default()
     };
     println!(
         "sweep: k ∈ [{}, {}], r = {} perturbations, {} MU iters each\n",

@@ -61,6 +61,7 @@ fn main() {
         seed: 131,
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
+        ..Default::default()
     };
     let report = engine
         .model_select(&JobData::dense(planted.x.clone()), &cfg)

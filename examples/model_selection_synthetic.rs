@@ -45,6 +45,7 @@ fn run_dataset(
         seed,
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
+        ..Default::default()
     };
     let report = engine
         .model_select(&JobData::dense(planted.x.clone()), &cfg)

@@ -38,6 +38,7 @@ fn sweep(
         seed,
         rule,
         init,
+        ..Default::default()
     };
     engine.model_select(&data, &cfg).expect("model-select job")
 }

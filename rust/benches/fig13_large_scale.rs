@@ -46,6 +46,7 @@ fn main() {
         seed: 13,
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
+        ..Default::default()
     };
     let report = engine
         .model_select(&JobData::dense(planted.x), &cfg)

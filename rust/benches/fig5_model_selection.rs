@@ -26,6 +26,7 @@ fn run_case(engine: &mut Engine, n: usize, m: usize, k_true: usize, seed: u64) {
         seed,
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
+        ..Default::default()
     };
     let report = engine
         .model_select(&JobData::dense(planted.x.clone()), &cfg)

@@ -47,6 +47,7 @@ fn main() {
         seed: 11,
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
+        ..Default::default()
     };
     let report = engine.model_select(&JobData::dense(x), &cfg).expect("model-select");
     print_scores(
@@ -72,6 +73,7 @@ fn main() {
         seed: 13,
         rule: SelectionRule::StableElbow { threshold: 0.8, min_gain: 0.10 },
         init: InitStrategy::Nndsvd { factors, jitter: 0.1 },
+        ..Default::default()
     };
     let report = engine.model_select(&JobData::dense(x), &cfg).expect("model-select");
     print_scores(

@@ -281,5 +281,7 @@ fn stats_since(now: ServeStats, earlier: ServeStats) -> ServeStats {
         scored_candidates: now.scored_candidates - earlier.scored_candidates,
         ws_allocs: now.ws_allocs - earlier.ws_allocs,
         ws_reuses: now.ws_reuses - earlier.ws_reuses,
+        // fixed at engine construction, not a per-pass counter
+        projection_bytes_saved: now.projection_bytes_saved,
     }
 }

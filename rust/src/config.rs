@@ -20,7 +20,7 @@ use crate::engine::{ClusterConfig, DatasetSpec, EngineConfig, TransportKind};
 use crate::error::{Context as _, Result};
 use crate::json::Json;
 use crate::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
-use crate::rescal::RescalOptions;
+use crate::rescal::{ModelKind, RescalOptions};
 use crate::{bail, err};
 
 /// Parsed command line: subcommand + `--key value` flags.
@@ -325,6 +325,9 @@ pub struct QueryCmd {
     pub r: String,
     /// Completion depth for top-k queries.
     pub top: usize,
+    /// `--family`: assert the artifact was trained under this model
+    /// family before answering (typed mismatch error otherwise).
+    pub family: Option<ModelKind>,
     /// Also print the answer as JSON.
     pub json: bool,
 }
@@ -397,25 +400,27 @@ pub struct RunConfig {
 
 const RUN_FLAGS: &[&str] = &[
     "config", "data", "n", "m", "k-true", "density", "seed", "p", "backend", "artifacts",
-    "trace", "k", "iters", "json", "cache-bytes",
+    "trace", "k", "iters", "json", "cache-bytes", "model",
 ];
 const MODEL_SELECT_FLAGS: &[&str] = &[
     "config", "data", "n", "m", "k-true", "density", "seed", "p", "backend", "artifacts",
     "trace", "iters", "json", "k-min", "k-max", "perturbations", "delta", "tol",
-    "err-every", "regress-iters", "cache-bytes",
+    "err-every", "regress-iters", "cache-bytes", "model",
 ];
 const EXASCALE_FLAGS: &[&str] = &["config", "machine"];
 const ARTIFACTS_FLAGS: &[&str] = &["config", "artifacts"];
 const BENCH_FLAGS: &[&str] = &[
     "config", "p", "backend", "artifacts", "trace", "iters", "out", "baseline",
-    "max-regression", "gate-floor", "cache-bytes",
+    "max-regression", "gate-floor", "cache-bytes", "model",
 ];
+// `--model` on export/query is the artifact *path* (predates the model
+// families), so those two subcommands spell the family `--family`
 const EXPORT_FLAGS: &[&str] = &[
     "config", "data", "n", "m", "k-true", "density", "seed", "p", "backend", "artifacts",
     "trace", "k", "iters", "sweep", "model", "k-min", "k-max", "perturbations", "delta",
-    "tol", "err-every", "regress-iters", "cache-bytes",
+    "tol", "err-every", "regress-iters", "cache-bytes", "family",
 ];
-const QUERY_FLAGS: &[&str] = &["config", "model", "s", "o", "r", "top", "json"];
+const QUERY_FLAGS: &[&str] = &["config", "model", "s", "o", "r", "top", "json", "family"];
 const SERVE_BENCH_FLAGS: &[&str] = &[
     "config", "p", "backend", "artifacts", "trace", "n", "m", "k", "iters", "queries",
     "batch", "top", "seed", "cache-bytes",
@@ -424,6 +429,7 @@ const INGEST_FLAGS: &[&str] = &["config", "input", "out", "grid", "dense", "json
 const TRAIN_FLAGS: &[&str] = &[
     "config", "data", "n", "m", "k-true", "density", "seed", "trace", "k", "iters",
     "json", "workers", "listen", "port-file", "comm-timeout-ms", "max-replacements",
+    "model",
 ];
 const WORKER_FLAGS: &[&str] = &["config", "connect"];
 
@@ -452,7 +458,7 @@ impl RunConfig {
                 }
                 Command::Run(FactorizeCmd {
                     data: data_spec(&args)?,
-                    engine: engine_config(&args)?,
+                    engine: engine_config(&args)?.with_model(model_kind(&args, "model")?),
                     opts: RescalOptions::new(k, iters),
                     seed: args.get_u64("seed", 42)?,
                     json: args.get_bool("json"),
@@ -462,8 +468,8 @@ impl RunConfig {
                 check_known_flags(&args.subcommand, &cli_flags, MODEL_SELECT_FLAGS)?;
                 Command::ModelSelect(ModelSelectCmd {
                     data: data_spec(&args)?,
-                    engine: engine_config(&args)?,
-                    sweep: sweep_config(&args)?,
+                    engine: engine_config(&args)?.with_model(model_kind(&args, "model")?),
+                    sweep: sweep_config(&args, "model")?,
                     json: args.get_bool("json"),
                 })
             }
@@ -499,7 +505,7 @@ impl RunConfig {
                     bail!("--gate-floor must be >= 0 seconds");
                 }
                 Command::Bench(BenchCmd {
-                    engine: engine_config(&args)?,
+                    engine: engine_config(&args)?.with_model(model_kind(&args, "model")?),
                     iters,
                     // default baseline: the previous run's output
                     baseline: args.get("baseline").unwrap_or(&out).to_string(),
@@ -518,11 +524,14 @@ impl RunConfig {
                 if iters == 0 {
                     bail!("--iters must be >= 1");
                 }
-                let sweep =
-                    if args.get_bool("sweep") { Some(sweep_config(&args)?) } else { None };
+                let sweep = if args.get_bool("sweep") {
+                    Some(sweep_config(&args, "family")?)
+                } else {
+                    None
+                };
                 Command::Export(ExportCmd {
                     data: data_spec(&args)?,
-                    engine: engine_config(&args)?,
+                    engine: engine_config(&args)?.with_model(model_kind(&args, "family")?),
                     opts: RescalOptions::new(k, iters),
                     sweep,
                     seed: args.get_u64("seed", 42)?,
@@ -550,6 +559,7 @@ impl RunConfig {
                     o,
                     r: args.get("r").unwrap_or("0").to_string(),
                     top,
+                    family: args.get("family").map(ModelKind::parse).transpose()?,
                     json: args.get_bool("json"),
                 })
             }
@@ -638,6 +648,7 @@ impl RunConfig {
                     backend: BackendSpec::Native,
                     trace: args.get_bool("trace"),
                     transport: TransportKind::TcpLeader(cluster),
+                    model: model_kind(&args, "model")?,
                     ..Default::default()
                 };
                 Command::Train(TrainCmd {
@@ -687,6 +698,15 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     Ok(cfg)
 }
 
+/// The model family under `--model` (or `--family` on subcommands where
+/// `--model` is the artifact path); absent = the paper's Gaussian RESCAL.
+fn model_kind(args: &Args, key: &str) -> Result<ModelKind> {
+    match args.get(key) {
+        Some(name) => ModelKind::parse(name),
+        None => Ok(ModelKind::Rescal),
+    }
+}
+
 fn data_spec(args: &Args) -> Result<DataSpec> {
     let n = args.get_usize("n", 64)?;
     let m = args.get_usize("m", 4)?;
@@ -718,7 +738,10 @@ fn data_spec(args: &Args) -> Result<DataSpec> {
     })
 }
 
-fn sweep_config(args: &Args) -> Result<RescalkConfig> {
+/// `model_key` names the family flag: `model-select` spells it
+/// `--model`, `export --sweep` spells it `--family` (its `--model` is
+/// the output artifact path).
+fn sweep_config(args: &Args, model_key: &str) -> Result<RescalkConfig> {
     let k_min = args.get_usize("k-min", 2)?;
     let k_max = args.get_usize("k-max", 8)?;
     if k_min < 1 {
@@ -751,6 +774,7 @@ fn sweep_config(args: &Args) -> Result<RescalkConfig> {
         seed: args.get_u64("seed", 42)?,
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
+        model: model_kind(args, model_key)?,
     })
 }
 
@@ -1176,6 +1200,74 @@ mod tests {
         }
         // everything else on the worker command line is rejected
         assert!(RunConfig::from_args(argv("worker --connect x --k 4")).is_err());
+    }
+
+    #[test]
+    fn model_family_flag_is_typed() {
+        // absent = the paper's Gaussian rule, on every family-aware command
+        let cfg = RunConfig::from_args(argv("run")).unwrap();
+        match cfg.command {
+            Command::Run(cmd) => assert_eq!(cmd.engine.model, ModelKind::Rescal),
+            _ => panic!("expected run command"),
+        }
+        let cfg = RunConfig::from_args(argv("run --model distmult")).unwrap();
+        match cfg.command {
+            Command::Run(cmd) => assert_eq!(cmd.engine.model, ModelKind::DistMult),
+            _ => panic!("expected run command"),
+        }
+        let cfg = RunConfig::from_args(argv("train --model logistic")).unwrap();
+        match cfg.command {
+            Command::Train(cmd) => assert_eq!(cmd.engine.model, ModelKind::Logistic),
+            _ => panic!("expected train command"),
+        }
+        let cfg = RunConfig::from_args(argv("model-select --model distmult")).unwrap();
+        match cfg.command {
+            Command::ModelSelect(cmd) => {
+                assert_eq!(cmd.sweep.model, ModelKind::DistMult);
+                assert_eq!(cmd.engine.model, ModelKind::DistMult);
+            }
+            _ => panic!("expected model-select command"),
+        }
+        let cfg = RunConfig::from_args(argv("bench --model logistic")).unwrap();
+        match cfg.command {
+            Command::Bench(cmd) => assert_eq!(cmd.engine.model, ModelKind::Logistic),
+            _ => panic!("expected bench command"),
+        }
+        let e = RunConfig::from_args(argv("run --model tucker")).unwrap_err();
+        assert!(e.to_string().contains("unknown model family"), "{e}");
+    }
+
+    #[test]
+    fn export_and_query_spell_the_family_flag_family() {
+        // `--model` on export/query is the artifact path, so the family
+        // rides `--family` there
+        let cfg = RunConfig::from_args(argv(
+            "export --family distmult --model out.json --sweep",
+        ))
+        .unwrap();
+        match cfg.command {
+            Command::Export(cmd) => {
+                assert_eq!(cmd.engine.model, ModelKind::DistMult);
+                assert_eq!(cmd.sweep.unwrap().model, ModelKind::DistMult);
+                assert_eq!(cmd.model, "out.json");
+            }
+            _ => panic!("expected export command"),
+        }
+        let cfg =
+            RunConfig::from_args(argv("query --s 1 --r 0 --family logistic")).unwrap();
+        match cfg.command {
+            Command::Query(cmd) => assert_eq!(cmd.family, Some(ModelKind::Logistic)),
+            _ => panic!("expected query command"),
+        }
+        let cfg = RunConfig::from_args(argv("query --s 1 --r 0")).unwrap();
+        match cfg.command {
+            Command::Query(cmd) => assert_eq!(cmd.family, None, "assertion is opt-in"),
+            _ => panic!("expected query command"),
+        }
+        assert!(RunConfig::from_args(argv("query --s 1 --family tucker")).is_err());
+        // and `--model` as a family spelling stays rejected there
+        let e = RunConfig::from_args(argv("export --model-family x")).unwrap_err();
+        assert!(e.to_string().contains("unknown flag"), "{e}");
     }
 
     #[test]

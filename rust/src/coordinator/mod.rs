@@ -17,7 +17,7 @@ use crate::backend::{BackendSpec, WorkspaceStats};
 use crate::comm::{Grid, Trace};
 use crate::engine::{Engine, EngineConfig};
 use crate::model_selection::{KScore, RescalkConfig};
-use crate::rescal::{LocalTile, RescalOptions};
+use crate::rescal::{LocalTile, ModelKind, RescalOptions};
 use crate::tensor::{Csr, Mat, Tensor3};
 
 /// Legacy coordinator-level configuration (superseded by
@@ -154,6 +154,10 @@ pub struct RescalReport {
     /// Transport backend the job's collectives ran over: `"in_process"`
     /// (thread pool, the default) or `"tcp"` (multi-process cluster).
     pub transport_backend: String,
+    /// Model family the factors were trained under; determines the core
+    /// slice shape (k×k for `rescal`/`logistic`, 1×k for `distmult`) and
+    /// how a served model scores triples.
+    pub model: ModelKind,
 }
 
 /// Gathered result of a model-selection job.
@@ -172,6 +176,8 @@ pub struct RescalkReport {
     /// Transport backend the job's collectives ran over: `"in_process"`
     /// or `"tcp"`.
     pub transport_backend: String,
+    /// Model family the sweep ran under (every candidate k uses it).
+    pub model: ModelKind,
 }
 
 /// Run one distributed non-negative RESCAL factorization on a one-shot

@@ -66,7 +66,7 @@ use crate::error::{Context as _, Result};
 use crate::json::Json;
 use crate::model_selection::{InitStrategy, RescalkConfig, RescalkResult, SelectionRule};
 use crate::rescal::distributed::DistInit;
-use crate::rescal::{RankResult, RescalOptions};
+use crate::rescal::{ModelKind, RankResult, RescalOptions};
 use crate::{bail, err};
 
 /// Mesh-socket retry budget, fixed on both sides of the wire.
@@ -848,6 +848,7 @@ fn rescalk_cfg_to_json(c: &RescalkConfig) -> Result<Json> {
         ("regress_iters", jnum(c.regress_iters as f64)),
         ("seed", u64_to_json(c.seed)),
         ("rule", rule_to_json(&c.rule)),
+        ("model", jstr(c.model.as_str())),
     ]))
 }
 
@@ -864,7 +865,17 @@ fn rescalk_cfg_from_json(v: &Json) -> Result<RescalkConfig> {
         seed: u64_from_json(v, "seed")?,
         rule: rule_from_json(v.get("rule").ok_or_else(|| err!("config missing 'rule'"))?)?,
         init: InitStrategy::Random,
+        model: model_kind_from_json(v)?,
     })
+}
+
+/// Leaders older than the model-family plane send no `model` field;
+/// they always ran the Gaussian RESCAL rule.
+fn model_kind_from_json(v: &Json) -> Result<ModelKind> {
+    match v.get("model").and_then(|m| m.as_str()) {
+        Some(name) => ModelKind::parse(name),
+        None => Ok(ModelKind::Rescal),
+    }
 }
 
 /// Serialize one rank job as a `job` control message. Fails (typed) on
@@ -881,7 +892,7 @@ fn job_to_json(job: &RankJob) -> Result<Json> {
         RankJob::UnloadDataset { id } => {
             obj(vec![("type", jstr("unload")), ("id", u64_to_json(*id))])
         }
-        RankJob::Factorize { dataset, n, opts, init } => {
+        RankJob::Factorize { dataset, n, opts, init, model } => {
             let init_json = match init {
                 DistInit::Random { seed } => {
                     obj(vec![("kind", jstr("random")), ("seed", u64_to_json(*seed))])
@@ -897,6 +908,7 @@ fn job_to_json(job: &RankJob) -> Result<Json> {
                 ("n", jnum(*n as f64)),
                 ("opts", opts_to_json(opts)),
                 ("init", init_json),
+                ("model", jstr(model.as_str())),
             ])
         }
         RankJob::ModelSelect { dataset, n, cfg } => obj(vec![
@@ -932,6 +944,7 @@ fn job_from_json(v: &Json) -> Result<RankJob> {
                     v.get("opts").ok_or_else(|| err!("factorize job missing 'opts'"))?,
                 )?,
                 init: DistInit::Random { seed: u64_from_json(init, "seed")? },
+                model: model_kind_from_json(v)?,
             })
         }
         "model_select" => Ok(RankJob::ModelSelect {
@@ -1066,21 +1079,40 @@ mod tests {
             n: 64,
             opts: RescalOptions::new(4, 120).with_tol(1e-5, 10),
             init: DistInit::Random { seed: 0xdead_beef_cafe },
+            model: ModelKind::DistMult,
         };
         let wire = job_to_json(&job).unwrap();
         let body = wire.get("job").unwrap();
         let back = job_from_json(body).unwrap();
         match back {
-            RankJob::Factorize { dataset, n, opts, init } => {
+            RankJob::Factorize { dataset, n, opts, init, model } => {
                 assert_eq!((dataset, n), (3, 64));
                 assert_eq!((opts.k, opts.max_iters, opts.err_every), (4, 120, 10));
                 assert_eq!(opts.tol, 1e-5);
+                assert_eq!(model, ModelKind::DistMult);
                 match init {
                     DistInit::Random { seed } => assert_eq!(seed, 0xdead_beef_cafe),
                     _ => panic!("init kind changed in roundtrip"),
                 }
             }
             _ => panic!("job kind changed in roundtrip"),
+        }
+    }
+
+    /// A pre-model-family leader sends no `model` field; the worker must
+    /// default it to the Gaussian rule rather than erroring out.
+    #[test]
+    fn factorize_job_without_model_field_defaults_to_rescal() {
+        let body = obj(vec![
+            ("type", jstr("factorize")),
+            ("dataset", u64_to_json(1)),
+            ("n", jnum(16.0)),
+            ("opts", opts_to_json(&RescalOptions::new(2, 10))),
+            ("init", obj(vec![("kind", jstr("random")), ("seed", u64_to_json(5))])),
+        ]);
+        match job_from_json(&body).unwrap() {
+            RankJob::Factorize { model, .. } => assert_eq!(model, ModelKind::Rescal),
+            _ => panic!("job kind changed"),
         }
     }
 
@@ -1142,12 +1174,18 @@ mod tests {
             SelectionRule::MaxSeparation,
             SelectionRule::StableElbow { threshold: 0.7, min_gain: 0.01 },
         ] {
-            let cfg = RescalkConfig { rule, seed: u64::MAX, ..Default::default() };
+            let cfg = RescalkConfig {
+                rule,
+                seed: u64::MAX,
+                model: ModelKind::Logistic,
+                ..Default::default()
+            };
             let back = rescalk_cfg_from_json(&rescalk_cfg_to_json(&cfg).unwrap()).unwrap();
             assert_eq!(back.rule, cfg.rule);
             // u64::MAX survives because seeds cross the wire as strings
             assert_eq!(back.seed, u64::MAX);
             assert_eq!(back.k_max, cfg.k_max);
+            assert_eq!(back.model, ModelKind::Logistic);
         }
     }
 }

@@ -32,9 +32,14 @@
 //! of typed jobs with **zero per-job data movement**:
 //!
 //! * [`JobSpec::Factorize`] — one distributed non-negative RESCAL
-//!   factorization (paper Alg 3);
+//!   factorization (paper Alg 3), under any
+//!   [`ModelKind`](crate::rescal::ModelKind) — the paper's Gaussian
+//!   `rescal` rule, diagonal-core `distmult`, or Bernoulli `logistic`
+//!   (set [`EngineConfig::model`] or the job's `model` field; CLI
+//!   `--model`);
 //! * [`JobSpec::ModelSelect`] — the full RESCALk sweep with automatic k
-//!   determination (paper Alg 1);
+//!   determination (paper Alg 1), runnable under any model family via
+//!   [`RescalkConfig::model`];
 //! * [`JobSpec::Simulate`] — a cluster-scale replay through the
 //!   calibrated machine model (paper Fig 13).
 //!
@@ -97,9 +102,9 @@ use crate::comm::Grid;
 use crate::coordinator::{JobData, RescalReport, RescalkReport};
 use crate::err;
 use crate::error::Result;
-use crate::model_selection::RescalkConfig;
+use crate::model_selection::{InitStrategy, RescalkConfig};
 use crate::rescal::distributed::DistInit;
-use crate::rescal::RescalOptions;
+use crate::rescal::{ModelKind, RescalOptions};
 use crate::simulate::{exascale, Machine};
 use crate::tensor::Mat;
 use crate::{bail, comm::Trace};
@@ -142,6 +147,10 @@ pub struct EngineConfig {
     /// Execution transport: in-process rank threads (default) or a
     /// leader-coordinated TCP cluster of worker processes.
     pub transport: TransportKind,
+    /// Model family used by the [`Engine::factorize`] convenience (and
+    /// any job that doesn't pin its own): the paper's Gaussian RESCAL
+    /// rule by default. CLI: `--model`.
+    pub model: ModelKind,
 }
 
 impl Default for EngineConfig {
@@ -152,6 +161,7 @@ impl Default for EngineConfig {
             trace: false,
             dataset_cache_bytes: 0,
             transport: TransportKind::InProcess,
+            model: ModelKind::Rescal,
         }
     }
 }
@@ -184,6 +194,12 @@ impl EngineConfig {
         self
     }
 
+    /// Select the model family (default: Gaussian RESCAL).
+    pub fn with_model(mut self, model: ModelKind) -> Self {
+        self.model = model;
+        self
+    }
+
     /// Validate without spawning anything.
     pub fn validate(&self) -> Result<()> {
         if self.p == 0 {
@@ -205,8 +221,9 @@ impl EngineConfig {
 /// submit) or inline [`JobData`] (auto-registered, cached by `Arc`
 /// identity).
 pub enum JobSpec {
-    /// Distributed non-negative RESCAL (Alg 3).
-    Factorize { data: DatasetRef, opts: RescalOptions, init: DistInit },
+    /// Distributed non-negative RESCAL (Alg 3) under the named model
+    /// family.
+    Factorize { data: DatasetRef, opts: RescalOptions, init: DistInit, model: ModelKind },
     /// RESCALk model-selection sweep (Alg 1).
     ModelSelect { data: DatasetRef, cfg: RescalkConfig },
     /// Cluster-scale replay through the calibrated machine model; runs on
@@ -628,8 +645,8 @@ impl Engine {
     /// Submit one typed job and gather its unified report.
     pub fn submit(&mut self, job: JobSpec) -> Result<Report> {
         match job {
-            JobSpec::Factorize { data, opts, init } => {
-                self.run_factorize(data, opts, init).map(Report::Factorize)
+            JobSpec::Factorize { data, opts, init, model } => {
+                self.run_factorize(data, opts, init, model).map(Report::Factorize)
             }
             JobSpec::ModelSelect { data, cfg } => {
                 self.run_model_select(data, cfg).map(Report::ModelSelect)
@@ -665,6 +682,7 @@ impl Engine {
             data: data.into(),
             opts: opts.clone(),
             init: DistInit::Random { seed },
+            model: self.cfg.model,
         })?;
         match report {
             Report::Factorize(r) => Ok(r),
@@ -762,6 +780,7 @@ impl Engine {
         data: DatasetRef,
         opts: RescalOptions,
         init: DistInit,
+        model: ModelKind,
     ) -> Result<RescalReport> {
         let handle = self.resolve(data)?;
         self.ensure_resident(handle.0)?;
@@ -770,7 +789,7 @@ impl Engine {
         let t0 = Instant::now();
         let outs = self
             .pool
-            .exchange(&pool::RankJob::Factorize { dataset: handle.0, n, opts, init })?;
+            .exchange(&pool::RankJob::Factorize { dataset: handle.0, n, opts, init, model })?;
         let wall_seconds = t0.elapsed().as_secs_f64();
         let mut blocks: Vec<(usize, usize, Mat)> = Vec::with_capacity(outs.len());
         let mut traces: Vec<Trace> = Vec::with_capacity(outs.len());
@@ -808,6 +827,7 @@ impl Engine {
             wall_seconds,
             workspace,
             transport_backend: self.pool.backend_name().to_string(),
+            model,
         })
     }
 
@@ -816,6 +836,14 @@ impl Engine {
         data: DatasetRef,
         cfg: RescalkConfig,
     ) -> Result<RescalkReport> {
+        if cfg.model != ModelKind::Rescal && matches!(cfg.init, InitStrategy::Nndsvd { .. }) {
+            bail!(
+                "NNDSVD initialization is defined for the Gaussian rescal family only; \
+                 use random init with --model {}",
+                cfg.model.as_str()
+            );
+        }
+        let model = cfg.model;
         let handle = self.resolve(data)?;
         self.ensure_resident(handle.0)?;
         let n = self.datasets[&handle.0].info.n;
@@ -866,6 +894,7 @@ impl Engine {
             wall_seconds,
             workspace,
             transport_backend: self.pool.backend_name().to_string(),
+            model,
         })
     }
 }

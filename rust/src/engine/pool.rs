@@ -31,7 +31,7 @@ use crate::err;
 use crate::error::Result;
 use crate::model_selection::{rescalk_rank, RescalkConfig, RescalkResult};
 use crate::rescal::distributed::{DistInit, DistRescalConfig};
-use crate::rescal::{rescal_rank, RankResult, RescalOptions};
+use crate::rescal::{rescal_rank, ModelKind, RankResult, RescalOptions};
 
 /// One job as seen by a single rank thread. Compute jobs name their data
 /// by registry id; the tile itself is already resident from a prior
@@ -42,8 +42,9 @@ pub(crate) enum RankJob {
     LoadDataset { id: u64, spec: Arc<DatasetSpec>, n: usize },
     /// Drop this rank's tile of a dataset.
     UnloadDataset { id: u64 },
-    /// Distributed RESCAL (Alg 3) on this rank's resident tile.
-    Factorize { dataset: u64, n: usize, opts: RescalOptions, init: DistInit },
+    /// Distributed RESCAL (Alg 3) on this rank's resident tile, under
+    /// the given model family's update rule.
+    Factorize { dataset: u64, n: usize, opts: RescalOptions, init: DistInit, model: ModelKind },
     /// Full RESCALk model-selection sweep (Alg 1) on the resident tile.
     ModelSelect { dataset: u64, n: usize, cfg: RescalkConfig },
     /// Health probe: reply with the worker's thread id (no collectives).
@@ -272,11 +273,11 @@ impl RankState {
                 self.datasets.remove(&id);
                 RankOut::Unloaded
             }
-            RankJob::Factorize { dataset, n, opts, init } => {
+            RankJob::Factorize { dataset, n, opts, init, model } => {
                 match self.datasets.get(&dataset) {
                     None => RankOut::JobError(format!("dataset {dataset} is not resident")),
                     Some(tile) => {
-                        let cfg = DistRescalConfig { opts, init, n };
+                        let cfg = DistRescalConfig { opts, init, n, model };
                         match rescal_rank(
                             &self.ctx,
                             tile,

@@ -15,6 +15,7 @@ use crate::err;
 use crate::error::Result;
 use crate::json::Json;
 use crate::model_selection::KScore;
+use crate::rescal::ModelKind;
 use crate::simulate::exascale::ExascaleRun;
 use crate::tensor::{Mat, Tensor3};
 
@@ -107,6 +108,7 @@ impl Report {
                     "transport".to_string(),
                     transport_to_json(&r.transport_backend, &r.traces),
                 );
+                obj.insert("model".to_string(), Json::Str(r.model.as_str().to_string()));
             }
             Report::ModelSelect(r) => {
                 obj.insert("k_opt".to_string(), Json::Num(r.k_opt as f64));
@@ -123,6 +125,7 @@ impl Report {
                     "transport".to_string(),
                     transport_to_json(&r.transport_backend, &r.traces),
                 );
+                obj.insert("model".to_string(), Json::Str(r.model.as_str().to_string()));
             }
             Report::Simulate(r) => {
                 obj.insert("scenario".to_string(), Json::Str(r.scenario.clone()));
@@ -155,6 +158,7 @@ impl Report {
                 wall_seconds: get_f64(v, "wall_seconds")?,
                 workspace: workspace_from_json(v.get("workspace")),
                 transport_backend: transport_backend_from_json(v),
+                model: model_from_json(v)?,
             })),
             "model_select" => {
                 let scores = v
@@ -175,6 +179,7 @@ impl Report {
                     wall_seconds: get_f64(v, "wall_seconds")?,
                     workspace: workspace_from_json(v.get("workspace")),
                     transport_backend: transport_backend_from_json(v),
+                    model: model_from_json(v)?,
                 }))
             }
             "simulate" => {
@@ -296,6 +301,16 @@ fn transport_to_json(backend: &str, traces: &[Trace]) -> Json {
         ),
     );
     Json::Obj(obj)
+}
+
+/// Archived pre-model-family reports have no `model` field; those jobs
+/// all ran the Gaussian RESCAL rule. A present-but-unknown name is a
+/// typed error, not a silent default.
+pub(crate) fn model_from_json(v: &Json) -> Result<ModelKind> {
+    match v.get("model").and_then(|m| m.as_str()) {
+        Some(name) => ModelKind::parse(name),
+        None => Ok(ModelKind::Rescal),
+    }
 }
 
 /// Archived pre-transport-plane reports have no `transport` section;

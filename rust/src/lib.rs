@@ -41,6 +41,29 @@
 //!   top-k link-prediction queries from the reloaded artifact (the read
 //!   path that mirrors the engine's write path — see [`serve`]).
 //!
+//! ## The model-family axis
+//!
+//! The per-relation update math is a [`rescal::model::Model`] trait
+//! behind the shared distributed loop ([`rescal::distributed::rescal_rank`]
+//! owns the collectives, normalization, and convergence checks; the
+//! family supplies one `slice_update`). Three families ship, selected by
+//! [`rescal::ModelKind`] (`--model` on the CLI,
+//! [`engine::EngineConfig::with_model`] in the API):
+//!
+//! * `rescal` (default) — the paper's Gaussian rule with dense `k×k`
+//!   cores;
+//! * `distmult` — diagonal cores persisted as `1×k` vectors; the core
+//!   update collapses to `O(k²)` per slice and serving scores without
+//!   ever densifying a core;
+//! * `logistic` — Bernoulli likelihood whose MU denominators use the
+//!   sigmoid reconstruction `σ(A R_t Aᵀ)`; served scores are
+//!   probabilities.
+//!
+//! Reports and exported artifacts are stamped with the family
+//! (pre-family artifacts load as `rescal`), and serving under the wrong
+//! family is a typed mismatch error
+//! ([`serve::FactorModel::ensure_model`]).
+//!
 //! The persistent pool and resident dataset tiles are what make
 //! repeated-job workloads (k sweeps, perturbation ensembles, bench loops)
 //! fast: no per-job thread spawn, no backend or XLA executable-cache

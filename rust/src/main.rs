@@ -39,11 +39,11 @@ use drescal::config::{
 };
 use drescal::coordinator::metrics::RunMetrics;
 use drescal::data::synthetic::SyntheticSpec;
-use drescal::engine::{Engine, EngineConfig, Report, SimScenario, SimSpec};
+use drescal::engine::{Engine, EngineConfig, JobSpec, Report, SimScenario, SimSpec};
 use drescal::error::{Context as _, Result};
 use drescal::json::Json;
 use drescal::model_selection::RescalkConfig;
-use drescal::rescal::RescalOptions;
+use drescal::rescal::{DistInit, ModelKind, RescalOptions};
 use drescal::serve::{Answer, FactorModel, Query, QueryEngine};
 use drescal::simulate::Machine;
 
@@ -93,6 +93,7 @@ SUBCOMMANDS
                   --p P              virtual ranks, perfect square (4)
                   --k K              rank of the factorization (4)
                   --iters N          MU iterations (200)
+                  --model rescal|distmult|logistic   model family (rescal)
                   --backend native|xla  [--artifacts DIR]
                   --cache-bytes B    resident-tile budget, LRU-evicted (0 = off)
                   --seed S  --trace  --json
@@ -102,15 +103,18 @@ SUBCOMMANDS
                   --listen ADDR (127.0.0.1:0)  --port-file FILE
                   --comm-timeout-ms MS (10000)  --max-replacements K (1)
                   --data synthetic|blocks|nations|trade|file:<manifest>
-                  --n --m --k-true --density --k --iters --seed --trace --json
+                  --n --m --k-true --density --k --iters --model --seed
+                  --trace --json
   worker        join a train leader and serve rank jobs until shutdown
                   --connect ADDR
   model-select  RESCALk sweep with automatic k determination
                   (run flags plus) --k-min --k-max --perturbations --delta
                   --tol --err-every --regress-iters
+                  (--model family needs random init; NNDSVD is rescal-only)
   export        train, then persist the factors as a servable model
                   (run flags; --sweep adds the model-select flags and
                   exports the k_opt model)  --model FILE (model.json)
+                  --family rescal|distmult|logistic   model family (rescal)
   ingest        triples -> binary tile shards + manifest (see --data file:)
                   --input FILE   subject<TAB>relation<TAB>object[<TAB>weight]
                   --out DIR (corpus)  --grid G (1; GxG shards)
@@ -118,6 +122,8 @@ SUBCOMMANDS
                   --json
   query         answer a link-prediction query from a saved model
                   --model FILE  --r REL  --top K (5)  --json
+                  --family rescal|distmult|logistic   assert the artifact's
+                  training family (typed mismatch error otherwise)
                   --s S --o O = score   --s S = (s,r,?)   --o O = (?,r,o)
                   anchors/--r take indices or names (ingested corpora
                   carry interned dictionaries into exported models)
@@ -128,10 +134,11 @@ SUBCOMMANDS
                   --machine cpu|gpu|calibrated
   artifacts     list the AOT artifact manifest [--artifacts DIR]
   bench         fixed-shape perf harness; emits machine-readable JSON
+                  (covers all three model families at one equal shape)
                   --iters N (10; 1 = smoke)  --out FILE (BENCH_rescal.json)
                   --baseline FILE (prev out)  --max-regression X (0 = off)
                   --gate-floor SECS (0.01; smaller walls are not gated)
-                  --p P  --backend native|xla  --trace
+                  --p P  --model M  --backend native|xla  --trace
   help          this text
 
 Flags may also come from --config FILE (JSON object; CLI wins).
@@ -146,11 +153,12 @@ fn cmd_run(cmd: FactorizeCmd) -> Result<()> {
     let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.seed)?)?;
     let info = engine.dataset_info(data).expect("dataset just registered");
     println!(
-        "distributed RESCAL: n={} m={} k={} p={} backend={:?}{}",
+        "distributed RESCAL: n={} m={} k={} p={} model={} backend={:?}{}",
         info.n,
         info.m,
         cmd.opts.k,
         engine.config().p,
+        engine.config().model.as_str(),
         engine.config().backend,
         if info.sparse { " (sparse tiles)" } else { "" }
     );
@@ -208,11 +216,12 @@ fn cmd_train(cmd: TrainCmd) -> Result<()> {
     let data = engine.load_dataset(cmd.data.to_dataset_spec(cmd.seed)?)?;
     let info = engine.dataset_info(data).expect("dataset just registered");
     println!(
-        "cluster RESCAL: n={} m={} k={} p={} transport=tcp{}",
+        "cluster RESCAL: n={} m={} k={} p={} model={} transport=tcp{}",
         info.n,
         info.m,
         cmd.opts.k,
         engine.config().p,
+        engine.config().model.as_str(),
         if info.sparse { " (sparse tiles)" } else { "" }
     );
     let report = engine.factorize(data, &cmd.opts, cmd.seed)?;
@@ -364,6 +373,26 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
     let sparse = engine.load_dataset(SyntheticSpec::sparse(64, 3, 4, 0.05, 42))?;
     let report = engine.factorize(sparse, &RescalOptions::new(4, iters), 42)?;
     record("factorize_sparse_n64_m3_k4_d0.05", report.wall_seconds);
+
+    // model families at one equal shape on the 2×2 grid: the paper's
+    // Gaussian rule as the reference row, diagonal-core distmult (whose
+    // O(k) core update must beat the dense k×k row), and Bernoulli
+    // logistic (which pays an extra sigmoid reconstruction per sweep).
+    // All three ride the --max-regression gate like every other row.
+    let family_data = engine.load_dataset(SyntheticSpec::dense(128, 3, 8, 44))?;
+    for kind in [ModelKind::Rescal, ModelKind::DistMult, ModelKind::Logistic] {
+        let report = match engine.submit(JobSpec::Factorize {
+            data: (&family_data).into(),
+            opts: RescalOptions::new(32, iters),
+            init: DistInit::Random { seed: 44 },
+            model: kind,
+        })? {
+            Report::Factorize(r) => r,
+            _ => unreachable!("factorize jobs return factorize reports"),
+        };
+        record(&format!("factorize_{}_dense_g2", kind.as_str()), report.wall_seconds);
+    }
+    engine.unload_dataset(family_data)?;
 
     // model-select, dense and sparse, small sweep
     let sweep = RescalkConfig {
@@ -658,12 +687,19 @@ fn cmd_export(cmd: ExportCmd) -> Result<()> {
 /// Load a persisted model and answer one link-prediction query.
 fn cmd_query(cmd: QueryCmd) -> Result<()> {
     let model = FactorModel::load(&cmd.model)?;
+    // `--family` pins the expected training family: a warm-start or
+    // scoring pipeline built for one family must not silently consume an
+    // artifact trained under another
+    if let Some(family) = cmd.family {
+        model.ensure_model(family)?;
+    }
     println!(
-        "model {}: n={} m={} k={} (from {} job{})",
+        "model {}: n={} m={} k={} family={} (from {} job{})",
         cmd.model,
         model.n(),
         model.m(),
         model.k(),
+        model.model().as_str(),
         model.provenance().job,
         if model.provenance().rel_error >= 0.0 {
             format!(", train rel_error {:.4}", model.provenance().rel_error)

@@ -10,18 +10,22 @@ use crate::backend::Backend;
 use crate::comm::grid::RankCtx;
 use crate::comm::{CommOp, CommResult, Trace};
 use crate::rescal::distmm::{broadcast_mat, dist_mm};
-use crate::rescal::LocalTile;
+use crate::rescal::model::sigmoid;
+use crate::rescal::{LocalTile, ModelKind};
 use crate::tensor::ops::{mu_update, MU_EPS};
 use crate::tensor::{Mat, Tensor3};
 
 /// Given this rank's median row block `a_row` (replicated across its grid
 /// row), derive `a_col` by diagonal broadcast and run `iters` R-update
-/// sweeps on the unperturbed tile. Returns the replicated core R.
+/// sweeps of the given model family on the unperturbed tile. Returns the
+/// replicated core R (k×k slices, or 1×k for the diagonal family).
+#[allow(clippy::too_many_arguments)]
 pub fn regress_r_rank(
     ctx: &RankCtx,
     tile: &LocalTile,
     a_row: &Mat,
     iters: usize,
+    model: ModelKind,
     backend: &mut dyn Backend,
     trace: &mut Trace,
 ) -> CommResult<(Tensor3, Mat)> {
@@ -40,16 +44,59 @@ pub fn regress_r_rank(
     let ata_partial = trace.record(CommOp::GramMul, 0, || backend.gram(&a_col));
     let ata = dist_mm(&ctx.row_comm, ata_partial, CommOp::RowReduce, trace)?;
 
-    let mut r = Tensor3::from_slices((0..m).map(|_| Mat::full(k, k, 0.5)).collect());
+    let core_rows = model.core_rows(k);
+    let mut r =
+        Tensor3::from_slices((0..m).map(|_| Mat::full(core_rows, k, 0.5)).collect());
     for t in 0..m {
         let xa_partial = tile.xa(t, &a_col, backend, trace);
         let xa = dist_mm(&ctx.row_comm, xa_partial, CommOp::RowReduce, trace)?;
         let atxa_partial = trace.record(CommOp::MatrixMul, 0, || backend.t_matmul(a_row, &xa));
         let atxa = dist_mm(&ctx.col_comm, atxa_partial, CommOp::ColumnReduce, trace)?;
-        for _ in 0..iters {
-            let rata = trace.record(CommOp::MatrixMul, 0, || backend.matmul(r.slice(t), &ata));
-            let deno = trace.record(CommOp::MatrixMul, 0, || backend.matmul(&ata, &rata));
-            mu_update(r.slice_mut(t), &atxa, &deno, MU_EPS);
+        match model {
+            ModelKind::Rescal => {
+                for _ in 0..iters {
+                    let rata =
+                        trace.record(CommOp::MatrixMul, 0, || backend.matmul(r.slice(t), &ata));
+                    let deno = trace.record(CommOp::MatrixMul, 0, || backend.matmul(&ata, &rata));
+                    mu_update(r.slice_mut(t), &atxa, &deno, MU_EPS);
+                }
+            }
+            ModelKind::DistMult => {
+                // diagonal core: numerator diag(AᵀXA) is fixed across
+                // sweeps; denominator d·(G∘G) refreshes per sweep
+                let mut num_d = Mat::zeros(1, k);
+                for j in 0..k {
+                    num_d[(0, j)] = atxa[(j, j)];
+                }
+                let mut gg = ata.clone();
+                gg.hadamard_assign(&ata);
+                for _ in 0..iters {
+                    let deno =
+                        trace.record(CommOp::MatrixMul, 0, || backend.matmul(r.slice(t), &gg));
+                    mu_update(r.slice_mut(t), &num_d, &deno, MU_EPS);
+                }
+            }
+            ModelKind::Logistic => {
+                // the denominator Aᵀσ(AR_tAᵀ)A depends on R_t, so each
+                // sweep rebuilds the local sigmoid reconstruction tile and
+                // reduces S·A / AᵀSA like the training loop does
+                for _ in 0..iters {
+                    let ar =
+                        trace.record(CommOp::MatrixMul, 0, || backend.matmul(a_row, r.slice(t)));
+                    let mut s =
+                        trace.record(CommOp::MatrixMul, 0, || backend.matmul_t(&ar, &a_col));
+                    for v in s.as_mut_slice() {
+                        *v = sigmoid(*v);
+                    }
+                    let sa_partial =
+                        trace.record(CommOp::MatrixMul, 0, || backend.matmul(&s, &a_col));
+                    let sa = dist_mm(&ctx.row_comm, sa_partial, CommOp::RowReduce, trace)?;
+                    let atsa_partial =
+                        trace.record(CommOp::MatrixMul, 0, || backend.t_matmul(a_row, &sa));
+                    let atsa = dist_mm(&ctx.col_comm, atsa_partial, CommOp::ColumnReduce, trace)?;
+                    mu_update(r.slice_mut(t), &atxa, &atsa, MU_EPS);
+                }
+            }
         }
     }
     Ok((r, a_col))
@@ -76,8 +123,10 @@ mod tests {
             let a_row = Mat::from_fn(r1 - r0, 2, |i, j| a_true[(r0 + i, j)]);
             let mut backend = NativeBackend::new();
             let mut trace = Trace::new();
-            let (r, _a_col) =
-                regress_r_rank(&ctx, &tile, &a_row, 60, &mut backend, &mut trace).unwrap();
+            let (r, _a_col) = regress_r_rank(
+                &ctx, &tile, &a_row, 60, ModelKind::Rescal, &mut backend, &mut trace,
+            )
+            .unwrap();
             r
         });
         // all ranks agree on the replicated R

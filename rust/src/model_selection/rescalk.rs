@@ -11,7 +11,7 @@ use crate::backend::{Backend, Workspace, WorkspaceStats};
 use crate::comm::grid::RankCtx;
 use crate::comm::{CommResult, Trace};
 use crate::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
-use crate::rescal::{LocalTile, RescalOptions};
+use crate::rescal::{LocalTile, ModelKind, RescalOptions};
 use crate::tensor::{Mat, Tensor3};
 
 use super::clustering::custom_cluster_rank;
@@ -66,6 +66,10 @@ pub struct RescalkConfig {
     pub rule: SelectionRule,
     /// Factor initialization strategy.
     pub init: InitStrategy,
+    /// Model family every factorization (and the core regression) runs
+    /// under. NNDSVD initialization is Gaussian-only; the engine rejects
+    /// the combination before any rank sees it.
+    pub model: ModelKind,
 }
 
 impl Default for RescalkConfig {
@@ -82,6 +86,7 @@ impl Default for RescalkConfig {
             seed: 42,
             rule: SelectionRule::default(),
             init: InitStrategy::Random,
+            model: ModelKind::Rescal,
         }
     }
 }
@@ -174,6 +179,7 @@ pub fn rescalk_rank(
                     .with_tol(cfg.tol, if cfg.tol > 0.0 { cfg.err_every.max(1) } else { 0 }),
                 init,
                 n,
+                model: cfg.model,
             };
             let out = rescal_rank(ctx, &perturbed, &dist_cfg, backend, ws, trace)?;
             stack.push(out.a_row);
@@ -183,10 +189,12 @@ pub fn rescalk_rank(
         // ---- cluster stability (line 8, Alg 6) ----
         let sil = silhouette_rank(&ctx.col_comm, &clustered.aligned, trace)?;
         // ---- robust core + reconstruction error (lines 7, 9, 10) ----
-        let (r_reg, a_col) =
-            regress_r_rank(ctx, tile, &clustered.median, cfg.regress_iters, backend, trace)?;
-        let rel_error =
-            rel_error_rank(ctx, tile, &clustered.median, &a_col, &r_reg, backend, trace)?;
+        let (r_reg, a_col) = regress_r_rank(
+            ctx, tile, &clustered.median, cfg.regress_iters, cfg.model, backend, trace,
+        )?;
+        let rel_error = rel_error_rank(
+            ctx, tile, &clustered.median, &a_col, &r_reg, cfg.model, backend, trace,
+        )?;
         scores.push(KScore { k, sil_min: sil.min, sil_avg: sil.avg, rel_error });
         per_k.push((clustered.median, r_reg));
     }
@@ -196,21 +204,22 @@ pub fn rescalk_rank(
     Ok(RescalkResult { scores, k_opt, a_opt_row, r_opt, workspace: ws.stats().since(ws_before) })
 }
 
-/// Distributed relative reconstruction error for explicit factors.
+/// Distributed relative reconstruction error for explicit factors,
+/// against the model family's reconstruction.
+#[allow(clippy::too_many_arguments)]
 fn rel_error_rank(
     ctx: &RankCtx,
     tile: &LocalTile,
     a_row: &Mat,
     a_col: &Mat,
     r: &Tensor3,
+    model: ModelKind,
     backend: &mut dyn Backend,
     trace: &mut Trace,
 ) -> CommResult<f32> {
-    use crate::comm::CommOp;
     let mut local = 0.0f64;
     for t in 0..tile.m() {
-        let ar = trace.record(CommOp::MatrixMul, 0, || backend.matmul(a_row, r.slice(t)));
-        local += tile.residual_sq(t, &ar, a_col);
+        local += model.slice_residual_sq(tile, t, a_row, r.slice(t), a_col, backend, trace);
     }
     let mut buf = vec![local as f32, tile.norm_sq() as f32];
     ctx.world.all_reduce_sum(&mut buf)?;
@@ -242,6 +251,7 @@ mod tests {
             seed: 1,
             rule: SelectionRule::default(),
             init: InitStrategy::Random,
+            model: ModelKind::Rescal,
         };
         let results = run_on_grid(4, |ctx| {
             let (r0, r1) = ctx.grid.chunk(24, ctx.row);
@@ -280,6 +290,7 @@ mod tests {
             seed: 2,
             rule: SelectionRule::default(),
             init: InitStrategy::Random,
+            model: ModelKind::Rescal,
         };
         let results = run_on_grid(1, |ctx| {
             let tile = LocalTile::Dense(x.clone());

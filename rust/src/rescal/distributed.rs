@@ -22,12 +22,13 @@ use std::sync::Arc;
 
 use super::distmm::{all_reduce_mat, broadcast_mat};
 use super::local::LocalTile;
+use super::model::{Model, ModelKind};
 use super::RescalOptions;
 use crate::backend::{Backend, Workspace, WorkspaceStats};
 use crate::comm::grid::RankCtx;
 use crate::comm::{CommOp, CommResult, Trace};
 use crate::rng::Rng;
-use crate::tensor::ops::{mu_update, rescale_core};
+use crate::tensor::ops::mu_update;
 use crate::tensor::{Mat, Tensor3};
 
 /// Distributed factor initialization.
@@ -43,13 +44,16 @@ pub enum DistInit {
 }
 
 impl DistInit {
-    /// Materialize this rank's (A_row, A_col, R).
+    /// Materialize this rank's (A_row, A_col, R). The model family
+    /// decides the core slice shape: k×k for the dense families, 1×k
+    /// for DistMult.
     fn materialize(
         &self,
         ctx: &RankCtx,
         n: usize,
         k: usize,
         m: usize,
+        model: ModelKind,
     ) -> (Mat, Mat, Tensor3) {
         match self {
             DistInit::Random { seed } => {
@@ -61,13 +65,21 @@ impl DistInit {
                 let a_row = block(ctx.row);
                 let a_col = block(ctx.col);
                 let mut rng_r = Rng::for_rank(*seed, usize::MAX, 2);
+                let core_rows = model.core_rows(k);
                 let r = Tensor3::from_slices(
-                    (0..m).map(|_| Mat::random_uniform(k, k, 0.01, 1.0, &mut rng_r)).collect(),
+                    (0..m)
+                        .map(|_| Mat::random_uniform(core_rows, k, 0.01, 1.0, &mut rng_r))
+                        .collect(),
                 );
                 (a_row, a_col, r)
             }
             DistInit::Given(a, r) => {
                 assert_eq!(a.shape(), (n, k));
+                assert_eq!(
+                    (r.n1(), r.n2()),
+                    (model.core_rows(k), k),
+                    "given core slices do not match the model family's shape"
+                );
                 let block = |b: usize| {
                     let (s, e) = ctx.grid.chunk(n, b);
                     Mat::from_fn(e - s, k, |i, j| a[(s + i, j)])
@@ -84,6 +96,9 @@ pub struct DistRescalConfig {
     pub init: DistInit,
     /// Global entity count n (tiles are blocks of an n×n×m tensor).
     pub n: usize,
+    /// Which update rule runs in the slice segment (see
+    /// [`super::model`]).
+    pub model: ModelKind,
 }
 
 /// What each rank returns.
@@ -99,96 +114,6 @@ pub struct RankResult {
     /// `mat_allocs` is 0 on a warm rank — every temporary was arena
     /// reuse.
     pub workspace: WorkspaceStats,
-}
-
-/// The iteration temporaries of one factorization, all checked out of
-/// the per-rank [`Workspace`] **once** — the MU loop itself performs
-/// zero workspace checkouts, so steady-state iterations are
-/// allocation-free (and on a warm rank even these checkouts are arena
-/// reuses, which [`RankResult::workspace`] proves).
-struct IterBufs {
-    /// `AᵀA` (k×k, replicated).
-    ata: Mat,
-    /// `X_t·A` (rows×k).
-    xa: Mat,
-    /// `AᵀX_tA` (k×k).
-    atxa: Mat,
-    /// `R_t·AᵀA` (k×k).
-    rata: Mat,
-    /// `AᵀA·R_t·AᵀA` (k×k) — the R-update denominator.
-    deno_r: Mat,
-    /// `X_tA·R_tᵀ` (rows×k).
-    xart: Mat,
-    /// `A·R_t` (rows×k).
-    ar: Mat,
-    /// `AᵀA·R_t` (k×k).
-    atar: Mat,
-    /// `A·R_tᵀ` (rows×k).
-    art: Mat,
-    /// `A·R_tᵀ·AᵀA·R_t` (rows×k).
-    artatar: Mat,
-    /// `AᵀA·R_tᵀ` (k×k).
-    atart: Mat,
-    /// `A·R_t·AᵀA·R_tᵀ` (rows×k).
-    aratart: Mat,
-    /// A-update numerator accumulator (rows×k).
-    num_a: Mat,
-    /// A-update denominator accumulator (rows×k).
-    deno_a: Mat,
-    /// `X_tᵀ·AR` partial (cols×k).
-    xtar: Mat,
-    /// Diagonal-broadcast row block of XᵀAR (rows×k).
-    xtar_row: Mat,
-}
-
-impl IterBufs {
-    fn acquire(ws: &mut Workspace, rows: usize, cols: usize, k: usize) -> IterBufs {
-        IterBufs {
-            ata: ws.acquire(k, k),
-            xa: ws.acquire(rows, k),
-            atxa: ws.acquire(k, k),
-            rata: ws.acquire(k, k),
-            deno_r: ws.acquire(k, k),
-            xart: ws.acquire(rows, k),
-            ar: ws.acquire(rows, k),
-            atar: ws.acquire(k, k),
-            art: ws.acquire(rows, k),
-            artatar: ws.acquire(rows, k),
-            atart: ws.acquire(k, k),
-            aratart: ws.acquire(rows, k),
-            num_a: ws.acquire(rows, k),
-            deno_a: ws.acquire(rows, k),
-            xtar: ws.acquire(cols, k),
-            xtar_row: ws.acquire(rows, k),
-        }
-    }
-
-    fn release(self, ws: &mut Workspace) {
-        let IterBufs {
-            ata,
-            xa,
-            atxa,
-            rata,
-            deno_r,
-            xart,
-            ar,
-            atar,
-            art,
-            artatar,
-            atart,
-            aratart,
-            num_a,
-            deno_a,
-            xtar,
-            xtar_row,
-        } = self;
-        for m in [
-            ata, xa, atxa, rata, deno_r, xart, ar, atar, art, artatar, atart, aratart,
-            num_a, deno_a, xtar, xtar_row,
-        ] {
-            ws.release(m);
-        }
-    }
 }
 
 /// Run distributed RESCAL on this rank's tile. All ranks must call this
@@ -216,7 +141,8 @@ pub fn rescal_rank(
     let m = tile.m();
     let eps = cfg.opts.eps;
     let ws_before = ws.stats();
-    let (mut a_row, mut a_col, mut r) = cfg.init.materialize(ctx, n, k, m);
+    let mut model = cfg.model.build();
+    let (mut a_row, mut a_col, mut r) = cfg.init.materialize(ctx, n, k, m, cfg.model);
     assert_eq!(a_row.rows(), tile.rows(), "A_row/tile row mismatch");
     assert_eq!(a_col.rows(), tile.cols(), "A_col/tile col mismatch");
 
@@ -225,111 +151,56 @@ pub fn rescal_rank(
     ctx.world.all_reduce_sum(norm_buf.as_mut_slice())?;
     let x_norm_sq = norm_buf[(0, 0)] as f64;
 
+    // The slice-independent temporaries live here; the model family owns
+    // its slice-level ones. Everything is checked out of the per-rank
+    // [`Workspace`] **once** — the MU loop itself performs zero workspace
+    // checkouts, so steady-state iterations are allocation-free (and on a
+    // warm rank even these checkouts are arena reuses, which
+    // [`RankResult::workspace`] proves).
     let rows = a_row.rows();
     let cols = a_col.rows();
-    let mut bufs = IterBufs::acquire(ws, rows, cols, k);
+    let mut ata = ws.acquire(k, k);
+    let mut xa = ws.acquire(rows, k);
+    let mut num_a = ws.acquire(rows, k);
+    let mut deno_a = ws.acquire(rows, k);
+    model.acquire(ws, rows, cols, k);
 
     let mut iters_run = 0;
     for iter in 0..cfg.opts.max_iters {
         iters_run = iter + 1;
         // ---- AᵀA, replicated (Alg 3 line 3) ----
         trace.record(CommOp::GramMul, a_col.as_slice().len() * 4, || {
-            backend.gram_into(&a_col, &mut bufs.ata)
+            backend.gram_into(&a_col, &mut ata)
         });
-        all_reduce_mat(&ctx.row_comm, &mut bufs.ata, CommOp::RowReduce, trace)?;
+        all_reduce_mat(&ctx.row_comm, &mut ata, CommOp::RowReduce, trace)?;
 
-        bufs.num_a.clear();
-        bufs.deno_a.clear();
+        num_a.clear();
+        deno_a.clear();
         for t in 0..m {
             // ---- XA (Alg 3 line 5) ----
-            tile.xa_into(t, &a_col, &mut bufs.xa, backend, trace);
-            all_reduce_mat(&ctx.row_comm, &mut bufs.xa, CommOp::RowReduce, trace)?;
-            // ---- AᵀXA (line 6) ----
-            trace.record(CommOp::MatrixMul, 0, || {
-                backend.t_matmul_into(&a_row, &bufs.xa, &mut bufs.atxa)
-            });
-            all_reduce_mat(&ctx.col_comm, &mut bufs.atxa, CommOp::ColumnReduce, trace)?;
-            // ---- local slice segment: R update + A-update terms (lines
-            // 7-11, 15-19). One fused artifact on the XLA backend (§Perf);
-            // composed from write-into ops on the workspace otherwise. ----
-            let fused = trace.record(CommOp::MatrixMul, 0, || {
-                backend.slice_segment(r.slice(t), &bufs.ata, &bufs.atxa, &bufs.xa, &a_row)
-            });
-            // the fused arm owns its artifact-returned AR; the composed
-            // arm writes AR into the workspace buffer — either way the
-            // XᵀAR product below reads it without copying
-            let fused_ar = match fused {
-                Some((r_new, xart, ar, deno)) => {
-                    *r.slice_mut(t) = r_new;
-                    bufs.num_a.add_assign(&xart);
-                    bufs.deno_a.add_assign(&deno);
-                    Some(ar)
-                }
-                None => {
-                    // R update (lines 7-9), possibly via the smaller fused
-                    // r_update kernel
-                    let r_fused = trace.record(CommOp::MatrixMul, 0, || {
-                        backend.r_update_fused(r.slice(t), &bufs.ata, &bufs.atxa)
-                    });
-                    match r_fused {
-                        Some(new_rt) => *r.slice_mut(t) = new_rt,
-                        None => {
-                            trace.record(CommOp::MatrixMul, 0, || {
-                                backend.matmul_into(r.slice(t), &bufs.ata, &mut bufs.rata)
-                            });
-                            trace.record(CommOp::MatrixMul, 0, || {
-                                backend.matmul_into(&bufs.ata, &bufs.rata, &mut bufs.deno_r)
-                            });
-                            mu_update(r.slice_mut(t), &bufs.atxa, &bufs.deno_r, eps);
-                        }
-                    }
-                    let rt = r.slice(t);
-                    // A-update numerator terms (lines 10-11)
-                    trace.record(CommOp::MatrixMul, 0, || {
-                        backend.matmul_t_into(&bufs.xa, rt, &mut bufs.xart)
-                    });
-                    trace.record(CommOp::MatrixMul, 0, || {
-                        backend.matmul_into(&a_row, rt, &mut bufs.ar)
-                    });
-                    // A-update denominator (lines 15-20)
-                    trace.record(CommOp::MatrixMul, 0, || {
-                        backend.matmul_into(&bufs.ata, rt, &mut bufs.atar)
-                    });
-                    trace.record(CommOp::MatrixMul, 0, || {
-                        backend.matmul_t_into(&a_row, rt, &mut bufs.art)
-                    });
-                    trace.record(CommOp::MatrixMul, 0, || {
-                        backend.matmul_into(&bufs.art, &bufs.atar, &mut bufs.artatar)
-                    });
-                    trace.record(CommOp::MatrixMul, 0, || {
-                        backend.matmul_t_into(&bufs.ata, rt, &mut bufs.atart)
-                    });
-                    trace.record(CommOp::MatrixMul, 0, || {
-                        backend.matmul_into(&bufs.ar, &bufs.atart, &mut bufs.aratart)
-                    });
-                    bufs.num_a.add_assign(&bufs.xart);
-                    bufs.deno_a.add_assign(&bufs.artatar);
-                    bufs.deno_a.add_assign(&bufs.aratart);
-                    None
-                }
-            };
-            let ar = fused_ar.as_ref().unwrap_or(&bufs.ar);
-            // ---- XᵀAR: tile product + column reduce + diagonal row
-            // broadcast (lines 12-13) ----
-            tile.xta_into(t, ar, &mut bufs.xtar, backend, trace);
-            all_reduce_mat(&ctx.col_comm, &mut bufs.xtar, CommOp::ColumnReduce, trace)?;
-            // row broadcast from the diagonal rank: member index within the
-            // row comm equals the grid column, and the diagonal of row i is
-            // at column i. Off-diagonal ranks are pure receivers — the
-            // broadcast overwrites their buffer in place.
-            if ctx.is_diagonal() {
-                bufs.xtar_row.copy_from(&bufs.xtar);
-            }
-            broadcast_mat(&ctx.row_comm, ctx.row, &mut bufs.xtar_row, CommOp::RowBroadcast, trace)?;
-            bufs.num_a.add_assign(&bufs.xtar_row);
+            tile.xa_into(t, &a_col, &mut xa, backend, trace);
+            all_reduce_mat(&ctx.row_comm, &mut xa, CommOp::RowReduce, trace)?;
+            // ---- the model family's slice segment: R_t update +
+            // A-update numerator/denominator contributions (Alg 3 lines
+            // 6-19 for the Gaussian rule) ----
+            model.slice_update(
+                ctx,
+                tile,
+                t,
+                r.slice_mut(t),
+                &a_row,
+                &a_col,
+                &ata,
+                &xa,
+                &mut num_a,
+                &mut deno_a,
+                eps,
+                backend,
+                trace,
+            )?;
         }
         // ---- A update (line 22) ----
-        mu_update(&mut a_row, &bufs.num_a, &bufs.deno_a, eps);
+        mu_update(&mut a_row, &num_a, &deno_a, eps);
         // ---- refresh A^(j): column broadcast from the diagonal (line 23) ----
         if ctx.is_diagonal() {
             a_col.copy_from(&a_row);
@@ -338,13 +209,18 @@ pub fn rescal_rank(
 
         // optional convergence check
         if cfg.opts.err_every > 0 && (iter + 1) % cfg.opts.err_every == 0 {
-            let e = distributed_rel_error(ctx, tile, &a_row, &a_col, &r, x_norm_sq, backend, trace)?;
+            let e = distributed_rel_error(
+                ctx, tile, &a_row, &a_col, &r, x_norm_sq, cfg.model, backend, trace,
+            )?;
             if cfg.opts.tol > 0.0 && e < cfg.opts.tol {
                 break;
             }
         }
     }
-    bufs.release(ws);
+    model.release(ws);
+    for buf in [ata, xa, num_a, deno_a] {
+        ws.release(buf);
+    }
 
     // ---- final normalization: global column norms via column all_reduce ----
     let mut sq = Mat::from_vec(
@@ -370,14 +246,16 @@ pub fn rescal_rank(
         }
     }
     for t in 0..m {
-        rescale_core(r.slice_mut(t), &scales);
+        cfg.model.rescale_core_slice(r.slice_mut(t), &scales);
     }
     // refresh a_col one last time for the error evaluation
     if ctx.is_diagonal() {
         a_col.copy_from(&a_row);
     }
     broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col, CommOp::ColumnBroadcast, trace)?;
-    let rel = distributed_rel_error(ctx, tile, &a_row, &a_col, &r, x_norm_sq, backend, trace)?;
+    let rel = distributed_rel_error(
+        ctx, tile, &a_row, &a_col, &r, x_norm_sq, cfg.model, backend, trace,
+    )?;
     Ok(RankResult {
         a_row,
         r,
@@ -387,8 +265,9 @@ pub fn rescal_rank(
     })
 }
 
-/// ‖X − A R Aᵀ‖_F / ‖X‖_F computed from the local tiles (identical on all
-/// ranks after the world all_reduce).
+/// ‖X − X̂‖_F / ‖X‖_F against the model family's reconstruction X̂,
+/// computed from the local tiles (identical on all ranks after the world
+/// all_reduce).
 #[allow(clippy::too_many_arguments)]
 fn distributed_rel_error(
     ctx: &RankCtx,
@@ -397,13 +276,13 @@ fn distributed_rel_error(
     a_col: &Mat,
     r: &Tensor3,
     x_norm_sq: f64,
+    model: ModelKind,
     backend: &mut dyn Backend,
     trace: &mut Trace,
 ) -> CommResult<f32> {
     let mut local = 0.0f64;
     for t in 0..tile.m() {
-        let ar = trace.record(CommOp::MatrixMul, 0, || backend.matmul(a_row, r.slice(t)));
-        local += tile.residual_sq(t, &ar, a_col);
+        local += model.slice_residual_sq(tile, t, a_row, r.slice(t), a_col, backend, trace);
     }
     let mut buf = Mat::from_vec(1, 1, vec![local as f32]);
     all_reduce_mat(&ctx.world, &mut buf, CommOp::RowReduce, trace)?;
@@ -432,7 +311,12 @@ mod tests {
             let (r0, r1) = ctx.grid.chunk(n, ctx.row);
             let (c0, c1) = ctx.grid.chunk(n, ctx.col);
             let tile = LocalTile::Dense(x.tile(r0, r1, c0, c1));
-            let cfg = DistRescalConfig { opts: opts.clone(), init: init.clone(), n };
+            let cfg = DistRescalConfig {
+                opts: opts.clone(),
+                init: init.clone(),
+                n,
+                model: ModelKind::Rescal,
+            };
             let mut backend = NativeBackend::new();
             let mut ws = Workspace::new();
             let mut trace = Trace::disabled();
@@ -547,6 +431,7 @@ mod tests {
                     opts: opts.clone(),
                     init: DistInit::Random { seed: 5 },
                     n,
+                    model: ModelKind::Rescal,
                 };
                 let mut backend = NativeBackend::new();
                 let mut ws = Workspace::new();
@@ -577,6 +462,7 @@ mod tests {
                 opts: RescalOptions::new(2, 3),
                 init: DistInit::Random { seed: 1 },
                 n: 12,
+                model: ModelKind::Rescal,
             };
             let mut backend = NativeBackend::new();
             let mut ws = Workspace::new();

@@ -140,6 +140,20 @@ impl LocalTile {
     /// `ar` is the precomputed `A_row · R_t`.
     pub fn residual_sq(&self, t: usize, ar: &Mat, a_col: &Mat) -> f64 {
         let rec = ar.matmul_t(a_col); // rows × cols
+        self.residual_sq_against(t, &rec)
+    }
+
+    /// Squared Frobenius norm of `X_t − σ(A_row · R_t · A_colᵀ)` — the
+    /// logistic family's Brier-style reconstruction residual.
+    pub fn residual_sq_sigmoid(&self, t: usize, ar: &Mat, a_col: &Mat) -> f64 {
+        let mut rec = ar.matmul_t(a_col); // rows × cols
+        for v in rec.as_mut_slice() {
+            *v = crate::rescal::model::sigmoid(*v);
+        }
+        self.residual_sq_against(t, &rec)
+    }
+
+    fn residual_sq_against(&self, t: usize, rec: &Mat) -> f64 {
         match self {
             LocalTile::Dense(x) => {
                 let xt = x.slice(t);

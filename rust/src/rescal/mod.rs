@@ -1,15 +1,18 @@
 //! Non-negative RESCAL: sequential reference and the distributed
-//! 2D-grid multiplicative-update algorithm (paper Algorithms 2 & 3).
+//! 2D-grid multiplicative-update algorithm (paper Algorithms 2 & 3),
+//! with the per-slice MU rule pluggable per model family ([`model`]).
 
 pub mod distributed;
 pub mod distmm;
 pub mod init;
 pub mod local;
+pub mod model;
 pub mod seq;
 
 pub use distributed::{rescal_rank, DistRescalConfig, RankResult};
 pub use init::Init;
 pub use local::LocalTile;
+pub use model::{Model, ModelKind};
 pub use seq::{rescal_seq, SeqRescal};
 
 /// Shared convergence / iteration settings.

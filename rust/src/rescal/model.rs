@@ -1,0 +1,797 @@
+//! The model-family plane: per-relation MU update rules behind one trait.
+//!
+//! The distributed loop in [`super::distributed::rescal_rank`] is the
+//! same for every model family — tile ownership, the `AᵀA` gram +
+//! row-reduce, the per-slice `X_tA` + row-reduce, the final A update and
+//! diagonal column broadcast, normalization, convergence checks. What
+//! differs per family is the *per-slice* numerator/denominator assembly:
+//! which core shape `R_t` has, which GEMMs build the MU terms, and which
+//! reconstruction the residual is measured against. [`Model`] captures
+//! exactly that seam:
+//!
+//! * [`Rescal`] — the paper's Gaussian non-negative RESCAL
+//!   (`X_t ≈ A R_t Aᵀ`, dense k×k core). Its `slice_update` is the
+//!   pre-refactor body of `rescal_rank` moved verbatim, including the
+//!   XLA fused-segment fast paths, so `--model rescal` stays
+//!   bit-identical to the historical factor digests.
+//! * [`DistMult`] — diagonal `R_t` stored as a 1×k row vector
+//!   (DGL-KE's production workhorse): ~k× cheaper per-slice updates
+//!   because the k×k GEMM chain collapses to column scalings plus one
+//!   `rows×k · k×k` product, with the same row/col all-reduce pattern.
+//! * [`LogisticRescal`] — Bernoulli likelihood for 0/1 triples (Nickel
+//!   & Tresp's Logistic Tensor Factorization): the reconstruction is
+//!   `σ(A R_t Aᵀ)` and the MU denominators replace the Gaussian
+//!   `A R AᵀA …` chains with products against the sigmoid-activated
+//!   reconstruction.
+//!
+//! Each model owns its slice-level workspace buffers (checked out of
+//! the per-rank [`Workspace`] once per job, so the steady-state loop
+//! stays allocation-free) and its slice-level collectives — the column
+//! reduce of the core numerator and the diagonal row broadcast of the
+//! `X_tᵀ…` term. Replication is preserved by construction: every term
+//! entering an `R_t` update is all-reduced to the full product on every
+//! rank, so the core stays replicated under all three rules.
+
+use crate::backend::{Backend, Workspace};
+use crate::comm::grid::RankCtx;
+use crate::comm::{CommOp, CommResult, Trace};
+use crate::err;
+use crate::error::Result;
+use crate::tensor::ops::{mu_update, rescale_core};
+use crate::tensor::Mat;
+
+use super::distmm::{all_reduce_mat, broadcast_mat};
+use super::local::LocalTile;
+
+/// Which model family a factorization runs. Defaults to the paper's
+/// Gaussian non-negative RESCAL.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Gaussian non-negative RESCAL: `X_t ≈ A R_t Aᵀ`, dense k×k core.
+    #[default]
+    Rescal,
+    /// Diagonal core (`R_t = diag(d_t)`, stored 1×k): ~k× cheaper
+    /// updates, compact artifacts, elementwise serving.
+    DistMult,
+    /// Bernoulli likelihood for 0/1 triples: `P(x=1) = σ(A R_t Aᵀ)`.
+    Logistic,
+}
+
+impl ModelKind {
+    /// Stable string form, used on the CLI and in JSON artifacts.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::Rescal => "rescal",
+            ModelKind::DistMult => "distmult",
+            ModelKind::Logistic => "logistic",
+        }
+    }
+
+    /// Parse the CLI/JSON string form.
+    pub fn parse(s: &str) -> Result<ModelKind> {
+        match s {
+            "rescal" => Ok(ModelKind::Rescal),
+            "distmult" => Ok(ModelKind::DistMult),
+            "logistic" => Ok(ModelKind::Logistic),
+            other => Err(err!(
+                "unknown model family '{other}' (expected rescal, distmult, or logistic)"
+            )),
+        }
+    }
+
+    /// Row count of one core slice `R_t` at rank k: k×k for the dense
+    /// families, 1×k for the diagonal one.
+    pub fn core_rows(&self, k: usize) -> usize {
+        match self {
+            ModelKind::DistMult => 1,
+            _ => k,
+        }
+    }
+
+    /// Instantiate the update rule (buffers unacquired until
+    /// [`Model::acquire`]).
+    pub fn build(&self) -> Box<dyn Model> {
+        match self {
+            ModelKind::Rescal => Box::new(Rescal::new()),
+            ModelKind::DistMult => Box::new(DistMult::new()),
+            ModelKind::Logistic => Box::new(LogisticRescal::new()),
+        }
+    }
+
+    /// Fold the column-normalization scales of A into one core slice:
+    /// `R_t ← S R_t S` for the dense families, `d_j ← d_j s_j²` for the
+    /// diagonal one (both keep the reconstruction invariant).
+    pub fn rescale_core_slice(&self, r_t: &mut Mat, scales: &[f32]) {
+        match self {
+            ModelKind::DistMult => {
+                assert_eq!(r_t.rows(), 1);
+                assert_eq!(r_t.cols(), scales.len());
+                for (j, &s) in scales.iter().enumerate() {
+                    r_t[(0, j)] *= s * s;
+                }
+            }
+            _ => rescale_core(r_t, scales),
+        }
+    }
+
+    /// Squared Frobenius residual of slice t of the local tile against
+    /// this family's reconstruction. Shared by the training convergence
+    /// check and the model-selection scorer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn slice_residual_sq(
+        &self,
+        tile: &LocalTile,
+        t: usize,
+        a_row: &Mat,
+        r_t: &Mat,
+        a_col: &Mat,
+        backend: &mut dyn Backend,
+        trace: &mut Trace,
+    ) -> f64 {
+        match self {
+            ModelKind::Rescal => {
+                let ar = trace.record(CommOp::MatrixMul, 0, || backend.matmul(a_row, r_t));
+                tile.residual_sq(t, &ar, a_col)
+            }
+            ModelKind::DistMult => {
+                let ar = trace.record(CommOp::MatrixMul, 0, || {
+                    let mut out = Mat::zeros(a_row.rows(), a_row.cols());
+                    scale_cols_into(a_row, r_t.row(0), &mut out);
+                    out
+                });
+                tile.residual_sq(t, &ar, a_col)
+            }
+            ModelKind::Logistic => {
+                let ar = trace.record(CommOp::MatrixMul, 0, || backend.matmul(a_row, r_t));
+                tile.residual_sq_sigmoid(t, &ar, a_col)
+            }
+        }
+    }
+}
+
+/// One model family's per-slice MU update rule. Implementations own
+/// their slice-level workspace buffers and slice-level collectives; the
+/// shared loop in `rescal_rank` owns everything slice-independent.
+pub trait Model {
+    fn kind(&self) -> ModelKind;
+
+    /// Check this model's slice-level temporaries out of the rank's
+    /// workspace, once per job, before the MU loop.
+    fn acquire(&mut self, ws: &mut Workspace, rows: usize, cols: usize, k: usize);
+
+    /// Return the temporaries to the arena after the loop.
+    fn release(&mut self, ws: &mut Workspace);
+
+    /// One slice's MU work: update `r_t` in place (replicated — every
+    /// input to the update is all-reduced to the full product first) and
+    /// accumulate this slice's numerator/denominator contributions for
+    /// the A update. `xa` already holds the row-reduced full `X_t·A`
+    /// rows for this rank's row block; `ata` the replicated `AᵀA`.
+    #[allow(clippy::too_many_arguments)]
+    fn slice_update(
+        &mut self,
+        ctx: &RankCtx,
+        tile: &LocalTile,
+        t: usize,
+        r_t: &mut Mat,
+        a_row: &Mat,
+        a_col: &Mat,
+        ata: &Mat,
+        xa: &Mat,
+        num_a: &mut Mat,
+        deno_a: &mut Mat,
+        eps: f32,
+        backend: &mut dyn Backend,
+        trace: &mut Trace,
+    ) -> CommResult<()>;
+}
+
+/// Numerically stable-enough logistic function for f32 scores.
+pub(crate) fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// `out[i, j] = src[i, j] * d[j]` — the diagonal-core replacement for a
+/// dense `· R_t` GEMM.
+pub(crate) fn scale_cols_into(src: &Mat, d: &[f32], out: &mut Mat) {
+    let (rows, cols) = src.shape();
+    assert_eq!(out.shape(), (rows, cols));
+    assert_eq!(d.len(), cols);
+    for i in 0..rows {
+        let s = src.row(i);
+        let o = out.row_mut(i);
+        for j in 0..cols {
+            o[j] = s[j] * d[j];
+        }
+    }
+}
+
+fn sigmoid_in_place(m: &mut Mat) {
+    for v in m.as_mut_slice() {
+        *v = sigmoid(*v);
+    }
+}
+
+fn empty() -> Mat {
+    Mat::zeros(0, 0)
+}
+
+// ---------------------------------------------------------------------
+// Gaussian non-negative RESCAL (the paper's Algorithm 3 slice segment)
+// ---------------------------------------------------------------------
+
+/// The paper's Gaussian rule. The buffer set and the `slice_update`
+/// body are the pre-refactor `IterBufs`/`rescal_rank` slice segment
+/// moved here unchanged — op order, fused-artifact branches, and trace
+/// charging included — so this family is bit-identical to the historical
+/// implementation.
+pub struct Rescal {
+    /// `AᵀX_tA` (k×k).
+    atxa: Mat,
+    /// `R_t·AᵀA` (k×k).
+    rata: Mat,
+    /// `AᵀA·R_t·AᵀA` (k×k) — the R-update denominator.
+    deno_r: Mat,
+    /// `X_tA·R_tᵀ` (rows×k).
+    xart: Mat,
+    /// `A·R_t` (rows×k).
+    ar: Mat,
+    /// `AᵀA·R_t` (k×k).
+    atar: Mat,
+    /// `A·R_tᵀ` (rows×k).
+    art: Mat,
+    /// `A·R_tᵀ·AᵀA·R_t` (rows×k).
+    artatar: Mat,
+    /// `AᵀA·R_tᵀ` (k×k).
+    atart: Mat,
+    /// `A·R_t·AᵀA·R_tᵀ` (rows×k).
+    aratart: Mat,
+    /// `X_tᵀ·AR` partial (cols×k).
+    xtar: Mat,
+    /// Diagonal-broadcast row block of XᵀAR (rows×k).
+    xtar_row: Mat,
+}
+
+impl Rescal {
+    pub fn new() -> Rescal {
+        Rescal {
+            atxa: empty(),
+            rata: empty(),
+            deno_r: empty(),
+            xart: empty(),
+            ar: empty(),
+            atar: empty(),
+            art: empty(),
+            artatar: empty(),
+            atart: empty(),
+            aratart: empty(),
+            xtar: empty(),
+            xtar_row: empty(),
+        }
+    }
+}
+
+impl Default for Rescal {
+    fn default() -> Self {
+        Rescal::new()
+    }
+}
+
+impl Model for Rescal {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Rescal
+    }
+
+    fn acquire(&mut self, ws: &mut Workspace, rows: usize, cols: usize, k: usize) {
+        self.atxa = ws.acquire(k, k);
+        self.rata = ws.acquire(k, k);
+        self.deno_r = ws.acquire(k, k);
+        self.xart = ws.acquire(rows, k);
+        self.ar = ws.acquire(rows, k);
+        self.atar = ws.acquire(k, k);
+        self.art = ws.acquire(rows, k);
+        self.artatar = ws.acquire(rows, k);
+        self.atart = ws.acquire(k, k);
+        self.aratart = ws.acquire(rows, k);
+        self.xtar = ws.acquire(cols, k);
+        self.xtar_row = ws.acquire(rows, k);
+    }
+
+    fn release(&mut self, ws: &mut Workspace) {
+        for m in [
+            std::mem::replace(&mut self.atxa, empty()),
+            std::mem::replace(&mut self.rata, empty()),
+            std::mem::replace(&mut self.deno_r, empty()),
+            std::mem::replace(&mut self.xart, empty()),
+            std::mem::replace(&mut self.ar, empty()),
+            std::mem::replace(&mut self.atar, empty()),
+            std::mem::replace(&mut self.art, empty()),
+            std::mem::replace(&mut self.artatar, empty()),
+            std::mem::replace(&mut self.atart, empty()),
+            std::mem::replace(&mut self.aratart, empty()),
+            std::mem::replace(&mut self.xtar, empty()),
+            std::mem::replace(&mut self.xtar_row, empty()),
+        ] {
+            ws.release(m);
+        }
+    }
+
+    fn slice_update(
+        &mut self,
+        ctx: &RankCtx,
+        tile: &LocalTile,
+        t: usize,
+        r_t: &mut Mat,
+        a_row: &Mat,
+        _a_col: &Mat,
+        ata: &Mat,
+        xa: &Mat,
+        num_a: &mut Mat,
+        deno_a: &mut Mat,
+        eps: f32,
+        backend: &mut dyn Backend,
+        trace: &mut Trace,
+    ) -> CommResult<()> {
+        // ---- AᵀXA (line 6) ----
+        trace.record(CommOp::MatrixMul, 0, || {
+            backend.t_matmul_into(a_row, xa, &mut self.atxa)
+        });
+        all_reduce_mat(&ctx.col_comm, &mut self.atxa, CommOp::ColumnReduce, trace)?;
+        // ---- local slice segment: R update + A-update terms (lines
+        // 7-11, 15-19). One fused artifact on the XLA backend (§Perf);
+        // composed from write-into ops on the workspace otherwise. ----
+        let fused = trace.record(CommOp::MatrixMul, 0, || {
+            backend.slice_segment(r_t, ata, &self.atxa, xa, a_row)
+        });
+        // the fused arm owns its artifact-returned AR; the composed
+        // arm writes AR into the workspace buffer — either way the
+        // XᵀAR product below reads it without copying
+        let fused_ar = match fused {
+            Some((r_new, xart, ar, deno)) => {
+                *r_t = r_new;
+                num_a.add_assign(&xart);
+                deno_a.add_assign(&deno);
+                Some(ar)
+            }
+            None => {
+                // R update (lines 7-9), possibly via the smaller fused
+                // r_update kernel
+                let r_fused = trace.record(CommOp::MatrixMul, 0, || {
+                    backend.r_update_fused(r_t, ata, &self.atxa)
+                });
+                match r_fused {
+                    Some(new_rt) => *r_t = new_rt,
+                    None => {
+                        trace.record(CommOp::MatrixMul, 0, || {
+                            backend.matmul_into(r_t, ata, &mut self.rata)
+                        });
+                        trace.record(CommOp::MatrixMul, 0, || {
+                            backend.matmul_into(ata, &self.rata, &mut self.deno_r)
+                        });
+                        mu_update(r_t, &self.atxa, &self.deno_r, eps);
+                    }
+                }
+                // A-update numerator terms (lines 10-11)
+                trace.record(CommOp::MatrixMul, 0, || {
+                    backend.matmul_t_into(xa, r_t, &mut self.xart)
+                });
+                trace.record(CommOp::MatrixMul, 0, || {
+                    backend.matmul_into(a_row, r_t, &mut self.ar)
+                });
+                // A-update denominator (lines 15-20)
+                trace.record(CommOp::MatrixMul, 0, || {
+                    backend.matmul_into(ata, r_t, &mut self.atar)
+                });
+                trace.record(CommOp::MatrixMul, 0, || {
+                    backend.matmul_t_into(a_row, r_t, &mut self.art)
+                });
+                trace.record(CommOp::MatrixMul, 0, || {
+                    backend.matmul_into(&self.art, &self.atar, &mut self.artatar)
+                });
+                trace.record(CommOp::MatrixMul, 0, || {
+                    backend.matmul_t_into(ata, r_t, &mut self.atart)
+                });
+                trace.record(CommOp::MatrixMul, 0, || {
+                    backend.matmul_into(&self.ar, &self.atart, &mut self.aratart)
+                });
+                num_a.add_assign(&self.xart);
+                deno_a.add_assign(&self.artatar);
+                deno_a.add_assign(&self.aratart);
+                None
+            }
+        };
+        let ar = fused_ar.as_ref().unwrap_or(&self.ar);
+        // ---- XᵀAR: tile product + column reduce + diagonal row
+        // broadcast (lines 12-13) ----
+        tile.xta_into(t, ar, &mut self.xtar, backend, trace);
+        all_reduce_mat(&ctx.col_comm, &mut self.xtar, CommOp::ColumnReduce, trace)?;
+        // row broadcast from the diagonal rank: member index within the
+        // row comm equals the grid column, and the diagonal of row i is
+        // at column i. Off-diagonal ranks are pure receivers — the
+        // broadcast overwrites their buffer in place.
+        if ctx.is_diagonal() {
+            self.xtar_row.copy_from(&self.xtar);
+        }
+        broadcast_mat(&ctx.row_comm, ctx.row, &mut self.xtar_row, CommOp::RowBroadcast, trace)?;
+        num_a.add_assign(&self.xtar_row);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// DistMult: diagonal core
+// ---------------------------------------------------------------------
+
+/// Diagonal-core rule. With `R_t = diag(d_t)` the Gaussian MU terms
+/// collapse: the core numerator is `diag(AᵀX_tA)` (a row-sum of
+/// elementwise products, no GEMM), its denominator `d·(G∘G)` for
+/// `G = AᵀA`, and every `· R_t` in the A-update becomes a column
+/// scaling — one real `rows×k · k×k` GEMM survives per slice.
+pub struct DistMult {
+    /// `diag(AᵀX_tA)` partial (1×k).
+    num_d: Mat,
+    /// `d·(G∘G)` (1×k).
+    deno_d: Mat,
+    /// `G∘G` (k×k).
+    gg: Mat,
+    /// `G` column-scaled by d (k×k).
+    gd: Mat,
+    /// `A·D` (rows×k).
+    ard: Mat,
+    /// `X_tA·D` (rows×k).
+    xad: Mat,
+    /// `(A·D)(G·D)` (rows×k) — half the A denominator.
+    adgd: Mat,
+    /// `X_tᵀ·AD` partial (cols×k).
+    xtar: Mat,
+    /// Diagonal-broadcast row block of Xᵀ·AD (rows×k).
+    xtar_row: Mat,
+}
+
+impl DistMult {
+    pub fn new() -> DistMult {
+        DistMult {
+            num_d: empty(),
+            deno_d: empty(),
+            gg: empty(),
+            gd: empty(),
+            ard: empty(),
+            xad: empty(),
+            adgd: empty(),
+            xtar: empty(),
+            xtar_row: empty(),
+        }
+    }
+}
+
+impl Default for DistMult {
+    fn default() -> Self {
+        DistMult::new()
+    }
+}
+
+impl Model for DistMult {
+    fn kind(&self) -> ModelKind {
+        ModelKind::DistMult
+    }
+
+    fn acquire(&mut self, ws: &mut Workspace, rows: usize, cols: usize, k: usize) {
+        self.num_d = ws.acquire(1, k);
+        self.deno_d = ws.acquire(1, k);
+        self.gg = ws.acquire(k, k);
+        self.gd = ws.acquire(k, k);
+        self.ard = ws.acquire(rows, k);
+        self.xad = ws.acquire(rows, k);
+        self.adgd = ws.acquire(rows, k);
+        self.xtar = ws.acquire(cols, k);
+        self.xtar_row = ws.acquire(rows, k);
+    }
+
+    fn release(&mut self, ws: &mut Workspace) {
+        for m in [
+            std::mem::replace(&mut self.num_d, empty()),
+            std::mem::replace(&mut self.deno_d, empty()),
+            std::mem::replace(&mut self.gg, empty()),
+            std::mem::replace(&mut self.gd, empty()),
+            std::mem::replace(&mut self.ard, empty()),
+            std::mem::replace(&mut self.xad, empty()),
+            std::mem::replace(&mut self.adgd, empty()),
+            std::mem::replace(&mut self.xtar, empty()),
+            std::mem::replace(&mut self.xtar_row, empty()),
+        ] {
+            ws.release(m);
+        }
+    }
+
+    fn slice_update(
+        &mut self,
+        ctx: &RankCtx,
+        tile: &LocalTile,
+        t: usize,
+        r_t: &mut Mat,
+        a_row: &Mat,
+        _a_col: &Mat,
+        ata: &Mat,
+        xa: &Mat,
+        num_a: &mut Mat,
+        deno_a: &mut Mat,
+        eps: f32,
+        backend: &mut dyn Backend,
+        trace: &mut Trace,
+    ) -> CommResult<()> {
+        let k = r_t.cols();
+        // ---- core numerator diag(AᵀX_tA): the j-th entry is
+        // Σ_i A_{ij}(X_tA)_{ij} — row blocks sum over the column comm,
+        // exactly the AᵀXA reduce pattern of the dense rule ----
+        trace.record(CommOp::MatrixMul, 0, || {
+            self.num_d.clear();
+            for i in 0..a_row.rows() {
+                let ai = a_row.row(i);
+                let xi = xa.row(i);
+                let nd = self.num_d.row_mut(0);
+                for j in 0..k {
+                    nd[j] += ai[j] * xi[j];
+                }
+            }
+        });
+        all_reduce_mat(&ctx.col_comm, &mut self.num_d, CommOp::ColumnReduce, trace)?;
+        // ---- core denominator diag(G·D·G) = d·(G∘G): G is replicated,
+        // so no collective is needed ----
+        trace.record(CommOp::MatrixMul, 0, || {
+            self.gg.copy_from(ata);
+            self.gg.hadamard_assign(ata);
+            backend.matmul_into(r_t, &self.gg, &mut self.deno_d);
+        });
+        mu_update(r_t, &self.num_d, &self.deno_d, eps);
+        // ---- A-update terms under the refreshed d: every `· R_t`
+        // collapses to a column scaling ----
+        let d: Vec<f32> = r_t.row(0).to_vec();
+        trace.record(CommOp::MatrixMul, 0, || {
+            scale_cols_into(xa, &d, &mut self.xad);
+            scale_cols_into(a_row, &d, &mut self.ard);
+            scale_cols_into(ata, &d, &mut self.gd);
+        });
+        // numerator: X_tA·D
+        num_a.add_assign(&self.xad);
+        // denominator: A(D G D + D G D) = 2·(A·D)(G·D)
+        trace.record(CommOp::MatrixMul, 0, || {
+            backend.matmul_into(&self.ard, &self.gd, &mut self.adgd)
+        });
+        self.adgd.scale(2.0);
+        deno_a.add_assign(&self.adgd);
+        // ---- numerator term X_tᵀ·AD: tile product + column reduce +
+        // diagonal row broadcast, as in the dense rule ----
+        tile.xta_into(t, &self.ard, &mut self.xtar, backend, trace);
+        all_reduce_mat(&ctx.col_comm, &mut self.xtar, CommOp::ColumnReduce, trace)?;
+        if ctx.is_diagonal() {
+            self.xtar_row.copy_from(&self.xtar);
+        }
+        broadcast_mat(&ctx.row_comm, ctx.row, &mut self.xtar_row, CommOp::RowBroadcast, trace)?;
+        num_a.add_assign(&self.xtar_row);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Logistic non-negative RESCAL: Bernoulli likelihood
+// ---------------------------------------------------------------------
+
+/// Bernoulli rule: the MU numerators keep the Gaussian data terms
+/// (`AᵀX_tA`, `X_tA R_tᵀ + X_tᵀA R_t`), while every denominator term
+/// replaces `X_t` by the sigmoid reconstruction `S = σ(A R_t Aᵀ)`:
+/// `R_t ← R_t ∘ AᵀX_tA / (AᵀS A + ε)` and
+/// `A ← A ∘ Σ_t num / Σ_t (S A R_tᵀ + Sᵀ A R_t) + ε`.
+/// `S` is materialized per rank as the local `rows×cols` tile of the
+/// reconstruction — the same block layout as `X` itself — so the comm
+/// pattern matches the Gaussian loop collective-for-collective.
+pub struct LogisticRescal {
+    /// `AᵀX_tA` (k×k).
+    atxa: Mat,
+    /// `A·R_t` (rows×k).
+    ar: Mat,
+    /// Local tile of `σ(A R_t Aᵀ)` (rows×cols).
+    s: Mat,
+    /// `S·A` row block (rows×k, row-reduced).
+    sa: Mat,
+    /// `AᵀS A` (k×k).
+    atsa: Mat,
+    /// `X_tA·R_tᵀ` (rows×k).
+    xart: Mat,
+    /// `S A·R_tᵀ` (rows×k).
+    sart: Mat,
+    /// `Sᵀ·AR` partial (cols×k).
+    star: Mat,
+    /// Diagonal-broadcast row block of Sᵀ·AR (rows×k).
+    star_row: Mat,
+    /// `X_tᵀ·AR` partial (cols×k).
+    xtar: Mat,
+    /// Diagonal-broadcast row block of XᵀAR (rows×k).
+    xtar_row: Mat,
+}
+
+impl LogisticRescal {
+    pub fn new() -> LogisticRescal {
+        LogisticRescal {
+            atxa: empty(),
+            ar: empty(),
+            s: empty(),
+            sa: empty(),
+            atsa: empty(),
+            xart: empty(),
+            sart: empty(),
+            star: empty(),
+            star_row: empty(),
+            xtar: empty(),
+            xtar_row: empty(),
+        }
+    }
+}
+
+impl Default for LogisticRescal {
+    fn default() -> Self {
+        LogisticRescal::new()
+    }
+}
+
+impl Model for LogisticRescal {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Logistic
+    }
+
+    fn acquire(&mut self, ws: &mut Workspace, rows: usize, cols: usize, k: usize) {
+        self.atxa = ws.acquire(k, k);
+        self.ar = ws.acquire(rows, k);
+        self.s = ws.acquire(rows, cols);
+        self.sa = ws.acquire(rows, k);
+        self.atsa = ws.acquire(k, k);
+        self.xart = ws.acquire(rows, k);
+        self.sart = ws.acquire(rows, k);
+        self.star = ws.acquire(cols, k);
+        self.star_row = ws.acquire(rows, k);
+        self.xtar = ws.acquire(cols, k);
+        self.xtar_row = ws.acquire(rows, k);
+    }
+
+    fn release(&mut self, ws: &mut Workspace) {
+        for m in [
+            std::mem::replace(&mut self.atxa, empty()),
+            std::mem::replace(&mut self.ar, empty()),
+            std::mem::replace(&mut self.s, empty()),
+            std::mem::replace(&mut self.sa, empty()),
+            std::mem::replace(&mut self.atsa, empty()),
+            std::mem::replace(&mut self.xart, empty()),
+            std::mem::replace(&mut self.sart, empty()),
+            std::mem::replace(&mut self.star, empty()),
+            std::mem::replace(&mut self.star_row, empty()),
+            std::mem::replace(&mut self.xtar, empty()),
+            std::mem::replace(&mut self.xtar_row, empty()),
+        ] {
+            ws.release(m);
+        }
+    }
+
+    fn slice_update(
+        &mut self,
+        ctx: &RankCtx,
+        tile: &LocalTile,
+        t: usize,
+        r_t: &mut Mat,
+        a_row: &Mat,
+        a_col: &Mat,
+        _ata: &Mat,
+        xa: &Mat,
+        num_a: &mut Mat,
+        deno_a: &mut Mat,
+        eps: f32,
+        backend: &mut dyn Backend,
+        trace: &mut Trace,
+    ) -> CommResult<()> {
+        // ---- core numerator AᵀX_tA (as in the Gaussian rule) ----
+        trace.record(CommOp::MatrixMul, 0, || {
+            backend.t_matmul_into(a_row, xa, &mut self.atxa)
+        });
+        all_reduce_mat(&ctx.col_comm, &mut self.atxa, CommOp::ColumnReduce, trace)?;
+        // ---- core denominator Aᵀσ(A R_t Aᵀ)A under the *current* R_t:
+        // local S tile, S·A (row reduce), AᵀSA (column reduce) ----
+        trace.record(CommOp::MatrixMul, 0, || {
+            backend.matmul_into(a_row, r_t, &mut self.ar);
+            backend.matmul_t_into(&self.ar, a_col, &mut self.s);
+            sigmoid_in_place(&mut self.s);
+            backend.matmul_into(&self.s, a_col, &mut self.sa);
+        });
+        all_reduce_mat(&ctx.row_comm, &mut self.sa, CommOp::RowReduce, trace)?;
+        trace.record(CommOp::MatrixMul, 0, || {
+            backend.t_matmul_into(a_row, &self.sa, &mut self.atsa)
+        });
+        all_reduce_mat(&ctx.col_comm, &mut self.atsa, CommOp::ColumnReduce, trace)?;
+        mu_update(r_t, &self.atxa, &self.atsa, eps);
+        // ---- refresh AR, S, and SA under the new R_t for the A terms ----
+        trace.record(CommOp::MatrixMul, 0, || {
+            backend.matmul_into(a_row, r_t, &mut self.ar);
+            backend.matmul_t_into(&self.ar, a_col, &mut self.s);
+            sigmoid_in_place(&mut self.s);
+            backend.matmul_into(&self.s, a_col, &mut self.sa);
+        });
+        all_reduce_mat(&ctx.row_comm, &mut self.sa, CommOp::RowReduce, trace)?;
+        // ---- A numerator: X_tA·R_tᵀ + X_tᵀ·AR (the Gaussian data
+        // terms; the xtar leg keeps the column reduce + diagonal row
+        // broadcast) ----
+        trace.record(CommOp::MatrixMul, 0, || {
+            backend.matmul_t_into(xa, r_t, &mut self.xart)
+        });
+        num_a.add_assign(&self.xart);
+        tile.xta_into(t, &self.ar, &mut self.xtar, backend, trace);
+        all_reduce_mat(&ctx.col_comm, &mut self.xtar, CommOp::ColumnReduce, trace)?;
+        if ctx.is_diagonal() {
+            self.xtar_row.copy_from(&self.xtar);
+        }
+        broadcast_mat(&ctx.row_comm, ctx.row, &mut self.xtar_row, CommOp::RowBroadcast, trace)?;
+        num_a.add_assign(&self.xtar_row);
+        // ---- A denominator: S A·R_tᵀ + Sᵀ·AR, mirroring the numerator
+        // legs with S in place of X_t ----
+        trace.record(CommOp::MatrixMul, 0, || {
+            backend.matmul_t_into(&self.sa, r_t, &mut self.sart)
+        });
+        deno_a.add_assign(&self.sart);
+        trace.record(CommOp::MatrixMul, 0, || {
+            backend.t_matmul_into(&self.s, &self.ar, &mut self.star)
+        });
+        all_reduce_mat(&ctx.col_comm, &mut self.star, CommOp::ColumnReduce, trace)?;
+        if ctx.is_diagonal() {
+            self.star_row.copy_from(&self.star);
+        }
+        broadcast_mat(&ctx.row_comm, ctx.row, &mut self.star_row, CommOp::RowBroadcast, trace)?;
+        deno_a.add_assign(&self.star_row);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_string_roundtrip() {
+        for kind in [ModelKind::Rescal, ModelKind::DistMult, ModelKind::Logistic] {
+            assert_eq!(ModelKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        assert!(ModelKind::parse("transe").is_err());
+        assert_eq!(ModelKind::default(), ModelKind::Rescal);
+    }
+
+    #[test]
+    fn core_rows_shapes() {
+        assert_eq!(ModelKind::Rescal.core_rows(5), 5);
+        assert_eq!(ModelKind::Logistic.core_rows(5), 5);
+        assert_eq!(ModelKind::DistMult.core_rows(5), 1);
+    }
+
+    #[test]
+    fn distmult_rescale_squares_scales() {
+        let mut d = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        ModelKind::DistMult.rescale_core_slice(&mut d, &[2.0, 1.0, 0.5]);
+        assert_eq!(d.as_slice(), &[4.0, 2.0, 0.75]);
+    }
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+        assert!(sigmoid(10.0) > 0.999);
+        assert!(sigmoid(-10.0) < 0.001);
+    }
+
+    #[test]
+    fn scale_cols_matches_diagonal_matmul() {
+        let src = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let d = [2.0, 0.5, 1.0];
+        let mut out = Mat::zeros(2, 3);
+        scale_cols_into(&src, &d, &mut out);
+        // equals src · diag(d)
+        let mut diag = Mat::zeros(3, 3);
+        for j in 0..3 {
+            diag[(j, j)] = d[j];
+        }
+        let want = src.matmul(&diag);
+        assert_eq!(out.as_slice(), want.as_slice());
+    }
+}

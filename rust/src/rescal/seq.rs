@@ -1,9 +1,24 @@
 //! Sequential non-negative RESCAL (Equation 2 of the paper), the
-//! single-process oracle the distributed implementation is tested against.
+//! single-process oracle the distributed implementation is tested
+//! against.
+//!
+//! Since the model-family refactor this is no longer a second copy of
+//! the MU rules: it *is* the distributed algorithm instantiated on a
+//! 1×1 grid (one rank, every collective a self-loop), driven through
+//! the same [`Model`](super::model::Model) slice updates. The reference
+//! and distributed math cannot drift because they are the same code.
 
+use std::sync::Arc;
+
+use super::distributed::{rescal_rank, DistInit, DistRescalConfig};
+use super::local::LocalTile;
+use super::model::ModelKind;
 use super::{Init, RescalOptions};
+use crate::backend::native::NativeBackend;
+use crate::backend::Workspace;
+use crate::comm::grid::run_on_grid;
+use crate::comm::Trace;
 use crate::rng::Rng;
-use crate::tensor::ops::{mu_update, normalize_cols, rescale_core};
 use crate::tensor::{Mat, Tensor3};
 
 /// Result of a sequential factorization.
@@ -14,64 +29,35 @@ pub struct SeqRescal {
     pub iters_run: usize,
 }
 
-/// Plain Equation-2 multiplicative updates on a full tensor.
+/// Equation-2 multiplicative updates on a full tensor: the 1×1-grid
+/// instantiation of [`rescal_rank`] with the Gaussian
+/// [`ModelKind::Rescal`] rule.
 ///
 /// Per iteration:
 /// `R_t ← R_t ∘ AᵀX_tA / (AᵀA R_t AᵀA + ε)` for each t, then
 /// `A ← A ∘ Σ_t(X_tAR_tᵀ + X_tᵀAR_t) / Σ_t A(R_tAᵀAR_tᵀ + R_tᵀAᵀAR_t) + ε`.
 pub fn rescal_seq(x: &Tensor3, opts: &RescalOptions, init: Init, seed: u64) -> SeqRescal {
-    let (n, n2, m) = x.shape();
+    let (n, n2, _m) = x.shape();
     assert_eq!(n, n2, "RESCAL needs a square entity tensor");
-    let k = opts.k;
-    let (mut a, mut r) = init.materialize(x, k, &mut Rng::new(seed));
-    let mut iters_run = 0;
-    for iter in 0..opts.max_iters {
-        iters_run = iter + 1;
-        let ata = a.gram();
-        // accumulate A-update terms across slices
-        let mut num_a = Mat::zeros(n, k);
-        let mut deno_a = Mat::zeros(n, k);
-        for t in 0..m {
-            let xt = x.slice(t);
-            let xa = xt.matmul(&a);
-            // ---- R update (Eq 2, first rule) ----
-            let atxa = a.t_matmul(&xa);
-            let rata = r.slice(t).matmul(&ata);
-            let deno_r = ata.matmul(&rata); // AᵀA · R_t · AᵀA
-            let num_r = atxa;
-            mu_update(r.slice_mut(t), &num_r, &deno_r, opts.eps);
-            // ---- A-update terms with the refreshed R_t (Alg 3 order) ----
-            let rt = r.slice(t);
-            // numerator: X_t A R_tᵀ + X_tᵀ A R_t
-            let xart = xa.matmul_t(rt);
-            let ar = a.matmul(rt);
-            let xtar = xt.t_matmul(&ar);
-            num_a.add_assign(&xart);
-            num_a.add_assign(&xtar);
-            // denominator: A (R_t AᵀA R_tᵀ + R_tᵀ AᵀA R_t)
-            let atar = ata.matmul(rt); // AᵀA R_t
-            let art = a.matmul_t(rt); // A R_tᵀ
-            let artatar = art.matmul(&atar); // A R_tᵀ AᵀA R_t
-            let atart = ata.matmul_t(rt); // AᵀA R_tᵀ
-            let aratart = ar.matmul(&atart); // A R_t AᵀA R_tᵀ
-            deno_a.add_assign(&artatar);
-            deno_a.add_assign(&aratart);
-        }
-        mu_update(&mut a, &num_a, &deno_a, opts.eps);
-        if opts.err_every > 0 && opts.tol > 0.0 && (iter + 1) % opts.err_every == 0 {
-            let e = x.rel_error(&a, &r);
-            if e < opts.tol {
-                break;
-            }
-        }
-    }
-    // final normalization: ‖A_i‖ = 1 with inverse scaling folded into R
-    let scales = normalize_cols(&mut a);
-    for t in 0..m {
-        rescale_core(r.slice_mut(t), &scales);
-    }
-    let rel_error = x.rel_error(&a, &r);
-    SeqRescal { a, r, rel_error, iters_run }
+    // materialize the full factors once (Random/NNDSVD/Given), then hand
+    // them to the grid as explicit initial factors
+    let (a0, r0) = init.materialize(x, opts.k, &mut Rng::new(seed));
+    let cfg = DistRescalConfig {
+        opts: opts.clone(),
+        init: DistInit::Given(Arc::new(a0), Arc::new(r0)),
+        n,
+        model: ModelKind::Rescal,
+    };
+    let mut results = run_on_grid(1, |ctx| {
+        let tile = LocalTile::Dense(x.clone());
+        let mut backend = NativeBackend::new();
+        let mut ws = Workspace::new();
+        let mut trace = Trace::disabled();
+        rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+            .expect("a 1×1 in-process grid cannot hit transport errors")
+    });
+    let res = results.pop().expect("one rank on a 1×1 grid");
+    SeqRescal { a: res.a_row, r: res.r, rel_error: res.rel_error, iters_run: res.iters_run }
 }
 
 #[cfg(test)]

@@ -7,24 +7,35 @@
 //! round-trips through the crate's own JSON, so a trained model can be
 //! archived and served by a process that never ran the factorization.
 //!
-//! On construction (and again on load) the model precomputes the
-//! per-relation projections `P_t = A·R_t` and `Q_t = A·R_tᵀ`. With them,
-//! every query is cheap:
+//! On construction (and again on load) a dense-core model precomputes
+//! the per-relation projections `P_t = A·R_t` and `Q_t = A·R_tᵀ`. With
+//! them, every query is cheap:
 //!
 //! * `score(s,r,o) = aₛᵀ·R_r·aₒ = P_r[s,:] · aₒ` — one length-k dot;
 //! * `(s,r,?)` completion: scores over all objects are `A · P_r[s,:]ᵀ` —
 //!   one GEMV over the n candidates;
 //! * `(?,r,o)` completion: scores over all subjects are `A · Q_r[o,:]ᵀ`.
 //!
-//! The projections cost `m·n·k` floats and are never serialized.
+//! The projections cost `2·m·n·k` floats and are never serialized.
+//!
+//! A **diagonal-core** model ([`ModelKind::DistMult`], cores persisted
+//! as 1×k vectors) skips the precompute entirely: a virtual projection
+//! row is `a_anchor ∘ d_r` — k multiplies, identical in both directions
+//! because a diagonal core is symmetric — so serving it saves the whole
+//! `2·m·n·k·4` bytes ([`FactorModel::projection_bytes_saved`], asserted
+//! by [`super::query::ServeStats`]). Logistic models score through the
+//! dense path with `σ` applied on top (see [`super::score`]).
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::engine::report::{mat_from_json, mat_to_json, tensor_from_json, tensor_to_json};
+use crate::engine::report::{
+    mat_from_json, mat_to_json, model_from_json, tensor_from_json, tensor_to_json,
+};
 use crate::engine::Report;
 use crate::error::{Context as _, Result};
 use crate::json::Json;
+use crate::rescal::ModelKind;
 use crate::tensor::{Mat, Tensor3};
 use crate::{bail, err};
 
@@ -73,36 +84,66 @@ pub struct FactorModel {
     entity_names: Option<Vec<String>>,
     relation_names: Option<Vec<String>>,
     provenance: Provenance,
+    /// Model family the factors were trained under; fixes the core
+    /// shape and the scoring rule.
+    model: ModelKind,
     /// Per-relation `A·R_t` (n×k); row s scores `(s, t, ?)` queries.
+    /// Empty for diagonal-core models, which never densify.
     proj_obj: Vec<Mat>,
     /// Per-relation `A·R_tᵀ` (n×k); row o scores `(?, t, o)` queries.
+    /// Empty for diagonal-core models.
     proj_subj: Vec<Mat>,
 }
 
 impl FactorModel {
-    /// Build (and validate) a model from factors. `a` is n×k; `r` must
-    /// hold k×k relation cores. Precomputes the serving projections.
+    /// Build (and validate) a Gaussian-RESCAL model from factors (`a` is
+    /// n×k, `r` holds k×k cores). See [`FactorModel::new_with_model`]
+    /// for the other families.
     pub fn new(a: Mat, r: Tensor3, provenance: Provenance) -> Result<FactorModel> {
+        FactorModel::new_with_model(a, r, ModelKind::Rescal, provenance)
+    }
+
+    /// Build (and validate) a model of any family. `a` is n×k; `r` must
+    /// hold `core_rows(k)`×k relation cores (k×k for `rescal` and
+    /// `logistic`, 1×k diagonals for `distmult`). Dense-core models
+    /// precompute the serving projections; diagonal-core models skip
+    /// them.
+    pub fn new_with_model(
+        a: Mat,
+        r: Tensor3,
+        model: ModelKind,
+        provenance: Provenance,
+    ) -> Result<FactorModel> {
         let (n, k) = a.shape();
         if n == 0 || k == 0 {
             bail!("factor model needs a non-empty A, got {n}×{k}");
         }
-        if r.n1() != k || r.n2() != k {
+        let core_rows = model.core_rows(k);
+        if r.n1() != core_rows || r.n2() != k {
             bail!(
-                "relation cores must be {k}×{k} to match A's {k} columns, got {}×{}×{}",
+                "{} relation cores must be {core_rows}×{k} to match A's {k} columns, \
+                 got {}×{}×{}",
+                model.as_str(),
                 r.n1(),
                 r.n2(),
                 r.m()
             );
         }
-        let proj_obj: Vec<Mat> = r.slices().iter().map(|rt| a.matmul(rt)).collect();
-        let proj_subj: Vec<Mat> = r.slices().iter().map(|rt| a.matmul_t(rt)).collect();
+        let (proj_obj, proj_subj) = if model == ModelKind::DistMult {
+            (Vec::new(), Vec::new())
+        } else {
+            (
+                r.slices().iter().map(|rt| a.matmul(rt)).collect(),
+                r.slices().iter().map(|rt| a.matmul_t(rt)).collect(),
+            )
+        };
         Ok(FactorModel {
             a,
             r,
             entity_names: None,
             relation_names: None,
             provenance,
+            model,
             proj_obj,
             proj_subj,
         })
@@ -113,9 +154,10 @@ impl FactorModel {
     /// and is a typed error.
     pub fn from_report(report: &Report) -> Result<FactorModel> {
         match report {
-            Report::Factorize(r) => FactorModel::new(
+            Report::Factorize(r) => FactorModel::new_with_model(
                 r.a.clone(),
                 r.r.clone(),
+                r.model,
                 Provenance {
                     job: "factorize".to_string(),
                     p: 0,
@@ -131,9 +173,10 @@ impl FactorModel {
                     .find(|s| s.k == r.k_opt)
                     .map(|s| s.rel_error as f64)
                     .unwrap_or(-1.0);
-                FactorModel::new(
+                FactorModel::new_with_model(
                     r.a.clone(),
                     r.r.clone(),
+                    r.model,
                     Provenance {
                         job: "model_select".to_string(),
                         p: 0,
@@ -265,14 +308,77 @@ impl FactorModel {
         &mut self.provenance
     }
 
+    /// Model family the factors were trained under.
+    pub fn model(&self) -> ModelKind {
+        self.model
+    }
+
+    /// Whether the relation cores are stored as 1×k diagonals (the
+    /// `distmult` family), which serving scores without densifying.
+    pub fn is_diagonal(&self) -> bool {
+        self.model == ModelKind::DistMult
+    }
+
+    /// Typed check that this artifact was trained under the expected
+    /// family — the error a warm-start or `drescal query --family`
+    /// mismatch surfaces as, instead of silently scoring with the wrong
+    /// rule.
+    pub fn ensure_model(&self, expect: ModelKind) -> Result<()> {
+        if self.model != expect {
+            bail!(
+                "model family mismatch: this artifact was trained as '{}' but '{}' was \
+                 requested",
+                self.model.as_str(),
+                expect.as_str()
+            );
+        }
+        Ok(())
+    }
+
+    /// Bytes of projection precompute this model avoids by storing
+    /// diagonal cores: `2·m·n·k·4` for a diagonal model (both direction
+    /// caches), 0 for dense-core families.
+    pub fn projection_bytes_saved(&self) -> usize {
+        if self.is_diagonal() {
+            2 * self.m() * self.n() * self.k() * std::mem::size_of::<f32>()
+        } else {
+            0
+        }
+    }
+
     /// The cached projection that answers completion queries in the
     /// given direction for relation `rel`: `A·R_rel` for `(s, rel, ?)`,
     /// `A·R_relᵀ` for `(?, rel, o)`. Row `anchor` of the returned matrix
-    /// dotted with `A`'s rows yields the candidate scores.
+    /// dotted with `A`'s rows yields the candidate scores. Dense-core
+    /// families only — diagonal models never materialize projections
+    /// (use [`FactorModel::fill_query_row`], which covers every family).
     pub fn projection(&self, dir: Direction, rel: usize) -> &Mat {
+        assert!(
+            !self.is_diagonal(),
+            "diagonal-core models have no cached projections; use fill_query_row"
+        );
         match dir {
             Direction::Objects => &self.proj_obj[rel],
             Direction::Subjects => &self.proj_subj[rel],
+        }
+    }
+
+    /// Write the (virtual) projection row for `anchor` into `out`
+    /// (length k): the vector whose dot with each row of `A` scores that
+    /// candidate. Dense-core families copy the cached row; diagonal
+    /// models compute `a_anchor ∘ d_rel` on the fly — k multiplies, no
+    /// `m·n·k` precompute, and direction-independent because a diagonal
+    /// core is symmetric.
+    pub fn fill_query_row(&self, dir: Direction, rel: usize, anchor: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.k());
+        if self.is_diagonal() {
+            let d = self.r.slice(rel).row(0);
+            let a = self.a.row(anchor);
+            for (o, (&av, &dv)) in out.iter_mut().zip(a.iter().zip(d)) {
+                *o = av * dv;
+            }
+        } else {
+            out.copy_from_slice(self.projection(dir, rel).row(anchor));
         }
     }
 
@@ -281,6 +387,7 @@ impl FactorModel {
         let mut obj = BTreeMap::new();
         obj.insert("kind".to_string(), Json::Str("factor_model".to_string()));
         obj.insert("k".to_string(), Json::Num(self.k() as f64));
+        obj.insert("model".to_string(), Json::Str(self.model.as_str().to_string()));
         obj.insert("a".to_string(), mat_to_json(&self.a));
         obj.insert("r".to_string(), tensor_to_json(&self.r));
         let mut prov = BTreeMap::new();
@@ -339,7 +446,11 @@ impl FactorModel {
             },
             None => Provenance::external(),
         };
-        let mut model = FactorModel::new(a, r, provenance)?;
+        // artifacts exported before the model-family plane carry no
+        // `model` field and are all Gaussian RESCAL (model_from_json
+        // defaults accordingly)
+        let kind = model_from_json(v)?;
+        let mut model = FactorModel::new_with_model(a, r, kind, provenance)?;
         if let Some(names) = v.get("entity_names") {
             model = model.with_entity_names(string_array(names, "entity_names")?)?;
         }
@@ -476,6 +587,109 @@ mod tests {
         let e = bare.resolve_entity("alice").unwrap_err();
         assert!(e.to_string().contains("no entity names"), "{e}");
         assert!(bare.resolve_relation("knows").is_err());
+    }
+
+    fn tiny_diagonal_model() -> FactorModel {
+        let mut rng = Rng::new(5);
+        let a = Mat::random_uniform(6, 2, 0.0, 1.0, &mut rng);
+        let r = Tensor3::random_uniform(1, 2, 3, 0.0, 1.0, &mut rng);
+        FactorModel::new_with_model(a, r, ModelKind::DistMult, Provenance::external())
+            .unwrap()
+    }
+
+    #[test]
+    fn diagonal_model_skips_projection_precompute() {
+        let m = tiny_diagonal_model();
+        assert!(m.is_diagonal());
+        assert_eq!(m.model(), ModelKind::DistMult);
+        // 2 directions × m=3 × n=6 × k=2 × 4 bytes
+        assert_eq!(m.projection_bytes_saved(), 2 * 3 * 6 * 2 * 4);
+        assert_eq!(tiny_model().projection_bytes_saved(), 0);
+        // the virtual projection row is a ∘ d, same in both directions
+        let mut row = vec![0.0f32; 2];
+        for t in 0..3 {
+            for anchor in 0..6 {
+                for dir in [Direction::Objects, Direction::Subjects] {
+                    m.fill_query_row(dir, t, anchor, &mut row);
+                    for j in 0..2 {
+                        let want = m.a()[(anchor, j)] * m.r().slice(t)[(0, j)];
+                        assert_eq!(row[j], want, "t={t} anchor={anchor} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_query_row_matches_dense_projection() {
+        let m = tiny_model();
+        let mut row = vec![0.0f32; 2];
+        for dir in [Direction::Objects, Direction::Subjects] {
+            for t in 0..3 {
+                for anchor in 0..6 {
+                    m.fill_query_row(dir, t, anchor, &mut row);
+                    assert_eq!(&row[..], m.projection(dir, t).row(anchor));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn core_shape_validation_is_per_family() {
+        let a = Mat::full(4, 3, 0.5);
+        // distmult wants 1×k, not k×k
+        let e = FactorModel::new_with_model(
+            a.clone(),
+            Tensor3::zeros(3, 3, 1),
+            ModelKind::DistMult,
+            Provenance::external(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("1×3"), "{e}");
+        // and the dense families reject 1×k diagonals
+        let e = FactorModel::new_with_model(
+            a,
+            Tensor3::zeros(1, 3, 1),
+            ModelKind::Logistic,
+            Provenance::external(),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("3×3"), "{e}");
+    }
+
+    #[test]
+    fn model_family_roundtrips_and_legacy_artifacts_default_to_rescal() {
+        let m = tiny_diagonal_model();
+        let back = FactorModel::from_json(&Json::parse(&m.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.model(), ModelKind::DistMult);
+        assert_eq!(back.r().n1(), 1);
+        // strip the model field the way a pre-model-family export looks
+        let dense = tiny_model();
+        let mut obj = match dense.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!("model artifacts serialize as objects"),
+        };
+        obj.remove("model");
+        let legacy = FactorModel::from_json(&Json::Obj(obj)).unwrap();
+        assert_eq!(legacy.model(), ModelKind::Rescal);
+        // a present-but-unknown family is a typed error
+        let mut bad = match dense.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        bad.insert("model".to_string(), Json::Str("tucker".to_string()));
+        let e = FactorModel::from_json(&Json::Obj(bad)).unwrap_err();
+        assert!(e.to_string().contains("unknown model family"), "{e}");
+    }
+
+    #[test]
+    fn ensure_model_mismatch_is_typed() {
+        let m = tiny_diagonal_model();
+        assert!(m.ensure_model(ModelKind::DistMult).is_ok());
+        let e = m.ensure_model(ModelKind::Rescal).unwrap_err();
+        assert!(e.to_string().contains("model family mismatch"), "{e}");
+        assert!(e.to_string().contains("distmult"), "{e}");
     }
 
     #[test]

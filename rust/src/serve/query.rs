@@ -96,6 +96,12 @@ pub struct ServeStats {
     pub ws_allocs: usize,
     /// Workspace checkouts served by arena reuse (no allocation).
     pub ws_reuses: usize,
+    /// Bytes of projection precompute the served model avoided by
+    /// keeping its cores diagonal (`2·m·n·k·4` for a `distmult` model,
+    /// 0 for dense-core families). Fixed at engine construction — the
+    /// counter-assert that the diagonal serving fast path never
+    /// densified.
+    pub projection_bytes_saved: usize,
 }
 
 /// How many answers the LRU cache keeps by default.
@@ -131,12 +137,16 @@ impl QueryEngine {
     /// Serving engine with an explicit answer-cache capacity
     /// (0 disables caching).
     pub fn with_cache_capacity(model: FactorModel, capacity: usize) -> QueryEngine {
+        let stats = ServeStats {
+            projection_bytes_saved: model.projection_bytes_saved(),
+            ..ServeStats::default()
+        };
         QueryEngine {
             model,
             cache: HashMap::new(),
             clock: 0,
             capacity,
-            stats: ServeStats::default(),
+            stats,
             ws: Workspace::new(),
         }
     }

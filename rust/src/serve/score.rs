@@ -6,10 +6,19 @@
 //! (`P_r[s,:]·aₒ`), and a `(s,r,?)` completion is one GEMV
 //! (`A·P_r[s,:]ᵀ`) followed by a partial top-k selection over the n
 //! candidates. A batch of B completion queries on one relation gathers
-//! the B projection rows into a B×k matrix and runs a single
+//! the B query rows into a B×k matrix and runs a single
 //! `B×k · k×n` GEMM — the batched-GEMM shape that dominates
 //! link-prediction serving (DGL-KE, arXiv 2004.08532) — which threads
 //! through the existing blocked GEMM above its work threshold.
+//!
+//! The query rows come from [`FactorModel::fill_query_row`], which
+//! makes every family serve through the same GEMM: dense-core models
+//! copy cached projection rows, diagonal (`distmult`) models compute
+//! `a_anchor ∘ d_r` on the fly without ever densifying a core, and
+//! logistic models score densely with `σ` applied to the reported
+//! scores (σ is monotone, so selection order never changes and the
+//! sigmoid runs only on what the caller sees: one value per pointwise
+//! score, `top` values per completion).
 //!
 //! Top-k selection breaks score ties toward the **lower entity index**.
 //! The comparator is a strict total order, so the selected set and its
@@ -21,6 +30,8 @@ use std::cmp::Ordering;
 use crate::backend::Workspace;
 use crate::bail;
 use crate::error::Result;
+use crate::rescal::model::sigmoid;
+use crate::rescal::ModelKind;
 use crate::tensor::dense::num_threads;
 use crate::tensor::kernel;
 
@@ -52,14 +63,38 @@ pub fn cmp_hits(a: &Hit, b: &Hit) -> Ordering {
     b.score.total_cmp(&a.score).then(a.entity.cmp(&b.entity))
 }
 
-/// Pointwise `score(s, rel, o)` via the cached projection: one
-/// length-k dot product.
+/// Pointwise `score(s, rel, o)`: one length-k dot against the (cached
+/// or virtual) query row; `σ` on top for the logistic family.
 pub fn score_one(model: &FactorModel, s: usize, rel: usize, o: usize) -> Result<f32> {
     check_entity(model, s)?;
     check_entity(model, o)?;
     check_relation(model, rel)?;
-    let p = model.projection(Direction::Objects, rel);
-    Ok(dot(p.row(s), model.a().row(o)))
+    let raw = if model.is_diagonal() {
+        // Σ_j a[s,j]·d[j]·a[o,j] — no densified core, no projection
+        let d = model.r().slice(rel).row(0);
+        let a_s = model.a().row(s);
+        let a_o = model.a().row(o);
+        let mut acc = 0.0f32;
+        for j in 0..model.k() {
+            acc += a_s[j] * d[j] * a_o[j];
+        }
+        acc
+    } else {
+        let p = model.projection(Direction::Objects, rel);
+        dot(p.row(s), model.a().row(o))
+    };
+    Ok(finish_score(model, raw))
+}
+
+/// Map a raw bilinear score to what the family reports: `σ(x)` for
+/// logistic models (a Bernoulli probability), identity otherwise.
+#[inline]
+fn finish_score(model: &FactorModel, raw: f32) -> f32 {
+    if model.model() == ModelKind::Logistic {
+        sigmoid(raw)
+    } else {
+        raw
+    }
 }
 
 #[inline]
@@ -109,18 +144,28 @@ pub fn complete_batch(
     if anchors.is_empty() {
         return Ok(Vec::new());
     }
-    let proj = model.projection(dir, rel);
     let k = model.k();
-    // gather the anchor rows of the projection into one B×k block
+    // gather the anchors' query rows into one B×k block (cached
+    // projection rows, or a ∘ d for diagonal models)
     let mut q = ws.acquire(anchors.len(), k);
     for (i, &anchor) in anchors.iter().enumerate() {
-        q.row_mut(i).copy_from_slice(proj.row(anchor));
+        model.fill_query_row(dir, rel, anchor, q.row_mut(i));
     }
     // one GEMM scores every candidate for every anchor: B×k · (n×k)ᵀ,
     // straight into the workspace score buffer on the packed kernel
     let mut scores = ws.acquire(anchors.len(), model.n());
     kernel::gemm_nt_into(&q, model.a(), &mut scores);
-    let hits = (0..anchors.len()).map(|i| top_k(scores.row(i), top)).collect();
+    let mut hits: Vec<Vec<Hit>> =
+        (0..anchors.len()).map(|i| top_k(scores.row(i), top)).collect();
+    // σ is monotone, so applying it after selection changes no ranking
+    // and touches only the reported top scores
+    if model.model() == ModelKind::Logistic {
+        for list in &mut hits {
+            for h in list {
+                h.score = sigmoid(h.score);
+            }
+        }
+    }
     ws.release(q);
     ws.release(scores);
     Ok(hits)
@@ -234,9 +279,11 @@ pub fn score_row(
 ) -> Result<Vec<f32>> {
     check_relation(model, rel)?;
     check_entity(model, anchor)?;
-    let proj = model.projection(dir, rel);
-    let anchor_row = proj.row(anchor);
-    Ok((0..model.n()).map(|cand| dot(anchor_row, model.a().row(cand))).collect())
+    let mut anchor_row = vec![0.0f32; model.k()];
+    model.fill_query_row(dir, rel, anchor, &mut anchor_row);
+    Ok((0..model.n())
+        .map(|cand| finish_score(model, dot(&anchor_row, model.a().row(cand))))
+        .collect())
 }
 
 /// Validate that `top_k` inputs describe a well-formed query (used by
@@ -258,6 +305,13 @@ mod tests {
         let a = Mat::random_uniform(n, k, 0.0, 1.0, &mut rng);
         let r = Tensor3::random_uniform(k, k, m, 0.0, 1.0, &mut rng);
         FactorModel::new(a, r, Provenance::external()).unwrap()
+    }
+
+    fn family_model(n: usize, k: usize, m: usize, seed: u64, kind: ModelKind) -> FactorModel {
+        let mut rng = Rng::new(seed);
+        let a = Mat::random_uniform(n, k, 0.0, 1.0, &mut rng);
+        let r = Tensor3::random_uniform(kind.core_rows(k), k, m, 0.0, 1.0, &mut rng);
+        FactorModel::new_with_model(a, r, kind, Provenance::external()).unwrap()
     }
 
     #[test]
@@ -338,6 +392,69 @@ mod tests {
                     assert!((g.score - w.score).abs() < 1e-5);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn diagonal_score_matches_densified_core() {
+        // a distmult model and a rescal model whose dense core is the
+        // densification of the same diagonal must score identically
+        let diag = family_model(10, 3, 2, 13, ModelKind::DistMult);
+        let dense_cores: Vec<Mat> = (0..2)
+            .map(|t| Mat::from_fn(3, 3, |i, j| if i == j { diag.r().slice(t)[(0, j)] } else { 0.0 }))
+            .collect();
+        let dense = FactorModel::new(
+            diag.a().clone(),
+            Tensor3::from_slices(dense_cores),
+            Provenance::external(),
+        )
+        .unwrap();
+        for s in 0..10 {
+            for o in 0..10 {
+                for t in 0..2 {
+                    let got = score_one(&diag, s, t, o).unwrap();
+                    let want = score_one(&dense, s, t, o).unwrap();
+                    assert!((got - want).abs() < 1e-5, "s={s} t={t} o={o}: {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_batched_completion_matches_brute_force() {
+        let m = family_model(24, 4, 3, 17, ModelKind::DistMult);
+        assert_eq!(m.projection_bytes_saved(), 2 * 3 * 24 * 4 * 4);
+        let mut ws = Workspace::new();
+        for dir in [Direction::Objects, Direction::Subjects] {
+            let anchors = [0usize, 11, 23];
+            let batched = complete_batch(&m, dir, 2, &anchors, 6, &mut ws).unwrap();
+            for (i, &anchor) in anchors.iter().enumerate() {
+                let brute = brute_force_top_k(&m, dir, 2, anchor, 6).unwrap();
+                let got: Vec<usize> = batched[i].iter().map(|h| h.entity).collect();
+                let want: Vec<usize> = brute.iter().map(|h| h.entity).collect();
+                assert_eq!(got, want, "dir={dir:?} anchor={anchor}");
+                for (g, w) in batched[i].iter().zip(&brute) {
+                    assert!((g.score - w.score).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn logistic_scores_are_probabilities() {
+        let m = family_model(12, 3, 2, 19, ModelKind::Logistic);
+        let mut ws = Workspace::new();
+        for s in 0..12 {
+            let got = score_one(&m, s, 0, (s + 1) % 12).unwrap();
+            assert!((0.0..=1.0).contains(&got), "σ output out of range: {got}");
+        }
+        // batched hits carry σ'd scores and match the pointwise path
+        let hits = complete_batch(&m, Direction::Objects, 1, &[4], 5, &mut ws).unwrap();
+        let brute = brute_force_top_k(&m, Direction::Objects, 1, 4, 5).unwrap();
+        for (g, w) in hits[0].iter().zip(&brute) {
+            assert_eq!(g.entity, w.entity);
+            assert!((0.0..=1.0).contains(&g.score));
+            assert!((g.score - w.score).abs() < 1e-5);
         }
     }
 

@@ -12,7 +12,7 @@ use drescal::comm::grid::run_on_grid;
 use drescal::comm::Trace;
 use drescal::data::synthetic;
 use drescal::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
-use drescal::rescal::{LocalTile, RescalOptions};
+use drescal::rescal::{LocalTile, ModelKind, RescalOptions};
 
 fn artifact_dir() -> Option<String> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -44,6 +44,7 @@ fn distributed_rescal_over_pjrt_artifacts() {
                 opts: opts.clone(),
                 init: DistInit::Random { seed: 12 },
                 n,
+                model: ModelKind::Rescal,
             };
             let mut ws = Workspace::new();
             let mut trace = Trace::new();

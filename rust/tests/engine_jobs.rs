@@ -12,7 +12,7 @@ use drescal::engine::{
 use drescal::json::Json;
 use drescal::model_selection::RescalkConfig;
 use drescal::rescal::distributed::DistInit;
-use drescal::rescal::RescalOptions;
+use drescal::rescal::{ModelKind, RescalOptions};
 use drescal::simulate::Machine;
 
 /// The headline guarantee: consecutive jobs of *different kinds* run on
@@ -59,6 +59,7 @@ fn engine_runs_consecutive_jobs_on_one_pool() {
             data: (&data).into(),
             opts: RescalOptions::new(3, 50),
             init: DistInit::Random { seed: 8 },
+            model: ModelKind::Rescal,
         })
         .unwrap();
     assert!(matches!(report2, Report::Factorize(_)));

@@ -10,7 +10,7 @@ use drescal::comm::Trace;
 use drescal::data::synthetic::{self, SyntheticSpec};
 use drescal::engine::{Engine, EngineConfig, Report};
 use drescal::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
-use drescal::rescal::{LocalTile, RescalOptions};
+use drescal::rescal::{LocalTile, ModelKind, RescalOptions};
 use drescal::rng::Rng;
 use drescal::tensor::dense::{gemm, gemm_legacy};
 use drescal::tensor::{kernel, Mat};
@@ -122,6 +122,7 @@ fn factorize_allocs_are_independent_of_iteration_count() {
                 opts: RescalOptions::new(3, iters),
                 init: DistInit::Random { seed: 4 },
                 n: 16,
+                model: ModelKind::Rescal,
             };
             let mut backend = NativeBackend::new();
             let mut ws = Workspace::new();

@@ -1,0 +1,499 @@
+//! Model-family integration: the trait-dispatched MU rules must match
+//! independent naive references, keep their convergence guarantees, and
+//! survive the full train → export → persist → serve lifecycle — for
+//! every family, on every grid shape, tile storage, and transport.
+
+use std::sync::Arc;
+
+use drescal::backend::native::NativeBackend;
+use drescal::backend::Workspace;
+use drescal::comm::grid::run_on_grid;
+use drescal::comm::transport::tcp::{loopback_meshes, rank_ctx_from_mesh, TcpConfig};
+use drescal::comm::{Grid, RankCtx, Trace};
+use drescal::coordinator::JobData;
+use drescal::data::synthetic;
+use drescal::engine::{Engine, EngineConfig, Report};
+use drescal::json::Json;
+use drescal::model_selection::{InitStrategy, RescalkConfig};
+use drescal::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
+use drescal::rescal::{LocalTile, ModelKind, RescalOptions};
+use drescal::rng::Rng;
+use drescal::serve::{Answer, FactorModel, Query, QueryEngine};
+use drescal::tensor::{Csr, Mat, Tensor3};
+
+/// Shared full-size initial factors for a family (`r0` has the family's
+/// core shape), so independent runs start identically.
+fn given_init(
+    n: usize,
+    k: usize,
+    m: usize,
+    kind: ModelKind,
+    seed: u64,
+) -> (Arc<Mat>, Arc<Tensor3>) {
+    let mut rng = Rng::new(seed);
+    let a0 = Mat::random_uniform(n, k, 0.01, 1.0, &mut rng);
+    let r0 = Tensor3::random_uniform(kind.core_rows(k), k, m, 0.01, 1.0, &mut rng);
+    (Arc::new(a0), Arc::new(r0))
+}
+
+/// Run one family through `rescal_rank` on an explicit set of rank
+/// contexts (in-process or TCP — the same code path the engine drives),
+/// returning `(row, col, a_row, rel_error)` per rank.
+fn run_family_on(
+    ctxs: Vec<RankCtx>,
+    x: &Tensor3,
+    kind: ModelKind,
+    a0: &Arc<Mat>,
+    r0: &Arc<Tensor3>,
+    iters: usize,
+) -> Vec<(usize, usize, Mat, f32)> {
+    let n = x.n1();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ctxs
+            .into_iter()
+            .map(|ctx| {
+                let (a0, r0) = (a0.clone(), r0.clone());
+                s.spawn(move || {
+                    let (rs, re) = ctx.grid.chunk(n, ctx.row);
+                    let (cs, ce) = ctx.grid.chunk(n, ctx.col);
+                    let tile = LocalTile::Dense(x.tile(rs, re, cs, ce));
+                    let cfg = DistRescalConfig {
+                        opts: RescalOptions::new(a0.cols(), iters),
+                        init: DistInit::Given(a0, r0),
+                        n,
+                        model: kind,
+                    };
+                    let mut backend = NativeBackend::new();
+                    let mut ws = Workspace::new();
+                    let mut trace = Trace::disabled();
+                    let out = rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+                        .expect("rescal_rank");
+                    (ctx.row, ctx.col, out.a_row, out.rel_error)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Assemble the full A from the diagonal ranks of a grid run.
+fn assemble_a(results: &[(usize, usize, Mat, f32)], n: usize, k: usize, p: usize) -> (Mat, f32) {
+    let grid = Grid::new(p);
+    let mut a = Mat::zeros(n, k);
+    let mut err = 0.0;
+    for (row, col, block, rel) in results {
+        if row == col {
+            let (s, _) = grid.chunk(n, *row);
+            for i in 0..block.rows() {
+                for j in 0..k {
+                    a[(s + i, j)] = block[(i, j)];
+                }
+            }
+            err = *rel;
+        }
+    }
+    (a, err)
+}
+
+// ---------------------------------------------------------------------
+// DistMult vs a naive dense-diagonal reference
+// ---------------------------------------------------------------------
+
+/// Textbook DistMult MU, written against full dense matrices with the
+/// diagonal kept explicit — no shared code with the trait impl. Mirrors
+/// the distributed schedule (per-slice d update under the *current*
+/// iterate, A update from the summed terms, final column normalization
+/// with `d_j ← d_j·s_j²`).
+fn distmult_reference(
+    x: &Tensor3,
+    a0: &Mat,
+    d0: &Tensor3,
+    iters: usize,
+    eps: f32,
+) -> (Mat, Tensor3, f32) {
+    let (n, k, m) = (a0.rows(), a0.cols(), x.m());
+    let mut a = a0.clone();
+    let mut d: Vec<Vec<f32>> =
+        (0..m).map(|t| d0.slice(t).row(0).to_vec()).collect();
+    for _ in 0..iters {
+        // G = AᵀA
+        let mut g = vec![vec![0.0f32; k]; k];
+        for i in 0..n {
+            for j1 in 0..k {
+                for j2 in 0..k {
+                    g[j1][j2] += a[(i, j1)] * a[(i, j2)];
+                }
+            }
+        }
+        let mut num_a = vec![vec![0.0f32; k]; n];
+        let mut deno_a = vec![vec![0.0f32; k]; n];
+        for t in 0..m {
+            let xt = x.slice(t);
+            // XA
+            let mut xa = vec![vec![0.0f32; k]; n];
+            for i in 0..n {
+                for p in 0..n {
+                    let v = xt[(i, p)];
+                    for j in 0..k {
+                        xa[i][j] += v * a[(p, j)];
+                    }
+                }
+            }
+            // d ← d ∘ diag(AᵀX_tA) / (d·(G∘G) + ε)
+            let dt = &mut d[t];
+            for j in 0..k {
+                let mut num = 0.0f32;
+                for i in 0..n {
+                    num += a[(i, j)] * xa[i][j];
+                }
+                let mut deno = 0.0f32;
+                for l in 0..k {
+                    deno += dt[l] * g[l][j] * g[l][j];
+                }
+                dt[j] *= num / (deno + eps);
+            }
+            // A-update terms under the refreshed d:
+            // num += X_tA·D + X_tᵀ(A·D), deno += 2·(A·D)(G·D)
+            for i in 0..n {
+                for j in 0..k {
+                    num_a[i][j] += xa[i][j] * dt[j];
+                    let mut acc = 0.0f32;
+                    for l in 0..k {
+                        acc += a[(i, l)] * dt[l] * g[l][j] * dt[j];
+                    }
+                    deno_a[i][j] += 2.0 * acc;
+                }
+            }
+            for i in 0..n {
+                for p in 0..n {
+                    let v = xt[(p, i)];
+                    for j in 0..k {
+                        num_a[i][j] += v * a[(p, j)] * dt[j];
+                    }
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..k {
+                a[(i, j)] *= num_a[i][j] / (deno_a[i][j] + eps);
+            }
+        }
+    }
+    // final normalization: unit columns, d absorbs s²
+    let mut scales = vec![0.0f32; k];
+    for j in 0..k {
+        let mut sq = 0.0f32;
+        for i in 0..n {
+            sq += a[(i, j)] * a[(i, j)];
+        }
+        scales[j] = if sq > 0.0 { sq.sqrt() } else { 1.0 };
+    }
+    for i in 0..n {
+        for j in 0..k {
+            a[(i, j)] /= scales[j];
+        }
+    }
+    for dt in &mut d {
+        for j in 0..k {
+            dt[j] *= scales[j] * scales[j];
+        }
+    }
+    // ‖X − A·D_t·Aᵀ‖ / ‖X‖
+    let mut res = 0.0f64;
+    let mut norm = 0.0f64;
+    for t in 0..m {
+        let xt = x.slice(t);
+        for i in 0..n {
+            for o in 0..n {
+                let mut rec = 0.0f32;
+                for j in 0..k {
+                    rec += a[(i, j)] * d[t][j] * a[(o, j)];
+                }
+                let diff = (xt[(i, o)] - rec) as f64;
+                res += diff * diff;
+                norm += (xt[(i, o)] as f64) * (xt[(i, o)] as f64);
+            }
+        }
+    }
+    let rel = (res.sqrt() / norm.sqrt().max(1e-300)) as f32;
+    let d_tensor =
+        Tensor3::from_slices(d.into_iter().map(|dt| Mat::from_vec(1, k, dt)).collect());
+    (a, d_tensor, rel)
+}
+
+#[test]
+fn distmult_trait_matches_naive_diagonal_reference() {
+    let (n, m, k, iters) = (16, 2, 3, 8);
+    let x = synthetic::planted_tensor(n, m, k, 0.0, 2200).x;
+    let (a0, r0) = given_init(n, k, m, ModelKind::DistMult, 2201);
+    let eps = RescalOptions::new(k, iters).eps;
+    let (a_want, d_want, rel_want) = distmult_reference(&x, &a0, &r0, iters, eps);
+
+    let results = run_family_on(
+        RankCtx::create_all(1),
+        &x,
+        ModelKind::DistMult,
+        &a0,
+        &r0,
+        iters,
+    );
+    let (a_got, rel_got) = assemble_a(&results, n, k, 1);
+    for i in 0..n {
+        for j in 0..k {
+            let (got, want) = (a_got[(i, j)], a_want[(i, j)]);
+            assert!(
+                (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                "A[{i},{j}]: trait {got} vs reference {want}"
+            );
+        }
+    }
+    assert!(
+        (rel_got - rel_want).abs() < 1e-3,
+        "rel_error: trait {rel_got} vs reference {rel_want}"
+    );
+    // the reference must actually fit the planted tensor, or the
+    // agreement above is vacuous
+    assert!(rel_want < 0.5, "reference failed to descend: {rel_want}");
+}
+
+#[test]
+fn distmult_results_independent_of_grid_and_tile_storage() {
+    let (n, m, k, iters) = (20, 2, 3, 10);
+    let mut rng = Rng::new(2300);
+    // genuinely sparse data so the CSR path has structure to walk
+    let sparse: Vec<Csr> = (0..m).map(|_| Csr::random(n, n, 0.15, &mut rng)).collect();
+    let x = Tensor3::from_slices(sparse.iter().map(|s| s.to_dense()).collect());
+    let (a0, r0) = given_init(n, k, m, ModelKind::DistMult, 2301);
+
+    let g1 = run_family_on(RankCtx::create_all(1), &x, ModelKind::DistMult, &a0, &r0, iters);
+    let (a1, e1) = assemble_a(&g1, n, k, 1);
+    let g4 = run_family_on(RankCtx::create_all(4), &x, ModelKind::DistMult, &a0, &r0, iters);
+    let (a4, e4) = assemble_a(&g4, n, k, 4);
+    drescal::testing::assert_close(a4.as_slice(), a1.as_slice(), 1e-3);
+    assert!((e4 - e1).abs() < 1e-3, "grid changed the answer: {e1} vs {e4}");
+
+    // same data through the sparse tile on a 1×1 grid
+    let results = run_on_grid(1, |ctx| {
+        let tile = LocalTile::Sparse(sparse.clone());
+        let cfg = DistRescalConfig {
+            opts: RescalOptions::new(k, iters),
+            init: DistInit::Given(a0.clone(), r0.clone()),
+            n,
+            model: ModelKind::DistMult,
+        };
+        let mut backend = NativeBackend::new();
+        let mut ws = Workspace::new();
+        let mut trace = Trace::disabled();
+        rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+            .expect("sparse-tile rescal_rank")
+    });
+    let sp = &results[0];
+    drescal::testing::assert_close(sp.a_row.as_slice(), a1.as_slice(), 1e-3);
+    assert!((sp.rel_error - e1).abs() < 1e-3, "tile storage changed the answer");
+    assert_eq!(sp.r.n1(), 1, "distmult cores must stay 1×k diagonals");
+}
+
+// ---------------------------------------------------------------------
+// Logistic: Bernoulli MU descends
+// ---------------------------------------------------------------------
+
+#[test]
+fn logistic_error_monotone_nonincreasing() {
+    let (n, m, k) = (16, 2, 2);
+    let x = synthetic::block_tensor(n, m, k, 0.01, 2400).x;
+    let (a0, r0) = given_init(n, k, m, ModelKind::Logistic, 2401);
+    // checkpoints along one deterministic trajectory (shared init). The
+    // MU rule descends the Bernoulli objective; the reported Frobenius
+    // error against σ(ARAᵀ) tracks it with a little room for the
+    // metric/objective gap between nearby checkpoints.
+    let mut errs = Vec::new();
+    for iters in [5usize, 10, 20, 40] {
+        let results =
+            run_family_on(RankCtx::create_all(1), &x, ModelKind::Logistic, &a0, &r0, iters);
+        let (_, _, a, rel) = &results[0];
+        assert!(rel.is_finite(), "logistic error diverged at {iters} iters");
+        if let Some(&prev) = errs.last() {
+            assert!(
+                *rel <= prev + 5e-2,
+                "logistic error rose at {iters} iters: {prev} -> {rel}"
+            );
+        }
+        errs.push(*rel);
+        assert!(
+            a.as_slice().iter().all(|&v| v >= 0.0),
+            "logistic factors left the non-negative orthant"
+        );
+    }
+    assert!(
+        errs[errs.len() - 1] <= errs[0] + 1e-3,
+        "no overall descent: {errs:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// transports: the family axis is orthogonal to the transport axis
+// ---------------------------------------------------------------------
+
+#[test]
+fn families_agree_across_transports() {
+    let (n, m, k, iters, p) = (12, 2, 2, 6, 4);
+    let x = synthetic::planted_tensor(n, m, k, 0.0, 2500).x;
+    for kind in [ModelKind::DistMult, ModelKind::Logistic] {
+        let (a0, r0) = given_init(n, k, m, kind, 2501);
+        let inproc = run_family_on(RankCtx::create_all(p), &x, kind, &a0, &r0, iters);
+        let tcp_ctxs: Vec<RankCtx> = loopback_meshes(p, TcpConfig::default())
+            .expect("loopback mesh")
+            .into_iter()
+            .map(|mesh| rank_ctx_from_mesh(mesh, Grid::new(p)).expect("tcp rank ctx"))
+            .collect();
+        let tcp = run_family_on(tcp_ctxs, &x, kind, &a0, &r0, iters);
+        let (a_in, e_in) = assemble_a(&inproc, n, k, p);
+        let (a_tcp, e_tcp) = assemble_a(&tcp, n, k, p);
+        drescal::testing::assert_close(a_tcp.as_slice(), a_in.as_slice(), 1e-6);
+        assert!(
+            (e_tcp - e_in).abs() < 1e-6,
+            "{}: transport changed the answer ({e_in} vs {e_tcp})",
+            kind.as_str()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// lifecycle: train → export → persist → serve, per family
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_family_survives_train_export_serve_roundtrip() {
+    let (n, m, k) = (16, 2, 2);
+    let planted = synthetic::block_tensor(n, m, k, 0.01, 2600);
+    let data = JobData::dense(planted.x);
+    for kind in [ModelKind::Rescal, ModelKind::DistMult, ModelKind::Logistic] {
+        let mut engine = Engine::new(EngineConfig::new(4).with_model(kind)).unwrap();
+        let report = engine.factorize(&data, &RescalOptions::new(k, 40), 17).unwrap();
+        assert_eq!(report.model, kind, "report not stamped with the family");
+        assert_eq!(report.r.n1(), kind.core_rows(k), "wrong core shape for {}", kind.as_str());
+        assert!(report.rel_error.is_finite());
+
+        let exported = engine.export_model(&Report::Factorize(report)).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "drescal_family_{}_{}.json",
+            kind.as_str(),
+            std::process::id()
+        ));
+        exported.save(&path).unwrap();
+        let model = FactorModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(model.model(), kind, "family lost in the JSON artifact");
+        assert!(model.ensure_model(kind).is_ok());
+        let mismatch = if kind == ModelKind::Rescal {
+            ModelKind::DistMult
+        } else {
+            ModelKind::Rescal
+        };
+        let e = model.ensure_model(mismatch).unwrap_err();
+        assert!(e.to_string().contains("model family mismatch"), "{e}");
+
+        let saved = model.projection_bytes_saved();
+        let mut qe = QueryEngine::new(model);
+        if kind == ModelKind::DistMult {
+            assert_eq!(saved, 2 * m * n * k * 4, "diagonal serving saved nothing");
+        } else {
+            assert_eq!(saved, 0);
+        }
+        assert_eq!(qe.stats().projection_bytes_saved, saved);
+        let answers = qe
+            .submit_batch(&[
+                Query::TopObjects { s: 0, r: 0, top: 3 },
+                Query::Score { s: 0, r: 0, o: 1 },
+            ])
+            .unwrap();
+        match &answers[0] {
+            Answer::TopK(hits) => {
+                assert_eq!(hits.len(), 3);
+                if kind == ModelKind::Logistic {
+                    for h in hits {
+                        assert!(
+                            h.score > 0.0 && h.score < 1.0,
+                            "logistic scores are probabilities, got {}",
+                            h.score
+                        );
+                    }
+                }
+            }
+            other => panic!("completion answered {other:?}"),
+        }
+        match &answers[1] {
+            Answer::Score(v) => {
+                assert!(v.is_finite());
+                if kind == ModelKind::Logistic {
+                    assert!(*v > 0.0 && *v < 1.0, "σ left (0,1): {v}");
+                }
+            }
+            other => panic!("pointwise answered {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn legacy_artifacts_without_model_field_serve_as_rescal() {
+    let planted = synthetic::block_tensor(12, 2, 2, 0.01, 2700);
+    let data = JobData::dense(planted.x);
+    let mut engine = Engine::new(EngineConfig::new(1)).unwrap();
+    let report = engine.factorize(&data, &RescalOptions::new(2, 20), 3).unwrap();
+    let exported = engine.export_model(&Report::Factorize(report)).unwrap();
+    // strip the model field the way a pre-family-plane export looks
+    let mut obj = match exported.to_json() {
+        Json::Obj(o) => o,
+        _ => unreachable!("artifacts serialize as objects"),
+    };
+    obj.remove("model");
+    let legacy = FactorModel::from_json(&Json::Obj(obj)).unwrap();
+    assert_eq!(legacy.model(), ModelKind::Rescal);
+    assert_eq!(legacy.projection_bytes_saved(), 0);
+    let mut qe = QueryEngine::new(legacy);
+    assert!(matches!(
+        qe.query(Query::TopObjects { s: 0, r: 0, top: 2 }).unwrap(),
+        Answer::TopK(_)
+    ));
+}
+
+// ---------------------------------------------------------------------
+// typed rejections
+// ---------------------------------------------------------------------
+
+#[test]
+fn nndsvd_init_is_rejected_for_non_rescal_families() {
+    let planted = synthetic::block_tensor(12, 2, 2, 0.01, 2800);
+    let data = JobData::dense(planted.x);
+    let mut engine = Engine::new(EngineConfig::new(1)).unwrap();
+    let cfg = RescalkConfig {
+        k_min: 2,
+        k_max: 3,
+        perturbations: 2,
+        rescal_iters: 10,
+        regress_iters: 5,
+        seed: 1,
+        init: InitStrategy::Nndsvd {
+            factors: Arc::new(std::collections::BTreeMap::new()),
+            jitter: 0.01,
+        },
+        model: ModelKind::DistMult,
+        ..Default::default()
+    };
+    let e = engine.model_select(&data, &cfg).unwrap_err();
+    assert!(e.to_string().contains("NNDSVD"), "{e}");
+    // random init with the same family is fine
+    let ok = RescalkConfig {
+        k_min: 2,
+        k_max: 3,
+        perturbations: 2,
+        rescal_iters: 30,
+        regress_iters: 5,
+        seed: 1,
+        model: ModelKind::DistMult,
+        ..Default::default()
+    };
+    let sweep = engine.model_select(&data, &ok).unwrap();
+    assert_eq!(sweep.model, ModelKind::DistMult, "sweep report not stamped");
+    assert_eq!(sweep.r.n1(), 1, "sweep winner must keep diagonal cores");
+}

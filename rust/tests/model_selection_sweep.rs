@@ -36,6 +36,7 @@ fn run_case(case: &Case) -> (usize, f32) {
         seed: case.seed,
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
+        ..Default::default()
     };
     let n = case.n;
     let results = run_on_grid(case.p, |ctx| {
@@ -116,6 +117,7 @@ fn higher_noise_still_recovers_k() {
         seed: 910,
         rule: SelectionRule::default(),
         init: InitStrategy::Random,
+        ..Default::default()
     };
     let results = run_on_grid(4, |ctx| {
         let (r0, r1) = ctx.grid.chunk(24, ctx.row);

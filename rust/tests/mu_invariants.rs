@@ -10,7 +10,7 @@ use drescal::comm::grid::run_on_grid;
 use drescal::comm::Trace;
 use drescal::data::synthetic;
 use drescal::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
-use drescal::rescal::{rescal_seq, Init, LocalTile, RescalOptions};
+use drescal::rescal::{rescal_seq, Init, LocalTile, ModelKind, RescalOptions};
 use drescal::tensor::ops::is_nonnegative;
 use drescal::tensor::Tensor3;
 use drescal::testing::property;
@@ -94,6 +94,7 @@ fn distributed_equals_sequential_random_configs() {
                 opts: opts.clone(),
                 init: DistInit::Given(a0.clone(), r0.clone()),
                 n,
+                model: ModelKind::Rescal,
             };
             let mut backend = NativeBackend::new();
             let mut ws = Workspace::new();

@@ -8,7 +8,7 @@ use drescal::comm::grid::run_on_grid;
 use drescal::comm::{CommOp, Trace};
 use drescal::data::synthetic;
 use drescal::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
-use drescal::rescal::{LocalTile, RescalOptions};
+use drescal::rescal::{LocalTile, ModelKind, RescalOptions};
 use drescal::tensor::{Mat, Tensor3};
 
 fn run_p(x: &Tensor3, p: usize, k: usize, iters: usize) -> (Mat, f32, Vec<Trace>) {
@@ -25,6 +25,7 @@ fn run_p(x: &Tensor3, p: usize, k: usize, iters: usize) -> (Mat, f32, Vec<Trace>
             opts: RescalOptions::new(k, iters),
             init: DistInit::Given(a0.clone(), r0.clone()),
             n,
+            model: ModelKind::Rescal,
         };
         let mut backend = NativeBackend::new();
         let mut ws = Workspace::new();
