@@ -209,10 +209,22 @@ pub fn pin_single_threaded_gemm() {
 use crate::error::Result;
 use crate::serve::{FactorModel, Query, QueryEngine, ServeStats};
 
-/// One measured serving pass: wall time plus the pass's serve counters.
+/// One measured serving pass: wall time plus the pass's serve counters
+/// (including the cumulative latency percentiles at pass end).
 pub struct ServePoint {
     pub wall_seconds: f64,
     pub stats: ServeStats,
+}
+
+impl ServePoint {
+    /// Queries answered per second over the pass.
+    pub fn qps(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.stats.queries as f64 / self.wall_seconds
+        }
+    }
 }
 
 /// The standard serve-bench workload: `total` top-k object completions
@@ -283,5 +295,9 @@ fn stats_since(now: ServeStats, earlier: ServeStats) -> ServeStats {
         ws_reuses: now.ws_reuses - earlier.ws_reuses,
         // fixed at engine construction, not a per-pass counter
         projection_bytes_saved: now.projection_bytes_saved,
+        // distribution snapshots, not deltas: report the latest
+        latency_p50_us: now.latency_p50_us,
+        latency_p95_us: now.latency_p95_us,
+        latency_p99_us: now.latency_p99_us,
     }
 }

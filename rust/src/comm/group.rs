@@ -109,6 +109,14 @@ impl Group {
         self.transport.lock().unwrap().recv(peer)
     }
 
+    /// Gather byte payloads to group member 0 (collective; the
+    /// telemetry gather — see [`Transport::gather_bytes_to_root`]).
+    /// Member 0 receives every member's payload in member order,
+    /// everyone else gets `None`.
+    pub fn gather_bytes_to_root(&self, data: &[u8]) -> CommResult<Option<Vec<Vec<u8>>>> {
+        self.transport.lock().unwrap().gather_bytes_to_root(data)
+    }
+
     /// Gather scalar f64 values (for timing/metric aggregation).
     pub fn all_gather_f64(&self, v: f64) -> CommResult<Vec<f64>> {
         let gathered = self.all_gather(&[(v as f32)])?;
@@ -236,6 +244,25 @@ mod tests {
         });
         assert_eq!(results[0], vec![7.0]);
         assert_eq!(results[1], vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn gather_bytes_to_root_ragged_and_bit_exact() {
+        // ragged payloads, including bytes that alias NaN f32 patterns —
+        // the bitcast default impl must return them bit-exact
+        let results = run_group(3, |g| {
+            let payload: Vec<u8> =
+                (0..(2 * g.rank + 1)).map(|i| 0xF8u8.wrapping_add(i as u8)).collect();
+            g.gather_bytes_to_root(&payload).unwrap()
+        });
+        let root = results[0].as_ref().expect("member 0 gets the payloads");
+        assert!(results[1].is_none() && results[2].is_none());
+        assert_eq!(root.len(), 3);
+        for (rank, got) in root.iter().enumerate() {
+            let want: Vec<u8> =
+                (0..(2 * rank + 1)).map(|i| 0xF8u8.wrapping_add(i as u8)).collect();
+            assert_eq!(got, &want, "rank {rank} payload corrupted");
+        }
     }
 
     #[test]

@@ -5,8 +5,19 @@
 //! `column_reduce`, `row_broadcast`, `column_broadcast` (§6.3). Each rank
 //! records (op, bytes, duration) tuples; the coordinator aggregates them
 //! into exactly those breakdown rows.
+//!
+//! An enabled trace also feeds the telemetry plane: every recorded op
+//! lands as a timestamped span in an embedded [`crate::obs::Recorder`]
+//! (category `"comm"` or `"compute"`, labeled with the op name and the
+//! current MU iteration), and the distributed loop brackets each
+//! iteration segment with `"phase"` spans via
+//! [`Trace::phase_start`]/[`Trace::phase_end`]. The ring snapshot
+//! ([`Trace::timeline_snapshot`]) is what rank 0 gathers from the whole
+//! cluster and `--trace-out` exports as a Chrome trace.
 
 use std::time::{Duration, Instant};
+
+use crate::obs::{self, Recorder};
 
 /// Operation categories matching the paper's breakdown plots.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -84,16 +95,29 @@ pub struct TraceEvent {
 pub struct Trace {
     events: Vec<TraceEvent>,
     enabled: bool,
+    recorder: Recorder,
 }
 
 impl Trace {
     pub fn new() -> Self {
-        Trace { events: Vec::new(), enabled: true }
+        Trace { events: Vec::new(), enabled: true, recorder: Recorder::new() }
     }
 
     /// A trace that drops all events (hot-path zero overhead mode).
     pub fn disabled() -> Self {
-        Trace { events: Vec::new(), enabled: false }
+        Trace { events: Vec::new(), enabled: false, recorder: Recorder::disabled() }
+    }
+
+    /// Charge a span to the embedded timeline recorder.
+    #[inline]
+    fn timeline_push(&mut self, op: CommOp, bytes: u64, t0: Instant, dur: Duration) {
+        self.recorder.end_at(
+            if op.is_comm() { "comm" } else { "compute" },
+            op.name(),
+            t0,
+            dur,
+            bytes,
+        );
     }
 
     /// Time `f`, charging it to `op` with the given payload size.
@@ -104,7 +128,9 @@ impl Trace {
         }
         let t0 = Instant::now();
         let out = f();
-        self.events.push(TraceEvent { op, bytes, duration: t0.elapsed() });
+        let dur = t0.elapsed();
+        self.timeline_push(op, bytes as u64, t0, dur);
+        self.events.push(TraceEvent { op, bytes, duration: dur });
         out
     }
 
@@ -126,9 +152,43 @@ impl Trace {
         let w0 = group.wire_stats();
         let t0 = Instant::now();
         let out = f();
+        let dur = t0.elapsed();
         let wire = group.wire_stats().since(w0);
-        self.events.push(TraceEvent { op, bytes: wire.bytes as usize, duration: t0.elapsed() });
+        self.timeline_push(op, wire.bytes, t0, dur);
+        self.events.push(TraceEvent { op, bytes: wire.bytes as usize, duration: dur });
         out
+    }
+
+    /// Set the MU iteration charged to subsequent timeline spans
+    /// ([`crate::obs::NO_ITER`] outside the loop).
+    #[inline]
+    pub fn set_iter(&mut self, iter: u32) {
+        self.recorder.set_iter(iter);
+    }
+
+    /// Open a `"phase"` span (pack/gemm/reduce/mu_update/normalize in
+    /// the distributed loop). Returns `None` when tracing is off; close
+    /// with [`Trace::phase_end`]. A token API instead of a closure
+    /// because the phase body needs `&mut self` for its nested op spans.
+    #[inline]
+    pub fn phase_start(&self) -> Option<Instant> {
+        self.recorder.begin()
+    }
+
+    /// Close a phase span opened with [`Trace::phase_start`].
+    #[inline]
+    pub fn phase_end(&mut self, label: &'static str, t0: Option<Instant>) {
+        self.recorder.end("phase", label, t0, 0);
+    }
+
+    /// Whether the embedded timeline recorder is collecting spans.
+    pub fn timeline_enabled(&self) -> bool {
+        self.recorder.enabled()
+    }
+
+    /// Snapshot the timeline ring for the cross-process gather.
+    pub fn timeline_snapshot(&self, rank: usize) -> obs::RankTimeline {
+        self.recorder.snapshot(rank)
     }
 
     /// Record an event with a known duration (used when replaying modeled

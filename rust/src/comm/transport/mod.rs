@@ -124,6 +124,57 @@ pub trait Transport: Send {
     /// Point-to-point receive from group member `peer`.
     fn recv(&mut self, peer: usize) -> CommResult<Vec<f32>>;
 
+    /// Gather arbitrary byte payloads to group member 0 — the telemetry
+    /// gather that ships remote span buffers to the leader at job end.
+    /// Collective: every member calls it; member 0 receives
+    /// `Some(payloads)` ordered by member index (its own at `[0]`),
+    /// everyone else `None`.
+    ///
+    /// The default implementation rides [`Transport::all_gather`]:
+    /// payloads are padded to the longest and bitcast into f32 words.
+    /// `all_gather` is copy-only (no arithmetic), so arbitrary bit
+    /// patterns — including ones that alias NaN — survive the trip
+    /// intact. The TCP backend overrides this with a true gather
+    /// (dedicated telemetry frames to member 0 only) so span shipment
+    /// doesn't cost a full all-to-all.
+    fn gather_bytes_to_root(&mut self, data: &[u8]) -> CommResult<Option<Vec<Vec<u8>>>> {
+        let size = self.size();
+        let lens = self.all_gather(&[f32::from_bits(data.len() as u32)])?;
+        let lens: Vec<usize> = lens.iter().map(|f| f.to_bits() as usize).collect();
+        if lens.len() != size {
+            return Err(CommError::Protocol {
+                reason: format!("byte gather saw {} length slots for {size} members", lens.len()),
+            });
+        }
+        let max_len = lens.iter().copied().max().unwrap_or(0);
+        // uniform across members (everyone holds the same `lens`), so
+        // skipping the payload round is still collective-consistent
+        if max_len == 0 {
+            return Ok(if self.rank() == 0 { Some(vec![Vec::new(); size]) } else { None });
+        }
+        let words = max_len.div_ceil(4);
+        let mut packed = vec![0f32; words];
+        for (i, chunk) in data.chunks(4).enumerate() {
+            let mut b = [0u8; 4];
+            b[..chunk.len()].copy_from_slice(chunk);
+            packed[i] = f32::from_bits(u32::from_le_bytes(b));
+        }
+        let gathered = self.all_gather(&packed)?;
+        if self.rank() != 0 {
+            return Ok(None);
+        }
+        let mut out = Vec::with_capacity(size);
+        for (m, &len) in lens.iter().enumerate() {
+            let mut bytes = Vec::with_capacity(words * 4);
+            for w in &gathered[m * words..(m + 1) * words] {
+                bytes.extend_from_slice(&w.to_bits().to_le_bytes());
+            }
+            bytes.truncate(len);
+            out.push(bytes);
+        }
+        Ok(Some(out))
+    }
+
     /// Cumulative wire traffic for this member.
     fn wire_stats(&self) -> WireStats;
 }

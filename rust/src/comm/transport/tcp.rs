@@ -6,7 +6,8 @@
 //!
 //! ```text
 //! magic   u32 LE   0x44525450 ("DRTP")
-//! kind    u8       1 = hello (mesh handshake), 2 = data
+//! kind    u8       1 = hello (mesh handshake), 2 = data,
+//!                  3 = telemetry (span-buffer gather to member 0)
 //! group   u32 LE   communicator scope id (world = 0, rows, cols)
 //! seq     u64 LE   per-group collective sequence number
 //! len     u32 LE   payload length in bytes
@@ -58,6 +59,7 @@ pub const TRANSPORT_VERSION: u32 = 1;
 const MAGIC: u32 = 0x4452_5450; // "DRTP"
 const KIND_HELLO: u8 = 1;
 const KIND_DATA: u8 = 2;
+const KIND_TELEMETRY: u8 = 3;
 const HEADER_LEN: usize = 4 + 1 + 4 + 8 + 4;
 
 /// Socket deadlines and retry budget for one mesh.
@@ -210,11 +212,24 @@ impl TcpMesh {
         seq: u64,
         payload: &[u8],
     ) -> CommResult<usize> {
+        self.send_frame_kind(peer, KIND_DATA, group, seq, payload)
+    }
+
+    /// Send one frame of the given kind to world rank `peer`; returns
+    /// wire bytes.
+    fn send_frame_kind(
+        &mut self,
+        peer: usize,
+        frame_kind: u8,
+        group: u32,
+        seq: u64,
+        payload: &[u8],
+    ) -> CommResult<usize> {
         let cfg = self.cfg;
         let stream = self.conn(peer)?;
         let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
         buf.extend_from_slice(&MAGIC.to_le_bytes());
-        buf.push(KIND_DATA);
+        buf.push(frame_kind);
         buf.extend_from_slice(&group.to_le_bytes());
         buf.extend_from_slice(&seq.to_le_bytes());
         buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -227,6 +242,20 @@ impl TcpMesh {
     /// alignment against the expected group/sequence; returns
     /// (payload, wire bytes).
     fn recv_frame(&mut self, peer: usize, group: u32, seq: u64) -> CommResult<(Vec<u8>, usize)> {
+        self.recv_frame_kind(peer, KIND_DATA, group, seq)
+    }
+
+    /// Receive one frame of the given kind from world rank `peer`,
+    /// verifying kind and frame alignment; returns (payload, wire
+    /// bytes). A kind mismatch is a protocol error — the program order
+    /// of collectives fixes which kind arrives when.
+    fn recv_frame_kind(
+        &mut self,
+        peer: usize,
+        frame_kind: u8,
+        group: u32,
+        seq: u64,
+    ) -> CommResult<(Vec<u8>, usize)> {
         let cfg = self.cfg;
         let stream = self.conn(peer)?;
         let mut header = [0u8; HEADER_LEN];
@@ -236,10 +265,11 @@ impl TcpMesh {
         let got_group = u32::from_le_bytes(header[5..9].try_into().unwrap());
         let got_seq = u64::from_le_bytes(header[9..17].try_into().unwrap());
         let len = u32::from_le_bytes(header[17..21].try_into().unwrap()) as usize;
-        if magic != MAGIC || kind != KIND_DATA {
+        if magic != MAGIC || kind != frame_kind {
             return Err(CommError::Protocol {
                 reason: format!(
-                    "bad frame from rank {peer}: magic={magic:#x} kind={kind} (corrupt stream?)"
+                    "bad frame from rank {peer}: magic={magic:#x} kind={kind} \
+                     (expected kind {frame_kind})"
                 ),
             });
         }
@@ -477,6 +507,42 @@ impl Transport for TcpGroup {
         })?;
         let seq = self.next_seq();
         let out = self.recv_f32(world, seq)?;
+        self.stats.ops += 1;
+        Ok(out)
+    }
+
+    /// True gather via dedicated telemetry frames: members 1..n each
+    /// send one frame to member 0, received in member order — no
+    /// all-to-all ring, no f32 bitcasting. Every member advances the
+    /// group sequence, so the frames stay aligned with the collective
+    /// program order.
+    fn gather_bytes_to_root(&mut self, data: &[u8]) -> CommResult<Option<Vec<Vec<u8>>>> {
+        let n = self.members.len();
+        let seq = self.next_seq();
+        let out = if self.my == 0 {
+            let mut out = Vec::with_capacity(n);
+            out.push(data.to_vec());
+            for m in 1..n {
+                let world = self.members[m];
+                let (payload, bytes) = self
+                    .mesh
+                    .lock()
+                    .unwrap()
+                    .recv_frame_kind(world, KIND_TELEMETRY, self.group_id, seq)?;
+                self.stats.bytes += bytes as u64;
+                out.push(payload);
+            }
+            Some(out)
+        } else {
+            let root = self.members[0];
+            let bytes = self
+                .mesh
+                .lock()
+                .unwrap()
+                .send_frame_kind(root, KIND_TELEMETRY, self.group_id, seq, data)?;
+            self.stats.bytes += bytes as u64;
+            None
+        };
         self.stats.ops += 1;
         Ok(out)
     }
@@ -817,6 +883,36 @@ mod tests {
             assert_eq!(s.bytes, 2 * (HEADER_LEN as u64 + 32));
             assert_eq!(s.ops, 1);
         }
+    }
+
+    #[test]
+    fn telemetry_gather_ships_bytes_to_member_zero() {
+        let results = run_world(3, |mut g| {
+            let rank = g.rank();
+            let payload: Vec<u8> = (0..(10 * rank + 1)).map(|i| (rank * 100 + i) as u8).collect();
+            let before = g.wire_stats();
+            let out = g.gather_bytes_to_root(&payload).unwrap();
+            // a collective is still legal on the same group afterwards —
+            // the telemetry frame advanced the shared sequence everywhere
+            let mut v = vec![1.0f32];
+            g.all_reduce_sum(&mut v).unwrap();
+            (out, g.wire_stats().since(before), v[0])
+        });
+        let root = results[0].0.as_ref().expect("member 0 gets payloads");
+        assert!(results[1].0.is_none() && results[2].0.is_none());
+        assert_eq!(root.len(), 3);
+        for (rank, got) in root.iter().enumerate() {
+            let want: Vec<u8> =
+                (0..(10 * rank + 1)).map(|i| (rank * 100 + i) as u8).collect();
+            assert_eq!(got, &want, "rank {rank} payload corrupted");
+        }
+        for (rank, (_, wire, sum)) in results.iter().enumerate() {
+            assert_eq!(*sum, 3.0, "collective after gather desynced on rank {rank}");
+            assert_eq!(wire.ops, 2);
+            assert!(wire.bytes > 0, "gather moved no wire bytes on rank {rank}");
+        }
+        // senders are charged at least their one telemetry frame
+        assert!(results[1].1.bytes >= (HEADER_LEN + 11) as u64);
     }
 
     #[test]

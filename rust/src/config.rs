@@ -229,6 +229,9 @@ pub struct FactorizeCmd {
     pub seed: u64,
     /// Also print the unified report as JSON.
     pub json: bool,
+    /// `--trace-out FILE`: write the gathered span timeline as Chrome
+    /// trace-event JSON (implies `--trace`).
+    pub trace_out: Option<String>,
 }
 
 /// `drescal model-select` — the full RESCALk sweep.
@@ -238,6 +241,9 @@ pub struct ModelSelectCmd {
     pub engine: EngineConfig,
     pub sweep: RescalkConfig,
     pub json: bool,
+    /// `--trace-out FILE`: write the gathered span timeline as Chrome
+    /// trace-event JSON (implies `--trace`).
+    pub trace_out: Option<String>,
 }
 
 /// `drescal exascale` — the Fig 13 replay.
@@ -258,6 +264,9 @@ pub struct TrainCmd {
     pub opts: RescalOptions,
     pub seed: u64,
     pub json: bool,
+    /// `--trace-out FILE`: write the gathered cross-process span
+    /// timeline as Chrome trace-event JSON (implies `--trace`).
+    pub trace_out: Option<String>,
 }
 
 /// `drescal worker` — join a leader's cluster and serve rank jobs until
@@ -377,6 +386,15 @@ pub struct ArtifactsCmd {
     pub dir: String,
 }
 
+/// `drescal trace-summary <trace.json>` — print the per-op runtime
+/// table (paper §6.3 style) aggregated from a Chrome trace-event file
+/// written by `--trace-out`.
+#[derive(Clone, Debug)]
+pub struct TraceSummaryCmd {
+    /// The trace file (positional or `--input`).
+    pub input: String,
+}
+
 /// One fully-validated CLI invocation.
 pub enum Command {
     Run(FactorizeCmd),
@@ -390,6 +408,7 @@ pub enum Command {
     Query(QueryCmd),
     ServeBench(ServeBenchCmd),
     Ingest(IngestCmd),
+    TraceSummary(TraceSummaryCmd),
     Help,
 }
 
@@ -400,12 +419,12 @@ pub struct RunConfig {
 
 const RUN_FLAGS: &[&str] = &[
     "config", "data", "n", "m", "k-true", "density", "seed", "p", "backend", "artifacts",
-    "trace", "k", "iters", "json", "cache-bytes", "model",
+    "trace", "trace-out", "k", "iters", "json", "cache-bytes", "model",
 ];
 const MODEL_SELECT_FLAGS: &[&str] = &[
     "config", "data", "n", "m", "k-true", "density", "seed", "p", "backend", "artifacts",
-    "trace", "iters", "json", "k-min", "k-max", "perturbations", "delta", "tol",
-    "err-every", "regress-iters", "cache-bytes", "model",
+    "trace", "trace-out", "iters", "json", "k-min", "k-max", "perturbations", "delta",
+    "tol", "err-every", "regress-iters", "cache-bytes", "model",
 ];
 const EXASCALE_FLAGS: &[&str] = &["config", "machine"];
 const ARTIFACTS_FLAGS: &[&str] = &["config", "artifacts"];
@@ -427,16 +446,25 @@ const SERVE_BENCH_FLAGS: &[&str] = &[
 ];
 const INGEST_FLAGS: &[&str] = &["config", "input", "out", "grid", "dense", "json"];
 const TRAIN_FLAGS: &[&str] = &[
-    "config", "data", "n", "m", "k-true", "density", "seed", "trace", "k", "iters",
-    "json", "workers", "listen", "port-file", "comm-timeout-ms", "max-replacements",
-    "model",
+    "config", "data", "n", "m", "k-true", "density", "seed", "trace", "trace-out", "k",
+    "iters", "json", "workers", "listen", "port-file", "comm-timeout-ms",
+    "max-replacements", "model",
 ];
 const WORKER_FLAGS: &[&str] = &["config", "connect"];
+const TRACE_SUMMARY_FLAGS: &[&str] = &["config", "input"];
 
 impl RunConfig {
     /// Parse + validate a full command line (after the binary name),
     /// merging `--config FILE` first (CLI wins).
     pub fn from_args<I: IntoIterator<Item = String>>(argv: I) -> Result<RunConfig> {
+        let mut argv: Vec<String> = argv.into_iter().collect();
+        // `trace-summary` takes its trace file as a positional:
+        // `drescal trace-summary trace.json` ≡ `--input trace.json`
+        if argv.first().map(String::as_str) == Some("trace-summary")
+            && argv.get(1).map(|a| !a.starts_with("--")).unwrap_or(false)
+        {
+            argv.insert(1, "--input".to_string());
+        }
         let mut args = Args::parse(argv)?;
         // only flags the user typed are checked against the allowlist; a
         // config file may be shared across subcommands, so its unused
@@ -462,6 +490,7 @@ impl RunConfig {
                     opts: RescalOptions::new(k, iters),
                     seed: args.get_u64("seed", 42)?,
                     json: args.get_bool("json"),
+                    trace_out: args.get("trace-out").map(str::to_string),
                 })
             }
             "model-select" => {
@@ -471,6 +500,7 @@ impl RunConfig {
                     engine: engine_config(&args)?.with_model(model_kind(&args, "model")?),
                     sweep: sweep_config(&args, "model")?,
                     json: args.get_bool("json"),
+                    trace_out: args.get("trace-out").map(str::to_string),
                 })
             }
             "exascale" => {
@@ -646,7 +676,8 @@ impl RunConfig {
                 let engine = EngineConfig {
                     p,
                     backend: BackendSpec::Native,
-                    trace: args.get_bool("trace"),
+                    // --trace-out needs span recording on every rank
+                    trace: args.get_bool("trace") || args.get("trace-out").is_some(),
                     transport: TransportKind::TcpLeader(cluster),
                     model: model_kind(&args, "model")?,
                     ..Default::default()
@@ -657,6 +688,7 @@ impl RunConfig {
                     opts: RescalOptions::new(k, iters),
                     seed: args.get_u64("seed", 42)?,
                     json: args.get_bool("json"),
+                    trace_out: args.get("trace-out").map(str::to_string),
                 })
             }
             "worker" => {
@@ -666,6 +698,16 @@ impl RunConfig {
                     .ok_or_else(|| err!("worker needs --connect <leader addr>"))?
                     .to_string();
                 Command::Worker(WorkerCmd { connect })
+            }
+            "trace-summary" => {
+                check_known_flags(&args.subcommand, &cli_flags, TRACE_SUMMARY_FLAGS)?;
+                let input = args
+                    .get("input")
+                    .ok_or_else(|| {
+                        err!("trace-summary needs a trace file: drescal trace-summary trace.json")
+                    })?
+                    .to_string();
+                Command::TraceSummary(TraceSummaryCmd { input })
             }
             "help" | "--help" | "-h" => Command::Help,
             other => bail!("unknown subcommand '{other}' — try `drescal help`"),
@@ -684,12 +726,12 @@ fn check_known_flags(subcommand: &str, cli_flags: &[String], allowed: &[&str]) -
 }
 
 /// Typed engine configuration: grid size (perfect-square-checked), backend
-/// spec, opt-in tracing (`--trace`).
+/// spec, opt-in tracing (`--trace`, implied by `--trace-out`).
 fn engine_config(args: &Args) -> Result<EngineConfig> {
     let cfg = EngineConfig {
         p: args.get_usize("p", 4)?,
         backend: args.backend()?,
-        trace: args.get_bool("trace"),
+        trace: args.get_bool("trace") || args.get("trace-out").is_some(),
         // resident-tile memory budget; 0 (the default) = unbounded
         dataset_cache_bytes: args.get_usize("cache-bytes", 0)?,
         transport: TransportKind::InProcess,
@@ -1268,6 +1310,54 @@ mod tests {
         // and `--model` as a family spelling stays rejected there
         let e = RunConfig::from_args(argv("export --model-family x")).unwrap_err();
         assert!(e.to_string().contains("unknown flag"), "{e}");
+    }
+
+    #[test]
+    fn trace_out_implies_tracing() {
+        let cfg = RunConfig::from_args(argv("run --trace-out t.json")).unwrap();
+        match cfg.command {
+            Command::Run(cmd) => {
+                assert!(cmd.engine.trace, "--trace-out must enable span recording");
+                assert_eq!(cmd.trace_out.as_deref(), Some("t.json"));
+            }
+            _ => panic!("expected run command"),
+        }
+        let cfg = RunConfig::from_args(argv("train --trace-out t.json")).unwrap();
+        match cfg.command {
+            Command::Train(cmd) => {
+                assert!(cmd.engine.trace);
+                assert_eq!(cmd.trace_out.as_deref(), Some("t.json"));
+            }
+            _ => panic!("expected train command"),
+        }
+        let cfg = RunConfig::from_args(argv("model-select --trace-out t.json")).unwrap();
+        match cfg.command {
+            Command::ModelSelect(cmd) => assert!(cmd.engine.trace),
+            _ => panic!("expected model-select command"),
+        }
+        // without the flag nothing changes
+        let cfg = RunConfig::from_args(argv("run")).unwrap();
+        match cfg.command {
+            Command::Run(cmd) => assert_eq!(cmd.trace_out, None),
+            _ => panic!("expected run command"),
+        }
+        assert!(RunConfig::from_args(argv("exascale --trace-out t.json")).is_err());
+    }
+
+    #[test]
+    fn trace_summary_takes_a_positional_path() {
+        let cfg = RunConfig::from_args(argv("trace-summary trace.json")).unwrap();
+        match cfg.command {
+            Command::TraceSummary(cmd) => assert_eq!(cmd.input, "trace.json"),
+            _ => panic!("expected trace-summary command"),
+        }
+        let cfg = RunConfig::from_args(argv("trace-summary --input t.json")).unwrap();
+        match cfg.command {
+            Command::TraceSummary(cmd) => assert_eq!(cmd.input, "t.json"),
+            _ => panic!("expected trace-summary command"),
+        }
+        let e = RunConfig::from_args(argv("trace-summary")).unwrap_err();
+        assert!(e.to_string().contains("trace file"), "{e}");
     }
 
     #[test]

@@ -16,9 +16,19 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
-    /// Aggregate per-rank traces (mean across ranks, as the paper reports).
+    /// Aggregate per-rank traces (mean across ranks, as the paper
+    /// reports). A zero-trace run (tracing disabled, or an archived
+    /// report without a traces section) aggregates to empty metrics
+    /// instead of crashing the coordinator path.
     pub fn from_traces(traces: &[Trace]) -> RunMetrics {
-        assert!(!traces.is_empty());
+        if traces.is_empty() {
+            return RunMetrics {
+                per_op_seconds: Vec::new(),
+                compute_seconds: 0.0,
+                comm_seconds: 0.0,
+                total_seconds: 0.0,
+            };
+        }
         let p = traces.len() as f64;
         let mut per_op_seconds = Vec::new();
         for &op in CommOp::all() {
@@ -138,6 +148,15 @@ mod tests {
         // density 1 == dense
         let s1 = sparse_rescal_flops_per_iter(1000, 5, 8, 1.0);
         assert!((s1 - d).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_traces_give_empty_metrics() {
+        let m = RunMetrics::from_traces(&[]);
+        assert!(m.per_op_seconds.is_empty());
+        assert_eq!(m.total_seconds, 0.0);
+        assert_eq!(m.comm_fraction(), 0.0);
+        assert!(m.format_breakdown().contains("% comm"));
     }
 
     #[test]

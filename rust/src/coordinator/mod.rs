@@ -145,6 +145,9 @@ pub struct RescalReport {
     pub iters_run: usize,
     /// Per-rank traces, rank order.
     pub traces: Vec<Trace>,
+    /// Cross-rank span timelines gathered to the leader (rank order;
+    /// empty when tracing is off). Feeds the Chrome-trace exporter.
+    pub timeline: Vec<crate::obs::RankTimeline>,
     /// Wall-clock of the distributed section.
     pub wall_seconds: f64,
     /// Workspace checkout counters summed over ranks (delta for this
@@ -169,6 +172,9 @@ pub struct RescalkReport {
     /// Robust core (k_opt × k_opt × m).
     pub r: Tensor3,
     pub traces: Vec<Trace>,
+    /// Cross-rank span timelines gathered to the leader (rank order;
+    /// empty when tracing is off).
+    pub timeline: Vec<crate::obs::RankTimeline>,
     pub wall_seconds: f64,
     /// Workspace checkout counters summed over ranks (delta for this
     /// job).

@@ -974,7 +974,10 @@ fn out_to_json(out: &RankOut) -> Result<Json> {
             obj(vec![("type", jstr("comm_error")), ("error", jstr(e.clone()))])
         }
         RankOut::Ping(_) => obj(vec![("type", jstr("pong"))]),
-        RankOut::Factorize { row, col, result, trace } => obj(vec![
+        // `timeline` never rides the control plane: worker span buffers
+        // already reached the leader through the mesh telemetry gather
+        // (and are empty on every rank but world rank 0, the leader)
+        RankOut::Factorize { row, col, result, trace, timeline: _ } => obj(vec![
             ("type", jstr("factorize")),
             ("row", jnum(*row as f64)),
             ("col", jnum(*col as f64)),
@@ -985,7 +988,7 @@ fn out_to_json(out: &RankOut) -> Result<Json> {
             ("workspace", report::workspace_to_json(result.workspace)),
             ("trace", report::traces_to_json(std::slice::from_ref(trace))),
         ]),
-        RankOut::ModelSelect { row, col, result, trace } => obj(vec![
+        RankOut::ModelSelect { row, col, result, trace, timeline: _ } => obj(vec![
             ("type", jstr("model_select")),
             ("row", jnum(*row as f64)),
             ("col", jnum(*col as f64)),
@@ -1040,6 +1043,7 @@ fn out_from_json(v: &Json) -> Result<RankOut> {
                 workspace: report::workspace_from_json(v.get("workspace")),
             }),
             trace: trace_from_json(v.get("trace"))?,
+            timeline: Vec::new(),
         },
         "model_select" => RankOut::ModelSelect {
             row: get_usize(v, "row")?,
@@ -1062,6 +1066,7 @@ fn out_from_json(v: &Json) -> Result<RankOut> {
                 workspace: report::workspace_from_json(v.get("workspace")),
             }),
             trace: trace_from_json(v.get("trace"))?,
+            timeline: Vec::new(),
         },
         other => bail!("unknown rank reply kind '{other}'"),
     })
@@ -1151,6 +1156,7 @@ mod tests {
                 workspace: Default::default(),
             }),
             trace: Trace::disabled(),
+            timeline: Vec::new(),
         };
         let back = out_from_json(&out_to_json(&out).unwrap()).unwrap();
         match back {

@@ -793,14 +793,20 @@ impl Engine {
         let wall_seconds = t0.elapsed().as_secs_f64();
         let mut blocks: Vec<(usize, usize, Mat)> = Vec::with_capacity(outs.len());
         let mut traces: Vec<Trace> = Vec::with_capacity(outs.len());
+        let mut timeline: Vec<crate::obs::RankTimeline> = Vec::new();
         let mut workspace = crate::backend::WorkspaceStats::default();
         let mut first = None;
         for (rank, out) in outs.into_iter().enumerate() {
             match out {
-                pool::RankOut::Factorize { row, col, result, trace } => {
+                pool::RankOut::Factorize { row, col, result, trace, timeline: tl } => {
                     // only diagonal ranks' row blocks enter the gathered A
                     if row == col {
                         blocks.push((row, col, result.a_row.clone()));
+                    }
+                    // the mesh gather leaves the full cross-rank timeline on
+                    // world rank 0 only; every other rank reports empty
+                    if !tl.is_empty() {
+                        timeline = tl;
                     }
                     traces.push(trace);
                     workspace = workspace.merged(result.workspace);
@@ -824,6 +830,7 @@ impl Engine {
             rel_error: first.rel_error,
             iters_run: first.iters_run,
             traces,
+            timeline,
             wall_seconds,
             workspace,
             transport_backend: self.pool.backend_name().to_string(),
@@ -854,10 +861,14 @@ impl Engine {
         let wall_seconds = t0.elapsed().as_secs_f64();
         let mut results = Vec::with_capacity(outs.len());
         let mut traces: Vec<Trace> = Vec::with_capacity(outs.len());
+        let mut timeline: Vec<crate::obs::RankTimeline> = Vec::new();
         for (rank, out) in outs.into_iter().enumerate() {
             match out {
-                pool::RankOut::ModelSelect { row, col, result, trace } => {
+                pool::RankOut::ModelSelect { row, col, result, trace, timeline: tl } => {
                     results.push((row, col, result));
+                    if !tl.is_empty() {
+                        timeline = tl;
+                    }
                     traces.push(trace);
                 }
                 pool::RankOut::JobError(e) => bail!("rank {rank}: {e}"),
@@ -891,6 +902,7 @@ impl Engine {
             a,
             r: first.r_opt.clone(),
             traces,
+            timeline,
             wall_seconds,
             workspace,
             transport_backend: self.pool.backend_name().to_string(),

@@ -25,11 +25,12 @@ use std::thread::{JoinHandle, ThreadId};
 
 use crate::backend::{BackendSpec, Workspace};
 use crate::comm::grid::RankCtx;
-use crate::comm::Trace;
+use crate::comm::{CommError, CommResult, Trace};
 use crate::engine::dataset::DatasetSpec;
 use crate::err;
 use crate::error::Result;
 use crate::model_selection::{rescalk_rank, RescalkConfig, RescalkResult};
+use crate::obs;
 use crate::rescal::distributed::{DistInit, DistRescalConfig};
 use crate::rescal::{rescal_rank, ModelKind, RankResult, RescalOptions};
 
@@ -69,8 +70,23 @@ pub(crate) enum RankOut {
     /// treats this as a trigger for mesh rebuild + replacement admission
     /// rather than a deterministic job error.
     CommError(String),
-    Factorize { row: usize, col: usize, result: Box<RankResult>, trace: Trace },
-    ModelSelect { row: usize, col: usize, result: Box<RescalkResult>, trace: Trace },
+    /// `timeline` is the cluster-wide span gather: non-empty only on
+    /// world rank 0 of a traced run (every rank ships its recorder ring
+    /// to rank 0 over the mesh at job end).
+    Factorize {
+        row: usize,
+        col: usize,
+        result: Box<RankResult>,
+        trace: Trace,
+        timeline: Vec<obs::RankTimeline>,
+    },
+    ModelSelect {
+        row: usize,
+        col: usize,
+        result: Box<RescalkResult>,
+        trace: Trace,
+        timeline: Vec<obs::RankTimeline>,
+    },
     Ping(ThreadId),
 }
 
@@ -286,11 +302,17 @@ impl RankState {
                             &mut self.ws,
                             &mut trace,
                         ) {
-                            Ok(result) => RankOut::Factorize {
-                                row: self.ctx.row,
-                                col: self.ctx.col,
-                                result: Box::new(result),
-                                trace,
+                            Ok(result) => match self.gather_timelines(&trace) {
+                                Ok(timeline) => RankOut::Factorize {
+                                    row: self.ctx.row,
+                                    col: self.ctx.col,
+                                    result: Box::new(result),
+                                    trace,
+                                    timeline,
+                                },
+                                Err(e) => {
+                                    RankOut::CommError(format!("factorize telemetry gather: {e}"))
+                                }
                             },
                             Err(e) => RankOut::CommError(format!("factorize: {e}")),
                         }
@@ -310,16 +332,49 @@ impl RankState {
                             &mut self.ws,
                             &mut trace,
                         ) {
-                            Ok(result) => RankOut::ModelSelect {
-                                row: self.ctx.row,
-                                col: self.ctx.col,
-                                result: Box::new(result),
-                                trace,
+                            Ok(result) => match self.gather_timelines(&trace) {
+                                Ok(timeline) => RankOut::ModelSelect {
+                                    row: self.ctx.row,
+                                    col: self.ctx.col,
+                                    result: Box::new(result),
+                                    trace,
+                                    timeline,
+                                },
+                                Err(e) => RankOut::CommError(format!(
+                                    "model-select telemetry gather: {e}"
+                                )),
                             },
                             Err(e) => RankOut::CommError(format!("model-select: {e}")),
                         }
                     }
                 }
+            }
+        }
+    }
+
+    /// Collective post-job span shipment: every rank snapshots its
+    /// recorder ring and gathers the buffers to world rank 0 (which
+    /// deserializes them into the cluster-wide timeline). A no-op on
+    /// untraced runs — all ranks share the `trace_enabled` flag, so the
+    /// collective is skipped consistently.
+    fn gather_timelines(&self, trace: &Trace) -> CommResult<Vec<obs::RankTimeline>> {
+        if !self.trace_enabled {
+            return Ok(Vec::new());
+        }
+        let snap = trace.timeline_snapshot(self.ctx.world.rank);
+        let bytes = obs::timeline_to_bytes(&snap);
+        match self.ctx.world.gather_bytes_to_root(&bytes)? {
+            None => Ok(Vec::new()),
+            Some(payloads) => {
+                let mut timelines = Vec::with_capacity(payloads.len());
+                for (rank, payload) in payloads.iter().enumerate() {
+                    timelines.push(obs::timeline_from_bytes(rank, payload).map_err(|e| {
+                        CommError::Protocol {
+                            reason: format!("telemetry payload from rank {rank}: {e}"),
+                        }
+                    })?);
+                }
+                Ok(timelines)
             }
         }
     }

@@ -102,11 +102,14 @@ impl Report {
                 obj.insert("wall_seconds".to_string(), Json::Num(r.wall_seconds));
                 obj.insert("a".to_string(), mat_to_json(&r.a));
                 obj.insert("r".to_string(), tensor_to_json(&r.r));
-                obj.insert("traces".to_string(), traces_to_json(&r.traces));
-                obj.insert("workspace".to_string(), workspace_to_json(r.workspace));
                 obj.insert(
-                    "transport".to_string(),
-                    transport_to_json(&r.transport_backend, &r.traces),
+                    "telemetry".to_string(),
+                    telemetry_to_json(
+                        &r.traces,
+                        r.workspace,
+                        &r.transport_backend,
+                        &r.timeline,
+                    ),
                 );
                 obj.insert("model".to_string(), Json::Str(r.model.as_str().to_string()));
             }
@@ -119,11 +122,14 @@ impl Report {
                 obj.insert("wall_seconds".to_string(), Json::Num(r.wall_seconds));
                 obj.insert("a".to_string(), mat_to_json(&r.a));
                 obj.insert("r".to_string(), tensor_to_json(&r.r));
-                obj.insert("traces".to_string(), traces_to_json(&r.traces));
-                obj.insert("workspace".to_string(), workspace_to_json(r.workspace));
                 obj.insert(
-                    "transport".to_string(),
-                    transport_to_json(&r.transport_backend, &r.traces),
+                    "telemetry".to_string(),
+                    telemetry_to_json(
+                        &r.traces,
+                        r.workspace,
+                        &r.transport_backend,
+                        &r.timeline,
+                    ),
                 );
                 obj.insert("model".to_string(), Json::Str(r.model.as_str().to_string()));
             }
@@ -152,11 +158,10 @@ impl Report {
                 r: tensor_from_json(v.get("r").ok_or_else(|| err!("missing 'r'"))?)?,
                 rel_error: get_f64(v, "rel_error")? as f32,
                 iters_run: get_f64(v, "iters_run")? as usize,
-                traces: traces_from_json(
-                    v.get("traces").ok_or_else(|| err!("missing 'traces'"))?,
-                )?,
+                traces: report_traces_from_json(v)?,
+                timeline: timeline_from_report_json(v)?,
                 wall_seconds: get_f64(v, "wall_seconds")?,
-                workspace: workspace_from_json(v.get("workspace")),
+                workspace: workspace_from_json(telemetry_field(v, "workspace")),
                 transport_backend: transport_backend_from_json(v),
                 model: model_from_json(v)?,
             })),
@@ -173,11 +178,10 @@ impl Report {
                     k_opt: get_f64(v, "k_opt")? as usize,
                     a: mat_from_json(v.get("a").ok_or_else(|| err!("missing 'a'"))?)?,
                     r: tensor_from_json(v.get("r").ok_or_else(|| err!("missing 'r'"))?)?,
-                    traces: traces_from_json(
-                        v.get("traces").ok_or_else(|| err!("missing 'traces'"))?,
-                    )?,
+                    traces: report_traces_from_json(v)?,
+                    timeline: timeline_from_report_json(v)?,
                     wall_seconds: get_f64(v, "wall_seconds")?,
-                    workspace: workspace_from_json(v.get("workspace")),
+                    workspace: workspace_from_json(telemetry_field(v, "workspace")),
                     transport_backend: transport_backend_from_json(v),
                     model: model_from_json(v)?,
                 }))
@@ -277,6 +281,52 @@ pub(crate) fn tensor_from_json(v: &Json) -> Result<Tensor3> {
     Ok(Tensor3::from_slices(slices))
 }
 
+/// The unified `telemetry` section: per-rank op-aggregate traces, the
+/// workspace counters, the transport backend + compute/comm split with
+/// real wire traffic, and (when span tracing ran) the cross-rank
+/// timeline the Chrome-trace exporter consumes.
+fn telemetry_to_json(
+    traces: &[Trace],
+    workspace: crate::backend::WorkspaceStats,
+    backend: &str,
+    timeline: &[crate::obs::RankTimeline],
+) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("traces".to_string(), traces_to_json(traces));
+    obj.insert("workspace".to_string(), workspace_to_json(workspace));
+    obj.insert("transport".to_string(), transport_to_json(backend, traces));
+    obj.insert(
+        "timeline".to_string(),
+        Json::Arr(timeline.iter().map(crate::obs::timeline_to_json).collect()),
+    );
+    Json::Obj(obj)
+}
+
+/// Look a field up under the unified `telemetry` section, falling back to
+/// the top level where archived pre-telemetry-plane reports kept it.
+fn telemetry_field<'a>(v: &'a Json, key: &str) -> Option<&'a Json> {
+    v.get("telemetry").and_then(|t| t.get(key)).or_else(|| v.get(key))
+}
+
+/// Traces from either report layout; a report with neither section (e.g.
+/// one archived from an untraced run) parses to no traces rather than
+/// erroring, matching the empty-trace-tolerant metric aggregation.
+fn report_traces_from_json(v: &Json) -> Result<Vec<Trace>> {
+    match telemetry_field(v, "traces") {
+        Some(t) => traces_from_json(t),
+        None => Ok(Vec::new()),
+    }
+}
+
+/// The gathered span timeline; absent in archived pre-telemetry-plane
+/// reports and in untraced runs, which both parse to empty.
+fn timeline_from_report_json(v: &Json) -> Result<Vec<crate::obs::RankTimeline>> {
+    match telemetry_field(v, "timeline").and_then(|t| t.as_arr()) {
+        Some(arr) => arr.iter().map(crate::obs::timeline_from_json).collect(),
+        None => Ok(Vec::new()),
+    }
+}
+
 /// The report's `transport` section: which backend the collectives ran
 /// over, plus the per-rank compute/comm split with real wire traffic.
 fn transport_to_json(backend: &str, traces: &[Trace]) -> Json {
@@ -316,7 +366,7 @@ pub(crate) fn model_from_json(v: &Json) -> Result<ModelKind> {
 /// Archived pre-transport-plane reports have no `transport` section;
 /// those jobs all ran in-process.
 fn transport_backend_from_json(v: &Json) -> String {
-    v.get("transport")
+    telemetry_field(v, "transport")
         .and_then(|t| t.get("backend"))
         .and_then(|b| b.as_str())
         .unwrap_or("in_process")

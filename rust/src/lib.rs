@@ -39,7 +39,16 @@
 //!   artifact;
 //! * **serve** — a [`serve::QueryEngine`] answers pointwise and batched
 //!   top-k link-prediction queries from the reloaded artifact (the read
-//!   path that mirrors the engine's write path — see [`serve`]).
+//!   path that mirrors the engine's write path — see [`serve`]);
+//! * **observe** — every plane feeds the telemetry plane ([`obs`]): a
+//!   per-rank span [`obs::Recorder`] times each collective, GEMM, and
+//!   MU phase (zero overhead and counter-provably zero allocations when
+//!   disabled), remote workers gather their span buffers to the leader
+//!   over the mesh at job end, and `--trace-out` exports the whole
+//!   cluster's timeline as Chrome trace-event JSON for Perfetto, with
+//!   `drescal trace-summary` printing the paper's §6.3-style per-op
+//!   breakdown from the same file. The serve path records per-query
+//!   latency into log-bucketed [`obs::Histogram`]s (p50/p95/p99).
 //!
 //! ## The model-family axis
 //!
@@ -97,6 +106,7 @@ pub mod error;
 pub mod json;
 pub mod linalg;
 pub mod model_selection;
+pub mod obs;
 pub mod rescal;
 pub mod rng;
 pub mod serve;

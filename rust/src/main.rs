@@ -18,6 +18,7 @@
 //! * `artifacts`    — inspect the AOT artifact manifest
 //! * `bench`        — fixed-shape perf harness, emits `BENCH_rescal.json`
 //!   and diffs it against the previous run (`--max-regression` gates CI)
+//! * `trace-summary` — per-op runtime table from a `--trace-out` file
 //!
 //! Synthetic datasets are registered as [`drescal::engine::DatasetSpec`]
 //! and generated **rank-locally** — the leader never materializes the
@@ -35,7 +36,8 @@ use std::collections::BTreeMap;
 use drescal::bench_util;
 use drescal::config::{
     ArtifactsCmd, BenchCmd, Command, ExascaleCmd, ExportCmd, FactorizeCmd, IngestCmd,
-    MachineSpec, ModelSelectCmd, QueryCmd, RunConfig, ServeBenchCmd, TrainCmd,
+    MachineSpec, ModelSelectCmd, QueryCmd, RunConfig, ServeBenchCmd, TraceSummaryCmd,
+    TrainCmd,
 };
 use drescal::coordinator::metrics::RunMetrics;
 use drescal::data::synthetic::SyntheticSpec;
@@ -72,6 +74,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Command::Query(cmd) => cmd_query(cmd),
         Command::ServeBench(cmd) => cmd_serve_bench(cmd),
         Command::Ingest(cmd) => cmd_ingest(cmd),
+        Command::TraceSummary(cmd) => cmd_trace_summary(cmd),
         Command::Help => {
             print_help();
             Ok(())
@@ -96,6 +99,8 @@ SUBCOMMANDS
                   --model rescal|distmult|logistic   model family (rescal)
                   --backend native|xla  [--artifacts DIR]
                   --cache-bytes B    resident-tile budget, LRU-evicted (0 = off)
+                  --trace-out FILE   write a Chrome/Perfetto trace of the run's
+                                     per-rank spans (implies --trace)
                   --seed S  --trace  --json
   train         lead a multi-process TCP cluster factorization: this
                 process runs rank 0 and waits for --workers processes
@@ -104,7 +109,9 @@ SUBCOMMANDS
                   --comm-timeout-ms MS (10000)  --max-replacements K (1)
                   --data synthetic|blocks|nations|trade|file:<manifest>
                   --n --m --k-true --density --k --iters --model --seed
-                  --trace --json
+                  --trace --trace-out FILE --json
+                  (--trace-out gathers spans from every worker process
+                  into one cross-process trace file on the leader)
   worker        join a train leader and serve rank jobs until shutdown
                   --connect ADDR
   model-select  RESCALk sweep with automatic k determination
@@ -132,6 +139,8 @@ SUBCOMMANDS
                   --queries Q (2048)  --batch B (64)  --top K (10)
   exascale      replay Fig 13 (11.5TB dense + 9.5EB sparse) via the model
                   --machine cpu|gpu|calibrated
+  trace-summary per-op runtime table (paper §6.3 style) aggregated from
+                a --trace-out trace file:  drescal trace-summary trace.json
   artifacts     list the AOT artifact manifest [--artifacts DIR]
   bench         fixed-shape perf harness; emits machine-readable JSON
                   (covers all three model families at one equal shape)
@@ -179,9 +188,38 @@ fn cmd_run(cmd: FactorizeCmd) -> Result<()> {
         let metrics = RunMetrics::from_traces(&report.traces);
         print!("{}", metrics.format_breakdown());
     }
+    if let Some(path) = &cmd.trace_out {
+        write_trace_out(path, &report.timeline)?;
+    }
     if cmd.json {
         println!("{}", Report::Factorize(report).to_json());
     }
+    Ok(())
+}
+
+/// Write a report's gathered span timeline as Chrome trace-event JSON
+/// (loadable in Perfetto or chrome://tracing) and print the per-op
+/// summary table.
+fn write_trace_out(path: &str, timeline: &[drescal::obs::RankTimeline]) -> Result<()> {
+    let trace = drescal::obs::chrome_trace_json(timeline);
+    std::fs::write(path, trace.to_string())
+        .with_context(|| format!("writing trace to {path}"))?;
+    let spans: usize = timeline.iter().map(|t| t.spans.len()).sum();
+    println!("wrote {spans} spans from {} rank(s) to {path}", timeline.len());
+    print!(
+        "{}",
+        drescal::obs::format_summary(&drescal::obs::summarize_timelines(timeline))
+    );
+    Ok(())
+}
+
+/// Aggregate a `--trace-out` file back into the per-op runtime table.
+fn cmd_trace_summary(cmd: TraceSummaryCmd) -> Result<()> {
+    let text = std::fs::read_to_string(&cmd.input)
+        .with_context(|| format!("reading trace file {}", cmd.input))?;
+    let v = Json::parse(&text).map_err(|e| drescal::err!("trace JSON: {e}"))?;
+    let rows = drescal::obs::summarize_chrome_trace(&v)?;
+    print!("{}", drescal::obs::format_summary(&rows));
     Ok(())
 }
 
@@ -237,6 +275,11 @@ fn cmd_train(cmd: TrainCmd) -> Result<()> {
         let metrics = RunMetrics::from_traces(&report.traces);
         print!("{}", metrics.format_breakdown());
     }
+    if let Some(path) = &cmd.trace_out {
+        // spans from every worker process were gathered to this leader
+        // over the mesh at job end
+        write_trace_out(path, &report.timeline)?;
+    }
     if cmd.json {
         println!("{}", Report::Factorize(report).to_json());
     }
@@ -288,6 +331,9 @@ fn cmd_model_select(cmd: ModelSelectCmd) -> Result<()> {
     if engine.config().trace {
         let metrics = RunMetrics::from_traces(&report.traces);
         print!("{}", metrics.format_breakdown());
+    }
+    if let Some(path) = &cmd.trace_out {
+        write_trace_out(path, &report.timeline)?;
     }
     if cmd.json {
         println!("{}", Report::ModelSelect(report).to_json());
@@ -367,6 +413,7 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
     // factorize, dense and sparse, same shape
     let dense = engine.load_dataset(SyntheticSpec::dense(64, 3, 4, 42))?;
     let report = engine.factorize(dense, &RescalOptions::new(4, iters), 42)?;
+    let dense_wall = report.wall_seconds;
     record("factorize_dense_n64_m3_k4", report.wall_seconds);
     // the dense factors double as the serve-section model below
     let model = engine.export_model(&Report::Factorize(report))?;
@@ -393,6 +440,22 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
         record(&format!("factorize_{}_dense_g2", kind.as_str()), report.wall_seconds);
     }
     engine.unload_dataset(family_data)?;
+
+    // telemetry plane: the same dense factorize with span recording and
+    // per-op tracing enabled, on a fresh traced 2×2 engine. The row
+    // rides the --max-regression gate, so instrumentation-overhead
+    // regressions (allocation on the hot path, timestamp storms) fail
+    // CI just like a kernel regression would.
+    {
+        let mut traced = Engine::new(EngineConfig::new(4).with_trace(true))?;
+        let tdata = traced.load_dataset(SyntheticSpec::dense(64, 3, 4, 42))?;
+        let treport = traced.factorize(tdata, &RescalOptions::new(4, iters), 42)?;
+        record("telemetry_overhead_dense_g2", treport.wall_seconds);
+        println!(
+            "  traced vs untraced dense factorize: {:.2}x",
+            treport.wall_seconds / dense_wall.max(1e-12)
+        );
+    }
 
     // model-select, dense and sparse, small sweep
     let sweep = RescalkConfig {
@@ -783,20 +846,27 @@ fn cmd_serve_bench(cmd: ServeBenchCmd) -> Result<()> {
             label.to_string(),
             batch.to_string(),
             bench_util::fmt_secs(p.wall_seconds),
-            format!("{:.0}", cmd.queries as f64 / p.wall_seconds.max(1e-12)),
+            format!("{:.0}", p.qps()),
+            p.stats.latency_p50_us.to_string(),
+            p.stats.latency_p95_us.to_string(),
+            p.stats.latency_p99_us.to_string(),
             p.stats.batches.to_string(),
             p.stats.scored_candidates.to_string(),
         ]
     };
     bench_util::print_table(
         &format!("serving throughput — n={} m={} k={}", cmd.n, cmd.m, cmd.k),
-        &["pass", "batch", "wall", "queries/s", "gemm batches", "scored"],
+        &["pass", "batch", "wall", "qps", "p50 µs", "p95 µs", "p99 µs", "gemm batches", "scored"],
         &[
             row("batched", cmd.batch, &batched),
             row("unbatched", 1, &unbatched),
             row("cached cold", cmd.batch, &cold),
             row("cached warm", cmd.batch, &warm),
         ],
+    );
+    println!(
+        "(per-query latency = wall time of the micro-batch that answered it, \
+         log-bucket resolution ~2x; warm-pass percentiles are cumulative)"
     );
     println!(
         "\nwarm pass: {} cache hits, {} candidates scored (a replay never \

@@ -1,0 +1,852 @@
+//! Unified telemetry plane: structured spans, metrics, and trace export.
+//!
+//! The paper's efficacy argument is observational — §6.3 breaks runtime
+//! into named per-operation rows averaged over MPI ranks. This module is
+//! the shared substrate behind that breakdown and behind every
+//! performance PR that follows it:
+//!
+//! * [`Recorder`] — a per-rank span recorder on a monotonic clock.
+//!   Spans carry a category (`"compute"`, `"comm"`, `"phase"`, …), a
+//!   static label, a byte count, and the MU iteration they belong to.
+//!   Storage is a preallocated ring (one allocation on first use,
+//!   overwrite-oldest thereafter); a disabled recorder performs **zero**
+//!   heap allocations, which [`alloc_count`] counter-proves.
+//! * [`MetricsRegistry`] — named counters, gauges, and log-bucketed
+//!   latency [`Histogram`]s (exact p50/p95/p99 within bucket
+//!   resolution). The serve plane records per-query latency here.
+//! * [`chrome_trace_json`] — exports a set of [`RankTimeline`]s as
+//!   Chrome trace-event JSON loadable in Perfetto or `chrome://tracing`,
+//!   one track per rank × process; [`summarize_chrome_trace`] parses
+//!   such a file back into the §6.3-style per-op table that
+//!   `drescal trace-summary` prints.
+//!
+//! Remote workers serialize their timelines with [`timeline_to_bytes`]
+//! and ship them to rank 0 over the mesh
+//! ([`crate::comm::Group::gather_bytes_to_root`]) at job end, so one
+//! exported file covers the whole cluster.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::json::Json;
+
+// ---------------------------------------------------------------------------
+// Allocation accounting
+// ---------------------------------------------------------------------------
+
+/// Every heap allocation the telemetry plane performs bumps this counter
+/// (the ring buffer's one-time reservation, timeline snapshots, …). A
+/// telemetry-disabled run must leave it untouched — the zero-overhead
+/// guarantee is counter-asserted, not assumed.
+static OBS_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative count of obs-plane heap allocations in this process.
+pub fn alloc_count() -> u64 {
+    OBS_ALLOCS.load(Ordering::Relaxed)
+}
+
+fn note_alloc() {
+    OBS_ALLOCS.fetch_add(1, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Span recorder
+// ---------------------------------------------------------------------------
+
+/// Ring capacity: spans per rank per job. At ~48 bytes per span this is
+/// ~1.5 MiB; long model-selection sweeps overwrite the oldest spans and
+/// count the overflow in [`RankTimeline::dropped`].
+const RING_CAP: usize = 32_768;
+
+/// One recorded span. `Copy` with `&'static` strings: pushing a span
+/// never allocates.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub cat: &'static str,
+    pub label: &'static str,
+    /// Start, nanoseconds since the recorder's epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub bytes: u64,
+    /// MU iteration the span belongs to; [`NO_ITER`] outside the loop.
+    pub iter: u32,
+}
+
+/// Sentinel iteration for spans outside the MU loop.
+pub const NO_ITER: u32 = u32::MAX;
+
+/// Per-rank span recorder. Not thread-safe by design: one per rank,
+/// embedded in the rank's [`crate::comm::Trace`].
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    enabled: bool,
+    epoch: Instant,
+    ring: Vec<Span>,
+    /// Next write position once the ring is full.
+    next: usize,
+    dropped: u64,
+    iter: u32,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::disabled()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder {
+            enabled: true,
+            epoch: Instant::now(),
+            ring: Vec::new(),
+            next: 0,
+            dropped: 0,
+            iter: NO_ITER,
+        }
+    }
+
+    /// A recorder that drops everything. Performs no allocation, ever.
+    pub fn disabled() -> Self {
+        Recorder { enabled: false, ..Recorder::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Set the MU iteration charged to subsequent spans.
+    #[inline]
+    pub fn set_iter(&mut self, iter: u32) {
+        self.iter = iter;
+    }
+
+    /// Current time on this recorder's clock, or `None` when disabled —
+    /// the begin half of a begin/end span pair.
+    #[inline]
+    pub fn begin(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span opened with [`Recorder::begin`].
+    #[inline]
+    pub fn end(&mut self, cat: &'static str, label: &'static str, t0: Option<Instant>, bytes: u64) {
+        if let Some(t0) = t0 {
+            let start_ns = t0.checked_duration_since(self.epoch).unwrap_or_default().as_nanos() as u64;
+            let dur_ns = t0.elapsed().as_nanos() as u64;
+            self.push(Span { cat, label, start_ns, dur_ns, bytes, iter: self.iter });
+        }
+    }
+
+    /// Record a span whose duration the caller already measured (the op
+    /// trace times collectives itself).
+    #[inline]
+    pub fn end_at(
+        &mut self,
+        cat: &'static str,
+        label: &'static str,
+        t0: Instant,
+        dur: std::time::Duration,
+        bytes: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let start_ns = t0.checked_duration_since(self.epoch).unwrap_or_default().as_nanos() as u64;
+        self.push(Span { cat, label, start_ns, dur_ns: dur.as_nanos() as u64, bytes, iter: self.iter });
+    }
+
+    /// Append a span; overwrite-oldest once the ring is full.
+    #[inline]
+    pub fn push(&mut self, span: Span) {
+        if !self.enabled {
+            return;
+        }
+        if self.ring.capacity() == 0 {
+            // the one allocation an instrumented rank pays
+            self.ring.reserve_exact(RING_CAP);
+            note_alloc();
+        }
+        if self.ring.len() < RING_CAP {
+            self.ring.push(span);
+        } else {
+            self.ring[self.next] = span;
+            self.next = (self.next + 1) % RING_CAP;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Snapshot the ring in chronological order as this rank's timeline.
+    pub fn snapshot(&self, rank: usize) -> RankTimeline {
+        let mut spans = Vec::with_capacity(self.ring.len());
+        note_alloc();
+        for i in 0..self.ring.len() {
+            let s = &self.ring[(self.next + i) % self.ring.len().max(1)];
+            spans.push(TimelineSpan {
+                cat: s.cat.to_string(),
+                label: s.label.to_string(),
+                start_ns: s.start_ns,
+                dur_ns: s.dur_ns,
+                bytes: s.bytes,
+                iter: s.iter,
+            });
+        }
+        RankTimeline { rank, pid: std::process::id() as u64, spans, dropped: self.dropped }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Timelines (the gathered, cross-process form of a recorder's ring)
+// ---------------------------------------------------------------------------
+
+/// One span as it travels between processes and into exports.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimelineSpan {
+    pub cat: String,
+    pub label: String,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub bytes: u64,
+    pub iter: u32,
+}
+
+/// All spans one rank recorded for a job, stamped with the OS process
+/// that produced them (leader and remote workers differ).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RankTimeline {
+    pub rank: usize,
+    pub pid: u64,
+    pub spans: Vec<TimelineSpan>,
+    /// Spans lost to ring overflow.
+    pub dropped: u64,
+}
+
+const TIMELINE_MAGIC: u32 = 0x4F42_5331; // "OBS1"
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct ByteReader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(Error::msg(format!(
+                "telemetry buffer truncated at byte {} (wanted {n} more of {})",
+                self.i,
+                self.b.len()
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| Error::msg("telemetry buffer holds non-utf8 label"))
+    }
+}
+
+/// Serialize a timeline to the compact binary form shipped over the mesh.
+pub fn timeline_to_bytes(t: &RankTimeline) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + t.spans.len() * 48);
+    note_alloc();
+    put_u32(&mut out, TIMELINE_MAGIC);
+    put_u64(&mut out, t.pid);
+    put_u64(&mut out, t.dropped);
+    put_u32(&mut out, t.spans.len() as u32);
+    for s in &t.spans {
+        put_str(&mut out, &s.cat);
+        put_str(&mut out, &s.label);
+        put_u64(&mut out, s.start_ns);
+        put_u64(&mut out, s.dur_ns);
+        put_u64(&mut out, s.bytes);
+        put_u32(&mut out, s.iter);
+    }
+    out
+}
+
+/// Inverse of [`timeline_to_bytes`]; `rank` is assigned by the gather
+/// (member order in the world group).
+pub fn timeline_from_bytes(rank: usize, bytes: &[u8]) -> Result<RankTimeline> {
+    let mut r = ByteReader { b: bytes, i: 0 };
+    let magic = r.u32()?;
+    if magic != TIMELINE_MAGIC {
+        return Err(Error::msg(format!("bad telemetry magic {magic:#x}")));
+    }
+    let pid = r.u64()?;
+    let dropped = r.u64()?;
+    let count = r.u32()? as usize;
+    let mut spans = Vec::with_capacity(count);
+    note_alloc();
+    for _ in 0..count {
+        let cat = r.str()?;
+        let label = r.str()?;
+        let start_ns = r.u64()?;
+        let dur_ns = r.u64()?;
+        let bytes = r.u64()?;
+        let iter = r.u32()?;
+        spans.push(TimelineSpan { cat, label, start_ns, dur_ns, bytes, iter });
+    }
+    Ok(RankTimeline { rank, pid, spans, dropped })
+}
+
+/// Timeline → JSON (the report's `telemetry.timeline` section). Spans
+/// are flat arrays `[cat, label, start_ns, dur_ns, bytes, iter]` to keep
+/// archived reports compact.
+pub fn timeline_to_json(t: &RankTimeline) -> Json {
+    let spans: Vec<Json> = t
+        .spans
+        .iter()
+        .map(|s| {
+            Json::Arr(vec![
+                Json::Str(s.cat.clone()),
+                Json::Str(s.label.clone()),
+                Json::Num(s.start_ns as f64),
+                Json::Num(s.dur_ns as f64),
+                Json::Num(s.bytes as f64),
+                Json::Num(s.iter as f64),
+            ])
+        })
+        .collect();
+    let mut o = BTreeMap::new();
+    o.insert("rank".to_string(), Json::Num(t.rank as f64));
+    o.insert("pid".to_string(), Json::Num(t.pid as f64));
+    o.insert("dropped".to_string(), Json::Num(t.dropped as f64));
+    o.insert("spans".to_string(), Json::Arr(spans));
+    Json::Obj(o)
+}
+
+/// Inverse of [`timeline_to_json`].
+pub fn timeline_from_json(v: &Json) -> Result<RankTimeline> {
+    let rank = v.get("rank").and_then(Json::as_usize).unwrap_or(0);
+    let pid = v.get("pid").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let dropped = v.get("dropped").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let mut spans = Vec::new();
+    for s in v.get("spans").and_then(Json::as_arr).unwrap_or(&[]) {
+        let a = s.as_arr().ok_or_else(|| Error::msg("timeline span is not an array"))?;
+        if a.len() != 6 {
+            return Err(Error::msg(format!("timeline span has {} fields, wanted 6", a.len())));
+        }
+        spans.push(TimelineSpan {
+            cat: a[0].as_str().ok_or_else(|| Error::msg("span cat not a string"))?.to_string(),
+            label: a[1].as_str().ok_or_else(|| Error::msg("span label not a string"))?.to_string(),
+            start_ns: a[2].as_f64().unwrap_or(0.0) as u64,
+            dur_ns: a[3].as_f64().unwrap_or(0.0) as u64,
+            bytes: a[4].as_f64().unwrap_or(0.0) as u64,
+            iter: a[5].as_f64().unwrap_or(NO_ITER as f64) as u32,
+        });
+    }
+    Ok(RankTimeline { rank, pid, spans, dropped })
+}
+
+// ---------------------------------------------------------------------------
+// Histograms + metrics registry
+// ---------------------------------------------------------------------------
+
+/// Log-bucketed latency histogram over nanoseconds: bucket `i` holds
+/// values in `[2^(i-1), 2^i)` (bucket 0 holds zero). Quantiles are exact
+/// within bucket resolution (~2x), constant memory, merge is addition.
+#[derive(Clone, Copy, Debug)]
+pub struct Histogram {
+    buckets: [u64; 64],
+    count: u64,
+    sum_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; 64], count: 0, sum_ns: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram::default()
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns == 0 {
+            0
+        } else {
+            (64 - ns.leading_zeros() as usize).min(63)
+        }
+    }
+
+    #[inline]
+    pub fn record_ns(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum_ns / self.count
+        }
+    }
+
+    /// Value at quantile `q` in [0, 1]: the upper bound of the first
+    /// bucket whose cumulative count reaches `ceil(q * count)`.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return if i == 0 { 0 } else { (1u64 << i) - 1 };
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+    }
+}
+
+/// Named counters, gauges, and histograms. Plain `BTreeMap`s — the
+/// registry lives on one thread next to whatever it instruments.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    histograms: BTreeMap<&'static str, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter_add(&mut self, name: &'static str, delta: u64) {
+        *self.counters.entry(name).or_insert(0) += delta;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_set(&mut self, name: &'static str, value: f64) {
+        self.gauges.insert(name, value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram_record_ns(&mut self, name: &'static str, ns: u64) {
+        self.histograms.entry(name).or_default().record_ns(ns);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.counters.iter().map(|(k, v)| (*k, *v))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export + §6.3 summary
+// ---------------------------------------------------------------------------
+
+fn jnum(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Export timelines as Chrome trace-event JSON (`ph:"X"` complete
+/// events), loadable in Perfetto or `chrome://tracing`. Track layout:
+/// one process row per OS pid, one thread row per rank. Timestamps are
+/// per-rank recorder epochs, so cross-track skew is bounded by job
+/// start-up, not wall-clock drift.
+pub fn chrome_trace_json(timelines: &[RankTimeline]) -> Json {
+    let mut events = Vec::new();
+    let mut pids_seen = std::collections::BTreeSet::new();
+    for t in timelines {
+        if pids_seen.insert(t.pid) {
+            events.push(obj(vec![
+                ("ph", jstr("M")),
+                ("name", jstr("process_name")),
+                ("pid", jnum(t.pid as f64)),
+                ("tid", jnum(0.0)),
+                ("args", obj(vec![("name", jstr(&format!("drescal pid {}", t.pid)))])),
+            ]));
+        }
+        events.push(obj(vec![
+            ("ph", jstr("M")),
+            ("name", jstr("thread_name")),
+            ("pid", jnum(t.pid as f64)),
+            ("tid", jnum(t.rank as f64)),
+            ("args", obj(vec![("name", jstr(&format!("rank {}", t.rank)))])),
+        ]));
+        for s in &t.spans {
+            let mut args = vec![("bytes", jnum(s.bytes as f64))];
+            if s.iter != NO_ITER {
+                args.push(("iter", jnum(s.iter as f64)));
+            }
+            events.push(obj(vec![
+                ("ph", jstr("X")),
+                ("pid", jnum(t.pid as f64)),
+                ("tid", jnum(t.rank as f64)),
+                ("ts", jnum(s.start_ns as f64 / 1000.0)),
+                ("dur", jnum(s.dur_ns as f64 / 1000.0)),
+                ("cat", jstr(&s.cat)),
+                ("name", jstr(&s.label)),
+                ("args", obj(args)),
+            ]));
+        }
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", jstr("ms")),
+    ])
+}
+
+/// One row of the per-op summary table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SummaryRow {
+    pub cat: String,
+    pub name: String,
+    pub count: u64,
+    pub seconds: f64,
+    pub bytes: u64,
+}
+
+/// Aggregate timelines into per-(cat, op) totals, ordered comm-last
+/// within category name order (mirrors the paper's §6.3 rows).
+pub fn summarize_timelines(timelines: &[RankTimeline]) -> Vec<SummaryRow> {
+    let mut rows: BTreeMap<(String, String), (u64, u64, u64)> = BTreeMap::new();
+    for t in timelines {
+        for s in &t.spans {
+            let e = rows.entry((s.cat.clone(), s.label.clone())).or_insert((0, 0, 0));
+            e.0 += 1;
+            e.1 += s.dur_ns;
+            e.2 += s.bytes;
+        }
+    }
+    rows.into_iter()
+        .map(|((cat, name), (count, ns, bytes))| SummaryRow {
+            cat,
+            name,
+            count,
+            seconds: ns as f64 / 1e9,
+            bytes,
+        })
+        .collect()
+}
+
+/// Parse a Chrome trace-event file (as written by [`chrome_trace_json`])
+/// back into summary rows — the `drescal trace-summary` path.
+pub fn summarize_chrome_trace(v: &Json) -> Result<Vec<SummaryRow>> {
+    let events = v
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::msg("not a Chrome trace: missing traceEvents array"))?;
+    let mut rows: BTreeMap<(String, String), (u64, u64, u64)> = BTreeMap::new();
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let cat = e.get("cat").and_then(Json::as_str).unwrap_or("").to_string();
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::msg("trace event without a name"))?
+            .to_string();
+        let dur_us = e.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
+        let bytes = e
+            .get("args")
+            .and_then(|a| a.get("bytes"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as u64;
+        let entry = rows.entry((cat, name)).or_insert((0, 0, 0));
+        entry.0 += 1;
+        entry.1 += (dur_us * 1000.0).round() as u64;
+        entry.2 += bytes;
+    }
+    Ok(rows
+        .into_iter()
+        .map(|((cat, name), (count, ns, bytes))| SummaryRow {
+            cat,
+            name,
+            count,
+            seconds: ns as f64 / 1e9,
+            bytes,
+        })
+        .collect())
+}
+
+/// Format summary rows as the §6.3-style breakdown table.
+pub fn format_summary(rows: &[SummaryRow]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "{:<10} {:<20} {:>8} {:>12} {:>14}", "cat", "op", "count", "seconds", "bytes");
+    let mut total_s = 0.0;
+    let mut total_b: u64 = 0;
+    for r in rows {
+        total_s += r.seconds;
+        total_b += r.bytes;
+        let _ = writeln!(
+            out,
+            "{:<10} {:<20} {:>8} {:>12.4} {:>14}",
+            r.cat, r.name, r.count, r.seconds, r.bytes
+        );
+    }
+    let _ = writeln!(out, "{:<10} {:<20} {:>8} {:>12.4} {:>14}", "total", "", "", total_s, total_b);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_never_allocates() {
+        let before = alloc_count();
+        let mut r = Recorder::disabled();
+        for _ in 0..1000 {
+            let t0 = r.begin();
+            r.end("compute", "gram_mul", t0, 64);
+        }
+        assert!(r.is_empty());
+        assert_eq!(alloc_count() - before, 0);
+    }
+
+    #[test]
+    fn recorder_rings_and_counts_drops() {
+        let mut r = Recorder::new();
+        for i in 0..(RING_CAP + 10) {
+            r.push(Span {
+                cat: "compute",
+                label: "gram_mul",
+                start_ns: i as u64,
+                dur_ns: 1,
+                bytes: 0,
+                iter: 0,
+            });
+        }
+        assert_eq!(r.len(), RING_CAP);
+        let snap = r.snapshot(0);
+        assert_eq!(snap.dropped, 10);
+        // chronological order: oldest surviving span first
+        assert_eq!(snap.spans.first().unwrap().start_ns, 10);
+        assert_eq!(snap.spans.last().unwrap().start_ns, (RING_CAP + 9) as u64);
+    }
+
+    #[test]
+    fn timeline_bytes_roundtrip() {
+        let t = RankTimeline {
+            rank: 3,
+            pid: 4242,
+            dropped: 7,
+            spans: vec![
+                TimelineSpan {
+                    cat: "comm".into(),
+                    label: "row_reduce".into(),
+                    start_ns: 10,
+                    dur_ns: 20,
+                    bytes: 1024,
+                    iter: 2,
+                },
+                TimelineSpan {
+                    cat: "phase".into(),
+                    label: "normalize".into(),
+                    start_ns: 99,
+                    dur_ns: 1,
+                    bytes: 0,
+                    iter: NO_ITER,
+                },
+            ],
+        };
+        let bytes = timeline_to_bytes(&t);
+        let back = timeline_from_bytes(3, &bytes).unwrap();
+        assert_eq!(back, t);
+        assert!(timeline_from_bytes(0, &bytes[..bytes.len() - 2]).is_err());
+        assert!(timeline_from_bytes(0, b"garbage!").is_err());
+    }
+
+    #[test]
+    fn timeline_json_roundtrip() {
+        let t = RankTimeline {
+            rank: 1,
+            pid: 77,
+            dropped: 0,
+            spans: vec![TimelineSpan {
+                cat: "compute".into(),
+                label: "gram_mul".into(),
+                start_ns: 5,
+                dur_ns: 6,
+                bytes: 7,
+                iter: 0,
+            }],
+        };
+        let v = timeline_to_json(&t);
+        let parsed = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(timeline_from_json(&parsed).unwrap(), t);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_bucket_resolution() {
+        let mut h = Histogram::new();
+        for ns in 1..=1000u64 {
+            h.record_ns(ns * 1000); // 1µs .. 1ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_ns(0.50);
+        let p99 = h.quantile_ns(0.99);
+        // log2 buckets: answer within 2x of the exact quantile
+        assert!((250_000..=1_048_575).contains(&p50), "p50={p50}");
+        assert!((500_000..=2_097_151).contains(&p99), "p99={p99}");
+        assert!(p50 <= p99);
+        assert!(h.mean_ns() > 0);
+        let mut other = Histogram::new();
+        other.record_ns(1);
+        other.merge(&h);
+        assert_eq!(other.count(), 1001);
+    }
+
+    #[test]
+    fn registry_counts_and_gauges() {
+        let mut m = MetricsRegistry::new();
+        m.counter_add("queries", 2);
+        m.counter_add("queries", 3);
+        m.gauge_set("cache_fill", 0.5);
+        m.histogram_record_ns("latency", 1000);
+        assert_eq!(m.counter("queries"), 5);
+        assert_eq!(m.gauge("cache_fill"), Some(0.5));
+        assert_eq!(m.histogram("latency").unwrap().count(), 1);
+        assert_eq!(m.counters().count(), 1);
+    }
+
+    #[test]
+    fn chrome_export_and_summary_agree() {
+        let timelines = vec![
+            RankTimeline {
+                rank: 0,
+                pid: 100,
+                dropped: 0,
+                spans: vec![
+                    TimelineSpan {
+                        cat: "comm".into(),
+                        label: "row_reduce".into(),
+                        start_ns: 0,
+                        dur_ns: 2_000_000,
+                        bytes: 512,
+                        iter: 0,
+                    },
+                    TimelineSpan {
+                        cat: "compute".into(),
+                        label: "gram_mul".into(),
+                        start_ns: 10,
+                        dur_ns: 1_000_000,
+                        bytes: 0,
+                        iter: 0,
+                    },
+                ],
+            },
+            RankTimeline {
+                rank: 1,
+                pid: 200,
+                dropped: 0,
+                spans: vec![TimelineSpan {
+                    cat: "comm".into(),
+                    label: "row_reduce".into(),
+                    start_ns: 0,
+                    dur_ns: 3_000_000,
+                    bytes: 256,
+                    iter: 0,
+                }],
+            },
+        ];
+        let trace = chrome_trace_json(&timelines);
+        // must parse back from its own serialization
+        let parsed = Json::parse(&trace.to_string()).unwrap();
+        let from_file = summarize_chrome_trace(&parsed).unwrap();
+        let direct = summarize_timelines(&timelines);
+        assert_eq!(from_file.len(), direct.len());
+        for (a, b) in from_file.iter().zip(&direct) {
+            assert_eq!((a.cat.as_str(), a.name.as_str(), a.count, a.bytes), (
+                b.cat.as_str(),
+                b.name.as_str(),
+                b.count,
+                b.bytes
+            ));
+            assert!((a.seconds - b.seconds).abs() < 1e-6);
+        }
+        let row = from_file.iter().find(|r| r.name == "row_reduce").unwrap();
+        assert_eq!(row.count, 2);
+        assert_eq!(row.bytes, 768);
+        assert!((row.seconds - 0.005).abs() < 1e-6);
+        // metadata rows: one process_name per pid, one thread_name per rank
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let metas = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .count();
+        assert_eq!(metas, 4);
+        let table = format_summary(&from_file);
+        assert!(table.contains("row_reduce"));
+        assert!(table.contains("total"));
+    }
+}

@@ -165,17 +165,26 @@ pub fn rescal_rank(
     let mut deno_a = ws.acquire(rows, k);
     model.acquire(ws, rows, cols, k);
 
+    // Each iteration segment is bracketed with a `"phase"` timeline
+    // span (pack / reduce / gemm / mu_update / normalize); the op-level
+    // spans recorded inside nest under them in the exported trace.
     let mut iters_run = 0;
     for iter in 0..cfg.opts.max_iters {
         iters_run = iter + 1;
+        trace.set_iter(iter as u32);
         // ---- AᵀA, replicated (Alg 3 line 3) ----
+        let ph = trace.phase_start();
         trace.record(CommOp::GramMul, a_col.as_slice().len() * 4, || {
             backend.gram_into(&a_col, &mut ata)
         });
+        trace.phase_end("pack", ph);
+        let ph = trace.phase_start();
         all_reduce_mat(&ctx.row_comm, &mut ata, CommOp::RowReduce, trace)?;
+        trace.phase_end("reduce", ph);
 
         num_a.clear();
         deno_a.clear();
+        let ph = trace.phase_start();
         for t in 0..m {
             // ---- XA (Alg 3 line 5) ----
             tile.xa_into(t, &a_col, &mut xa, backend, trace);
@@ -199,13 +208,18 @@ pub fn rescal_rank(
                 trace,
             )?;
         }
+        trace.phase_end("gemm", ph);
         // ---- A update (line 22) ----
+        let ph = trace.phase_start();
         mu_update(&mut a_row, &num_a, &deno_a, eps);
+        trace.phase_end("mu_update", ph);
         // ---- refresh A^(j): column broadcast from the diagonal (line 23) ----
+        let ph = trace.phase_start();
         if ctx.is_diagonal() {
             a_col.copy_from(&a_row);
         }
         broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col, CommOp::ColumnBroadcast, trace)?;
+        trace.phase_end("normalize", ph);
 
         // optional convergence check
         if cfg.opts.err_every > 0 && (iter + 1) % cfg.opts.err_every == 0 {
@@ -217,12 +231,14 @@ pub fn rescal_rank(
             }
         }
     }
+    trace.set_iter(crate::obs::NO_ITER);
     model.release(ws);
     for buf in [ata, xa, num_a, deno_a] {
         ws.release(buf);
     }
 
     // ---- final normalization: global column norms via column all_reduce ----
+    let ph = trace.phase_start();
     let mut sq = Mat::from_vec(
         1,
         k,
@@ -253,6 +269,7 @@ pub fn rescal_rank(
         a_col.copy_from(&a_row);
     }
     broadcast_mat(&ctx.col_comm, ctx.col, &mut a_col, CommOp::ColumnBroadcast, trace)?;
+    trace.phase_end("normalize", ph);
     let rel = distributed_rel_error(
         ctx, tile, &a_row, &a_col, &r, x_norm_sq, cfg.model, backend, trace,
     )?;
@@ -447,6 +464,45 @@ mod tests {
             assert!((s.rel_error - d.rel_error).abs() < 1e-3);
             assert_close(s.a_row.as_slice(), d.a_row.as_slice(), 1e-2);
             assert!(*sparse_bytes > 0, "sparse path not exercised");
+        }
+    }
+
+    #[test]
+    fn timeline_records_phase_spans_per_iteration() {
+        let planted = synthetic::planted_tensor(12, 2, 2, 0.0, 206);
+        let x = planted.x;
+        let iters = 3;
+        let results = run_on_grid(4, |ctx| {
+            let (r0, r1) = ctx.grid.chunk(12, ctx.row);
+            let (c0, c1) = ctx.grid.chunk(12, ctx.col);
+            let tile = LocalTile::Dense(x.tile(r0, r1, c0, c1));
+            let cfg = DistRescalConfig {
+                opts: RescalOptions::new(2, iters),
+                init: DistInit::Random { seed: 1 },
+                n: 12,
+                model: ModelKind::Rescal,
+            };
+            let mut backend = NativeBackend::new();
+            let mut ws = Workspace::new();
+            let mut trace = Trace::new();
+            rescal_rank(&ctx, &tile, &cfg, &mut backend, &mut ws, &mut trace)
+                .expect("in-process rescal_rank");
+            trace.timeline_snapshot(ctx.world.rank)
+        });
+        for tl in results {
+            for label in ["pack", "reduce", "gemm", "mu_update", "normalize"] {
+                let count = tl
+                    .spans
+                    .iter()
+                    .filter(|s| s.cat == "phase" && s.label == label)
+                    .count();
+                assert!(count >= iters, "phase {label} appeared {count} times");
+            }
+            // comm spans carry the real wire traffic
+            assert!(tl.spans.iter().any(|s| s.cat == "comm" && s.bytes > 0));
+            // spans are stamped with the iteration they belong to
+            assert!(tl.spans.iter().any(|s| s.iter == (iters - 1) as u32));
+            assert!(tl.spans.iter().any(|s| s.iter == crate::obs::NO_ITER));
         }
     }
 

@@ -18,13 +18,19 @@
 //!
 //! [`ServeStats`] counts cache hits, GEMM batches, and scored
 //! candidates so tests can *prove* the reuse guarantees (a repeated
-//! query must add zero scored candidates).
+//! query must add zero scored candidates). Every answered query also
+//! lands in a log-bucketed latency [`Histogram`]
+//! (each query in a batch is charged the batch's wall time — what the
+//! caller actually waited), surfaced as p50/p95/p99 in [`ServeStats`]
+//! and `drescal serve-bench`.
 
 use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
 
 use crate::backend::Workspace;
 use crate::error::Result;
 use crate::json::Json;
+use crate::obs::Histogram;
 
 use super::model::FactorModel;
 use super::score::{self, Direction, Hit};
@@ -102,6 +108,14 @@ pub struct ServeStats {
     /// counter-assert that the diagonal serving fast path never
     /// densified.
     pub projection_bytes_saved: usize,
+    /// Median per-query latency in microseconds (log-bucket resolution,
+    /// ~2x). A query's latency is the wall time of the batch that
+    /// answered it. 0 until a query completes.
+    pub latency_p50_us: u64,
+    /// 95th-percentile per-query latency in microseconds.
+    pub latency_p95_us: u64,
+    /// 99th-percentile per-query latency in microseconds.
+    pub latency_p99_us: u64,
 }
 
 /// How many answers the LRU cache keeps by default.
@@ -126,6 +140,8 @@ pub struct QueryEngine {
     /// Arena for the batched-GEMM temporaries (anchor block + score
     /// matrix): steady-state batches are served entirely from reuse.
     ws: Workspace,
+    /// Per-query latency distribution (nanoseconds, log buckets).
+    latency: Histogram,
 }
 
 impl QueryEngine {
@@ -148,6 +164,7 @@ impl QueryEngine {
             capacity,
             stats,
             ws: Workspace::new(),
+            latency: Histogram::new(),
         }
     }
 
@@ -156,9 +173,19 @@ impl QueryEngine {
         &self.model
     }
 
-    /// Cumulative serving counters.
+    /// Cumulative serving counters, with latency percentiles read from
+    /// the live histogram.
     pub fn stats(&self) -> ServeStats {
-        self.stats
+        let mut s = self.stats;
+        s.latency_p50_us = self.latency.quantile_ns(0.50) / 1000;
+        s.latency_p95_us = self.latency.quantile_ns(0.95) / 1000;
+        s.latency_p99_us = self.latency.quantile_ns(0.99) / 1000;
+        s
+    }
+
+    /// The per-query latency distribution (nanoseconds, log buckets).
+    pub fn latency_histogram(&self) -> &Histogram {
+        &self.latency
     }
 
     /// Answer one query (a batch of one).
@@ -171,6 +198,7 @@ impl QueryEngine {
     /// queries that share `(relation, direction, top)` are scored by a
     /// single GEMM; answers come back in query order.
     pub fn submit_batch(&mut self, queries: &[Query]) -> Result<Vec<Answer>> {
+        let t0 = Instant::now();
         // validate everything before scoring anything
         for q in queries {
             match *q {
@@ -239,6 +267,11 @@ impl QueryEngine {
         let w = self.ws.stats();
         self.stats.ws_allocs = w.mat_allocs;
         self.stats.ws_reuses = w.mat_reuses;
+        // every query in the batch waited for the whole batch
+        let batch_ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        for _ in 0..queries.len() {
+            self.latency.record_ns(batch_ns);
+        }
         Ok(answers
             .into_iter()
             .map(|a| a.expect("every query slot answered"))
@@ -394,6 +427,29 @@ mod tests {
         assert_eq!(qe.stats().scored_candidates, 0);
         assert!(qe.query(Query::Score { s: 0, r: 5, o: 0 }).is_err());
         assert!(qe.query(Query::TopSubjects { o: 6, r: 0, top: 1 }).is_err());
+    }
+
+    #[test]
+    fn latency_histogram_charges_every_answered_query() {
+        let mut qe = engine(16, 8);
+        assert_eq!(qe.latency_histogram().count(), 0);
+        assert_eq!(qe.stats().latency_p50_us, 0, "no data yet");
+        let batch = [
+            Query::TopObjects { s: 0, r: 0, top: 3 },
+            Query::TopObjects { s: 1, r: 0, top: 3 },
+            Query::Score { s: 0, r: 0, o: 1 },
+        ];
+        qe.submit_batch(&batch).unwrap();
+        assert_eq!(qe.latency_histogram().count(), 3, "one sample per query");
+        // cache hits are still answered queries: they get charged too
+        qe.query(Query::Score { s: 0, r: 0, o: 1 }).unwrap();
+        assert_eq!(qe.latency_histogram().count(), 4);
+        let s = qe.stats();
+        assert!(s.latency_p99_us >= s.latency_p95_us);
+        assert!(s.latency_p95_us >= s.latency_p50_us);
+        // a failed batch answers nothing and charges nothing
+        assert!(qe.submit_batch(&[Query::Score { s: 99, r: 0, o: 0 }]).is_err());
+        assert_eq!(qe.latency_histogram().count(), 4);
     }
 
     #[test]

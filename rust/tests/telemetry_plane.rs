@@ -1,0 +1,245 @@
+//! Telemetry plane integration: a telemetry-disabled run must perform
+//! zero obs-plane allocations and tracing must never perturb the math
+//! (bit-identical factors); a real TCP cluster with `--trace-out` must
+//! export a valid Chrome trace carrying phase spans from every rank in
+//! every OS process, and `drescal trace-summary` must agree with the
+//! trace's own totals.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use drescal::data::synthetic::SyntheticSpec;
+use drescal::engine::{Engine, EngineConfig};
+use drescal::json::Json;
+use drescal::rescal::RescalOptions;
+
+fn factor_bits(report: &drescal::coordinator::RescalReport) -> Vec<u32> {
+    let mut bits: Vec<u32> = report.a.as_slice().iter().map(|v| v.to_bits()).collect();
+    for s in report.r.slices() {
+        bits.extend(s.as_slice().iter().map(|v| v.to_bits()));
+    }
+    bits
+}
+
+/// Telemetry off is the default, and it must cost nothing: the obs
+/// allocation counter is untouched across a whole factorization, the
+/// report ships no timeline, and turning tracing on afterwards produces
+/// bit-identical factors (spans observe the math, never steer it).
+///
+/// `obs::alloc_count` is process-global, so this test is the only one in
+/// this binary that may touch obs-plane code in-process — the cluster
+/// test below drives subprocesses and parses their JSON by hand.
+#[test]
+fn disabled_telemetry_allocates_nothing_and_changes_nothing() {
+    let spec = || SyntheticSpec::dense(24, 2, 3, 9);
+    let opts = RescalOptions::new(3, 12);
+
+    let mut plain = Engine::new(EngineConfig::new(4)).unwrap();
+    let data = plain.load_dataset(spec()).unwrap();
+    let before = drescal::obs::alloc_count();
+    let report = plain.factorize(data, &opts, 9).unwrap();
+    assert_eq!(
+        drescal::obs::alloc_count(),
+        before,
+        "telemetry-disabled factorize allocated on the obs plane"
+    );
+    assert!(report.timeline.is_empty(), "untraced run must not ship a timeline");
+
+    let mut traced = Engine::new(EngineConfig::new(4).with_trace(true)).unwrap();
+    let tdata = traced.load_dataset(spec()).unwrap();
+    let treport = traced.factorize(tdata, &opts, 9).unwrap();
+    assert_eq!(treport.timeline.len(), 4, "one timeline per rank");
+    for t in &treport.timeline {
+        assert!(
+            t.spans.iter().any(|s| s.cat == "phase"),
+            "rank {} recorded no phase spans",
+            t.rank
+        );
+    }
+    assert_eq!(
+        factor_bits(&report),
+        factor_bits(&treport),
+        "tracing changed the factors"
+    );
+}
+
+// ---------------------------------------------------------------------
+// multi-process: real `drescal train --trace-out` over a TCP cluster
+// ---------------------------------------------------------------------
+
+fn drescal() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_drescal"))
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("drescal_telemetry_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Poll until the leader writes its bound address to the port file.
+fn wait_port_file(path: &Path) -> String {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            let t = s.trim();
+            if !t.is_empty() {
+                return t.to_string();
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "leader never wrote its port file {}",
+            path.display()
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn spawn_worker(addr: &str) -> Child {
+    drescal()
+        .args(["worker", "--connect", addr])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn drescal worker")
+}
+
+/// Wait for a child with a deadline; kill and fail if it wedges.
+fn reap(mut child: Child, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match child.try_wait() {
+            Ok(Some(_)) => return,
+            Ok(None) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            _ => {
+                let _ = child.kill();
+                let _ = child.wait();
+                panic!("{what} did not exit after the leader finished");
+            }
+        }
+    }
+}
+
+fn combined(out: &std::process::Output) -> String {
+    format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    )
+}
+
+/// A 2×2 TCP cluster (leader + 3 worker processes) trained with
+/// `--trace-out` must export one Chrome trace covering the whole
+/// cluster: all 4 rank tracks, 4 distinct OS pids, phase spans on every
+/// track, and per-op totals that `trace-summary` reproduces exactly.
+#[test]
+fn tcp_cluster_trace_covers_every_rank_and_process() {
+    let dir = tmpdir("cluster");
+    let port_file = dir.join("leader.addr");
+    let trace_path = dir.join("trace.json");
+    let leader = drescal()
+        .arg("train")
+        .args(["--data", "synthetic", "--n", "24", "--m", "2", "--k-true", "2"])
+        .args(["--density", "0.3", "--k", "2", "--iters", "5", "--seed", "5"])
+        .args(["--workers", "3", "--listen", "127.0.0.1:0"])
+        .args(["--port-file", port_file.to_str().unwrap()])
+        .args(["--trace-out", trace_path.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn leader");
+    let addr = wait_port_file(&port_file);
+    let workers: Vec<Child> = (0..3).map(|_| spawn_worker(&addr)).collect();
+    let out = leader.wait_with_output().expect("leader run");
+    let text = combined(&out);
+    for w in workers {
+        reap(w, "worker");
+    }
+    assert!(out.status.success(), "leader failed:\n{text}");
+    assert!(
+        text.contains("from 4 rank(s)"),
+        "leader did not report a 4-rank trace export:\n{text}"
+    );
+
+    // the exported file is a valid Chrome trace with complete events
+    // from every rank of every process
+    let raw = std::fs::read_to_string(&trace_path).expect("trace file written");
+    let v = Json::parse(&raw).expect("trace must be valid JSON");
+    let events = v
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("trace must carry a traceEvents array");
+    let mut pids: BTreeSet<u64> = BTreeSet::new();
+    let mut tids: BTreeSet<u64> = BTreeSet::new();
+    let mut phase_tids: BTreeSet<u64> = BTreeSet::new();
+    let mut x_events: u64 = 0;
+    let mut total_bytes: u64 = 0;
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        x_events += 1;
+        let pid = e.get("pid").and_then(Json::as_f64).expect("event pid") as u64;
+        let tid = e.get("tid").and_then(Json::as_f64).expect("event tid") as u64;
+        pids.insert(pid);
+        tids.insert(tid);
+        if e.get("cat").and_then(Json::as_str) == Some("phase") {
+            phase_tids.insert(tid);
+        }
+        total_bytes += e
+            .get("args")
+            .and_then(|a| a.get("bytes"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as u64;
+    }
+    assert!(x_events > 0, "trace holds no complete events");
+    assert_eq!(tids, (0..4).collect(), "missing rank tracks in the trace");
+    assert_eq!(
+        pids.len(),
+        4,
+        "expected 4 distinct OS pids (leader + 3 workers), got {pids:?}"
+    );
+    assert_eq!(
+        phase_tids.len(),
+        4,
+        "phase spans missing from some rank: only tids {phase_tids:?} have them"
+    );
+
+    // trace-summary must reproduce the trace's own totals: summed row
+    // counts equal the X-event count, and the total row's byte column
+    // equals the sum of every event's byte payload
+    let summary = drescal()
+        .args(["trace-summary", trace_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let stext = combined(&summary);
+    assert!(summary.status.success(), "trace-summary failed:\n{stext}");
+    let mut row_counts: u64 = 0;
+    for line in stext.lines().skip(1) {
+        if line.starts_with("total") {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        // data rows are [cat, op, count, seconds, bytes]
+        if toks.len() == 5 {
+            row_counts += toks[2].parse::<u64>().unwrap_or(0);
+        }
+    }
+    assert_eq!(row_counts, x_events, "summary counts disagree with the trace:\n{stext}");
+    let total_line = stext
+        .lines()
+        .find(|l| l.starts_with("total"))
+        .unwrap_or_else(|| panic!("no total row in summary:\n{stext}"));
+    assert_eq!(
+        total_line.split_whitespace().last().unwrap(),
+        total_bytes.to_string(),
+        "summary byte total disagrees with the trace:\n{stext}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
