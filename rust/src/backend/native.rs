@@ -1,6 +1,9 @@
 //! Native backend: the packed microkernel GEMM from
 //! [`crate::tensor::kernel`], written straight into caller-owned
-//! (workspace) buffers.
+//! (workspace) buffers. Every op rides the runtime-dispatched SIMD
+//! microkernel (AVX2/AVX-512/NEON, scalar fallback) and the blocking
+//! installed by `drescal tune`; `gram_into` routes its mirrored lower
+//! triangle through the same packed path without allocating.
 
 use super::Backend;
 use crate::tensor::{kernel, Mat};

@@ -44,6 +44,12 @@ pub fn calibrate_dense_flops() -> f64 {
     2.0 * (n as f64).powi(3) / stats.median
 }
 
+/// Achieved GFLOP/s of an m×k·k×n GEMM (2·m·k·n flops) that took `wall`
+/// seconds — the roofline axis of the kernel bench rows.
+pub fn gemm_gflops(m: usize, k: usize, n: usize, wall: f64) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64 / wall.max(1e-12) / 1e9
+}
+
 /// Format seconds with an adaptive unit.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {
@@ -117,6 +123,13 @@ mod tests {
         let flops = calibrate_dense_flops();
         // any machine lands between 100 MFLOP/s and 10 TFLOP/s
         assert!(flops > 1e8 && flops < 1e13, "calibrated {flops}");
+    }
+
+    #[test]
+    fn gflops_is_2mkn_over_wall() {
+        assert!((gemm_gflops(512, 512, 512, 1.0) - 2.0 * 512.0f64.powi(3) / 1e9).abs() < 1e-9);
+        // a zero wall clamps instead of dividing by zero
+        assert!(gemm_gflops(8, 8, 8, 0.0).is_finite());
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::error::{Context as _, Result};
 use crate::json::Json;
 use crate::model_selection::{InitStrategy, RescalkConfig, SelectionRule};
 use crate::rescal::{ModelKind, RescalOptions};
+use crate::tensor::DType;
 use crate::{bail, err};
 
 /// Parsed command line: subcommand + `--key value` flags.
@@ -315,6 +316,9 @@ pub struct ExportCmd {
     pub seed: u64,
     /// Output path of the model artifact.
     pub model: String,
+    /// Storage precision of the exported factors: `--dtype f16|bf16`
+    /// quantizes A and R (round-to-nearest-even) before serializing.
+    pub dtype: DType,
 }
 
 /// `drescal query` — load a persisted model and answer one
@@ -353,6 +357,9 @@ pub struct IngestCmd {
     pub grid: usize,
     /// Store dense (memory-mappable) blocks instead of CSR.
     pub dense: bool,
+    /// Element precision of dense shards: `--dtype f16|bf16` halves the
+    /// on-disk (and mapped) bytes. Requires `--dense`.
+    pub dtype: DType,
     /// Also print the ingest report as JSON.
     pub json: bool,
 }
@@ -386,6 +393,20 @@ pub struct ArtifactsCmd {
     pub dir: String,
 }
 
+/// `drescal tune` — time the packed-GEMM MC/KC/NC blocking grid on this
+/// machine with the dispatched microkernel and persist the winning
+/// parameters to a JSON profile (`KERNEL_tune.json` by default), which
+/// every other subcommand auto-loads at startup when its ISA matches.
+#[derive(Clone, Debug)]
+pub struct TuneCmd {
+    /// Output path of the tuning profile.
+    pub out: String,
+    /// Coarse grid + fewer reps (the CI smoke configuration).
+    pub quick: bool,
+    /// Also print the profile as JSON.
+    pub json: bool,
+}
+
 /// `drescal trace-summary <trace.json>` — print the per-op runtime
 /// table (paper §6.3 style) aggregated from a Chrome trace-event file
 /// written by `--trace-out`.
@@ -408,6 +429,7 @@ pub enum Command {
     Query(QueryCmd),
     ServeBench(ServeBenchCmd),
     Ingest(IngestCmd),
+    Tune(TuneCmd),
     TraceSummary(TraceSummaryCmd),
     Help,
 }
@@ -437,14 +459,15 @@ const BENCH_FLAGS: &[&str] = &[
 const EXPORT_FLAGS: &[&str] = &[
     "config", "data", "n", "m", "k-true", "density", "seed", "p", "backend", "artifacts",
     "trace", "k", "iters", "sweep", "model", "k-min", "k-max", "perturbations", "delta",
-    "tol", "err-every", "regress-iters", "cache-bytes", "family",
+    "tol", "err-every", "regress-iters", "cache-bytes", "family", "dtype",
 ];
 const QUERY_FLAGS: &[&str] = &["config", "model", "s", "o", "r", "top", "json", "family"];
 const SERVE_BENCH_FLAGS: &[&str] = &[
     "config", "p", "backend", "artifacts", "trace", "n", "m", "k", "iters", "queries",
     "batch", "top", "seed", "cache-bytes",
 ];
-const INGEST_FLAGS: &[&str] = &["config", "input", "out", "grid", "dense", "json"];
+const INGEST_FLAGS: &[&str] = &["config", "input", "out", "grid", "dense", "dtype", "json"];
+const TUNE_FLAGS: &[&str] = &["config", "out", "quick", "json"];
 const TRAIN_FLAGS: &[&str] = &[
     "config", "data", "n", "m", "k-true", "density", "seed", "trace", "trace-out", "k",
     "iters", "json", "workers", "listen", "port-file", "comm-timeout-ms",
@@ -566,6 +589,7 @@ impl RunConfig {
                     sweep,
                     seed: args.get_u64("seed", 42)?,
                     model: args.get("model").unwrap_or("model.json").to_string(),
+                    dtype: dtype_flag(&args)?,
                 })
             }
             "query" => {
@@ -608,11 +632,28 @@ impl RunConfig {
                 if grid == 0 {
                     bail!("--grid must be >= 1");
                 }
+                let dtype = dtype_flag(&args)?;
+                let dense = args.get_bool("dense");
+                if dtype.is_half() && !dense {
+                    bail!("--dtype {} requires --dense (sparse shards stay f32)", dtype.as_str());
+                }
                 Command::Ingest(IngestCmd {
                     input,
                     out: args.get("out").unwrap_or("corpus").to_string(),
                     grid,
-                    dense: args.get_bool("dense"),
+                    dense,
+                    dtype,
+                    json: args.get_bool("json"),
+                })
+            }
+            "tune" => {
+                check_known_flags(&args.subcommand, &cli_flags, TUNE_FLAGS)?;
+                Command::Tune(TuneCmd {
+                    out: args
+                        .get("out")
+                        .unwrap_or(crate::tensor::kernel::tune::PROFILE_FILE)
+                        .to_string(),
+                    quick: args.get_bool("quick"),
                     json: args.get_bool("json"),
                 })
             }
@@ -723,6 +764,15 @@ fn check_known_flags(subcommand: &str, cli_flags: &[String], allowed: &[&str]) -
         }
     }
     Ok(())
+}
+
+/// `--dtype f32|f16|bf16` (default f32), shared by `ingest` and
+/// `export`.
+fn dtype_flag(args: &Args) -> Result<DType> {
+    match args.get("dtype") {
+        None => Ok(DType::F32),
+        Some(s) => DType::parse(s).ok_or_else(|| err!("unknown --dtype '{s}' (f32|f16|bf16)")),
+    }
 }
 
 /// Typed engine configuration: grid size (perfect-square-checked), backend
@@ -1125,6 +1175,60 @@ mod tests {
         }
         assert!(RunConfig::from_args(argv("ingest --input k.tsv --grid 0")).is_err());
         assert!(RunConfig::from_args(argv("ingest --input k.tsv --k 4")).is_err());
+    }
+
+    #[test]
+    fn dtype_flags_are_typed_and_validated() {
+        // ingest: defaults to f32, accepts half only with --dense
+        let cfg = RunConfig::from_args(argv("ingest --input kg.tsv")).unwrap();
+        match cfg.command {
+            Command::Ingest(cmd) => assert_eq!(cmd.dtype, DType::F32),
+            _ => panic!("expected ingest command"),
+        }
+        let cfg =
+            RunConfig::from_args(argv("ingest --input kg.tsv --dense --dtype bf16")).unwrap();
+        match cfg.command {
+            Command::Ingest(cmd) => assert_eq!(cmd.dtype, DType::Bf16),
+            _ => panic!("expected ingest command"),
+        }
+        let e = RunConfig::from_args(argv("ingest --input kg.tsv --dtype f16")).unwrap_err();
+        assert!(e.to_string().contains("--dense"), "{e}");
+        let e = RunConfig::from_args(argv("ingest --input kg.tsv --dense --dtype f64"))
+            .unwrap_err();
+        assert!(e.to_string().contains("--dtype"), "{e}");
+        // export: half artifacts need no --dense (the factors are dense
+        // by construction)
+        let cfg = RunConfig::from_args(argv("export --dtype f16")).unwrap();
+        match cfg.command {
+            Command::Export(cmd) => assert_eq!(cmd.dtype, DType::F16),
+            _ => panic!("expected export command"),
+        }
+        assert!(RunConfig::from_args(argv("export --dtype f64")).is_err());
+        // other subcommands don't take --dtype
+        assert!(RunConfig::from_args(argv("run --dtype f16")).is_err());
+    }
+
+    #[test]
+    fn tune_subcommand_is_typed() {
+        let cfg = RunConfig::from_args(argv("tune")).unwrap();
+        match cfg.command {
+            Command::Tune(cmd) => {
+                assert_eq!(cmd.out, crate::tensor::kernel::tune::PROFILE_FILE);
+                assert!(!cmd.quick);
+                assert!(!cmd.json);
+            }
+            _ => panic!("expected tune command"),
+        }
+        let cfg = RunConfig::from_args(argv("tune --quick --out prof.json --json")).unwrap();
+        match cfg.command {
+            Command::Tune(cmd) => {
+                assert_eq!(cmd.out, "prof.json");
+                assert!(cmd.quick);
+                assert!(cmd.json);
+            }
+            _ => panic!("expected tune command"),
+        }
+        assert!(RunConfig::from_args(argv("tune --iters 3")).is_err());
     }
 
     #[test]

@@ -294,7 +294,7 @@ mod tests {
                             nnz[t] += c.nnz();
                         }
                     }
-                    LocalTile::Dense(_) => panic!("expected sparse tile"),
+                    _ => panic!("expected sparse tile"),
                 }
             }
         }

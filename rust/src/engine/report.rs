@@ -295,10 +295,29 @@ fn telemetry_to_json(
     obj.insert("traces".to_string(), traces_to_json(traces));
     obj.insert("workspace".to_string(), workspace_to_json(workspace));
     obj.insert("transport".to_string(), transport_to_json(backend, traces));
+    obj.insert("kernel".to_string(), kernel_to_json());
     obj.insert(
         "timeline".to_string(),
         Json::Arr(timeline.iter().map(crate::obs::timeline_to_json).collect()),
     );
+    Json::Obj(obj)
+}
+
+/// The kernel-plane context every report carries: which SIMD microkernel
+/// dispatch selected on this machine and the blocking in effect (default
+/// or a `drescal tune` profile) — so an archived report's timings are
+/// attributable to the code path that produced them.
+fn kernel_to_json() -> Json {
+    let kern = crate::tensor::kernel::dispatch::active();
+    let (mc, kc, nc) = crate::tensor::kernel::blocking();
+    let mut obj = BTreeMap::new();
+    obj.insert("variant".to_string(), Json::Str(kern.name.to_string()));
+    obj.insert("isa".to_string(), Json::Str(kern.isa.to_string()));
+    obj.insert("mr".to_string(), Json::Num(kern.mr as f64));
+    obj.insert("nr".to_string(), Json::Num(kern.nr as f64));
+    obj.insert("mc".to_string(), Json::Num(mc as f64));
+    obj.insert("kc".to_string(), Json::Num(kc as f64));
+    obj.insert("nc".to_string(), Json::Num(nc as f64));
     Json::Obj(obj)
 }
 
@@ -536,6 +555,20 @@ mod tests {
         assert_eq!(row.total(), 4.0);
         assert!((row.comm_fraction() - 0.25).abs() < 1e-12);
         assert_eq!(row.logical_bytes(), 8e9);
+    }
+
+    #[test]
+    fn kernel_section_reports_dispatch_and_blocking() {
+        let v = kernel_to_json();
+        let kern = crate::tensor::kernel::dispatch::active();
+        let (mc, kc, nc) = crate::tensor::kernel::blocking();
+        assert_eq!(v.get("variant").and_then(Json::as_str), Some(kern.name));
+        assert_eq!(v.get("isa").and_then(Json::as_str), Some(kern.isa));
+        assert_eq!(v.get("mr").and_then(Json::as_usize), Some(kern.mr));
+        assert_eq!(v.get("nr").and_then(Json::as_usize), Some(kern.nr));
+        assert_eq!(v.get("mc").and_then(Json::as_usize), Some(mc));
+        assert_eq!(v.get("kc").and_then(Json::as_usize), Some(kc));
+        assert_eq!(v.get("nc").and_then(Json::as_usize), Some(nc));
     }
 
     #[test]

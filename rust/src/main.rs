@@ -37,7 +37,7 @@ use drescal::bench_util;
 use drescal::config::{
     ArtifactsCmd, BenchCmd, Command, ExascaleCmd, ExportCmd, FactorizeCmd, IngestCmd,
     MachineSpec, ModelSelectCmd, QueryCmd, RunConfig, ServeBenchCmd, TraceSummaryCmd,
-    TrainCmd,
+    TrainCmd, TuneCmd,
 };
 use drescal::coordinator::metrics::RunMetrics;
 use drescal::data::synthetic::SyntheticSpec;
@@ -62,7 +62,14 @@ fn main() {
 }
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
-    match RunConfig::from_args(argv)?.command {
+    let command = RunConfig::from_args(argv)?.command;
+    // apply this machine's persisted blocking profile (if any, and if its
+    // ISA matches the dispatched kernel) before any GEMM runs; `tune`
+    // manages the blocking itself
+    if !matches!(command, Command::Tune(_)) {
+        drescal::tensor::kernel::tune::autoload();
+    }
+    match command {
         Command::Run(cmd) => cmd_run(cmd),
         Command::Train(cmd) => cmd_train(cmd),
         Command::Worker(cmd) => drescal::engine::cluster::run_worker(&cmd.connect),
@@ -74,6 +81,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Command::Query(cmd) => cmd_query(cmd),
         Command::ServeBench(cmd) => cmd_serve_bench(cmd),
         Command::Ingest(cmd) => cmd_ingest(cmd),
+        Command::Tune(cmd) => cmd_tune(cmd),
         Command::TraceSummary(cmd) => cmd_trace_summary(cmd),
         Command::Help => {
             print_help();
@@ -122,10 +130,13 @@ SUBCOMMANDS
                   (run flags; --sweep adds the model-select flags and
                   exports the k_opt model)  --model FILE (model.json)
                   --family rescal|distmult|logistic   model family (rescal)
+                  --dtype f32|f16|bf16   quantize the stored factors (f32)
   ingest        triples -> binary tile shards + manifest (see --data file:)
                   --input FILE   subject<TAB>relation<TAB>object[<TAB>weight]
                   --out DIR (corpus)  --grid G (1; GxG shards)
                   --dense        dense mmap-able blocks instead of CSR
+                  --dtype f32|f16|bf16   dense shard element precision
+                                 (half = half the bytes; requires --dense)
                   --json
   query         answer a link-prediction query from a saved model
                   --model FILE  --r REL  --top K (5)  --json
@@ -139,6 +150,11 @@ SUBCOMMANDS
                   --queries Q (2048)  --batch B (64)  --top K (10)
   exascale      replay Fig 13 (11.5TB dense + 9.5EB sparse) via the model
                   --machine cpu|gpu|calibrated
+  tune          time the packed-GEMM blocking grid (MC/KC/NC) with the
+                dispatched SIMD microkernel and persist the winner; every
+                other subcommand auto-loads the profile when its ISA
+                matches (or set DRESCAL_TUNE_PROFILE to point elsewhere)
+                  --out FILE (KERNEL_tune.json)  --quick  --json
   trace-summary per-op runtime table (paper §6.3 style) aggregated from
                 a --trace-out trace file:  drescal trace-summary trace.json
   artifacts     list the AOT artifact manifest [--artifacts DIR]
@@ -151,7 +167,9 @@ SUBCOMMANDS
   help          this text
 
 Flags may also come from --config FILE (JSON object; CLI wins).
-Tracing is opt-in (--trace): per-op timing costs on every hot-path op."
+Tracing is opt-in (--trace): per-op timing costs on every hot-path op.
+Kernel dispatch picks the best SIMD microkernel for this CPU at startup;
+DRESCAL_FORCE_SCALAR=1 or DRESCAL_KERNEL=<name> override it."
     );
 }
 
@@ -403,6 +421,22 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
     let mut engine = Engine::new(cmd.engine)?;
     let p = engine.config().p;
     println!("bench: p={p} iters={iters} backend={:?}", engine.config().backend);
+    // the kernel line pins the hardware context of every number below:
+    // which microkernel dispatch selected and the blocking in effect
+    // (default, or this machine's `drescal tune` profile)
+    {
+        use drescal::tensor::kernel;
+        let kern = kernel::dispatch::active();
+        let (mc, kc, nc) = kernel::blocking();
+        println!(
+            "kernel: {} (isa {}, {}x{} tile), blocking mc={mc} kc={kc} nc={nc}{}",
+            kern.name,
+            kern.isa,
+            kern.mr,
+            kern.nr,
+            if (mc, kc, nc) == kernel::default_blocking() { "" } else { " [tuned]" }
+        );
+    }
 
     let mut results: Vec<(String, f64)> = Vec::new();
     let mut record = |name: &str, wall: f64| {
@@ -487,34 +521,65 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
     {
         use drescal::rng::Rng;
         use drescal::tensor::dense::{gemm, gemm_legacy};
-        use drescal::tensor::Mat;
+        use drescal::tensor::{kernel, DType, HalfMat, Mat};
         let mut rng = Rng::new(77);
+        // roofline readout: every kernel-plane shape reports its
+        // achieved GFLOP/s next to the wall time, so a perf dip is
+        // attributable to a shape, not just a row name
+        let mut roofline: Vec<(String, f64, f64)> = Vec::new();
+        let mut roof = |label: &str, m: usize, kdim: usize, n: usize, wall: f64| {
+            roofline.push((label.to_string(), wall, bench_util::gemm_gflops(m, kdim, n, wall)));
+        };
         // large dense GEMM (512³)
         let a = Mat::random_uniform(512, 512, 0.0, 1.0, &mut rng);
         let b = Mat::random_uniform(512, 512, 0.0, 1.0, &mut rng);
         let mut c = Mat::zeros(512, 512);
         let packed = bench_util::time_fn(1, 3, || gemm(&a, &b, &mut c, false));
         record("kernel_packed_gemm_512", packed.median);
+        roof("packed 512^3 f32", 512, 512, 512, packed.median);
         let legacy = bench_util::time_fn(1, 3, || gemm_legacy(&a, &b, &mut c, false));
         record("kernel_legacy_gemm_512", legacy.median);
+        roof("legacy 512^3 f32", 512, 512, 512, legacy.median);
         println!(
             "  packed kernel speedup at 512^3: {:.2}x",
             legacy.median / packed.median.max(1e-12)
         );
+        // the same square through the dispatched microkernel API in f32
+        // and with A stored bf16 (widen-on-pack into f32 accumulators) —
+        // the precision axis at the headline shape
+        let st = bench_util::time_fn(1, 3, || kernel::gemm_nn_into(&a, &b, &mut c, false));
+        record("gemm_f32_512", st.median);
+        roof("dispatch 512^3 f32", 512, 512, 512, st.median);
+        let ah = HalfMat::from_f32(&a, DType::Bf16);
+        let st =
+            bench_util::time_fn(1, 3, || kernel::gemm_nn_half_into(&ah, &b, &mut c, false));
+        record("gemm_bf16_512", st.median);
+        roof("dispatch 512^3 bf16 A", 512, 512, 512, st.median);
         // RESCAL training shape: X_t·A (n×n · n×k)
         let x = Mat::random_uniform(768, 768, 0.0, 1.0, &mut rng);
         let f = Mat::random_uniform(768, 16, 0.0, 1.0, &mut rng);
         let mut xa = Mat::zeros(768, 16);
         let st = bench_util::time_fn(1, 3, || gemm(&x, &f, &mut xa, false));
         record("kernel_packed_xa_n768_k16", st.median);
+        roof("XA 768x768x16", 768, 768, 16, st.median);
         // batched serve shape: B×k · (n×k)ᵀ completion scoring
         let q = Mat::random_uniform(64, 16, 0.0, 1.0, &mut rng);
         let entities = Mat::random_uniform(8192, 16, 0.0, 1.0, &mut rng);
         let mut scores = Mat::zeros(64, 8192);
-        let st = bench_util::time_fn(1, 3, || {
-            drescal::tensor::kernel::gemm_nt_into(&q, &entities, &mut scores)
-        });
+        let st = bench_util::time_fn(1, 3, || kernel::gemm_nt_into(&q, &entities, &mut scores));
         record("kernel_packed_serve_b64_n8192", st.median);
+        roof("serve 64x16x8192", 64, 16, 8192, st.median);
+        let rows: Vec<Vec<String>> = roofline
+            .iter()
+            .map(|(label, wall, gflops)| {
+                vec![label.clone(), bench_util::fmt_secs(*wall), format!("{gflops:.2}")]
+            })
+            .collect();
+        bench_util::print_table(
+            "kernel roofline (2mnk flops / median wall)",
+            &["shape", "wall", "GFLOP/s"],
+            &rows,
+        );
     }
 
     // transport plane: ring all-reduce throughput over 4 ranks, 1 MiB of
@@ -580,6 +645,7 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
             grid: 2,
             dense: false,
             source: "bench".to_string(),
+            ..Default::default()
         };
         let t0 = std::time::Instant::now();
         drescal::store::ingest_triples_file(&triples_path, &corpus, &opts)?;
@@ -588,6 +654,24 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
         let t0 = std::time::Instant::now();
         let handle = engine.load_dataset(spec)?;
         record("load_from_file_sparse_g2", t0.elapsed().as_secs_f64());
+        engine.unload_dataset(handle)?;
+
+        // the half-precision storage path end to end: the same triples
+        // ingested as dense f16 shards (half the mapped bytes), loaded
+        // rank-resident without widening, and factorized through the
+        // widen-on-pack kernel path
+        let half_corpus = dir.join("corpus_f16");
+        let opts = drescal::store::IngestOptions {
+            grid: 2,
+            dense: true,
+            dtype: drescal::tensor::DType::F16,
+            source: "bench".to_string(),
+        };
+        drescal::store::ingest_triples_file(&triples_path, &half_corpus, &opts)?;
+        let spec = drescal::engine::DatasetSpec::from_manifest_path(&half_corpus)?;
+        let handle = engine.load_dataset(spec)?;
+        let report = engine.factorize(handle, &RescalOptions::new(4, iters), 42)?;
+        record("factorize_f16_store_dense_g2", report.wall_seconds);
         engine.unload_dataset(handle)?;
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -726,14 +810,19 @@ fn cmd_export(cmd: ExportCmd) -> Result<()> {
     };
     // an ingested corpus's interned names ride into the model, so the
     // served answers are resolvable by entity/relation name
-    let model = engine.export_model_for(&report, data)?;
+    let model = engine.export_model_for(&report, data)?.quantize(cmd.dtype)?;
     model.save(&cmd.model)?;
     println!(
-        "exported factor model (n={} entities, m={} relations, k={}{}) to {}",
+        "exported factor model (n={} entities, m={} relations, k={}{}{}) to {}",
         model.n(),
         model.m(),
         model.k(),
         if model.entity_names().is_some() { ", named" } else { "" },
+        if model.dtype().is_half() {
+            format!(", {} factors", model.dtype().as_str())
+        } else {
+            String::new()
+        },
         cmd.model
     );
     match model.entity_names().and_then(|names| names.first().cloned()) {
@@ -883,6 +972,7 @@ fn cmd_ingest(cmd: IngestCmd) -> Result<()> {
     let opts = drescal::store::IngestOptions {
         grid: cmd.grid,
         dense: cmd.dense,
+        dtype: cmd.dtype,
         source: cmd.input.clone(),
     };
     let report = drescal::store::ingest_triples_file(
@@ -891,7 +981,7 @@ fn cmd_ingest(cmd: IngestCmd) -> Result<()> {
         &opts,
     )?;
     println!(
-        "ingested {} triples in {}: {} entities x {} relations -> {} {} shard(s), {} \
+        "ingested {} triples in {}: {} entities x {} relations -> {} {}{} shard(s), {} \
          on disk",
         report.triples,
         bench_util::fmt_secs(t0.elapsed().as_secs_f64()),
@@ -899,6 +989,7 @@ fn cmd_ingest(cmd: IngestCmd) -> Result<()> {
         report.m,
         report.grid * report.grid,
         report.layout.as_str(),
+        if cmd.dtype.is_half() { format!(" {}", cmd.dtype.as_str()) } else { String::new() },
         bench_util::fmt_bytes(report.shard_bytes as usize),
     );
     println!(
@@ -908,6 +999,55 @@ fn cmd_ingest(cmd: IngestCmd) -> Result<()> {
     );
     if cmd.json {
         println!("{}", report.to_json());
+    }
+    Ok(())
+}
+
+/// Time the packed-GEMM blocking grid on this machine's dispatched
+/// microkernel and persist the winning MC/KC/NC as a JSON profile that
+/// every other subcommand auto-loads at startup.
+fn cmd_tune(cmd: TuneCmd) -> Result<()> {
+    use drescal::tensor::kernel;
+    let kern = kernel::dispatch::active();
+    println!(
+        "tune: {} (isa {}, {}x{} tile), {} grid",
+        kern.name,
+        kern.isa,
+        kern.mr,
+        kern.nr,
+        if cmd.quick { "quick" } else { "full" }
+    );
+    let (profile, points) = kernel::tune::sweep(cmd.quick);
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.mc.to_string(),
+                p.kc.to_string(),
+                p.nc.to_string(),
+                format!("{:.2}", p.gflops),
+                if (p.mc, p.kc, p.nc) == (profile.mc, profile.kc, profile.nc) {
+                    "◀ winner".to_string()
+                } else {
+                    String::new()
+                },
+            ]
+        })
+        .collect();
+    bench_util::print_table(
+        "blocking sweep",
+        &["mc", "kc", "nc", "GFLOP/s", ""],
+        &rows,
+    );
+    profile.save(&cmd.out)?;
+    // the tuned blocking takes effect immediately in this process too
+    profile.apply();
+    println!(
+        "\nwinner: mc={} kc={} nc={} at {:.2} GFLOP/s — saved to {}",
+        profile.mc, profile.kc, profile.nc, profile.gflops, cmd.out
+    );
+    if cmd.json {
+        println!("{}", profile.to_json());
     }
     Ok(())
 }

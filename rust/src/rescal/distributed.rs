@@ -167,7 +167,10 @@ pub fn rescal_rank(
 
     // Each iteration segment is bracketed with a `"phase"` timeline
     // span (pack / reduce / gemm / mu_update / normalize); the op-level
-    // spans recorded inside nest under them in the exported trace.
+    // spans recorded inside nest under them in the exported trace. The
+    // gemm phase is labelled with the dispatched microkernel variant
+    // (e.g. `gemm[avx2_fma_8x8]`), so a trace pins down which SIMD path
+    // produced its timings.
     let mut iters_run = 0;
     for iter in 0..cfg.opts.max_iters {
         iters_run = iter + 1;
@@ -208,7 +211,7 @@ pub fn rescal_rank(
                 trace,
             )?;
         }
-        trace.phase_end("gemm", ph);
+        trace.phase_end(crate::tensor::kernel::dispatch::active().gemm_label, ph);
         // ---- A update (line 22) ----
         let ph = trace.phase_start();
         mu_update(&mut a_row, &num_a, &deno_a, eps);
@@ -490,14 +493,21 @@ mod tests {
             trace.timeline_snapshot(ctx.world.rank)
         });
         for tl in results {
+            // the gemm phase label carries the dispatched microkernel
+            // variant, e.g. `gemm[avx2_fma_8x8]` — match by prefix
             for label in ["pack", "reduce", "gemm", "mu_update", "normalize"] {
                 let count = tl
                     .spans
                     .iter()
-                    .filter(|s| s.cat == "phase" && s.label == label)
+                    .filter(|s| s.cat == "phase" && s.label.starts_with(label))
                     .count();
                 assert!(count >= iters, "phase {label} appeared {count} times");
             }
+            let gemm_label = crate::tensor::kernel::dispatch::active().gemm_label;
+            assert!(
+                tl.spans.iter().any(|s| s.cat == "phase" && s.label == gemm_label),
+                "gemm phase must carry the dispatched variant ({gemm_label})"
+            );
             // comm spans carry the real wire traffic
             assert!(tl.spans.iter().any(|s| s.cat == "comm" && s.bytes > 0));
             // spans are stamped with the iteration they belong to

@@ -7,11 +7,16 @@
 
 use crate::backend::Backend;
 use crate::comm::{CommOp, Trace};
-use crate::tensor::{Csr, Mat, Tensor3};
+use crate::tensor::{kernel, Csr, HalfTensor3, Mat, Tensor3};
 
-/// Per-rank tile: `rows × cols × m`, dense or sparse.
+/// Per-rank tile: `rows × cols × m` — dense f32, dense 16-bit storage
+/// (f16/bf16, widened to f32 on pack inside the GEMM kernel), or sparse.
 pub enum LocalTile {
     Dense(Tensor3),
+    /// Half-precision dense storage: half the resident bytes and memory
+    /// bandwidth of `Dense`; products run through the same f32
+    /// microkernel accumulators via the kernel's widen-on-pack entries.
+    DenseHalf(HalfTensor3),
     Sparse(Vec<Csr>),
 }
 
@@ -20,6 +25,7 @@ impl LocalTile {
     pub fn m(&self) -> usize {
         match self {
             LocalTile::Dense(t) => t.m(),
+            LocalTile::DenseHalf(t) => t.m(),
             LocalTile::Sparse(s) => s.len(),
         }
     }
@@ -30,6 +36,7 @@ impl LocalTile {
     pub fn rows(&self) -> usize {
         match self {
             LocalTile::Dense(t) => t.n1(),
+            LocalTile::DenseHalf(t) => t.n1(),
             LocalTile::Sparse(s) => s.first().map_or(0, |c| c.rows()),
         }
     }
@@ -38,18 +45,20 @@ impl LocalTile {
     pub fn cols(&self) -> usize {
         match self {
             LocalTile::Dense(t) => t.n2(),
+            LocalTile::DenseHalf(t) => t.n2(),
             LocalTile::Sparse(s) => s.first().map_or(0, |c| c.cols()),
         }
     }
 
     /// Approximate resident memory of this tile, for the engine's
-    /// per-dataset accounting (dense: f32 per cell; sparse: CSR storage
-    /// including any transpose cache built so far — note the engine
-    /// samples this at load time, before the first sparse job can build
-    /// those caches).
+    /// per-dataset accounting (dense: f32 per cell; half: 2 bytes per
+    /// cell; sparse: CSR storage including any transpose cache built so
+    /// far — note the engine samples this at load time, before the first
+    /// sparse job can build those caches).
     pub fn resident_bytes(&self) -> usize {
         match self {
             LocalTile::Dense(t) => t.n1() * t.n2() * t.m() * 4,
+            LocalTile::DenseHalf(t) => t.n1() * t.n2() * t.m() * 2,
             LocalTile::Sparse(s) => s.iter().map(|c| c.resident_bytes()).sum(),
         }
     }
@@ -74,6 +83,14 @@ impl LocalTile {
                 let bytes = x.n1() * x.n2() * 4;
                 trace.record(CommOp::MatrixMul, bytes, || backend.matmul_into(x.slice(t), b, out))
             }
+            LocalTile::DenseHalf(x) => {
+                // half the bytes of the f32 branch move through memory;
+                // the kernel widens on pack, so accumulation stays f32
+                let bytes = x.n1() * x.n2() * 2;
+                trace.record(CommOp::MatrixMul, bytes, || {
+                    kernel::gemm_nn_half_into(x.slice(t), b, out, false)
+                })
+            }
             LocalTile::Sparse(s) => {
                 let bytes = s[t].nnz() * 8;
                 trace.record(CommOp::MatrixMulSparse, bytes, || s[t].matmul_dense_into(b, out))
@@ -95,6 +112,12 @@ impl LocalTile {
                 let bytes = x.n1() * x.n2() * 4;
                 trace
                     .record(CommOp::MatrixMul, bytes, || backend.t_matmul_into(x.slice(t), b, out))
+            }
+            LocalTile::DenseHalf(x) => {
+                let bytes = x.n1() * x.n2() * 2;
+                trace.record(CommOp::MatrixMul, bytes, || {
+                    kernel::gemm_tn_half_into(x.slice(t), b, out)
+                })
             }
             LocalTile::Sparse(s) => {
                 let bytes = s[t].nnz() * 8;
@@ -126,6 +149,7 @@ impl LocalTile {
                 let n = x.norm_fro() as f64;
                 n * n
             }
+            LocalTile::DenseHalf(x) => x.slices().iter().map(|s| s.sum_sq()).sum(),
             LocalTile::Sparse(s) => s
                 .iter()
                 .map(|c| {
@@ -164,6 +188,18 @@ impl LocalTile {
                 }
                 acc
             }
+            LocalTile::DenseHalf(x) => {
+                let xt = x.slice(t);
+                let (rows, cols) = xt.shape();
+                let mut acc = 0.0f64;
+                for i in 0..rows {
+                    for j in 0..cols {
+                        let d = (xt.at(i, j) - rec[(i, j)]) as f64;
+                        acc += d * d;
+                    }
+                }
+                acc
+            }
             LocalTile::Sparse(s) => {
                 // ‖X − Rec‖² over the dense reconstruction: Σ rec² over
                 // all cells, then patch the stored entries by walking the
@@ -197,6 +233,14 @@ impl LocalTile {
                     }
                 }
                 LocalTile::Dense(out)
+            }
+            LocalTile::DenseHalf(x) => {
+                let mut out = x.clone();
+                for t in 0..out.m() {
+                    out.slice_mut(t)
+                        .map_in_place(|v| v * rng.uniform_range(1.0 - delta, 1.0 + delta));
+                }
+                LocalTile::DenseHalf(out)
             }
             LocalTile::Sparse(s) => {
                 LocalTile::Sparse(s.iter().map(|c| c.perturb(delta, rng)).collect())
@@ -253,6 +297,41 @@ mod tests {
             );
         }
         assert!(tr.bytes(CommOp::MatrixMulSparse) > 0);
+    }
+
+    #[test]
+    fn half_tile_matches_widened_dense_tile_bitwise() {
+        use crate::tensor::DType;
+        let mut rng = Rng::new(115);
+        let x = Tensor3::random_uniform(9, 7, 2, 0.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(7, 3, 0.0, 1.0, &mut rng);
+        let b2 = Mat::random_uniform(9, 3, 0.0, 1.0, &mut rng);
+        let mut be = NativeBackend::new();
+        let mut tr = Trace::new();
+        for dtype in [DType::F16, DType::Bf16] {
+            let hx = HalfTensor3::from_tensor3(&x, dtype);
+            let widened = LocalTile::Dense(hx.to_f32());
+            let half = LocalTile::DenseHalf(hx);
+            // widen-on-pack: identical arithmetic to widening up front
+            for t in 0..2 {
+                assert_eq!(
+                    half.xa(t, &b, &mut be, &mut tr).as_slice(),
+                    widened.xa(t, &b, &mut be, &mut tr).as_slice(),
+                    "{dtype:?} xa slice {t}"
+                );
+                assert_eq!(
+                    half.xta(t, &b2, &mut be, &mut tr).as_slice(),
+                    widened.xta(t, &b2, &mut be, &mut tr).as_slice(),
+                    "{dtype:?} xta slice {t}"
+                );
+            }
+            assert_eq!(half.resident_bytes() * 2, widened.resident_bytes());
+            assert!((half.norm_sq() - widened.norm_sq()).abs() < 1e-6 * widened.norm_sq());
+            let ar = Mat::random_uniform(9, 2, 0.0, 1.0, &mut rng);
+            let ac = Mat::random_uniform(7, 2, 0.0, 1.0, &mut rng);
+            let (rh, rw) = (half.residual_sq(0, &ar, &ac), widened.residual_sq(0, &ar, &ac));
+            assert!((rh - rw).abs() < 1e-6 * rw.max(1.0), "half {rh} vs widened {rw}");
+        }
     }
 
     #[test]

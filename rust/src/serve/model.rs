@@ -36,7 +36,7 @@ use crate::engine::Report;
 use crate::error::{Context as _, Result};
 use crate::json::Json;
 use crate::rescal::ModelKind;
-use crate::tensor::{Mat, Tensor3};
+use crate::tensor::{DType, Mat, Tensor3};
 use crate::{bail, err};
 
 use super::score::Direction;
@@ -87,6 +87,11 @@ pub struct FactorModel {
     /// Model family the factors were trained under; fixes the core
     /// shape and the scoring rule.
     model: ModelKind,
+    /// Storage precision the factors were quantized to at export time
+    /// (`f32` = never quantized). Scoring math is always f32 — a half
+    /// artifact just guarantees every factor value is exactly
+    /// representable at that precision.
+    dtype: DType,
     /// Per-relation `A·R_t` (n×k); row s scores `(s, t, ?)` queries.
     /// Empty for diagonal-core models, which never densify.
     proj_obj: Vec<Mat>,
@@ -144,9 +149,45 @@ impl FactorModel {
             relation_names: None,
             provenance,
             model,
+            dtype: DType::F32,
             proj_obj,
             proj_subj,
         })
+    }
+
+    /// Quantize the factors to a half-precision storage dtype: every
+    /// element of `A` and `R` is rounded to its nearest representable
+    /// `f16`/`bf16` value (round-to-nearest-even) and widened back to
+    /// f32, so the in-memory model — and everything serialized from it
+    /// — carries only values exactly representable at that precision.
+    /// The serving projections are recomputed from the quantized
+    /// factors; quantizing to `f32` is a no-op. This is the
+    /// `drescal export --dtype f16|bf16` path.
+    pub fn quantize(self, dtype: DType) -> Result<FactorModel> {
+        if !dtype.is_half() {
+            return Ok(self);
+        }
+        let mut a = self.a;
+        let mut r = self.r;
+        for v in a.as_mut_slice() {
+            *v = dtype.quantize(*v);
+        }
+        for t in 0..r.m() {
+            for v in r.slice_mut(t).as_mut_slice() {
+                *v = dtype.quantize(*v);
+            }
+        }
+        let mut model = FactorModel::new_with_model(a, r, self.model, self.provenance)?;
+        model.dtype = dtype;
+        model.entity_names = self.entity_names;
+        model.relation_names = self.relation_names;
+        Ok(model)
+    }
+
+    /// Storage precision of the factors (`f32` unless the artifact was
+    /// exported with `--dtype f16|bf16`).
+    pub fn dtype(&self) -> DType {
+        self.dtype
     }
 
     /// Export a model from a training report. `Factorize` and
@@ -388,6 +429,11 @@ impl FactorModel {
         obj.insert("kind".to_string(), Json::Str("factor_model".to_string()));
         obj.insert("k".to_string(), Json::Num(self.k() as f64));
         obj.insert("model".to_string(), Json::Str(self.model.as_str().to_string()));
+        // only half artifacts carry a dtype key, so f32 exports are
+        // byte-identical to pre-precision-plane ones
+        if self.dtype.is_half() {
+            obj.insert("dtype".to_string(), Json::Str(self.dtype.as_str().to_string()));
+        }
         obj.insert("a".to_string(), mat_to_json(&self.a));
         obj.insert("r".to_string(), tensor_to_json(&self.r));
         let mut prov = BTreeMap::new();
@@ -450,7 +496,15 @@ impl FactorModel {
         // `model` field and are all Gaussian RESCAL (model_from_json
         // defaults accordingly)
         let kind = model_from_json(v)?;
+        let dtype = match v.get("dtype") {
+            None => DType::F32,
+            Some(d) => d
+                .as_str()
+                .and_then(DType::parse)
+                .ok_or_else(|| err!("model 'dtype' must be one of f32/f16/bf16, got {d}"))?,
+        };
         let mut model = FactorModel::new_with_model(a, r, kind, provenance)?;
+        model.dtype = dtype;
         if let Some(names) = v.get("entity_names") {
             model = model.with_entity_names(string_array(names, "entity_names")?)?;
         }
@@ -690,6 +744,48 @@ mod tests {
         let e = m.ensure_model(ModelKind::Rescal).unwrap_err();
         assert!(e.to_string().contains("model family mismatch"), "{e}");
         assert!(e.to_string().contains("distmult"), "{e}");
+    }
+
+    #[test]
+    fn quantized_artifacts_carry_their_dtype_and_stay_servable() {
+        let m = tiny_model()
+            .with_entity_names((0..6).map(|i| format!("e{i}")).collect())
+            .unwrap();
+        // f32 is a no-op and serializes without a dtype key
+        let f32_json = m.clone().quantize(DType::F32).unwrap().to_json().to_string();
+        assert!(!f32_json.contains("dtype"));
+        for dtype in [DType::F16, DType::Bf16] {
+            let q = m.clone().quantize(dtype).unwrap();
+            assert_eq!(q.dtype(), dtype);
+            assert_eq!(q.entity_names(), m.entity_names(), "names survive quantization");
+            // every factor value is the RNE-quantized original ...
+            for (got, want) in q.a().as_slice().iter().zip(m.a().as_slice()) {
+                assert_eq!(*got, dtype.quantize(*want));
+            }
+            for t in 0..m.m() {
+                for (got, want) in
+                    q.r().slice(t).as_slice().iter().zip(m.r().slice(t).as_slice())
+                {
+                    assert_eq!(*got, dtype.quantize(*want));
+                }
+            }
+            // ... projections are rebuilt from the quantized factors ...
+            let want_obj = q.a().matmul(q.r().slice(0));
+            assert_eq!(q.projection(Direction::Objects, 0), &want_obj);
+            // ... and the dtype round-trips through the JSON artifact
+            let back =
+                FactorModel::from_json(&Json::parse(&q.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(back.dtype(), dtype);
+            assert_eq!(back.a(), q.a());
+        }
+        // a present-but-unknown dtype is a typed error
+        let mut obj = match m.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        obj.insert("dtype".to_string(), Json::Str("f64".to_string()));
+        let e = FactorModel::from_json(&Json::Obj(obj)).unwrap_err();
+        assert!(e.to_string().contains("dtype"), "{e}");
     }
 
     #[test]

@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Context as _, Result};
 use crate::json::Json;
+use crate::tensor::DType;
 use crate::{bail, err};
 
 /// Current manifest format version.
@@ -83,6 +84,11 @@ pub struct StoreManifest {
     /// Ingest grid side length g — the directory holds g×g shards.
     pub grid: usize,
     pub layout: Layout,
+    /// Element type of dense shard payloads. `F32` unless the corpus was
+    /// ingested with a 16-bit storage dtype; always `F32` for sparse
+    /// layouts. Serialized only when not `F32`, so pre-dtype manifests
+    /// parse unchanged.
+    pub dtype: DType,
     pub shards: Vec<ShardMeta>,
     /// Entity names by interned id (first-appearance order).
     pub entities: Vec<String>,
@@ -105,6 +111,12 @@ impl StoreManifest {
         }
         if self.grid > self.n {
             bail!("manifest grid {} exceeds entity count {}", self.grid, self.n);
+        }
+        if self.dtype.is_half() && self.layout.is_sparse() {
+            bail!(
+                "manifest declares a {} sparse dataset — 16-bit storage is dense-only",
+                self.dtype.as_str()
+            );
         }
         if self.shards.len() != self.grid * self.grid {
             bail!(
@@ -168,6 +180,9 @@ impl StoreManifest {
         obj.insert("m".to_string(), Json::Num(self.m as f64));
         obj.insert("grid".to_string(), Json::Num(self.grid as f64));
         obj.insert("layout".to_string(), Json::Str(self.layout.as_str().to_string()));
+        if self.dtype.is_half() {
+            obj.insert("dtype".to_string(), Json::Str(self.dtype.as_str().to_string()));
+        }
         obj.insert(
             "shards".to_string(),
             Json::Arr(
@@ -227,6 +242,16 @@ impl StoreManifest {
                 .and_then(|l| l.as_str())
                 .ok_or_else(|| err!("manifest is missing 'layout'"))?,
         )?;
+        let dtype = match v.get("dtype") {
+            None => DType::F32,
+            Some(d) => {
+                let name = d
+                    .as_str()
+                    .ok_or_else(|| err!("manifest 'dtype' must be a string"))?;
+                DType::parse(name)
+                    .ok_or_else(|| err!("unknown manifest dtype '{name}' (f32|f16|bf16)"))?
+            }
+        };
         let mut shards = Vec::new();
         for (i, row) in v
             .get("shards")
@@ -289,6 +314,7 @@ impl StoreManifest {
             m: usize_field("m")?,
             grid: usize_field("grid")?,
             layout,
+            dtype,
             shards,
             entities: names("entities")?,
             relations: names("relations")?,
@@ -331,6 +357,7 @@ mod tests {
             m: 2,
             grid: 1,
             layout: Layout::Sparse,
+            dtype: DType::F32,
             shards: vec![ShardMeta {
                 row: 0,
                 col: 0,
@@ -360,6 +387,34 @@ mod tests {
         assert_eq!(back.entities, man.entities);
         assert_eq!(back.relations, man.relations);
         assert_eq!(back.provenance, man.provenance);
+    }
+
+    #[test]
+    fn dtype_round_trips_and_is_validated() {
+        // default f32 is not serialized, so old manifests stay byte-stable
+        let man = sample();
+        assert!(!man.to_json().to_string().contains("dtype"));
+        // a half dtype round-trips (dense layout)
+        let mut man = sample();
+        man.layout = Layout::Dense;
+        man.dtype = DType::F16;
+        let text = man.to_json().to_string();
+        let back =
+            StoreManifest::from_json(&Json::parse(&text).unwrap(), PathBuf::from("/tmp")).unwrap();
+        assert_eq!(back.dtype, DType::F16);
+        // sparse + half is structurally invalid
+        let mut man = sample();
+        man.dtype = DType::Bf16;
+        assert!(man.validate().unwrap_err().to_string().contains("dense-only"));
+        // an unknown dtype name is a typed parse error
+        let text = sample().to_json().to_string().replacen(
+            "\"layout\"",
+            "\"dtype\":\"f64\",\"layout\"",
+            1,
+        );
+        let e = StoreManifest::from_json(&Json::parse(&text).unwrap(), PathBuf::from("/tmp"))
+            .unwrap_err();
+        assert!(e.to_string().contains("dtype"), "{e}");
     }
 
     #[test]

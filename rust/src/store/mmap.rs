@@ -170,6 +170,47 @@ impl AsRef<[f32]> for MappedF32 {
     }
 }
 
+/// A u16 window of a file view — the half-precision (f16/bf16) analogue
+/// of [`MappedF32`], backing [`crate::tensor::HalfMat::from_shared`]
+/// windows with zero copies.
+pub struct MappedU16 {
+    map: MmapFile,
+    /// Byte offset of the first u16.
+    off: usize,
+    /// Window length in u16s.
+    len: usize,
+}
+
+impl MappedU16 {
+    /// Wrap `byte_len` payload bytes starting at `byte_off` as u16s.
+    /// Gives the file view back (`Err`) when zero-copy reinterpretation
+    /// is unsound (see [`MappedF32::new`]).
+    pub fn new(map: MmapFile, byte_off: usize, byte_len: usize) -> Result<MappedU16, MmapFile> {
+        let ok = cfg!(target_endian = "little")
+            && byte_len % 2 == 0
+            && byte_off + byte_len <= map.len()
+            && (map.bytes().as_ptr() as usize + byte_off) % std::mem::align_of::<u16>() == 0;
+        if ok {
+            Ok(MappedU16 { map, off: byte_off, len: byte_len / 2 })
+        } else {
+            Err(map)
+        }
+    }
+
+    /// Whether the underlying view is a real mapping.
+    pub fn is_mapped(&self) -> bool {
+        self.map.is_mapped()
+    }
+}
+
+impl AsRef<[u16]> for MappedU16 {
+    fn as_ref(&self) -> &[u16] {
+        let b = &self.map.bytes()[self.off..self.off + self.len * 2];
+        // alignment and endianness were checked at construction
+        unsafe { std::slice::from_raw_parts(b.as_ptr() as *const u16, self.len) }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,6 +246,24 @@ mod tests {
         // an odd byte offset cannot be reinterpreted
         let map = MmapFile::open(&path).unwrap();
         assert!(MappedF32::new(map, 1, 8).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn u16_window_round_trips() {
+        let dir = std::env::temp_dir().join(format!("drescal_mmaph_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("u16s.bin");
+        let mut bytes = Vec::new();
+        for v in [0x3c00u16, 0xbc00, 0x0000, 0x7bff] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let map = MmapFile::open(&path).unwrap();
+        let win = MappedU16::new(map, 0, 8).ok().expect("aligned LE window");
+        assert_eq!(win.as_ref(), &[0x3c00, 0xbc00, 0x0000, 0x7bff]);
+        let map = MmapFile::open(&path).unwrap();
+        assert!(MappedU16::new(map, 1, 4).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -41,7 +41,7 @@ pub mod shard;
 pub mod triples;
 
 pub use manifest::{IngestProvenance, Layout, ShardMeta, StoreManifest};
-pub use mmap::{MappedF32, MmapFile};
+pub use mmap::{MappedF32, MappedU16, MmapFile};
 pub use shard::{ShardDigest, ShardHeader};
 pub use triples::{ingest_triples_file, IngestOptions, IngestReport};
 
@@ -49,7 +49,7 @@ use crate::comm::Grid;
 use crate::coordinator::JobData;
 use crate::error::Result;
 use crate::rescal::LocalTile;
-use crate::tensor::{Csr, Mat, Tensor3};
+use crate::tensor::{Csr, HalfMat, HalfTensor3, Mat, Tensor3};
 use crate::{bail, err};
 
 /// Process-wide storage-plane counters, for tests and diagnostics.
@@ -123,10 +123,25 @@ fn read_tile_direct(man: &StoreManifest, row: usize, col: usize) -> Result<Local
             man.m
         );
     }
+    if hd.dtype != man.dtype {
+        bail!(
+            "shard {} stores {} elements but the manifest says {}",
+            path.display(),
+            hd.dtype.as_str(),
+            man.dtype.as_str()
+        );
+    }
     match man.layout {
         Layout::Dense => {
             if hd.kind != shard::KIND_DENSE {
                 bail!("shard {} is sparse but the manifest says dense", path.display());
+            }
+            if hd.dtype.is_half() {
+                let (tile, mapped) = shard::dense_half_tile_from(map, &hd, &path)?;
+                if mapped {
+                    stats::note_mapped_tile(hd.payload_len as usize);
+                }
+                return Ok(LocalTile::DenseHalf(tile));
             }
             let (tile, mapped) = shard::dense_tile_from(map, &hd, &path)?;
             if mapped {
@@ -170,9 +185,17 @@ pub fn rank_tile(
     let (c0, c1) = grid.chunk(man.n, col);
     let (rows, cols) = (r1 - r0, c1 - c0);
     let src_grid = Grid::new(man.grid * man.grid);
+    let splice_half = man.layout == Layout::Dense && man.dtype.is_half();
     let mut dense_slices: Vec<Mat> = match man.layout {
-        Layout::Dense => (0..man.m).map(|_| Mat::zeros(rows, cols)).collect(),
-        Layout::Sparse => Vec::new(),
+        Layout::Dense if !splice_half => (0..man.m).map(|_| Mat::zeros(rows, cols)).collect(),
+        _ => Vec::new(),
+    };
+    // half tiles splice as raw u16 payloads — the 16-bit patterns move
+    // without ever widening (0x0000 is +0.0 in both f16 and bf16)
+    let mut half_slices: Vec<Vec<u16>> = if splice_half {
+        (0..man.m).map(|_| vec![0u16; rows * cols]).collect()
+    } else {
+        Vec::new()
     };
     let mut sparse_trips: Vec<Vec<(usize, usize, f32)>> = match man.layout {
         Layout::Sparse => vec![Vec::new(); man.m],
@@ -199,6 +222,20 @@ pub fn rank_tile(
                                 let srow = &src.row(gr - sr0)[clo - sc0..chi - sc0];
                                 dst.row_mut(gr - r0)[clo - c0..chi - c0]
                                     .copy_from_slice(srow);
+                            }
+                        }
+                    }
+                    LocalTile::DenseHalf(t3) => {
+                        for (t, dst) in half_slices.iter_mut().enumerate() {
+                            let src = t3.slice(t);
+                            let sd = src.as_u16_slice();
+                            let scols = src.cols();
+                            for gr in rlo..rhi {
+                                let sbase = (gr - sr0) * scols;
+                                let dbase = (gr - r0) * cols;
+                                dst[dbase + (clo - c0)..dbase + (chi - c0)].copy_from_slice(
+                                    &sd[sbase + (clo - sc0)..sbase + (chi - sc0)],
+                                );
                             }
                         }
                     }
@@ -244,6 +281,12 @@ pub fn rank_tile(
         }
     }
     Ok(match man.layout {
+        Layout::Dense if splice_half => LocalTile::DenseHalf(HalfTensor3::from_slices(
+            half_slices
+                .into_iter()
+                .map(|v| HalfMat::from_raw(rows, cols, man.dtype, v))
+                .collect(),
+        )),
         Layout::Dense => LocalTile::Dense(Tensor3::from_slices(dense_slices)),
         Layout::Sparse => LocalTile::Sparse(
             sparse_trips
@@ -260,6 +303,9 @@ pub fn rank_tile(
 pub fn read_dataset_inline(man: &StoreManifest) -> Result<JobData> {
     match rank_tile(man, &Grid::new(1), 0, 0)? {
         LocalTile::Dense(t3) => Ok(JobData::dense(t3)),
+        // the inline compat path widens — callers of this legacy form
+        // want a plain f32 tensor; rank-resident loading keeps half
+        LocalTile::DenseHalf(t3) => Ok(JobData::dense(t3.to_f32())),
         LocalTile::Sparse(slices) => {
             // an ingested corpus is always square (n×n×m) by construction
             if slices.iter().any(|c| c.rows() != man.n || c.cols() != man.n) {
@@ -300,7 +346,7 @@ mod tests {
         let report = ingest_triples_file(
             &input,
             &out,
-            &IngestOptions { grid, dense, source: "kg.tsv".into() },
+            &IngestOptions { grid, dense, source: "kg.tsv".into(), ..IngestOptions::default() },
         )
         .unwrap();
         StoreManifest::load(&report.manifest_path).unwrap()
@@ -362,6 +408,61 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// Half-precision corpora load as [`LocalTile::DenseHalf`] and
+    /// re-shard u16-exactly: splicing moves 16-bit patterns, never
+    /// widens.
+    #[test]
+    fn half_corpus_reshards_u16_exactly() {
+        use crate::tensor::DType;
+        let dir = tmp("half");
+        let input = dir.join("kg.tsv");
+        let mut text = String::new();
+        let mut rng = Rng::new(43);
+        for _ in 0..300 {
+            text.push_str(&format!(
+                "e{}\tr{}\te{}\t{:.3}\n",
+                rng.below(19),
+                rng.below(2),
+                rng.below(19),
+                rng.uniform_range(0.1, 2.0)
+            ));
+        }
+        std::fs::write(&input, &text).unwrap();
+        let mk = |grid| IngestOptions {
+            grid,
+            dense: true,
+            dtype: DType::Bf16,
+            source: String::new(),
+        };
+        let load = |g: usize, out: &str| {
+            let report = ingest_triples_file(&input, &dir.join(out), &mk(g)).unwrap();
+            StoreManifest::load(&report.manifest_path).unwrap()
+        };
+        let man1 = load(1, "g1");
+        let man2 = load(2, "g2");
+        let grid = Grid::new(4);
+        for row in 0..2 {
+            for col in 0..2 {
+                let spliced = rank_tile(&man1, &grid, row, col).unwrap();
+                let direct = rank_tile(&man2, &grid, row, col).unwrap();
+                match (spliced, direct) {
+                    (LocalTile::DenseHalf(a), LocalTile::DenseHalf(b)) => {
+                        assert_eq!(b.dtype(), DType::Bf16);
+                        for t in 0..man1.m {
+                            assert_eq!(
+                                a.slice(t).as_u16_slice(),
+                                b.slice(t).as_u16_slice(),
+                                "tile ({row}, {col}) slice {t}"
+                            );
+                        }
+                    }
+                    _ => panic!("expected half tiles"),
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     /// Matching grids memory-map dense tiles zero-copy (on unix,
     /// little-endian): the resident slices still read from shared
     /// storage.
@@ -384,7 +485,7 @@ mod tests {
                     assert!(after.mapped_tiles > before.mapped_tiles);
                 }
             }
-            LocalTile::Sparse(_) => panic!("expected dense"),
+            _ => panic!("expected dense"),
         }
         std::fs::remove_dir_all(&dir).ok();
     }

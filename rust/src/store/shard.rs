@@ -7,21 +7,32 @@
 //! ```text
 //! offset  size  field
 //!      0     8  magic "DRSHRD01"
-//!      8     4  format version (u32, = 1)
+//!      8     4  format version (u32, = 2; version-1 files still read)
 //!     12     4  kind (u32): 1 = dense, 2 = sparse
 //!     16     8  rows (u64)        — tile rows
 //!     24     8  cols (u64)        — tile cols
 //!     32     8  m (u64)           — relation slices
 //!     40     8  payload_len (u64) — bytes after the header
 //!     48     8  checksum (u64)    — FNV-1a 64 over the payload bytes
-//!     56     8  reserved (zeros)
+//!     56     4  dtype (u32): 0 = f32, 1 = f16, 2 = bf16   (v2; was reserved)
+//!     60     4  reserved (zeros)
 //!     64     …  payload
 //! ```
 //!
-//! * **Dense payload**: `m` consecutive row-major `rows×cols` f32
-//!   blocks. The payload starts at byte 64, so within a page-aligned
-//!   mapping it is f32-aligned and [`dense_tile_from`] can hand the
-//!   mapping to [`Mat::from_shared`] with zero copies.
+//! Version 2 spends four reserved bytes on a payload **dtype**. A
+//! version-1 file is read as version 2 with dtype 0 (its reserved bytes
+//! were written as zeros, which is exactly the f32 encoding), so every
+//! pre-dtype shard on disk remains readable. An unknown version or dtype
+//! code is a typed error, and only dense shards may carry a 16-bit
+//! dtype — sparse payloads interleave u64 index structure and stay f32.
+//!
+//! * **Dense payload**: `m` consecutive row-major `rows×cols` blocks of
+//!   the header dtype — f32, or 16-bit f16/bf16 written by
+//!   [`write_dense_half_shard`] at half the bytes. The payload starts at
+//!   byte 64, so within a page-aligned mapping it is element-aligned and
+//!   [`dense_tile_from`] / [`dense_half_tile_from`] can hand the mapping
+//!   to [`Mat::from_shared`] / [`HalfMat::from_shared`] with zero
+//!   copies.
 //! * **Sparse payload**, per relation slice: `nnz` (u64), `rows+1`
 //!   indptr u64s, `nnz` column-index u64s, `nnz` f32 values.
 //!
@@ -36,17 +47,38 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::error::{Context as _, Result};
-use crate::tensor::{Csr, Mat, SharedBuf, Tensor3};
+use crate::tensor::half::SharedHalfBuf;
+use crate::tensor::{Csr, DType, HalfMat, HalfTensor3, Mat, SharedBuf, Tensor3};
 use crate::{bail, err};
 
 use super::manifest::ShardMeta;
-use super::mmap::{MappedF32, MmapFile};
+use super::mmap::{MappedF32, MappedU16, MmapFile};
 
 pub const MAGIC: &[u8; 8] = b"DRSHRD01";
-pub const VERSION: u32 = 1;
+/// Current write version. Version 1 (pre-dtype) files are still read.
+pub const VERSION: u32 = 2;
+pub const VERSION_V1: u32 = 1;
 pub const HEADER_LEN: usize = 64;
 pub const KIND_DENSE: u32 = 1;
 pub const KIND_SPARSE: u32 = 2;
+
+/// On-disk dtype codes (header offset 56).
+fn dtype_code(d: DType) -> u32 {
+    match d {
+        DType::F32 => 0,
+        DType::F16 => 1,
+        DType::Bf16 => 2,
+    }
+}
+
+fn dtype_from_code(code: u32) -> Option<DType> {
+    match code {
+        0 => Some(DType::F32),
+        1 => Some(DType::F16),
+        2 => Some(DType::Bf16),
+        _ => None,
+    }
+}
 
 /// What a writer reports back for the manifest.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -97,6 +129,9 @@ pub struct ShardHeader {
     pub m: usize,
     pub payload_len: u64,
     pub checksum: u64,
+    /// Payload element type (always `F32` for version-1 files and sparse
+    /// shards).
+    pub dtype: DType,
 }
 
 // ---------------------------------------------------------------------------
@@ -127,6 +162,7 @@ impl<W: Write> HashingWriter<W> {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn header_bytes(
     kind: u32,
     rows: usize,
@@ -134,6 +170,7 @@ fn header_bytes(
     m: usize,
     payload_len: u64,
     checksum: u64,
+    dtype: DType,
 ) -> [u8; HEADER_LEN] {
     let mut h = [0u8; HEADER_LEN];
     h[0..8].copy_from_slice(MAGIC);
@@ -144,23 +181,26 @@ fn header_bytes(
     h[32..40].copy_from_slice(&(m as u64).to_le_bytes());
     h[40..48].copy_from_slice(&payload_len.to_le_bytes());
     h[48..56].copy_from_slice(&checksum.to_le_bytes());
+    h[56..60].copy_from_slice(&dtype_code(dtype).to_le_bytes());
     h
 }
 
 /// Stream a payload out behind a placeholder header, then patch the real
 /// checksum in — the payload is never buffered whole.
+#[allow(clippy::too_many_arguments)]
 fn write_shard_file(
     path: &Path,
     kind: u32,
     rows: usize,
     cols: usize,
     m: usize,
+    dtype: DType,
     payload: impl FnOnce(&mut HashingWriter<&mut BufWriter<File>>) -> Result<()>,
 ) -> Result<ShardDigest> {
     let file = File::create(path)
         .with_context(|| format!("creating shard {}", path.display()))?;
     let mut buf = BufWriter::new(file);
-    buf.write_all(&header_bytes(kind, rows, cols, m, 0, 0))
+    buf.write_all(&header_bytes(kind, rows, cols, m, 0, 0, dtype))
         .context("writing shard header")?;
     let mut hw = HashingWriter { w: &mut buf, fnv: Fnv1a64::default(), bytes: 0 };
     payload(&mut hw)?;
@@ -170,18 +210,43 @@ fn write_shard_file(
         .into_inner()
         .map_err(|e| err!("flushing shard {}: {e}", path.display()))?;
     file.seek(SeekFrom::Start(0)).context("rewinding shard header")?;
-    file.write_all(&header_bytes(kind, rows, cols, m, payload_len, checksum))
+    file.write_all(&header_bytes(kind, rows, cols, m, payload_len, checksum, dtype))
         .context("patching shard header")?;
     Ok(ShardDigest { bytes: HEADER_LEN as u64 + payload_len, checksum })
 }
 
-/// Write one dense tile (`rows×cols×m`, row-major slices back to back).
+/// Write one dense f32 tile (`rows×cols×m`, row-major slices back to
+/// back).
 pub fn write_dense_shard(path: &Path, x: &Tensor3) -> Result<ShardDigest> {
     let (rows, cols, m) = x.shape();
-    write_shard_file(path, KIND_DENSE, rows, cols, m, |w| {
+    write_shard_file(path, KIND_DENSE, rows, cols, m, DType::F32, |w| {
         let mut chunk = Vec::with_capacity(4096);
         for t in 0..m {
             for v in x.slice(t).as_slice() {
+                chunk.extend_from_slice(&v.to_le_bytes());
+                if chunk.len() >= 4096 {
+                    w.put(&chunk)?;
+                    chunk.clear();
+                }
+            }
+        }
+        if !chunk.is_empty() {
+            w.put(&chunk)?;
+        }
+        Ok(())
+    })
+}
+
+/// Write one dense 16-bit tile — same layout as [`write_dense_shard`]
+/// with 2-byte elements of the tensor's dtype, at half the payload
+/// bytes.
+pub fn write_dense_half_shard(path: &Path, x: &HalfTensor3) -> Result<ShardDigest> {
+    let (rows, cols) = (x.n1(), x.n2());
+    let m = x.m();
+    write_shard_file(path, KIND_DENSE, rows, cols, m, x.dtype(), |w| {
+        let mut chunk = Vec::with_capacity(4096);
+        for t in 0..m {
+            for v in x.slice(t).as_u16_slice() {
                 chunk.extend_from_slice(&v.to_le_bytes());
                 if chunk.len() >= 4096 {
                     w.put(&chunk)?;
@@ -212,7 +277,7 @@ pub fn write_sparse_shard(
             );
         }
     }
-    write_shard_file(path, KIND_SPARSE, rows, cols, slices.len(), |w| {
+    write_shard_file(path, KIND_SPARSE, rows, cols, slices.len(), DType::F32, |w| {
         for c in slices {
             w.put_u64(c.nnz() as u64)?;
             for &p in c.indptr() {
@@ -248,15 +313,34 @@ pub fn parse_header(bytes: &[u8], path: &Path) -> Result<ShardHeader> {
     let u32_at = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
     let u64_at = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
     let version = u32_at(8);
-    if version != VERSION {
+    if version != VERSION && version != VERSION_V1 {
         bail!(
-            "shard {} has format version {version}, this build reads version {VERSION}",
+            "shard {} has format version {version}, this build reads versions \
+             {VERSION_V1} and {VERSION}",
             path.display()
         );
     }
     let kind = u32_at(12);
     if kind != KIND_DENSE && kind != KIND_SPARSE {
         bail!("shard {} has unknown kind {kind}", path.display());
+    }
+    // version 1 predates the dtype field; its reserved bytes were zeros,
+    // which is the f32 code
+    let dtype_raw = u32_at(56);
+    let dtype = match dtype_from_code(dtype_raw) {
+        Some(d) => d,
+        None => bail!(
+            "shard {} has unknown payload dtype code {dtype_raw} (this build reads \
+             f32/f16/bf16)",
+            path.display()
+        ),
+    };
+    if kind == KIND_SPARSE && dtype.is_half() {
+        bail!(
+            "shard {} is sparse with a {} payload — sparse shards are always f32",
+            path.display(),
+            dtype.as_str()
+        );
     }
     let hd = ShardHeader {
         kind,
@@ -265,6 +349,7 @@ pub fn parse_header(bytes: &[u8], path: &Path) -> Result<ShardHeader> {
         m: u64_at(32) as usize,
         payload_len: u64_at(40),
         checksum: u64_at(48),
+        dtype,
     };
     let have = (bytes.len() - HEADER_LEN) as u64;
     if hd.payload_len != have {
@@ -323,6 +408,13 @@ pub fn dense_tile_from(map: MmapFile, hd: &ShardHeader, path: &Path) -> Result<(
     if hd.kind != KIND_DENSE {
         bail!("shard {} is not dense", path.display());
     }
+    if hd.dtype != DType::F32 {
+        bail!(
+            "shard {} stores {} elements — decode it with dense_half_tile_from",
+            path.display(),
+            hd.dtype.as_str()
+        );
+    }
     let slice_len = hd.rows * hd.cols;
     let payload_bytes = slice_len
         .checked_mul(hd.m)
@@ -362,6 +454,72 @@ pub fn dense_tile_from(map: MmapFile, hd: &ShardHeader, path: &Path) -> Result<(
                 })
                 .collect();
             Ok((Tensor3::from_slices(slices), false))
+        }
+    }
+}
+
+/// Decode a 16-bit dense shard into a [`HalfTensor3`] — the
+/// half-precision analogue of [`dense_tile_from`], with every relation
+/// slice a [`HalfMat::from_shared`] window into one shared mapping when
+/// zero-copy reinterpretation is sound. Returns whether the tile reads
+/// from a real mapping.
+pub fn dense_half_tile_from(
+    map: MmapFile,
+    hd: &ShardHeader,
+    path: &Path,
+) -> Result<(HalfTensor3, bool)> {
+    if hd.kind != KIND_DENSE {
+        bail!("shard {} is not dense", path.display());
+    }
+    if !hd.dtype.is_half() {
+        bail!(
+            "shard {} stores f32 elements — decode it with dense_tile_from",
+            path.display()
+        );
+    }
+    let slice_len = hd.rows * hd.cols;
+    let payload_bytes = slice_len
+        .checked_mul(hd.m)
+        .and_then(|x| x.checked_mul(2))
+        .ok_or_else(|| err!("shard {}: dense shape overflows", path.display()))?;
+    if payload_bytes as u64 != hd.payload_len {
+        bail!(
+            "shard {}: dense payload is {} bytes but {}×{}×{} {} elements need \
+             {payload_bytes}",
+            path.display(),
+            hd.payload_len,
+            hd.rows,
+            hd.cols,
+            hd.m,
+            hd.dtype.as_str()
+        );
+    }
+    match MappedU16::new(map, HEADER_LEN, payload_bytes) {
+        Ok(shared) => {
+            let mapped = shared.is_mapped();
+            let src: SharedHalfBuf = Arc::new(shared);
+            let slices = (0..hd.m)
+                .map(|t| {
+                    HalfMat::from_shared(hd.rows, hd.cols, hd.dtype, Arc::clone(&src), t * slice_len)
+                })
+                .collect();
+            Ok((HalfTensor3::from_slices(slices), mapped))
+        }
+        Err(map) => {
+            // misaligned or big-endian: decode a copy
+            let b = map.bytes();
+            let slices = (0..hd.m)
+                .map(|t| {
+                    let off = HEADER_LEN + t * slice_len * 2;
+                    let mut v = Vec::with_capacity(slice_len);
+                    for i in 0..slice_len {
+                        let p = off + i * 2;
+                        v.push(u16::from_le_bytes([b[p], b[p + 1]]));
+                    }
+                    HalfMat::from_raw(hd.rows, hd.cols, hd.dtype, v)
+                })
+                .collect();
+            Ok((HalfTensor3::from_slices(slices), false))
         }
     }
 }
@@ -554,6 +712,87 @@ mod tests {
         for t in 0..3 {
             assert_eq!(back.slice(t).as_slice(), x.slice(t).as_slice(), "slice {t}");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn half_dense_shard_round_trips_at_half_the_bytes() {
+        let dir = tmp("half");
+        let mut rng = Rng::new(51);
+        let x = Tensor3::random_uniform(6, 4, 3, -1.0, 1.0, &mut rng);
+        let f32_digest = write_dense_shard(&dir.join("f32.bin"), &x).unwrap();
+        for dtype in [DType::F16, DType::Bf16] {
+            let path = dir.join(format!("{}.bin", dtype.as_str()));
+            let hx = HalfTensor3::from_tensor3(&x, dtype);
+            let digest = write_dense_half_shard(&path, &hx).unwrap();
+            // the dtype axis is the whole point: payload bytes halve
+            assert_eq!(
+                digest.bytes - HEADER_LEN as u64,
+                (f32_digest.bytes - HEADER_LEN as u64) / 2,
+                "{} payload must be half the f32 payload",
+                dtype.as_str()
+            );
+            let (hd, map) = read_shard(&path, None).unwrap();
+            assert_eq!((hd.rows, hd.cols, hd.m, hd.dtype), (6, 4, 3, dtype));
+            let (back, _mapped) = dense_half_tile_from(map, &hd, &path).unwrap();
+            assert_eq!(back.dtype(), dtype);
+            for t in 0..3 {
+                assert_eq!(
+                    back.slice(t).as_u16_slice(),
+                    hx.slice(t).as_u16_slice(),
+                    "slice {t}"
+                );
+            }
+            // the wrong decoder is a typed error, not a garbage tensor
+            let (hd, map) = read_shard(&path, None).unwrap();
+            let e = dense_tile_from(map, &hd, &path).unwrap_err();
+            assert!(e.to_string().contains("dense_half_tile_from"), "{e}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn version_1_files_read_as_f32_and_bad_dtypes_are_typed_errors() {
+        let dir = tmp("dtype");
+        let path = dir.join("s.bin");
+        let mut rng = Rng::new(52);
+        let x = Tensor3::random_uniform(4, 3, 2, 0.0, 1.0, &mut rng);
+        write_dense_shard(&path, &x).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+
+        // a version-1 header (zeroed reserved bytes) still reads, as f32
+        let mut v1 = clean.clone();
+        v1[8..12].copy_from_slice(&VERSION_V1.to_le_bytes());
+        v1[56..64].copy_from_slice(&[0u8; 8]);
+        std::fs::write(&path, &v1).unwrap();
+        let (hd, map) = read_shard(&path, None).unwrap();
+        assert_eq!(hd.dtype, DType::F32);
+        let (back, _) = dense_tile_from(map, &hd, &path).unwrap();
+        assert_eq!(back.slice(0).as_slice(), x.slice(0).as_slice());
+
+        // an unknown dtype code is a typed error (header is not covered
+        // by the payload checksum, so this is a pure header check)
+        let mut bad = clean.clone();
+        bad[56..60].copy_from_slice(&9u32.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let e = read_shard(&path, None).unwrap_err();
+        assert!(e.to_string().contains("dtype"), "{e}");
+
+        // an unknown version is still rejected
+        let mut vx = clean.clone();
+        vx[8..12].copy_from_slice(&3u32.to_le_bytes());
+        std::fs::write(&path, &vx).unwrap();
+        let e = read_shard(&path, None).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+
+        // sparse shards must stay f32
+        let slices: Vec<Csr> = (0..2).map(|_| Csr::random(5, 4, 0.4, &mut rng)).collect();
+        write_sparse_shard(&path, 5, 4, &slices).unwrap();
+        let mut sp = std::fs::read(&path).unwrap();
+        sp[56..60].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &sp).unwrap();
+        let e = read_shard(&path, None).unwrap_err();
+        assert!(e.to_string().contains("sparse"), "{e}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -34,7 +34,7 @@ use std::path::{Path, PathBuf};
 
 use crate::comm::Grid;
 use crate::error::{Context as _, Result};
-use crate::tensor::{Csr, Mat, Tensor3};
+use crate::tensor::{Csr, DType, HalfTensor3, Mat, Tensor3};
 use crate::{bail, err};
 
 use super::manifest::{IngestProvenance, Layout, ShardMeta, StoreManifest};
@@ -49,6 +49,10 @@ pub struct IngestOptions {
     pub grid: usize,
     /// Store dense row-major blocks (memory-mappable) instead of CSR.
     pub dense: bool,
+    /// Element type for dense shard payloads. `F16`/`Bf16` halve shard
+    /// bytes (duplicates still sum in f32 before the final narrowing);
+    /// requires `dense` — CSR payloads stay f32.
+    pub dtype: DType,
     /// Provenance label recorded in the manifest (usually the input
     /// path).
     pub source: String,
@@ -56,7 +60,7 @@ pub struct IngestOptions {
 
 impl Default for IngestOptions {
     fn default() -> Self {
-        IngestOptions { grid: 1, dense: false, source: String::new() }
+        IngestOptions { grid: 1, dense: false, dtype: DType::F32, source: String::new() }
     }
 }
 
@@ -243,6 +247,13 @@ pub fn ingest_triples_file(
     if opts.grid == 0 {
         bail!("ingest grid must be >= 1");
     }
+    if opts.dtype.is_half() && !opts.dense {
+        bail!(
+            "--dtype {} requires --dense: sparse shards interleave CSR index structure \
+             and stay f32",
+            opts.dtype.as_str()
+        );
+    }
     // pass 1: dictionaries + triple count
     let mut ents = Interner::default();
     let mut rels = Interner::default();
@@ -337,7 +348,13 @@ pub fn ingest_triples_file(
             for (li, lj, t, w) in records {
                 slices[t][(li, lj)] += w; // duplicates sum
             }
-            shard::write_dense_shard(&path, &Tensor3::from_slices(slices))?
+            let x = Tensor3::from_slices(slices);
+            if opts.dtype.is_half() {
+                // accumulate in f32, narrow once at the end
+                shard::write_dense_half_shard(&path, &HalfTensor3::from_tensor3(&x, opts.dtype))?
+            } else {
+                shard::write_dense_shard(&path, &x)?
+            }
         } else {
             let mut trips: Vec<Vec<(usize, usize, f32)>> = vec![Vec::new(); m];
             for (li, lj, t, w) in records {
@@ -395,6 +412,7 @@ pub fn ingest_triples_file(
         m,
         grid: g,
         layout,
+        dtype: opts.dtype,
         shards,
         entities: ents.names,
         relations: rels.names,
@@ -450,7 +468,7 @@ mod tests {
         let report = ingest_triples_file(
             &input,
             &out,
-            &IngestOptions { grid: 1, dense: false, source: "toy.tsv".into() },
+            &IngestOptions { grid: 1, source: "toy.tsv".into(), ..IngestOptions::default() },
         )
         .unwrap();
         assert_eq!((report.n, report.m, report.triples), (3, 2, 4));
@@ -487,7 +505,7 @@ mod tests {
         std::fs::write(&input, &text).unwrap();
         let g1 = dir.join("g1");
         let g2 = dir.join("g2");
-        let mk = |grid| IngestOptions { grid, dense: false, source: String::new() };
+        let mk = |grid| IngestOptions { grid, ..IngestOptions::default() };
         let r1 = ingest_triples_file(&input, &g1, &mk(1)).unwrap();
         let r2 = ingest_triples_file(&input, &g2, &mk(2)).unwrap();
         assert_eq!(r1.n, r2.n);
@@ -510,6 +528,52 @@ mod tests {
     }
 
     #[test]
+    fn half_dense_ingest_halves_shard_bytes_and_quantizes() {
+        let dir = tmp("half");
+        let input = dir.join("kg.tsv");
+        let mut text = String::new();
+        let mut rng = crate::rng::Rng::new(19);
+        for _ in 0..200 {
+            text.push_str(&format!(
+                "e{}\tr{}\te{}\t{:.3}\n",
+                rng.below(11),
+                rng.below(2),
+                rng.below(11),
+                rng.uniform_range(0.1, 3.0)
+            ));
+        }
+        std::fs::write(&input, &text).unwrap();
+        let mk = |dtype| IngestOptions { dense: true, dtype, ..IngestOptions::default() };
+        let r32 = ingest_triples_file(&input, &dir.join("f32"), &mk(DType::F32)).unwrap();
+        let r16 = ingest_triples_file(&input, &dir.join("f16"), &mk(DType::F16)).unwrap();
+        // per-shard payloads halve; only the fixed 64-byte headers remain
+        assert_eq!(
+            r16.shard_bytes - 64,
+            (r32.shard_bytes - 64) / 2,
+            "f16 shards must hold half the payload bytes"
+        );
+        // the loaded corpus is the f32 corpus, element-wise quantized
+        let man32 = StoreManifest::load(&r32.manifest_path).unwrap();
+        let man16 = StoreManifest::load(&r16.manifest_path).unwrap();
+        assert_eq!(man16.dtype, DType::F16);
+        let full32 = match super::super::read_dataset_inline(&man32).unwrap() {
+            crate::coordinator::JobData::Dense(x) => (*x).clone(),
+            _ => panic!("expected dense"),
+        };
+        let full16 = match super::super::read_dataset_inline(&man16).unwrap() {
+            crate::coordinator::JobData::Dense(x) => (*x).clone(),
+            _ => panic!("expected dense"),
+        };
+        for t in 0..man32.m {
+            let (a, b) = (full32.slice(t).as_slice(), full16.slice(t).as_slice());
+            for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(y, DType::F16.quantize(x), "slice {t} element {i}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn bad_inputs_are_typed_errors() {
         let dir = tmp("bad");
         let input = dir.join("bad.tsv");
@@ -524,10 +588,18 @@ mod tests {
         let e = ingest_triples_file(
             &input,
             &out,
-            &IngestOptions { grid: 5, dense: false, source: String::new() },
+            &IngestOptions { grid: 5, ..IngestOptions::default() },
         )
         .unwrap_err();
         assert!(e.to_string().contains("grid"), "{e}");
+        // half-precision storage is dense-only
+        let e = ingest_triples_file(
+            &input,
+            &out,
+            &IngestOptions { dtype: DType::F16, ..IngestOptions::default() },
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("--dense"), "{e}");
         assert!(ingest_triples_file(Path::new("/nonexistent.tsv"), &out, &IngestOptions::default())
             .is_err());
         std::fs::remove_dir_all(&dir).ok();

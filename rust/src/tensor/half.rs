@@ -1,0 +1,529 @@
+//! Half-precision (f16 / bf16) storage substrate.
+//!
+//! The paper's exascale footprints are bandwidth-bound, so dense tile
+//! shards and factor artifacts can be **stored** at 16 bits per element
+//! while all arithmetic stays f32: the kernel plane widens values on
+//! pack (see `super::kernel`), so a half-precision operand runs through
+//! the exact same f32 microkernel accumulators as an f32 one. This file
+//! provides the dependency-free bit conversions (round-to-nearest-even,
+//! matching hardware F16C/BF16 convert semantics), a [`HalfMat`] that
+//! mirrors [`Mat`]'s owned/shared (mmap copy-on-write) storage split,
+//! and a [`HalfTensor3`] of relation slices.
+//!
+//! [`Mat`]: super::dense::Mat
+
+use std::sync::Arc;
+
+use super::dense::Mat;
+use super::tensor3::Tensor3;
+
+/// Element type of a stored dense payload. `F32` is the default and the
+/// only arithmetic precision; `F16`/`Bf16` are storage-only formats that
+/// halve shard bytes and memory bandwidth.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F16,
+    Bf16,
+}
+
+impl DType {
+    /// Canonical lowercase name (used in manifests, CLI flags, headers).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a CLI/manifest dtype name.
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "f16" => Some(DType::F16),
+            "bf16" => Some(DType::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Stored bytes per element.
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 | DType::Bf16 => 2,
+        }
+    }
+
+    /// Whether this is a 16-bit storage format.
+    pub fn is_half(self) -> bool {
+        !matches!(self, DType::F32)
+    }
+
+    /// Round-trip a value through this storage format (identity for
+    /// `F32`) — the value an element takes after being stored and read
+    /// back.
+    pub fn quantize(self, x: f32) -> f32 {
+        match self {
+            DType::F32 => x,
+            DType::F16 => f16_to_f32(f32_to_f16(x)),
+            DType::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+        }
+    }
+
+    /// Narrow an f32 to this format's 16-bit pattern. Panics for `F32`,
+    /// which has no 16-bit pattern.
+    pub fn narrow(self, x: f32) -> u16 {
+        match self {
+            DType::F32 => unreachable!("f32 is not a 16-bit storage format"),
+            DType::F16 => f32_to_f16(x),
+            DType::Bf16 => f32_to_bf16(x),
+        }
+    }
+
+    /// Widen this format's 16-bit pattern to f32. Panics for `F32`.
+    pub fn widen(self, h: u16) -> f32 {
+        match self {
+            DType::F32 => unreachable!("f32 is not a 16-bit storage format"),
+            DType::F16 => f16_to_f32(h),
+            DType::Bf16 => bf16_to_f32(h),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit conversions (round-to-nearest-even, software — no intrinsics, so
+// results are identical on every host)
+// ---------------------------------------------------------------------------
+
+/// Convert f32 → IEEE 754 binary16 bits with round-to-nearest-even.
+/// Overflow rounds to ±inf, underflow to ±0, NaN to a canonical qNaN.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs > 0x7f80_0000 {
+        return sign | 0x7e00; // NaN → canonical quiet NaN
+    }
+    if abs >= 0x4780_0000 {
+        return sign | 0x7c00; // ±inf, and finite values ≥ 2^16 overflow
+    }
+    if abs >= 0x3880_0000 {
+        // normal half range (exponent ≥ −14): rebias 127→15, then RNE on
+        // the 13 mantissa bits dropped by the 23→10 narrowing
+        let rebiased = abs - 0x3800_0000;
+        let rounded = rebiased + 0x0fff + ((rebiased >> 13) & 1);
+        return sign | (rounded >> 13) as u16;
+    }
+    // subnormal half (|x| < 2^−14): shift the mantissa (with its hidden
+    // bit) into place and round; exp < 102 means |x| < 2^−25 → ±0
+    let exp = (abs >> 23) as i32;
+    if exp < 102 {
+        return sign;
+    }
+    let mant = (abs & 0x007f_ffff) | 0x0080_0000;
+    let shift = (126 - exp) as u32;
+    let half = (mant >> shift) as u16;
+    let round_bit = 1u32 << (shift - 1);
+    if (mant & round_bit) != 0 && ((mant & (round_bit - 1)) != 0 || (half & 1) != 0) {
+        return sign | (half + 1); // carry into the exponent is correct here
+    }
+    sign | half
+}
+
+/// Convert IEEE 754 binary16 bits → f32 (exact — every f16 value is
+/// representable in f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let mant = (h & 0x03ff) as u32;
+    let bits = match exp {
+        0 => {
+            if mant == 0 {
+                sign // ±0
+            } else {
+                // subnormal: renormalize into the f32 exponent range
+                let mut e = 113u32; // −14 rebias (127 − 15 + 1)
+                let mut m = mant;
+                while m & 0x0400 == 0 {
+                    m <<= 1;
+                    e -= 1;
+                }
+                sign | (e << 23) | ((m & 0x03ff) << 13)
+            }
+        }
+        0x1f => sign | 0x7f80_0000 | (mant << 13), // ±inf / NaN
+        _ => sign | ((exp as u32 + 112) << 23) | (mant << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Convert f32 → bfloat16 bits with round-to-nearest-even (bf16 is the
+/// top 16 bits of an f32, so this is rounding truncation).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if bits & 0x7fff_ffff > 0x7f80_0000 {
+        return ((bits >> 16) as u16) | 0x0040; // NaN stays NaN after truncation
+    }
+    let rounded = bits.wrapping_add(0x7fff + ((bits >> 16) & 1));
+    (rounded >> 16) as u16
+}
+
+/// Convert bfloat16 bits → f32 (exact: shift back into the top half).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// HalfMat: a 16-bit stored matrix with owned / shared (mmap) storage
+// ---------------------------------------------------------------------------
+
+/// Read-only storage a half matrix can window into without copying — in
+/// practice the memory-mapped `u16` payload of a half-precision dense
+/// shard (see `crate::store`).
+pub type SharedHalfBuf = Arc<dyn AsRef<[u16]> + Send + Sync>;
+
+#[derive(Clone)]
+enum HalfBuf {
+    Owned(Vec<u16>),
+    Shared { src: SharedHalfBuf, off: usize, len: usize },
+}
+
+impl std::ops::Deref for HalfBuf {
+    type Target = [u16];
+    #[inline]
+    fn deref(&self) -> &[u16] {
+        match self {
+            HalfBuf::Owned(v) => v,
+            HalfBuf::Shared { src, off, len } => {
+                let s: &[u16] = (**src).as_ref();
+                &s[*off..*off + *len]
+            }
+        }
+    }
+}
+
+/// Dense row-major matrix stored at 16 bits per element (`F16` or
+/// `Bf16`). Reads widen to f32; there is no half arithmetic — products
+/// go through the kernel plane's widen-on-pack path. Like [`Mat`], a
+/// shard-backed instance stays a zero-copy window until first mutation.
+#[derive(Clone)]
+pub struct HalfMat {
+    rows: usize,
+    cols: usize,
+    dtype: DType,
+    data: HalfBuf,
+}
+
+impl HalfMat {
+    /// Quantize an f32 matrix into 16-bit storage.
+    pub fn from_f32(m: &Mat, dtype: DType) -> HalfMat {
+        assert!(dtype.is_half(), "HalfMat dtype must be f16 or bf16");
+        let data = m.as_slice().iter().map(|&x| dtype.narrow(x)).collect();
+        HalfMat { rows: m.rows(), cols: m.cols(), dtype, data: HalfBuf::Owned(data) }
+    }
+
+    /// Build from an existing row-major 16-bit buffer.
+    pub fn from_raw(rows: usize, cols: usize, dtype: DType, data: Vec<u16>) -> HalfMat {
+        assert!(dtype.is_half(), "HalfMat dtype must be f16 or bf16");
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        HalfMat { rows, cols, dtype, data: HalfBuf::Owned(data) }
+    }
+
+    /// Zero-copy window of `rows·cols` u16s into a shared buffer starting
+    /// at element `offset` (e.g. a memory-mapped shard payload).
+    pub fn from_shared(
+        rows: usize,
+        cols: usize,
+        dtype: DType,
+        src: SharedHalfBuf,
+        offset: usize,
+    ) -> HalfMat {
+        assert!(dtype.is_half(), "HalfMat dtype must be f16 or bf16");
+        let total = (*src).as_ref().len();
+        assert!(offset + rows * cols <= total, "shared buffer window out of range");
+        HalfMat { rows, cols, dtype, data: HalfBuf::Shared { src, off: offset, len: rows * cols } }
+    }
+
+    /// Whether this matrix still reads from shared (memory-mapped)
+    /// storage.
+    pub fn is_shared(&self) -> bool {
+        matches!(self.data, HalfBuf::Shared { .. })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// The raw 16-bit payload, row-major.
+    #[inline]
+    pub fn as_u16_slice(&self) -> &[u16] {
+        &self.data
+    }
+
+    /// Widened element read.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.dtype.widen(self.data[i * self.cols + j])
+    }
+
+    /// Widen the whole matrix into f32.
+    pub fn to_f32(&self) -> Mat {
+        let dtype = self.dtype;
+        let data: Vec<f32> = self.data.iter().map(|&h| dtype.widen(h)).collect();
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+
+    /// Sum of squared (widened) entries, accumulated in f64.
+    pub fn sum_sq(&self) -> f64 {
+        let dtype = self.dtype;
+        self.data
+            .iter()
+            .map(|&h| {
+                let v = dtype.widen(h) as f64;
+                v * v
+            })
+            .sum()
+    }
+
+    /// Apply `f` to every (widened) element and store the narrowed
+    /// result — copies a shared window into owned storage first.
+    pub fn map_in_place(&mut self, mut f: impl FnMut(f32) -> f32) {
+        let dtype = self.dtype;
+        if let HalfBuf::Shared { .. } = self.data {
+            self.data = HalfBuf::Owned(self.data.to_vec());
+        }
+        match &mut self.data {
+            HalfBuf::Owned(v) => {
+                for h in v.iter_mut() {
+                    *h = dtype.narrow(f(dtype.widen(*h)));
+                }
+            }
+            HalfBuf::Shared { .. } => unreachable!("shared storage was just copied"),
+        }
+    }
+}
+
+impl std::fmt::Debug for HalfMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "HalfMat {{ {}x{} {} {} }}",
+            self.rows,
+            self.cols,
+            self.dtype.as_str(),
+            if self.is_shared() { "shared" } else { "owned" }
+        )
+    }
+}
+
+/// Third-order tensor of 16-bit stored relation slices — the
+/// half-precision analogue of [`Tensor3`].
+#[derive(Clone, Debug)]
+pub struct HalfTensor3 {
+    n1: usize,
+    n2: usize,
+    slices: Vec<HalfMat>,
+}
+
+impl HalfTensor3 {
+    /// Quantize an f32 tensor into 16-bit storage.
+    pub fn from_tensor3(t: &Tensor3, dtype: DType) -> HalfTensor3 {
+        let slices = t.slices().iter().map(|s| HalfMat::from_f32(s, dtype)).collect();
+        HalfTensor3 { n1: t.n1(), n2: t.n2(), slices }
+    }
+
+    /// Build from existing slices (all must share shape and dtype).
+    pub fn from_slices(slices: Vec<HalfMat>) -> HalfTensor3 {
+        assert!(!slices.is_empty(), "tensor needs at least one slice");
+        let (n1, n2) = slices[0].shape();
+        let dtype = slices[0].dtype();
+        assert!(
+            slices.iter().all(|s| s.shape() == (n1, n2) && s.dtype() == dtype),
+            "ragged or mixed-dtype slices"
+        );
+        HalfTensor3 { n1, n2, slices }
+    }
+
+    #[inline]
+    pub fn n1(&self) -> usize {
+        self.n1
+    }
+
+    #[inline]
+    pub fn n2(&self) -> usize {
+        self.n2
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.slices.len()
+    }
+
+    #[inline]
+    pub fn dtype(&self) -> DType {
+        self.slices[0].dtype()
+    }
+
+    #[inline]
+    pub fn slice(&self, t: usize) -> &HalfMat {
+        &self.slices[t]
+    }
+
+    #[inline]
+    pub fn slice_mut(&mut self, t: usize) -> &mut HalfMat {
+        &mut self.slices[t]
+    }
+
+    pub fn slices(&self) -> &[HalfMat] {
+        &self.slices
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.n1 * self.n2 * self.m()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Widen the whole tensor into f32.
+    pub fn to_f32(&self) -> Tensor3 {
+        Tensor3::from_slices(self.slices.iter().map(|s| s.to_f32()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn f16_roundtrip_is_exact_for_all_finite_patterns() {
+        // every finite f16 bit pattern widens to an exactly-representable
+        // f32 and narrows back to the identical pattern
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/NaN handled below
+            }
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "pattern {h:#06x}");
+        }
+        assert_eq!(f32_to_f16(f16_to_f32(0x7c00)), 0x7c00, "+inf");
+        assert_eq!(f32_to_f16(f16_to_f32(0xfc00)), 0xfc00, "-inf");
+        assert!(f16_to_f32(0x7e00).is_nan());
+        assert_eq!(f32_to_f16(f32::NAN) & 0x7c00, 0x7c00);
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and the next f16 (1 + 2^-10):
+        // ties go to the even mantissa (1.0)
+        assert_eq!(f32_to_f16(1.0 + 0.000_488_281_25), 0x3c00);
+        // anything above the tie rounds up
+        assert_eq!(f32_to_f16(1.0 + 0.000_489), 0x3c01);
+        // overflow → inf, underflow → 0
+        assert_eq!(f32_to_f16(1e6), 0x7c00);
+        assert_eq!(f32_to_f16(-1e6), 0xfc00);
+        assert_eq!(f32_to_f16(1e-9), 0x0000);
+        // largest finite half
+        assert_eq!(f16_to_f32(0x7bff), 65504.0);
+        assert_eq!(f32_to_f16(65504.0), 0x7bff);
+        // smallest subnormal half
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001);
+    }
+
+    #[test]
+    fn bf16_roundtrip_and_rounding() {
+        for h in 0u16..=0xffff {
+            let exp = (h >> 7) & 0xff;
+            if exp == 0xff {
+                continue;
+            }
+            assert_eq!(f32_to_bf16(bf16_to_f32(h)), h, "pattern {h:#06x}");
+        }
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7f80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xff80);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // 1 + 2^-9 ties between 1.0 and 1 + 2^-8 → even (1.0)
+        assert_eq!(f32_to_bf16(1.0 + 0.001_953_125), 0x3f80);
+        assert_eq!(f32_to_bf16(1.0 + 0.001_96), 0x3f81);
+    }
+
+    #[test]
+    fn quantization_error_is_bounded() {
+        let mut rng = Rng::new(11);
+        for _ in 0..1000 {
+            let x = rng.uniform_range(-100.0, 100.0);
+            let f16e = (DType::F16.quantize(x) - x).abs() / x.abs().max(1e-6);
+            let bf16e = (DType::Bf16.quantize(x) - x).abs() / x.abs().max(1e-6);
+            assert!(f16e <= 0.0005, "f16 rel err {f16e} at {x}");
+            assert!(bf16e <= 0.004, "bf16 rel err {bf16e} at {x}");
+        }
+    }
+
+    #[test]
+    fn half_mat_widens_and_windows() {
+        let mut rng = Rng::new(12);
+        let m = Mat::random_uniform(5, 7, -2.0, 2.0, &mut rng);
+        for dtype in [DType::F16, DType::Bf16] {
+            let h = HalfMat::from_f32(&m, dtype);
+            assert_eq!(h.shape(), (5, 7));
+            assert!(!h.is_shared());
+            let w = h.to_f32();
+            for i in 0..5 {
+                for j in 0..7 {
+                    assert_eq!(w[(i, j)], dtype.quantize(m[(i, j)]));
+                    assert_eq!(h.at(i, j), w[(i, j)]);
+                }
+            }
+        }
+        // shared window: zero-copy reads, map_in_place copies on write
+        let backing: Vec<u16> = (0..12).map(|i| f32_to_f16(i as f32)).collect();
+        let src: SharedHalfBuf = Arc::new(backing);
+        let mut h = HalfMat::from_shared(3, 4, DType::F16, Arc::clone(&src), 0);
+        assert!(h.is_shared());
+        assert_eq!(h.at(1, 2), 6.0);
+        h.map_in_place(|v| v + 1.0);
+        assert!(!h.is_shared());
+        assert_eq!(h.at(1, 2), 7.0);
+        let other: &[u16] = (*src).as_ref();
+        assert_eq!(other[6], f32_to_f16(6.0), "sibling window untouched");
+    }
+
+    #[test]
+    fn half_tensor_round_trips() {
+        let mut rng = Rng::new(13);
+        let t = Tensor3::random_uniform(4, 3, 2, 0.0, 1.0, &mut rng);
+        let ht = HalfTensor3::from_tensor3(&t, DType::Bf16);
+        assert_eq!((ht.n1(), ht.n2(), ht.m()), (4, 3, 2));
+        assert_eq!(ht.dtype(), DType::Bf16);
+        let back = ht.to_f32();
+        for s in 0..2 {
+            for i in 0..4 {
+                for j in 0..3 {
+                    assert_eq!(back.slice(s)[(i, j)], DType::Bf16.quantize(t.slice(s)[(i, j)]));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Runtime microkernel selection.
+//!
+//! The widest microkernel the host supports is picked **once**, on the
+//! first GEMM (or an explicit [`active`] call), via
+//! `is_x86_feature_detected!` — never per call. Two environment
+//! overrides exist for CI and debugging:
+//!
+//! * `DRESCAL_FORCE_SCALAR=1` pins the portable scalar reference
+//!   (CI runs the whole parity matrix under it);
+//! * `DRESCAL_KERNEL=<name>` pins a specific variant by name; an
+//!   unavailable name warns and falls back to auto-detection.
+//!
+//! The selected [`KernelDesc`] also carries the `'static` span label the
+//! telemetry plane stamps on `gemm` phase spans (`gemm[avx2_fma_8x8]`,
+//! …), so traces from different machines are attributable to the kernel
+//! that produced them.
+
+use std::sync::OnceLock;
+
+use super::micro::{self, TileFn};
+
+/// One selectable microkernel variant.
+pub struct KernelDesc {
+    /// Stable identifier (`scalar_8x8`, `avx2_fma_8x8`, `avx512f_8x16`,
+    /// `neon_8x8`) — also the ISA tag of a tune profile.
+    pub name: &'static str,
+    /// Human-readable ISA description for bench headers.
+    pub isa: &'static str,
+    /// Telemetry phase label for GEMM spans (`Trace::phase_end` needs a
+    /// `'static` string).
+    pub gemm_label: &'static str,
+    /// Register-tile height (rows of C per microkernel call).
+    pub mr: usize,
+    /// Register-tile width (columns of C per microkernel call).
+    pub nr: usize,
+    pub(crate) tile: TileFn,
+}
+
+static SCALAR: KernelDesc = KernelDesc {
+    name: "scalar_8x8",
+    isa: "portable scalar (mul_add)",
+    gemm_label: "gemm[scalar_8x8]",
+    mr: 8,
+    nr: 8,
+    tile: micro::tile_scalar::<8, 8>,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: KernelDesc = KernelDesc {
+    name: "avx2_fma_8x8",
+    isa: "x86-64 AVX2+FMA",
+    gemm_label: "gemm[avx2_fma_8x8]",
+    mr: 8,
+    nr: 8,
+    tile: micro::x86::tile_avx2_8x8,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX512: KernelDesc = KernelDesc {
+    name: "avx512f_8x16",
+    isa: "x86-64 AVX-512F",
+    gemm_label: "gemm[avx512f_8x16]",
+    mr: 8,
+    nr: 16,
+    tile: micro::x86::tile_avx512_8x16,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: KernelDesc = KernelDesc {
+    name: "neon_8x8",
+    isa: "aarch64 NEON",
+    gemm_label: "gemm[neon_8x8]",
+    mr: 8,
+    nr: 8,
+    tile: micro::arm::tile_neon_8x8,
+};
+
+/// Every variant this host can run, narrowest first (the scalar
+/// reference is always present; the auto-detected choice is the last
+/// entry). Parity tests iterate this list against the scalar reference.
+pub fn variants() -> Vec<&'static KernelDesc> {
+    #[allow(unused_mut)]
+    let mut v: Vec<&'static KernelDesc> = vec![&SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            v.push(&AVX2);
+        }
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            v.push(&AVX512);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        v.push(&NEON);
+    }
+    v
+}
+
+/// Look a variant up by its stable name (if available on this host).
+pub fn by_name(name: &str) -> Option<&'static KernelDesc> {
+    variants().into_iter().find(|k| k.name == name)
+}
+
+fn select() -> &'static KernelDesc {
+    if std::env::var("DRESCAL_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+        return &SCALAR;
+    }
+    if let Ok(name) = std::env::var("DRESCAL_KERNEL") {
+        match by_name(&name) {
+            Some(k) => return k,
+            None => eprintln!(
+                "warning: DRESCAL_KERNEL={name} is not available on this host; auto-detecting"
+            ),
+        }
+    }
+    *variants().last().expect("the scalar kernel is always available")
+}
+
+static ACTIVE: OnceLock<&'static KernelDesc> = OnceLock::new();
+
+/// The microkernel every GEMM entry point runs on, selected once per
+/// process.
+pub fn active() -> &'static KernelDesc {
+    ACTIVE.get_or_init(select)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_listed_and_named() {
+        let v = variants();
+        assert_eq!(v[0].name, "scalar_8x8");
+        assert!(by_name("scalar_8x8").is_some());
+        assert!(by_name("not_a_kernel").is_none());
+        for k in &v {
+            assert!(k.mr <= super::super::MR_MAX && k.nr <= super::super::NR_MAX);
+            assert!(k.gemm_label.starts_with("gemm["));
+        }
+    }
+
+    #[test]
+    fn active_is_one_of_the_variants() {
+        let a = active();
+        assert!(variants().iter().any(|k| k.name == a.name));
+    }
+}

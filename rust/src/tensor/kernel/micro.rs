@@ -1,0 +1,160 @@
+//! Arch-specific `MR×NR` register-tile microkernels.
+//!
+//! Every kernel computes the identical floating-point dependency chain:
+//! for each output element `(i, j)`,
+//! `acc = fma(ap[p*MR + i], bp[p*NR + j], acc)` sequentially over
+//! `p = 0..kb`, then `c[i*ldc + j] += acc`. The SIMD variants vectorize
+//! only across the `j` lanes, never across `p`, so each element performs
+//! the same fused multiply-adds in the same order as the scalar
+//! reference (which uses [`f32::mul_add`] — a single rounding per step,
+//! exactly an FMA) and all f32 variants agree **bit for bit**. Packed
+//! zero padding contributes `fma(0, b, acc)` / `fma(a, 0, acc)` no-ops,
+//! so ragged tiles keep the property.
+//!
+//! # Safety contract (all kernels)
+//!
+//! Callers guarantee that `ap` points at `kb*MR` packed f32 (an A
+//! micro-panel), `bp` at `kb*NR` (a B micro-panel), `c` at an `MR×NR`
+//! tile whose every row `i` spans `c[i*ldc .. i*ldc + NR]` in bounds —
+//! and, for the SIMD variants, that the advertised CPU features are
+//! present (verified once at startup by [`super::dispatch`]).
+
+/// An accumulate-tile microkernel: `C[MR×NR] += Ap · Bp` over packed
+/// micro-panels of depth `kb`, with C row stride `ldc`.
+pub(crate) type TileFn =
+    unsafe fn(kb: usize, ap: *const f32, bp: *const f32, c: *mut f32, ldc: usize);
+
+/// Portable scalar reference tile. `mul_add` keeps it a true FMA chain,
+/// so the vector kernels can match it bit for bit.
+///
+/// # Safety
+/// See the module-level safety contract.
+pub(crate) unsafe fn tile_scalar<const MR: usize, const NR: usize>(
+    kb: usize,
+    ap: *const f32,
+    bp: *const f32,
+    c: *mut f32,
+    ldc: usize,
+) {
+    unsafe {
+        let ap = std::slice::from_raw_parts(ap, kb * MR);
+        let bp = std::slice::from_raw_parts(bp, kb * NR);
+        let mut acc = [[0.0f32; NR]; MR];
+        for p in 0..kb {
+            let av = &ap[p * MR..p * MR + MR];
+            let bv = &bp[p * NR..p * NR + NR];
+            for i in 0..MR {
+                let ai = av[i];
+                for j in 0..NR {
+                    acc[i][j] = ai.mul_add(bv[j], acc[i][j]);
+                }
+            }
+        }
+        for (i, arow) in acc.iter().enumerate() {
+            let crow = std::slice::from_raw_parts_mut(c.add(i * ldc), NR);
+            for (cv, &av) in crow.iter_mut().zip(arow.iter()) {
+                *cv += av;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use std::arch::x86_64::*;
+
+    /// 8×8 AVX2+FMA tile: one `__m256` accumulator per row of C, a
+    /// broadcast of A per row and one B row load per depth step.
+    ///
+    /// # Safety
+    /// The module-level contract, plus AVX2 and FMA support.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn tile_avx2_8x8(
+        kb: usize,
+        ap: *const f32,
+        bp: *const f32,
+        c: *mut f32,
+        ldc: usize,
+    ) {
+        unsafe {
+            let mut acc = [_mm256_setzero_ps(); 8];
+            for p in 0..kb {
+                let b = _mm256_loadu_ps(bp.add(p * 8));
+                for i in 0..8 {
+                    let a = _mm256_set1_ps(*ap.add(p * 8 + i));
+                    acc[i] = _mm256_fmadd_ps(a, b, acc[i]);
+                }
+            }
+            for i in 0..8 {
+                let crow = c.add(i * ldc);
+                _mm256_storeu_ps(crow, _mm256_add_ps(_mm256_loadu_ps(crow), acc[i]));
+            }
+        }
+    }
+
+    /// 8×16 AVX-512F tile: one `__m512` accumulator per row of C —
+    /// double the lane width of the AVX2 tile, same chain per element.
+    ///
+    /// # Safety
+    /// The module-level contract, plus AVX-512F support.
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn tile_avx512_8x16(
+        kb: usize,
+        ap: *const f32,
+        bp: *const f32,
+        c: *mut f32,
+        ldc: usize,
+    ) {
+        unsafe {
+            let mut acc = [_mm512_setzero_ps(); 8];
+            for p in 0..kb {
+                let b = _mm512_loadu_ps(bp.add(p * 16));
+                for i in 0..8 {
+                    let a = _mm512_set1_ps(*ap.add(p * 8 + i));
+                    acc[i] = _mm512_fmadd_ps(a, b, acc[i]);
+                }
+            }
+            for i in 0..8 {
+                let crow = c.add(i * ldc);
+                _mm512_storeu_ps(crow, _mm512_add_ps(_mm512_loadu_ps(crow), acc[i]));
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod arm {
+    use std::arch::aarch64::*;
+
+    /// 8×8 NEON tile: two `float32x4` accumulators per row of C.
+    ///
+    /// # Safety
+    /// The module-level contract (NEON is baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn tile_neon_8x8(
+        kb: usize,
+        ap: *const f32,
+        bp: *const f32,
+        c: *mut f32,
+        ldc: usize,
+    ) {
+        unsafe {
+            let mut lo = [vdupq_n_f32(0.0); 8];
+            let mut hi = [vdupq_n_f32(0.0); 8];
+            for p in 0..kb {
+                let b0 = vld1q_f32(bp.add(p * 8));
+                let b1 = vld1q_f32(bp.add(p * 8 + 4));
+                for i in 0..8 {
+                    let a = vdupq_n_f32(*ap.add(p * 8 + i));
+                    lo[i] = vfmaq_f32(lo[i], a, b0);
+                    hi[i] = vfmaq_f32(hi[i], a, b1);
+                }
+            }
+            for i in 0..8 {
+                let crow = c.add(i * ldc);
+                vst1q_f32(crow, vaddq_f32(vld1q_f32(crow), lo[i]));
+                vst1q_f32(crow.add(4), vaddq_f32(vld1q_f32(crow.add(4)), hi[i]));
+            }
+        }
+    }
+}

@@ -1,0 +1,613 @@
+//! The packed microkernel GEMM — the crate's dense compute kernel plane.
+//!
+//! The per-rank dense products (`X_t·B`, `X_tᵀ·B`, and the k×k core
+//! algebra of Algorithm 3) dominate wall time at scale, so they run on a
+//! BLIS-style packed kernel instead of a plain blocked triple loop:
+//!
+//! * **Packing** ([`pack`]) — panels of A and B are copied into
+//!   contiguous, microkernel-ordered buffers (`MR×KC` micro-panels of A,
+//!   `KC×NR` micro-panels of B). Every transpose variant is just a
+//!   different read [`View`] during packing, and a 16-bit operand
+//!   ([`HalfMat`]) widens to f32 on the same pass — so all transpose and
+//!   precision variants share one inner loop, and transposes are never
+//!   materialized.
+//! * **SIMD register tiling** ([`micro`], [`dispatch`]) — the microkernel
+//!   holds an `MR×NR` tile of C in vector registers across the whole `KC`
+//!   depth. The widest kernel the host supports (AVX-512F, AVX2+FMA,
+//!   NEON, or the portable scalar reference) is selected once at startup;
+//!   all f32 variants produce **bit-identical** results (see [`micro`]).
+//! * **Tunable blocking** ([`tune`]) — the MC/KC/NC loop blocking is
+//!   runtime-adjustable; `drescal tune` sweeps the grid on the local
+//!   machine and persists the winner to a JSON profile that is
+//!   auto-loaded next to the bench baseline.
+//! * **Reusable scratch** — pack buffers live in per-thread scratch
+//!   (`thread_local`), sized once and reused by every subsequent call on
+//!   that thread; [`pack_resize_count`] counts this thread's resizes so
+//!   tests can assert the steady state performs no pack allocations.
+//! * **Threading** — macro-panels of C rows go to scoped worker threads
+//!   above [`PAR_THRESHOLD`] fused multiply-adds; each worker packs into
+//!   its own scratch.
+//!
+//! [`gram_into`] is the symmetric special case `AᵀA`: block rows of the
+//! upper triangle run through the same packed SIMD core, and the
+//! strictly-lower blocks are whole-tile mirrors of kernel-computed
+//! values — no scalar accumulation path remains.
+//!
+//! The previous unpacked kernel survives as
+//! [`super::dense::gemm_legacy`] so `drescal bench` can track the
+//! packed-vs-legacy gap and parity tests have a second implementation.
+
+pub mod dispatch;
+mod micro;
+mod pack;
+pub mod tune;
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use self::dispatch::KernelDesc;
+use self::pack::{pack_a, pack_b};
+use super::dense::{num_threads, Mat};
+use super::half::HalfMat;
+
+/// Largest register-tile height any variant uses.
+pub const MR_MAX: usize = 8;
+/// Largest register-tile width any variant uses (AVX-512 is 8×16).
+pub const NR_MAX: usize = 16;
+/// Default rows of A packed per L2-resident macro-panel.
+pub const MC_DEFAULT: usize = 64;
+/// Default shared inner (depth) blocking.
+pub const KC_DEFAULT: usize = 256;
+/// Default columns of B packed per macro-panel.
+pub const NC_DEFAULT: usize = 1024;
+
+/// Work threshold (fused multiply-adds) below which GEMM stays serial.
+const PAR_THRESHOLD: usize = 1 << 20;
+
+/// C-block side for the symmetric gram tiling.
+const GRAM_TB: usize = 64;
+
+// Runtime blocking parameters, adjustable by `drescal tune` (and the
+// auto-loaded tune profile). Read once per serial-core invocation, so a
+// concurrent update never tears a single GEMM.
+static BLOCK_MC: AtomicUsize = AtomicUsize::new(MC_DEFAULT);
+static BLOCK_KC: AtomicUsize = AtomicUsize::new(KC_DEFAULT);
+static BLOCK_NC: AtomicUsize = AtomicUsize::new(NC_DEFAULT);
+
+/// Current (MC, KC, NC) loop blocking.
+pub fn blocking() -> (usize, usize, usize) {
+    (
+        BLOCK_MC.load(Ordering::Relaxed),
+        BLOCK_KC.load(Ordering::Relaxed),
+        BLOCK_NC.load(Ordering::Relaxed),
+    )
+}
+
+/// Override the loop blocking (values are clamped to at least one
+/// register tile). Takes effect on the next GEMM call.
+pub fn set_blocking(mc: usize, kc: usize, nc: usize) {
+    BLOCK_MC.store(mc.max(MR_MAX), Ordering::Relaxed);
+    BLOCK_KC.store(kc.max(1), Ordering::Relaxed);
+    BLOCK_NC.store(nc.max(NR_MAX), Ordering::Relaxed);
+}
+
+/// The compiled-in default blocking.
+pub fn default_blocking() -> (usize, usize, usize) {
+    (MC_DEFAULT, KC_DEFAULT, NC_DEFAULT)
+}
+
+/// The packed element source a [`View`] reads through: f32, or a 16-bit
+/// storage format widened on access.
+#[derive(Clone, Copy)]
+pub(crate) enum ViewData<'a> {
+    F32(&'a [f32]),
+    F16(&'a [u16]),
+    Bf16(&'a [u16]),
+}
+
+/// A read-only strided view of a row-major buffer: element `(r, c)` is
+/// `data[r*rs + c*cs]`. A transposed operand is the same buffer with the
+/// strides swapped — packing through a view makes all transpose variants
+/// share the packed inner loop, and the half-precision variants widen
+/// here, on pack, so the microkernel only ever sees f32.
+#[derive(Clone, Copy)]
+pub(crate) struct View<'a> {
+    data: ViewData<'a>,
+    rs: usize,
+    cs: usize,
+}
+
+impl<'a> View<'a> {
+    pub(crate) fn f32(data: &'a [f32], rs: usize, cs: usize) -> View<'a> {
+        View { data: ViewData::F32(data), rs, cs }
+    }
+
+    /// View a half matrix's raw payload with explicit strides.
+    pub(crate) fn half(m: &'a HalfMat, rs: usize, cs: usize) -> View<'a> {
+        use super::half::DType;
+        let data = match m.dtype() {
+            DType::F16 => ViewData::F16(m.as_u16_slice()),
+            DType::Bf16 => ViewData::Bf16(m.as_u16_slice()),
+            DType::F32 => unreachable!("HalfMat is never f32"),
+        };
+        View { data, rs, cs }
+    }
+
+    #[inline(always)]
+    pub(crate) fn at(&self, r: usize, c: usize) -> f32 {
+        let idx = r * self.rs + c * self.cs;
+        match self.data {
+            ViewData::F32(d) => d[idx],
+            ViewData::F16(d) => super::half::f16_to_f32(d[idx]),
+            ViewData::Bf16(d) => super::half::bf16_to_f32(d[idx]),
+        }
+    }
+
+    /// The sub-view starting at row `r0` (same strides).
+    fn from_row(&self, r0: usize) -> View<'a> {
+        let skip = r0 * self.rs;
+        let data = match self.data {
+            ViewData::F32(d) => ViewData::F32(&d[skip..]),
+            ViewData::F16(d) => ViewData::F16(&d[skip..]),
+            ViewData::Bf16(d) => ViewData::Bf16(&d[skip..]),
+        };
+        View { data, rs: self.rs, cs: self.cs }
+    }
+}
+
+/// Reusable per-thread pack scratch. Persistent threads (the engine's
+/// rank workers) size it on first use and never allocate again; scoped
+/// GEMM worker threads get a fresh one per spawn, which is noise next to
+/// the spawn itself.
+struct PackScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<PackScratch> =
+        const { RefCell::new(PackScratch { a: Vec::new(), b: Vec::new() }) };
+    static PACK_RESIZES: Cell<usize> = const { Cell::new(0) };
+}
+
+/// How many times **this thread** has grown its pack scratch. Stable
+/// across warm calls — tests assert the steady-state hot path performs
+/// no pack allocations.
+pub fn pack_resize_count() -> usize {
+    PACK_RESIZES.with(|c| c.get())
+}
+
+#[inline]
+fn round_up(x: usize, to: usize) -> usize {
+    x.div_ceil(to) * to
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points: four transpose variants × {f32, half} + gram
+// ---------------------------------------------------------------------------
+
+/// `C (+)= A · B` with A `m×k`, B `k×n`. When `accumulate` is false, C is
+/// overwritten.
+pub fn gemm_nn_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
+    gemm_nn_into_with(dispatch::active(), a, b, c, accumulate);
+}
+
+/// [`gemm_nn_into`] on an explicit microkernel variant (parity tests and
+/// the autotuner; production paths use the dispatched kernel).
+pub fn gemm_nn_into_with(kern: &'static KernelDesc, a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
+    assert_eq!(a.cols(), b.rows(), "gemm inner dim");
+    assert_eq!(c.rows(), a.rows(), "gemm out rows");
+    assert_eq!(c.cols(), b.cols(), "gemm out cols");
+    if !accumulate {
+        c.clear();
+    }
+    let (m, kdim, n) = (a.rows(), a.cols(), b.cols());
+    let av = View::f32(a.as_slice(), a.cols(), 1);
+    let bv = View::f32(b.as_slice(), b.cols(), 1);
+    gemm_threaded(kern, m, kdim, n, av, bv, c.as_mut_slice());
+}
+
+/// `C = Aᵀ · B` with A stored `m×k`, B `m×n` (C is `k×n`). Aᵀ is never
+/// materialized: packing reads A through the transposed view.
+pub fn gemm_tn_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    gemm_tn_into_with(dispatch::active(), a, b, c);
+}
+
+/// [`gemm_tn_into`] on an explicit microkernel variant.
+pub fn gemm_tn_into_with(kern: &'static KernelDesc, a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.rows(), b.rows(), "t_matmul inner dim");
+    assert_eq!(c.rows(), a.cols(), "t_matmul out rows");
+    assert_eq!(c.cols(), b.cols(), "t_matmul out cols");
+    c.clear();
+    let (m, kdim, n) = (a.cols(), a.rows(), b.cols());
+    let av = View::f32(a.as_slice(), 1, a.cols());
+    let bv = View::f32(b.as_slice(), b.cols(), 1);
+    gemm_threaded(kern, m, kdim, n, av, bv, c.as_mut_slice());
+}
+
+/// `C = A · Bᵀ` with A `m×k`, B stored `n×k` (C is `m×n`).
+pub fn gemm_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    gemm_nt_into_with(dispatch::active(), a, b, c);
+}
+
+/// [`gemm_nt_into`] on an explicit microkernel variant.
+pub fn gemm_nt_into_with(kern: &'static KernelDesc, a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols(), b.cols(), "matmul_t inner dim");
+    assert_eq!(c.rows(), a.rows(), "matmul_t out rows");
+    assert_eq!(c.cols(), b.rows(), "matmul_t out cols");
+    c.clear();
+    let (m, kdim, n) = (a.rows(), a.cols(), b.rows());
+    let av = View::f32(a.as_slice(), a.cols(), 1);
+    let bv = View::f32(b.as_slice(), 1, b.cols());
+    gemm_threaded(kern, m, kdim, n, av, bv, c.as_mut_slice());
+}
+
+/// `C = Aᵀ · Bᵀ` with A stored `k×m`, B stored `n×k` (C is `m×n`).
+pub fn gemm_tt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    gemm_tt_into_with(dispatch::active(), a, b, c);
+}
+
+/// [`gemm_tt_into`] on an explicit microkernel variant.
+pub fn gemm_tt_into_with(kern: &'static KernelDesc, a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.rows(), b.cols(), "tt inner dim");
+    assert_eq!(c.rows(), a.cols(), "tt out rows");
+    assert_eq!(c.cols(), b.rows(), "tt out cols");
+    c.clear();
+    let (m, kdim, n) = (a.cols(), a.rows(), b.rows());
+    let av = View::f32(a.as_slice(), 1, a.cols());
+    let bv = View::f32(b.as_slice(), 1, b.cols());
+    gemm_threaded(kern, m, kdim, n, av, bv, c.as_mut_slice());
+}
+
+/// `C (+)= A · B` with A a 16-bit stored `m×k` matrix widened on pack,
+/// B f32 `k×n`. Arithmetic is identical to widening A up front and
+/// calling [`gemm_nn_into`] — bit for bit — without the widened copy.
+pub fn gemm_nn_half_into(a: &HalfMat, b: &Mat, c: &mut Mat, accumulate: bool) {
+    gemm_nn_half_into_with(dispatch::active(), a, b, c, accumulate);
+}
+
+/// [`gemm_nn_half_into`] on an explicit microkernel variant.
+pub fn gemm_nn_half_into_with(
+    kern: &'static KernelDesc,
+    a: &HalfMat,
+    b: &Mat,
+    c: &mut Mat,
+    accumulate: bool,
+) {
+    assert_eq!(a.cols(), b.rows(), "gemm inner dim");
+    assert_eq!(c.rows(), a.rows(), "gemm out rows");
+    assert_eq!(c.cols(), b.cols(), "gemm out cols");
+    if !accumulate {
+        c.clear();
+    }
+    let (m, kdim, n) = (a.rows(), a.cols(), b.cols());
+    let av = View::half(a, a.cols(), 1);
+    let bv = View::f32(b.as_slice(), b.cols(), 1);
+    gemm_threaded(kern, m, kdim, n, av, bv, c.as_mut_slice());
+}
+
+/// `C = Aᵀ · B` with A a 16-bit stored `m×k` matrix widened on pack,
+/// B f32 `m×n` (C is `k×n`).
+pub fn gemm_tn_half_into(a: &HalfMat, b: &Mat, c: &mut Mat) {
+    gemm_tn_half_into_with(dispatch::active(), a, b, c);
+}
+
+/// [`gemm_tn_half_into`] on an explicit microkernel variant.
+pub fn gemm_tn_half_into_with(kern: &'static KernelDesc, a: &HalfMat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.rows(), b.rows(), "t_matmul inner dim");
+    assert_eq!(c.rows(), a.cols(), "t_matmul out rows");
+    assert_eq!(c.cols(), b.cols(), "t_matmul out cols");
+    c.clear();
+    let (m, kdim, n) = (a.cols(), a.rows(), b.cols());
+    let av = View::half(a, 1, a.cols());
+    let bv = View::f32(b.as_slice(), b.cols(), 1);
+    gemm_threaded(kern, m, kdim, n, av, bv, c.as_mut_slice());
+}
+
+/// Symmetric gram `C = AᵀA` for A `m×k` (C is `k×k`).
+///
+/// Block rows of the upper triangle (diagonal block plus everything to
+/// its right) run through the packed SIMD core — the same microkernel
+/// as every other GEMM — and the strictly-lower blocks are whole-tile
+/// mirrors of those kernel-computed values. The result is exactly
+/// symmetric: mirrored blocks trivially, and within a diagonal block
+/// because `(p,q)` and `(q,p)` accumulate bitwise-commuted FMA chains.
+/// Steady-state calls perform no allocations (the per-depth-stripe
+/// partial buffers of the old scalar reduction are gone; see
+/// [`pack_resize_count`]).
+pub fn gram_into(a: &Mat, c: &mut Mat) {
+    let (m, k) = a.shape();
+    assert_eq!(c.shape(), (k, k), "gram out shape");
+    c.clear();
+    if m == 0 || k == 0 {
+        return;
+    }
+    let kern = dispatch::active();
+    let ad = a.as_slice();
+    let cd = c.as_mut_slice();
+    for pb0 in (0..k).step_by(GRAM_TB) {
+        let pb1 = (pb0 + GRAM_TB).min(k);
+        // op-A = Aᵀ rows [pb0, pb1) and op-B = A columns [pb0, k), both
+        // strided views of the same buffer
+        let av = View::f32(&ad[pb0..], 1, k);
+        let bv = View::f32(&ad[pb0..], k, 1);
+        gemm_serial_packed(kern, pb1 - pb0, m, k - pb0, av, bv, &mut cd[pb0 * k + pb0..], k);
+    }
+    // mirror whole strictly-upper tiles into the lower triangle
+    for pb0 in (0..k).step_by(GRAM_TB) {
+        let pb1 = (pb0 + GRAM_TB).min(k);
+        for qb0 in ((pb0 + GRAM_TB)..k).step_by(GRAM_TB) {
+            let qb1 = (qb0 + GRAM_TB).min(k);
+            for q in qb0..qb1 {
+                for p in pb0..pb1 {
+                    cd[q * k + p] = cd[p * k + q];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver: threading over C row macro-panels, then the packed serial core
+// ---------------------------------------------------------------------------
+
+/// `C += OpA · OpB` over strided operand views; C is row-major `m×n`
+/// (leading dimension n). Callers clear C first unless accumulating.
+fn gemm_threaded(kern: &'static KernelDesc, m: usize, kdim: usize, n: usize, a: View, b: View, c: &mut [f32]) {
+    if m == 0 || n == 0 || kdim == 0 {
+        return;
+    }
+    let work = m * kdim * n;
+    let nt = num_threads();
+    if work < PAR_THRESHOLD || nt == 1 || m < 2 {
+        gemm_serial_packed(kern, m, kdim, n, a, b, c, n);
+        return;
+    }
+    let nt = nt.min(m);
+    let chunk = m.div_ceil(nt);
+    let c_chunks: Vec<&mut [f32]> = c.chunks_mut(chunk * n).collect();
+    std::thread::scope(|s| {
+        for (t, c_chunk) in c_chunks.into_iter().enumerate() {
+            let a_sub = a.from_row(t * chunk);
+            s.spawn(move || {
+                let rows = c_chunk.len() / n;
+                gemm_serial_packed(kern, rows, kdim, n, a_sub, b, c_chunk, n);
+            });
+        }
+    });
+}
+
+/// The serial packed core: 5-loop blocking with pack-then-microkernel.
+/// `c` starts at the output block's top-left corner and has leading
+/// dimension `ldc` (≥ n; the gram path writes sub-blocks of a wider C).
+#[allow(clippy::too_many_arguments)]
+fn gemm_serial_packed(
+    kern: &KernelDesc,
+    m: usize,
+    kdim: usize,
+    n: usize,
+    a: View,
+    b: View,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    if m == 0 || n == 0 || kdim == 0 {
+        return;
+    }
+    let (mc, kc, nc) = blocking();
+    let a_need = round_up(mc.min(m), kern.mr) * kc.min(kdim);
+    let b_need = kc.min(kdim) * round_up(nc.min(n), kern.nr);
+    SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let PackScratch { a: abuf, b: bbuf } = &mut *scratch;
+        if abuf.len() < a_need {
+            abuf.resize(a_need, 0.0);
+            PACK_RESIZES.with(|ctr| ctr.set(ctr.get() + 1));
+        }
+        if bbuf.len() < b_need {
+            bbuf.resize(b_need, 0.0);
+            PACK_RESIZES.with(|ctr| ctr.set(ctr.get() + 1));
+        }
+        for jc in (0..n).step_by(nc) {
+            let nb = nc.min(n - jc);
+            for pc in (0..kdim).step_by(kc) {
+                let kb = kc.min(kdim - pc);
+                pack_b(b, pc, kb, jc, nb, kern.nr, bbuf);
+                for ic in (0..m).step_by(mc) {
+                    let mb = mc.min(m - ic);
+                    pack_a(a, ic, mb, pc, kb, kern.mr, abuf);
+                    macro_kernel(
+                        kern,
+                        mb,
+                        kb,
+                        nb,
+                        (abuf.as_slice(), bbuf.as_slice()),
+                        &mut c[ic * ldc + jc..],
+                        ldc,
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Run the microkernel over every `MR×NR` tile of one packed macro-block.
+/// `c` starts at the block's top-left corner of the full C (leading
+/// dimension `ldc`).
+fn macro_kernel(
+    kern: &KernelDesc,
+    mb: usize,
+    kb: usize,
+    nb: usize,
+    (apack, bpack): (&[f32], &[f32]),
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let (mr, nr) = (kern.mr, kern.nr);
+    debug_assert!(mr <= MR_MAX && nr <= NR_MAX);
+    for jr in (0..nb).step_by(nr) {
+        let nrb = nr.min(nb - jr);
+        let bp = &bpack[(jr / nr) * (kb * nr)..][..kb * nr];
+        for ir in (0..mb).step_by(mr) {
+            let mrb = mr.min(mb - ir);
+            let ap = &apack[(ir / mr) * (mr * kb)..][..mr * kb];
+            let c_off = ir * ldc + jr;
+            if mrb == mr && nrb == nr {
+                let ctile = &mut c[c_off..];
+                debug_assert!((mr - 1) * ldc + nr <= ctile.len());
+                // SAFETY: ap/bp hold kb*mr / kb*nr packed f32; every tile
+                // row i spans ctile[i*ldc .. i*ldc + nr], in bounds by the
+                // assert above; the dispatcher verified CPU features.
+                unsafe { (kern.tile)(kb, ap.as_ptr(), bp.as_ptr(), ctile.as_mut_ptr(), ldc) };
+            } else {
+                // ragged edge: run the same kernel into a zeroed local
+                // tile, then add back only the valid mrb×nrb corner
+                let mut tile = [0.0f32; MR_MAX * NR_MAX];
+                // SAFETY: as above; the local tile is mr×nr with ldc=nr,
+                // and mr*nr ≤ MR_MAX*NR_MAX.
+                unsafe { (kern.tile)(kb, ap.as_ptr(), bp.as_ptr(), tile.as_mut_ptr(), nr) };
+                for i in 0..mrb {
+                    let crow = &mut c[c_off + i * ldc..c_off + i * ldc + nrb];
+                    for (cv, &tv) in crow.iter_mut().zip(&tile[i * nr..i * nr + nrb]) {
+                        *cv += tv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::assert_close;
+
+    // Naive-reference parity across adversarial shapes, all transpose
+    // variants, and every host microkernel lives in
+    // rust/tests/kernel_plane.rs (one copy, exercised through the public
+    // Backend/kernel API); the tests here cover what only this module
+    // can reach — blocking edges, the accumulate contract, the
+    // symmetric gram, and the private serial core vs the threaded
+    // dispatcher.
+
+    #[test]
+    fn empty_dims_are_fine() {
+        // k = 0: the product of an m×0 and a 0×n matrix is all zeros
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 4);
+        let mut c = Mat::full(3, 4, 7.0);
+        gemm_nn_into(&a, &b, &mut c, false);
+        assert_eq!(c.as_slice(), &[0.0; 12][..]);
+        // m = 0 / n = 0: empty outputs, no panic
+        let mut c = Mat::zeros(0, 4);
+        gemm_nn_into(&Mat::zeros(0, 5), &Mat::zeros(5, 4), &mut c, false);
+        let mut c = Mat::zeros(3, 0);
+        gemm_nn_into(&Mat::zeros(3, 5), &Mat::zeros(5, 0), &mut c, false);
+        let mut g = Mat::zeros(0, 0);
+        gram_into(&Mat::zeros(4, 0), &mut g);
+    }
+
+    #[test]
+    fn accumulate_adds_on_top() {
+        let a = Mat::eye(5);
+        let b = Mat::full(5, 5, 2.0);
+        let mut c = Mat::full(5, 5, 1.0);
+        gemm_nn_into(&a, &b, &mut c, true);
+        assert_eq!(c.as_slice(), &[3.0f32; 25][..]);
+    }
+
+    #[test]
+    fn gram_matches_tn_and_is_exactly_symmetric() {
+        let mut rng = Rng::new(501);
+        // shapes straddle the GRAM_TB block size so mirrored off-diagonal
+        // blocks are exercised (k = 130 > 2·64)
+        for &(m, k) in &[(1, 1), (5, 3), (40, 8), (130, 17), (300, 33), (90, 130)] {
+            let a = Mat::random_uniform(m, k, -1.0, 1.0, &mut rng);
+            let mut g = Mat::zeros(k, k);
+            gram_into(&a, &mut g);
+            let mut want = Mat::zeros(k, k);
+            gemm_tn_into(&a, &a, &mut want);
+            assert_close(g.as_slice(), want.as_slice(), 1e-3);
+            for p in 0..k {
+                for q in 0..k {
+                    assert_eq!(g[(p, q)], g[(q, p)], "gram not exactly symmetric");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_path_matches_serial_result() {
+        // large enough to cross PAR_THRESHOLD on multi-core hosts; on a
+        // single-core host this still exercises the serial packed core
+        let mut rng = Rng::new(502);
+        let (m, kdim, n) = (190, 85, 110);
+        let a = Mat::random_uniform(m, kdim, -1.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(kdim, n, -1.0, 1.0, &mut rng);
+        let mut c = Mat::zeros(m, n);
+        gemm_nn_into(&a, &b, &mut c, false);
+        let mut serial = Mat::zeros(m, n);
+        gemm_serial_packed(
+            dispatch::active(),
+            m,
+            kdim,
+            n,
+            View::f32(a.as_slice(), kdim, 1),
+            View::f32(b.as_slice(), n, 1),
+            serial.as_mut_slice(),
+            n,
+        );
+        assert_close(c.as_slice(), serial.as_slice(), 1e-4);
+    }
+
+    #[test]
+    fn half_gemm_is_bitwise_equal_to_widened_f32_gemm() {
+        use crate::tensor::half::{DType, HalfMat, HalfTensor3};
+        let mut rng = Rng::new(503);
+        let (m, kdim, n) = (33, 29, 21);
+        let a = Mat::random_uniform(m, kdim, -1.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(kdim, n, -1.0, 1.0, &mut rng);
+        for dtype in [DType::F16, DType::Bf16] {
+            let ha = HalfMat::from_f32(&a, dtype);
+            let widened = ha.to_f32();
+            let mut got = Mat::zeros(m, n);
+            gemm_nn_half_into(&ha, &b, &mut got, false);
+            let mut want = Mat::zeros(m, n);
+            gemm_nn_into(&widened, &b, &mut want, false);
+            assert_eq!(got.as_slice(), want.as_slice(), "{dtype:?} nn widen-on-pack");
+            let mut got_t = Mat::zeros(kdim, n);
+            let bt = Mat::random_uniform(m, n, -1.0, 1.0, &mut rng);
+            gemm_tn_half_into(&ha, &bt, &mut got_t);
+            let mut want_t = Mat::zeros(kdim, n);
+            gemm_tn_into(&widened, &bt, &mut want_t);
+            assert_eq!(got_t.as_slice(), want_t.as_slice(), "{dtype:?} tn widen-on-pack");
+        }
+        // keep HalfTensor3 linked into the doc example surface
+        let _ = HalfTensor3::from_tensor3(&crate::tensor::Tensor3::zeros(2, 2, 1), DType::F16);
+    }
+
+    #[test]
+    fn blocking_overrides_round_trip_and_clamp() {
+        let saved = blocking();
+        set_blocking(96, 128, 512);
+        assert_eq!(blocking(), (96, 128, 512));
+        set_blocking(1, 0, 1);
+        assert_eq!(blocking(), (MR_MAX, 1, NR_MAX));
+        // results stay correct under odd blocking
+        let mut rng = Rng::new(504);
+        let a = Mat::random_uniform(30, 40, -1.0, 1.0, &mut rng);
+        let b = Mat::random_uniform(40, 22, -1.0, 1.0, &mut rng);
+        set_blocking(24, 17, 40);
+        let got = {
+            let mut c = Mat::zeros(30, 22);
+            gemm_nn_into(&a, &b, &mut c, false);
+            c
+        };
+        set_blocking(saved.0, saved.1, saved.2);
+        let mut want = Mat::zeros(30, 22);
+        gemm_nn_into(&a, &b, &mut want, false);
+        assert_close(got.as_slice(), want.as_slice(), 1e-4);
+        assert_eq!(default_blocking(), (MC_DEFAULT, KC_DEFAULT, NC_DEFAULT));
+    }
+}

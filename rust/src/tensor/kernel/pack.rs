@@ -1,0 +1,41 @@
+//! Panel packing: copy operand blocks into microkernel order, widening
+//! 16-bit storage to f32 on the way.
+//!
+//! Packing reads operands through a strided [`View`] — a transposed
+//! operand is the same buffer with the strides swapped, and a
+//! half-precision operand is the same loop over a `u16` buffer with a
+//! widen per element ("widen-on-pack"). Both panels are zero-padded to
+//! full `MR`/`NR` so the microkernel never branches on ragged tiles;
+//! the pad lanes contribute exact FMA no-ops.
+
+use super::View;
+
+/// Pack the `mb×kb` block of A at `(ic, pc)` into `mr`-row micro-panels:
+/// panel `ir/mr` holds `out[p*mr + i] = A[ic+ir+i, pc+p]`, zero-padded
+/// to a full `mr`.
+pub(super) fn pack_a(a: View, ic: usize, mb: usize, pc: usize, kb: usize, mr: usize, out: &mut [f32]) {
+    let mut idx = 0;
+    for ir in (0..mb).step_by(mr) {
+        for p in 0..kb {
+            for i in 0..mr {
+                out[idx] = if ir + i < mb { a.at(ic + ir + i, pc + p) } else { 0.0 };
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Pack the `kb×nb` block of B at `(pc, jc)` into `nr`-column
+/// micro-panels: panel `jr/nr` holds `out[p*nr + j] = B[pc+p, jc+jr+j]`,
+/// zero-padded to a full `nr`.
+pub(super) fn pack_b(b: View, pc: usize, kb: usize, jc: usize, nb: usize, nr: usize, out: &mut [f32]) {
+    let mut idx = 0;
+    for jr in (0..nb).step_by(nr) {
+        for p in 0..kb {
+            for j in 0..nr {
+                out[idx] = if jr + j < nb { b.at(pc + p, jc + jr + j) } else { 0.0 };
+                idx += 1;
+            }
+        }
+    }
+}

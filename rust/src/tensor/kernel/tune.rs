@@ -1,0 +1,218 @@
+//! Per-machine blocking autotune (`drescal tune`).
+//!
+//! The MC/KC/NC loop blocking that best feeds a given microkernel
+//! depends on the host's cache hierarchy, so it is not hard-coded:
+//! [`sweep`] times the packed core over a grid of blocking candidates on
+//! a fixed square GEMM and returns the winner, which `drescal tune`
+//! persists as a small JSON profile (default [`PROFILE_FILE`], next to
+//! the bench baseline). Every other subcommand calls [`autoload`] at
+//! startup: if a profile is present **and** was tuned for the microkernel
+//! variant active on this machine, its blocking is applied; a profile
+//! tuned for a different ISA is ignored (the optimum does not transfer
+//! across tile shapes).
+//!
+//! Blocking only changes the loop order of bitwise-identical microkernel
+//! tile updates within a serial core, so a tuned profile never changes
+//! GEMM results — only their speed.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::error::{Context, Error, Result};
+use crate::json::Json;
+use crate::rng::Rng;
+
+use super::dispatch;
+use super::Mat;
+
+/// Default profile path, resolved relative to the working directory
+/// (override with `--out` / `DRESCAL_TUNE_PROFILE`).
+pub const PROFILE_FILE: &str = "KERNEL_tune.json";
+
+/// A persisted autotune result: the winning blocking for one microkernel
+/// variant on one machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneProfile {
+    /// Name of the microkernel the sweep ran on ([`dispatch::KernelDesc::name`]).
+    pub isa: String,
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+    /// Throughput of the winning point on the tuning shape.
+    pub gflops: f64,
+}
+
+impl TuneProfile {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("kind".to_string(), Json::Str("kernel_tune_profile".to_string()));
+        o.insert("isa".to_string(), Json::Str(self.isa.clone()));
+        o.insert("mc".to_string(), Json::Num(self.mc as f64));
+        o.insert("kc".to_string(), Json::Num(self.kc as f64));
+        o.insert("nc".to_string(), Json::Num(self.nc as f64));
+        o.insert("gflops".to_string(), Json::Num(self.gflops));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TuneProfile> {
+        let kind = j.get("kind").and_then(Json::as_str).unwrap_or("");
+        if kind != "kernel_tune_profile" {
+            return Err(Error::msg(format!(
+                "not a kernel tune profile (kind = {kind:?})"
+            )));
+        }
+        let field = |name: &str| -> Result<usize> {
+            match j.get(name).and_then(Json::as_usize) {
+                Some(v) if v > 0 => Ok(v),
+                _ => Err(Error::msg(format!("tune profile: bad or missing {name:?}"))),
+            }
+        };
+        Ok(TuneProfile {
+            isa: j
+                .get("isa")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::msg("tune profile: missing isa"))?
+                .to_string(),
+            mc: field("mc")?,
+            kc: field("kc")?,
+            nc: field("nc")?,
+            gflops: j.get("gflops").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing tune profile {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<TuneProfile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tune profile {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing tune profile {path}"))?;
+        TuneProfile::from_json(&j)
+    }
+
+    /// Install this profile's blocking for subsequent GEMMs.
+    pub fn apply(&self) {
+        super::set_blocking(self.mc, self.kc, self.nc);
+    }
+}
+
+/// One timed candidate from a sweep.
+pub struct TunePoint {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+    pub gflops: f64,
+}
+
+/// Time the blocking grid on the active microkernel and return the
+/// winner plus every timed point (for the report table). `quick` shrinks
+/// the grid and the problem to a CI-friendly smoke. Restores whatever
+/// blocking was installed before the sweep.
+pub fn sweep(quick: bool) -> (TuneProfile, Vec<TunePoint>) {
+    let kern = dispatch::active();
+    let n = if quick { 192 } else { 384 };
+    let reps = if quick { 2 } else { 3 };
+    let (mcs, kcs, ncs): (&[usize], &[usize], &[usize]) = if quick {
+        (&[64, 128], &[256], &[1024])
+    } else {
+        (&[32, 64, 128, 256], &[128, 256, 512], &[256, 512, 1024, 2048])
+    };
+
+    let mut rng = Rng::new(77);
+    let a = Mat::random_uniform(n, n, -1.0, 1.0, &mut rng);
+    let b = Mat::random_uniform(n, n, -1.0, 1.0, &mut rng);
+    let mut c = Mat::zeros(n, n);
+    let flops = 2.0 * (n as f64).powi(3);
+
+    let saved = super::blocking();
+    let mut points = Vec::new();
+    let mut best: Option<TunePoint> = None;
+    for &mc in mcs {
+        for &kc in kcs {
+            for &nc in ncs {
+                super::set_blocking(mc, kc, nc);
+                // warm the pack scratch (and the caches) outside the timer
+                super::gemm_nn_into_with(kern, &a, &b, &mut c, false);
+                let mut best_t = f64::INFINITY;
+                for _ in 0..reps {
+                    let t0 = Instant::now();
+                    super::gemm_nn_into_with(kern, &a, &b, &mut c, false);
+                    best_t = best_t.min(t0.elapsed().as_secs_f64());
+                }
+                let gflops = flops / best_t / 1e9;
+                let better = match &best {
+                    None => true,
+                    Some(p) => gflops > p.gflops,
+                };
+                if better {
+                    best = Some(TunePoint { mc, kc, nc, gflops });
+                }
+                points.push(TunePoint { mc, kc, nc, gflops });
+            }
+        }
+    }
+    super::set_blocking(saved.0, saved.1, saved.2);
+
+    let w = best.expect("tune grid is never empty");
+    let profile = TuneProfile {
+        isa: kern.name.to_string(),
+        mc: w.mc,
+        kc: w.kc,
+        nc: w.nc,
+        gflops: w.gflops,
+    };
+    (profile, points)
+}
+
+/// Load and apply the machine's tune profile, if one exists and matches
+/// the active microkernel. Returns the applied profile, or `None` when
+/// there is no usable profile (missing file, parse error, or an ISA
+/// mismatch — all silently fall back to the default blocking).
+pub fn autoload() -> Option<TuneProfile> {
+    let path = std::env::var("DRESCAL_TUNE_PROFILE").unwrap_or_else(|_| PROFILE_FILE.to_string());
+    let profile = TuneProfile::load(&path).ok()?;
+    if profile.isa != dispatch::active().name {
+        return None;
+    }
+    profile.apply();
+    Some(profile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_round_trips_through_json() {
+        let p = TuneProfile {
+            isa: "scalar_8x8".to_string(),
+            mc: 128,
+            kc: 256,
+            nc: 512,
+            gflops: 12.5,
+        };
+        let back = TuneProfile::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn bad_profiles_are_rejected() {
+        assert!(TuneProfile::from_json(&Json::parse("{}").unwrap()).is_err());
+        let j = Json::parse(r#"{"kind":"kernel_tune_profile","isa":"x","mc":0,"kc":1,"nc":1}"#)
+            .unwrap();
+        assert!(TuneProfile::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn quick_sweep_returns_a_winner_and_restores_blocking() {
+        let saved = super::super::blocking();
+        let (profile, points) = sweep(true);
+        assert_eq!(super::super::blocking(), saved, "sweep must restore blocking");
+        assert!(!points.is_empty());
+        assert_eq!(profile.isa, dispatch::active().name);
+        assert!(profile.gflops > 0.0);
+        assert!(points.iter().all(|p| profile.gflops >= p.gflops - 1e-9));
+    }
+}

@@ -5,13 +5,20 @@
 //! thread-parallel single-precision GEMM plus the small set of elementwise
 //! multiplicative-update primitives, a third-order tensor stored as
 //! relation slices, and a CSR sparse matrix for the sparse experiments.
+//!
+//! The GEMM itself lives in [`kernel`] — a packed, SIMD-dispatched
+//! microkernel plane — and [`half`] adds f16/bf16 *storage* formats that
+//! widen to f32 on pack, so half-precision tiles and factor artifacts
+//! run through the same f32 accumulator path.
 
 pub mod dense;
+pub mod half;
 pub mod kernel;
 pub mod ops;
 pub mod sparse;
 pub mod tensor3;
 
 pub use dense::{Mat, SharedBuf};
+pub use half::{DType, HalfMat, HalfTensor3};
 pub use sparse::Csr;
 pub use tensor3::Tensor3;

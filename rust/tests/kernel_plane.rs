@@ -13,7 +13,8 @@ use drescal::rescal::distributed::{rescal_rank, DistInit, DistRescalConfig};
 use drescal::rescal::{LocalTile, ModelKind, RescalOptions};
 use drescal::rng::Rng;
 use drescal::tensor::dense::{gemm, gemm_legacy};
-use drescal::tensor::{kernel, Mat};
+use drescal::tensor::kernel::dispatch;
+use drescal::tensor::{kernel, DType, HalfMat, Mat};
 use drescal::testing::{assert_close, naive_gemm as naive};
 
 /// Shapes straddling the microkernel (MR/NR), blocking (MC/KC/NC), and
@@ -202,4 +203,219 @@ fn sparse_residual_matches_dense_on_shared_data() {
     let d = LocalTile::Dense(dense).residual_sq(0, &ar, &a_col);
     let sp = LocalTile::Sparse(s).residual_sq(0, &ar, &a_col);
     assert!((d - sp).abs() < 1e-3 * d.max(1.0), "dense {d} vs sparse {sp}");
+}
+
+/// Every SIMD variant the host supports must be **bitwise** equal to the
+/// portable scalar reference: the scalar tile uses `mul_add` (one
+/// rounding per FMA, same as the vector units), SIMD vectorizes only the
+/// independent j-lanes, and zero-padded edge lanes are FMA no-ops — so
+/// there is no shape, ragged edge, or KC straddle where they may differ.
+#[test]
+fn simd_variants_match_scalar_bit_for_bit_across_shape_grid() {
+    let variants = dispatch::variants();
+    let scalar = variants[0];
+    assert_eq!(scalar.name, "scalar_8x8");
+    let mut rng = Rng::new(910);
+    // every ragged edge 1..MR × 1..NR (and past NR=16 for avx512f_8x16),
+    // plus k spanning the KC=256 blocking boundary
+    let ms: Vec<usize> = (1usize..=9).chain([16, 65]).collect();
+    let ns: Vec<usize> = (1usize..=17).chain([33]).collect();
+    let ks = [1usize, 7, 255, 256, 257];
+    for &m in &ms {
+        for &n in &ns {
+            for &k in &ks {
+                let a = Mat::random_uniform(m, k, -1.0, 1.0, &mut rng);
+                let b = Mat::random_uniform(k, n, -1.0, 1.0, &mut rng);
+                let mut want = Mat::zeros(m, n);
+                kernel::gemm_nn_into_with(scalar, &a, &b, &mut want, false);
+                for &kern in &variants[1..] {
+                    let mut got = Mat::zeros(m, n);
+                    kernel::gemm_nn_into_with(kern, &a, &b, &mut got, false);
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "{} != scalar at {m}x{k}x{n}",
+                        kern.name
+                    );
+                }
+            }
+        }
+    }
+    // transpose packing paths and the accumulate flag on one adversarial
+    // shape (ragged in every dimension, k straddles KC)
+    let (m, k, n) = (13, 257, 11);
+    let a = Mat::random_uniform(m, k, -1.0, 1.0, &mut rng);
+    let b = Mat::random_uniform(k, n, -1.0, 1.0, &mut rng);
+    let at = a.transpose();
+    let bt = b.transpose();
+    let seed = Mat::random_uniform(m, n, -1.0, 1.0, &mut rng);
+    type TransposeRun = fn(&'static dispatch::KernelDesc, &Mat, &Mat, &mut Mat);
+    for &kern in &variants[1..] {
+        for (tag, run) in
+            [("tn", dyn_tn as TransposeRun), ("nt", dyn_nt), ("tt", dyn_tt)]
+        {
+            let (lhs, rhs) = match tag {
+                "tn" => (&at, &b),
+                "nt" => (&a, &bt),
+                _ => (&at, &bt),
+            };
+            let mut want = Mat::zeros(m, n);
+            run(scalar, lhs, rhs, &mut want);
+            let mut got = Mat::zeros(m, n);
+            run(kern, lhs, rhs, &mut got);
+            assert_eq!(got.as_slice(), want.as_slice(), "{} {tag} != scalar", kern.name);
+        }
+        // accumulate=true adds onto identical seeds → still bitwise
+        let mut want = seed.clone();
+        kernel::gemm_nn_into_with(scalar, &a, &b, &mut want, true);
+        let mut got = seed.clone();
+        kernel::gemm_nn_into_with(kern, &a, &b, &mut got, true);
+        assert_eq!(got.as_slice(), want.as_slice(), "{} accumulate != scalar", kern.name);
+    }
+}
+
+fn dyn_tn(kern: &'static dispatch::KernelDesc, a: &Mat, b: &Mat, c: &mut Mat) {
+    kernel::gemm_tn_into_with(kern, a, b, c);
+}
+fn dyn_nt(kern: &'static dispatch::KernelDesc, a: &Mat, b: &Mat, c: &mut Mat) {
+    kernel::gemm_nt_into_with(kern, a, b, c);
+}
+fn dyn_tt(kern: &'static dispatch::KernelDesc, a: &Mat, b: &Mat, c: &mut Mat) {
+    kernel::gemm_tt_into_with(kern, a, b, c);
+}
+
+/// The half-precision GEMM widens A on pack; that must be bitwise equal
+/// (per variant) to widening A up front and running the f32 path, and
+/// within quantization tolerance of the unquantized result.
+#[test]
+fn half_gemm_is_widen_on_pack_exact_and_within_quantization_tolerance() {
+    let variants = dispatch::variants();
+    let scalar = variants[0];
+    let mut rng = Rng::new(911);
+    let (m, k, n) = (33, 29, 21);
+    let a = Mat::random_uniform(m, k, -1.0, 1.0, &mut rng);
+    let b = Mat::random_uniform(k, n, -1.0, 1.0, &mut rng);
+    let b_tn = Mat::random_uniform(m, n, -1.0, 1.0, &mut rng);
+    let mut f32_ref = Mat::zeros(m, n);
+    kernel::gemm_nn_into_with(scalar, &a, &b, &mut f32_ref, false);
+    for (dtype, tol) in [(DType::F16, 2e-2f32), (DType::Bf16, 1.5e-1)] {
+        let ah = HalfMat::from_f32(&a, dtype);
+        let aw = ah.to_f32();
+        // the bitwise reference: scalar f32 GEMM on the pre-widened A
+        let mut want = Mat::zeros(m, n);
+        kernel::gemm_nn_into_with(scalar, &aw, &b, &mut want, false);
+        let mut want_tn = Mat::zeros(k, n);
+        kernel::gemm_tn_into_with(scalar, &aw, &b_tn, &mut want_tn);
+        for &kern in &variants {
+            let mut got = Mat::zeros(m, n);
+            kernel::gemm_nn_half_into_with(kern, &ah, &b, &mut got, false);
+            assert_eq!(
+                got.as_slice(),
+                want.as_slice(),
+                "{} half nn != widened f32 ({:?})",
+                kern.name,
+                dtype
+            );
+            let mut got_tn = Mat::zeros(k, n);
+            kernel::gemm_tn_half_into_with(kern, &ah, &b_tn, &mut got_tn);
+            assert_eq!(
+                got_tn.as_slice(),
+                want_tn.as_slice(),
+                "{} half tn != widened f32 ({:?})",
+                kern.name,
+                dtype
+            );
+            // and close to the unquantized f32 answer
+            assert_close(got.as_slice(), f32_ref.as_slice(), tol);
+        }
+    }
+}
+
+/// `gram_into` routes the mirrored lower triangle through the packed
+/// path without allocating: once the thread-local pack scratch is warm,
+/// repeated calls never resize it.
+#[test]
+fn gram_steady_state_performs_no_pack_allocations() {
+    let mut rng = Rng::new(912);
+    let a = Mat::random_uniform(200, 24, -1.0, 1.0, &mut rng);
+    let mut g = Mat::zeros(24, 24);
+    // warm the thread-local pack scratch (counter is per-thread, and the
+    // test harness gives this test its own thread)
+    kernel::gram_into(&a, &mut g);
+    kernel::gram_into(&a, &mut g);
+    let warm = kernel::pack_resize_count();
+    for _ in 0..5 {
+        kernel::gram_into(&a, &mut g);
+    }
+    assert_eq!(
+        kernel::pack_resize_count(),
+        warm,
+        "steady-state gram_into must not grow the pack scratch"
+    );
+    // still exactly symmetric and correct
+    for i in 0..24 {
+        for j in 0..24 {
+            assert_eq!(g[(i, j)], g[(j, i)]);
+        }
+    }
+    let want = naive(24, 200, 24, |i, p| a[(p, i)], |p, j| a[(p, j)]);
+    assert_close(g.as_slice(), want.as_slice(), 2e-3);
+}
+
+/// End-to-end precision acceptance: the same corpus ingested as f16
+/// dense shards factorizes to the same relative error as the f32 store
+/// (within 1e-3) — MU iterations stay f32, only the resident tile bytes
+/// are halved.
+#[test]
+fn half_precision_corpus_factorizes_to_the_same_rel_error() {
+    use drescal::engine::DatasetSpec;
+    use drescal::store::{ingest_triples_file, IngestOptions};
+
+    let dir = std::env::temp_dir()
+        .join(format!("drescal_kernel_plane_half_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let input = dir.join("kg.tsv");
+    let mut rng = Rng::new(913);
+    let (n, m) = (24usize, 2usize);
+    let mut text = String::new();
+    for i in 0..n {
+        text.push_str(&format!("e{i}\tr{}\te{}\n", i % m, (i + 1) % n));
+    }
+    for _ in 0..400 {
+        text.push_str(&format!(
+            "e{}\tr{}\te{}\t{:.3}\n",
+            rng.below(n),
+            rng.below(m),
+            rng.below(n),
+            0.1 + rng.uniform_f32()
+        ));
+    }
+    std::fs::write(&input, text).unwrap();
+
+    let factorize = |dtype: DType| {
+        let out = dir.join(format!("corpus_{}", dtype.as_str()));
+        let report = ingest_triples_file(
+            &input,
+            &out,
+            &IngestOptions {
+                grid: 1,
+                dense: true,
+                dtype,
+                source: input.display().to_string(),
+            },
+        )
+        .unwrap();
+        let mut engine = Engine::new(EngineConfig::new(1)).unwrap();
+        let data = engine
+            .load_dataset(DatasetSpec::from_manifest_path(&report.manifest_path).unwrap())
+            .unwrap();
+        engine.factorize(data, &RescalOptions::new(4, 30), 42).unwrap().rel_error
+    };
+    let e32 = factorize(DType::F32);
+    let e16 = factorize(DType::F16);
+    assert!(
+        (e32 - e16).abs() <= 1e-3,
+        "f32 rel_error {e32} vs f16 rel_error {e16} drifted past 1e-3"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -65,7 +65,7 @@ fn ingest(dir: &Path, input: &Path, tag: &str, grid: usize, dense: bool) -> Stor
     let report = store::ingest_triples_file(
         input,
         &out,
-        &IngestOptions { grid, dense, source: input.display().to_string() },
+        &IngestOptions { grid, dense, source: input.display().to_string(), ..IngestOptions::default() },
     )
     .unwrap();
     StoreManifest::load(&report.manifest_path).unwrap()
