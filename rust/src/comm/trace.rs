@@ -15,9 +15,10 @@
 //! ([`Trace::timeline_snapshot`]) is what rank 0 gathers from the whole
 //! cluster and `--trace-out` exports as a Chrome trace.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::obs::{self, Recorder};
+use crate::obs::{self, LiveHub, Recorder};
 
 /// Operation categories matching the paper's breakdown plots.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -96,16 +97,39 @@ pub struct Trace {
     events: Vec<TraceEvent>,
     enabled: bool,
     recorder: Recorder,
+    /// Rank 0 on the leader carries the live hub; everyone else `None`.
+    hub: Option<Arc<LiveHub>>,
+    /// How many recorder spans have already been flushed to the leader.
+    flush_cursor: u64,
 }
 
 impl Trace {
     pub fn new() -> Self {
-        Trace { events: Vec::new(), enabled: true, recorder: Recorder::new() }
+        Trace {
+            events: Vec::new(),
+            enabled: true,
+            recorder: Recorder::new(),
+            hub: None,
+            flush_cursor: 0,
+        }
     }
 
     /// A trace that drops all events (hot-path zero overhead mode).
     pub fn disabled() -> Self {
-        Trace { events: Vec::new(), enabled: false, recorder: Recorder::disabled() }
+        Trace {
+            events: Vec::new(),
+            enabled: false,
+            recorder: Recorder::disabled(),
+            hub: None,
+            flush_cursor: 0,
+        }
+    }
+
+    /// Attach the leader's live hub: [`Trace::iteration_boundary`] on
+    /// this trace will feed gathered span deltas and progress events
+    /// into it. Only rank 0 of the leader process gets one.
+    pub fn set_hub(&mut self, hub: Arc<LiveHub>) {
+        self.hub = Some(hub);
     }
 
     /// Charge a span to the embedded timeline recorder.
@@ -189,6 +213,50 @@ impl Trace {
     /// Snapshot the timeline ring for the cross-process gather.
     pub fn timeline_snapshot(&self, rank: usize) -> obs::RankTimeline {
         self.recorder.snapshot(rank)
+    }
+
+    /// Streaming telemetry flush at an MU iteration boundary. Every rank
+    /// ships the spans recorded since its last flush to member 0 of
+    /// `world` (one `KIND_TELEMETRY` frame per rank on the TCP backend);
+    /// on the leader the gathered deltas land in the live hub together
+    /// with one structured progress event, so `/progress` and `/trace`
+    /// are current mid-job and a crashed worker's pre-flush spans
+    /// survive into the final artifact.
+    ///
+    /// This is a collective: every member of `world` must call it at the
+    /// same iteration (the trace flag rides the cluster welcome, so the
+    /// cadence is uniform across ranks). No-op when the recorder is off.
+    pub fn iteration_boundary(
+        &mut self,
+        world: &crate::comm::Group,
+        iter: u32,
+        rel_error: f32,
+        err_fresh: bool,
+    ) -> crate::comm::CommResult<()> {
+        if !self.recorder.enabled() {
+            return Ok(());
+        }
+        let delta = self.recorder.snapshot_since(world.rank, self.flush_cursor);
+        self.flush_cursor = self.recorder.total_pushed();
+        let payload = obs::timeline_to_bytes(&delta);
+        let gathered = world.gather_bytes_to_root(&payload)?;
+        if let (Some(payloads), Some(hub)) = (gathered, self.hub.as_ref()) {
+            let mut rank0_delta = obs::RankTimeline::default();
+            for (rank, bytes) in payloads.iter().enumerate() {
+                let t = obs::timeline_from_bytes(rank, bytes).map_err(|e| {
+                    crate::comm::CommError::Protocol {
+                        reason: format!("telemetry flush decode (rank {rank}): {e}"),
+                    }
+                })?;
+                if rank == 0 {
+                    rank0_delta = t.clone();
+                }
+                hub.absorb(t);
+            }
+            let wire_bytes = self.comm_totals().0 as u64;
+            hub.on_iteration(iter, rel_error, err_fresh, wire_bytes, &rank0_delta);
+        }
+        Ok(())
     }
 
     /// Record an event with a known duration (used when replaying modeled

@@ -416,6 +416,17 @@ pub struct TraceSummaryCmd {
     pub input: String,
 }
 
+/// `drescal monitor <addr>` — poll a running leader's status endpoint
+/// (`--status-port`) and render one live row per MU iteration, with a
+/// final convergence/watchdog summary when the job completes.
+#[derive(Clone, Debug)]
+pub struct MonitorCmd {
+    /// Leader status address, `host:port` (positional or `--addr`).
+    pub addr: String,
+    /// Poll interval in milliseconds.
+    pub interval_ms: u64,
+}
+
 /// One fully-validated CLI invocation.
 pub enum Command {
     Run(FactorizeCmd),
@@ -431,6 +442,7 @@ pub enum Command {
     Ingest(IngestCmd),
     Tune(TuneCmd),
     TraceSummary(TraceSummaryCmd),
+    Monitor(MonitorCmd),
     Help,
 }
 
@@ -464,17 +476,18 @@ const EXPORT_FLAGS: &[&str] = &[
 const QUERY_FLAGS: &[&str] = &["config", "model", "s", "o", "r", "top", "json", "family"];
 const SERVE_BENCH_FLAGS: &[&str] = &[
     "config", "p", "backend", "artifacts", "trace", "n", "m", "k", "iters", "queries",
-    "batch", "top", "seed", "cache-bytes",
+    "batch", "top", "seed", "cache-bytes", "status-port",
 ];
 const INGEST_FLAGS: &[&str] = &["config", "input", "out", "grid", "dense", "dtype", "json"];
 const TUNE_FLAGS: &[&str] = &["config", "out", "quick", "json"];
 const TRAIN_FLAGS: &[&str] = &[
     "config", "data", "n", "m", "k-true", "density", "seed", "trace", "trace-out", "k",
     "iters", "json", "workers", "listen", "port-file", "comm-timeout-ms",
-    "max-replacements", "model",
+    "max-replacements", "model", "status-port",
 ];
 const WORKER_FLAGS: &[&str] = &["config", "connect"];
 const TRACE_SUMMARY_FLAGS: &[&str] = &["config", "input"];
+const MONITOR_FLAGS: &[&str] = &["config", "addr", "interval-ms"];
 
 impl RunConfig {
     /// Parse + validate a full command line (after the binary name),
@@ -487,6 +500,12 @@ impl RunConfig {
             && argv.get(1).map(|a| !a.starts_with("--")).unwrap_or(false)
         {
             argv.insert(1, "--input".to_string());
+        }
+        // `monitor` likewise: `drescal monitor 127.0.0.1:8650` ≡ `--addr ...`
+        if argv.first().map(String::as_str) == Some("monitor")
+            && argv.get(1).map(|a| !a.starts_with("--")).unwrap_or(false)
+        {
+            argv.insert(1, "--addr".to_string());
         }
         let mut args = Args::parse(argv)?;
         // only flags the user typed are checked against the allowlist; a
@@ -714,13 +733,18 @@ impl RunConfig {
                     max_replacements: args.get_u64("max-replacements", 1)? as u32,
                     port_file: args.get("port-file").map(PathBuf::from),
                 };
+                let status_port = status_port_flag(&args)?;
                 let engine = EngineConfig {
                     p,
                     backend: BackendSpec::Native,
-                    // --trace-out needs span recording on every rank
-                    trace: args.get_bool("trace") || args.get("trace-out").is_some(),
+                    // --trace-out needs span recording on every rank, and
+                    // --status-port needs the per-iteration telemetry flush
+                    trace: args.get_bool("trace")
+                        || args.get("trace-out").is_some()
+                        || status_port.is_some(),
                     transport: TransportKind::TcpLeader(cluster),
                     model: model_kind(&args, "model")?,
+                    status_port,
                     ..Default::default()
                 };
                 Command::Train(TrainCmd {
@@ -750,6 +774,20 @@ impl RunConfig {
                     .to_string();
                 Command::TraceSummary(TraceSummaryCmd { input })
             }
+            "monitor" => {
+                check_known_flags(&args.subcommand, &cli_flags, MONITOR_FLAGS)?;
+                let addr = args
+                    .get("addr")
+                    .ok_or_else(|| {
+                        err!("monitor needs a status address: drescal monitor 127.0.0.1:8650")
+                    })?
+                    .to_string();
+                let interval_ms = args.get_u64("interval-ms", 250)?;
+                if interval_ms == 0 {
+                    bail!("--interval-ms must be >= 1");
+                }
+                Command::Monitor(MonitorCmd { addr, interval_ms })
+            }
             "help" | "--help" | "-h" => Command::Help,
             other => bail!("unknown subcommand '{other}' — try `drescal help`"),
         };
@@ -776,18 +814,35 @@ fn dtype_flag(args: &Args) -> Result<DType> {
 }
 
 /// Typed engine configuration: grid size (perfect-square-checked), backend
-/// spec, opt-in tracing (`--trace`, implied by `--trace-out`).
+/// spec, opt-in tracing (`--trace`, implied by `--trace-out` and
+/// `--status-port` — the live endpoint needs spans to serve).
 fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let status_port = status_port_flag(args)?;
     let cfg = EngineConfig {
         p: args.get_usize("p", 4)?,
         backend: args.backend()?,
-        trace: args.get_bool("trace") || args.get("trace-out").is_some(),
+        trace: args.get_bool("trace")
+            || args.get("trace-out").is_some()
+            || status_port.is_some(),
         // resident-tile memory budget; 0 (the default) = unbounded
         dataset_cache_bytes: args.get_usize("cache-bytes", 0)?,
         transport: TransportKind::InProcess,
+        status_port,
+        ..Default::default()
     };
     cfg.validate().context("--p")?;
     Ok(cfg)
+}
+
+/// `--status-port N` (0 = ephemeral; absent = no status endpoint).
+fn status_port_flag(args: &Args) -> Result<Option<u16>> {
+    match args.get("status-port") {
+        None => Ok(None),
+        Some(s) => s
+            .parse::<u16>()
+            .map(Some)
+            .map_err(|_| err!("--status-port expects a port 0-65535 (0 = ephemeral), got '{s}'")),
+    }
 }
 
 /// The model family under `--model` (or `--family` on subcommands where
@@ -1462,6 +1517,47 @@ mod tests {
         }
         let e = RunConfig::from_args(argv("trace-summary")).unwrap_err();
         assert!(e.to_string().contains("trace file"), "{e}");
+    }
+
+    #[test]
+    fn monitor_takes_a_positional_addr() {
+        let cfg = RunConfig::from_args(argv("monitor 127.0.0.1:8650")).unwrap();
+        match cfg.command {
+            Command::Monitor(cmd) => {
+                assert_eq!(cmd.addr, "127.0.0.1:8650");
+                assert_eq!(cmd.interval_ms, 250);
+            }
+            _ => panic!("expected monitor command"),
+        }
+        let cfg =
+            RunConfig::from_args(argv("monitor --addr 127.0.0.1:1 --interval-ms 50")).unwrap();
+        match cfg.command {
+            Command::Monitor(cmd) => assert_eq!(cmd.interval_ms, 50),
+            _ => panic!("expected monitor command"),
+        }
+        let e = RunConfig::from_args(argv("monitor")).unwrap_err();
+        assert!(e.to_string().contains("status address"), "{e}");
+    }
+
+    #[test]
+    fn status_port_implies_tracing_and_validates() {
+        let cfg = RunConfig::from_args(argv("train --status-port 0")).unwrap();
+        match cfg.command {
+            Command::Train(cmd) => {
+                assert!(cmd.engine.trace, "--status-port must imply tracing");
+                assert_eq!(cmd.engine.status_port, Some(0));
+            }
+            _ => panic!("expected train command"),
+        }
+        let cfg = RunConfig::from_args(argv("serve-bench --status-port 18650")).unwrap();
+        match cfg.command {
+            Command::ServeBench(cmd) => assert_eq!(cmd.engine.status_port, Some(18650)),
+            _ => panic!("expected serve-bench command"),
+        }
+        let e = RunConfig::from_args(argv("train --status-port notaport")).unwrap_err();
+        assert!(e.to_string().contains("status-port"), "{e}");
+        // run/bench do not accept it (leader endpoint is transport-level)
+        assert!(RunConfig::from_args(argv("bench --status-port 1")).is_err());
     }
 
     #[test]

@@ -161,6 +161,10 @@ pub struct RescalReport {
     /// slice shape (k×k for `rescal`/`logistic`, 1×k for `distmult`) and
     /// how a served model scores triples.
     pub model: ModelKind,
+    /// Typed warnings the convergence watchdog raised during the job
+    /// (stall, NaN/divergence, deadline overrun, transport degradation);
+    /// empty on clean untraced runs.
+    pub watchdog: Vec<crate::obs::WatchdogEvent>,
 }
 
 /// Gathered result of a model-selection job.
@@ -184,6 +188,8 @@ pub struct RescalkReport {
     pub transport_backend: String,
     /// Model family the sweep ran under (every candidate k uses it).
     pub model: ModelKind,
+    /// Typed warnings the convergence watchdog raised during the sweep.
+    pub watchdog: Vec<crate::obs::WatchdogEvent>,
 }
 
 /// Run one distributed non-negative RESCAL factorization on a one-shot

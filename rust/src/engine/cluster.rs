@@ -51,6 +51,7 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::backend::BackendSpec;
@@ -65,6 +66,7 @@ use crate::engine::report;
 use crate::error::{Context as _, Result};
 use crate::json::Json;
 use crate::model_selection::{InitStrategy, RescalkConfig, RescalkResult, SelectionRule};
+use crate::obs::LiveHub;
 use crate::rescal::distributed::DistInit;
 use crate::rescal::{ModelKind, RankResult, RescalOptions};
 use crate::{bail, err};
@@ -142,12 +144,22 @@ pub(crate) struct ClusterPool {
     replacements_used: u32,
     backend_builds: usize,
     tile_builds: usize,
+    /// The live hub (when the engine runs a status endpoint or traced
+    /// job): rank 0's traces feed it, and recoveries are noted on it as
+    /// transport-degradation warnings.
+    hub: Option<Arc<LiveHub>>,
 }
 
 impl ClusterPool {
     /// Bind the control listener, rendezvous with `p - 1` workers, build
     /// the epoch-0 mesh, and construct the leader's rank-0 state.
-    pub fn new(p: usize, backend: &BackendSpec, trace: bool, cfg: ClusterConfig) -> Result<ClusterPool> {
+    pub fn new(
+        p: usize,
+        backend: &BackendSpec,
+        trace: bool,
+        cfg: ClusterConfig,
+        hub: Option<Arc<LiveHub>>,
+    ) -> Result<ClusterPool> {
         let addr = cfg
             .listen
             .to_socket_addrs()
@@ -175,12 +187,14 @@ impl ClusterPool {
                 crate::comm::grid::RankCtx::create_all(1).remove(0),
                 backend,
                 trace,
+                None,
             )?,
             epoch: 0,
             resident: BTreeMap::new(),
             replacements_used: 0,
             backend_builds: 0,
             tile_builds: 0,
+            hub,
         };
         let deadline = Instant::now() + pool.rendezvous_window();
         for rank in 1..p {
@@ -188,7 +202,7 @@ impl ClusterPool {
             pool.workers.push(link);
         }
         let ctx = pool.mesh_handshake()?;
-        pool.state = RankState::new(ctx, backend, trace)?;
+        pool.state = RankState::new(ctx, backend, trace, pool.hub.clone())?;
         // one backend per rank: the leader's plus each worker's
         pool.backend_builds = p;
         eprintln!("drescal: cluster of {p} rank(s) established (epoch 0)");
@@ -477,6 +491,12 @@ impl ClusterPool {
             }
         }
         eprintln!("drescal: cluster recovered at epoch {}", self.epoch);
+        if let Some(hub) = &self.hub {
+            hub.note_transport_degraded(
+                self.epoch,
+                &format!("replaced dead rank(s) {dead:?}, mesh rebuilt"),
+            );
+        }
         Ok(())
     }
 
@@ -606,7 +626,7 @@ pub fn run_worker(connect: &str) -> Result<()> {
                 match &mut state {
                     // first mesh: build the rank state (backend, empty
                     // tile cache, workspace arena) exactly once
-                    None => state = Some(RankState::new(ctx, &BackendSpec::Native, trace)?),
+                    None => state = Some(RankState::new(ctx, &BackendSpec::Native, trace, None)?),
                     // rebuild: tiles and warm workspace survive, only
                     // the communicators change
                     Some(s) => s.set_ctx(ctx),

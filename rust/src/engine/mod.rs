@@ -103,6 +103,7 @@ use crate::coordinator::{JobData, RescalReport, RescalkReport};
 use crate::err;
 use crate::error::Result;
 use crate::model_selection::{InitStrategy, RescalkConfig};
+use crate::obs;
 use crate::rescal::distributed::DistInit;
 use crate::rescal::{ModelKind, RescalOptions};
 use crate::simulate::{exascale, Machine};
@@ -151,6 +152,13 @@ pub struct EngineConfig {
     /// any job that doesn't pin its own): the paper's Gaussian RESCAL
     /// rule by default. CLI: `--model`.
     pub model: ModelKind,
+    /// When set, the engine runs a live HTTP status endpoint on
+    /// `127.0.0.1:<port>` (0 binds an ephemeral port; see
+    /// [`Engine::status_addr`]) serving `/healthz`, `/metrics`,
+    /// `/progress`, and `/trace` from the live hub. Implies nothing
+    /// about tracing by itself, but the CLI turns tracing on with it so
+    /// the routes have spans to serve. CLI: `--status-port`.
+    pub status_port: Option<u16>,
 }
 
 impl Default for EngineConfig {
@@ -162,6 +170,7 @@ impl Default for EngineConfig {
             dataset_cache_bytes: 0,
             transport: TransportKind::InProcess,
             model: ModelKind::Rescal,
+            status_port: None,
         }
     }
 }
@@ -197,6 +206,12 @@ impl EngineConfig {
     /// Select the model family (default: Gaussian RESCAL).
     pub fn with_model(mut self, model: ModelKind) -> Self {
         self.model = model;
+        self
+    }
+
+    /// Serve the live status endpoint on this port (0 = ephemeral).
+    pub fn with_status_port(mut self, port: u16) -> Self {
+        self.status_port = Some(port);
         self
     }
 
@@ -363,6 +378,12 @@ pub struct Engine {
     tile_evictions: usize,
     next_dataset_id: u64,
     jobs_completed: usize,
+    /// The live observability hub (present when tracing or a status
+    /// endpoint is configured): rank 0 feeds it at iteration boundaries.
+    hub: Option<Arc<obs::LiveHub>>,
+    /// The HTTP status endpoint, kept alive (and serving) for the
+    /// engine's lifetime; shut down on drop.
+    status: Option<obs::StatusServer>,
 }
 
 impl Engine {
@@ -371,9 +392,27 @@ impl Engine {
     /// or an unconstructible backend.
     pub fn new(cfg: EngineConfig) -> Result<Engine> {
         cfg.validate()?;
+        // The hub exists whenever something can feed or read it: a
+        // traced run flushes spans into it, a status endpoint serves it.
+        let hub = if cfg.trace || cfg.status_port.is_some() {
+            Some(Arc::new(obs::LiveHub::new()))
+        } else {
+            None
+        };
+        let status = match (cfg.status_port, &hub) {
+            (Some(port), Some(hub)) => {
+                let server = obs::StatusServer::start(port, Arc::clone(hub))?;
+                eprintln!(
+                    "drescal: status endpoint on http://{} (/healthz /metrics /progress /trace)",
+                    server.addr()
+                );
+                Some(server)
+            }
+            _ => None,
+        };
         let pool = match &cfg.transport {
             TransportKind::InProcess => {
-                PoolImpl::Local(pool::RankPool::spawn(cfg.p, &cfg.backend, cfg.trace)?)
+                PoolImpl::Local(pool::RankPool::spawn(cfg.p, &cfg.backend, cfg.trace, hub.clone())?)
             }
             TransportKind::TcpLeader(cluster_cfg) => {
                 if !matches!(cfg.backend, BackendSpec::Native) {
@@ -387,6 +426,7 @@ impl Engine {
                     &cfg.backend,
                     cfg.trace,
                     cluster_cfg.clone(),
+                    hub.clone(),
                 )?)
             }
         };
@@ -402,12 +442,20 @@ impl Engine {
             tile_evictions: 0,
             next_dataset_id: 0,
             jobs_completed: 0,
+            hub,
+            status,
         })
     }
 
     /// The configuration this engine was built from.
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
+    }
+
+    /// The bound address of the live status endpoint, when one is
+    /// configured (`EngineConfig::status_port`).
+    pub fn status_addr(&self) -> Option<std::net::SocketAddr> {
+        self.status.as_ref().map(obs::StatusServer::addr)
     }
 
     /// Distribute a dataset once: validate the spec on the leader, then
@@ -786,6 +834,11 @@ impl Engine {
         self.ensure_resident(handle.0)?;
         let n = self.datasets[&handle.0].info.n;
         let k = opts.k;
+        if let Some(hub) = &self.hub {
+            hub.job_started("factorize", opts.max_iters as u64);
+            hub.gauge_set("resident_tile_bytes", self.resident_bytes() as f64);
+            hub.gauge_set("workspace_mat_allocs", 0.0);
+        }
         let t0 = Instant::now();
         let outs = self
             .pool
@@ -824,6 +877,7 @@ impl Engine {
         let first = first.ok_or_else(|| err!("factorize job returned no rank results"))?;
         let a = gather_a(&self.grid, n, k, &blocks);
         self.jobs_completed += 1;
+        let watchdog = self.seal_job(&mut timeline, first.rel_error, &workspace);
         Ok(RescalReport {
             a,
             r: first.r.clone(),
@@ -835,7 +889,30 @@ impl Engine {
             workspace,
             transport_backend: self.pool.backend_name().to_string(),
             model,
+            watchdog,
         })
+    }
+
+    /// End-of-job hub bookkeeping: merge the live mirror's orphaned
+    /// timelines (pre-crash spans of workers whose pid never reached the
+    /// final gather) into the exported timeline, stamp final gauges, and
+    /// collect the watchdog warnings for the report.
+    fn seal_job(
+        &self,
+        timeline: &mut Vec<crate::obs::RankTimeline>,
+        rel_error: f32,
+        workspace: &crate::backend::WorkspaceStats,
+    ) -> Vec<crate::obs::WatchdogEvent> {
+        let Some(hub) = &self.hub else {
+            return Vec::new();
+        };
+        if !timeline.is_empty() {
+            let live: std::collections::BTreeSet<u64> = timeline.iter().map(|t| t.pid).collect();
+            timeline.extend(hub.orphan_timelines(&live));
+        }
+        hub.gauge_set("workspace_mat_allocs", workspace.mat_allocs as f64);
+        hub.gauge_set("workspace_mat_reuses", workspace.mat_reuses as f64);
+        hub.finish(rel_error)
     }
 
     fn run_model_select(
@@ -854,6 +931,10 @@ impl Engine {
         let handle = self.resolve(data)?;
         self.ensure_resident(handle.0)?;
         let n = self.datasets[&handle.0].info.n;
+        if let Some(hub) = &self.hub {
+            hub.job_started("model_select", 0);
+            hub.gauge_set("resident_tile_bytes", self.resident_bytes() as f64);
+        }
         let t0 = Instant::now();
         let outs = self
             .pool
@@ -896,6 +977,8 @@ impl Engine {
             });
         let (_, _, first) = &results[0];
         self.jobs_completed += 1;
+        let rel_error = first.scores.last().map(|s| s.rel_error).unwrap_or(f32::NAN);
+        let watchdog = self.seal_job(&mut timeline, rel_error, &workspace);
         Ok(RescalkReport {
             scores: first.scores.clone(),
             k_opt,
@@ -907,6 +990,7 @@ impl Engine {
             workspace,
             transport_backend: self.pool.backend_name().to_string(),
             model,
+            watchdog,
         })
     }
 }

@@ -121,8 +121,15 @@ pub(crate) struct RankPool {
 
 impl RankPool {
     /// Spawn `p` rank threads, each building its backend once. Fails if
-    /// any rank's backend cannot be constructed.
-    pub fn spawn(p: usize, backend: &BackendSpec, trace: bool) -> Result<RankPool> {
+    /// any rank's backend cannot be constructed. `hub` (if any) is
+    /// handed to world rank 0 only — that is the rank whose
+    /// [`Trace::iteration_boundary`] receives the cluster-wide gather.
+    pub fn spawn(
+        p: usize,
+        backend: &BackendSpec,
+        trace: bool,
+        hub: Option<Arc<obs::LiveHub>>,
+    ) -> Result<RankPool> {
         let ctxs = RankCtx::create_all(p);
         let shared = Arc::new(PoolShared::default());
         let mut pending = Vec::with_capacity(p);
@@ -131,10 +138,11 @@ impl RankPool {
             let (out_tx, out_rx) = channel::<RankOut>();
             let spec = backend.clone();
             let shared2 = Arc::clone(&shared);
+            let rank_hub = if ctx.rank == 0 { hub.clone() } else { None };
             let name = format!("drescal-rank-{}", ctx.rank);
             let handle = std::thread::Builder::new()
                 .name(name)
-                .spawn(move || worker_loop(ctx, spec, trace, shared2, job_rx, out_tx))
+                .spawn(move || worker_loop(ctx, spec, trace, rank_hub, shared2, job_rx, out_tx))
                 .map_err(|e| err!("spawning rank thread: {e}"))?;
             pending.push((job_tx, out_rx, handle));
         }
@@ -240,11 +248,20 @@ pub(crate) struct RankState {
     /// so a warm rank's factorizations allocate nothing.
     ws: Workspace,
     trace_enabled: bool,
+    /// The leader's live hub, present on world rank 0 of the leader
+    /// process only; attached to every job's trace so iteration-boundary
+    /// telemetry flushes land in it.
+    hub: Option<Arc<obs::LiveHub>>,
 }
 
 impl RankState {
     /// Build the rank's backend (once) and an empty dataset cache.
-    pub fn new(ctx: RankCtx, spec: &BackendSpec, trace_enabled: bool) -> Result<RankState> {
+    pub fn new(
+        ctx: RankCtx,
+        spec: &BackendSpec,
+        trace_enabled: bool,
+        hub: Option<Arc<obs::LiveHub>>,
+    ) -> Result<RankState> {
         let backend = spec.build()?;
         Ok(RankState {
             ctx,
@@ -252,6 +269,7 @@ impl RankState {
             datasets: HashMap::new(),
             ws: Workspace::new(),
             trace_enabled,
+            hub,
         })
     }
 
@@ -268,6 +286,9 @@ impl RankState {
     /// survives either and serves the next job.
     pub fn step(&mut self, job: RankJob) -> RankOut {
         let mut trace = if self.trace_enabled { Trace::new() } else { Trace::disabled() };
+        if let Some(hub) = &self.hub {
+            trace.set_hub(Arc::clone(hub));
+        }
         match job {
             RankJob::Ping => RankOut::Ping(std::thread::current().id()),
             RankJob::LoadDataset { id, spec, n } => {
@@ -386,11 +407,12 @@ fn worker_loop(
     ctx: RankCtx,
     spec: BackendSpec,
     trace_enabled: bool,
+    hub: Option<Arc<obs::LiveHub>>,
     shared: Arc<PoolShared>,
     jobs: Receiver<RankJob>,
     out: Sender<RankOut>,
 ) {
-    let mut state = match RankState::new(ctx, &spec, trace_enabled) {
+    let mut state = match RankState::new(ctx, &spec, trace_enabled, hub) {
         Ok(s) => {
             shared.backend_builds.fetch_add(1, Ordering::SeqCst);
             if out.send(RankOut::Ready(std::thread::current().id())).is_err() {

@@ -109,6 +109,7 @@ impl Report {
                         r.workspace,
                         &r.transport_backend,
                         &r.timeline,
+                        &r.watchdog,
                     ),
                 );
                 obj.insert("model".to_string(), Json::Str(r.model.as_str().to_string()));
@@ -129,6 +130,7 @@ impl Report {
                         r.workspace,
                         &r.transport_backend,
                         &r.timeline,
+                        &r.watchdog,
                     ),
                 );
                 obj.insert("model".to_string(), Json::Str(r.model.as_str().to_string()));
@@ -164,6 +166,7 @@ impl Report {
                 workspace: workspace_from_json(telemetry_field(v, "workspace")),
                 transport_backend: transport_backend_from_json(v),
                 model: model_from_json(v)?,
+                watchdog: watchdog_from_report_json(v),
             })),
             "model_select" => {
                 let scores = v
@@ -184,6 +187,7 @@ impl Report {
                     workspace: workspace_from_json(telemetry_field(v, "workspace")),
                     transport_backend: transport_backend_from_json(v),
                     model: model_from_json(v)?,
+                    watchdog: watchdog_from_report_json(v),
                 }))
             }
             "simulate" => {
@@ -290,6 +294,7 @@ fn telemetry_to_json(
     workspace: crate::backend::WorkspaceStats,
     backend: &str,
     timeline: &[crate::obs::RankTimeline],
+    watchdog: &[crate::obs::WatchdogEvent],
 ) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("traces".to_string(), traces_to_json(traces));
@@ -300,7 +305,23 @@ fn telemetry_to_json(
         "timeline".to_string(),
         Json::Arr(timeline.iter().map(crate::obs::timeline_to_json).collect()),
     );
+    obj.insert(
+        "watchdog".to_string(),
+        Json::Arr(watchdog.iter().map(crate::obs::WatchdogEvent::to_json).collect()),
+    );
     Json::Obj(obj)
+}
+
+/// Watchdog warnings from the unified telemetry section; absent-tolerant
+/// (pre-live-plane reports carry none) and skips malformed entries
+/// rather than failing the whole report parse.
+fn watchdog_from_report_json(v: &Json) -> Vec<crate::obs::WatchdogEvent> {
+    telemetry_field(v, "watchdog")
+        .and_then(Json::as_arr)
+        .map(|events| {
+            events.iter().filter_map(crate::obs::WatchdogEvent::from_json).collect()
+        })
+        .unwrap_or_default()
 }
 
 /// The kernel-plane context every report carries: which SIMD microkernel

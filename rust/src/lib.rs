@@ -40,12 +40,21 @@
 //! * **serve** — a [`serve::QueryEngine`] answers pointwise and batched
 //!   top-k link-prediction queries from the reloaded artifact (the read
 //!   path that mirrors the engine's write path — see [`serve`]);
-//! * **observe** — every plane feeds the telemetry plane ([`obs`]): a
-//!   per-rank span [`obs::Recorder`] times each collective, GEMM, and
-//!   MU phase (zero overhead and counter-provably zero allocations when
-//!   disabled), remote workers gather their span buffers to the leader
-//!   over the mesh at job end, and `--trace-out` exports the whole
-//!   cluster's timeline as Chrome trace-event JSON for Perfetto, with
+//! * **observe** — every plane feeds the *live* telemetry plane
+//!   ([`obs`]): a per-rank span [`obs::Recorder`] times each collective,
+//!   GEMM, and MU phase (zero overhead and counter-provably zero
+//!   allocations when disabled). Remote workers stream incremental span
+//!   deltas to the leader at every iteration boundary, so the leader's
+//!   [`obs::LiveHub`] is current mid-job and a crashed worker's
+//!   pre-crash spans survive into the final artifact. `--status-port`
+//!   serves the hub over a dependency-free HTTP/1.1 endpoint
+//!   ([`obs::StatusServer`]): `/healthz`, `/metrics` (Prometheus text
+//!   from [`obs::MetricsRegistry`]), `/progress` (per-iteration JSON
+//!   with [`obs::ProgressEvent`] history and [`obs::Watchdog`] warnings
+//!   on stall, NaN/divergence, deadline overrun, and transport
+//!   degradation), and `/trace`; `drescal monitor` renders it live.
+//!   `--trace-out` exports the whole cluster's wall-clock-anchored
+//!   timeline as Chrome trace-event JSON for Perfetto, with
 //!   `drescal trace-summary` printing the paper's §6.3-style per-op
 //!   breakdown from the same file. The serve path records per-query
 //!   latency into log-bucketed [`obs::Histogram`]s (p50/p95/p99).

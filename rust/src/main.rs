@@ -19,6 +19,8 @@
 //! * `bench`        — fixed-shape perf harness, emits `BENCH_rescal.json`
 //!   and diffs it against the previous run (`--max-regression` gates CI)
 //! * `trace-summary` — per-op runtime table from a `--trace-out` file
+//! * `monitor`      — live view of a running leader's `--status-port`
+//!   endpoint: one row per MU iteration plus watchdog warnings
 //!
 //! Synthetic datasets are registered as [`drescal::engine::DatasetSpec`]
 //! and generated **rank-locally** — the leader never materializes the
@@ -36,8 +38,8 @@ use std::collections::BTreeMap;
 use drescal::bench_util;
 use drescal::config::{
     ArtifactsCmd, BenchCmd, Command, ExascaleCmd, ExportCmd, FactorizeCmd, IngestCmd,
-    MachineSpec, ModelSelectCmd, QueryCmd, RunConfig, ServeBenchCmd, TraceSummaryCmd,
-    TrainCmd, TuneCmd,
+    MachineSpec, ModelSelectCmd, MonitorCmd, QueryCmd, RunConfig, ServeBenchCmd,
+    TraceSummaryCmd, TrainCmd, TuneCmd,
 };
 use drescal::coordinator::metrics::RunMetrics;
 use drescal::data::synthetic::SyntheticSpec;
@@ -83,6 +85,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Command::Ingest(cmd) => cmd_ingest(cmd),
         Command::Tune(cmd) => cmd_tune(cmd),
         Command::TraceSummary(cmd) => cmd_trace_summary(cmd),
+        Command::Monitor(cmd) => cmd_monitor(cmd),
         Command::Help => {
             print_help();
             Ok(())
@@ -118,6 +121,9 @@ SUBCOMMANDS
                   --data synthetic|blocks|nations|trade|file:<manifest>
                   --n --m --k-true --density --k --iters --model --seed
                   --trace --trace-out FILE --json
+                  --status-port P    serve /healthz /metrics /progress /trace
+                                     over HTTP while the job runs (0 =
+                                     ephemeral port; implies --trace)
                   (--trace-out gathers spans from every worker process
                   into one cross-process trace file on the leader)
   worker        join a train leader and serve rank jobs until shutdown
@@ -148,6 +154,10 @@ SUBCOMMANDS
   serve-bench   serving-throughput harness on a synthetic model
                   --n --m --k --iters   model shape / training depth
                   --queries Q (2048)  --batch B (64)  --top K (10)
+                  --status-port P    live status endpoint during training
+  monitor       poll a leader's --status-port endpoint and render one
+                live row per MU iteration, plus a final summary:
+                  drescal monitor 127.0.0.1:8650 [--interval-ms MS (250)]
   exascale      replay Fig 13 (11.5TB dense + 9.5EB sparse) via the model
                   --machine cpu|gpu|calibrated
   tune          time the packed-GEMM blocking grid (MC/KC/NC) with the
@@ -224,9 +234,10 @@ fn write_trace_out(path: &str, timeline: &[drescal::obs::RankTimeline]) -> Resul
         .with_context(|| format!("writing trace to {path}"))?;
     let spans: usize = timeline.iter().map(|t| t.spans.len()).sum();
     println!("wrote {spans} spans from {} rank(s) to {path}", timeline.len());
+    let dropped: u64 = timeline.iter().map(|t| t.dropped).sum();
     print!(
         "{}",
-        drescal::obs::format_summary(&drescal::obs::summarize_timelines(timeline))
+        drescal::obs::format_summary(&drescal::obs::summarize_timelines(timeline), dropped)
     );
     Ok(())
 }
@@ -237,8 +248,110 @@ fn cmd_trace_summary(cmd: TraceSummaryCmd) -> Result<()> {
         .with_context(|| format!("reading trace file {}", cmd.input))?;
     let v = Json::parse(&text).map_err(|e| drescal::err!("trace JSON: {e}"))?;
     let rows = drescal::obs::summarize_chrome_trace(&v)?;
-    print!("{}", drescal::obs::format_summary(&rows));
+    let dropped = drescal::obs::chrome_trace_dropped(&v);
+    print!("{}", drescal::obs::format_summary(&rows, dropped));
     Ok(())
+}
+
+/// Poll a running leader's `--status-port` endpoint and render a live
+/// one-row-per-iteration view; on job completion print the convergence
+/// and watchdog summary and exit.
+fn cmd_monitor(cmd: MonitorCmd) -> Result<()> {
+    use std::time::Duration;
+    let timeout = Duration::from_secs(2);
+    // connect window: the leader may still be rendezvousing with its
+    // workers when the monitor starts
+    let mut body = None;
+    for _ in 0..40 {
+        match drescal::obs::http_get(&cmd.addr, "/progress", timeout) {
+            Ok(b) => {
+                body = Some(b);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(250)),
+        }
+    }
+    let mut body = body.ok_or_else(|| {
+        drescal::err!(
+            "no status endpoint at {} after 10s — is the leader running with --status-port?",
+            cmd.addr
+        )
+    })?;
+    println!("monitoring http://{}/progress every {} ms", cmd.addr, cmd.interval_ms);
+    println!(
+        "{:>6} {:>12} {:>12} {:>10} {:>12}",
+        "iter", "rel_error", "delta", "iter ms", "wire MiB"
+    );
+    let mut last_printed: i64 = -1;
+    let mut warned = 0usize;
+    loop {
+        let v = Json::parse(&body).map_err(|e| drescal::err!("bad /progress JSON: {e}"))?;
+        let num = |o: &Json, k: &str| o.get(k).and_then(Json::as_f64);
+        // stale-aware float cell: rel_error/delta are null until the next
+        // --err-every checkpoint refreshes them
+        let cell = |x: Option<f64>| match x {
+            Some(x) => format!("{x:.4}"),
+            None => "-".to_string(),
+        };
+        if let Some(hist) = v.get("history").and_then(Json::as_arr) {
+            for ev in hist {
+                let iter = num(ev, "iter").unwrap_or(-1.0) as i64;
+                if iter <= last_printed {
+                    continue;
+                }
+                last_printed = iter;
+                println!(
+                    "{:>6} {:>12} {:>12} {:>10.1} {:>12.2}",
+                    iter,
+                    cell(num(ev, "rel_error")),
+                    cell(num(ev, "delta")),
+                    num(ev, "iter_ms").unwrap_or(0.0),
+                    num(ev, "wire_bytes").unwrap_or(0.0) / (1024.0 * 1024.0)
+                );
+            }
+        }
+        // surface watchdog warnings as they appear, once each
+        if let Some(warnings) = v.get("warnings").and_then(Json::as_arr) {
+            for w in warnings.iter().skip(warned) {
+                println!(
+                    "  ⚠ [{}] iter {}: {}",
+                    w.get("kind").and_then(Json::as_str).unwrap_or("?"),
+                    num(w, "iter").unwrap_or(0.0) as u64,
+                    w.get("detail").and_then(Json::as_str).unwrap_or("")
+                );
+            }
+            warned = warnings.len();
+        }
+        if v.get("done").and_then(Json::as_bool).unwrap_or(false) {
+            println!(
+                "\njob '{}' done: {} iteration(s) in {}, final rel_error {}, {} transport \
+                 restart(s), {} watchdog warning(s)",
+                v.get("job").and_then(Json::as_str).unwrap_or("?"),
+                last_printed + 1,
+                bench_util::fmt_secs(num(&v, "elapsed_ms").unwrap_or(0.0) / 1e3),
+                cell(num(&v, "rel_error")),
+                num(&v, "restarts").unwrap_or(0.0) as u64,
+                warned
+            );
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(cmd.interval_ms));
+        body = match drescal::obs::http_get(&cmd.addr, "/progress", timeout) {
+            Ok(b) => b,
+            Err(e) => {
+                // the leader exits (and its endpoint with it) as soon as
+                // the job completes — not an error if we saw progress
+                if last_printed >= 0 {
+                    println!(
+                        "\nstatus endpoint at {} closed ({e}); job finished or leader exited",
+                        cmd.addr
+                    );
+                    return Ok(());
+                }
+                return Err(e.context(format!("polling http://{}/progress", cmd.addr)));
+            }
+        };
+    }
 }
 
 /// FNV-1a over the factors' exact f32 bit patterns: two runs print the
@@ -489,6 +602,36 @@ fn cmd_bench(cmd: BenchCmd) -> Result<()> {
             "  traced vs untraced dense factorize: {:.2}x",
             treport.wall_seconds / dense_wall.max(1e-12)
         );
+    }
+
+    // live plane: the same traced factorize with the status endpoint
+    // serving while a poller hammers /metrics and /progress every 10ms —
+    // the row rides the --max-regression gate so endpoint overhead (hub
+    // lock contention on the MU path, per-request allocation storms)
+    // fails CI like a kernel regression would.
+    {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let mut live = Engine::new(EngineConfig::new(4).with_trace(true).with_status_port(0))?;
+        let addr = live.status_addr().expect("status endpoint requested").to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let poller = {
+            let stop = Arc::clone(&stop);
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let timeout = std::time::Duration::from_millis(500);
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = drescal::obs::http_get(&addr, "/metrics", timeout);
+                    let _ = drescal::obs::http_get(&addr, "/progress", timeout);
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+            })
+        };
+        let ldata = live.load_dataset(SyntheticSpec::dense(64, 3, 4, 42))?;
+        let lreport = live.factorize(ldata, &RescalOptions::new(4, iters), 42)?;
+        record("status_endpoint_overhead_dense_g2", lreport.wall_seconds);
+        stop.store(true, Ordering::Relaxed);
+        poller.join().ok();
     }
 
     // model-select, dense and sparse, small sweep

@@ -1,0 +1,351 @@
+//! Post-mortem telemetry artifacts: Chrome trace-event export and the
+//! §6.3-style per-op summary table.
+//!
+//! [`chrome_trace_json`] turns gathered [`RankTimeline`]s into Chrome
+//! trace-event JSON loadable in Perfetto or `chrome://tracing` — one
+//! process row per OS pid, one thread row per rank, with every track
+//! shifted onto a common wall-clock axis via the timelines' epoch
+//! anchors so multi-process (and multi-host) runs line up instead of
+//! all starting at t=0. [`summarize_chrome_trace`] parses such a file
+//! back into the per-op table that `drescal trace-summary` prints via
+//! [`format_summary`].
+
+use std::collections::BTreeMap;
+
+use super::{RankTimeline, NO_ITER};
+use crate::error::{Error, Result};
+use crate::json::Json;
+
+fn jnum(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Export timelines as Chrome trace-event JSON (`ph:"X"` complete
+/// events), loadable in Perfetto or `chrome://tracing`. Track layout:
+/// one process row per OS pid, one thread row per rank. Each track's
+/// timestamps are shifted by its wall-clock epoch anchor relative to the
+/// earliest anchored track, so cross-process tracks align; tracks
+/// without an anchor (`epoch_ms == 0`, pre-anchor artifacts) keep their
+/// raw recorder timestamps. Ring-overflow drop counts ride the
+/// `thread_name` metadata so [`chrome_trace_dropped`] can recover them.
+pub fn chrome_trace_json(timelines: &[RankTimeline]) -> Json {
+    let base_ms = timelines
+        .iter()
+        .filter(|t| t.epoch_ms > 0)
+        .map(|t| t.epoch_ms)
+        .min()
+        .unwrap_or(0);
+    let mut events = Vec::new();
+    let mut pids_seen = std::collections::BTreeSet::new();
+    for t in timelines {
+        // wall-clock skew of this track vs the earliest one, in µs
+        let shift_us = if t.epoch_ms > 0 { (t.epoch_ms - base_ms) as f64 * 1000.0 } else { 0.0 };
+        if pids_seen.insert(t.pid) {
+            events.push(obj(vec![
+                ("ph", jstr("M")),
+                ("name", jstr("process_name")),
+                ("pid", jnum(t.pid as f64)),
+                ("tid", jnum(0.0)),
+                ("args", obj(vec![("name", jstr(&format!("drescal pid {}", t.pid)))])),
+            ]));
+        }
+        events.push(obj(vec![
+            ("ph", jstr("M")),
+            ("name", jstr("thread_name")),
+            ("pid", jnum(t.pid as f64)),
+            ("tid", jnum(t.rank as f64)),
+            (
+                "args",
+                obj(vec![
+                    ("name", jstr(&format!("rank {}", t.rank))),
+                    ("dropped", jnum(t.dropped as f64)),
+                ]),
+            ),
+        ]));
+        for s in &t.spans {
+            let mut args = vec![("bytes", jnum(s.bytes as f64))];
+            if s.iter != NO_ITER {
+                args.push(("iter", jnum(s.iter as f64)));
+            }
+            events.push(obj(vec![
+                ("ph", jstr("X")),
+                ("pid", jnum(t.pid as f64)),
+                ("tid", jnum(t.rank as f64)),
+                ("ts", jnum(s.start_ns as f64 / 1000.0 + shift_us)),
+                ("dur", jnum(s.dur_ns as f64 / 1000.0)),
+                ("cat", jstr(&s.cat)),
+                ("name", jstr(&s.label)),
+                ("args", obj(args)),
+            ]));
+        }
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", jstr("ms")),
+    ])
+}
+
+/// Total ring-overflow span drops recorded in a Chrome trace file (as
+/// written by [`chrome_trace_json`]): summed over the `thread_name`
+/// metadata rows. Pre-anchor traces without the field report 0.
+pub fn chrome_trace_dropped(v: &Json) -> u64 {
+    v.get("traceEvents")
+        .and_then(Json::as_arr)
+        .map(|events| {
+            events
+                .iter()
+                .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+                .filter(|e| e.get("name").and_then(Json::as_str) == Some("thread_name"))
+                .filter_map(|e| e.get("args").and_then(|a| a.get("dropped")).and_then(Json::as_f64))
+                .sum::<f64>() as u64
+        })
+        .unwrap_or(0)
+}
+
+/// One row of the per-op summary table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SummaryRow {
+    pub cat: String,
+    pub name: String,
+    pub count: u64,
+    pub seconds: f64,
+    pub bytes: u64,
+}
+
+/// Aggregate timelines into per-(cat, op) totals, ordered comm-last
+/// within category name order (mirrors the paper's §6.3 rows).
+pub fn summarize_timelines(timelines: &[RankTimeline]) -> Vec<SummaryRow> {
+    let mut rows: BTreeMap<(String, String), (u64, u64, u64)> = BTreeMap::new();
+    for t in timelines {
+        for s in &t.spans {
+            let e = rows.entry((s.cat.clone(), s.label.clone())).or_insert((0, 0, 0));
+            e.0 += 1;
+            e.1 += s.dur_ns;
+            e.2 += s.bytes;
+        }
+    }
+    rows.into_iter()
+        .map(|((cat, name), (count, ns, bytes))| SummaryRow {
+            cat,
+            name,
+            count,
+            seconds: ns as f64 / 1e9,
+            bytes,
+        })
+        .collect()
+}
+
+/// Parse a Chrome trace-event file (as written by [`chrome_trace_json`])
+/// back into summary rows — the `drescal trace-summary` path.
+pub fn summarize_chrome_trace(v: &Json) -> Result<Vec<SummaryRow>> {
+    let events = v
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::msg("not a Chrome trace: missing traceEvents array"))?;
+    let mut rows: BTreeMap<(String, String), (u64, u64, u64)> = BTreeMap::new();
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let cat = e.get("cat").and_then(Json::as_str).unwrap_or("").to_string();
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::msg("trace event without a name"))?
+            .to_string();
+        let dur_us = e.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
+        let bytes = e
+            .get("args")
+            .and_then(|a| a.get("bytes"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as u64;
+        let entry = rows.entry((cat, name)).or_insert((0, 0, 0));
+        entry.0 += 1;
+        entry.1 += (dur_us * 1000.0).round() as u64;
+        entry.2 += bytes;
+    }
+    Ok(rows
+        .into_iter()
+        .map(|((cat, name), (count, ns, bytes))| SummaryRow {
+            cat,
+            name,
+            count,
+            seconds: ns as f64 / 1e9,
+            bytes,
+        })
+        .collect())
+}
+
+/// Format summary rows as the §6.3-style breakdown table. `dropped` is
+/// the number of spans lost to ring overflow across the summarized
+/// timelines; the footer states it next to the sample total so a
+/// truncated summary never silently passes as complete.
+pub fn format_summary(rows: &[SummaryRow], dropped: u64) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "{:<10} {:<20} {:>8} {:>12} {:>14}", "cat", "op", "count", "seconds", "bytes");
+    let mut total_s = 0.0;
+    let mut total_b: u64 = 0;
+    let mut total_n: u64 = 0;
+    for r in rows {
+        total_s += r.seconds;
+        total_b += r.bytes;
+        total_n += r.count;
+        let _ = writeln!(
+            out,
+            "{:<10} {:<20} {:>8} {:>12.4} {:>14}",
+            r.cat, r.name, r.count, r.seconds, r.bytes
+        );
+    }
+    let _ = writeln!(out, "{:<10} {:<20} {:>8} {:>12.4} {:>14}", "total", "", "", total_s, total_b);
+    let _ = writeln!(
+        out,
+        "recorded {total_n} sample(s) in {} row(s); {dropped} span(s) dropped to ring overflow{}",
+        rows.len(),
+        if dropped > 0 { " — rows above undercount" } else { "" }
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::TimelineSpan;
+    use super::*;
+
+    fn spans_for(rank: usize, pid: u64, epoch_ms: u64, spans: Vec<TimelineSpan>) -> RankTimeline {
+        RankTimeline { rank, pid, epoch_ms, spans, dropped: 0 }
+    }
+
+    #[test]
+    fn chrome_export_and_summary_agree() {
+        let timelines = vec![
+            spans_for(
+                0,
+                100,
+                0,
+                vec![
+                    TimelineSpan {
+                        cat: "comm".into(),
+                        label: "row_reduce".into(),
+                        start_ns: 0,
+                        dur_ns: 2_000_000,
+                        bytes: 512,
+                        iter: 0,
+                    },
+                    TimelineSpan {
+                        cat: "compute".into(),
+                        label: "gram_mul".into(),
+                        start_ns: 10,
+                        dur_ns: 1_000_000,
+                        bytes: 0,
+                        iter: 0,
+                    },
+                ],
+            ),
+            spans_for(
+                1,
+                200,
+                0,
+                vec![TimelineSpan {
+                    cat: "comm".into(),
+                    label: "row_reduce".into(),
+                    start_ns: 0,
+                    dur_ns: 3_000_000,
+                    bytes: 256,
+                    iter: 0,
+                }],
+            ),
+        ];
+        let trace = chrome_trace_json(&timelines);
+        // must parse back from its own serialization
+        let parsed = Json::parse(&trace.to_string()).unwrap();
+        let from_file = summarize_chrome_trace(&parsed).unwrap();
+        let direct = summarize_timelines(&timelines);
+        assert_eq!(from_file.len(), direct.len());
+        for (a, b) in from_file.iter().zip(&direct) {
+            assert_eq!((a.cat.as_str(), a.name.as_str(), a.count, a.bytes), (
+                b.cat.as_str(),
+                b.name.as_str(),
+                b.count,
+                b.bytes
+            ));
+            assert!((a.seconds - b.seconds).abs() < 1e-6);
+        }
+        let row = from_file.iter().find(|r| r.name == "row_reduce").unwrap();
+        assert_eq!(row.count, 2);
+        assert_eq!(row.bytes, 768);
+        assert!((row.seconds - 0.005).abs() < 1e-6);
+        // metadata rows: one process_name per pid, one thread_name per rank
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let metas = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .count();
+        assert_eq!(metas, 4);
+        let table = format_summary(&from_file, 0);
+        assert!(table.contains("row_reduce"));
+        assert!(table.contains("total"));
+        assert!(table.contains("recorded 3 sample(s)"));
+    }
+
+    #[test]
+    fn epoch_anchors_shift_tracks_onto_a_common_axis() {
+        let span = TimelineSpan {
+            cat: "phase".into(),
+            label: "pack".into(),
+            start_ns: 1_000_000, // 1ms after its recorder epoch
+            dur_ns: 500_000,
+            bytes: 0,
+            iter: 0,
+        };
+        let timelines = vec![
+            spans_for(0, 100, 10_000, vec![span.clone()]),
+            // this process started 250ms later on the wall clock
+            spans_for(1, 200, 10_250, vec![span.clone()]),
+        ];
+        let parsed = Json::parse(&chrome_trace_json(&timelines).to_string()).unwrap();
+        let ts_of = |pid: f64| {
+            parsed
+                .get("traceEvents")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .find(|e| {
+                    e.get("ph").and_then(Json::as_str) == Some("X")
+                        && e.get("pid").and_then(Json::as_f64) == Some(pid)
+                })
+                .and_then(|e| e.get("ts").and_then(Json::as_f64))
+                .unwrap()
+        };
+        assert!((ts_of(100.0) - 1000.0).abs() < 1e-9, "earliest track keeps its timestamps");
+        assert!(
+            (ts_of(200.0) - 251_000.0).abs() < 1e-9,
+            "later track shifts by the wall-clock skew"
+        );
+        // durations (and therefore summaries) are unaffected by the shift
+        let rows = summarize_chrome_trace(&parsed).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!((rows[0].seconds - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dropped_counts_survive_the_chrome_roundtrip() {
+        let mut t = spans_for(0, 100, 0, vec![]);
+        t.dropped = 42;
+        let u = spans_for(1, 100, 0, vec![]);
+        let parsed = Json::parse(&chrome_trace_json(&[t, u]).to_string()).unwrap();
+        assert_eq!(chrome_trace_dropped(&parsed), 42);
+        // and the summary footer names them
+        let table = format_summary(&[], chrome_trace_dropped(&parsed));
+        assert!(table.contains("42 span(s) dropped"));
+        assert!(table.contains("undercount"));
+    }
+}

@@ -1,0 +1,672 @@
+//! Live observability: the leader-side progress hub and the hand-rolled
+//! HTTP/1.1 status endpoint.
+//!
+//! [`LiveHub`] is the in-flight mirror of a running job. Rank 0's
+//! [`Trace`](crate::comm::Trace) feeds it one [`ProgressEvent`] per MU
+//! iteration plus the incremental span deltas every rank ships at
+//! iteration boundaries, so the hub's trace ring is current mid-job —
+//! and a killed worker's pre-crash spans survive into the final
+//! `--trace-out` artifact even though that worker never reaches the
+//! end-of-run gather.
+//!
+//! [`StatusServer`] serves the hub over plain HTTP (no dependencies —
+//! the offline crate set has no hyper, so the protocol is hand-rolled
+//! over `std::net::TcpListener`):
+//!
+//! * `GET /healthz` — liveness, `ok\n`
+//! * `GET /metrics` — Prometheus text exposition
+//! * `GET /progress` — JSON job progress (iter, rel_error, per-phase ns,
+//!   watchdog warnings, recent iteration history)
+//! * `GET /trace` — Chrome trace JSON of the run so far
+//!
+//! `drescal monitor <addr>` and the tests poll these routes via
+//! [`http_get`], a minimal client over `std::net::TcpStream`.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::export::chrome_trace_json;
+use super::watchdog::{Watchdog, WatchdogConfig, WatchdogEvent, WatchdogKind};
+use super::{MetricsRegistry, RankTimeline};
+use crate::error::{Error, Result};
+use crate::json::Json;
+
+/// Most recent iterations kept for `/progress` history and the monitor.
+const HISTORY_CAP: usize = 1024;
+/// Per-(rank, pid) span cap in the hub's live mirror; overflow drains
+/// the oldest spans into that entry's `dropped` count.
+const HUB_SPAN_CAP: usize = 262_144;
+
+/// One structured event per MU iteration, emitted from rank 0.
+#[derive(Clone, Debug, Default)]
+pub struct ProgressEvent {
+    pub iter: u32,
+    /// Most recent relative error (carried forward between checks).
+    pub rel_error: f32,
+    /// Improvement over the previous fresh reading (0 when stale).
+    pub delta: f32,
+    /// Whether `rel_error` was recomputed on this iteration.
+    pub err_fresh: bool,
+    /// Sum of rank 0's per-phase span time this iteration.
+    pub iter_ns: u64,
+    /// Cumulative wire bytes moved by rank 0's collectives so far.
+    pub wire_bytes: u64,
+    /// Wall-clock ms since the job started.
+    pub elapsed_ms: u64,
+    /// Rank 0's per-phase ns for this iteration, by phase label.
+    pub phase_ns: BTreeMap<String, u64>,
+}
+
+struct HubState {
+    job: String,
+    iters_total: u64,
+    started: Instant,
+    timelines: BTreeMap<(usize, u64), RankTimeline>,
+    history: VecDeque<ProgressEvent>,
+    latest: Option<ProgressEvent>,
+    last_fresh_err: Option<f32>,
+    phase_totals: BTreeMap<String, u64>,
+    watchdog: Watchdog,
+    warnings: Vec<WatchdogEvent>,
+    metrics: MetricsRegistry,
+    done: bool,
+    restarts: u64,
+}
+
+impl HubState {
+    fn new() -> Self {
+        HubState {
+            job: String::new(),
+            iters_total: 0,
+            started: Instant::now(),
+            timelines: BTreeMap::new(),
+            history: VecDeque::new(),
+            latest: None,
+            last_fresh_err: None,
+            phase_totals: BTreeMap::new(),
+            watchdog: Watchdog::new(WatchdogConfig::default()),
+            warnings: Vec::new(),
+            metrics: MetricsRegistry::new(),
+            done: false,
+            restarts: 0,
+        }
+    }
+}
+
+/// The leader's shared, thread-safe view of the running job. The engine
+/// owns one behind an [`Arc`]; rank 0's trace writes into it at
+/// iteration boundaries and the [`StatusServer`] reads from it on every
+/// request.
+pub struct LiveHub {
+    inner: Mutex<HubState>,
+}
+
+impl std::fmt::Debug for LiveHub {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LiveHub").finish_non_exhaustive()
+    }
+}
+
+impl Default for LiveHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LiveHub {
+    pub fn new() -> Self {
+        LiveHub { inner: Mutex::new(HubState::new()) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HubState> {
+        // a poisoned hub just means a panicking reader; the data is
+        // plain-old-data and still safe to serve
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Reset job-scoped state at job start. Crash recovery reruns
+    /// happen *within* one job, so pre-crash spans absorbed before a
+    /// recovery survive until the next `job_started`.
+    pub fn job_started(&self, label: &str, iters_total: u64) {
+        let mut s = self.lock();
+        *s = HubState::new();
+        s.job = label.to_string();
+        s.iters_total = iters_total;
+    }
+
+    /// Merge an incremental span delta from one rank into the live
+    /// mirror. Entries are keyed by (rank, pid) so a replacement worker
+    /// on the same rank accumulates separately from the process it
+    /// replaced — that is what keeps a dead worker's spans alive.
+    pub fn absorb(&self, t: RankTimeline) {
+        let mut s = self.lock();
+        s.metrics.counter_add("spans", t.spans.len() as u64);
+        s.metrics.counter_add("spans_dropped", t.dropped);
+        let e = s.timelines.entry((t.rank, t.pid)).or_insert_with(|| RankTimeline {
+            rank: t.rank,
+            pid: t.pid,
+            epoch_ms: t.epoch_ms,
+            spans: Vec::new(),
+            dropped: 0,
+        });
+        if e.epoch_ms == 0 {
+            e.epoch_ms = t.epoch_ms;
+        }
+        e.dropped += t.dropped;
+        e.spans.extend(t.spans);
+        if e.spans.len() > HUB_SPAN_CAP {
+            let excess = e.spans.len() - HUB_SPAN_CAP;
+            e.spans.drain(..excess);
+            e.dropped += excess as u64;
+        }
+    }
+
+    /// Record one MU iteration. `rank0_delta` is rank 0's span delta for
+    /// the boundary (its `phase` spans for `iter` yield the per-phase
+    /// breakdown); `wire_bytes` is rank 0's cumulative collective
+    /// traffic. Runs the watchdog and updates `/metrics` series.
+    pub fn on_iteration(
+        &self,
+        iter: u32,
+        rel_error: f32,
+        err_fresh: bool,
+        wire_bytes: u64,
+        rank0_delta: &RankTimeline,
+    ) {
+        let mut s = self.lock();
+        let mut phase_ns: BTreeMap<String, u64> = BTreeMap::new();
+        for span in &rank0_delta.spans {
+            if span.cat == "phase" && span.iter == iter {
+                *phase_ns.entry(span.label.clone()).or_insert(0) += span.dur_ns;
+            }
+        }
+        let iter_ns: u64 = phase_ns.values().sum();
+        for (label, ns) in &phase_ns {
+            *s.phase_totals.entry(label.clone()).or_insert(0) += ns;
+        }
+        let delta = if err_fresh {
+            let d = s.last_fresh_err.map(|prev| prev - rel_error).unwrap_or(0.0);
+            s.last_fresh_err = Some(rel_error);
+            d
+        } else {
+            0.0
+        };
+        let event = ProgressEvent {
+            iter,
+            rel_error,
+            delta,
+            err_fresh,
+            iter_ns,
+            wire_bytes,
+            elapsed_ms: s.started.elapsed().as_millis() as u64,
+            phase_ns,
+        };
+        let fired = s.watchdog.observe(&event);
+        s.warnings.extend(fired);
+        s.metrics.counter_add("iterations", 1);
+        s.metrics.histogram_record_ns("iteration", iter_ns);
+        if rel_error.is_finite() {
+            s.metrics.gauge_set("rel_error", rel_error as f64);
+        }
+        if s.history.len() >= HISTORY_CAP {
+            s.history.pop_front();
+        }
+        s.history.push_back(event.clone());
+        s.latest = Some(event);
+    }
+
+    /// A worker died and the transport recovered (reconnect, replacement
+    /// epoch). Counted on `/metrics` and raised as a typed warning.
+    pub fn note_transport_degraded(&self, epoch: u64, detail: &str) {
+        let mut s = self.lock();
+        s.restarts += 1;
+        let iter = s.latest.as_ref().map(|e| e.iter).unwrap_or(0);
+        s.warnings.push(WatchdogEvent {
+            kind: WatchdogKind::TransportDegraded,
+            iter,
+            detail: format!("epoch {epoch}: {detail}"),
+        });
+    }
+
+    /// Mark the job finished and return the accumulated warnings for
+    /// `Report.telemetry`.
+    pub fn finish(&self, rel_error: f32) -> Vec<WatchdogEvent> {
+        let mut s = self.lock();
+        s.done = true;
+        if rel_error.is_finite() {
+            s.metrics.gauge_set("rel_error", rel_error as f64);
+        }
+        s.warnings.clone()
+    }
+
+    /// Warnings raised so far (without marking the job done).
+    pub fn warnings_snapshot(&self) -> Vec<WatchdogEvent> {
+        self.lock().warnings.clone()
+    }
+
+    /// Timelines in the live mirror whose pid is absent from
+    /// `live_pids` — the pre-crash spans of workers that died before the
+    /// end-of-run gather. The engine appends these to `--trace-out`.
+    pub fn orphan_timelines(&self, live_pids: &BTreeSet<u64>) -> Vec<RankTimeline> {
+        self.lock()
+            .timelines
+            .values()
+            .filter(|t| !live_pids.contains(&t.pid))
+            .cloned()
+            .collect()
+    }
+
+    /// Engine-level gauge passthrough (workspace bytes, resident tiles,
+    /// transport backend facts) onto `/metrics`.
+    pub fn gauge_set(&self, name: &'static str, value: f64) {
+        self.lock().metrics.gauge_set(name, value);
+    }
+
+    /// Engine-level counter passthrough onto `/metrics`.
+    pub fn counter_add(&self, name: &'static str, delta: u64) {
+        self.lock().metrics.counter_add(name, delta);
+    }
+
+    /// The `/progress` document.
+    pub fn progress_json(&self) -> Json {
+        let s = self.lock();
+        let mut o = BTreeMap::new();
+        o.insert("job".to_string(), Json::Str(s.job.clone()));
+        o.insert("iters_total".to_string(), Json::Num(s.iters_total as f64));
+        o.insert("done".to_string(), Json::Bool(s.done));
+        o.insert("restarts".to_string(), Json::Num(s.restarts as f64));
+        o.insert("elapsed_ms".to_string(), Json::Num(s.started.elapsed().as_millis() as f64));
+        if let Some(e) = &s.latest {
+            o.insert("iter".to_string(), Json::Num(e.iter as f64));
+            o.insert("rel_error".to_string(), fin(e.rel_error as f64));
+            o.insert("delta".to_string(), fin(e.delta as f64));
+            o.insert("iter_ms".to_string(), Json::Num(e.iter_ns as f64 / 1e6));
+            o.insert("wire_bytes".to_string(), Json::Num(e.wire_bytes as f64));
+        }
+        let phases: BTreeMap<String, Json> = s
+            .phase_totals
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect();
+        o.insert("phase_ns".to_string(), Json::Obj(phases));
+        o.insert(
+            "warnings".to_string(),
+            Json::Arr(s.warnings.iter().map(|w| w.to_json()).collect()),
+        );
+        o.insert("history".to_string(), Json::Arr(s.history.iter().map(event_json).collect()));
+        Json::Obj(o)
+    }
+
+    /// The `/trace` document: Chrome trace JSON of everything absorbed
+    /// so far.
+    pub fn trace_json(&self) -> Json {
+        let s = self.lock();
+        let timelines: Vec<RankTimeline> = s.timelines.values().cloned().collect();
+        chrome_trace_json(&timelines)
+    }
+
+    /// The `/metrics` document: Prometheus text exposition.
+    pub fn metrics_text(&self) -> String {
+        use std::fmt::Write as _;
+        let s = self.lock();
+        let mut out = String::new();
+        let _ = writeln!(out, "# TYPE drescal_job_done gauge");
+        let _ = writeln!(out, "drescal_job_done {}", if s.done { 1 } else { 0 });
+        let _ = writeln!(out, "# TYPE drescal_transport_restarts_total counter");
+        let _ = writeln!(out, "drescal_transport_restarts_total {}", s.restarts);
+        if let Some(e) = &s.latest {
+            let _ = writeln!(out, "# TYPE drescal_wire_bytes_total counter");
+            let _ = writeln!(out, "drescal_wire_bytes_total {}", e.wire_bytes);
+        }
+        let mut kinds: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for w in &s.warnings {
+            *kinds.entry(w.kind.as_str()).or_insert(0) += 1;
+        }
+        let _ = writeln!(out, "# TYPE drescal_watchdog_events_total counter");
+        if kinds.is_empty() {
+            let _ = writeln!(out, "drescal_watchdog_events_total 0");
+        }
+        for (kind, n) in &kinds {
+            let _ = writeln!(out, "drescal_watchdog_events_total{{kind=\"{kind}\"}} {n}");
+        }
+        let _ = writeln!(out, "# TYPE drescal_phase_seconds_total counter");
+        for (phase, ns) in &s.phase_totals {
+            let _ = writeln!(
+                out,
+                "drescal_phase_seconds_total{{phase=\"{}\"}} {}",
+                sanitize(phase),
+                *ns as f64 / 1e9
+            );
+        }
+        if s.phase_totals.is_empty() {
+            let _ = writeln!(out, "drescal_phase_seconds_total{{phase=\"none\"}} 0");
+        }
+        let kernel = crate::tensor::kernel::dispatch::active();
+        let _ = writeln!(out, "# TYPE drescal_kernel_info gauge");
+        let _ = writeln!(
+            out,
+            "drescal_kernel_info{{variant=\"{}\",isa=\"{}\"}} 1",
+            kernel.name, kernel.isa
+        );
+        for (name, v) in s.metrics.counters() {
+            let name = sanitize(name);
+            let _ = writeln!(out, "# TYPE drescal_{name}_total counter");
+            let _ = writeln!(out, "drescal_{name}_total {v}");
+        }
+        for (name, v) in s.metrics.gauges() {
+            let name = sanitize(name);
+            let _ = writeln!(out, "# TYPE drescal_{name} gauge");
+            let _ = writeln!(out, "drescal_{name} {v}");
+        }
+        for (name, h) in s.metrics.histograms() {
+            let name = sanitize(name);
+            let _ = writeln!(out, "# TYPE drescal_{name}_seconds summary");
+            for q in [0.5, 0.95, 0.99] {
+                let _ = writeln!(
+                    out,
+                    "drescal_{name}_seconds{{quantile=\"{q}\"}} {}",
+                    h.quantile_ns(q) as f64 / 1e9
+                );
+            }
+            let _ = writeln!(out, "drescal_{name}_seconds_sum {}", h.sum_ns() as f64 / 1e9);
+            let _ = writeln!(out, "drescal_{name}_seconds_count {}", h.count());
+        }
+        out
+    }
+}
+
+fn fin(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn event_json(e: &ProgressEvent) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("iter".to_string(), Json::Num(e.iter as f64));
+    o.insert("rel_error".to_string(), fin(e.rel_error as f64));
+    o.insert("delta".to_string(), fin(e.delta as f64));
+    o.insert("err_fresh".to_string(), Json::Bool(e.err_fresh));
+    o.insert("iter_ms".to_string(), Json::Num(e.iter_ns as f64 / 1e6));
+    o.insert("wire_bytes".to_string(), Json::Num(e.wire_bytes as f64));
+    o.insert("elapsed_ms".to_string(), Json::Num(e.elapsed_ms as f64));
+    Json::Obj(o)
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+}
+
+/// The leader's status endpoint: a minimal HTTP/1.1 server over
+/// `std::net::TcpListener`. Binds `127.0.0.1:<port>` (port 0 picks an
+/// ephemeral port — the bound address is in [`addr`](Self::addr)),
+/// serves connections serially on one named thread, and shuts down on
+/// [`Drop`].
+pub struct StatusServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for StatusServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StatusServer").field("addr", &self.addr).finish_non_exhaustive()
+    }
+}
+
+impl StatusServer {
+    pub fn start(port: u16, hub: Arc<LiveHub>) -> Result<StatusServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .map_err(|e| Error::msg(e).context(format!("binding status endpoint on port {port}")))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("drescal-status".to_string())
+            .spawn(move || serve_loop(listener, hub, thread_stop))
+            .map_err(|e| Error::msg(e).context("spawning status endpoint thread"))?;
+        Ok(StatusServer { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for StatusServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_loop(listener: TcpListener, hub: Arc<LiveHub>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // status traffic is light and the handlers are cheap:
+                // serial handling keeps the server to one thread
+                let _ = handle_conn(stream, &hub);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, hub: &LiveHub) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") && buf.len() < 8192 {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    let request = String::from_utf8_lossy(&buf);
+    let mut parts = request.lines().next().unwrap_or("").split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, content_type, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "only GET is supported\n".to_string())
+    } else {
+        match path {
+            "/healthz" => ("200 OK", "text/plain", "ok\n".to_string()),
+            "/metrics" => ("200 OK", "text/plain; version=0.0.4", hub.metrics_text()),
+            "/progress" => ("200 OK", "application/json", hub.progress_json().to_string()),
+            "/trace" => ("200 OK", "application/json", hub.trace_json().to_string()),
+            _ => ("404 Not Found", "text/plain", format!("no route {path}\n")),
+        }
+    };
+    let header = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Minimal HTTP GET against a status endpoint; returns the body of a
+/// 200 response. Used by `drescal monitor` and the tests.
+pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<String> {
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| Error::msg(e).context(format!("resolving {addr}")))?
+        .next()
+        .ok_or_else(|| Error::msg(format!("{addr} resolved to no address")))?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout)
+        .map_err(|e| Error::msg(e).context(format!("connecting to {addr}")))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut response = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                response.extend_from_slice(&chunk[..n]);
+                if response.len() > 64 * 1024 * 1024 {
+                    return Err(Error::msg("status response exceeds 64MB"));
+                }
+            }
+            Err(e) => return Err(Error::msg(e).context(format!("reading {addr}{path}"))),
+        }
+    }
+    let text = String::from_utf8_lossy(&response);
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| Error::msg(format!("malformed HTTP response from {addr}{path}")))?;
+    let status_line = head.lines().next().unwrap_or("");
+    if !status_line.contains(" 200 ") {
+        return Err(Error::msg(format!("{addr}{path} returned {status_line}")));
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::TimelineSpan;
+    use super::*;
+
+    fn delta_for(iter: u32, phases: &[(&str, u64)]) -> RankTimeline {
+        RankTimeline {
+            rank: 0,
+            pid: 100,
+            epoch_ms: 1_000,
+            spans: phases
+                .iter()
+                .map(|(label, ns)| TimelineSpan {
+                    cat: "phase".to_string(),
+                    label: label.to_string(),
+                    start_ns: 0,
+                    dur_ns: *ns,
+                    bytes: 0,
+                    iter,
+                })
+                .collect(),
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn hub_tracks_iterations_and_phase_totals() {
+        let hub = LiveHub::new();
+        hub.job_started("factorize", 10);
+        hub.on_iteration(0, 0.5, true, 128, &delta_for(0, &[("pack", 10), ("gemm", 30)]));
+        hub.on_iteration(1, 0.4, true, 256, &delta_for(1, &[("pack", 10), ("gemm", 40)]));
+        let p = hub.progress_json();
+        assert_eq!(p.get("iter").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(p.get("iters_total").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(p.get("wire_bytes").and_then(Json::as_f64), Some(256.0));
+        assert_eq!(p.get("done").and_then(Json::as_bool), Some(false));
+        let phases = p.get("phase_ns").unwrap();
+        assert_eq!(phases.get("pack").and_then(Json::as_f64), Some(20.0));
+        assert_eq!(phases.get("gemm").and_then(Json::as_f64), Some(70.0));
+        assert_eq!(p.get("history").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+        // delta is prev - cur on fresh readings
+        let hist = p.get("history").and_then(Json::as_arr).unwrap();
+        let d = hist[1].get("delta").and_then(Json::as_f64).unwrap();
+        assert!((d - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn metrics_exposition_has_the_advertised_families() {
+        let hub = LiveHub::new();
+        hub.job_started("factorize", 5);
+        hub.on_iteration(0, 0.5, true, 64, &delta_for(0, &[("mu_update", 1_000_000)]));
+        hub.gauge_set("workspace_bytes", 4096.0);
+        let text = hub.metrics_text();
+        for family in [
+            "# TYPE drescal_iterations_total counter",
+            "drescal_iterations_total 1",
+            "# TYPE drescal_rel_error gauge",
+            "drescal_phase_seconds_total{phase=\"mu_update\"}",
+            "drescal_kernel_info{variant=",
+            "drescal_workspace_bytes 4096",
+            "drescal_iteration_seconds_count 1",
+            "drescal_wire_bytes_total 64",
+        ] {
+            assert!(text.contains(family), "missing {family:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn absorbed_timelines_survive_for_dead_pids() {
+        let hub = LiveHub::new();
+        hub.job_started("factorize", 5);
+        hub.absorb(delta_for(0, &[("pack", 10)]));
+        let mut other = delta_for(0, &[("pack", 20)]);
+        other.rank = 1;
+        other.pid = 200;
+        hub.absorb(other);
+        // pid 200 died: only rank 0's pid survives to the final gather
+        let live: BTreeSet<u64> = [100u64].into_iter().collect();
+        let orphans = hub.orphan_timelines(&live);
+        assert_eq!(orphans.len(), 1);
+        assert_eq!(orphans[0].pid, 200);
+        assert_eq!(orphans[0].spans.len(), 1);
+        // and the /trace document carries both processes
+        let trace = hub.trace_json().to_string();
+        assert!(trace.contains("\"pid\":100"));
+        assert!(trace.contains("\"pid\":200"));
+    }
+
+    #[test]
+    fn transport_degradation_and_watchdog_reach_progress_and_metrics() {
+        let hub = LiveHub::new();
+        hub.job_started("factorize", 5);
+        hub.note_transport_degraded(1, "worker 2 replaced");
+        let p = hub.progress_json();
+        assert_eq!(p.get("restarts").and_then(Json::as_f64), Some(1.0));
+        let warnings = p.get("warnings").and_then(Json::as_arr).unwrap();
+        assert_eq!(warnings.len(), 1);
+        assert_eq!(warnings[0].get("kind").and_then(Json::as_str), Some("transport_degraded"));
+        let text = hub.metrics_text();
+        assert!(text.contains("drescal_transport_restarts_total 1"));
+        assert!(text.contains("drescal_watchdog_events_total{kind=\"transport_degraded\"} 1"));
+        assert_eq!(hub.finish(0.1).len(), 1);
+        assert_eq!(
+            hub.progress_json().get("done").and_then(Json::as_bool),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn status_server_serves_all_routes_over_real_http() {
+        let hub = Arc::new(LiveHub::new());
+        hub.job_started("factorize", 3);
+        hub.on_iteration(0, 0.5, true, 32, &delta_for(0, &[("pack", 5)]));
+        hub.absorb(delta_for(0, &[("pack", 5)]));
+        let server = StatusServer::start(0, Arc::clone(&hub)).unwrap();
+        let addr = server.addr().to_string();
+        let t = Duration::from_secs(5);
+        assert_eq!(http_get(&addr, "/healthz", t).unwrap(), "ok\n");
+        let metrics = http_get(&addr, "/metrics", t).unwrap();
+        assert!(metrics.contains("drescal_iterations_total 1"));
+        let progress = Json::parse(&http_get(&addr, "/progress", t).unwrap()).unwrap();
+        assert_eq!(progress.get("iter").and_then(Json::as_f64), Some(0.0));
+        let trace = Json::parse(&http_get(&addr, "/trace", t).unwrap()).unwrap();
+        assert!(trace.get("traceEvents").and_then(Json::as_arr).is_some());
+        assert!(http_get(&addr, "/nope", t).is_err());
+        drop(server);
+        // server is down after drop
+        assert!(http_get(&addr, "/healthz", Duration::from_millis(200)).is_err());
+    }
+}

@@ -1,29 +1,33 @@
-//! Unified telemetry plane: structured spans, metrics, and trace export.
+//! Unified telemetry plane: structured spans, metrics, live status, export.
 //!
 //! The paper's efficacy argument is observational — §6.3 breaks runtime
 //! into named per-operation rows averaged over MPI ranks. This module is
 //! the shared substrate behind that breakdown and behind every
-//! performance PR that follows it:
+//! performance PR that follows it. It is split into four layers:
 //!
-//! * [`Recorder`] — a per-rank span recorder on a monotonic clock.
-//!   Spans carry a category (`"compute"`, `"comm"`, `"phase"`, …), a
-//!   static label, a byte count, and the MU iteration they belong to.
-//!   Storage is a preallocated ring (one allocation on first use,
-//!   overwrite-oldest thereafter); a disabled recorder performs **zero**
-//!   heap allocations, which [`alloc_count`] counter-proves.
-//! * [`MetricsRegistry`] — named counters, gauges, and log-bucketed
-//!   latency [`Histogram`]s (exact p50/p95/p99 within bucket
-//!   resolution). The serve plane records per-query latency here.
-//! * [`chrome_trace_json`] — exports a set of [`RankTimeline`]s as
-//!   Chrome trace-event JSON loadable in Perfetto or `chrome://tracing`,
-//!   one track per rank × process; [`summarize_chrome_trace`] parses
-//!   such a file back into the §6.3-style per-op table that
-//!   `drescal trace-summary` prints.
+//! * **this module** — the recording core: [`Recorder`] (a per-rank span
+//!   recorder on a monotonic clock, anchored to a wall-clock epoch so
+//!   cross-host tracks align), the gathered [`RankTimeline`] form with
+//!   its binary/JSON codecs, and [`MetricsRegistry`] with log-bucketed
+//!   [`Histogram`]s. A disabled recorder performs **zero** heap
+//!   allocations, which [`alloc_count`] counter-proves.
+//! * [`export`] — post-mortem artifacts: Chrome trace-event JSON for
+//!   Perfetto ([`chrome_trace_json`]) and the §6.3-style per-op summary
+//!   table ([`summarize_timelines`] / [`format_summary`]).
+//! * [`live`] — the in-flight plane: [`live::LiveHub`] accumulates
+//!   per-iteration progress events and incrementally flushed spans from
+//!   every rank *while the job runs*, and [`live::StatusServer`] serves
+//!   them over a dependency-free HTTP/1.1 endpoint (`/healthz`,
+//!   `/metrics` in Prometheus text exposition, `/progress`, `/trace`).
+//! * [`watchdog`] — typed warnings derived from the progress stream:
+//!   convergence stall, NaN/divergence, per-iteration deadline overrun,
+//!   and transport degradation.
 //!
 //! Remote workers serialize their timelines with [`timeline_to_bytes`]
 //! and ship them to rank 0 over the mesh
-//! ([`crate::comm::Group::gather_bytes_to_root`]) at job end, so one
-//! exported file covers the whole cluster.
+//! ([`crate::comm::Group::gather_bytes_to_root`]) — incrementally at
+//! every iteration boundary (so a killed worker's pre-crash spans
+//! survive into the final artifact) and in full at job end.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -31,6 +35,17 @@ use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::json::Json;
+
+pub mod export;
+pub mod live;
+pub mod watchdog;
+
+pub use export::{
+    chrome_trace_dropped, chrome_trace_json, format_summary, summarize_chrome_trace,
+    summarize_timelines, SummaryRow,
+};
+pub use live::{http_get, LiveHub, ProgressEvent, StatusServer};
+pub use watchdog::{Watchdog, WatchdogConfig, WatchdogEvent, WatchdogKind};
 
 // ---------------------------------------------------------------------------
 // Allocation accounting
@@ -49,6 +64,15 @@ pub fn alloc_count() -> u64 {
 
 fn note_alloc() {
     OBS_ALLOCS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Milliseconds since the Unix epoch — the wall-clock anchor stamped on
+/// every enabled recorder so multi-process traces align in Perfetto.
+fn unix_epoch_ms_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
 }
 
 // ---------------------------------------------------------------------------
@@ -83,6 +107,8 @@ pub const NO_ITER: u32 = u32::MAX;
 pub struct Recorder {
     enabled: bool,
     epoch: Instant,
+    /// Wall clock at `epoch`, for cross-host track alignment.
+    epoch_ms: u64,
     ring: Vec<Span>,
     /// Next write position once the ring is full.
     next: usize,
@@ -101,6 +127,7 @@ impl Recorder {
         Recorder {
             enabled: true,
             epoch: Instant::now(),
+            epoch_ms: unix_epoch_ms_now(),
             ring: Vec::new(),
             next: 0,
             dropped: 0,
@@ -110,7 +137,7 @@ impl Recorder {
 
     /// A recorder that drops everything. Performs no allocation, ever.
     pub fn disabled() -> Self {
-        Recorder { enabled: false, ..Recorder::new() }
+        Recorder { enabled: false, epoch_ms: 0, ..Recorder::new() }
     }
 
     pub fn enabled(&self) -> bool {
@@ -190,6 +217,12 @@ impl Recorder {
         self.ring.is_empty()
     }
 
+    /// Total spans ever pushed (surviving + overwritten) — the cursor
+    /// space for [`Recorder::snapshot_since`] incremental flushes.
+    pub fn total_pushed(&self) -> u64 {
+        self.ring.len() as u64 + self.dropped
+    }
+
     /// Snapshot the ring in chronological order as this rank's timeline.
     pub fn snapshot(&self, rank: usize) -> RankTimeline {
         let mut spans = Vec::with_capacity(self.ring.len());
@@ -205,7 +238,45 @@ impl Recorder {
                 iter: s.iter,
             });
         }
-        RankTimeline { rank, pid: std::process::id() as u64, spans, dropped: self.dropped }
+        RankTimeline {
+            rank,
+            pid: std::process::id() as u64,
+            epoch_ms: self.epoch_ms,
+            spans,
+            dropped: self.dropped,
+        }
+    }
+
+    /// Incremental snapshot: only spans pushed at or after `cursor`
+    /// (a prior [`Recorder::total_pushed`] value). The returned
+    /// timeline's `dropped` counts spans that were overwritten before
+    /// this flush could ship them.
+    pub fn snapshot_since(&self, rank: usize, cursor: u64) -> RankTimeline {
+        let total = self.total_pushed();
+        let first = cursor.min(total).max(self.dropped);
+        let mut spans = Vec::with_capacity((total - first) as usize);
+        if self.enabled {
+            note_alloc();
+        }
+        for j in first..total {
+            let slot = (self.next + (j - self.dropped) as usize) % self.ring.len().max(1);
+            let s = &self.ring[slot];
+            spans.push(TimelineSpan {
+                cat: s.cat.to_string(),
+                label: s.label.to_string(),
+                start_ns: s.start_ns,
+                dur_ns: s.dur_ns,
+                bytes: s.bytes,
+                iter: s.iter,
+            });
+        }
+        RankTimeline {
+            rank,
+            pid: std::process::id() as u64,
+            epoch_ms: self.epoch_ms,
+            spans,
+            dropped: first.saturating_sub(cursor.min(total)),
+        }
     }
 }
 
@@ -230,12 +301,16 @@ pub struct TimelineSpan {
 pub struct RankTimeline {
     pub rank: usize,
     pub pid: u64,
+    /// Wall clock (ms since Unix epoch) at this rank's recorder epoch —
+    /// the anchor that aligns multi-process tracks; 0 when unknown
+    /// (pre-anchor artifacts).
+    pub epoch_ms: u64,
     pub spans: Vec<TimelineSpan>,
     /// Spans lost to ring overflow.
     pub dropped: u64,
 }
 
-const TIMELINE_MAGIC: u32 = 0x4F42_5331; // "OBS1"
+const TIMELINE_MAGIC: u32 = 0x4F42_5332; // "OBS2" (v2 added the epoch anchor)
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -287,10 +362,11 @@ impl<'a> ByteReader<'a> {
 
 /// Serialize a timeline to the compact binary form shipped over the mesh.
 pub fn timeline_to_bytes(t: &RankTimeline) -> Vec<u8> {
-    let mut out = Vec::with_capacity(32 + t.spans.len() * 48);
+    let mut out = Vec::with_capacity(40 + t.spans.len() * 48);
     note_alloc();
     put_u32(&mut out, TIMELINE_MAGIC);
     put_u64(&mut out, t.pid);
+    put_u64(&mut out, t.epoch_ms);
     put_u64(&mut out, t.dropped);
     put_u32(&mut out, t.spans.len() as u32);
     for s in &t.spans {
@@ -313,6 +389,7 @@ pub fn timeline_from_bytes(rank: usize, bytes: &[u8]) -> Result<RankTimeline> {
         return Err(Error::msg(format!("bad telemetry magic {magic:#x}")));
     }
     let pid = r.u64()?;
+    let epoch_ms = r.u64()?;
     let dropped = r.u64()?;
     let count = r.u32()? as usize;
     let mut spans = Vec::with_capacity(count);
@@ -326,7 +403,7 @@ pub fn timeline_from_bytes(rank: usize, bytes: &[u8]) -> Result<RankTimeline> {
         let iter = r.u32()?;
         spans.push(TimelineSpan { cat, label, start_ns, dur_ns, bytes, iter });
     }
-    Ok(RankTimeline { rank, pid, spans, dropped })
+    Ok(RankTimeline { rank, pid, epoch_ms, spans, dropped })
 }
 
 /// Timeline → JSON (the report's `telemetry.timeline` section). Spans
@@ -350,15 +427,18 @@ pub fn timeline_to_json(t: &RankTimeline) -> Json {
     let mut o = BTreeMap::new();
     o.insert("rank".to_string(), Json::Num(t.rank as f64));
     o.insert("pid".to_string(), Json::Num(t.pid as f64));
+    o.insert("epoch_ms".to_string(), Json::Num(t.epoch_ms as f64));
     o.insert("dropped".to_string(), Json::Num(t.dropped as f64));
     o.insert("spans".to_string(), Json::Arr(spans));
     Json::Obj(o)
 }
 
-/// Inverse of [`timeline_to_json`].
+/// Inverse of [`timeline_to_json`]. Reports written before the epoch
+/// anchor existed load with `epoch_ms = 0`.
 pub fn timeline_from_json(v: &Json) -> Result<RankTimeline> {
     let rank = v.get("rank").and_then(Json::as_usize).unwrap_or(0);
     let pid = v.get("pid").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let epoch_ms = v.get("epoch_ms").and_then(Json::as_f64).unwrap_or(0.0) as u64;
     let dropped = v.get("dropped").and_then(Json::as_f64).unwrap_or(0.0) as u64;
     let mut spans = Vec::new();
     for s in v.get("spans").and_then(Json::as_arr).unwrap_or(&[]) {
@@ -375,7 +455,7 @@ pub fn timeline_from_json(v: &Json) -> Result<RankTimeline> {
             iter: a[5].as_f64().unwrap_or(NO_ITER as f64) as u32,
         });
     }
-    Ok(RankTimeline { rank, pid, spans, dropped })
+    Ok(RankTimeline { rank, pid, epoch_ms, spans, dropped })
 }
 
 // ---------------------------------------------------------------------------
@@ -422,6 +502,10 @@ impl Histogram {
         self.count
     }
 
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
     pub fn mean_ns(&self) -> u64 {
         if self.count == 0 {
             0
@@ -457,7 +541,8 @@ impl Histogram {
 }
 
 /// Named counters, gauges, and histograms. Plain `BTreeMap`s — the
-/// registry lives on one thread next to whatever it instruments.
+/// registry lives on one thread next to whatever it instruments (the
+/// live hub wraps one in a mutex for the status endpoint).
 #[derive(Clone, Debug, Default)]
 pub struct MetricsRegistry {
     counters: BTreeMap<&'static str, u64>,
@@ -497,164 +582,14 @@ impl MetricsRegistry {
     pub fn counters(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
         self.counters.iter().map(|(k, v)| (*k, *v))
     }
-}
 
-// ---------------------------------------------------------------------------
-// Chrome trace-event export + §6.3 summary
-// ---------------------------------------------------------------------------
-
-fn jnum(n: f64) -> Json {
-    Json::Num(n)
-}
-
-fn jstr(s: &str) -> Json {
-    Json::Str(s.to_string())
-}
-
-fn obj(fields: Vec<(&str, Json)>) -> Json {
-    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
-}
-
-/// Export timelines as Chrome trace-event JSON (`ph:"X"` complete
-/// events), loadable in Perfetto or `chrome://tracing`. Track layout:
-/// one process row per OS pid, one thread row per rank. Timestamps are
-/// per-rank recorder epochs, so cross-track skew is bounded by job
-/// start-up, not wall-clock drift.
-pub fn chrome_trace_json(timelines: &[RankTimeline]) -> Json {
-    let mut events = Vec::new();
-    let mut pids_seen = std::collections::BTreeSet::new();
-    for t in timelines {
-        if pids_seen.insert(t.pid) {
-            events.push(obj(vec![
-                ("ph", jstr("M")),
-                ("name", jstr("process_name")),
-                ("pid", jnum(t.pid as f64)),
-                ("tid", jnum(0.0)),
-                ("args", obj(vec![("name", jstr(&format!("drescal pid {}", t.pid)))])),
-            ]));
-        }
-        events.push(obj(vec![
-            ("ph", jstr("M")),
-            ("name", jstr("thread_name")),
-            ("pid", jnum(t.pid as f64)),
-            ("tid", jnum(t.rank as f64)),
-            ("args", obj(vec![("name", jstr(&format!("rank {}", t.rank)))])),
-        ]));
-        for s in &t.spans {
-            let mut args = vec![("bytes", jnum(s.bytes as f64))];
-            if s.iter != NO_ITER {
-                args.push(("iter", jnum(s.iter as f64)));
-            }
-            events.push(obj(vec![
-                ("ph", jstr("X")),
-                ("pid", jnum(t.pid as f64)),
-                ("tid", jnum(t.rank as f64)),
-                ("ts", jnum(s.start_ns as f64 / 1000.0)),
-                ("dur", jnum(s.dur_ns as f64 / 1000.0)),
-                ("cat", jstr(&s.cat)),
-                ("name", jstr(&s.label)),
-                ("args", obj(args)),
-            ]));
-        }
+    pub fn gauges(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.gauges.iter().map(|(k, v)| (*k, *v))
     }
-    obj(vec![
-        ("traceEvents", Json::Arr(events)),
-        ("displayTimeUnit", jstr("ms")),
-    ])
-}
 
-/// One row of the per-op summary table.
-#[derive(Clone, Debug, PartialEq)]
-pub struct SummaryRow {
-    pub cat: String,
-    pub name: String,
-    pub count: u64,
-    pub seconds: f64,
-    pub bytes: u64,
-}
-
-/// Aggregate timelines into per-(cat, op) totals, ordered comm-last
-/// within category name order (mirrors the paper's §6.3 rows).
-pub fn summarize_timelines(timelines: &[RankTimeline]) -> Vec<SummaryRow> {
-    let mut rows: BTreeMap<(String, String), (u64, u64, u64)> = BTreeMap::new();
-    for t in timelines {
-        for s in &t.spans {
-            let e = rows.entry((s.cat.clone(), s.label.clone())).or_insert((0, 0, 0));
-            e.0 += 1;
-            e.1 += s.dur_ns;
-            e.2 += s.bytes;
-        }
+    pub fn histograms(&self) -> impl Iterator<Item = (&'static str, &Histogram)> + '_ {
+        self.histograms.iter().map(|(k, v)| (*k, v))
     }
-    rows.into_iter()
-        .map(|((cat, name), (count, ns, bytes))| SummaryRow {
-            cat,
-            name,
-            count,
-            seconds: ns as f64 / 1e9,
-            bytes,
-        })
-        .collect()
-}
-
-/// Parse a Chrome trace-event file (as written by [`chrome_trace_json`])
-/// back into summary rows — the `drescal trace-summary` path.
-pub fn summarize_chrome_trace(v: &Json) -> Result<Vec<SummaryRow>> {
-    let events = v
-        .get("traceEvents")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| Error::msg("not a Chrome trace: missing traceEvents array"))?;
-    let mut rows: BTreeMap<(String, String), (u64, u64, u64)> = BTreeMap::new();
-    for e in events {
-        if e.get("ph").and_then(Json::as_str) != Some("X") {
-            continue;
-        }
-        let cat = e.get("cat").and_then(Json::as_str).unwrap_or("").to_string();
-        let name = e
-            .get("name")
-            .and_then(Json::as_str)
-            .ok_or_else(|| Error::msg("trace event without a name"))?
-            .to_string();
-        let dur_us = e.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
-        let bytes = e
-            .get("args")
-            .and_then(|a| a.get("bytes"))
-            .and_then(Json::as_f64)
-            .unwrap_or(0.0) as u64;
-        let entry = rows.entry((cat, name)).or_insert((0, 0, 0));
-        entry.0 += 1;
-        entry.1 += (dur_us * 1000.0).round() as u64;
-        entry.2 += bytes;
-    }
-    Ok(rows
-        .into_iter()
-        .map(|((cat, name), (count, ns, bytes))| SummaryRow {
-            cat,
-            name,
-            count,
-            seconds: ns as f64 / 1e9,
-            bytes,
-        })
-        .collect())
-}
-
-/// Format summary rows as the §6.3-style breakdown table.
-pub fn format_summary(rows: &[SummaryRow]) -> String {
-    use std::fmt::Write as _;
-    let mut out = String::new();
-    let _ = writeln!(out, "{:<10} {:<20} {:>8} {:>12} {:>14}", "cat", "op", "count", "seconds", "bytes");
-    let mut total_s = 0.0;
-    let mut total_b: u64 = 0;
-    for r in rows {
-        total_s += r.seconds;
-        total_b += r.bytes;
-        let _ = writeln!(
-            out,
-            "{:<10} {:<20} {:>8} {:>12.4} {:>14}",
-            r.cat, r.name, r.count, r.seconds, r.bytes
-        );
-    }
-    let _ = writeln!(out, "{:<10} {:<20} {:>8} {:>12.4} {:>14}", "total", "", "", total_s, total_b);
-    out
 }
 
 #[cfg(test)]
@@ -695,10 +630,62 @@ mod tests {
     }
 
     #[test]
+    fn enabled_recorder_is_wall_clock_anchored() {
+        let r = Recorder::new();
+        assert!(r.snapshot(0).epoch_ms > 0, "enabled recorders must carry an epoch anchor");
+        assert_eq!(Recorder::disabled().epoch_ms, 0);
+    }
+
+    #[test]
+    fn incremental_snapshots_partition_the_ring() {
+        let mut r = Recorder::new();
+        let span = |i: u64| Span {
+            cat: "phase",
+            label: "pack",
+            start_ns: i,
+            dur_ns: 1,
+            bytes: 0,
+            iter: 0,
+        };
+        for i in 0..5u64 {
+            r.push(span(i));
+        }
+        let cursor = r.total_pushed();
+        let first = r.snapshot_since(0, 0);
+        assert_eq!(first.spans.len(), 5);
+        assert_eq!(first.dropped, 0);
+        // nothing new: empty delta
+        assert!(r.snapshot_since(0, cursor).spans.is_empty());
+        for i in 5..8u64 {
+            r.push(span(i));
+        }
+        let delta = r.snapshot_since(0, cursor);
+        assert_eq!(delta.spans.len(), 3);
+        assert_eq!(delta.spans[0].start_ns, 5);
+        assert_eq!(delta.dropped, 0);
+        assert_eq!(delta.epoch_ms, first.epoch_ms);
+    }
+
+    #[test]
+    fn incremental_snapshot_counts_overwritten_spans_as_dropped() {
+        let mut r = Recorder::new();
+        for i in 0..(RING_CAP as u64 + 10) {
+            r.push(Span { cat: "c", label: "l", start_ns: i, dur_ns: 1, bytes: 0, iter: 0 });
+        }
+        // a cursor taken before the overwrite began: the 10 oldest spans
+        // were lost before this flush, and the delta reports them
+        let delta = r.snapshot_since(0, 0);
+        assert_eq!(delta.dropped, 10);
+        assert_eq!(delta.spans.len(), RING_CAP);
+        assert_eq!(delta.spans.first().unwrap().start_ns, 10);
+    }
+
+    #[test]
     fn timeline_bytes_roundtrip() {
         let t = RankTimeline {
             rank: 3,
             pid: 4242,
+            epoch_ms: 1_700_000_000_123,
             dropped: 7,
             spans: vec![
                 TimelineSpan {
@@ -731,6 +718,7 @@ mod tests {
         let t = RankTimeline {
             rank: 1,
             pid: 77,
+            epoch_ms: 123_456,
             dropped: 0,
             spans: vec![TimelineSpan {
                 cat: "compute".into(),
@@ -744,6 +732,13 @@ mod tests {
         let v = timeline_to_json(&t);
         let parsed = Json::parse(&v.to_string()).unwrap();
         assert_eq!(timeline_from_json(&parsed).unwrap(), t);
+        // pre-anchor reports (no epoch_ms key) still load
+        let mut legacy = v.clone();
+        if let Json::Obj(o) = &mut legacy {
+            o.remove("epoch_ms");
+        }
+        let parsed = Json::parse(&legacy.to_string()).unwrap();
+        assert_eq!(timeline_from_json(&parsed).unwrap().epoch_ms, 0);
     }
 
     #[test]
@@ -777,76 +772,8 @@ mod tests {
         assert_eq!(m.gauge("cache_fill"), Some(0.5));
         assert_eq!(m.histogram("latency").unwrap().count(), 1);
         assert_eq!(m.counters().count(), 1);
-    }
-
-    #[test]
-    fn chrome_export_and_summary_agree() {
-        let timelines = vec![
-            RankTimeline {
-                rank: 0,
-                pid: 100,
-                dropped: 0,
-                spans: vec![
-                    TimelineSpan {
-                        cat: "comm".into(),
-                        label: "row_reduce".into(),
-                        start_ns: 0,
-                        dur_ns: 2_000_000,
-                        bytes: 512,
-                        iter: 0,
-                    },
-                    TimelineSpan {
-                        cat: "compute".into(),
-                        label: "gram_mul".into(),
-                        start_ns: 10,
-                        dur_ns: 1_000_000,
-                        bytes: 0,
-                        iter: 0,
-                    },
-                ],
-            },
-            RankTimeline {
-                rank: 1,
-                pid: 200,
-                dropped: 0,
-                spans: vec![TimelineSpan {
-                    cat: "comm".into(),
-                    label: "row_reduce".into(),
-                    start_ns: 0,
-                    dur_ns: 3_000_000,
-                    bytes: 256,
-                    iter: 0,
-                }],
-            },
-        ];
-        let trace = chrome_trace_json(&timelines);
-        // must parse back from its own serialization
-        let parsed = Json::parse(&trace.to_string()).unwrap();
-        let from_file = summarize_chrome_trace(&parsed).unwrap();
-        let direct = summarize_timelines(&timelines);
-        assert_eq!(from_file.len(), direct.len());
-        for (a, b) in from_file.iter().zip(&direct) {
-            assert_eq!((a.cat.as_str(), a.name.as_str(), a.count, a.bytes), (
-                b.cat.as_str(),
-                b.name.as_str(),
-                b.count,
-                b.bytes
-            ));
-            assert!((a.seconds - b.seconds).abs() < 1e-6);
-        }
-        let row = from_file.iter().find(|r| r.name == "row_reduce").unwrap();
-        assert_eq!(row.count, 2);
-        assert_eq!(row.bytes, 768);
-        assert!((row.seconds - 0.005).abs() < 1e-6);
-        // metadata rows: one process_name per pid, one thread_name per rank
-        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
-        let metas = events
-            .iter()
-            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
-            .count();
-        assert_eq!(metas, 4);
-        let table = format_summary(&from_file);
-        assert!(table.contains("row_reduce"));
-        assert!(table.contains("total"));
+        assert_eq!(m.gauges().collect::<Vec<_>>(), vec![("cache_fill", 0.5)]);
+        let hists: Vec<_> = m.histograms().map(|(k, h)| (k, h.count())).collect();
+        assert_eq!(hists, vec![("latency", 1)]);
     }
 }

@@ -1,0 +1,269 @@
+//! Convergence watchdog: typed warnings raised from the live progress
+//! stream.
+//!
+//! The watchdog consumes one [`ProgressEvent`](super::ProgressEvent) per
+//! MU iteration and raises [`WatchdogEvent`]s on convergence stall (no
+//! relative-error improvement over a window), NaN / divergence,
+//! per-iteration deadline overrun, and transport degradation
+//! (reconnects, replacement epochs). Warnings surface both on the
+//! leader's `/progress` route and in `Report.telemetry.watchdog`.
+
+use super::live::ProgressEvent;
+use crate::json::Json;
+
+/// Thresholds for the watchdog. Defaults are deliberately loose: they
+/// flag jobs that are badly wrong, not ones that are merely slow.
+#[derive(Clone, Copy, Debug)]
+pub struct WatchdogConfig {
+    /// Fire a `Stall` after this many fresh error readings without
+    /// improvement over the best seen so far.
+    pub stall_iters: u32,
+    /// Fire a `DeadlineOverrun` when a single iteration exceeds this.
+    pub iter_deadline_ms: u64,
+    /// Fire a `NonFinite` divergence warning when the error grows past
+    /// `best * divergence_factor`.
+    pub divergence_factor: f32,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig { stall_iters: 50, iter_deadline_ms: 30_000, divergence_factor: 10.0 }
+    }
+}
+
+/// What went wrong.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WatchdogKind {
+    /// No rel_error improvement over the configured window.
+    Stall,
+    /// rel_error went NaN/inf, or grew past the divergence factor.
+    NonFinite,
+    /// One iteration blew the per-iteration deadline.
+    DeadlineOverrun,
+    /// The transport lost a worker: reconnect, replacement epoch.
+    TransportDegraded,
+}
+
+impl WatchdogKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WatchdogKind::Stall => "stall",
+            WatchdogKind::NonFinite => "non_finite",
+            WatchdogKind::DeadlineOverrun => "deadline_overrun",
+            WatchdogKind::TransportDegraded => "transport_degraded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WatchdogKind> {
+        match s {
+            "stall" => Some(WatchdogKind::Stall),
+            "non_finite" => Some(WatchdogKind::NonFinite),
+            "deadline_overrun" => Some(WatchdogKind::DeadlineOverrun),
+            "transport_degraded" => Some(WatchdogKind::TransportDegraded),
+            _ => None,
+        }
+    }
+}
+
+/// One typed warning, stamped with the iteration that triggered it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WatchdogEvent {
+    pub kind: WatchdogKind,
+    pub iter: u32,
+    pub detail: String,
+}
+
+impl WatchdogEvent {
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("kind".to_string(), Json::Str(self.kind.as_str().to_string()));
+        o.insert("iter".to_string(), Json::Num(self.iter as f64));
+        o.insert("detail".to_string(), Json::Str(self.detail.clone()));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Option<WatchdogEvent> {
+        Some(WatchdogEvent {
+            kind: WatchdogKind::parse(v.get("kind")?.as_str()?)?,
+            iter: v.get("iter")?.as_f64()? as u32,
+            detail: v.get("detail")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Streaming watchdog state. Feed it one event per iteration via
+/// [`observe`](Watchdog::observe); it returns the warnings (if any)
+/// raised by that event. Stall and non-finite warnings fire once per
+/// episode, not once per iteration, so a stalled job produces one
+/// warning rather than thousands.
+#[derive(Clone, Debug)]
+pub struct Watchdog {
+    cfg: WatchdogConfig,
+    best: f32,
+    since_improve: u32,
+    stall_fired: bool,
+    nonfinite_fired: bool,
+}
+
+impl Watchdog {
+    pub fn new(cfg: WatchdogConfig) -> Self {
+        Watchdog {
+            cfg,
+            best: f32::INFINITY,
+            since_improve: 0,
+            stall_fired: false,
+            nonfinite_fired: false,
+        }
+    }
+
+    pub fn observe(&mut self, ev: &ProgressEvent) -> Vec<WatchdogEvent> {
+        let mut out = Vec::new();
+        if ev.iter_ns > self.cfg.iter_deadline_ms.saturating_mul(1_000_000) {
+            out.push(WatchdogEvent {
+                kind: WatchdogKind::DeadlineOverrun,
+                iter: ev.iter,
+                detail: format!(
+                    "iteration took {:.1}ms (deadline {}ms)",
+                    ev.iter_ns as f64 / 1e6,
+                    self.cfg.iter_deadline_ms
+                ),
+            });
+        }
+        // stall/divergence only make sense on iterations where the
+        // distributed error was actually recomputed
+        if !ev.err_fresh {
+            return out;
+        }
+        if !ev.rel_error.is_finite() {
+            if !self.nonfinite_fired {
+                self.nonfinite_fired = true;
+                out.push(WatchdogEvent {
+                    kind: WatchdogKind::NonFinite,
+                    iter: ev.iter,
+                    detail: format!("rel_error went non-finite ({})", ev.rel_error),
+                });
+            }
+            return out;
+        }
+        self.nonfinite_fired = false;
+        if self.best.is_finite() && ev.rel_error > self.best * self.cfg.divergence_factor {
+            out.push(WatchdogEvent {
+                kind: WatchdogKind::NonFinite,
+                iter: ev.iter,
+                detail: format!(
+                    "diverging: rel_error {} is {:.0}x the best seen ({})",
+                    ev.rel_error,
+                    ev.rel_error / self.best,
+                    self.best
+                ),
+            });
+        }
+        if ev.rel_error < self.best {
+            self.best = ev.rel_error;
+            self.since_improve = 0;
+            self.stall_fired = false;
+        } else {
+            self.since_improve += 1;
+            if self.since_improve >= self.cfg.stall_iters && !self.stall_fired {
+                self.stall_fired = true;
+                out.push(WatchdogEvent {
+                    kind: WatchdogKind::Stall,
+                    iter: ev.iter,
+                    detail: format!(
+                        "no rel_error improvement in {} error checks (best {})",
+                        self.since_improve, self.best
+                    ),
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(iter: u32, rel_error: f32, err_fresh: bool, iter_ns: u64) -> ProgressEvent {
+        ProgressEvent { iter, rel_error, err_fresh, iter_ns, ..ProgressEvent::default() }
+    }
+
+    fn cfg() -> WatchdogConfig {
+        WatchdogConfig { stall_iters: 3, iter_deadline_ms: 10, divergence_factor: 10.0 }
+    }
+
+    #[test]
+    fn stall_fires_once_and_resets_on_improvement() {
+        let mut w = Watchdog::new(cfg());
+        assert!(w.observe(&ev(0, 0.5, true, 0)).is_empty());
+        for i in 1..=2 {
+            assert!(w.observe(&ev(i, 0.5, true, 0)).is_empty());
+        }
+        let fired = w.observe(&ev(3, 0.5, true, 0));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, WatchdogKind::Stall);
+        assert_eq!(fired[0].iter, 3);
+        // already fired: stays quiet while still stalled
+        assert!(w.observe(&ev(4, 0.5, true, 0)).is_empty());
+        // improvement re-arms the stall detector
+        assert!(w.observe(&ev(5, 0.4, true, 0)).is_empty());
+        for i in 6..=8 {
+            assert!(w.observe(&ev(i, 0.4, true, 0)).is_empty());
+        }
+        assert_eq!(w.observe(&ev(9, 0.4, true, 0)).len(), 1);
+    }
+
+    #[test]
+    fn stale_error_readings_do_not_advance_the_stall_clock() {
+        let mut w = Watchdog::new(cfg());
+        w.observe(&ev(0, 0.5, true, 0));
+        for i in 1..100 {
+            assert!(w.observe(&ev(i, 0.5, false, 0)).is_empty());
+        }
+    }
+
+    #[test]
+    fn nan_fires_once_per_episode() {
+        let mut w = Watchdog::new(cfg());
+        w.observe(&ev(0, 0.5, true, 0));
+        let fired = w.observe(&ev(1, f32::NAN, true, 0));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, WatchdogKind::NonFinite);
+        assert!(w.observe(&ev(2, f32::NAN, true, 0)).is_empty());
+        // recovery then a second NaN episode fires again
+        assert!(w.observe(&ev(3, 0.4, true, 0)).is_empty());
+        assert_eq!(w.observe(&ev(4, f32::INFINITY, true, 0)).len(), 1);
+    }
+
+    #[test]
+    fn divergence_past_the_factor_is_flagged() {
+        let mut w = Watchdog::new(cfg());
+        w.observe(&ev(0, 0.1, true, 0));
+        let fired = w.observe(&ev(1, 5.0, true, 0));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, WatchdogKind::NonFinite);
+        assert!(fired[0].detail.contains("diverging"));
+    }
+
+    #[test]
+    fn deadline_overrun_checks_every_iteration() {
+        let mut w = Watchdog::new(cfg());
+        let fired = w.observe(&ev(0, 0.5, false, 11_000_000));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, WatchdogKind::DeadlineOverrun);
+        // fires per offending iteration, fresh error or not
+        assert_eq!(w.observe(&ev(1, 0.5, true, 12_000_000)).len(), 1);
+        assert!(w.observe(&ev(2, 0.4, true, 1_000_000)).is_empty());
+    }
+
+    #[test]
+    fn events_roundtrip_through_json() {
+        let e = WatchdogEvent {
+            kind: WatchdogKind::TransportDegraded,
+            iter: 7,
+            detail: "worker 2 replaced at epoch 1".to_string(),
+        };
+        let v = Json::parse(&e.to_json().to_string()).unwrap();
+        assert_eq!(WatchdogEvent::from_json(&v), Some(e));
+    }
+}

@@ -172,6 +172,7 @@ pub fn rescal_rank(
     // (e.g. `gemm[avx2_fma_8x8]`), so a trace pins down which SIMD path
     // produced its timings.
     let mut iters_run = 0;
+    let mut last_err = f32::NAN;
     for iter in 0..cfg.opts.max_iters {
         iters_run = iter + 1;
         trace.set_iter(iter as u32);
@@ -225,13 +226,20 @@ pub fn rescal_rank(
         trace.phase_end("normalize", ph);
 
         // optional convergence check
+        let mut err_fresh = false;
         if cfg.opts.err_every > 0 && (iter + 1) % cfg.opts.err_every == 0 {
-            let e = distributed_rel_error(
+            last_err = distributed_rel_error(
                 ctx, tile, &a_row, &a_col, &r, x_norm_sq, cfg.model, backend, trace,
             )?;
-            if cfg.opts.tol > 0.0 && e < cfg.opts.tol {
-                break;
-            }
+            err_fresh = true;
+        }
+        // Streaming telemetry flush + leader progress event. A
+        // collective over the world group, so it runs on every rank
+        // before the (rank-uniform) tol break below; no-op when the
+        // recorder is off.
+        trace.iteration_boundary(&ctx.world, iter as u32, last_err, err_fresh)?;
+        if err_fresh && cfg.opts.tol > 0.0 && last_err < cfg.opts.tol {
+            break;
         }
     }
     trace.set_iter(crate::obs::NO_ITER);

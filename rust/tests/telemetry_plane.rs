@@ -4,6 +4,13 @@
 //! export a valid Chrome trace carrying phase spans from every rank in
 //! every OS process, and `drescal trace-summary` must agree with the
 //! trace's own totals.
+//!
+//! Live-plane integration: a leader started with `--status-port` must
+//! serve `/healthz`, `/metrics` (Prometheus text), `/progress`
+//! (advancing iteration counter), and `/trace` over plain HTTP while
+//! the job runs, and `drescal monitor` must render live rows from it;
+//! killing one worker mid-job must leave that worker's pre-crash spans
+//! in the final `--trace-out` artifact via the leader's telemetry hub.
 
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
@@ -222,7 +229,9 @@ fn tcp_cluster_trace_covers_every_rank_and_process() {
     assert!(summary.status.success(), "trace-summary failed:\n{stext}");
     let mut row_counts: u64 = 0;
     for line in stext.lines().skip(1) {
-        if line.starts_with("total") {
+        // skip the total row and the ring-drop footer ("recorded N
+        // sample(s) in R row(s); D span(s) dropped ...")
+        if line.starts_with("total") || line.starts_with("recorded") {
             continue;
         }
         let toks: Vec<&str> = line.split_whitespace().collect();
@@ -240,6 +249,218 @@ fn tcp_cluster_trace_covers_every_rank_and_process() {
         total_line.split_whitespace().last().unwrap(),
         total_bytes.to_string(),
         "summary byte total disagrees with the trace:\n{stext}"
+    );
+    // the ring-drop footer is always present (0 drops on a run this small)
+    assert!(
+        stext.contains("span(s) dropped"),
+        "summary lost its ring-drop footer:\n{stext}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// live plane: --status-port endpoint + drescal monitor + chaos
+// ---------------------------------------------------------------------
+
+/// Reserve an ephemeral port by binding and dropping a listener. A tiny
+/// race remains between drop and the leader's bind, acceptable in CI.
+fn free_port() -> u16 {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = l.local_addr().unwrap().port();
+    drop(l);
+    port
+}
+
+/// Poll `/progress` until `pred` accepts the parsed document.
+fn wait_progress(addr: &str, what: &str, pred: impl Fn(&Json) -> bool) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if let Ok(body) = drescal::obs::http_get(addr, "/progress", Duration::from_secs(2)) {
+            let v = Json::parse(&body).expect("/progress must be valid JSON");
+            if pred(&v) {
+                return v;
+            }
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what} at {addr}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn progress_iter(v: &Json) -> i64 {
+    v.get("iter").and_then(Json::as_f64).map_or(-1, |x| x as i64)
+}
+
+/// A real leader + 3 TCP workers started with `--status-port` must serve
+/// all four routes over plain HTTP while the job runs: `/healthz` says
+/// ok, `/metrics` carries the advertised Prometheus families, `/progress`
+/// reports an advancing iteration counter, `/trace` is a Chrome trace of
+/// the spans absorbed so far — and `drescal monitor` pointed at the same
+/// endpoint renders at least one live iteration row.
+#[test]
+fn status_endpoint_serves_live_progress_and_monitor_renders_it() {
+    let dir = tmpdir("live");
+    let port_file = dir.join("leader.addr");
+    let status_port = free_port();
+    let status_addr = format!("127.0.0.1:{status_port}");
+    let leader = drescal()
+        .arg("train")
+        .args(["--data", "synthetic", "--n", "48", "--m", "2", "--k-true", "3"])
+        .args(["--density", "0.3", "--k", "3", "--iters", "3000", "--seed", "7"])
+        .args(["--workers", "3", "--listen", "127.0.0.1:0"])
+        .args(["--port-file", port_file.to_str().unwrap()])
+        .args(["--status-port", &status_port.to_string()])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn leader");
+    let addr = wait_port_file(&port_file);
+    let workers: Vec<Child> = (0..3).map(|_| spawn_worker(&addr)).collect();
+
+    // liveness first: the endpoint is up before the job's first iteration
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        match drescal::obs::http_get(&status_addr, "/healthz", Duration::from_secs(2)) {
+            Ok(body) => {
+                assert_eq!(body, "ok\n");
+                break;
+            }
+            Err(_) => {
+                assert!(Instant::now() < deadline, "status endpoint never came up");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+
+    // the iteration counter must actually advance between two samples
+    let first = wait_progress(&status_addr, "first iteration", |v| progress_iter(v) >= 0);
+    let start = progress_iter(&first);
+    let v = wait_progress(&status_addr, "an advancing iter", |v| progress_iter(v) > start);
+    assert_eq!(v.get("job").and_then(Json::as_str), Some("factorize"));
+    assert_eq!(v.get("done").and_then(Json::as_bool), Some(false));
+    assert!(
+        v.get("wire_bytes").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+        "TCP cluster iterations must move wire bytes"
+    );
+
+    // Prometheus exposition: the advertised families, well-formed lines
+    let metrics =
+        drescal::obs::http_get(&status_addr, "/metrics", Duration::from_secs(2)).unwrap();
+    for family in [
+        "drescal_job_done",
+        "drescal_iterations_total",
+        "drescal_wire_bytes_total",
+        "drescal_phase_seconds_total",
+        "drescal_kernel_info",
+        "drescal_iteration_seconds_count",
+    ] {
+        assert!(metrics.contains(family), "/metrics lacks {family}:\n{metrics}");
+    }
+    for line in metrics.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let mut parts = line.rsplitn(2, ' ');
+        let value = parts.next().unwrap_or("");
+        assert!(
+            value.parse::<f64>().is_ok(),
+            "metrics line does not end in a float value: {line:?}"
+        );
+    }
+
+    // /trace is already a valid Chrome trace mid-job (streamed flushes)
+    let trace_body =
+        drescal::obs::http_get(&status_addr, "/trace", Duration::from_secs(2)).unwrap();
+    let trace = Json::parse(&trace_body).expect("/trace must be valid JSON");
+    assert!(
+        !trace.get("traceEvents").and_then(Json::as_arr).expect("traceEvents").is_empty(),
+        "mid-job /trace carries no events"
+    );
+
+    // the monitor subcommand renders live rows from the same endpoint
+    // and exits cleanly when the job (and its endpoint) completes
+    let monitor = drescal()
+        .args(["monitor", &status_addr, "--interval-ms", "50"])
+        .output()
+        .expect("run drescal monitor");
+    let mtext = combined(&monitor);
+    assert!(monitor.status.success(), "monitor failed:\n{mtext}");
+    assert!(mtext.contains("iter"), "monitor printed no header:\n{mtext}");
+    let rows = mtext
+        .lines()
+        .filter(|l| l.trim_start().chars().next().is_some_and(|c| c.is_ascii_digit()))
+        .count();
+    assert!(rows >= 1, "monitor rendered no iteration rows:\n{mtext}");
+
+    let out = leader.wait_with_output().expect("leader run");
+    let text = combined(&out);
+    for w in workers {
+        reap(w, "worker");
+    }
+    assert!(out.status.success(), "leader failed:\n{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Chaos: kill one TCP worker mid-job on a recovery-enabled cluster with
+/// `--status-port` and `--trace-out`. The per-iteration telemetry flush
+/// means the leader's hub already holds the victim's pre-crash spans, so
+/// after recovery (replacement worker, job rerun) the final trace file
+/// must contain spans from 5 distinct OS pids — leader, two survivors,
+/// the replacement, and the dead worker.
+#[test]
+fn killed_workers_pre_crash_spans_survive_into_the_final_trace() {
+    let dir = tmpdir("live_chaos");
+    let port_file = dir.join("leader.addr");
+    let trace_path = dir.join("trace.json");
+    let status_port = free_port();
+    let status_addr = format!("127.0.0.1:{status_port}");
+    let leader = drescal()
+        .arg("train")
+        .args(["--data", "synthetic", "--n", "48", "--m", "2", "--k-true", "3"])
+        .args(["--density", "0.3", "--k", "3", "--iters", "2000", "--seed", "11"])
+        .args(["--workers", "3", "--listen", "127.0.0.1:0"])
+        .args(["--port-file", port_file.to_str().unwrap()])
+        .args(["--comm-timeout-ms", "2000", "--max-replacements", "1"])
+        .args(["--status-port", &status_port.to_string()])
+        .args(["--trace-out", trace_path.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn leader");
+    let addr = wait_port_file(&port_file);
+    let mut workers: Vec<Child> = (0..3).map(|_| spawn_worker(&addr)).collect();
+
+    // let a few iterations flush so the victim's spans reach the hub
+    wait_progress(&status_addr, "3 flushed iterations", |v| progress_iter(v) >= 3);
+    let mut victim = workers.remove(1);
+    let victim_pid = u64::from(victim.id());
+    victim.kill().unwrap();
+    let _ = victim.wait();
+    workers.push(spawn_worker(&addr));
+
+    let out = leader.wait_with_output().expect("leader run");
+    let text = combined(&out);
+    for w in workers {
+        reap(w, "worker");
+    }
+    assert!(out.status.success(), "leader failed:\n{text}");
+    assert!(
+        text.contains("recovered at epoch"),
+        "worker kill was not detected/recovered:\n{text}"
+    );
+
+    let raw = std::fs::read_to_string(&trace_path).expect("trace file written");
+    let v = Json::parse(&raw).expect("trace must be valid JSON");
+    let mut pids: BTreeSet<u64> = BTreeSet::new();
+    for e in v.get("traceEvents").and_then(Json::as_arr).expect("traceEvents") {
+        if e.get("ph").and_then(Json::as_str) == Some("X") {
+            pids.insert(e.get("pid").and_then(Json::as_f64).expect("event pid") as u64);
+        }
+    }
+    assert!(
+        pids.contains(&victim_pid),
+        "dead worker pid {victim_pid} lost from the final trace; pids present: {pids:?}"
+    );
+    assert_eq!(
+        pids.len(),
+        5,
+        "expected 5 pids (leader + 2 survivors + replacement + victim), got {pids:?}"
     );
     std::fs::remove_dir_all(&dir).ok();
 }
